@@ -1,0 +1,120 @@
+//! End-to-end driver: SVM active learning on the 20-Newsgroups-like corpus
+//! (paper §5, Fig. 3). Runs all six selection strategies and prints the
+//! MAP learning curves, selected-margin curves and nonempty-lookup counts.
+//!
+//! Default scale is laptop-friendly; pass `--full` for the paper's setup
+//! (n=18,846, 20 classes, 300 iterations, 5 runs).
+//!
+//! Run: `cargo run --release --example active_learning_news [-- --full]`
+
+use std::sync::Arc;
+
+use chh::active::{AlConfig, AlEngine, Strategy};
+use chh::config::{DatasetProfile, ExperimentConfig};
+use chh::data::{newsgroups_like, NewsConfig};
+use chh::hash::{AhHash, BhHash, EhHash, HashFamily};
+use chh::lbh::{LbhTrainConfig, LbhTrainer};
+use chh::report::{ascii_plot, Series};
+use chh::rng::Rng;
+use chh::table::HyperplaneIndex;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let mut cfg = ExperimentConfig::for_profile(DatasetProfile::News);
+    if !full {
+        cfg.n = 4000;
+        cfg.al_iters = 100;
+        cfg.runs = 2;
+        cfg.max_classes = Some(4);
+    }
+    let mut rng = Rng::seed_from_u64(cfg.seed);
+    let news = NewsConfig {
+        n: cfg.n,
+        vocab: cfg.profile.dim(),
+        classes: if full { 20 } else { 8 },
+        ..Default::default()
+    };
+    println!(
+        "20NG-like corpus: n={} vocab={} classes={}  (k={} bits, radius {})",
+        news.n,
+        news.vocab,
+        news.classes,
+        cfg.bits(),
+        cfg.radius()
+    );
+    let data = newsgroups_like(&news, &mut rng);
+    let engine = AlEngine::new(&data, AlConfig::from_experiment(&cfg));
+
+    let mut map_series = Vec::new();
+    let mut rows = Vec::new();
+    for strat in ["random", "exhaustive", "ah", "eh", "bh", "lbh"] {
+        let t0 = std::time::Instant::now();
+        let res = engine.run_experiment(cfg.runs, cfg.max_classes, cfg.seed, |rng| {
+            build_strategy(strat, &cfg, &data, rng)
+        });
+        let final_map = res.map_curve.last().map(|&(_, m)| m).unwrap_or(0.0);
+        let mean_margin: f64 =
+            res.margin_curve.iter().sum::<f64>() / res.margin_curve.len().max(1) as f64;
+        let nonempty: f64 = res.nonempty_per_class.iter().sum::<f64>()
+            / res.nonempty_per_class.len().max(1) as f64;
+        rows.push(vec![
+            res.strategy.clone(),
+            format!("{final_map:.4}"),
+            format!("{mean_margin:.5}"),
+            format!("{nonempty:.0}/{}", cfg.al_iters),
+            format!("{:.1}s", t0.elapsed().as_secs_f64()),
+        ]);
+        let mut s = Series::new(&res.strategy);
+        for &(it, m) in &res.map_curve {
+            s.push(it as f64, m);
+        }
+        map_series.push(s);
+    }
+    chh::report::print_rows(
+        "Fig 3 summary (20NG-like)",
+        &["strategy", "final MAP", "mean margin", "nonempty/iters", "wall"],
+        &rows,
+    );
+    println!("\n{}", ascii_plot("Fig 3(a): MAP learning curves", &map_series, 64, 16));
+}
+
+fn build_strategy(
+    name: &str,
+    cfg: &ExperimentConfig,
+    data: &chh::data::Dataset,
+    rng: &mut Rng,
+) -> Strategy {
+    let bits = cfg.bits();
+    let radius = cfg.radius();
+    match name {
+        "random" => Strategy::Random,
+        "exhaustive" => Strategy::Exhaustive,
+        "ah" => {
+            let fam: Arc<dyn HashFamily> = Arc::new(AhHash::sample(data.dim(), bits, rng));
+            let index = Arc::new(HyperplaneIndex::build(fam.as_ref(), data.features(), radius));
+            Strategy::Hash { family: fam, index }
+        }
+        "eh" => {
+            let fam: Arc<dyn HashFamily> =
+                Arc::new(EhHash::sampled(data.dim(), bits, 256, rng));
+            let index = Arc::new(HyperplaneIndex::build(fam.as_ref(), data.features(), radius));
+            Strategy::Hash { family: fam, index }
+        }
+        "bh" => {
+            let fam: Arc<dyn HashFamily> = Arc::new(BhHash::sample(data.dim(), bits, rng));
+            let index = Arc::new(HyperplaneIndex::build(fam.as_ref(), data.features(), radius));
+            Strategy::Hash { family: fam, index }
+        }
+        "lbh" => {
+            let m = cfg.lbh_m();
+            let sample = rng.sample_indices(data.len(), m);
+            let reference = rng.sample_indices(data.len(), data.len().min(4000));
+            let trainer = LbhTrainer::new(LbhTrainConfig { bits, ..Default::default() });
+            let (fam, _) = trainer.train(data.features(), &sample, &reference, rng);
+            let fam: Arc<dyn HashFamily> = Arc::new(fam);
+            let index = Arc::new(HyperplaneIndex::build(fam.as_ref(), data.features(), radius));
+            Strategy::Hash { family: fam, index }
+        }
+        other => panic!("unknown strategy {other}"),
+    }
+}

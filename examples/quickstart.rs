@@ -1,0 +1,100 @@
+//! Quickstart: the 60-second tour of compact hyperplane hashing.
+//!
+//! 1. synthesize a Tiny-1M-like dataset;
+//! 2. train LBH bilinear hash functions (§4 of the paper);
+//! 3. build the single compact hash table;
+//! 4. query with an SVM-style hyperplane and compare against randomized
+//!    BH-Hash and the exhaustive scan.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use std::time::Instant;
+
+use chh::data::{tiny1m_like, TinyConfig};
+use chh::hash::BhHash;
+use chh::lbh::{LbhTrainConfig, LbhTrainer};
+use chh::linalg::{margin_feat, nrm2};
+use chh::rng::Rng;
+use chh::svm::{LinearSvm, SvmConfig};
+use chh::table::HyperplaneIndex;
+
+fn main() {
+    let mut rng = Rng::seed_from_u64(2012);
+
+    // ── 1. data ──────────────────────────────────────────────────────
+    let cfg = TinyConfig { n: 20_000, d: 128, ..Default::default() };
+    println!("generating tiny1m-like dataset: n={} d={}", cfg.n, cfg.d);
+    let data = tiny1m_like(&cfg, &mut rng);
+
+    // ── 2. train LBH (k = 16 bits from m = 512 samples) ─────────────
+    let k = 16;
+    let t0 = Instant::now();
+    let sample = rng.sample_indices(data.len(), 512);
+    let reference = rng.sample_indices(data.len(), 4000);
+    let trainer = LbhTrainer::new(LbhTrainConfig { bits: k, ..Default::default() });
+    let (lbh, stats) = trainer.train(data.features(), &sample, &reference, &mut rng);
+    println!(
+        "trained {k}-bit LBH in {:.2}s (thresholds t1={:.3} t2={:.3})",
+        t0.elapsed().as_secs_f64(),
+        stats.t1,
+        stats.t2
+    );
+
+    // ── 3. single compact hash table, Hamming radius 3 ───────────────
+    let t1 = Instant::now();
+    let index = HyperplaneIndex::build(&lbh, data.features(), 3);
+    println!(
+        "indexed {} points into {} buckets in {:.2}s ({} bytes)",
+        index.len(),
+        index.bucket_count(),
+        t1.elapsed().as_secs_f64(),
+        index.memory_bytes()
+    );
+
+    // a randomized BH baseline with the same code budget
+    let bh = BhHash::sample(data.dim(), k, &mut rng);
+    let index_bh = HyperplaneIndex::build(&bh, data.features(), 3);
+
+    // ── 4. hyperplane query: an actual SVM decision boundary ────────
+    let labeled = rng.sample_indices(data.len(), 600);
+    let y: Vec<f32> =
+        labeled.iter().map(|&i| if data.labels()[i] == 0 { 1.0 } else { -1.0 }).collect();
+    let mut svm = LinearSvm::new(data.dim());
+    svm.train(data.features(), &labeled, &y, &SvmConfig::default());
+    let w = svm.w.clone();
+
+    let tq = Instant::now();
+    let hit = index.query(&lbh, &w, data.features());
+    let t_hash = tq.elapsed();
+    let tq = Instant::now();
+    let hit_bh = index_bh.query(&bh, &w, data.features());
+    let t_bh = tq.elapsed();
+
+    // exhaustive ground truth
+    let tq = Instant::now();
+    let wn = nrm2(&w);
+    let best_exh = (0..data.len())
+        .map(|i| margin_feat(data.features().row(i), &w, wn))
+        .fold(f32::INFINITY, f32::min);
+    let t_exh = tq.elapsed();
+
+    println!("\nquery: one-vs-all SVM hyperplane for class 0");
+    println!(
+        "  LBH-Hash   : margin {:.5}  ({} candidates, {:?})",
+        hit.best.map(|(_, m)| m).unwrap_or(f32::NAN),
+        hit.scanned,
+        t_hash
+    );
+    println!(
+        "  BH-Hash    : margin {:.5}  ({} candidates, {:?})",
+        hit_bh.best.map(|(_, m)| m).unwrap_or(f32::NAN),
+        hit_bh.scanned,
+        t_bh
+    );
+    println!("  exhaustive : margin {best_exh:.5}  ({} points, {t_exh:?})", data.len());
+    println!(
+        "\nhash probes scanned {:.2}% of the database at {:.0}x lower query latency",
+        100.0 * hit.scanned as f64 / data.len() as f64,
+        t_exh.as_secs_f64() / t_hash.as_secs_f64().max(1e-9)
+    );
+}

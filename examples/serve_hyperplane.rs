@@ -1,0 +1,90 @@
+//! Serving demo: the hyperplane-query router under a synthetic query
+//! stream, reporting throughput and latency percentiles — the systems-y
+//! face of the paper's constant-time single-table lookup claim.
+//!
+//! Emulates an active-learning fleet: every "iteration" submits a batch of
+//! one-vs-all SVM hyperplanes (10 classes) with a shared exclusion set
+//! that grows as labels arrive, exactly like `active::AlEngine` would.
+//!
+//! Run: `cargo run --release --example serve_hyperplane`
+
+use std::collections::HashSet;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+use chh::coordinator::{QueryRequest, Router};
+use chh::data::{tiny1m_like, TinyConfig};
+use chh::hash::{BhHash, HashFamily};
+use chh::lbh::{LbhTrainConfig, LbhTrainer};
+use chh::rng::Rng;
+use chh::table::HyperplaneIndex;
+
+fn main() {
+    let mut rng = Rng::seed_from_u64(7);
+    let n = 50_000;
+    let k = 18;
+    let radius = 3;
+    println!("building index: n={n} d=128 k={k} radius={radius}");
+    let data = tiny1m_like(&TinyConfig { n, d: 128, ..Default::default() }, &mut rng);
+
+    // learned hash for serving (falls back to BH if training is disabled)
+    let use_lbh = !std::env::args().any(|a| a == "--bh");
+    let family: Arc<dyn HashFamily> = if use_lbh {
+        let sample = rng.sample_indices(n, 512);
+        let refs = rng.sample_indices(n, 4000);
+        let (f, _) = LbhTrainer::new(LbhTrainConfig { bits: k, ..Default::default() })
+            .train(data.features(), &sample, &refs, &mut rng);
+        Arc::new(f)
+    } else {
+        Arc::new(BhHash::sample(data.dim(), k, &mut rng))
+    };
+    let t0 = Instant::now();
+    let index = Arc::new(HyperplaneIndex::build(family.as_ref(), data.features(), radius));
+    println!(
+        "table built in {:.2}s: {} buckets, probe volume {}",
+        t0.elapsed().as_secs_f64(),
+        index.bucket_count(),
+        index.probe_volume()
+    );
+    let feats = Arc::new(data.features().clone());
+    let router = Router::new(family, index, feats, 2, 64);
+
+    // synthetic AL fleet: 50 iterations × 10 hyperplanes
+    let classes = 10;
+    let iters = 50;
+    let mut labeled: HashSet<usize> = (0..500).collect();
+    let t0 = Instant::now();
+    let mut answered = 0usize;
+    for _it in 0..iters {
+        let exclude = Arc::new(labeled.clone());
+        let reqs: Vec<QueryRequest> = (0..classes)
+            .map(|_| QueryRequest {
+                w: chh::testing::unit_vec(&mut rng, data.dim()),
+                exclude: Some(exclude.clone()),
+            })
+            .collect();
+        for resp in router.submit_batch(reqs) {
+            answered += 1;
+            if let Some((idx, _)) = resp.hit.best {
+                labeled.insert(idx); // "label" the selected point
+            }
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let st = router.stats();
+    println!("\nserved {answered} hyperplane queries in {secs:.3}s");
+    println!("  throughput : {:.0} queries/s", answered as f64 / secs);
+    println!("  latency    : mean {:.1}µs  p50 {:.1}µs  p95 {:.1}µs",
+        st.latency_mean() * 1e6,
+        st.latency_p50() * 1e6,
+        st.latency_p95() * 1e6
+    );
+    println!(
+        "  empty balls: {} / {}   candidates/query: {:.1}",
+        st.empty_lookups.load(Ordering::Relaxed),
+        answered,
+        st.candidates_scanned.load(Ordering::Relaxed) as f64 / answered as f64
+    );
+    router.shutdown();
+}

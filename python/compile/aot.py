@@ -1,0 +1,147 @@
+"""AOT export: lower every L2 graph to HLO text + write manifest.json.
+
+Run once by ``make artifacts``:
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Interchange format is **HLO text**, not a serialized HloModuleProto: the
+image's xla_extension 0.5.1 rejects jax≥0.5 protos (64-bit instruction
+ids); the text parser reassigns ids and round-trips cleanly
+(/opt/xla-example/README.md).
+
+Shape profiles mirror `rust/src/config/mod.rs::DatasetProfile`:
+
+  profile   d     k   tile_n   lbh m   (paper setting)
+  test      64    8   256      128     (CI-scale)
+  news      1024  16  1024     512     (20NG: 16 bits, m=500→512)
+  tiny      384   20  2048     1024    (Tiny-1M: 20 bits, m≤5000, tiled)
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+PROFILES = {
+    "test": dict(d=64, k=8, tile_n=256, eh_tile=256, eh_s=64, m=128, tile_m=64),
+    "news": dict(d=1024, k=16, tile_n=1024, eh_tile=256, eh_s=256, m=512, tile_m=128),
+    "tiny": dict(d=384, k=20, tile_n=2048, eh_tile=512, eh_s=256, m=1024, tile_m=128),
+}
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def artifact_plan(profile: str):
+    """(name, fn, input_specs) for every artifact of one profile."""
+    p = PROFILES[profile]
+    d, k, tn, m = p["d"], p["k"], p["tile_n"], p["m"]
+    eh_tile, eh_s, tile_m = p["eh_tile"], p["eh_s"], p["tile_m"]
+    return [
+        (
+            f"encode_bh_{profile}",
+            functools.partial(model.encode_bh, tile_n=tn),
+            [spec(tn, d), spec(d, k), spec(d, k)],
+        ),
+        (
+            f"encode_ah_{profile}",
+            model.encode_ah,
+            [spec(tn, d), spec(d, k), spec(d, k)],
+        ),
+        (
+            f"encode_eh_{profile}",
+            model.encode_eh,
+            [spec(eh_tile, d), spec(k, eh_s), spec(k, eh_s), spec(k, eh_s)],
+        ),
+        (
+            f"margin_scan_{profile}",
+            model.margin_scan,
+            [spec(tn, d), spec(d)],
+        ),
+        (
+            f"hamming_rank_{profile}",
+            functools.partial(model.hamming_rank, tile_n=tn),
+            [spec(tn, k), spec(k)],
+        ),
+        (
+            f"lbh_step_{profile}",
+            functools.partial(model.lbh_step, tile_m=tile_m),
+            [
+                spec(m, d),
+                spec(m, m),
+                spec(d),
+                spec(d),
+                spec(d),
+                spec(d),
+                spec(1),
+                spec(1),
+            ],
+        ),
+    ]
+
+
+def export_one(name, fn, in_specs, out_dir):
+    lowered = jax.jit(fn).lower(*in_specs)
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    out_shapes = jax.eval_shape(fn, *in_specs)
+    entry = {
+        "file": fname,
+        "inputs": [{"shape": list(s.shape), "dtype": "f32"} for s in in_specs],
+        "outputs": [
+            {"shape": list(s.shape), "dtype": "f32"} for s in jax.tree_util.tree_leaves(out_shapes)
+        ],
+    }
+    return entry, len(text)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--profiles",
+        default="test,news,tiny",
+        help="comma-separated subset of profiles to export",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"artifacts": {}}
+    total = 0
+    for profile in args.profiles.split(","):
+        profile = profile.strip()
+        if not profile:
+            continue
+        for name, fn, in_specs in artifact_plan(profile):
+            entry, nbytes = export_one(name, fn, in_specs, args.out_dir)
+            entry["profile"] = profile
+            manifest["artifacts"][name] = entry
+            total += nbytes
+            print(f"  {name:<28} {nbytes/1024:8.1f} KiB")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {len(manifest['artifacts'])} artifacts ({total/1e6:.1f} MB) to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""L1 Pallas kernels for the Compact Hyperplane Hashing stack.
+
+Every kernel is written for TPU geometry (tiles in multiples of the (8,128)
+VPU/MXU lanes, matmuls with float32 accumulation) but is lowered with
+``interpret=True`` so the CPU PJRT client can execute the resulting HLO --
+real-TPU lowering would emit Mosaic custom-calls the CPU plugin cannot run
+(see /opt/xla-example/README.md).
+"""
+
+from .bilinear import bilinear_scores
+from .grad import weighted_colsum
+from .hamming import hamming_distances
+
+__all__ = ["bilinear_scores", "weighted_colsum", "hamming_distances"]

@@ -1,0 +1,64 @@
+"""The bilinear-form kernel: pre-sign scores of BH/LBH hashing.
+
+For a tile of database points ``X (n, d)`` and projection pairs
+``U, V (d, k)`` the paper's bilinear hash (eq. 6) is
+``h_j(x) = sgn(u_jᵀ x · xᵀ v_j)``, i.e. the elementwise product of two
+GEMMs followed by a sign. The kernel computes the pre-sign scores
+
+    S = (X·U) ⊙ (X·V)                                   (n, k)
+
+and leaves the sign to the consumer (the Rust coordinator packs bits with
+its own sgn(0)=+1 convention; the L2 training graph feeds the scores into
+the sigmoid surrogate instead).
+
+TPU shaping: the n-grid streams X tiles HBM→VMEM while U and V stay
+resident in VMEM (their BlockSpec index_map is constant in the grid index),
+so each projection byte is fetched once per launch. Both GEMMs target the
+MXU with f32 accumulation.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bilinear_kernel(x_ref, uv_ref, o_ref, *, k):
+    # Single fused GEMM against [U | V] (d, 2k): one pass of the X tile
+    # through the MXU instead of two — halves HBM traffic per tile and
+    # doubles output-lane occupancy (2k of 128 lanes vs k). §Perf pass.
+    x = x_ref[...]
+    puv = jnp.dot(x, uv_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = puv[:, :k] * puv[:, k:]
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n",))
+def bilinear_scores(x, u, v, *, tile_n=256):
+    """Pre-sign bilinear scores ``(x@u) * (x@v)``.
+
+    Args:
+      x: (n, d) float32 — database tile (n must be divisible by tile_n).
+      u, v: (d, k) float32 — projection pairs, one column per hash bit.
+      tile_n: rows per grid step.
+
+    Returns:
+      (n, k) float32 scores; ``sign(scores)`` are the hash bits.
+    """
+    n, d = x.shape
+    du, k = u.shape
+    assert du == d and v.shape == (d, k), (x.shape, u.shape, v.shape)
+    assert n % tile_n == 0, f"n={n} not a multiple of tile_n={tile_n}"
+    grid = (n // tile_n,)
+    uv = jnp.concatenate([u, v], axis=1)  # (d, 2k), VMEM-resident
+    return pl.pallas_call(
+        functools.partial(_bilinear_kernel, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, 2 * k), lambda i: (0, 0)),  # resident across grid
+        ],
+        out_specs=pl.BlockSpec((tile_n, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k), jnp.float32),
+        interpret=True,
+    )(x, uv)

@@ -1,0 +1,68 @@
+"""Weighted column-sum kernel — the X-heavy half of the LBH gradient.
+
+The gradient of the paper's smooth surrogate (eq. 18) is
+
+    g_u = −Xᵀ (σ ⊙ (X v)),    g_v = −Xᵀ (σ ⊙ (X u)),
+    σ   = (R b̃) ⊙ (1 − b̃ ⊙ b̃)
+
+The two dense X-passes (one GEMV down, one weighted column-sum up) dominate
+at m×d; the m×m product `R b̃` is a plain XLA dot in the L2 graph. This
+kernel computes the up-pass
+
+    out = Xᵀ a                                     (d,)
+
+accumulating over a grid of m-tiles so X streams through VMEM once. The
+accumulator lives in the output block (constant index_map), initialized on
+the first grid step — the standard Pallas reduction idiom.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _colsum_kernel(x_ref, a_ref, o_ref):
+    i = pl.program_id(0)
+    x = x_ref[...]          # (tile_m, d)
+    a = a_ref[...]          # (tile_m, 1)
+    part = jnp.dot(x.T, a, preferred_element_type=jnp.float32)  # (d, 1)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(i != 0)
+    def _acc():
+        o_ref[...] += part
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m",))
+def weighted_colsum(x, a, *, tile_m=128):
+    """``xᵀ @ a`` with a tiled-accumulation Pallas kernel.
+
+    Args:
+      x: (m, d) float32.
+      a: (m,) float32 weights.
+      tile_m: rows per grid step (m must be divisible).
+
+    Returns:
+      (d,) float32.
+    """
+    m, d = x.shape
+    assert a.shape == (m,), (x.shape, a.shape)
+    assert m % tile_m == 0, f"m={m} not a multiple of tile_m={tile_m}"
+    a2 = a.reshape(m, 1)
+    out = pl.pallas_call(
+        _colsum_kernel,
+        grid=(m // tile_m,),
+        in_specs=[
+            pl.BlockSpec((tile_m, d), lambda i: (i, 0)),
+            pl.BlockSpec((tile_m, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((d, 1), lambda i: (0, 0)),  # accumulator
+        out_shape=jax.ShapeDtypeStruct((d, 1), jnp.float32),
+        interpret=True,
+    )(x, a2)
+    return out.reshape(d)

@@ -1,0 +1,54 @@
+"""Hamming ranking as a ±1 matvec — MXU-friendly code-distance scan.
+
+With codes stored as ±1 floats, agreement between a code row c and a query
+q is ``c·q ∈ [−k, k]`` and the Hamming distance is ``(k − c·q)/2``. That
+turns the classic popcount scan into a (n, k)×(k,) matvec — exactly the
+shape a systolic array wants — which is how the paper's "largest Hamming
+distance" retrieval generalizes to accelerators. The Rust coordinator uses
+its POPCNT path for the small-k compact regime and can delegate large
+ranking sweeps to this kernel.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hamming_kernel(c_ref, q_ref, o_ref, *, k):
+    c = c_ref[...]                       # (tile_n, k) ±1
+    q = q_ref[...]                       # (k, 1) ±1
+    agree = jnp.dot(c, q, preferred_element_type=jnp.float32)  # (tile_n, 1)
+    o_ref[...] = (k - agree) * 0.5
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n",))
+def hamming_distances(codes_pm, q_pm, *, tile_n=256):
+    """Hamming distances between ±1 code rows and a ±1 query code.
+
+    Args:
+      codes_pm: (n, k) float32 in {−1, +1}.
+      q_pm: (k,) float32 in {−1, +1}.
+      tile_n: rows per grid step (n must be divisible).
+
+    Returns:
+      (n,) float32 distances in [0, k].
+    """
+    n, k = codes_pm.shape
+    assert q_pm.shape == (k,)
+    assert n % tile_n == 0, f"n={n} not a multiple of tile_n={tile_n}"
+    import functools as ft
+
+    out = pl.pallas_call(
+        ft.partial(_hamming_kernel, k=k),
+        grid=(n // tile_n,),
+        in_specs=[
+            pl.BlockSpec((tile_n, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_n, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        interpret=True,
+    )(codes_pm, q_pm.reshape(k, 1))
+    return out.reshape(n)

@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for every Pallas kernel and L2 graph.
+
+These are the correctness ground truth: deliberately naive, no tiling, no
+pallas — just the math as written in the paper. pytest asserts the kernels
+and the AOT-exported HLO agree with these to float32 tolerance.
+"""
+
+import jax.numpy as jnp
+
+
+def bilinear_scores_ref(x, u, v):
+    """(x@u) * (x@v) — pre-sign scores of the bilinear hash (eq. 6)."""
+    return (x @ u) * (x @ v)
+
+
+def weighted_colsum_ref(x, a):
+    """xᵀ a."""
+    return x.T @ a
+
+
+def hamming_ref(codes_pm, q_pm):
+    """(k − c·q)/2 over ±1 codes."""
+    k = codes_pm.shape[1]
+    return (k - codes_pm @ q_pm) * 0.5
+
+
+def sigmoid_pm_ref(t):
+    """φ(t) = 2/(1+e^{−t}) − 1 (eq. 16's surrogate), == tanh(t/2)."""
+    return 2.0 / (1.0 + jnp.exp(-t)) - 1.0
+
+
+def lbh_grad_ref(x, r, u, v):
+    """Full eq. 17–18 chain: b̃, σ, (g_u, g_v) and the surrogate cost.
+
+    Returns (g_u, g_v, cost) with cost = −b̃ᵀ R b̃.
+    """
+    pu = x @ u
+    pv = x @ v
+    btil = sigmoid_pm_ref(pu * pv)
+    rb = r @ btil
+    sigma = rb * (1.0 - btil * btil)
+    g_u = -(x.T @ (sigma * pv))
+    g_v = -(x.T @ (sigma * pu))
+    cost = -(btil @ rb)
+    return g_u, g_v, cost
+
+
+def lbh_step_ref(x, r, u, v, u_prev, v_prev, lr, mu):
+    """One Nesterov step of the §4 solve (matches model.lbh_step).
+
+    Lookahead y = x + μ(x − x_prev); gradient at y; x_new = y − lr·g;
+    returns (u_new, v_new, cost_at_new).
+    """
+    yu = u + mu * (u - u_prev)
+    yv = v + mu * (v - v_prev)
+    gu, gv, _ = lbh_grad_ref(x, r, yu, yv)
+    u_new = yu - lr * gu
+    v_new = yv - lr * gv
+    _, _, cost = lbh_grad_ref(x, r, u_new, v_new)
+    return u_new, v_new, cost
+
+
+def margin_scan_ref(x, w):
+    """|X·w| — un-normalized point-to-hyperplane margins."""
+    return jnp.abs(x @ w)
+
+
+def ah_project_ref(x, u, v):
+    """AH-Hash per-pair projections (pre-sign): (x@u, x@v)."""
+    return x @ u, x @ v
+
+
+def eh_scores_ref(x, idx_a, idx_b, g):
+    """Dimension-sampled EH pre-sign scores (paper §5.2 trick).
+
+    Bit j of point x: Σ_i g[j,i] · x[a[j,i]] · x[b[j,i]].
+
+    Args:
+      x: (n, d); idx_a, idx_b: (k, s) int32; g: (k, s) float32.
+    Returns:
+      (n, k) scores.
+    """
+    xa = x[:, idx_a]  # (n, k, s)
+    xb = x[:, idx_b]
+    return jnp.einsum("nks,ks->nk", xa * xb, g)

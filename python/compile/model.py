@@ -1,0 +1,94 @@
+"""L2 JAX graphs — everything the Rust coordinator executes through PJRT.
+
+Each public function here is a *pure* JAX computation returning a tuple
+(lowered with ``return_tuple=True``); ``aot.py`` exports one HLO-text
+artifact per (function, shape-profile). The L1 Pallas kernels are called
+from inside these graphs so they lower into the same HLO module.
+
+Conventions shared with the Rust side (`rust/src/runtime/`):
+* all tensors are float32 (index tensors arrive as f32 and are cast here —
+  the Rust runtime only stages f32 buffers);
+* scalars (lr, momentum) are shape-(1,) arrays;
+* database tiles are fixed-shape; the coordinator zero-pads the last tile.
+  Zero rows are safe everywhere: they encode to sign(0)=+1 codes that the
+  coordinator discards, contribute nothing to gradients (φ(0)=0), and
+  produce margin 0 entries that are sliced off.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import bilinear_scores, hamming_distances, weighted_colsum
+from .kernels.ref import sigmoid_pm_ref
+
+
+def encode_bh(x, u, v, *, tile_n=256):
+    """BH/LBH pre-sign scores for a database tile (L1 bilinear kernel).
+
+    x: (n, d); u, v: (d, k). Returns ((n, k) scores,).
+    The Rust side packs ``score >= 0`` into code bits.
+    """
+    return (bilinear_scores(x, u, v, tile_n=tile_n),)
+
+
+def encode_ah(x, u, v):
+    """AH-Hash per-pair projections: (x@u, x@v), each (n, k).
+
+    The coordinator interleaves the sign bits as (u_0, v_0, u_1, v_1, …)
+    and flips v-bits for hyperplane queries (eq. 2).
+    """
+    return (x @ u, x @ v)
+
+
+def encode_eh(x, idx_a, idx_b, g):
+    """Dimension-sampled EH-Hash pre-sign scores (eq. 4 + §5.2 trick).
+
+    x: (n, d); idx_a, idx_b: (k, s) float32 (cast to int here); g: (k, s).
+    Bit j of x: Σ_i g[j,i]·x[a_{j,i}]·x[b_{j,i}]. Returns ((n, k),).
+    """
+    ia = idx_a.astype(jnp.int32)
+    ib = idx_b.astype(jnp.int32)
+    xa = x[:, ia]  # (n, k, s)
+    xb = x[:, ib]
+    return (jnp.einsum("nks,ks->nk", xa * xb, g),)
+
+
+def margin_scan(x, w):
+    """|X·w| for a database tile — the exhaustive-selection hot loop."""
+    return (jnp.abs(x @ w),)
+
+
+def hamming_rank(codes_pm, q_pm, *, tile_n=256):
+    """Hamming distances between ±1 code rows and a ±1 query (L1 kernel)."""
+    return (hamming_distances(codes_pm, q_pm, tile_n=tile_n),)
+
+
+def _lbh_grad(x, r, u, v, *, tile_m):
+    """eq. 17–18: b̃, σ, gradients, cost. Up-passes use the L1 kernel."""
+    pu = x @ u
+    pv = x @ v
+    btil = sigmoid_pm_ref(pu * pv)
+    rb = r @ btil
+    sigma = rb * (1.0 - btil * btil)
+    g_u = -weighted_colsum(x, sigma * pv, tile_m=tile_m)
+    g_v = -weighted_colsum(x, sigma * pu, tile_m=tile_m)
+    cost = -(btil @ rb)
+    return g_u, g_v, cost
+
+
+def lbh_step(x, r, u, v, u_prev, v_prev, lr, mu, *, tile_m=128):
+    """One Nesterov step of the §4 per-bit solve.
+
+    x: (m, d) training subsample (rows may be zero-padded);
+    r: (m, m) residue matrix R_{j−1};
+    u, v, u_prev, v_prev: (d,) current and previous iterates;
+    lr, mu: (1,) learning rate and momentum.
+
+    Returns (u_new, v_new, cost) with cost (1,) = −b̃ᵀRb̃ at the new point.
+    """
+    yu = u + mu[0] * (u - u_prev)
+    yv = v + mu[0] * (v - v_prev)
+    g_u, g_v, _ = _lbh_grad(x, r, yu, yv, tile_m=tile_m)
+    u_new = yu - lr[0] * g_u
+    v_new = yv - lr[0] * g_v
+    _, _, cost = _lbh_grad(x, r, u_new, v_new, tile_m=tile_m)
+    return (u_new, v_new, cost.reshape(1))

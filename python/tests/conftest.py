@@ -1,0 +1,13 @@
+import os
+import sys
+
+import numpy as np
+import pytest
+
+# make `compile` importable when pytest runs from python/ or repo root
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(2012)

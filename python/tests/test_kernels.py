@@ -1,0 +1,152 @@
+"""L1 Pallas kernels vs pure-jnp oracles (the core correctness signal)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import bilinear_scores, hamming_distances, weighted_colsum
+from compile.kernels.ref import (
+    bilinear_scores_ref,
+    hamming_ref,
+    weighted_colsum_ref,
+)
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+# ───────────────────────── bilinear ─────────────────────────
+
+
+def test_bilinear_matches_ref_basic(rng):
+    x = rng.standard_normal((256, 64)).astype(np.float32)
+    u = rng.standard_normal((64, 8)).astype(np.float32)
+    v = rng.standard_normal((64, 8)).astype(np.float32)
+    got = bilinear_scores(jnp.asarray(x), jnp.asarray(u), jnp.asarray(v), tile_n=64)
+    want = bilinear_scores_ref(x, u, v)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@given(
+    tiles=st.integers(1, 4),
+    tile_n=st.sampled_from([8, 32, 64]),
+    d=st.sampled_from([8, 16, 64, 96]),
+    k=st.sampled_from([1, 4, 8, 20]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bilinear_matches_ref_sweep(tiles, tile_n, d, k, seed):
+    r = np.random.default_rng(seed)
+    n = tiles * tile_n
+    x = r.standard_normal((n, d)).astype(np.float32)
+    u = r.standard_normal((d, k)).astype(np.float32)
+    v = r.standard_normal((d, k)).astype(np.float32)
+    got = bilinear_scores(jnp.asarray(x), jnp.asarray(u), jnp.asarray(v), tile_n=tile_n)
+    want = bilinear_scores_ref(x, u, v)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_bilinear_sign_invariance_to_scale(rng):
+    # the property the bilinear form exists for (§3.2 requirement 1)
+    x = rng.standard_normal((64, 16)).astype(np.float32)
+    u = rng.standard_normal((16, 8)).astype(np.float32)
+    v = rng.standard_normal((16, 8)).astype(np.float32)
+    s1 = np.sign(np.asarray(bilinear_scores(jnp.asarray(x), jnp.asarray(u), jnp.asarray(v), tile_n=64)))
+    s2 = np.sign(
+        np.asarray(bilinear_scores(jnp.asarray(-2.5 * x), jnp.asarray(u), jnp.asarray(v), tile_n=64))
+    )
+    np.testing.assert_array_equal(s1, s2)
+
+
+def test_bilinear_rejects_bad_tiling(rng):
+    x = jnp.zeros((100, 8))
+    u = jnp.zeros((8, 4))
+    with pytest.raises(AssertionError):
+        bilinear_scores(x, u, u, tile_n=64)
+
+
+def test_bilinear_zero_rows_give_zero_scores():
+    x = jnp.zeros((32, 8))
+    u = jnp.ones((8, 4))
+    out = np.asarray(bilinear_scores(x, u, u, tile_n=32))
+    assert (out == 0).all()
+
+
+# ───────────────────────── weighted colsum (grad up-pass) ─────────────────────────
+
+
+def test_colsum_matches_ref_basic(rng):
+    x = rng.standard_normal((128, 48)).astype(np.float32)
+    a = rng.standard_normal(128).astype(np.float32)
+    got = weighted_colsum(jnp.asarray(x), jnp.asarray(a), tile_m=32)
+    assert_allclose(np.asarray(got), np.asarray(weighted_colsum_ref(x, a)), rtol=2e-4, atol=2e-4)
+
+
+@given(
+    tiles=st.integers(1, 5),
+    tile_m=st.sampled_from([8, 16, 64]),
+    d=st.sampled_from([4, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_colsum_sweep(tiles, tile_m, d, seed):
+    r = np.random.default_rng(seed)
+    m = tiles * tile_m
+    x = r.standard_normal((m, d)).astype(np.float32)
+    a = r.standard_normal(m).astype(np.float32)
+    got = weighted_colsum(jnp.asarray(x), jnp.asarray(a), tile_m=tile_m)
+    assert_allclose(np.asarray(got), np.asarray(weighted_colsum_ref(x, a)), rtol=5e-4, atol=5e-4)
+
+
+def test_colsum_accumulation_across_tiles():
+    # single nonzero row in each tile → accumulator must sum them
+    x = np.zeros((4 * 8, 3), dtype=np.float32)
+    x[0] = [1, 0, 0]
+    x[8] = [0, 2, 0]
+    x[16] = [0, 0, 3]
+    x[24] = [4, 0, 0]
+    a = np.ones(32, dtype=np.float32)
+    got = np.asarray(weighted_colsum(jnp.asarray(x), jnp.asarray(a), tile_m=8))
+    assert_allclose(got, [5.0, 2.0, 3.0])
+
+
+# ───────────────────────── hamming ─────────────────────────
+
+
+def test_hamming_matches_popcount(rng):
+    n, k = 128, 20
+    bits = rng.integers(0, 2, size=(n, k))
+    qbits = rng.integers(0, 2, size=k)
+    pm = (2.0 * bits - 1.0).astype(np.float32)
+    qpm = (2.0 * qbits - 1.0).astype(np.float32)
+    got = np.asarray(hamming_distances(jnp.asarray(pm), jnp.asarray(qpm), tile_n=32))
+    want = (bits != qbits).sum(axis=1)
+    assert_allclose(got, want.astype(np.float32), atol=1e-5)
+
+
+@given(
+    tiles=st.integers(1, 4),
+    tile_n=st.sampled_from([8, 32]),
+    k=st.sampled_from([1, 8, 20, 40]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hamming_sweep(tiles, tile_n, k, seed):
+    r = np.random.default_rng(seed)
+    n = tiles * tile_n
+    bits = r.integers(0, 2, size=(n, k))
+    qbits = r.integers(0, 2, size=k)
+    pm = (2.0 * bits - 1.0).astype(np.float32)
+    qpm = (2.0 * qbits - 1.0).astype(np.float32)
+    got = np.asarray(hamming_distances(jnp.asarray(pm), jnp.asarray(qpm), tile_n=tile_n))
+    want = np.asarray(hamming_ref(pm, qpm))
+    assert_allclose(got, want, atol=1e-5)
+    assert got.min() >= 0 and got.max() <= k
+
+
+def test_hamming_identical_and_flipped():
+    k = 16
+    pm = np.ones((8, k), dtype=np.float32)
+    same = np.asarray(hamming_distances(jnp.asarray(pm), jnp.ones(k, jnp.float32), tile_n=8))
+    flip = np.asarray(hamming_distances(jnp.asarray(pm), -jnp.ones(k, jnp.float32), tile_n=8))
+    assert (same == 0).all()
+    assert (flip == k).all()

@@ -1,0 +1,170 @@
+"""L2 graphs vs oracles: shapes, math, and the Nesterov step semantics."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels import ref
+
+settings.register_profile("ci", max_examples=15, deadline=None)
+settings.load_profile("ci")
+
+
+def test_encode_bh_shape_and_value(rng):
+    x = rng.standard_normal((256, 64)).astype(np.float32)
+    u = rng.standard_normal((64, 8)).astype(np.float32)
+    v = rng.standard_normal((64, 8)).astype(np.float32)
+    (out,) = model.encode_bh(jnp.asarray(x), jnp.asarray(u), jnp.asarray(v), tile_n=256)
+    assert out.shape == (256, 8)
+    assert_allclose(np.asarray(out), np.asarray(ref.bilinear_scores_ref(x, u, v)), rtol=2e-5, atol=2e-5)
+
+
+def test_encode_ah_two_projections(rng):
+    x = rng.standard_normal((32, 16)).astype(np.float32)
+    u = rng.standard_normal((16, 4)).astype(np.float32)
+    v = rng.standard_normal((16, 4)).astype(np.float32)
+    pu, pv = model.encode_ah(jnp.asarray(x), jnp.asarray(u), jnp.asarray(v))
+    assert_allclose(np.asarray(pu), x @ u, rtol=1e-5, atol=1e-5)
+    assert_allclose(np.asarray(pv), x @ v, rtol=1e-5, atol=1e-5)
+
+
+def test_encode_eh_matches_ref_and_accepts_f32_indices(rng):
+    n, d, k, s = 16, 32, 6, 24
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    ia = rng.integers(0, d, size=(k, s))
+    ib = rng.integers(0, d, size=(k, s))
+    g = rng.standard_normal((k, s)).astype(np.float32)
+    (out,) = model.encode_eh(
+        jnp.asarray(x),
+        jnp.asarray(ia, jnp.float32),  # f32 indices, as the Rust runtime sends
+        jnp.asarray(ib, jnp.float32),
+        jnp.asarray(g),
+    )
+    want = ref.eh_scores_ref(x, ia, ib, g)
+    assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_margin_scan(rng):
+    x = rng.standard_normal((64, 16)).astype(np.float32)
+    w = rng.standard_normal(16).astype(np.float32)
+    (out,) = model.margin_scan(jnp.asarray(x), jnp.asarray(w))
+    assert_allclose(np.asarray(out), np.abs(x @ w), rtol=1e-5, atol=1e-5)
+    assert (np.asarray(out) >= 0).all()
+
+
+def test_hamming_rank_shape(rng):
+    c = (2.0 * rng.integers(0, 2, size=(64, 8)) - 1).astype(np.float32)
+    q = (2.0 * rng.integers(0, 2, size=8) - 1).astype(np.float32)
+    (out,) = model.hamming_rank(jnp.asarray(c), jnp.asarray(q), tile_n=64)
+    assert out.shape == (64,)
+
+
+# ───────────────────────── lbh_step ─────────────────────────
+
+
+def _step_inputs(rng, m=32, d=16):
+    x = rng.standard_normal((m, d)).astype(np.float32)
+    x /= np.linalg.norm(x, axis=1, keepdims=True)
+    s = np.clip(2 * np.abs(x @ x.T) - 1, -1, 1).astype(np.float32)
+    r = 8.0 * s
+    u = rng.standard_normal(d).astype(np.float32)
+    v = rng.standard_normal(d).astype(np.float32)
+    return x, r, u, v
+
+
+def test_lbh_step_matches_ref(rng):
+    x, r, u, v = _step_inputs(rng)
+    lr, mu = 0.05, 0.9
+    un, vn, cost = model.lbh_step(
+        jnp.asarray(x), jnp.asarray(r), jnp.asarray(u), jnp.asarray(v),
+        jnp.asarray(u), jnp.asarray(v),
+        jnp.asarray([lr], jnp.float32), jnp.asarray([mu], jnp.float32),
+        tile_m=8,
+    )
+    run, rvn, rcost = ref.lbh_step_ref(x, r, u, v, u, v, lr, mu)
+    assert_allclose(np.asarray(un), np.asarray(run), rtol=2e-4, atol=2e-4)
+    assert_allclose(np.asarray(vn), np.asarray(rvn), rtol=2e-4, atol=2e-4)
+    assert_allclose(np.asarray(cost)[0], float(rcost), rtol=2e-3, atol=2e-3)
+
+
+def test_lbh_grad_ref_matches_finite_difference(rng):
+    x, r, u, v = _step_inputs(rng, m=16, d=8)
+    gu, gv, _ = ref.lbh_grad_ref(x, r, u, v)
+    eps = 1e-3
+    for t in range(8):
+        up, um = u.copy(), u.copy()
+        up[t] += eps
+        um[t] -= eps
+        _, _, cp = ref.lbh_grad_ref(x, r, up, v)
+        _, _, cm = ref.lbh_grad_ref(x, r, u, v)
+        _, _, cm = ref.lbh_grad_ref(x, r, um, v)
+        fd = (cp - cm) / (2 * eps)
+        assert abs(fd - gu[t]) < 2e-2 * (1 + abs(fd)), f"coord {t}: {fd} vs {gu[t]}"
+
+
+def test_lbh_step_descends_on_average(rng):
+    # run 40 steps from the random start; cost should drop substantially
+    x, r, u, v = _step_inputs(rng, m=32, d=16)
+    lr = jnp.asarray([0.05], jnp.float32)
+    mu = jnp.asarray([0.9], jnp.float32)
+    xu, xv = jnp.asarray(u), jnp.asarray(v)
+    pu, pv = xu, xv
+    _, _, c0 = ref.lbh_grad_ref(x, r, u, v)
+    cost = None
+    for _ in range(40):
+        un, vn, cost = model.lbh_step(
+            jnp.asarray(x), jnp.asarray(r), xu, xv, pu, pv, lr, mu, tile_m=8
+        )
+        pu, pv = xu, xv
+        xu, xv = un, vn
+    assert float(cost[0]) < float(c0), f"{float(cost[0])} !< {float(c0)}"
+
+
+def test_lbh_step_zero_padding_is_neutral(rng):
+    # padding X and R with zero rows/cols must not change the update
+    x, r, u, v = _step_inputs(rng, m=16, d=8)
+    lr = jnp.asarray([0.05], jnp.float32)
+    mu = jnp.asarray([0.9], jnp.float32)
+    un1, vn1, c1 = model.lbh_step(
+        jnp.asarray(x), jnp.asarray(r), jnp.asarray(u), jnp.asarray(v),
+        jnp.asarray(u), jnp.asarray(v), lr, mu, tile_m=8,
+    )
+    xp = np.zeros((24, 8), np.float32)
+    xp[:16] = x
+    rp = np.zeros((24, 24), np.float32)
+    rp[:16, :16] = r
+    un2, vn2, c2 = model.lbh_step(
+        jnp.asarray(xp), jnp.asarray(rp), jnp.asarray(u), jnp.asarray(v),
+        jnp.asarray(u), jnp.asarray(v), lr, mu, tile_m=8,
+    )
+    assert_allclose(np.asarray(un1), np.asarray(un2), rtol=1e-5, atol=1e-5)
+    assert_allclose(np.asarray(vn1), np.asarray(vn2), rtol=1e-5, atol=1e-5)
+    assert_allclose(np.asarray(c1), np.asarray(c2), rtol=1e-4, atol=1e-4)
+
+
+@given(
+    m=st.sampled_from([8, 24]),
+    d=st.sampled_from([4, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lbh_step_sweep(m, d, seed):
+    r_np = np.random.default_rng(seed)
+    x, r, u, v = _step_inputs(r_np, m=m, d=d)
+    lr, mu = 0.02, 0.8
+    un, vn, cost = model.lbh_step(
+        jnp.asarray(x), jnp.asarray(r), jnp.asarray(u), jnp.asarray(v),
+        jnp.asarray(u), jnp.asarray(v),
+        jnp.asarray([lr], jnp.float32), jnp.asarray([mu], jnp.float32),
+        tile_m=8,
+    )
+    run, rvn, rcost = ref.lbh_step_ref(x, r, u, v, u, v, lr, mu)
+    assert_allclose(np.asarray(un), np.asarray(run), rtol=1e-3, atol=1e-3)
+    assert_allclose(np.asarray(vn), np.asarray(rvn), rtol=1e-3, atol=1e-3)
+
+
+def test_sigmoid_is_tanh_half():
+    t = np.linspace(-10, 10, 101).astype(np.float32)
+    assert_allclose(np.asarray(ref.sigmoid_pm_ref(t)), np.tanh(t / 2), rtol=1e-5, atol=1e-6)

@@ -1,0 +1,99 @@
+//! Ablation: code length k vs retrieval quality & cost (DESIGN.md abl-k).
+//!
+//! The paper fixes k=16/20 "no more than 30"; this sweep shows the
+//! compact-regime trade-off that motivates that choice: more bits sharpen
+//! buckets (fewer, better candidates) until the Hamming ball goes empty.
+//!
+//! Run: `cargo bench --bench ablation_bits`
+
+use chh::data::{tiny1m_like, TinyConfig};
+use chh::hash::{BhHash, HashFamily};
+use chh::lbh::{LbhTrainConfig, LbhTrainer};
+use chh::linalg::{margin_feat, nrm2};
+use chh::report::write_csv;
+use chh::rng::Rng;
+use chh::svm::{LinearSvm, SvmConfig};
+use chh::table::HyperplaneIndex;
+
+fn main() {
+    let full = chh::bench::full_scale();
+    let n = if full { 100_000 } else { 20_000 };
+    let radius = 3;
+    let queries = 40;
+    let mut rng = Rng::seed_from_u64(7);
+    println!("ablation_bits: n={n} radius={radius} queries={queries}");
+    let data = tiny1m_like(&TinyConfig { n, d: 128, ..Default::default() }, &mut rng);
+
+    let ws: Vec<Vec<f32>> = (0..queries)
+        .map(|q| {
+            let c = (q % 10) as u16;
+            let idx = rng.sample_indices(n, 400);
+            let y: Vec<f32> =
+                idx.iter().map(|&i| if data.labels()[i] == c { 1.0 } else { -1.0 }).collect();
+            let mut svm = LinearSvm::new(data.dim());
+            svm.train(data.features(), &idx, &y, &SvmConfig::default());
+            svm.w
+        })
+        .collect();
+    let opt: f64 = ws
+        .iter()
+        .map(|w| {
+            let wn = nrm2(w);
+            (0..n)
+                .map(|i| margin_feat(data.features().row(i), w, wn))
+                .fold(f32::INFINITY, f32::min) as f64
+        })
+        .sum::<f64>()
+        / ws.len() as f64;
+
+    let mut rows = Vec::new();
+    for &k in &[8usize, 12, 16, 20, 24, 28] {
+        for method in ["bh", "lbh"] {
+            let fam: Box<dyn HashFamily> = match method {
+                "bh" => Box::new(BhHash::sample(data.dim(), k, &mut rng)),
+                _ => {
+                    let sample = rng.sample_indices(n, 512);
+                    let refs = rng.sample_indices(n, 4000);
+                    let (f, _) = LbhTrainer::new(LbhTrainConfig { bits: k, ..Default::default() })
+                        .train(data.features(), &sample, &refs, &mut rng);
+                    Box::new(f)
+                }
+            };
+            let index = HyperplaneIndex::build(fam.as_ref(), data.features(), radius);
+            let (mut msum, mut scanned, mut empty, mut probe_t) = (0.0f64, 0usize, 0usize, 0.0f64);
+            for w in &ws {
+                let t0 = std::time::Instant::now();
+                let hit = index.query_filtered(fam.as_ref(), w, data.features(), |_| true);
+                probe_t += t0.elapsed().as_secs_f64();
+                scanned += hit.scanned;
+                match hit.best {
+                    Some((_, m)) => msum += m as f64,
+                    None => {
+                        empty += 1;
+                        msum += 0.5;
+                    }
+                }
+            }
+            rows.push(vec![
+                k.to_string(),
+                method.to_uppercase(),
+                format!("{:.5}", msum / ws.len() as f64),
+                format!("{}", scanned / ws.len()),
+                format!("{empty}"),
+                format!("{:.3}", probe_t / ws.len() as f64 * 1e3),
+                format!("{}", index.probe_volume()),
+            ]);
+        }
+    }
+    chh::report::print_rows(
+        &format!("ablation: code length k (optimal margin = {opt:.5})"),
+        &["k", "method", "margin", "cands", "empty", "ms/query", "ball"],
+        &rows,
+    );
+    write_csv(
+        "ablation_bits.csv",
+        &["k", "method", "margin", "cands", "empty", "ms_per_query", "ball"],
+        &rows,
+    )
+    .expect("csv");
+}

@@ -1,0 +1,86 @@
+//! Ablation: Hamming lookup radius r (DESIGN.md abl-r).
+//!
+//! Radius trades probe count (Σ C(k,i) buckets) against candidate recall;
+//! the paper picks r=3 (k=16) and r=4 (k=20). The sweep exposes the
+//! empty-ball cliff below and the scan-cost blowup above.
+//!
+//! Run: `cargo bench --bench ablation_radius`
+
+use chh::data::{tiny1m_like, TinyConfig};
+use chh::hash::codes::ball_volume;
+use chh::hash::{BhHash, HashFamily};
+use chh::lbh::{LbhTrainConfig, LbhTrainer};
+use chh::report::write_csv;
+use chh::rng::Rng;
+use chh::svm::{LinearSvm, SvmConfig};
+use chh::table::HyperplaneIndex;
+
+fn main() {
+    let full = chh::bench::full_scale();
+    let n = if full { 100_000 } else { 20_000 };
+    let k = 16;
+    let queries = 40;
+    let mut rng = Rng::seed_from_u64(11);
+    println!("ablation_radius: n={n} k={k} queries={queries}");
+    let data = tiny1m_like(&TinyConfig { n, d: 128, ..Default::default() }, &mut rng);
+
+    let ws: Vec<Vec<f32>> = (0..queries)
+        .map(|q| {
+            let c = (q % 10) as u16;
+            let idx = rng.sample_indices(n, 400);
+            let y: Vec<f32> =
+                idx.iter().map(|&i| if data.labels()[i] == c { 1.0 } else { -1.0 }).collect();
+            let mut svm = LinearSvm::new(data.dim());
+            svm.train(data.features(), &idx, &y, &SvmConfig::default());
+            svm.w
+        })
+        .collect();
+
+    // families trained/sampled once; radius only affects the probe
+    let bh = BhHash::sample(data.dim(), k, &mut rng);
+    let sample = rng.sample_indices(n, 512);
+    let refs = rng.sample_indices(n, 4000);
+    let (lbh, _) = LbhTrainer::new(LbhTrainConfig { bits: k, ..Default::default() })
+        .train(data.features(), &sample, &refs, &mut rng);
+
+    let mut rows = Vec::new();
+    for radius in 0..=5usize {
+        for (name, fam) in [("BH", &bh as &dyn HashFamily), ("LBH", &lbh as &dyn HashFamily)] {
+            let index = HyperplaneIndex::build(fam, data.features(), radius);
+            let (mut msum, mut scanned, mut empty, mut probe_t) = (0.0f64, 0usize, 0usize, 0.0f64);
+            for w in &ws {
+                let t0 = std::time::Instant::now();
+                let hit = index.query_filtered(fam, w, data.features(), |_| true);
+                probe_t += t0.elapsed().as_secs_f64();
+                scanned += hit.scanned;
+                match hit.best {
+                    Some((_, m)) => msum += m as f64,
+                    None => {
+                        empty += 1;
+                        msum += 0.5;
+                    }
+                }
+            }
+            rows.push(vec![
+                radius.to_string(),
+                name.into(),
+                format!("{:.5}", msum / ws.len() as f64),
+                format!("{}", scanned / ws.len()),
+                format!("{empty}"),
+                format!("{:.3}", probe_t / ws.len() as f64 * 1e3),
+                format!("{}", ball_volume(k, radius)),
+            ]);
+        }
+    }
+    chh::report::print_rows(
+        "ablation: Hamming radius r (k=16)",
+        &["r", "method", "margin", "cands", "empty", "ms/query", "buckets probed"],
+        &rows,
+    );
+    write_csv(
+        "ablation_radius.csv",
+        &["r", "method", "margin", "cands", "empty", "ms_per_query", "buckets"],
+        &rows,
+    )
+    .expect("csv");
+}

@@ -1,0 +1,90 @@
+//! Ablation: LBH training-sample count m and per-bit iteration budget
+//! (DESIGN.md abl-m). The paper uses m=500 (20NG) and m=5000 (Tiny-1M);
+//! the trainer is O(m²) per iteration, so this is the main training knob.
+//!
+//! Run: `cargo bench --bench ablation_train`
+
+use chh::data::{tiny1m_like, TinyConfig};
+
+use chh::lbh::{LbhTrainConfig, LbhTrainer};
+use chh::report::write_csv;
+use chh::rng::Rng;
+use chh::svm::{LinearSvm, SvmConfig};
+use chh::table::HyperplaneIndex;
+
+fn main() {
+    let full = chh::bench::full_scale();
+    let n = if full { 100_000 } else { 20_000 };
+    let k = 16;
+    let radius = 3;
+    let queries = 30;
+    let mut rng = Rng::seed_from_u64(13);
+    println!("ablation_train: n={n} k={k} radius={radius}");
+    let data = tiny1m_like(&TinyConfig { n, d: 128, ..Default::default() }, &mut rng);
+
+    let ws: Vec<Vec<f32>> = (0..queries)
+        .map(|q| {
+            let c = (q % 10) as u16;
+            let idx = rng.sample_indices(n, 400);
+            let y: Vec<f32> =
+                idx.iter().map(|&i| if data.labels()[i] == c { 1.0 } else { -1.0 }).collect();
+            let mut svm = LinearSvm::new(data.dim());
+            svm.train(data.features(), &idx, &y, &SvmConfig::default());
+            svm.w
+        })
+        .collect();
+
+    let mut rows = Vec::new();
+    // m sweep at the default iteration budget
+    for &m in &[64usize, 128, 256, 512, 1024] {
+        run_case(&data, &ws, k, radius, m, 300, &mut rng, &mut rows);
+    }
+    // iteration sweep at m=512
+    for &iters in &[50usize, 150, 600] {
+        run_case(&data, &ws, k, radius, 512, iters, &mut rng, &mut rows);
+    }
+    chh::report::print_rows(
+        "ablation: LBH training samples m / Nesterov iterations",
+        &["m", "iters/bit", "train(s)", "margin", "cands", "residue capt %"],
+        &rows,
+    );
+    write_csv(
+        "ablation_train.csv",
+        &["m", "iters", "train_s", "margin", "cands", "residue_pct"],
+        &rows,
+    )
+    .expect("csv");
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_case(
+    data: &chh::data::Dataset,
+    ws: &[Vec<f32>],
+    k: usize,
+    radius: usize,
+    m: usize,
+    iters: usize,
+    rng: &mut Rng,
+    rows: &mut Vec<Vec<String>>,
+) {
+    let sample = rng.sample_indices(data.len(), m);
+    let refs = rng.sample_indices(data.len(), data.len().min(4000));
+    let trainer =
+        LbhTrainer::new(LbhTrainConfig { bits: k, iters_per_bit: iters, ..Default::default() });
+    let (fam, stats) = trainer.train(data.features(), &sample, &refs, rng);
+    let index = HyperplaneIndex::build(&fam, data.features(), radius);
+    let (mut msum, mut scanned) = (0.0f64, 0usize);
+    for w in ws {
+        let hit = index.query_filtered(&fam, w, data.features(), |_| true);
+        scanned += hit.scanned;
+        msum += hit.best.map(|(_, m)| m as f64).unwrap_or(0.5);
+    }
+    rows.push(vec![
+        m.to_string(),
+        iters.to_string(),
+        format!("{:.2}", stats.train_secs),
+        format!("{:.5}", msum / ws.len() as f64),
+        format!("{}", scanned / ws.len()),
+        format!("{:.1}", 100.0 * (1.0 - stats.residue_after / stats.residue_before)),
+    ]);
+}

@@ -1,0 +1,133 @@
+//! Reproduces paper Fig. 4 (Tiny-1M): MAP / minimum-margin / nonempty
+//! lookup results on the dense GIST-like corpus.
+//!
+//! Paper settings: 1.06M points, 10 CIFAR classes + "other", 20-bit codes
+//! (40 for AH), Hamming radius 4, 50 init labels/class, 300 iterations,
+//! 5 runs, LBH m=5000. Default here: n=30k, reduced iterations.
+//! `CHH_BENCH_FULL=1` runs n=1M (needs ~4 GB and several hours on 1 core).
+//!
+//! Run: `cargo bench --bench fig4_tiny`
+
+use std::sync::Arc;
+
+use chh::active::{AlConfig, AlEngine, Strategy};
+use chh::config::{DatasetProfile, ExperimentConfig};
+use chh::data::{tiny1m_like, TinyConfig};
+use chh::hash::{AhHash, BhHash, EhHash, HashFamily};
+use chh::lbh::{LbhTrainConfig, LbhTrainer};
+use chh::report::{ascii_plot, write_csv, Series};
+use chh::rng::Rng;
+use chh::table::HyperplaneIndex;
+
+fn main() {
+    let full = chh::bench::full_scale();
+    let mut cfg = ExperimentConfig::for_profile(DatasetProfile::Tiny);
+    if full {
+        cfg.n = 1_060_000;
+        cfg.lbh_m = Some(2048); // m=5000 is quadratic in the trainer; 2048 tiles fit
+    } else {
+        cfg.n = 30_000;
+        cfg.al_iters = 120;
+        cfg.runs = 2;
+        cfg.max_classes = Some(5);
+        cfg.lbh_m = Some(1024);
+    }
+    println!(
+        "fig4_tiny: n={} k={} radius={} iters={} runs={} (full={full})",
+        cfg.n,
+        cfg.bits(),
+        cfg.radius(),
+        cfg.al_iters,
+        cfg.runs
+    );
+    let mut rng = Rng::seed_from_u64(cfg.seed);
+    let data = tiny1m_like(&TinyConfig { n: cfg.n, ..Default::default() }, &mut rng);
+    let engine = AlEngine::new(&data, AlConfig::from_experiment(&cfg));
+
+    let mut map_series = Vec::new();
+    let mut margin_series = Vec::new();
+    let mut csv_rows = Vec::new();
+    let mut nonempty_rows = Vec::new();
+    for strat in ["random", "exhaustive", "ah", "eh", "bh", "lbh"] {
+        let t0 = std::time::Instant::now();
+        let res = engine.run_experiment(cfg.runs, cfg.max_classes, cfg.seed, |rng| {
+            build(strat, &cfg, &data, rng)
+        });
+        eprintln!("  {strat:<11} done in {:.1}s", t0.elapsed().as_secs_f64());
+        let mut ms = Series::new(&res.strategy);
+        for &(it, m) in &res.map_curve {
+            ms.push(it as f64, m);
+            csv_rows.push(vec![res.strategy.clone(), it.to_string(), format!("{m:.6}")]);
+        }
+        map_series.push(ms);
+        let mut gs = Series::new(&res.strategy);
+        for (it, &m) in res.margin_curve.iter().enumerate() {
+            if it % 5 == 0 {
+                gs.push(it as f64, m);
+            }
+        }
+        margin_series.push(gs);
+        nonempty_rows.push(vec![
+            res.strategy.clone(),
+            format!(
+                "{:.1}",
+                res.nonempty_per_class.iter().sum::<f64>()
+                    / res.nonempty_per_class.len().max(1) as f64
+            ),
+            format!("{}", cfg.al_iters),
+            format!("{:.2}s", res.select_secs),
+        ]);
+    }
+    println!("{}", ascii_plot("Fig 4(a): MAP learning curves (tiny1m-like)", &map_series, 64, 16));
+    println!(
+        "{}",
+        ascii_plot("Fig 4(b): minimum-margin curves (lower = better)", &margin_series, 64, 16)
+    );
+    chh::report::print_rows(
+        "Fig 4(c): mean nonempty lookups per class",
+        &["strategy", "nonempty", "of iters", "select time"],
+        &nonempty_rows,
+    );
+    write_csv("fig4_map.csv", &["strategy", "iter", "map"], &csv_rows).expect("csv");
+    write_csv(
+        "fig4_nonempty.csv",
+        &["strategy", "nonempty_mean", "iters", "select_secs"],
+        &nonempty_rows,
+    )
+    .expect("csv");
+}
+
+fn build(name: &str, cfg: &ExperimentConfig, data: &chh::data::Dataset, rng: &mut Rng) -> Strategy {
+    let bits = cfg.bits();
+    let radius = cfg.radius();
+    match name {
+        "random" => Strategy::Random,
+        "exhaustive" => Strategy::Exhaustive,
+        "ah" => {
+            let fam: Arc<dyn HashFamily> = Arc::new(AhHash::sample(data.dim(), bits, rng));
+            let index = Arc::new(HyperplaneIndex::build(fam.as_ref(), data.features(), radius));
+            Strategy::Hash { family: fam, index }
+        }
+        "eh" => {
+            let fam: Arc<dyn HashFamily> = Arc::new(EhHash::sampled(data.dim(), bits, 256, rng));
+            let index = Arc::new(HyperplaneIndex::build(fam.as_ref(), data.features(), radius));
+            Strategy::Hash { family: fam, index }
+        }
+        "bh" => {
+            let fam: Arc<dyn HashFamily> = Arc::new(BhHash::sample(data.dim(), bits, rng));
+            let index = Arc::new(HyperplaneIndex::build(fam.as_ref(), data.features(), radius));
+            Strategy::Hash { family: fam, index }
+        }
+        "lbh" => {
+            let m = cfg.lbh_m();
+            let sample = rng.sample_indices(data.len(), m);
+            let refs = rng.sample_indices(data.len(), data.len().min(4000));
+            let trainer = LbhTrainer::new(LbhTrainConfig { bits, ..Default::default() });
+            let (fam, _) = trainer.train(data.features(), &sample, &refs, rng);
+            let fam: Arc<dyn HashFamily> = Arc::new(fam);
+            let index = Arc::new(HyperplaneIndex::build(fam.as_ref(), data.features(), radius));
+            Strategy::Hash { family: fam, index }
+        }
+        other => panic!("unknown strategy {other}"),
+    }
+}

@@ -1,0 +1,140 @@
+//! Micro-benchmarks of every hot-path primitive — the §Perf baseline.
+//!
+//! Covers: native dot/encode, sparse encode, Hamming scan (POPCNT),
+//! Hamming-ball enumeration, table probes, SVM epochs, LBH gradient, and
+//! the PJRT batch-encode path when artifacts are present.
+//!
+//! Run: `cargo bench --bench micro`
+
+use std::hint::black_box;
+
+use chh::bench::{print_table, Bench};
+use chh::data::{newsgroups_like, tiny1m_like, NewsConfig, TinyConfig};
+use chh::hash::codes::{CodeArray, HammingBall};
+use chh::hash::{BhHash, EhHash, HashFamily};
+use chh::linalg::dot;
+use chh::rng::Rng;
+use chh::svm::{LinearSvm, SvmConfig};
+use chh::table::HyperplaneIndex;
+
+fn main() {
+    let b = Bench::default();
+    let mut rows = Vec::new();
+    let mut rng = Rng::seed_from_u64(42);
+
+    // ── linalg ────────────────────────────────────────────────────────
+    let x = rng.gauss_vec(384);
+    let y = rng.gauss_vec(384);
+    rows.push(b.run("dot d=384", || {
+        black_box(dot(black_box(&x), black_box(&y)));
+    }));
+
+    // ── encode: dense BH / EH, sparse BH ─────────────────────────────
+    let tiny = tiny1m_like(&TinyConfig { n: 4096, ..Default::default() }, &mut rng);
+    let bh = BhHash::sample(384, 20, &mut rng);
+    rows.push(b.run("bh encode_point d=384 k=20", || {
+        black_box(bh.encode_point(tiny.features().row(7)));
+    }));
+    rows.push(b.run("bh encode_all n=4096", || {
+        black_box(bh.encode_all(tiny.features()));
+    }));
+    let eh = EhHash::sampled(384, 20, 256, &mut rng);
+    rows.push(b.run("eh(s=256) encode_point", || {
+        black_box(eh.encode_point(tiny.features().row(7)));
+    }));
+    let news = newsgroups_like(
+        &NewsConfig { n: 2048, vocab: 1024, classes: 8, ..Default::default() },
+        &mut rng,
+    );
+    let bh_sparse = BhHash::sample(1024, 16, &mut rng);
+    rows.push(b.run("bh encode_point sparse d=1024", || {
+        black_box(bh_sparse.encode_point(news.features().row(3)));
+    }));
+
+    // ── hamming scan + ball enumeration ──────────────────────────────
+    let mut codes = CodeArray::new(20);
+    for _ in 0..100_000 {
+        codes.push(rng.next_u64() & chh::hash::codes::mask(20));
+    }
+    let q = rng.next_u64() & chh::hash::codes::mask(20);
+    let mut out = Vec::new();
+    rows.push(b.run("hamming_scan n=100k k=20", || {
+        codes.hamming_scan(black_box(q), &mut out);
+        black_box(out.len());
+    }));
+    rows.push(b.run("ball enumeration k=20 r=4 (6196)", || {
+        black_box(HammingBall::new(20, 4).count());
+    }));
+
+    // ── table probe ──────────────────────────────────────────────────
+    let index = HyperplaneIndex::build(&bh, tiny.features(), 4);
+    let w = chh::testing::unit_vec(&mut rng, 384);
+    rows.push(b.run("index.query n=4096 k=20 r=4", || {
+        black_box(index.query(&bh, black_box(&w), tiny.features()));
+    }));
+    let mut cand = Vec::new();
+    let lookup = bh.encode_query(&w);
+    rows.push(b.run("candidates_into (ball probe only)", || {
+        index.candidates_into(black_box(lookup), usize::MAX, &mut cand);
+        black_box(cand.len());
+    }));
+
+    // ── SVM ──────────────────────────────────────────────────────────
+    let idx: Vec<usize> = (0..1000).collect();
+    let yv: Vec<f32> =
+        idx.iter().map(|&i| if tiny.labels()[i] == 0 { 1.0 } else { -1.0 }).collect();
+    let cfg = SvmConfig { max_epochs: 5, tol: 0.0, ..Default::default() };
+    rows.push(b.run("svm 5 epochs n=1000 d=384", || {
+        let mut svm = LinearSvm::new(384);
+        svm.train(tiny.features(), &idx, &yv, &cfg);
+        black_box(svm.w[0]);
+    }));
+
+    // ── LBH gradient (m=256) ─────────────────────────────────────────
+    let mut xm = chh::linalg::Mat::zeros(256, 384);
+    for i in 0..256 {
+        tiny.features().row(i).scatter_into(xm.row_mut(i));
+    }
+    xm.l2_normalize_rows();
+    let s = chh::lbh::similarity_matrix(&xm, 0.8, 0.2);
+    let u = rng.gauss_vec(384);
+    let v = rng.gauss_vec(384);
+    rows.push(b.run("lbh surrogate_grad m=256 d=384", || {
+        black_box(chh::lbh::surrogate_grad(&xm, &s, black_box(&u), black_box(&v)));
+    }));
+
+    // ── PJRT batch encode (artifacts path) ───────────────────────────
+    match chh::runtime::Runtime::open_default() {
+        Ok(rt) if rt.has("encode_bh_tiny") => {
+            let enc = chh::runtime::BatchEncoder::bilinear(&rt, "tiny").unwrap();
+            let pairs = BhHash::sample(384, 20, &mut rng).pairs;
+            // warm compile outside the timing loop
+            let _ = enc.encode_all(tiny.features(), &pairs);
+            rows.push(b.run("pjrt encode_all n=4096 (tile 2048)", || {
+                black_box(enc.encode_all(tiny.features(), &pairs).unwrap());
+            }));
+            let scanner = chh::runtime::MarginScanner::open(&rt, "tiny").unwrap();
+            let _ = scanner.scan(tiny.features(), &w);
+            rows.push(b.run("pjrt margin_scan n=4096", || {
+                black_box(scanner.scan(tiny.features(), black_box(&w)).unwrap());
+            }));
+        }
+        _ => eprintln!("(PJRT artifacts unavailable — skipping pjrt micro rows)"),
+    }
+
+    print_table("micro benchmarks", &rows);
+    let csv: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.name.clone(),
+                format!("{:.9}", r.mean.as_secs_f64()),
+                format!("{:.9}", r.p50.as_secs_f64()),
+                format!("{:.9}", r.p95.as_secs_f64()),
+                r.iters.to_string(),
+            ]
+        })
+        .collect();
+    chh::report::write_csv("micro.csv", &["case", "mean_s", "p50_s", "p95_s", "iters"], &csv)
+        .expect("csv");
+}

@@ -1,0 +1,451 @@
+//! SVM active learning driven by point-to-hyperplane search (§5 protocol).
+//!
+//! For each class c (one-vs-all) and each run:
+//! 1. seed the labeled set with `init_per_class` samples from every class;
+//! 2. train a linear SVM on the binary labels of class c;
+//! 3. for 300 iterations: ask the selection strategy for the unlabeled
+//!    point nearest the current hyperplane, reveal its label, retrain
+//!    (warm-started), and record the selected point's true margin;
+//! 4. every `eval_every` iterations score the remaining unlabeled pool and
+//!    compute average precision.
+//!
+//! Strategies: random, exhaustive (the two §5.2 baselines) and hash-based
+//! (AH / EH / BH / LBH through [`crate::table::HyperplaneIndex`]); empty
+//! hash lookups fall back to random selection exactly as the paper does.
+
+use std::sync::Arc;
+
+use crate::config::ExperimentConfig;
+use crate::data::{Dataset, FeatureStore};
+use crate::hash::HashFamily;
+use crate::metrics::average_precision;
+use crate::rng::Rng;
+use crate::svm::{LinearSvm, SvmConfig};
+use crate::table::HyperplaneIndex;
+
+/// Which sample-selection strategy an AL run uses.
+#[derive(Clone)]
+pub enum Strategy {
+    Random,
+    Exhaustive,
+    /// hash family + prebuilt single-table index + Hamming radius
+    Hash { family: Arc<dyn HashFamily>, index: Arc<HyperplaneIndex> },
+    /// Hamming-ranking mode: linear scan over codes instead of bucket probes
+    HashRank { family: Arc<dyn HashFamily>, index: Arc<HyperplaneIndex> },
+}
+
+impl Strategy {
+    pub fn name(&self) -> String {
+        match self {
+            Strategy::Random => "Random".into(),
+            Strategy::Exhaustive => "Exhaustive".into(),
+            Strategy::Hash { family, .. } => format!("{}-Hash", family.name()),
+            Strategy::HashRank { family, .. } => format!("{}-Rank", family.name()),
+        }
+    }
+}
+
+/// Per-iteration bookkeeping of one (class, run) AL trajectory.
+#[derive(Clone, Debug, Default)]
+pub struct ClassResult {
+    /// (iteration, AP) pairs at evaluation points
+    pub ap_curve: Vec<(usize, f64)>,
+    /// margin |wᵀx|/‖w‖ of the point selected at each iteration
+    pub min_margins: Vec<f32>,
+    /// queries (out of al_iters) whose hash lookup was nonempty
+    pub nonempty_lookups: usize,
+    /// total candidates scanned by the selector
+    pub scanned_total: usize,
+    /// wall-clock spent inside selection only (the hashing speedup metric)
+    pub select_secs: f64,
+    /// wall-clock spent retraining the SVM
+    pub train_secs: f64,
+}
+
+/// Aggregated result over classes and runs.
+#[derive(Clone, Debug, Default)]
+pub struct AlResult {
+    pub strategy: String,
+    /// mean AP curve: (iteration, MAP)
+    pub map_curve: Vec<(usize, f64)>,
+    /// mean selected margin per iteration
+    pub margin_curve: Vec<f64>,
+    /// per-class nonempty lookup counts (averaged over runs)
+    pub nonempty_per_class: Vec<f64>,
+    pub select_secs: f64,
+    pub train_secs: f64,
+    pub scanned_total: usize,
+}
+
+/// Re-usable configuration of one AL experiment (see [`ExperimentConfig`]).
+#[derive(Clone, Debug)]
+pub struct AlConfig {
+    pub al_iters: usize,
+    pub init_per_class: usize,
+    pub eval_every: usize,
+    pub svm: SvmConfig,
+}
+
+impl AlConfig {
+    pub fn from_experiment(cfg: &ExperimentConfig) -> Self {
+        AlConfig {
+            al_iters: cfg.al_iters,
+            init_per_class: cfg.profile.init_per_class(),
+            eval_every: cfg.eval_every,
+            svm: SvmConfig { c: cfg.svm_c, ..Default::default() },
+        }
+    }
+}
+
+/// The engine: borrows a dataset, runs (class × run) trajectories.
+pub struct AlEngine<'a> {
+    pub data: &'a Dataset,
+    pub cfg: AlConfig,
+}
+
+impl<'a> AlEngine<'a> {
+    pub fn new(data: &'a Dataset, cfg: AlConfig) -> Self {
+        AlEngine { data, cfg }
+    }
+
+    /// Draw the shared initial labeled set: `init_per_class` per class
+    /// (including the "other" class when present, mirroring a realistic
+    /// seed pool).
+    pub fn initial_labeled(&self, rng: &mut Rng) -> Vec<usize> {
+        let mut labeled = Vec::new();
+        let n_labels = *self.data.labels().iter().max().unwrap_or(&0) as usize + 1;
+        for c in 0..n_labels {
+            let members = self.data.class_indices(c as u16);
+            if members.is_empty() {
+                continue;
+            }
+            let take = self.cfg.init_per_class.min(members.len());
+            for &i in rng.sample_indices(members.len(), take).iter().map(|&p| &members[p]) {
+                labeled.push(i);
+            }
+        }
+        labeled
+    }
+
+    /// Run one (class, strategy) trajectory from a given initial pool.
+    pub fn run_class(
+        &self,
+        class: u16,
+        strategy: &Strategy,
+        init_labeled: &[usize],
+        rng: &mut Rng,
+    ) -> ClassResult {
+        let n = self.data.len();
+        let feats = self.data.features();
+        let relevant: Vec<bool> = self.data.binary_labels(class);
+        let mut labeled = vec![false; n];
+        let mut idx: Vec<usize> = Vec::with_capacity(init_labeled.len() + self.cfg.al_iters);
+        let mut y: Vec<f32> = Vec::with_capacity(idx.capacity());
+        for &i in init_labeled {
+            if !labeled[i] {
+                labeled[i] = true;
+                idx.push(i);
+                y.push(if relevant[i] { 1.0 } else { -1.0 });
+            }
+        }
+        let mut svm = LinearSvm::new(self.data.dim());
+        let mut res = ClassResult::default();
+        let mut t_train = crate::metrics::Stopwatch::new();
+        let mut t_select = crate::metrics::Stopwatch::new();
+        // auto-balance: the one-vs-all problems are heavily skewed and the
+        // margin criterion keeps adding near-boundary negatives; weight the
+        // positive class like LIBLINEAR's -w1 n_neg/n_pos
+        let balanced = |y: &[f32]| -> SvmConfig {
+            let pos = y.iter().filter(|&&v| v > 0.0).count().max(1);
+            let neg = y.len() - pos;
+            SvmConfig {
+                pos_weight: (neg as f32 / pos as f32).clamp(1.0, 100.0),
+                ..self.cfg.svm.clone()
+            }
+        };
+        t_train.time(|| svm.train(feats, &idx, &y, &balanced(&y)));
+
+        for it in 0..self.cfg.al_iters {
+            // ── selection ────────────────────────────────────────────
+            let (pick, nonempty, scanned) = t_select.time(|| {
+                self.select(strategy, &svm.w, feats, &labeled, rng)
+            });
+            if nonempty {
+                res.nonempty_lookups += 1;
+            }
+            res.scanned_total += scanned;
+            let Some(pick) = pick else {
+                // pool exhausted
+                break;
+            };
+            debug_assert!(!labeled[pick]);
+            let w_norm = crate::linalg::nrm2(&svm.w);
+            res.min_margins
+                .push(crate::linalg::margin_feat(feats.row(pick), &svm.w, w_norm));
+            // ── label + retrain (warm start) ────────────────────────
+            labeled[pick] = true;
+            idx.push(pick);
+            y.push(if relevant[pick] { 1.0 } else { -1.0 });
+            svm.grow_to(idx.len());
+            t_train.time(|| svm.train(feats, &idx, &y, &balanced(&y)));
+            // ── evaluation ──────────────────────────────────────────
+            if (it + 1) % self.cfg.eval_every == 0 || it + 1 == self.cfg.al_iters {
+                let mut scores = Vec::with_capacity(n);
+                let mut rel = Vec::with_capacity(n);
+                for i in 0..n {
+                    if labeled[i] {
+                        continue;
+                    }
+                    scores.push(svm.score(feats.row(i)));
+                    rel.push(relevant[i]);
+                }
+                res.ap_curve.push((it + 1, average_precision(&scores, &rel)));
+            }
+        }
+        res.select_secs = t_select.total_secs();
+        res.train_secs = t_train.total_secs();
+        res
+    }
+
+    /// One selection step. Returns (picked index, lookup nonempty, scanned).
+    fn select(
+        &self,
+        strategy: &Strategy,
+        w: &[f32],
+        feats: &FeatureStore,
+        labeled: &[bool],
+        rng: &mut Rng,
+    ) -> (Option<usize>, bool, usize) {
+        match strategy {
+            Strategy::Random => (random_unlabeled(labeled, rng), true, 0),
+            Strategy::Exhaustive => {
+                let w_norm = crate::linalg::nrm2(w);
+                let mut best: Option<(usize, f32)> = None;
+                for i in 0..feats.len() {
+                    if labeled[i] {
+                        continue;
+                    }
+                    let m = crate::linalg::margin_feat(feats.row(i), w, w_norm);
+                    if best.map_or(true, |(_, bm)| m < bm) {
+                        best = Some((i, m));
+                    }
+                }
+                (best.map(|(i, _)| i), true, feats.len())
+            }
+            Strategy::Hash { family, index } => {
+                let hit = index.query_filtered(family.as_ref(), w, feats, |i| !labeled[i]);
+                match hit.best {
+                    Some((i, _)) => (Some(i), hit.nonempty, hit.scanned),
+                    // paper §5.2: empty lookups fall back to random selection
+                    None => (random_unlabeled(labeled, rng), hit.nonempty, hit.scanned),
+                }
+            }
+            Strategy::HashRank { family, index } => {
+                let lookup = family.encode_query(w);
+                let hit = index.rank_search(lookup, w, feats, |i| !labeled[i]);
+                match hit.best {
+                    Some((i, _)) => (Some(i), true, hit.scanned),
+                    None => (random_unlabeled(labeled, rng), false, hit.scanned),
+                }
+            }
+        }
+    }
+
+    /// Full experiment: all classes × `runs`, averaged. `make_strategy` is
+    /// called once per run (randomized families redraw projections per run,
+    /// matching the paper's 5 random initializations).
+    pub fn run_experiment(
+        &self,
+        runs: usize,
+        max_classes: Option<usize>,
+        seed: u64,
+        mut make_strategy: impl FnMut(&mut Rng) -> Strategy,
+    ) -> AlResult {
+        let classes = self.data.eval_classes().min(max_classes.unwrap_or(usize::MAX));
+        let mut agg: Option<AlResult> = None;
+        let mut total_curves = 0usize;
+        for run in 0..runs {
+            let mut rng = Rng::seed_from_u64(seed ^ (run as u64).wrapping_mul(0x9E37_79B9));
+            let strategy = make_strategy(&mut rng);
+            let init = self.initial_labeled(&mut rng);
+            for c in 0..classes {
+                let r = self.run_class(c as u16, &strategy, &init, &mut rng);
+                let a = agg.get_or_insert_with(|| AlResult {
+                    strategy: strategy.name(),
+                    map_curve: r.ap_curve.iter().map(|&(i, _)| (i, 0.0)).collect(),
+                    margin_curve: vec![0.0; r.min_margins.len()],
+                    nonempty_per_class: vec![0.0; classes],
+                    ..Default::default()
+                });
+                for (slot, &(_, ap)) in a.map_curve.iter_mut().zip(r.ap_curve.iter()) {
+                    slot.1 += ap;
+                }
+                for (slot, &m) in a.margin_curve.iter_mut().zip(r.min_margins.iter()) {
+                    *slot += m as f64;
+                }
+                a.nonempty_per_class[c] += r.nonempty_lookups as f64;
+                a.select_secs += r.select_secs;
+                a.train_secs += r.train_secs;
+                a.scanned_total += r.scanned_total;
+                total_curves += 1;
+            }
+        }
+        let mut a = agg.unwrap_or_default();
+        if total_curves > 0 {
+            for slot in a.map_curve.iter_mut() {
+                slot.1 /= total_curves as f64;
+            }
+            for slot in a.margin_curve.iter_mut() {
+                *slot /= total_curves as f64;
+            }
+            for slot in a.nonempty_per_class.iter_mut() {
+                *slot /= runs as f64;
+            }
+        }
+        a
+    }
+}
+
+fn random_unlabeled(labeled: &[bool], rng: &mut Rng) -> Option<usize> {
+    let n = labeled.len();
+    let remaining = labeled.iter().filter(|&&l| !l).count();
+    if remaining == 0 {
+        return None;
+    }
+    // rejection sampling is fast while the pool is mostly unlabeled
+    for _ in 0..64 {
+        let i = rng.below(n);
+        if !labeled[i] {
+            return Some(i);
+        }
+    }
+    let target = rng.below(remaining);
+    labeled
+        .iter()
+        .enumerate()
+        .filter(|(_, &l)| !l)
+        .nth(target)
+        .map(|(i, _)| i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::test_blobs;
+    use crate::hash::BhHash;
+
+    fn small_cfg() -> AlConfig {
+        AlConfig {
+            al_iters: 20,
+            init_per_class: 3,
+            eval_every: 5,
+            svm: SvmConfig::default(),
+        }
+    }
+
+    #[test]
+    fn random_unlabeled_excludes_labeled() {
+        let mut rng = Rng::seed_from_u64(1);
+        let mut labeled = vec![false; 10];
+        for i in 0..9 {
+            labeled[i] = true;
+        }
+        for _ in 0..20 {
+            assert_eq!(random_unlabeled(&labeled, &mut rng), Some(9));
+        }
+        labeled[9] = true;
+        assert_eq!(random_unlabeled(&labeled, &mut rng), None);
+    }
+
+    #[test]
+    fn exhaustive_picks_global_min_margin() {
+        let mut rng = Rng::seed_from_u64(2);
+        let ds = test_blobs(120, 8, 2, &mut rng);
+        let engine = AlEngine::new(&ds, small_cfg());
+        let init = engine.initial_labeled(&mut rng);
+        let res = engine.run_class(0, &Strategy::Exhaustive, &init, &mut rng);
+        assert_eq!(res.min_margins.len(), 20);
+        assert_eq!(res.nonempty_lookups, 20);
+        // AP evaluated at 5,10,15,20
+        assert_eq!(res.ap_curve.len(), 4);
+        for &(_, ap) in &res.ap_curve {
+            assert!((0.0..=1.0).contains(&ap));
+        }
+    }
+
+    #[test]
+    fn exhaustive_margins_below_random_margins() {
+        // The defining property of margin-based AL: the exhaustive picker
+        // selects points much nearer the hyperplane than random picks.
+        let mut rng = Rng::seed_from_u64(3);
+        let ds = test_blobs(400, 16, 2, &mut rng);
+        let engine = AlEngine::new(&ds, small_cfg());
+        let init = engine.initial_labeled(&mut rng);
+        let r_ex = engine.run_class(0, &Strategy::Exhaustive, &init, &mut rng);
+        let r_rand = engine.run_class(0, &Strategy::Random, &init, &mut rng);
+        let mean = |v: &[f32]| v.iter().map(|&x| x as f64).sum::<f64>() / v.len() as f64;
+        assert!(
+            mean(&r_ex.min_margins) < 0.5 * mean(&r_rand.min_margins),
+            "exhaustive {} vs random {}",
+            mean(&r_ex.min_margins),
+            mean(&r_rand.min_margins)
+        );
+    }
+
+    #[test]
+    fn hash_strategy_runs_and_tracks_lookups() {
+        let mut rng = Rng::seed_from_u64(4);
+        let ds = test_blobs(300, 16, 2, &mut rng);
+        let fam = Arc::new(BhHash::sample(16, 10, &mut rng));
+        let index = Arc::new(HyperplaneIndex::build(fam.as_ref(), ds.features(), 3));
+        let engine = AlEngine::new(&ds, small_cfg());
+        let init = engine.initial_labeled(&mut rng);
+        let strat = Strategy::Hash { family: fam, index };
+        let res = engine.run_class(0, &strat, &init, &mut rng);
+        assert_eq!(res.min_margins.len(), 20);
+        assert!(res.nonempty_lookups <= 20);
+    }
+
+    #[test]
+    fn never_selects_labeled_point() {
+        let mut rng = Rng::seed_from_u64(5);
+        let ds = test_blobs(60, 8, 2, &mut rng);
+        let mut cfg = small_cfg();
+        cfg.al_iters = 54; // 60 - 6 init: exhausts the pool exactly
+        let engine = AlEngine::new(&ds, cfg);
+        let init = engine.initial_labeled(&mut rng);
+        assert_eq!(init.len(), 6);
+        let res = engine.run_class(0, &Strategy::Random, &init, &mut rng);
+        assert_eq!(res.min_margins.len(), 54, "every point labeled exactly once");
+    }
+
+    #[test]
+    fn experiment_aggregates_over_runs_and_classes() {
+        let mut rng = Rng::seed_from_u64(6);
+        let ds = test_blobs(150, 8, 3, &mut rng);
+        let engine = AlEngine::new(&ds, small_cfg());
+        let res = engine.run_experiment(2, None, 77, |_| Strategy::Random);
+        assert_eq!(res.strategy, "Random");
+        assert_eq!(res.nonempty_per_class.len(), 3);
+        assert_eq!(res.margin_curve.len(), 20);
+        assert!(!res.map_curve.is_empty());
+        for &(_, ap) in &res.map_curve {
+            assert!((0.0..=1.0).contains(&ap));
+        }
+    }
+
+    #[test]
+    fn learning_improves_ap_over_iterations() {
+        // with informative selection on separable blobs, late AP ≥ early AP
+        let mut rng = Rng::seed_from_u64(7);
+        let ds = test_blobs(300, 16, 2, &mut rng);
+        let mut cfg = small_cfg();
+        cfg.al_iters = 40;
+        cfg.eval_every = 10;
+        let engine = AlEngine::new(&ds, cfg);
+        let res = engine.run_experiment(3, Some(1), 99, |_| Strategy::Exhaustive);
+        let first = res.map_curve.first().unwrap().1;
+        let last = res.map_curve.last().unwrap().1;
+        assert!(last >= first - 0.05, "AP {first} → {last} should not collapse");
+    }
+}

@@ -1,0 +1,188 @@
+//! In-crate benchmark harness (criterion is not in the vendored registry).
+//!
+//! Each `rust/benches/*.rs` target is a `harness = false` binary that calls
+//! [`Bench::run`] for its measurements and the `report` module for the
+//! paper-style tables. The harness does warmup, adaptive iteration count to
+//! hit a target measurement window, and robust summary stats.
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl BenchStats {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+
+    /// Throughput given a per-iteration item count.
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean_secs().max(1e-12)
+    }
+}
+
+/// Benchmark runner configuration.
+pub struct Bench {
+    /// target cumulative measurement time per case
+    pub budget: Duration,
+    /// warmup time before measuring
+    pub warmup: Duration,
+    /// hard cap on sample count
+    pub max_samples: u64,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            budget: Duration::from_millis(800),
+            warmup: Duration::from_millis(100),
+            max_samples: 1000,
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench {
+            budget: Duration::from_millis(200),
+            warmup: Duration::from_millis(20),
+            max_samples: 200,
+        }
+    }
+
+    /// Measure `f` repeatedly; `f` should perform one unit of work and is
+    /// responsible for consuming its result (use `std::hint::black_box`).
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchStats {
+        // Warmup.
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            f();
+        }
+        // Measure.
+        let mut samples: Vec<Duration> = Vec::new();
+        let b0 = Instant::now();
+        while b0.elapsed() < self.budget && (samples.len() as u64) < self.max_samples {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed());
+        }
+        if samples.is_empty() {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed());
+        }
+        let mut sorted = samples.clone();
+        sorted.sort();
+        let total: Duration = samples.iter().sum();
+        let pct = |p: f64| -> Duration {
+            let r = ((p / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
+            sorted[r.min(sorted.len() - 1)]
+        };
+        BenchStats {
+            name: name.to_string(),
+            iters: samples.len() as u64,
+            mean: total / samples.len() as u32,
+            p50: pct(50.0),
+            p95: pct(95.0),
+            min: sorted[0],
+        }
+    }
+
+    /// Time a single execution of a long-running workload (AL experiments).
+    pub fn once<T>(name: &str, f: impl FnOnce() -> T) -> (T, BenchStats) {
+        let t0 = Instant::now();
+        let out = f();
+        let d = t0.elapsed();
+        (
+            out,
+            BenchStats {
+                name: name.to_string(),
+                iters: 1,
+                mean: d,
+                p50: d,
+                p95: d,
+                min: d,
+            },
+        )
+    }
+}
+
+/// Render a stats table to stdout.
+pub fn print_table(title: &str, rows: &[BenchStats]) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<44} {:>8} {:>12} {:>12} {:>12} {:>12}",
+        "case", "iters", "mean", "p50", "p95", "min"
+    );
+    for r in rows {
+        println!(
+            "{:<44} {:>8} {:>12} {:>12} {:>12} {:>12}",
+            r.name,
+            r.iters,
+            fmt_dur(r.mean),
+            fmt_dur(r.p50),
+            fmt_dur(r.p95),
+            fmt_dur(r.min)
+        );
+    }
+}
+
+/// Human duration formatting (ns/µs/ms/s).
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.2}s", ns / 1e9)
+    }
+}
+
+/// True when the `CHH_BENCH_FULL` env var requests paper-scale runs;
+/// default bench invocations use reduced scales so `cargo bench` finishes
+/// on a laptop-class machine.
+pub fn full_scale() -> bool {
+    std::env::var("CHH_BENCH_FULL").map(|v| v == "1" || v == "true").unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_produces_samples() {
+        let b = Bench::quick();
+        let mut acc = 0u64;
+        let s = b.run("noop-ish", || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(s.iters >= 1);
+        assert!(s.min <= s.p50 && s.p50 <= s.p95);
+    }
+
+    #[test]
+    fn once_returns_value() {
+        let (v, s) = Bench::once("x", || 42);
+        assert_eq!(v, 42);
+        assert_eq!(s.iters, 1);
+    }
+
+    #[test]
+    fn fmt_dur_ranges() {
+        assert!(fmt_dur(Duration::from_nanos(5)).ends_with("ns"));
+        assert!(fmt_dur(Duration::from_micros(5)).ends_with("µs"));
+        assert!(fmt_dur(Duration::from_millis(5)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_secs(5)).ends_with('s'));
+    }
+}

@@ -1,0 +1,223 @@
+//! Hand-rolled command-line parsing (no clap in the vendored registry).
+//!
+//! Grammar: `chh <subcommand> [--flag] [--key value]...`. Flags are
+//! registered with a description so `--help` is generated, and unknown
+//! arguments are hard errors — silent typos in experiment parameters are
+//! how reproductions go wrong.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown argument '{0}' (see --help)")]
+    Unknown(String),
+    #[error("missing value for '--{0}'")]
+    MissingValue(String),
+    #[error("invalid value for '--{key}': {msg}")]
+    Invalid { key: String, msg: String },
+}
+
+/// Declarative option set with parsed values.
+pub struct Args {
+    name: String,
+    about: String,
+    specs: Vec<Spec>,
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+}
+
+struct Spec {
+    key: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+impl Args {
+    pub fn new(name: &str, about: &str) -> Self {
+        Args {
+            name: name.to_string(),
+            about: about.to_string(),
+            specs: Vec::new(),
+            values: BTreeMap::new(),
+            flags: BTreeMap::new(),
+        }
+    }
+
+    /// Register a `--key <value>` option with a default.
+    pub fn opt(mut self, key: &str, default: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            key: key.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Register a boolean `--key` flag.
+    pub fn flag(mut self, key: &str, help: &str) -> Self {
+        self.specs.push(Spec { key: key.to_string(), help: help.to_string(), default: None, is_flag: true });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.name, self.about);
+        for spec in &self.specs {
+            if spec.is_flag {
+                s.push_str(&format!("  --{:<18} {}\n", spec.key, spec.help));
+            } else {
+                s.push_str(&format!(
+                    "  --{:<18} {} [default: {}]\n",
+                    format!("{} <v>", spec.key),
+                    spec.help,
+                    spec.default.as_deref().unwrap_or("-")
+                ));
+            }
+        }
+        s
+    }
+
+    /// Parse a raw token list. Returns Err(help text) on --help.
+    pub fn parse(mut self, tokens: &[String]) -> Result<Parsed, String> {
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if t == "--help" || t == "-h" {
+                return Err(self.usage());
+            }
+            let Some(key) = t.strip_prefix("--") else {
+                return Err(format!("unexpected positional argument '{t}'\n\n{}", self.usage()));
+            };
+            let Some(spec) = self.specs.iter().find(|s| s.key == key) else {
+                return Err(format!("unknown option '--{key}'\n\n{}", self.usage()));
+            };
+            if spec.is_flag {
+                self.flags.insert(key.to_string(), true);
+                i += 1;
+            } else {
+                if i + 1 >= tokens.len() {
+                    return Err(format!("missing value for '--{key}'"));
+                }
+                self.values.insert(key.to_string(), tokens[i + 1].clone());
+                i += 2;
+            }
+        }
+        // fill defaults
+        for spec in &self.specs {
+            if spec.is_flag {
+                self.flags.entry(spec.key.clone()).or_insert(false);
+            } else if let Some(d) = &spec.default {
+                self.values.entry(spec.key.clone()).or_insert_with(|| d.clone());
+            }
+        }
+        Ok(Parsed { values: self.values, flags: self.flags })
+    }
+}
+
+/// The result of parsing: typed getters.
+#[derive(Debug)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+}
+
+impl Parsed {
+    pub fn str(&self, key: &str) -> &str {
+        self.values.get(key).map(|s| s.as_str()).unwrap_or_else(|| panic!("option --{key} not registered"))
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        *self.flags.get(key).unwrap_or_else(|| panic!("flag --{key} not registered"))
+    }
+
+    pub fn usize(&self, key: &str) -> Result<usize, CliError> {
+        // Accept 100_000 / 100k / 1m spellings for scale parameters.
+        let raw = self.str(key).replace('_', "");
+        let (num, mult) = if let Some(p) = raw.strip_suffix(['k', 'K']) {
+            (p.to_string(), 1_000usize)
+        } else if let Some(p) = raw.strip_suffix(['m', 'M']) {
+            (p.to_string(), 1_000_000usize)
+        } else {
+            (raw, 1)
+        };
+        num.parse::<usize>()
+            .map(|v| v * mult)
+            .map_err(|e| CliError::Invalid { key: key.to_string(), msg: e.to_string() })
+    }
+
+    pub fn f64(&self, key: &str) -> Result<f64, CliError> {
+        self.str(key)
+            .parse::<f64>()
+            .map_err(|e| CliError::Invalid { key: key.to_string(), msg: e.to_string() })
+    }
+
+    pub fn u64(&self, key: &str) -> Result<u64, CliError> {
+        self.str(key)
+            .parse::<u64>()
+            .map_err(|e| CliError::Invalid { key: key.to_string(), msg: e.to_string() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn spec() -> Args {
+        Args::new("t", "test")
+            .opt("n", "100", "count")
+            .opt("seed", "7", "seed")
+            .opt("rate", "0.5", "rate")
+            .flag("verbose", "talk")
+    }
+
+    #[test]
+    fn defaults_applied() {
+        let p = spec().parse(&toks(&[])).unwrap();
+        assert_eq!(p.usize("n").unwrap(), 100);
+        assert!(!p.flag("verbose"));
+    }
+
+    #[test]
+    fn values_and_flags() {
+        let p = spec().parse(&toks(&["--n", "50k", "--verbose", "--rate", "0.25"])).unwrap();
+        assert_eq!(p.usize("n").unwrap(), 50_000);
+        assert!(p.flag("verbose"));
+        assert_eq!(p.f64("rate").unwrap(), 0.25);
+    }
+
+    #[test]
+    fn scale_suffixes() {
+        let p = spec().parse(&toks(&["--n", "1m"])).unwrap();
+        assert_eq!(p.usize("n").unwrap(), 1_000_000);
+        let p = spec().parse(&toks(&["--n", "100_000"])).unwrap();
+        assert_eq!(p.usize("n").unwrap(), 100_000);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(spec().parse(&toks(&["--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(spec().parse(&toks(&["--n"])).is_err());
+    }
+
+    #[test]
+    fn help_returns_usage() {
+        let err = spec().parse(&toks(&["--help"])).unwrap_err();
+        assert!(err.contains("--n"));
+        assert!(err.contains("--verbose"));
+    }
+
+    #[test]
+    fn bad_number_is_invalid() {
+        let p = spec().parse(&toks(&["--n", "abc"])).unwrap();
+        assert!(p.usize("n").is_err());
+    }
+}

@@ -1,0 +1,253 @@
+//! Experiment configuration.
+//!
+//! A single [`ExperimentConfig`] drives the AL benchmarks; the two dataset
+//! profiles mirror the paper's §5.1 setup (20 Newsgroups and Tiny-1M) with
+//! the synthetic-data substitutions documented in DESIGN.md §2.
+
+use crate::cli::Parsed;
+
+/// Which synthetic dataset profile to generate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DatasetProfile {
+    /// 20-Newsgroups-like sparse tf-idf corpus.
+    News,
+    /// Tiny-1M-like dense GIST corpus.
+    Tiny,
+    /// Small dense profile for tests/CI.
+    Test,
+}
+
+impl DatasetProfile {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "news" => Some(DatasetProfile::News),
+            "tiny" => Some(DatasetProfile::Tiny),
+            "test" => Some(DatasetProfile::Test),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DatasetProfile::News => "news",
+            DatasetProfile::Tiny => "tiny",
+            DatasetProfile::Test => "test",
+        }
+    }
+
+    /// Feature dimensionality of the profile (must match the AOT artifacts).
+    pub fn dim(&self) -> usize {
+        match self {
+            DatasetProfile::News => 1024,
+            DatasetProfile::Tiny => 384,
+            DatasetProfile::Test => 64,
+        }
+    }
+
+    /// Paper §5.2 hash-code lengths: 16 bits on 20NG, 20 on Tiny-1M
+    /// (AH-Hash uses 2× because it is a dual-bit function).
+    pub fn code_bits(&self) -> usize {
+        match self {
+            DatasetProfile::News => 16,
+            DatasetProfile::Tiny => 20,
+            DatasetProfile::Test => 8,
+        }
+    }
+
+    /// Paper §5.2 Hamming lookup radii: 3 on 20NG, 4 on Tiny-1M.
+    pub fn hamming_radius(&self) -> usize {
+        match self {
+            DatasetProfile::News => 3,
+            DatasetProfile::Tiny => 4,
+            DatasetProfile::Test => 2,
+        }
+    }
+
+    /// Initially labeled samples per class (paper: 5 on 20NG, 50 on Tiny).
+    pub fn init_per_class(&self) -> usize {
+        match self {
+            DatasetProfile::News => 5,
+            DatasetProfile::Tiny => 50,
+            DatasetProfile::Test => 3,
+        }
+    }
+
+    /// LBH training sample count m (paper: 500 on 20NG, 5000 on Tiny-1M).
+    pub fn lbh_samples(&self) -> usize {
+        match self {
+            DatasetProfile::News => 500,
+            DatasetProfile::Tiny => 5000,
+            DatasetProfile::Test => 128,
+        }
+    }
+}
+
+/// Full configuration of one active-learning experiment run.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub profile: DatasetProfile,
+    /// database size (points in the unlabeled pool + initial labels)
+    pub n: usize,
+    /// active-learning iterations (paper: 300)
+    pub al_iters: usize,
+    /// independent runs / random initializations (paper: 5)
+    pub runs: usize,
+    /// hash code length k (None = profile default)
+    pub bits: Option<usize>,
+    /// Hamming search radius (None = profile default)
+    pub radius: Option<usize>,
+    /// LBH training subset size m (None = profile default)
+    pub lbh_m: Option<usize>,
+    /// SVM regularization C
+    pub svm_c: f32,
+    /// master seed
+    pub seed: u64,
+    /// cap on classes evaluated (None = all; benches use fewer)
+    pub max_classes: Option<usize>,
+    /// evaluate AP every this many AL iterations (1 = every iteration)
+    pub eval_every: usize,
+}
+
+impl ExperimentConfig {
+    pub fn for_profile(profile: DatasetProfile) -> Self {
+        let n = match profile {
+            DatasetProfile::News => 18_846,
+            DatasetProfile::Tiny => 100_000,
+            DatasetProfile::Test => 2_000,
+        };
+        ExperimentConfig {
+            profile,
+            n,
+            al_iters: 300,
+            runs: 5,
+            bits: None,
+            radius: None,
+            lbh_m: None,
+            svm_c: 0.1,
+            seed: 2012,
+            max_classes: None,
+            eval_every: 10,
+        }
+    }
+
+    pub fn bits(&self) -> usize {
+        self.bits.unwrap_or_else(|| self.profile.code_bits())
+    }
+
+    pub fn radius(&self) -> usize {
+        self.radius.unwrap_or_else(|| self.profile.hamming_radius())
+    }
+
+    pub fn lbh_m(&self) -> usize {
+        let m = self.lbh_m.unwrap_or_else(|| self.profile.lbh_samples());
+        m.min(self.n / 2)
+    }
+
+    /// Shared CLI options for experiment subcommands.
+    pub fn cli_opts(args: crate::cli::Args) -> crate::cli::Args {
+        args.opt("profile", "test", "dataset profile: news | tiny | test")
+            .opt("n", "0", "database size (0 = profile default)")
+            .opt("iters", "300", "active-learning iterations")
+            .opt("runs", "5", "independent runs")
+            .opt("bits", "0", "hash code bits (0 = profile default)")
+            .opt("radius", "-1", "Hamming lookup radius (-1 = profile default)")
+            .opt("lbh-m", "0", "LBH training samples m (0 = profile default)")
+            .opt("svm-c", "0.1", "SVM regularization C")
+            .opt("seed", "2012", "master RNG seed")
+            .opt("classes", "0", "max classes evaluated (0 = all)")
+            .opt("eval-every", "10", "AP evaluation interval")
+    }
+
+    /// Build from parsed CLI options registered by [`Self::cli_opts`].
+    pub fn from_parsed(p: &Parsed) -> anyhow::Result<Self> {
+        let profile = DatasetProfile::parse(p.str("profile"))
+            .ok_or_else(|| anyhow::anyhow!("bad --profile {}", p.str("profile")))?;
+        let mut cfg = ExperimentConfig::for_profile(profile);
+        let n = p.usize("n")?;
+        if n > 0 {
+            cfg.n = n;
+        }
+        cfg.al_iters = p.usize("iters")?;
+        cfg.runs = p.usize("runs")?;
+        let bits = p.usize("bits")?;
+        if bits > 0 {
+            cfg.bits = Some(bits);
+        }
+        let radius = p.str("radius").parse::<i64>().unwrap_or(-1);
+        if radius >= 0 {
+            cfg.radius = Some(radius as usize);
+        }
+        let m = p.usize("lbh-m")?;
+        if m > 0 {
+            cfg.lbh_m = Some(m);
+        }
+        cfg.svm_c = p.f64("svm-c")? as f32;
+        cfg.seed = p.u64("seed")?;
+        let classes = p.usize("classes")?;
+        if classes > 0 {
+            cfg.max_classes = Some(classes);
+        }
+        cfg.eval_every = p.usize("eval-every")?.max(1);
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cli::Args;
+
+    #[test]
+    fn profile_parse_roundtrip() {
+        for p in [DatasetProfile::News, DatasetProfile::Tiny, DatasetProfile::Test] {
+            assert_eq!(DatasetProfile::parse(p.name()), Some(p));
+        }
+        assert_eq!(DatasetProfile::parse("bogus"), None);
+    }
+
+    #[test]
+    fn paper_parameters() {
+        // §5.2: 16 bits radius 3 on 20NG; 20 bits radius 4 on Tiny-1M.
+        assert_eq!(DatasetProfile::News.code_bits(), 16);
+        assert_eq!(DatasetProfile::News.hamming_radius(), 3);
+        assert_eq!(DatasetProfile::Tiny.code_bits(), 20);
+        assert_eq!(DatasetProfile::Tiny.hamming_radius(), 4);
+        assert_eq!(DatasetProfile::News.init_per_class(), 5);
+        assert_eq!(DatasetProfile::Tiny.init_per_class(), 50);
+        assert_eq!(DatasetProfile::News.lbh_samples(), 500);
+        assert_eq!(DatasetProfile::Tiny.lbh_samples(), 5000);
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let cfg = ExperimentConfig::for_profile(DatasetProfile::News);
+        assert_eq!(cfg.bits(), 16);
+        assert_eq!(cfg.n, 18_846);
+        let mut cfg2 = cfg.clone();
+        cfg2.bits = Some(24);
+        assert_eq!(cfg2.bits(), 24);
+    }
+
+    #[test]
+    fn lbh_m_capped_by_n() {
+        let mut cfg = ExperimentConfig::for_profile(DatasetProfile::Tiny);
+        cfg.n = 1000;
+        assert_eq!(cfg.lbh_m(), 500);
+    }
+
+    #[test]
+    fn from_cli() {
+        let args = ExperimentConfig::cli_opts(Args::new("t", "t"));
+        let toks: Vec<String> =
+            ["--profile", "tiny", "--n", "50k", "--bits", "24", "--radius", "2"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let p = args.parse(&toks).unwrap();
+        let cfg = ExperimentConfig::from_parsed(&p).unwrap();
+        assert_eq!(cfg.profile, DatasetProfile::Tiny);
+        assert_eq!(cfg.n, 50_000);
+        assert_eq!(cfg.bits(), 24);
+        assert_eq!(cfg.radius(), 2);
+    }
+}

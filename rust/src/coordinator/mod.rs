@@ -1,0 +1,309 @@
+//! The serving layer: a hyperplane-query router with batching,
+//! leader/worker threads and bounded-queue backpressure.
+//!
+//! The paper's end application issues one hyperplane query per (class ×
+//! AL iteration); a deployment amortizes them by batching the one-vs-all
+//! hyperplanes of an iteration (20 on 20NG, 10 on Tiny) into a single
+//! encode + fan-out. This module is the L3 "coordinator" piece of the
+//! three-layer architecture:
+//!
+//! ```text
+//!            submit(w)                 Job { id, lookup code, w }
+//!  caller ──────────────▶ leader ─────────────────────────────▶ workers
+//!            (bounded)    encodes (native or PJRT batch)        probe table,
+//!  caller ◀────────────── response channel ◀──────────────────  re-rank margins
+//! ```
+//!
+//! The vendored registry has no tokio, so the implementation uses OS
+//! threads + `std::sync::mpsc` bounded channels; the public API is
+//! synchronous-with-handles (submit returns a ticket, `recv` joins it).
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::data::FeatureStore;
+use crate::hash::HashFamily;
+use crate::table::{HyperplaneIndex, QueryHit};
+
+/// A point-to-hyperplane query.
+#[derive(Clone, Debug)]
+pub struct QueryRequest {
+    /// hyperplane normal (dim must match the index's feature store)
+    pub w: Vec<f32>,
+    /// indices excluded from results (e.g. already-labeled points)
+    pub exclude: Option<Arc<HashSet<usize>>>,
+}
+
+/// Router answer for one request.
+#[derive(Clone, Debug)]
+pub struct QueryResponse {
+    pub id: u64,
+    pub hit: QueryHit,
+    /// time from submit to completion
+    pub latency: Duration,
+}
+
+struct Job {
+    id: u64,
+    lookup: u64,
+    req: QueryRequest,
+    submitted: Instant,
+    reply: Sender<QueryResponse>,
+}
+
+/// Router statistics (atomic, cheap to read while serving).
+#[derive(Default)]
+pub struct RouterStats {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub empty_lookups: AtomicU64,
+    pub candidates_scanned: AtomicU64,
+    latencies: Mutex<crate::metrics::Histogram>,
+}
+
+impl RouterStats {
+    pub fn latency_p50(&self) -> f64 {
+        self.latencies.lock().unwrap().percentile(50.0)
+    }
+
+    pub fn latency_p95(&self) -> f64 {
+        self.latencies.lock().unwrap().percentile(95.0)
+    }
+
+    pub fn latency_mean(&self) -> f64 {
+        self.latencies.lock().unwrap().mean()
+    }
+}
+
+/// Shared immutable serving state.
+struct Shared {
+    family: Arc<dyn HashFamily>,
+    index: Arc<HyperplaneIndex>,
+    feats: Arc<FeatureStore>,
+    stats: Arc<RouterStats>,
+}
+
+/// The hyperplane-query router.
+pub struct Router {
+    tx: SyncSender<Job>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    next_id: AtomicU64,
+    stats: Arc<RouterStats>,
+    shared: Arc<Shared>,
+}
+
+/// Ticket for an in-flight query.
+pub struct Pending {
+    pub id: u64,
+    rx: Receiver<QueryResponse>,
+}
+
+impl Pending {
+    /// Block until the response arrives.
+    pub fn wait(self) -> QueryResponse {
+        self.rx.recv().expect("router worker dropped the reply channel")
+    }
+}
+
+impl Router {
+    /// Spawn a router over a prebuilt index. `queue_cap` bounds the job
+    /// queue — a full queue blocks `submit`, which is the backpressure
+    /// mechanism protecting worker latency.
+    pub fn new(
+        family: Arc<dyn HashFamily>,
+        index: Arc<HyperplaneIndex>,
+        feats: Arc<FeatureStore>,
+        workers: usize,
+        queue_cap: usize,
+    ) -> Self {
+        let stats = Arc::new(RouterStats::default());
+        let shared = Arc::new(Shared {
+            family,
+            index,
+            feats,
+            stats: stats.clone(),
+        });
+        let (tx, rx) = sync_channel::<Job>(queue_cap.max(1));
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..workers.max(1))
+            .map(|_| {
+                let rx = rx.clone();
+                let sh = shared.clone();
+                std::thread::spawn(move || worker_loop(rx, sh))
+            })
+            .collect();
+        Router { tx, workers: handles, next_id: AtomicU64::new(0), stats, shared }
+    }
+
+    pub fn stats(&self) -> &RouterStats {
+        &self.stats
+    }
+
+    /// Submit one query; blocks when the queue is full (backpressure).
+    /// The hyperplane is encoded on the caller/leader thread so workers
+    /// only do table probes + margin re-ranking.
+    pub fn submit(&self, req: QueryRequest) -> Pending {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let lookup = self.shared.family.encode_query(&req.w);
+        let (reply_tx, reply_rx) = std::sync::mpsc::channel();
+        let job = Job { id, lookup, req, submitted: Instant::now(), reply: reply_tx };
+        self.stats.submitted.fetch_add(1, Ordering::Relaxed);
+        self.tx.send(job).expect("router workers are gone");
+        Pending { id, rx: reply_rx }
+    }
+
+    /// Submit a batch (e.g. the one-vs-all hyperplanes of an AL iteration)
+    /// and wait for all responses, returned in submission order.
+    pub fn submit_batch(&self, reqs: Vec<QueryRequest>) -> Vec<QueryResponse> {
+        let pendings: Vec<Pending> = reqs.into_iter().map(|r| self.submit(r)).collect();
+        pendings.into_iter().map(|p| p.wait()).collect()
+    }
+
+    /// Drain the queue and join the workers.
+    pub fn shutdown(self) {
+        drop(self.tx);
+        for h in self.workers {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>, sh: Arc<Shared>) {
+    loop {
+        let job = {
+            let guard = rx.lock().unwrap();
+            match guard.recv() {
+                Ok(j) => j,
+                Err(_) => return, // router dropped
+            }
+        };
+        let hit = match &job.req.exclude {
+            Some(ex) => sh.index.query_code_filtered(
+                job.lookup,
+                &job.req.w,
+                &sh.feats,
+                |i| !ex.contains(&i),
+            ),
+            None => sh.index.query_code_filtered(job.lookup, &job.req.w, &sh.feats, |_| true),
+        };
+        sh.stats.completed.fetch_add(1, Ordering::Relaxed);
+        if !hit.nonempty {
+            sh.stats.empty_lookups.fetch_add(1, Ordering::Relaxed);
+        }
+        sh.stats
+            .candidates_scanned
+            .fetch_add(hit.scanned as u64, Ordering::Relaxed);
+        let latency = job.submitted.elapsed();
+        sh.stats.latencies.lock().unwrap().record_duration(latency);
+        let _ = job.reply.send(QueryResponse { id: job.id, hit, latency });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::test_blobs;
+    use crate::hash::BhHash;
+    use crate::rng::Rng;
+    use crate::testing::unit_vec;
+
+    fn setup(n: usize) -> (Arc<BhHash>, Arc<HyperplaneIndex>, Arc<FeatureStore>, Rng) {
+        let mut rng = Rng::seed_from_u64(11);
+        let ds = test_blobs(n, 16, 3, &mut rng);
+        let fam = Arc::new(BhHash::sample(16, 10, &mut rng));
+        let idx = Arc::new(HyperplaneIndex::build(fam.as_ref(), ds.features(), 4));
+        (fam, idx, Arc::new(ds.features().clone()), rng)
+    }
+
+    #[test]
+    fn router_answers_all_queries() {
+        let (fam, idx, feats, mut rng) = setup(500);
+        let router = Router::new(fam.clone(), idx.clone(), feats.clone(), 2, 16);
+        let reqs: Vec<QueryRequest> = (0..40)
+            .map(|_| QueryRequest { w: unit_vec(&mut rng, 16), exclude: None })
+            .collect();
+        let resps = router.submit_batch(reqs);
+        assert_eq!(resps.len(), 40);
+        // in submission order
+        for (i, r) in resps.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+        }
+        assert_eq!(router.stats().completed.load(Ordering::Relaxed), 40);
+        assert_eq!(router.stats().submitted.load(Ordering::Relaxed), 40);
+        router.shutdown();
+    }
+
+    #[test]
+    fn router_matches_direct_index_query() {
+        let (fam, idx, feats, mut rng) = setup(300);
+        let router = Router::new(fam.clone(), idx.clone(), feats.clone(), 3, 8);
+        for _ in 0..10 {
+            let w = unit_vec(&mut rng, 16);
+            let direct = idx.query_filtered(fam.as_ref(), &w, &feats, |_| true);
+            let resp = router.submit(QueryRequest { w, exclude: None }).wait();
+            assert_eq!(resp.hit.best.map(|(i, _)| i), direct.best.map(|(i, _)| i));
+            assert_eq!(resp.hit.scanned, direct.scanned);
+        }
+        router.shutdown();
+    }
+
+    #[test]
+    fn exclusion_set_respected() {
+        let (fam, idx, feats, mut rng) = setup(200);
+        let router = Router::new(fam.clone(), idx.clone(), feats.clone(), 2, 8);
+        let w = unit_vec(&mut rng, 16);
+        let unfiltered = router
+            .submit(QueryRequest { w: w.clone(), exclude: None })
+            .wait();
+        if let Some((best, _)) = unfiltered.hit.best {
+            let mut ex = HashSet::new();
+            ex.insert(best);
+            let filtered = router
+                .submit(QueryRequest { w, exclude: Some(Arc::new(ex)) })
+                .wait();
+            assert_ne!(filtered.hit.best.map(|(i, _)| i), Some(best));
+        }
+        router.shutdown();
+    }
+
+    #[test]
+    fn stats_accumulate_latencies() {
+        let (fam, idx, feats, mut rng) = setup(100);
+        let router = Router::new(fam, idx, feats, 1, 4);
+        for _ in 0..20 {
+            router
+                .submit(QueryRequest { w: unit_vec(&mut rng, 16), exclude: None })
+                .wait();
+        }
+        assert!(router.stats().latency_mean() > 0.0);
+        assert!(router.stats().latency_p95() >= router.stats().latency_p50());
+        router.shutdown();
+    }
+
+    #[test]
+    fn concurrent_submitters_under_backpressure() {
+        let (fam, idx, feats, _rng) = setup(400);
+        let router = Arc::new(Router::new(fam, idx, feats, 2, 2)); // tiny queue
+        let mut joins = Vec::new();
+        for t in 0..4u64 {
+            let r = router.clone();
+            joins.push(std::thread::spawn(move || {
+                let mut rng = Rng::seed_from_u64(100 + t);
+                let mut got = 0usize;
+                for _ in 0..25 {
+                    let w = unit_vec(&mut rng, 16);
+                    let resp = r.submit(QueryRequest { w, exclude: None }).wait();
+                    assert!(resp.latency >= Duration::ZERO);
+                    got += 1;
+                }
+                got
+            }));
+        }
+        let total: usize = joins.into_iter().map(|j| j.join().unwrap()).sum();
+        assert_eq!(total, 100);
+        assert_eq!(router.stats().completed.load(Ordering::Relaxed), 100);
+    }
+}

@@ -1,0 +1,604 @@
+//! Datasets and feature stores.
+//!
+//! The paper evaluates on 20 Newsgroups (18,846 docs, 26,214-d tf-idf,
+//! ℓ2-normalized) and Tiny-1M (1.06M GIST-384 images: CIFAR-10 labels plus
+//! 1M unlabeled "other" images). Neither is reachable from this offline
+//! environment, so this module synthesizes statistical stand-ins
+//! (DESIGN.md §2 documents the substitution argument):
+//!
+//! * [`newsgroups_like`] — Zipf vocabulary, per-class topic distributions,
+//!   log-tf·idf weighting, ℓ2 row normalization → sparse CSR.
+//! * [`tiny1m_like`] — class prototypes + shared low-rank correlated noise,
+//!   plus a "far from every prototype" background class → dense rows.
+//!
+//! Hyperplane hashing only consumes *angles* between unit-norm vectors, so
+//! matching the angle statistics (near-orthogonal sparse text, correlated
+//! dense image features) is the property that must be preserved.
+
+use crate::linalg::Mat;
+use crate::rng::{Rng, Zipf};
+use crate::sparse::{Csr, CsrBuilder, SparseRow};
+
+/// A borrowed feature vector: dense slice or sparse row.
+#[derive(Clone, Copy, Debug)]
+pub enum FeatRef<'a> {
+    Dense(&'a [f32]),
+    Sparse(SparseRow<'a>),
+}
+
+impl<'a> FeatRef<'a> {
+    /// Dot product with a dense vector.
+    #[inline]
+    pub fn dot(&self, w: &[f32]) -> f32 {
+        match self {
+            FeatRef::Dense(x) => crate::linalg::dot(x, w),
+            FeatRef::Sparse(r) => r.dot_dense(w),
+        }
+    }
+
+    /// w += alpha * x.
+    #[inline]
+    pub fn axpy_into(&self, alpha: f32, w: &mut [f32]) {
+        match self {
+            FeatRef::Dense(x) => crate::linalg::axpy(alpha, x, w),
+            FeatRef::Sparse(r) => r.axpy_into(alpha, w),
+        }
+    }
+
+    #[inline]
+    pub fn sq_norm(&self) -> f32 {
+        match self {
+            FeatRef::Dense(x) => crate::linalg::dot(x, x),
+            FeatRef::Sparse(r) => r.sq_norm(),
+        }
+    }
+
+    /// Random access to coordinate j (O(1) dense, O(log nnz) sparse).
+    #[inline]
+    pub fn coord(&self, j: usize) -> f32 {
+        match self {
+            FeatRef::Dense(x) => x[j],
+            FeatRef::Sparse(r) => match r.indices.binary_search(&(j as u32)) {
+                Ok(p) => r.values[p],
+                Err(_) => 0.0,
+            },
+        }
+    }
+
+    /// Scatter into a dense scratch buffer (caller clears between uses).
+    pub fn scatter_into(&self, out: &mut [f32]) {
+        match self {
+            FeatRef::Dense(x) => out[..x.len()].copy_from_slice(x),
+            FeatRef::Sparse(r) => r.scatter_into(out),
+        }
+    }
+}
+
+/// Owned feature storage: dense matrix or CSR.
+#[derive(Clone, Debug)]
+pub enum FeatureStore {
+    Dense(Mat),
+    Sparse(Csr),
+}
+
+impl FeatureStore {
+    pub fn len(&self) -> usize {
+        match self {
+            FeatureStore::Dense(m) => m.rows,
+            FeatureStore::Sparse(m) => m.rows,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dim(&self) -> usize {
+        match self {
+            FeatureStore::Dense(m) => m.cols,
+            FeatureStore::Sparse(m) => m.cols,
+        }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> FeatRef<'_> {
+        match self {
+            FeatureStore::Dense(m) => FeatRef::Dense(m.row(i)),
+            FeatureStore::Sparse(m) => FeatRef::Sparse(m.row(i)),
+        }
+    }
+
+    /// Densify rows [row0, row0+n) zero-padded — PJRT tile staging.
+    pub fn dense_block(&self, row0: usize, n: usize) -> Mat {
+        match self {
+            FeatureStore::Sparse(m) => m.dense_block(row0, n),
+            FeatureStore::Dense(m) => {
+                let mut out = Mat::zeros(n, m.cols);
+                for r in 0..n {
+                    let i = row0 + r;
+                    if i >= m.rows {
+                        break;
+                    }
+                    out.row_mut(r).copy_from_slice(m.row(i));
+                }
+                out
+            }
+        }
+    }
+}
+
+/// A labeled dataset for one-vs-all active learning.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    features: FeatureStore,
+    labels: Vec<u16>,
+    /// classes eligible for one-vs-all AL evaluation (the Tiny profile has
+    /// an extra "other" label == eval_classes that is never a positive).
+    eval_classes: usize,
+    pub name: String,
+}
+
+impl Dataset {
+    pub fn new(features: FeatureStore, labels: Vec<u16>, eval_classes: usize, name: &str) -> Self {
+        assert_eq!(features.len(), labels.len());
+        Dataset { features, labels, eval_classes, name: name.to_string() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.features.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dim(&self) -> usize {
+        self.features.dim()
+    }
+
+    pub fn features(&self) -> &FeatureStore {
+        &self.features
+    }
+
+    pub fn labels(&self) -> &[u16] {
+        &self.labels
+    }
+
+    pub fn eval_classes(&self) -> usize {
+        self.eval_classes
+    }
+
+    /// Binary one-vs-all relevance for class c.
+    pub fn binary_labels(&self, c: u16) -> Vec<bool> {
+        self.labels.iter().map(|&l| l == c).collect()
+    }
+
+    /// Indices of points with label c.
+    pub fn class_indices(&self, c: u16) -> Vec<usize> {
+        (0..self.len()).filter(|&i| self.labels[i] == c).collect()
+    }
+}
+
+// ───────────────────────── newsgroups-like corpus ─────────────────────────
+
+/// Configuration of the synthetic 20-Newsgroups-like corpus.
+#[derive(Clone, Debug)]
+pub struct NewsConfig {
+    /// number of documents (paper: 18,846)
+    pub n: usize,
+    /// vocabulary size = feature dimension (paper: 26,214; default reduced
+    /// to keep AOT artifact shapes manageable — documented in DESIGN.md §2)
+    pub vocab: usize,
+    /// number of classes (paper: 20)
+    pub classes: usize,
+    /// topic words per class
+    pub topic_words: usize,
+    /// probability a token is drawn from the class topic vs global Zipf
+    pub topic_mix: f64,
+    /// lognormal document length parameters
+    pub len_mu: f64,
+    pub len_sigma: f64,
+    /// Zipf exponent of the global vocabulary distribution
+    pub zipf_s: f64,
+}
+
+impl Default for NewsConfig {
+    fn default() -> Self {
+        NewsConfig {
+            n: 18_846,
+            vocab: 1024,
+            classes: 20,
+            topic_words: 40,
+            topic_mix: 0.18,
+            len_mu: 3.8,   // median ~74 tokens
+            len_sigma: 0.6,
+            zipf_s: 1.05,
+        }
+    }
+}
+
+/// Generate a sparse tf-idf corpus with class-dependent topics.
+///
+/// Mirrors 20 Newsgroups' structure: classes come in confusable sibling
+/// pairs (comp.sys.ibm vs comp.sys.mac, rec.sport.baseball vs hockey, …),
+/// modeled by letting class c share half its topic vocabulary with class
+/// c^1. This keeps the one-vs-all problems from saturating at AP = 1 the
+/// way fully disjoint topics would.
+pub fn newsgroups_like(cfg: &NewsConfig, rng: &mut Rng) -> Dataset {
+    assert!(cfg.classes >= 2 && cfg.vocab > cfg.topic_words * 2);
+    let zipf = Zipf::new(cfg.vocab, cfg.zipf_s);
+    // Topic sets: half shared with the sibling class (c ^ 1), half own;
+    // drawn away from the most frequent (stopword-like) ranks.
+    let group_sets: Vec<Vec<u32>> = (0..cfg.classes.div_ceil(2))
+        .map(|_| {
+            (0..cfg.topic_words / 2)
+                .map(|_| rng.range(cfg.vocab / 20, cfg.vocab) as u32)
+                .collect()
+        })
+        .collect();
+    let topic_sets: Vec<Vec<u32>> = (0..cfg.classes)
+        .map(|c| {
+            let mut set: Vec<u32> = group_sets[c / 2].clone();
+            set.extend(
+                (0..cfg.topic_words - set.len())
+                    .map(|_| rng.range(cfg.vocab / 20, cfg.vocab) as u32),
+            );
+            set
+        })
+        .collect();
+
+    let mut builder = CsrBuilder::new(cfg.vocab);
+    let mut labels = Vec::with_capacity(cfg.n);
+    let mut entries: Vec<(u32, f32)> = Vec::new();
+    let mut counts: std::collections::HashMap<u32, u32> = std::collections::HashMap::new();
+    for i in 0..cfg.n {
+        let c = (i % cfg.classes) as u16; // balanced classes
+        labels.push(c);
+        let len = rng.lognormal(cfg.len_mu, cfg.len_sigma).round().max(5.0) as usize;
+        counts.clear();
+        for _ in 0..len {
+            let word = if rng.bernoulli(cfg.topic_mix) {
+                *rng.choose(&topic_sets[c as usize])
+            } else {
+                zipf.sample(rng) as u32
+            };
+            *counts.entry(word).or_insert(0) += 1;
+        }
+        entries.clear();
+        for (&w, &tf) in counts.iter() {
+            // sublinear tf weighting, standard for text
+            entries.push((w, 1.0 + (tf as f32).ln()));
+        }
+        builder.push_row(&mut entries);
+    }
+    let mut m = builder.finish();
+    // idf
+    let df = m.column_doc_freq();
+    let idf: Vec<f32> = df
+        .iter()
+        .map(|&d| ((cfg.n as f32 + 1.0) / (d as f32 + 1.0)).ln().max(0.0))
+        .collect();
+    m.scale_columns(&idf);
+    m.l2_normalize_rows();
+    // shuffle row order so class blocks don't align with tile boundaries
+    let mut perm: Vec<usize> = (0..cfg.n).collect();
+    rng.shuffle(&mut perm);
+    let mut b2 = CsrBuilder::new(cfg.vocab);
+    let mut labels2 = Vec::with_capacity(cfg.n);
+    let mut tmp: Vec<(u32, f32)> = Vec::new();
+    for &i in &perm {
+        let r = m.row(i);
+        tmp.clear();
+        tmp.extend(r.indices.iter().copied().zip(r.values.iter().copied()));
+        b2.push_row(&mut tmp);
+        labels2.push(labels[i]);
+    }
+    Dataset::new(FeatureStore::Sparse(b2.finish()), labels2, cfg.classes, "newsgroups-like")
+}
+
+// ───────────────────────── tiny1m-like images ─────────────────────────
+
+/// Configuration of the synthetic Tiny-1M-like GIST corpus.
+#[derive(Clone, Debug)]
+pub struct TinyConfig {
+    /// total points (paper: 1.06M; default scaled for a 1-core testbed)
+    pub n: usize,
+    /// GIST dimensionality (paper: 384)
+    pub d: usize,
+    /// labeled object classes (paper/CIFAR-10: 10)
+    pub classes: usize,
+    /// fraction of points in the labeled core (CIFAR: 60k/1.06M ≈ 0.0566)
+    pub core_frac: f64,
+    /// low-rank correlated-noise dimensionality
+    pub noise_rank: usize,
+    /// prototype separation scale
+    pub proto_scale: f32,
+    /// correlated / isotropic noise scales
+    pub corr_noise: f32,
+    pub iso_noise: f32,
+}
+
+impl Default for TinyConfig {
+    fn default() -> Self {
+        TinyConfig {
+            n: 100_000,
+            d: 384,
+            classes: 10,
+            core_frac: 0.0566,
+            noise_rank: 32,
+            proto_scale: 1.0,
+            corr_noise: 0.85,
+            iso_noise: 0.55,
+        }
+    }
+}
+
+/// Generate a dense GIST-like corpus: `classes` labeled prototypes plus an
+/// "other" background class (label == classes) sampled far from the
+/// prototypes — mirroring how Tiny-1M's extra million images were chosen as
+/// the farthest from the CIFAR-10 mean.
+pub fn tiny1m_like(cfg: &TinyConfig, rng: &mut Rng) -> Dataset {
+    assert!(cfg.classes >= 2 && cfg.d >= 8);
+    // Prototypes come in confusable sibling pairs (CIFAR's cat/dog,
+    // automobile/truck, ...): class c shares a group direction with c^1.
+    let group_dirs: Vec<Vec<f32>> = (0..cfg.classes.div_ceil(2))
+        .map(|_| {
+            let mut g = rng.gauss_vec(cfg.d);
+            crate::linalg::normalize(&mut g);
+            g
+        })
+        .collect();
+    // Each class is MULTI-MODAL (4 sub-prototypes around a class core):
+    // real GIST categories are; it keeps the linear SVM improvable long
+    // past the initial labels, which is what makes AL curves rise.
+    const MODES: usize = 4;
+    let protos: Vec<Vec<Vec<f32>>> = (0..cfg.classes)
+        .map(|c| {
+            let mut own = rng.gauss_vec(cfg.d);
+            crate::linalg::normalize(&mut own);
+            let mut core = group_dirs[c / 2].clone();
+            crate::linalg::axpy(0.8, &own, &mut core);
+            crate::linalg::normalize(&mut core);
+            (0..MODES)
+                .map(|_| {
+                    let mut mode_dir = rng.gauss_vec(cfg.d);
+                    crate::linalg::normalize(&mut mode_dir);
+                    let mut p = core.clone();
+                    crate::linalg::axpy(0.8, &mode_dir, &mut p);
+                    crate::linalg::normalize(&mut p);
+                    crate::linalg::scal(cfg.proto_scale, &mut p);
+                    p
+                })
+                .collect()
+        })
+        .collect();
+    // shared low-rank basis for correlated noise
+    let basis: Vec<Vec<f32>> = (0..cfg.noise_rank)
+        .map(|_| {
+            let mut b = rng.gauss_vec(cfg.d);
+            crate::linalg::normalize(&mut b);
+            b
+        })
+        .collect();
+    let n_core = ((cfg.n as f64) * cfg.core_frac).round() as usize;
+    let n_core = n_core.clamp(cfg.classes * 10, cfg.n);
+    let mut data = Mat::zeros(cfg.n, cfg.d);
+    let mut labels = vec![0u16; cfg.n];
+    // interleave core and background so tiles mix both
+    for i in 0..cfg.n {
+        let is_core = (i as u64 * n_core as u64 / cfg.n as u64)
+            != ((i as u64 + 1) * n_core as u64 / cfg.n as u64);
+        let row = data.row_mut(i);
+        // correlated noise: sum of noise_rank basis directions
+        for b in &basis {
+            let z = rng.gauss_f32() * cfg.corr_noise / (cfg.noise_rank as f32).sqrt();
+            crate::linalg::axpy(z, b, row);
+        }
+        for v in row.iter_mut() {
+            *v += rng.gauss_f32() * cfg.iso_noise / (cfg.d as f32).sqrt();
+        }
+        if is_core {
+            let c = rng.below(cfg.classes) as u16;
+            labels[i] = c;
+            // variable prototype strength: weakly-prototypical members are
+            // the hard positives an active learner finds near the boundary
+            // (real GIST classes have exactly this radial spread)
+            let strength = 0.4 + 0.9 * rng.f32();
+            let mode = rng.below(MODES);
+            crate::linalg::axpy(strength, &protos[c as usize][mode], row);
+        } else {
+            // background ("other" class): each point gets its OWN random
+            // direction — in high dimension these are near-orthogonal to
+            // every prototype (matching how Tiny-1M's extra million images
+            // were picked as farthest from the CIFAR mean) and, crucially,
+            // *diverse*: near-boundary negatives pull the SVM in canceling
+            // directions instead of a coherent anti-prototype drift.
+            labels[i] = cfg.classes as u16;
+            let mut dir = rng.gauss_vec(cfg.d);
+            crate::linalg::normalize(&mut dir);
+            crate::linalg::axpy(cfg.proto_scale * 0.9, &dir, row);
+            // a fraction of the background sits near a prototype: hard
+            // distractors (GIST lookalikes that are not the object class)
+            if rng.bernoulli(0.25) {
+                let c = rng.below(cfg.classes);
+                crate::linalg::axpy(0.7, &protos[c][rng.below(MODES)], row);
+            }
+        }
+    }
+    data.l2_normalize_rows();
+    Dataset::new(FeatureStore::Dense(data), labels, cfg.classes, "tiny1m-like")
+}
+
+/// Small dense dataset for tests: well-separated Gaussian blobs.
+pub fn test_blobs(n: usize, d: usize, classes: usize, rng: &mut Rng) -> Dataset {
+    let protos: Vec<Vec<f32>> = (0..classes)
+        .map(|_| {
+            let mut p = rng.gauss_vec(d);
+            crate::linalg::normalize(&mut p);
+            crate::linalg::scal(2.0, &mut p);
+            p
+        })
+        .collect();
+    let mut data = Mat::zeros(n, d);
+    let mut labels = vec![0u16; n];
+    for i in 0..n {
+        let c = i % classes;
+        labels[i] = c as u16;
+        let row = data.row_mut(i);
+        row.copy_from_slice(&protos[c]);
+        for v in row.iter_mut() {
+            *v += rng.gauss_f32() * 0.4;
+        }
+    }
+    data.l2_normalize_rows();
+    Dataset::new(FeatureStore::Dense(data), labels, classes, "test-blobs")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::cosine;
+
+    #[test]
+    fn news_shapes_and_normalization() {
+        let cfg = NewsConfig { n: 200, vocab: 512, classes: 4, ..NewsConfig::default() };
+        let mut rng = Rng::seed_from_u64(1);
+        let ds = newsgroups_like(&cfg, &mut rng);
+        assert_eq!(ds.len(), 200);
+        assert_eq!(ds.dim(), 512);
+        assert_eq!(ds.eval_classes(), 4);
+        for i in 0..ds.len() {
+            let n = ds.features().row(i).sq_norm().sqrt();
+            assert!((n - 1.0).abs() < 1e-4, "row {i} norm {n}");
+        }
+    }
+
+    #[test]
+    fn news_classes_balanced() {
+        let cfg = NewsConfig { n: 400, vocab: 512, classes: 4, ..NewsConfig::default() };
+        let mut rng = Rng::seed_from_u64(2);
+        let ds = newsgroups_like(&cfg, &mut rng);
+        for c in 0..4 {
+            let cnt = ds.class_indices(c).len();
+            assert_eq!(cnt, 100, "class {c}");
+        }
+    }
+
+    #[test]
+    fn news_same_class_more_similar() {
+        // topic structure ⇒ average within-class cosine > between-class
+        let cfg = NewsConfig { n: 300, vocab: 512, classes: 3, ..NewsConfig::default() };
+        let mut rng = Rng::seed_from_u64(3);
+        let ds = newsgroups_like(&cfg, &mut rng);
+        let dense = match ds.features() {
+            FeatureStore::Sparse(m) => m.to_dense(),
+            _ => unreachable!(),
+        };
+        let (mut within, mut wn, mut between, mut bn) = (0.0f64, 0, 0.0f64, 0);
+        for i in 0..100 {
+            for j in (i + 1)..100 {
+                let c = cosine(dense.row(i), dense.row(j)) as f64;
+                if ds.labels()[i] == ds.labels()[j] {
+                    within += c;
+                    wn += 1;
+                } else {
+                    between += c;
+                    bn += 1;
+                }
+            }
+        }
+        assert!(within / wn as f64 > between / bn as f64 + 0.01);
+    }
+
+    #[test]
+    fn tiny_shapes_and_other_class() {
+        let cfg = TinyConfig { n: 2000, d: 64, ..TinyConfig::default() };
+        let mut rng = Rng::seed_from_u64(4);
+        let ds = tiny1m_like(&cfg, &mut rng);
+        assert_eq!(ds.len(), 2000);
+        assert_eq!(ds.dim(), 64);
+        assert_eq!(ds.eval_classes(), 10);
+        let n_other = ds.class_indices(10).len();
+        // background dominates (core_frac ≈ 5.7%)
+        assert!(n_other > 1700, "other = {n_other}");
+        let n_core: usize = (0..10).map(|c| ds.class_indices(c).len()).sum();
+        assert_eq!(n_core + n_other, 2000);
+        assert!(n_core > 50);
+    }
+
+    #[test]
+    fn tiny_rows_unit_norm() {
+        let cfg = TinyConfig { n: 100, d: 32, ..TinyConfig::default() };
+        let mut rng = Rng::seed_from_u64(5);
+        let ds = tiny1m_like(&cfg, &mut rng);
+        for i in 0..ds.len() {
+            let n = ds.features().row(i).sq_norm().sqrt();
+            assert!((n - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn tiny_core_clusters_tighter_than_background() {
+        let cfg = TinyConfig { n: 3000, d: 64, ..TinyConfig::default() };
+        let mut rng = Rng::seed_from_u64(6);
+        let ds = tiny1m_like(&cfg, &mut rng);
+        let m = match ds.features() {
+            FeatureStore::Dense(m) => m,
+            _ => unreachable!(),
+        };
+        // same-class core pairs should have higher cosine than core-background
+        let c0 = ds.class_indices(0);
+        let other = ds.class_indices(10);
+        assert!(c0.len() >= 2 && other.len() >= 2);
+        let mut same = 0.0f64;
+        let mut cnt = 0usize;
+        for i in 0..c0.len().min(20) {
+            for j in (i + 1)..c0.len().min(20) {
+                same += cosine(m.row(c0[i]), m.row(c0[j])) as f64;
+                cnt += 1;
+            }
+        }
+        same /= cnt as f64;
+        let mut cross = 0.0f64;
+        let mut ccnt = 0usize;
+        for i in 0..c0.len().min(20) {
+            for j in 0..other.len().min(20) {
+                cross += cosine(m.row(c0[i]), m.row(other[j])) as f64;
+                ccnt += 1;
+            }
+        }
+        cross /= ccnt as f64;
+        assert!(same > cross + 0.05, "same {same} cross {cross}");
+    }
+
+    #[test]
+    fn featref_coord_and_scatter() {
+        let mut b = CsrBuilder::new(6);
+        b.push_row(&mut vec![(1, 2.0), (4, -1.0)]);
+        let m = b.finish();
+        let r = FeatRef::Sparse(m.row(0));
+        assert_eq!(r.coord(1), 2.0);
+        assert_eq!(r.coord(0), 0.0);
+        assert_eq!(r.coord(4), -1.0);
+        let mut buf = vec![0.0f32; 6];
+        r.scatter_into(&mut buf);
+        assert_eq!(buf, vec![0.0, 2.0, 0.0, 0.0, -1.0, 0.0]);
+    }
+
+    #[test]
+    fn dense_block_round_trip() {
+        let mut rng = Rng::seed_from_u64(7);
+        let ds = test_blobs(10, 8, 2, &mut rng);
+        let blk = ds.features().dense_block(8, 4);
+        assert_eq!(blk.rows, 4);
+        // rows 8,9 copied; rows 10,11 zero padded
+        match ds.features() {
+            FeatureStore::Dense(m) => {
+                assert_eq!(blk.row(0), m.row(8));
+                assert_eq!(blk.row(1), m.row(9));
+            }
+            _ => unreachable!(),
+        }
+        assert!(blk.row(2).iter().all(|&v| v == 0.0));
+    }
+}

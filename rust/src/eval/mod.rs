@@ -1,0 +1,197 @@
+//! Retrieval-quality evaluation of hyperplane hash families.
+//!
+//! The paper reports end-task metrics (MAP, min-margin); this module adds
+//! the direct retrieval view a library user needs when picking a family:
+//! **recall@T** against the exhaustive ground truth and the **margin
+//! ratio** (how much worse the best hashed candidate's margin is than the
+//! true minimum). Used by the ablation benches and the `chh eval` command.
+
+use crate::data::FeatureStore;
+use crate::hash::HashFamily;
+use crate::linalg::{margin_feat, nrm2};
+use crate::table::HyperplaneIndex;
+
+/// Ground truth: indices of the T smallest-margin points for a query.
+pub fn exhaustive_topk(feats: &FeatureStore, w: &[f32], t: usize) -> Vec<(usize, f32)> {
+    let wn = nrm2(w);
+    let mut all: Vec<(usize, f32)> =
+        (0..feats.len()).map(|i| (i, margin_feat(feats.row(i), w, wn))).collect();
+    // partial selection: T smallest margins
+    let t = t.min(all.len());
+    all.select_nth_unstable_by(t.saturating_sub(1), |a, b| {
+        a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let mut top: Vec<(usize, f32)> = all[..t].to_vec();
+    top.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    top
+}
+
+/// One query's retrieval evaluation.
+#[derive(Clone, Debug, Default)]
+pub struct QueryEval {
+    /// |retrieved ∩ true-topT| / T
+    pub recall_at_t: f64,
+    /// best retrieved margin / true minimum margin (≥ 1; 1 = perfect)
+    pub margin_ratio: f64,
+    /// candidates the hash probe scanned
+    pub scanned: usize,
+    /// whether the ball was nonempty
+    pub nonempty: bool,
+}
+
+/// Evaluate one (family, index) on one hyperplane query.
+pub fn eval_query(
+    family: &dyn HashFamily,
+    index: &HyperplaneIndex,
+    feats: &FeatureStore,
+    w: &[f32],
+    t: usize,
+) -> QueryEval {
+    let truth = exhaustive_topk(feats, w, t);
+    let true_best = truth.first().map(|&(_, m)| m).unwrap_or(0.0);
+    let truth_set: std::collections::HashSet<usize> = truth.iter().map(|&(i, _)| i).collect();
+    let lookup = family.encode_query(w);
+    let mut cand = Vec::new();
+    index.candidates_into(lookup, usize::MAX, &mut cand);
+    let wn = nrm2(w);
+    let mut best = f32::INFINITY;
+    let mut hits = 0usize;
+    for &i in &cand {
+        let i = i as usize;
+        if truth_set.contains(&i) {
+            hits += 1;
+        }
+        let m = margin_feat(feats.row(i), w, wn);
+        if m < best {
+            best = m;
+        }
+    }
+    QueryEval {
+        recall_at_t: hits as f64 / t.max(1) as f64,
+        margin_ratio: if cand.is_empty() || true_best <= 0.0 {
+            f64::INFINITY
+        } else {
+            (best / true_best.max(1e-12)) as f64
+        },
+        scanned: cand.len(),
+        nonempty: !cand.is_empty(),
+    }
+}
+
+/// Aggregate evaluation over a query set.
+#[derive(Clone, Debug, Default)]
+pub struct EvalSummary {
+    pub queries: usize,
+    pub mean_recall: f64,
+    pub median_margin_ratio: f64,
+    pub mean_scanned: f64,
+    pub nonempty_frac: f64,
+}
+
+/// Evaluate a family over many hyperplane queries.
+pub fn evaluate(
+    family: &dyn HashFamily,
+    index: &HyperplaneIndex,
+    feats: &FeatureStore,
+    queries: &[Vec<f32>],
+    t: usize,
+) -> EvalSummary {
+    let mut recall = 0.0;
+    let mut ratios: Vec<f64> = Vec::new();
+    let mut scanned = 0usize;
+    let mut nonempty = 0usize;
+    for w in queries {
+        let e = eval_query(family, index, feats, w, t);
+        recall += e.recall_at_t;
+        if e.margin_ratio.is_finite() {
+            ratios.push(e.margin_ratio);
+        }
+        scanned += e.scanned;
+        nonempty += e.nonempty as usize;
+    }
+    ratios.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    EvalSummary {
+        queries: queries.len(),
+        mean_recall: recall / queries.len().max(1) as f64,
+        median_margin_ratio: ratios.get(ratios.len() / 2).copied().unwrap_or(f64::INFINITY),
+        mean_scanned: scanned as f64 / queries.len().max(1) as f64,
+        nonempty_frac: nonempty as f64 / queries.len().max(1) as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::test_blobs;
+    use crate::hash::BhHash;
+    use crate::rng::Rng;
+    use crate::testing::unit_vec;
+
+    #[test]
+    fn exhaustive_topk_sorted_and_correct() {
+        let mut rng = Rng::seed_from_u64(1);
+        let ds = test_blobs(200, 8, 2, &mut rng);
+        let w = unit_vec(&mut rng, 8);
+        let top = exhaustive_topk(ds.features(), &w, 10);
+        assert_eq!(top.len(), 10);
+        for pair in top.windows(2) {
+            assert!(pair[0].1 <= pair[1].1);
+        }
+        // brute force check of the minimum
+        let wn = nrm2(&w);
+        let bf = (0..200)
+            .map(|i| margin_feat(ds.features().row(i), &w, wn))
+            .fold(f32::INFINITY, f32::min);
+        assert_eq!(top[0].1, bf);
+    }
+
+    #[test]
+    fn full_ball_index_has_perfect_recall() {
+        let mut rng = Rng::seed_from_u64(2);
+        let ds = test_blobs(150, 8, 2, &mut rng);
+        let fam = BhHash::sample(8, 6, &mut rng);
+        // radius = k: every bucket probed → all points are candidates
+        let index = HyperplaneIndex::build(&fam, ds.features(), 6);
+        let queries: Vec<Vec<f32>> = (0..5).map(|_| unit_vec(&mut rng, 8)).collect();
+        let s = evaluate(&fam, &index, ds.features(), &queries, 10);
+        assert!((s.mean_recall - 1.0).abs() < 1e-9, "recall {}", s.mean_recall);
+        assert!((s.median_margin_ratio - 1.0).abs() < 1e-6);
+        assert_eq!(s.mean_scanned, 150.0);
+        assert_eq!(s.nonempty_frac, 1.0);
+    }
+
+    #[test]
+    fn radius_monotonically_improves_recall() {
+        let mut rng = Rng::seed_from_u64(3);
+        let ds = test_blobs(400, 16, 3, &mut rng);
+        let fam = BhHash::sample(16, 12, &mut rng);
+        let queries: Vec<Vec<f32>> = (0..10).map(|_| unit_vec(&mut rng, 16)).collect();
+        let mut last = -1.0;
+        for r in [0usize, 2, 4, 12] {
+            let index = HyperplaneIndex::build(&fam, ds.features(), r);
+            let s = evaluate(&fam, &index, ds.features(), &queries, 20);
+            assert!(
+                s.mean_recall >= last - 1e-9,
+                "recall must grow with radius: {last} → {} at r={r}",
+                s.mean_recall
+            );
+            last = s.mean_recall;
+        }
+        assert!((last - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_index_reports_inf_ratio() {
+        let mut rng = Rng::seed_from_u64(4);
+        let ds = test_blobs(50, 8, 2, &mut rng);
+        let fam = BhHash::sample(8, 12, &mut rng);
+        // radius 0 with 12 bits: mostly empty for random queries
+        let index = HyperplaneIndex::build(&fam, ds.features(), 0);
+        let w = unit_vec(&mut rng, 8);
+        let e = eval_query(&fam, &index, ds.features(), &w, 5);
+        if !e.nonempty {
+            assert!(e.margin_ratio.is_infinite());
+            assert_eq!(e.scanned, 0);
+        }
+    }
+}

@@ -1,0 +1,320 @@
+//! Hash-code bit manipulation.
+//!
+//! Codes are at most 64 bits (the paper's compact regime is k ≤ ~40 even
+//! for the dual-bit AH-Hash), so a code is a single `u64` with the low
+//! `k` bits meaningful. Hamming distance is one XOR + POPCNT.
+
+/// Mask with the low k bits set.
+#[inline]
+pub fn mask(k: usize) -> u64 {
+    debug_assert!(k >= 1 && k <= 64, "code length {k} out of range");
+    if k == 64 {
+        u64::MAX
+    } else {
+        (1u64 << k) - 1
+    }
+}
+
+/// Hamming distance between two k-bit codes.
+#[inline]
+pub fn hamming(a: u64, b: u64, k: usize) -> u32 {
+    ((a ^ b) & mask(k)).count_ones()
+}
+
+/// Bitwise NOT restricted to the low k bits (the paper's query-side flip:
+/// search near `~H(w)` ⇔ farthest codes from `H(w)`).
+#[inline]
+pub fn flip(code: u64, k: usize) -> u64 {
+    !code & mask(k)
+}
+
+/// Pack a ±1 (or arbitrary-sign) score slice into bits: bit j = 1 iff
+/// scores[j] >= 0 — `sgn` with the paper's convention sgn(0) = +1.
+#[inline]
+pub fn pack_signs(scores: &[f32]) -> u64 {
+    debug_assert!(scores.len() <= 64);
+    let mut c = 0u64;
+    for (j, &s) in scores.iter().enumerate() {
+        if s >= 0.0 {
+            c |= 1u64 << j;
+        }
+    }
+    c
+}
+
+/// Unpack a k-bit code into ±1 floats.
+pub fn unpack_pm1(code: u64, k: usize) -> Vec<f32> {
+    (0..k).map(|j| if (code >> j) & 1 == 1 { 1.0 } else { -1.0 }).collect()
+}
+
+/// Dense ±1 code matrix for k ≤ 64: one u64 word per point.
+#[derive(Clone, Debug)]
+pub struct CodeArray {
+    pub k: usize,
+    pub codes: Vec<u64>,
+}
+
+impl CodeArray {
+    pub fn new(k: usize) -> Self {
+        assert!((1..=64).contains(&k));
+        CodeArray { k, codes: Vec::new() }
+    }
+
+    pub fn with_capacity(k: usize, n: usize) -> Self {
+        assert!((1..=64).contains(&k));
+        CodeArray { k, codes: Vec::with_capacity(n) }
+    }
+
+    pub fn push(&mut self, code: u64) {
+        debug_assert_eq!(code & !mask(self.k), 0, "code has bits above k");
+        self.codes.push(code);
+    }
+
+    pub fn len(&self) -> usize {
+        self.codes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.codes.is_empty()
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> u64 {
+        self.codes[i]
+    }
+
+    /// Hamming distances from a query code to every stored code
+    /// (the linear-scan "Hamming ranking" mode used when the hash-lookup
+    /// ball is empty or for evaluation).
+    pub fn hamming_scan(&self, q: u64, out: &mut Vec<u32>) {
+        out.clear();
+        out.reserve(self.codes.len());
+        let m = mask(self.k);
+        let qm = q & m;
+        for &c in &self.codes {
+            out.push((c ^ qm).count_ones());
+        }
+    }
+}
+
+/// Iterator over all k-bit masks of Hamming weight ≤ r, in increasing
+/// weight order (weight 0 first — the exact bucket). Used to enumerate the
+/// Hamming ball around the flipped query code. Total count Σ_{i≤r} C(k,i).
+///
+/// Uses Gosper's hack (next-bit-permutation) to walk each weight class in
+/// a handful of ALU ops per mask — the §Perf pass replaced a Vec-based
+/// combination walker with this (≈5× faster enumeration, see
+/// EXPERIMENTS.md §Perf).
+pub struct HammingBall {
+    k: usize,
+    r: usize,
+    weight: usize,
+    /// current mask within the weight class; 0 ⇒ start next weight
+    cur: u64,
+    limit: u64,
+    started: bool,
+    done: bool,
+}
+
+impl HammingBall {
+    pub fn new(k: usize, r: usize) -> Self {
+        HammingBall {
+            k,
+            r: r.min(k),
+            weight: 0,
+            cur: 0,
+            limit: mask(k.max(1)),
+            started: false,
+            done: false,
+        }
+    }
+}
+
+impl Iterator for HammingBall {
+    type Item = u64;
+
+    #[inline]
+    fn next(&mut self) -> Option<u64> {
+        if self.done {
+            return None;
+        }
+        if !self.started {
+            self.started = true;
+            return Some(0); // weight 0: the exact bucket
+        }
+        loop {
+            if self.cur == 0 {
+                // begin the next weight class with the lowest mask
+                self.weight += 1;
+                if self.weight > self.r || self.weight > self.k {
+                    self.done = true;
+                    return None;
+                }
+                self.cur = mask(self.weight);
+                return Some(self.cur);
+            }
+            // Gosper's hack: next mask with the same popcount
+            let v = self.cur;
+            let c = v & v.wrapping_neg();
+            let r = v + c;
+            // guard overflow when v's top run touches bit 63 (k = 64)
+            let next = if c == 0 || r == 0 {
+                0
+            } else {
+                (((v ^ r) >> 2) / c) | r
+            };
+            if next == 0 || next > self.limit {
+                self.cur = 0; // weight class exhausted; advance weight
+                continue;
+            }
+            self.cur = next;
+            return Some(next);
+        }
+    }
+}
+
+/// Binomial coefficient (exact for the small k used here).
+pub fn binom(n: usize, k: usize) -> u64 {
+    if k > n {
+        return 0;
+    }
+    let k = k.min(n - k);
+    let mut num = 1u128;
+    let mut den = 1u128;
+    for i in 0..k {
+        num *= (n - i) as u128;
+        den *= (i + 1) as u128;
+    }
+    (num / den) as u64
+}
+
+/// Σ_{i=0..=r} C(k,i) — the Hamming-ball volume.
+pub fn ball_volume(k: usize, r: usize) -> u64 {
+    (0..=r.min(k)).map(|i| binom(k, i)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::forall;
+
+    #[test]
+    fn mask_and_flip() {
+        assert_eq!(mask(4), 0b1111);
+        assert_eq!(mask(64), u64::MAX);
+        assert_eq!(flip(0b1010, 4), 0b0101);
+        assert_eq!(flip(flip(0xABCD, 16), 16), 0xABCD);
+    }
+
+    #[test]
+    fn hamming_basics() {
+        assert_eq!(hamming(0b1010, 0b1010, 4), 0);
+        assert_eq!(hamming(0b1010, 0b0101, 4), 4);
+        assert_eq!(hamming(0, u64::MAX, 16), 16);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        forall("pack/unpack roundtrip", 64, |rng| {
+            let k = rng.range(1, 65);
+            let scores: Vec<f32> = (0..k).map(|_| rng.gauss_f32()).collect();
+            let code = pack_signs(&scores);
+            let pm = unpack_pm1(code, k);
+            for (j, (&s, &p)) in scores.iter().zip(pm.iter()).enumerate() {
+                let want = if s >= 0.0 { 1.0 } else { -1.0 };
+                crate::prop_assert!(p == want, "bit {j}: score {s} pm {p}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn hamming_is_metric() {
+        forall("hamming metric axioms", 128, |rng| {
+            let k = rng.range(1, 65);
+            let m = mask(k);
+            let a = rng.next_u64() & m;
+            let b = rng.next_u64() & m;
+            let c = rng.next_u64() & m;
+            crate::prop_assert!(hamming(a, a, k) == 0, "identity");
+            crate::prop_assert!(hamming(a, b, k) == hamming(b, a, k), "symmetry");
+            crate::prop_assert!(
+                hamming(a, c, k) <= hamming(a, b, k) + hamming(b, c, k),
+                "triangle"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn flip_maximizes_distance() {
+        forall("flip gives max hamming distance", 64, |rng| {
+            let k = rng.range(1, 65);
+            let c = rng.next_u64() & mask(k);
+            crate::prop_assert!(hamming(c, flip(c, k), k) as usize == k, "flip distance");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ball_enumeration_complete_and_ordered() {
+        forall("ball volume and ordering", 48, |rng| {
+            let k = rng.range(1, 22);
+            let r = rng.range(0, k.min(5) + 1);
+            let masks: Vec<u64> = HammingBall::new(k, r).collect();
+            crate::prop_assert!(
+                masks.len() as u64 == ball_volume(k, r),
+                "count {} vs volume {}",
+                masks.len(),
+                ball_volume(k, r)
+            );
+            // distinct
+            let set: std::collections::HashSet<_> = masks.iter().collect();
+            crate::prop_assert!(set.len() == masks.len(), "duplicates");
+            // non-decreasing weight, all ≤ r, all within k bits
+            let mut last_w = 0;
+            for &m in &masks {
+                let w = m.count_ones() as usize;
+                crate::prop_assert!(w >= last_w, "weight order");
+                crate::prop_assert!(w <= r, "weight bound");
+                crate::prop_assert!(m & !mask(k) == 0, "bits above k");
+                last_w = w;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ball_radius_zero_is_exact_bucket() {
+        let masks: Vec<u64> = HammingBall::new(16, 0).collect();
+        assert_eq!(masks, vec![0]);
+    }
+
+    #[test]
+    fn ball_full_radius_is_power_set() {
+        let masks: Vec<u64> = HammingBall::new(5, 5).collect();
+        assert_eq!(masks.len(), 32);
+    }
+
+    #[test]
+    fn binom_table() {
+        assert_eq!(binom(20, 0), 1);
+        assert_eq!(binom(20, 1), 20);
+        assert_eq!(binom(20, 4), 4845);
+        assert_eq!(binom(5, 7), 0);
+        assert_eq!(ball_volume(20, 4), 1 + 20 + 190 + 1140 + 4845);
+    }
+
+    #[test]
+    fn hamming_scan_matches_pointwise() {
+        let mut arr = CodeArray::new(8);
+        for c in [0u64, 0xFF, 0b1010_1010, 0b0101_0101] {
+            arr.push(c);
+        }
+        let mut out = Vec::new();
+        arr.hamming_scan(0b1111_0000, &mut out);
+        let expect: Vec<u32> =
+            arr.codes.iter().map(|&c| hamming(c, 0b1111_0000, 8)).collect();
+        assert_eq!(out, expect);
+    }
+}

@@ -1,0 +1,227 @@
+//! Collision-probability theory (§3 of the paper) and its Monte-Carlo
+//! validation — the machinery behind Fig. 2(a)/(b).
+//!
+//! All probabilities are parameterized by the paper's distance measure
+//! `r = D(x, P_w) = α²_{x,w} ∈ [0, π²/4]`.
+
+use crate::data::FeatRef;
+use crate::hash::{AhHash, BhHash, EhHash, HashFamily};
+use crate::rng::Rng;
+use crate::testing::pair_with_angle;
+use std::f64::consts::PI;
+
+/// Domain upper bound for r: (π/2)².
+pub const R_MAX: f64 = PI * PI / 4.0;
+
+/// AH-Hash collision probability (eq. 3): p₁ = 1/4 − r/π².
+pub fn p_ah(r: f64) -> f64 {
+    0.25 - r / (PI * PI)
+}
+
+/// EH-Hash collision probability (eq. 5): p₁ = acos(sin²α)/π, α = √r.
+pub fn p_eh(r: f64) -> f64 {
+    let alpha = r.sqrt();
+    (alpha.sin().powi(2)).acos() / PI
+}
+
+/// BH-Hash collision probability (Lemma 1): p₁ = 1/2 − 2r/π².
+pub fn p_bh(r: f64) -> f64 {
+    0.5 - 2.0 * r / (PI * PI)
+}
+
+/// Query-time exponent ρ = ln p₁(r) / ln p₂(r(1+ε)) (Theorem 2).
+/// Returns NaN where p₂ ≤ 0 (the regime where the family's guarantee
+/// lapses), matching how the paper's Fig. 2(b) curves terminate.
+pub fn rho(p: impl Fn(f64) -> f64, r: f64, eps: f64) -> f64 {
+    let p1 = p(r);
+    let p2 = p(r * (1.0 + eps));
+    if p1 <= 0.0 || p2 <= 0.0 || p1 >= 1.0 || p2 >= 1.0 {
+        return f64::NAN;
+    }
+    p1.ln() / p2.ln()
+}
+
+/// Theorem 2's table count `n^ρ` and per-table bits `k = log_{1/p₂} n`.
+pub fn theorem2_params(p: impl Fn(f64) -> f64, r: f64, eps: f64, n: usize) -> Option<(usize, usize)> {
+    let p2 = p(r * (1.0 + eps));
+    if p2 <= 0.0 || p2 >= 1.0 {
+        return None;
+    }
+    let rho = rho(&p, r, eps);
+    if !rho.is_finite() {
+        return None;
+    }
+    let tables = (n as f64).powf(rho).ceil() as usize;
+    let bits = ((n as f64).ln() / (1.0 / p2).ln()).ceil() as usize;
+    Some((tables.max(1), bits.max(1)))
+}
+
+/// Monte-Carlo estimate of the single-bit collision probability
+/// `Pr[h(P_w) = h(x)]` at point-to-hyperplane angle α, for a family
+/// constructed fresh per trial (so randomness is over (u, v) draws).
+///
+/// `make` builds a 1-bit-per-function family; collisions are counted on
+/// bit 0 of `encode_query` vs `encode_point`.
+pub fn mc_collision<F, H>(
+    alpha: f64,
+    dim: usize,
+    trials: usize,
+    rng: &mut Rng,
+    mut make: F,
+) -> f64
+where
+    F: FnMut(&mut Rng) -> H,
+    H: HashFamily,
+{
+    // point-to-hyperplane angle α ⇒ angle from the normal θ = π/2 − α
+    let theta = (PI / 2.0 - alpha) as f32;
+    let mut hits = 0usize;
+    for _ in 0..trials {
+        let fam = make(rng);
+        let (w, x) = pair_with_angle(rng, dim, theta);
+        let q = fam.encode_query(&w);
+        let p = fam.encode_point(FeatRef::Dense(&x));
+        if (q ^ p) & 1 == 0 {
+            hits += 1;
+        }
+    }
+    hits as f64 / trials as f64
+}
+
+/// Convenience Monte-Carlo estimators for the three randomized families.
+pub fn mc_bh(alpha: f64, dim: usize, trials: usize, rng: &mut Rng) -> f64 {
+    mc_collision(alpha, dim, trials, rng, |r| BhHash::sample(dim, 1, r))
+}
+
+pub fn mc_eh(alpha: f64, dim: usize, trials: usize, rng: &mut Rng) -> f64 {
+    mc_collision(alpha, dim, trials, rng, |r| EhHash::full(dim, 1, r))
+}
+
+/// AH is dual-bit: collision = both bits equal (eq. 3 measures the 2-bit
+/// bucket collision), so compare the full 2-bit code.
+pub fn mc_ah(alpha: f64, dim: usize, trials: usize, rng: &mut Rng) -> f64 {
+    let theta = (PI / 2.0 - alpha) as f32;
+    let mut hits = 0usize;
+    for _ in 0..trials {
+        let fam = AhHash::sample(dim, 1, rng);
+        let (w, x) = pair_with_angle(rng, dim, theta);
+        if fam.encode_query(&w) == fam.encode_point(FeatRef::Dense(&x)) {
+            hits += 1;
+        }
+    }
+    hits as f64 / trials as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol
+    }
+
+    #[test]
+    fn analytic_endpoints() {
+        // r = 0 (perpendicular, most informative)
+        assert!(close(p_ah(0.0), 0.25, 1e-12));
+        assert!(close(p_bh(0.0), 0.5, 1e-12));
+        assert!(close(p_eh(0.0), 0.5, 1e-12));
+        // r = (π/2)² (parallel, most uninformative)
+        assert!(close(p_ah(R_MAX), 0.0, 1e-12));
+        assert!(close(p_bh(R_MAX), 0.0, 1e-12));
+        assert!(close(p_eh(R_MAX), 0.0, 1e-9));
+    }
+
+    #[test]
+    fn bh_doubles_ah() {
+        // Lemma 1 remark: BH collision probability is exactly 2× AH's.
+        for i in 0..20 {
+            let r = R_MAX * i as f64 / 20.0;
+            assert!(close(p_bh(r), 2.0 * p_ah(r), 1e-12), "r={r}");
+        }
+    }
+
+    #[test]
+    fn probabilities_monotone_decreasing() {
+        let mut last = (p_ah(0.0), p_eh(0.0), p_bh(0.0));
+        for i in 1..=50 {
+            let r = R_MAX * i as f64 / 50.0;
+            let cur = (p_ah(r), p_eh(r), p_bh(r));
+            assert!(cur.0 < last.0 && cur.1 < last.1 && cur.2 < last.2, "r={r}");
+            last = cur;
+        }
+    }
+
+    #[test]
+    fn bh_highest_collision_probability() {
+        // Fig 2(a): at any fixed r, BH-Hash has the highest p₁.
+        for i in 0..=20 {
+            let r = R_MAX * i as f64 / 21.0;
+            assert!(p_bh(r) >= p_eh(r) - 1e-12, "r={r}: bh {} eh {}", p_bh(r), p_eh(r));
+            assert!(p_bh(r) > p_ah(r), "r={r}");
+        }
+    }
+
+    #[test]
+    fn rho_in_unit_interval_and_eh_smallest() {
+        // Fig 2(b): 0 < ρ < 1; EH has slightly smaller ρ than BH.
+        let eps = 3.0;
+        for i in 1..=10 {
+            let r = 0.2 * i as f64 * R_MAX / 10.0; // keep r(1+ε) in-domain
+            if p_ah(r * (1.0 + eps)) <= 0.0 {
+                continue;
+            }
+            for p in [p_ah as fn(f64) -> f64, p_eh, p_bh] {
+                let rr = rho(p, r, eps);
+                assert!(rr > 0.0 && rr < 1.0, "rho {rr} at r={r}");
+            }
+            assert!(
+                rho(p_eh, r, eps) <= rho(p_bh, r, eps) + 1e-9,
+                "EH rho should be ≤ BH rho at r={r}"
+            );
+        }
+    }
+
+    #[test]
+    fn theorem2_params_reasonable() {
+        let (tables, bits) = theorem2_params(p_bh, 0.1, 3.0, 100_000).unwrap();
+        assert!(tables >= 1);
+        assert!(bits >= 10, "bits {bits}");
+        // out-of-domain r(1+ε) → None
+        assert!(theorem2_params(p_ah, R_MAX, 3.0, 100).is_none());
+    }
+
+    #[test]
+    fn mc_matches_lemma1_bh() {
+        // Monte-Carlo single-bit collision at a few α values vs Lemma 1.
+        let mut rng = Rng::seed_from_u64(42);
+        for &alpha in &[0.0f64, 0.4, 0.9, 1.4] {
+            let est = mc_bh(alpha, 24, 4000, &mut rng);
+            let want = p_bh(alpha * alpha);
+            assert!(
+                close(est, want, 0.035),
+                "alpha={alpha}: mc {est} vs analytic {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn mc_matches_eq3_ah() {
+        let mut rng = Rng::seed_from_u64(43);
+        for &alpha in &[0.0f64, 0.7, 1.3] {
+            let est = mc_ah(alpha, 24, 4000, &mut rng);
+            let want = p_ah(alpha * alpha);
+            assert!(close(est, want, 0.035), "alpha={alpha}: mc {est} vs {want}");
+        }
+    }
+
+    #[test]
+    fn mc_matches_eq5_eh() {
+        let mut rng = Rng::seed_from_u64(44);
+        for &alpha in &[0.0f64, 0.8, 1.4] {
+            let est = mc_eh(alpha, 12, 2500, &mut rng);
+            let want = p_eh(alpha * alpha);
+            assert!(close(est, want, 0.04), "alpha={alpha}: mc {est} vs {want}");
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! Multiply-shift hasher for u64 hash-code keys.
+//!
+//! `std::collections::HashMap` defaults to SipHash-1-3 (~15–20 ns per u64
+//! key); bucket probing enumerates thousands of ball keys per query, so
+//! the hasher is squarely on the hot path. Codes are already uniformly
+//! distributed bit patterns, so a single Fibonacci-style multiply plus a
+//! xor-fold is collision-adequate and ~4× faster (§Perf pass; before/after
+//! in EXPERIMENTS.md).
+
+use std::hash::{BuildHasher, Hasher};
+
+/// Hasher state: fold the (single) u64 write through a multiply.
+#[derive(Clone, Default)]
+pub struct CodeHasher {
+    state: u64,
+}
+
+impl Hasher for CodeHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.state
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        // generic path (not used for u64 keys, kept correct anyway)
+        for &b in bytes {
+            self.state = (self.state ^ b as u64).wrapping_mul(0x100_0000_01B3);
+        }
+    }
+
+    #[inline]
+    fn write_u64(&mut self, x: u64) {
+        // golden-ratio multiply then xor-fold the high bits down so that
+        // HashMap's low-bit masking sees the mixed entropy
+        let h = x.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        self.state = h ^ (h >> 32);
+    }
+}
+
+/// BuildHasher for [`CodeHasher`].
+#[derive(Clone, Default)]
+pub struct CodeHashBuilder;
+
+impl BuildHasher for CodeHashBuilder {
+    type Hasher = CodeHasher;
+
+    #[inline]
+    fn build_hasher(&self) -> CodeHasher {
+        CodeHasher::default()
+    }
+}
+
+/// HashMap keyed by hash codes with the fast hasher.
+pub type CodeMap<V> = std::collections::HashMap<u64, V, CodeHashBuilder>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_roundtrip() {
+        let mut m: CodeMap<u32> = CodeMap::default();
+        for i in 0..10_000u64 {
+            m.insert(i * 0x1234_5678_9ABC ^ i, i as u32);
+        }
+        for i in 0..10_000u64 {
+            assert_eq!(m.get(&(i * 0x1234_5678_9ABC ^ i)), Some(&(i as u32)));
+        }
+        assert_eq!(m.len(), 10_000);
+    }
+
+    #[test]
+    fn distinct_inputs_distinct_hashes_mostly() {
+        // sanity: low-bit distribution of hashed sequential codes is flat
+        let b = CodeHashBuilder;
+        let mut buckets = [0usize; 64];
+        for code in 0..64_000u64 {
+            let mut h = b.build_hasher();
+            h.write_u64(code);
+            buckets[(h.finish() & 63) as usize] += 1;
+        }
+        let expect = 1000.0;
+        for &c in &buckets {
+            assert!((c as f64 - expect).abs() < 0.2 * expect, "{buckets:?}");
+        }
+    }
+}

@@ -1,0 +1,630 @@
+//! LBH-Hash training (§4 of the paper).
+//!
+//! Learns k bilinear hash functions `h_j(z) = sgn(u_jᵀ z zᵀ v_j)` so that
+//! `(1/k)·B·Bᵀ ≈ S`, where `S` encodes the saturated pairwise similarity
+//! `2|cos θ| − 1` of a training subsample (eq. 12) and `B` is the ±1 code
+//! matrix. The solve is the paper's greedy per-bit scheme:
+//!
+//! 1. residue `R₀ = k·S`; for each bit j minimize
+//!    `g(u_j, v_j) = −b_jᵀ R_{j−1} b_j` (eq. 15);
+//! 2. replace sgn with the sigmoid `φ(x) = 2/(1+e^{−x}) − 1` giving the
+//!    smooth surrogate `g̃ = −b̃ᵀR b̃` (eq. 16–17) with analytic gradient
+//!    `∇g̃ = −[X Σ Xᵀv; X Σ Xᵀu]`, `Σ = diag((R b̃) ⊙ (1 − b̃⊙b̃))` (eq. 18);
+//! 3. Nesterov-accelerated gradient descent from the *random projection*
+//!    warm start (the same draw the randomized BH-Hash would use);
+//! 4. `R_j = R_{j−1} − b_j b_jᵀ` and continue.
+//!
+//! The native Rust implementation below is the reference path; the PJRT
+//! artifact `lbh_step` (see `python/compile/model.py` and
+//! `crate::runtime`) executes the same step as a fused XLA computation and
+//! is parity-tested against this module.
+
+use crate::data::FeatureStore;
+use crate::hash::{LbhHash, ProjectionPairs};
+use crate::linalg::{dot, Mat};
+use crate::rng::Rng;
+
+/// Training hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct LbhTrainConfig {
+    /// code length k
+    pub bits: usize,
+    /// Nesterov iterations per bit
+    pub iters_per_bit: usize,
+    /// initial learning rate (adapted by backtracking)
+    pub lr: f32,
+    /// Nesterov momentum
+    pub momentum: f32,
+    /// similarity saturation thresholds (eq. 12); `None` = the paper's
+    /// top/bottom-5% rule computed on the training subsample
+    pub t1: Option<f32>,
+    pub t2: Option<f32>,
+    /// cap on the reference set used by the threshold rule
+    pub threshold_ref_cap: usize,
+}
+
+impl Default for LbhTrainConfig {
+    fn default() -> Self {
+        LbhTrainConfig {
+            bits: 16,
+            iters_per_bit: 300,
+            lr: 1e-3,
+            momentum: 0.9,
+            t1: None,
+            t2: None,
+            threshold_ref_cap: 4000,
+        }
+    }
+}
+
+/// Diagnostics from a training run.
+#[derive(Clone, Debug, Default)]
+pub struct LbhTrainStats {
+    /// surrogate cost g̃ after optimizing each bit
+    pub bit_costs: Vec<f32>,
+    /// discrete cost −b_jᵀR b_j after each bit
+    pub discrete_costs: Vec<f32>,
+    /// ‖R‖_F² before/after all bits (residual energy captured)
+    pub residue_before: f64,
+    pub residue_after: f64,
+    /// thresholds actually used
+    pub t1: f32,
+    pub t2: f32,
+    pub train_secs: f64,
+}
+
+/// φ(x) = 2/(1+e^{−x}) − 1 = tanh(x/2) — the paper's smooth sign surrogate.
+#[inline]
+pub fn sigmoid_pm(x: f32) -> f32 {
+    (0.5 * x).tanh()
+}
+
+/// The similarity matrix S of eq. (12) over unit-normalized rows `xm`,
+/// given thresholds t1 > t2.
+pub fn similarity_matrix(xm: &Mat, t1: f32, t2: f32) -> Mat {
+    let m = xm.rows;
+    let mut s = Mat::zeros(m, m);
+    for i in 0..m {
+        for ip in i..m {
+            let c = dot(xm.row(i), xm.row(ip)).abs().min(1.0);
+            let v = if c >= t1 {
+                1.0
+            } else if c <= t2 {
+                -1.0
+            } else {
+                2.0 * c - 1.0
+            };
+            s.set(i, ip, v);
+            s.set(ip, i, v);
+        }
+    }
+    s
+}
+
+/// The paper's threshold rule: compute the absolute cosine matrix between
+/// the m samples and a reference set, average the top 5% per row → t1,
+/// average the bottom 5% per row → t2.
+pub fn threshold_rule(xm: &Mat, reference: &Mat) -> (f32, f32) {
+    let m = xm.rows;
+    let n = reference.rows;
+    assert!(n >= 20, "reference set too small for 5% quantiles");
+    let top_k = (n as f64 * 0.05).ceil() as usize;
+    let bot_k = top_k;
+    let mut t1_acc = 0.0f64;
+    let mut t2_acc = 0.0f64;
+    let mut row: Vec<f32> = Vec::with_capacity(n);
+    for i in 0..m {
+        row.clear();
+        for j in 0..n {
+            row.push(dot(xm.row(i), reference.row(j)).abs().min(1.0));
+        }
+        row.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let top: f32 = row[n - top_k..].iter().sum::<f32>() / top_k as f32;
+        let bot: f32 = row[..bot_k].iter().sum::<f32>() / bot_k as f32;
+        t1_acc += top as f64;
+        t2_acc += bot as f64;
+    }
+    let mut t1 = (t1_acc / m as f64) as f32;
+    let mut t2 = (t2_acc / m as f64) as f32;
+    // keep 0 < t2 < t1 < 1 well-posed even on degenerate data
+    t1 = t1.clamp(0.05, 0.999);
+    t2 = t2.clamp(1e-4, t1 - 1e-3);
+    (t1, t2)
+}
+
+/// One bit's state during the Nesterov solve.
+struct BitState {
+    u: Vec<f32>,
+    v: Vec<f32>,
+    yu: Vec<f32>,
+    yv: Vec<f32>,
+}
+
+/// Evaluate b̃ (sigmoid codes) and the surrogate cost −b̃ᵀRb̃ at (u, v).
+/// Public so the PJRT `lbh_step` artifact can be parity-tested against it.
+pub fn surrogate_eval(xm: &Mat, r: &Mat, u: &[f32], v: &[f32], btil: &mut Vec<f32>) -> f32 {
+    let m = xm.rows;
+    btil.clear();
+    for i in 0..m {
+        let xi = xm.row(i);
+        btil.push(sigmoid_pm(dot(xi, u) * dot(xi, v)));
+    }
+    // cost = −b̃ᵀ R b̃
+    let mut cost = 0.0f32;
+    for i in 0..m {
+        cost -= btil[i] * dot(r.row(i), btil);
+    }
+    cost
+}
+
+/// Gradient of the surrogate at (u, v) (eq. 18). Returns (g_u, g_v).
+/// Public so the PJRT `lbh_step` artifact can be parity-tested against it.
+pub fn surrogate_grad(xm: &Mat, r: &Mat, u: &[f32], v: &[f32]) -> (Vec<f32>, Vec<f32>) {
+    let m = xm.rows;
+    let d = xm.cols;
+    let mut pu = Vec::with_capacity(m); // Xu
+    let mut pv = Vec::with_capacity(m); // Xv
+    let mut btil = Vec::with_capacity(m);
+    for i in 0..m {
+        let xi = xm.row(i);
+        let a = dot(xi, u);
+        let b = dot(xi, v);
+        pu.push(a);
+        pv.push(b);
+        btil.push(sigmoid_pm(a * b));
+    }
+    // σ_i = (R b̃)_i · (1 − b̃_i²)
+    let mut sigma = Vec::with_capacity(m);
+    for i in 0..m {
+        sigma.push(dot(r.row(i), &btil) * (1.0 - btil[i] * btil[i]));
+    }
+    // g_u = −Σ_i σ_i (x_i·v) x_i ; g_v = −Σ_i σ_i (x_i·u) x_i
+    let mut gu = vec![0.0f32; d];
+    let mut gv = vec![0.0f32; d];
+    for i in 0..m {
+        let xi = xm.row(i);
+        crate::linalg::axpy(-sigma[i] * pv[i], xi, &mut gu);
+        crate::linalg::axpy(-sigma[i] * pu[i], xi, &mut gv);
+    }
+    (gu, gv)
+}
+
+/// Discrete bit vector b_j = sgn(Xu ⊙ Xv) and discrete cost −bᵀRb.
+fn discrete_eval(xm: &Mat, r: &Mat, u: &[f32], v: &[f32]) -> (Vec<f32>, f32) {
+    let m = xm.rows;
+    let mut b = Vec::with_capacity(m);
+    for i in 0..m {
+        let xi = xm.row(i);
+        b.push(if dot(xi, u) * dot(xi, v) >= 0.0 { 1.0 } else { -1.0 });
+    }
+    let mut cost = 0.0f32;
+    for i in 0..m {
+        cost -= b[i] * dot(r.row(i), &b);
+    }
+    (b, cost)
+}
+
+/// The LBH trainer.
+pub struct LbhTrainer {
+    pub cfg: LbhTrainConfig,
+}
+
+impl LbhTrainer {
+    pub fn new(cfg: LbhTrainConfig) -> Self {
+        LbhTrainer { cfg }
+    }
+
+    /// Train on `sample_idx` rows of `feats`. `reference_idx` feeds the
+    /// threshold rule (pass the same indices to self-reference, or a wider
+    /// sample of the database as the paper does).
+    pub fn train(
+        &self,
+        feats: &FeatureStore,
+        sample_idx: &[usize],
+        reference_idx: &[usize],
+        rng: &mut Rng,
+    ) -> (LbhHash, LbhTrainStats) {
+        let t0 = std::time::Instant::now();
+        let d = feats.dim();
+        let m = sample_idx.len();
+        assert!(m >= 8, "need at least 8 training samples");
+        // densify + unit-normalize the training subsample
+        let mut xm = Mat::zeros(m, d);
+        for (r, &i) in sample_idx.iter().enumerate() {
+            feats.row(i).scatter_into(xm.row_mut(r));
+        }
+        xm.l2_normalize_rows();
+
+        // thresholds
+        let (t1, t2) = match (self.cfg.t1, self.cfg.t2) {
+            (Some(a), Some(b)) => (a, b),
+            _ => {
+                let cap = self.cfg.threshold_ref_cap.min(reference_idx.len()).max(20.min(reference_idx.len()));
+                let mut xr = Mat::zeros(cap, d);
+                for (r, &i) in reference_idx.iter().take(cap).enumerate() {
+                    feats.row(i).scatter_into(xr.row_mut(r));
+                }
+                xr.l2_normalize_rows();
+                threshold_rule(&xm, &xr)
+            }
+        };
+        assert!(t2 < t1, "thresholds must satisfy t2 < t1 (t1={t1}, t2={t2})");
+
+        let s = similarity_matrix(&xm, t1, t2);
+        let k = self.cfg.bits;
+        // R₀ = k·S
+        let mut r = Mat::zeros(m, m);
+        for (dst, src) in r.data.iter_mut().zip(s.data.iter()) {
+            *dst = k as f32 * src;
+        }
+        let residue_before = r.data.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>();
+
+        let mut stats = LbhTrainStats {
+            t1,
+            t2,
+            residue_before,
+            ..Default::default()
+        };
+        let mut u_all = Mat::zeros(k, d);
+        let mut v_all = Mat::zeros(k, d);
+        let mut btil_buf: Vec<f32> = Vec::with_capacity(m);
+
+        for j in 0..k {
+            // random-projection warm start (what h_j^B would have used)
+            let mut st = BitState {
+                u: rng.gauss_vec(d),
+                v: rng.gauss_vec(d),
+                yu: vec![0.0; d],
+                yv: vec![0.0; d],
+            };
+            st.yu.copy_from_slice(&st.u);
+            st.yv.copy_from_slice(&st.v);
+            let mut lr = self.cfg.lr;
+            let mu = self.cfg.momentum;
+            let mut best_cost = surrogate_eval(&xm, &r, &st.u, &st.v, &mut btil_buf);
+            let mut best_u = st.u.clone();
+            let mut best_v = st.v.clone();
+            let mut prev_u = st.u.clone();
+            let mut prev_v = st.v.clone();
+            for _t in 0..self.cfg.iters_per_bit {
+                // Nesterov lookahead: y = x + μ(x − x_prev)
+                for i in 0..d {
+                    st.yu[i] = st.u[i] + mu * (st.u[i] - prev_u[i]);
+                    st.yv[i] = st.v[i] + mu * (st.v[i] - prev_v[i]);
+                }
+                let (gu, gv) = surrogate_grad(&xm, &r, &st.yu, &st.yv);
+                prev_u.copy_from_slice(&st.u);
+                prev_v.copy_from_slice(&st.v);
+                for i in 0..d {
+                    st.u[i] = st.yu[i] - lr * gu[i];
+                    st.v[i] = st.yv[i] - lr * gv[i];
+                }
+                let cost = surrogate_eval(&xm, &r, &st.u, &st.v, &mut btil_buf);
+                if cost < best_cost {
+                    best_cost = cost;
+                    best_u.copy_from_slice(&st.u);
+                    best_v.copy_from_slice(&st.v);
+                    // mild step growth: self-tunes lr across problem scales
+                    lr *= 1.02;
+                } else if !cost.is_finite() || cost > best_cost.abs() * 4.0 + best_cost {
+                    // diverged: restart from best with smaller step
+                    lr *= 0.5;
+                    st.u.copy_from_slice(&best_u);
+                    st.v.copy_from_slice(&best_v);
+                    prev_u.copy_from_slice(&best_u);
+                    prev_v.copy_from_slice(&best_v);
+                    if lr < 1e-6 {
+                        break;
+                    }
+                }
+            }
+            let (b, dcost) = discrete_eval(&xm, &r, &best_u, &best_v);
+            stats.bit_costs.push(best_cost);
+            stats.discrete_costs.push(dcost);
+            u_all.row_mut(j).copy_from_slice(&best_u);
+            v_all.row_mut(j).copy_from_slice(&best_v);
+            // R ← R − b bᵀ
+            for i in 0..m {
+                let bi = b[i];
+                let row = r.row_mut(i);
+                for ip in 0..m {
+                    row[ip] -= bi * b[ip];
+                }
+            }
+        }
+        stats.residue_after = r.data.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>();
+        stats.train_secs = t0.elapsed().as_secs_f64();
+        (LbhHash::from_pairs(ProjectionPairs { u: u_all, v: v_all }), stats)
+    }
+}
+
+impl LbhTrainer {
+    /// PJRT-backed training: identical algorithm to [`Self::train`] but
+    /// every Nesterov step executes the fused `lbh_step_<profile>` XLA
+    /// artifact (L2 graph + L1 Pallas gradient kernels). The sample is
+    /// zero-padded to the artifact's fixed m — padding is gradient-neutral.
+    /// Residue updates and the discrete bit extraction stay native.
+    pub fn train_pjrt(
+        &self,
+        stepper: &crate::runtime::LbhStepper<'_>,
+        feats: &FeatureStore,
+        sample_idx: &[usize],
+        reference_idx: &[usize],
+        rng: &mut Rng,
+    ) -> anyhow::Result<(LbhHash, LbhTrainStats)> {
+        let t0 = std::time::Instant::now();
+        let d = feats.dim();
+        anyhow::ensure!(d == stepper.dim, "dim {} != artifact {}", d, stepper.dim);
+        let ms = sample_idx.len().min(stepper.m);
+        anyhow::ensure!(ms >= 8, "need at least 8 training samples");
+        let m_art = stepper.m;
+        // padded sample matrix
+        let mut xm = Mat::zeros(m_art, d);
+        for (row, &i) in sample_idx.iter().take(ms).enumerate() {
+            feats.row(i).scatter_into(xm.row_mut(row));
+        }
+        xm.l2_normalize_rows();
+        // thresholds + S on the real (unpadded) sample
+        let mut xs = Mat::zeros(ms, d);
+        xs.data.copy_from_slice(&xm.data[..ms * d]);
+        let (t1, t2) = match (self.cfg.t1, self.cfg.t2) {
+            (Some(a), Some(b)) => (a, b),
+            _ => {
+                let cap = self.cfg.threshold_ref_cap.min(reference_idx.len()).max(20.min(reference_idx.len()));
+                let mut xr = Mat::zeros(cap, d);
+                for (row, &i) in reference_idx.iter().take(cap).enumerate() {
+                    feats.row(i).scatter_into(xr.row_mut(row));
+                }
+                xr.l2_normalize_rows();
+                threshold_rule(&xs, &xr)
+            }
+        };
+        let s = similarity_matrix(&xs, t1, t2);
+        let k = self.cfg.bits;
+        // residue on the real sample; padded copy refreshed per bit
+        let mut r_small = Mat::zeros(ms, ms);
+        for (dst, src) in r_small.data.iter_mut().zip(s.data.iter()) {
+            *dst = k as f32 * src;
+        }
+        let residue_before =
+            r_small.data.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>();
+        let mut stats =
+            LbhTrainStats { t1, t2, residue_before, ..Default::default() };
+        let mut u_all = Mat::zeros(k, d);
+        let mut v_all = Mat::zeros(k, d);
+        let mut r_pad = Mat::zeros(m_art, m_art);
+        for j in 0..k {
+            // refresh padded residue
+            for row in 0..m_art {
+                let dst = r_pad.row_mut(row);
+                if row < ms {
+                    dst[..ms].copy_from_slice(r_small.row(row));
+                    for x in dst[ms..].iter_mut() {
+                        *x = 0.0;
+                    }
+                } else {
+                    for x in dst.iter_mut() {
+                        *x = 0.0;
+                    }
+                }
+            }
+            let mut u = rng.gauss_vec(d);
+            let mut v = rng.gauss_vec(d);
+            let mut u_prev = u.clone();
+            let mut v_prev = v.clone();
+            let mut lr = self.cfg.lr;
+            let mu = self.cfg.momentum;
+            let mut best_cost = f32::INFINITY;
+            let mut best_u = u.clone();
+            let mut best_v = v.clone();
+            for _t in 0..self.cfg.iters_per_bit {
+                let (u_new, v_new, cost) =
+                    stepper.step(&xm, &r_pad, &u, &v, &u_prev, &v_prev, lr, mu)?;
+                u_prev = std::mem::replace(&mut u, u_new);
+                v_prev = std::mem::replace(&mut v, v_new);
+                if cost < best_cost {
+                    best_cost = cost;
+                    best_u.copy_from_slice(&u);
+                    best_v.copy_from_slice(&v);
+                    lr *= 1.02;
+                } else if !cost.is_finite() || cost > best_cost.abs() * 4.0 + best_cost {
+                    lr *= 0.5;
+                    u.copy_from_slice(&best_u);
+                    v.copy_from_slice(&best_v);
+                    u_prev.copy_from_slice(&best_u);
+                    v_prev.copy_from_slice(&best_v);
+                    if lr < 1e-6 {
+                        break;
+                    }
+                }
+            }
+            let (b, dcost) = discrete_eval(&xs, &r_small, &best_u, &best_v);
+            stats.bit_costs.push(best_cost);
+            stats.discrete_costs.push(dcost);
+            u_all.row_mut(j).copy_from_slice(&best_u);
+            v_all.row_mut(j).copy_from_slice(&best_v);
+            for i in 0..ms {
+                let bi = b[i];
+                let row = r_small.row_mut(i);
+                for ip in 0..ms {
+                    row[ip] -= bi * b[ip];
+                }
+            }
+        }
+        stats.residue_after =
+            r_small.data.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>();
+        stats.train_secs = t0.elapsed().as_secs_f64();
+        Ok((LbhHash::from_pairs(ProjectionPairs { u: u_all, v: v_all }), stats))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::test_blobs;
+    use crate::hash::HashFamily;
+    use crate::testing::forall;
+
+    #[test]
+    fn sigmoid_matches_definition() {
+        for &x in &[-8.0f32, -1.0, 0.0, 0.5, 6.5] {
+            let direct = 2.0 / (1.0 + (-x).exp()) - 1.0;
+            assert!((sigmoid_pm(x) - direct).abs() < 1e-6, "x={x}");
+        }
+        // approximates sgn for |x| > 6 (paper's remark)
+        assert!(sigmoid_pm(7.0) > 0.95);
+        assert!(sigmoid_pm(-7.0) < -0.95);
+    }
+
+    #[test]
+    fn similarity_matrix_properties() {
+        forall("S symmetric, unit diagonal, in [-1,1]", 16, |rng| {
+            let m = rng.range(4, 24);
+            let d = rng.range(4, 16);
+            let mut xm = Mat::from_vec(m, d, rng.gauss_vec(m * d));
+            xm.l2_normalize_rows();
+            let s = similarity_matrix(&xm, 0.8, 0.2);
+            for i in 0..m {
+                crate::prop_assert!(s.get(i, i) == 1.0, "diag {i} = {}", s.get(i, i));
+                for j in 0..m {
+                    let v = s.get(i, j);
+                    crate::prop_assert!(v == s.get(j, i), "symmetry");
+                    crate::prop_assert!((-1.0..=1.0).contains(&v), "range {v}");
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn similarity_saturation() {
+        // identical rows → 1; orthogonal rows → −1 with t2 above 0
+        let xm = Mat::from_vec(2, 2, vec![1.0, 0.0, 0.0, 1.0]);
+        let s = similarity_matrix(&xm, 0.9, 0.1);
+        assert_eq!(s.get(0, 1), -1.0);
+        let xm2 = Mat::from_vec(2, 2, vec![1.0, 0.0, 1.0, 0.0]);
+        let s2 = similarity_matrix(&xm2, 0.9, 0.1);
+        assert_eq!(s2.get(0, 1), 1.0);
+    }
+
+    #[test]
+    fn threshold_rule_ordering() {
+        let mut rng = Rng::seed_from_u64(3);
+        let ds = test_blobs(300, 16, 3, &mut rng);
+        let mut xm = Mat::zeros(50, 16);
+        for i in 0..50 {
+            ds.features().row(i).scatter_into(xm.row_mut(i));
+        }
+        let mut xr = Mat::zeros(300, 16);
+        for i in 0..300 {
+            ds.features().row(i).scatter_into(xr.row_mut(i));
+        }
+        let (t1, t2) = threshold_rule(&xm, &xr);
+        assert!(t2 < t1, "t1={t1} t2={t2}");
+        assert!(t1 <= 1.0 && t2 > 0.0);
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let mut rng = Rng::seed_from_u64(4);
+        let m = 12;
+        let d = 6;
+        let mut xm = Mat::from_vec(m, d, rng.gauss_vec(m * d));
+        xm.l2_normalize_rows();
+        let s = similarity_matrix(&xm, 0.8, 0.2);
+        let mut r = s.clone();
+        crate::linalg::scal(8.0, &mut r.data);
+        let u = rng.gauss_vec(d);
+        let v = rng.gauss_vec(d);
+        let (gu, gv) = surrogate_grad(&xm, &r, &u, &v);
+        let mut buf = Vec::new();
+        let eps = 1e-3f32;
+        for t in 0..d {
+            let mut up = u.clone();
+            up[t] += eps;
+            let mut um = u.clone();
+            um[t] -= eps;
+            let fd =
+                (surrogate_eval(&xm, &r, &up, &v, &mut buf) - surrogate_eval(&xm, &r, &um, &v, &mut buf))
+                    / (2.0 * eps);
+            assert!(
+                (fd - gu[t]).abs() < 2e-2 * (1.0 + fd.abs().max(gu[t].abs())),
+                "du[{t}]: fd {fd} vs analytic {}",
+                gu[t]
+            );
+            let mut vp = v.clone();
+            vp[t] += eps;
+            let mut vm = v.clone();
+            vm[t] -= eps;
+            let fdv =
+                (surrogate_eval(&xm, &r, &u, &vp, &mut buf) - surrogate_eval(&xm, &r, &u, &vm, &mut buf))
+                    / (2.0 * eps);
+            assert!(
+                (fdv - gv[t]).abs() < 2e-2 * (1.0 + fdv.abs().max(gv[t].abs())),
+                "dv[{t}]: fd {fdv} vs analytic {}",
+                gv[t]
+            );
+        }
+    }
+
+    #[test]
+    fn training_reduces_residue_and_cost() {
+        let mut rng = Rng::seed_from_u64(5);
+        let ds = test_blobs(200, 24, 4, &mut rng);
+        let idx: Vec<usize> = (0..64).collect();
+        let refs: Vec<usize> = (0..200).collect();
+        let trainer = LbhTrainer::new(LbhTrainConfig { bits: 8, iters_per_bit: 60, ..Default::default() });
+        let (_h, stats) = trainer.train(ds.features(), &idx, &refs, &mut rng);
+        assert!(
+            stats.residue_after < stats.residue_before,
+            "residue {} → {}",
+            stats.residue_before,
+            stats.residue_after
+        );
+        assert_eq!(stats.bit_costs.len(), 8);
+        // discrete cost −bᵀRb is bounded below by −max|R|·m² ≥ −k·m²
+        // (|R| entries start at k·|S| ≤ k and shrink as bits are fitted)
+        for &c in &stats.discrete_costs {
+            assert!(c >= -(8.0 * 64.0f32 * 64.0), "cost {c}");
+        }
+    }
+
+    #[test]
+    fn learned_beats_random_on_similarity_fit() {
+        // The defining property: (1/k)BBᵀ should fit S better than random
+        // bilinear projections (this is exactly objective Q of the paper).
+        let mut rng = Rng::seed_from_u64(6);
+        let ds = test_blobs(240, 24, 4, &mut rng);
+        let idx: Vec<usize> = (0..80).collect();
+        let refs: Vec<usize> = (0..240).collect();
+        let k = 12;
+        let trainer = LbhTrainer::new(LbhTrainConfig { bits: k, iters_per_bit: 80, ..Default::default() });
+        let (lbh, stats) = trainer.train(ds.features(), &idx, &refs, &mut rng);
+        // Build Xm and S with the trainer's thresholds.
+        let mut xm = Mat::zeros(80, 24);
+        for (r, &i) in idx.iter().enumerate() {
+            ds.features().row(i).scatter_into(xm.row_mut(r));
+        }
+        xm.l2_normalize_rows();
+        let s = similarity_matrix(&xm, stats.t1, stats.t2);
+        let q_of = |fam: &dyn HashFamily| -> f64 {
+            let mut q = 0.0f64;
+            let codes: Vec<u64> = (0..80).map(|i| fam.encode_point(crate::data::FeatRef::Dense(xm.row(i)))).collect();
+            for i in 0..80 {
+                for j in 0..80 {
+                    let agree = k as i32 - 2 * crate::hash::codes::hamming(codes[i], codes[j], k) as i32;
+                    let fit = agree as f64 / k as f64 - s.get(i, j) as f64;
+                    q += fit * fit;
+                }
+            }
+            q
+        };
+        let q_lbh = q_of(&lbh);
+        let bh = crate::hash::BhHash::sample(24, k, &mut rng);
+        let q_bh = q_of(&bh);
+        assert!(
+            q_lbh < q_bh,
+            "LBH similarity fit {q_lbh} should beat random BH {q_bh}"
+        );
+    }
+}

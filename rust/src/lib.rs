@@ -1,0 +1,81 @@
+//! # chh — Compact Hyperplane Hashing with Bilinear Functions
+//!
+//! A three-layer (Rust coordinator + JAX graph + Pallas kernel) reproduction
+//! of *Compact Hyperplane Hashing with Bilinear Functions* (Liu, Wang, Mu,
+//! Kumar, Chang — ICML 2012).
+//!
+//! The library answers **point-to-hyperplane** nearest-neighbor queries:
+//! given a hyperplane `P_w` (e.g. an SVM decision boundary with normal `w`)
+//! and a database of points, return the points with the smallest
+//! point-to-hyperplane angle `α_{x,w} = |θ_{x,w} − π/2|`. That primitive is
+//! what makes margin-based SVM active learning scale past ~10⁵ samples.
+//!
+//! ## Layers
+//!
+//! * **L3 (this crate)** — the coordinator: hash tables, Hamming-ball
+//!   lookup, the LBH trainer driver, the SVM active-learning engine, a
+//!   hyperplane-query router/batcher, and the PJRT runtime that executes
+//!   AOT-compiled XLA artifacts.
+//! * **L2 (python/compile/model.py)** — JAX graphs for batch encoding,
+//!   LBH Nesterov training steps, margin scans and Hamming ranking, lowered
+//!   once to HLO text by `make artifacts`.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the bilinear
+//!   form `(X·U) ⊙ (X·V)`, the LBH gradient, and ±1-matvec Hamming ranking.
+//!
+//! Python never runs on the query path: the `chh` binary is self-contained
+//! once `artifacts/` is built.
+//!
+//! ## Hash families
+//!
+//! | family | form | collision prob (point vs hyperplane) |
+//! |---|---|---|
+//! | AH-Hash | `[sgn(uᵀz), sgn(±vᵀz)]` | `1/4 − α²/π²` |
+//! | EH-Hash | `sgn(±Uᵀvec(zzᵀ))` | `acos(sin²α)/π` |
+//! | BH-Hash | `sgn(uᵀz·zᵀv)` | `1/2 − 2α²/π²` (Lemma 1) |
+//! | LBH-Hash | learned `(u_j, v_j)` | — (trained, §4 of the paper) |
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use chh::prelude::*;
+//!
+//! let mut rng = Rng::seed_from_u64(7);
+//! let data = chh::data::tiny1m_like(&TinyConfig { n: 20_000, ..TinyConfig::default() }, &mut rng);
+//! let family = chh::hash::BhHash::sample(data.dim(), 20, &mut rng);
+//! let index = chh::table::HyperplaneIndex::build(&family, data.features(), 4);
+//! let w = vec![0.1f32; data.dim()];
+//! let hit = index.query(&family, &w, data.features());
+//! println!("{hit:?}");
+//! ```
+
+pub mod active;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod hash;
+pub mod jsonio;
+pub mod lbh;
+pub mod linalg;
+pub mod metrics;
+pub mod persist;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod sparse;
+pub mod svm;
+pub mod table;
+pub mod testing;
+
+/// Convenience re-exports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::active::{AlConfig, AlEngine, AlResult, Strategy};
+    pub use crate::data::{newsgroups_like, tiny1m_like, Dataset, FeatureStore, NewsConfig, TinyConfig};
+    pub use crate::hash::{AhHash, BhHash, EhHash, HashFamily, LbhHash};
+    pub use crate::lbh::{LbhTrainer, LbhTrainConfig};
+    pub use crate::rng::Rng;
+    pub use crate::svm::{LinearSvm, SvmConfig};
+    pub use crate::table::{HyperplaneIndex, QueryHit};
+}

@@ -1,0 +1,290 @@
+//! Dense linear algebra on `f32` slices — the native (non-PJRT) hot path.
+//!
+//! The vendored registry has no BLAS binding, so the inner loops here are
+//! written to auto-vectorize: fixed-stride unrolled accumulators, no bounds
+//! checks in the hot loops (slices pre-chunked), f32 storage with f64
+//! accumulation only where numerically required.
+
+/// Row-major dense matrix of f32.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "Mat::from_vec shape mismatch");
+        Mat { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// C = self * other, naive tiled row-major GEMM.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul inner dim");
+        let mut c = Mat::zeros(self.rows, other.cols);
+        // ikj ordering: stream other's rows, accumulate into c's row.
+        for i in 0..self.rows {
+            let a_row = self.row(i);
+            let c_row = &mut c.data[i * other.cols..(i + 1) * other.cols];
+            for (k, &a) in a_row.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let b_row = other.row(k);
+                axpy(a, b_row, c_row);
+            }
+        }
+        c
+    }
+
+    /// self^T as a new matrix.
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        t
+    }
+
+    /// y = self · x  (GEMV).
+    pub fn gemv(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(self.cols, x.len(), "gemv dim");
+        (0..self.rows).map(|i| dot(self.row(i), x)).collect()
+    }
+
+    /// ℓ2-normalize every row in place; zero rows are left untouched.
+    pub fn l2_normalize_rows(&mut self) {
+        let cols = self.cols;
+        for i in 0..self.rows {
+            let r = &mut self.data[i * cols..(i + 1) * cols];
+            let n = nrm2(r);
+            if n > 0.0 {
+                let inv = 1.0 / n;
+                for v in r.iter_mut() {
+                    *v *= inv;
+                }
+            }
+        }
+    }
+}
+
+/// Dot product with 4-lane unrolled accumulation (auto-vectorizes well).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += a[i] * b[i];
+        acc[1] += a[i + 1] * b[i + 1];
+        acc[2] += a[i + 2] * b[i + 2];
+        acc[3] += a[i + 3] * b[i + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// y += alpha * x.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * xi;
+    }
+}
+
+/// x *= alpha.
+#[inline]
+pub fn scal(alpha: f32, x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v *= alpha;
+    }
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn nrm2(x: &[f32]) -> f32 {
+    dot(x, x).sqrt()
+}
+
+/// ℓ2-normalize in place; returns the original norm.
+pub fn normalize(x: &mut [f32]) -> f32 {
+    let n = nrm2(x);
+    if n > 0.0 {
+        scal(1.0 / n, x);
+    }
+    n
+}
+
+/// Cosine of the angle between a and b (0 when either is zero).
+pub fn cosine(a: &[f32], b: &[f32]) -> f32 {
+    let na = nrm2(a);
+    let nb = nrm2(b);
+    if na == 0.0 || nb == 0.0 {
+        0.0
+    } else {
+        (dot(a, b) / (na * nb)).clamp(-1.0, 1.0)
+    }
+}
+
+/// Point-to-hyperplane angle α_{x,w} = |θ − π/2| = asin(|cos θ|)  (eq. 1).
+pub fn point_hyperplane_angle(x: &[f32], w: &[f32]) -> f32 {
+    cosine(x, w).abs().clamp(0.0, 1.0).asin()
+}
+
+/// Paper's "distance" measure D(x, P_w) = α². (Theorem 1's metric.)
+pub fn alpha_sq(x: &[f32], w: &[f32]) -> f32 {
+    let a = point_hyperplane_angle(x, w);
+    a * a
+}
+
+/// |wᵀx| / ‖w‖ — the true point-to-hyperplane margin used for re-ranking.
+pub fn margin(x: &[f32], w: &[f32], w_norm: f32) -> f32 {
+    if w_norm == 0.0 {
+        0.0
+    } else {
+        dot(x, w).abs() / w_norm
+    }
+}
+
+/// Margin for a dense-or-sparse feature reference.
+pub fn margin_feat(x: crate::data::FeatRef<'_>, w: &[f32], w_norm: f32) -> f32 {
+    if w_norm == 0.0 {
+        0.0
+    } else {
+        x.dot(w).abs() / w_norm
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f32, b: f32, tol: f32) -> bool {
+        (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f32> = (0..131).map(|i| (i as f32) * 0.3 - 10.0).collect();
+        let b: Vec<f32> = (0..131).map(|i| (i as f32) * -0.7 + 3.0).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!(close(dot(&a, &b), naive, 1e-5));
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut eye = Mat::zeros(3, 3);
+        for i in 0..3 {
+            eye.set(i, i, 1.0);
+        }
+        let a = Mat::from_vec(3, 3, (0..9).map(|i| i as f32).collect());
+        assert_eq!(a.matmul(&eye), a);
+        assert_eq!(eye.matmul(&a), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let b = Mat::from_vec(3, 2, vec![7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn gemv_matches_matmul() {
+        let a = Mat::from_vec(3, 2, vec![1., 2., 3., 4., 5., 6.]);
+        let x = vec![0.5, -1.5];
+        let y = a.gemv(&x);
+        assert_eq!(y, vec![1. * 0.5 - 2. * 1.5, 3. * 0.5 - 4. * 1.5, 5. * 0.5 - 6. * 1.5]);
+    }
+
+    #[test]
+    fn normalize_unit_norm() {
+        let mut v = vec![3.0, 4.0];
+        let n = normalize(&mut v);
+        assert!(close(n, 5.0, 1e-6));
+        assert!(close(nrm2(&v), 1.0, 1e-6));
+    }
+
+    #[test]
+    fn cosine_bounds_and_symmetry() {
+        let a = vec![1.0, 0.0, 2.0];
+        let b = vec![-1.0, 3.0, 0.5];
+        let c1 = cosine(&a, &b);
+        let c2 = cosine(&b, &a);
+        assert!(close(c1, c2, 1e-6));
+        assert!((-1.0..=1.0).contains(&c1));
+    }
+
+    #[test]
+    fn angle_perpendicular_is_zero() {
+        // x ⟂ w → θ = π/2 → α = 0: the most informative point.
+        let w = vec![1.0, 0.0];
+        let x = vec![0.0, 5.0];
+        assert!(point_hyperplane_angle(&x, &w).abs() < 1e-6);
+    }
+
+    #[test]
+    fn angle_parallel_is_half_pi() {
+        let w = vec![1.0, 0.0];
+        let x = vec![-2.0, 0.0];
+        assert!(close(point_hyperplane_angle(&x, &w), std::f32::consts::FRAC_PI_2, 1e-5));
+    }
+
+    #[test]
+    fn margin_scale_invariant_in_w() {
+        let x = vec![1.0, 2.0, -0.5];
+        let w = vec![0.3, -0.1, 0.8];
+        let m1 = margin(&x, &w, nrm2(&w));
+        let w2: Vec<f32> = w.iter().map(|v| v * 7.0).collect();
+        let m2 = margin(&x, &w2, nrm2(&w2));
+        assert!(close(m1, m2, 1e-5));
+    }
+
+    #[test]
+    fn l2_normalize_rows_handles_zero_rows() {
+        let mut m = Mat::from_vec(2, 2, vec![0., 0., 3., 4.]);
+        m.l2_normalize_rows();
+        assert_eq!(&m.data[0..2], &[0., 0.]);
+        assert!(close(m.get(1, 0), 0.6, 1e-6));
+        assert!(close(m.get(1, 1), 0.8, 1e-6));
+    }
+}

@@ -1,0 +1,225 @@
+//! Evaluation metrics and timing utilities.
+//!
+//! * `average_precision` — the paper's Fig 3(a)/4(a) metric: rank the
+//!   unlabeled pool by the current SVM score and compute AP against the
+//!   binary relevance labels; MAP averages over classes and runs.
+//! * `Stopwatch` / `Histogram` — wall-clock instrumentation for the
+//!   efficiency tables (supplementary Tables 1–3) and the §Perf pass.
+
+use std::time::{Duration, Instant};
+
+/// Average precision of a ranking. `scores` and `relevant` are parallel;
+/// ties are broken by original index (stable), matching a deterministic
+/// sort so results are reproducible.
+pub fn average_precision(scores: &[f32], relevant: &[bool]) -> f64 {
+    assert_eq!(scores.len(), relevant.len());
+    let n_rel = relevant.iter().filter(|&&r| r).count();
+    if n_rel == 0 {
+        return 0.0;
+    }
+    let mut idx: Vec<u32> = (0..scores.len() as u32).collect();
+    idx.sort_by(|&a, &b| {
+        scores[b as usize]
+            .partial_cmp(&scores[a as usize])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let mut hits = 0usize;
+    let mut ap = 0.0f64;
+    for (rank, &i) in idx.iter().enumerate() {
+        if relevant[i as usize] {
+            hits += 1;
+            ap += hits as f64 / (rank + 1) as f64;
+        }
+    }
+    ap / n_rel as f64
+}
+
+/// Precision at k of a ranking.
+pub fn precision_at_k(scores: &[f32], relevant: &[bool], k: usize) -> f64 {
+    let mut idx: Vec<u32> = (0..scores.len() as u32).collect();
+    idx.sort_by(|&a, &b| {
+        scores[b as usize]
+            .partial_cmp(&scores[a as usize])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let k = k.min(idx.len());
+    if k == 0 {
+        return 0.0;
+    }
+    idx[..k].iter().filter(|&&i| relevant[i as usize]).count() as f64 / k as f64
+}
+
+/// Simple named stopwatch accumulating multiple segments.
+#[derive(Debug, Default, Clone)]
+pub struct Stopwatch {
+    total: Duration,
+    count: u64,
+    started: Option<Instant>,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn start(&mut self) {
+        self.started = Some(Instant::now());
+    }
+
+    pub fn stop(&mut self) {
+        if let Some(t0) = self.started.take() {
+            self.total += t0.elapsed();
+            self.count += 1;
+        }
+    }
+
+    /// Time a closure, accumulating.
+    pub fn time<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        self.start();
+        let out = f();
+        self.stop();
+        out
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        self.total.as_secs_f64()
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.total_secs() / self.count as f64
+        }
+    }
+}
+
+/// Fixed-capacity latency reservoir with percentile queries.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    samples: Vec<f64>,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram { samples: Vec::new() }
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.samples.push(v);
+    }
+
+    pub fn record_duration(&mut self, d: Duration) {
+        self.record(d.as_secs_f64());
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Percentile in [0, 100] by nearest-rank on a sorted copy.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((p / 100.0) * (s.len() as f64 - 1.0)).round() as usize;
+        s[rank.min(s.len() - 1)]
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ap_perfect_ranking() {
+        let scores = vec![0.9, 0.8, 0.1, 0.05];
+        let rel = vec![true, true, false, false];
+        assert!((average_precision(&scores, &rel) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ap_worst_ranking() {
+        let scores = vec![0.9, 0.8, 0.1, 0.05];
+        let rel = vec![false, false, true, true];
+        // hits at ranks 3,4: AP = (1/3 + 2/4)/2
+        let expect = (1.0 / 3.0 + 2.0 / 4.0) / 2.0;
+        assert!((average_precision(&scores, &rel) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ap_no_relevant_is_zero() {
+        assert_eq!(average_precision(&[1.0, 2.0], &[false, false]), 0.0);
+    }
+
+    #[test]
+    fn ap_interleaved() {
+        let scores = vec![4.0, 3.0, 2.0, 1.0];
+        let rel = vec![true, false, true, false];
+        let expect = (1.0 / 1.0 + 2.0 / 3.0) / 2.0;
+        assert!((average_precision(&scores, &rel) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn p_at_k() {
+        let scores = vec![4.0, 3.0, 2.0, 1.0];
+        let rel = vec![true, false, true, false];
+        assert_eq!(precision_at_k(&scores, &rel, 1), 1.0);
+        assert_eq!(precision_at_k(&scores, &rel, 2), 0.5);
+        assert_eq!(precision_at_k(&scores, &rel, 4), 0.5);
+    }
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::new();
+        sw.time(|| std::thread::sleep(Duration::from_millis(5)));
+        sw.time(|| std::thread::sleep(Duration::from_millis(5)));
+        assert_eq!(sw.count(), 2);
+        assert!(sw.total_secs() >= 0.009);
+    }
+
+    #[test]
+    fn histogram_percentiles() {
+        let mut h = Histogram::new();
+        for i in 1..=100 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.percentile(0.0), 1.0);
+        assert_eq!(h.percentile(100.0), 100.0);
+        assert!((h.percentile(50.0) - 50.0).abs() <= 1.0);
+        assert!((h.mean() - 50.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,362 @@
+//! Model and index persistence.
+//!
+//! A deployment trains LBH projections once (minutes at paper scale) and
+//! serves them forever; this module gives every trained object a stable
+//! on-disk form. The format is a small hand-rolled binary container
+//! (magic + version + sections), since the vendored registry has no serde:
+//!
+//! ```text
+//! "CHH1" | u32 version | u32 section_count |
+//!   per section: u32 tag | u64 byte_len | payload
+//! ```
+//!
+//! All integers little-endian. f32 payloads are raw LE bytes. Codes are
+//! stored as u64 words. Round-trip property tests live at the bottom.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::hash::codes::CodeArray;
+use crate::hash::{AhHash, BhHash, LbhHash, ProjectionPairs};
+use crate::linalg::Mat;
+
+const MAGIC: &[u8; 4] = b"CHH1";
+const VERSION: u32 = 1;
+
+/// Section tags.
+mod tag {
+    pub const META: u32 = 1; // [kind u32, k u32, dim u32]
+    pub const U_MAT: u32 = 2;
+    pub const V_MAT: u32 = 3;
+    pub const CODES: u32 = 4; // [k u32, n u64, words...]
+}
+
+/// Hash-family kind discriminator for META.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FamilyKind {
+    Bh = 1,
+    Lbh = 2,
+    Ah = 3,
+}
+
+impl FamilyKind {
+    fn from_u32(v: u32) -> Result<Self> {
+        Ok(match v {
+            1 => FamilyKind::Bh,
+            2 => FamilyKind::Lbh,
+            3 => FamilyKind::Ah,
+            other => bail!("unknown family kind {other}"),
+        })
+    }
+}
+
+/// A deserialized bilinear model file.
+#[derive(Debug)]
+pub struct ModelFile {
+    pub kind: FamilyKind,
+    pub pairs: ProjectionPairs,
+}
+
+impl ModelFile {
+    pub fn into_lbh(self) -> Result<LbhHash> {
+        if self.kind != FamilyKind::Lbh {
+            bail!("model file holds {:?}, not LBH", self.kind);
+        }
+        Ok(LbhHash::from_pairs(self.pairs))
+    }
+
+    pub fn into_bh(self) -> Result<BhHash> {
+        if self.kind != FamilyKind::Bh {
+            bail!("model file holds {:?}, not BH", self.kind);
+        }
+        Ok(BhHash::from_pairs(self.pairs))
+    }
+
+    pub fn into_ah(self) -> Result<AhHash> {
+        if self.kind != FamilyKind::Ah {
+            bail!("model file holds {:?}, not AH", self.kind);
+        }
+        Ok(AhHash::from_pairs(self.pairs))
+    }
+}
+
+// ───────────────────────── writer ─────────────────────────
+
+struct SectionWriter {
+    buf: Vec<u8>,
+    sections: u32,
+}
+
+impl SectionWriter {
+    fn new() -> Self {
+        SectionWriter { buf: Vec::new(), sections: 0 }
+    }
+
+    fn section(&mut self, tag: u32, payload: &[u8]) {
+        self.buf.extend_from_slice(&tag.to_le_bytes());
+        self.buf.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        self.buf.extend_from_slice(payload);
+        self.sections += 1;
+    }
+
+    fn finish(self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        f.write_all(MAGIC)?;
+        f.write_all(&VERSION.to_le_bytes())?;
+        f.write_all(&self.sections.to_le_bytes())?;
+        f.write_all(&self.buf)?;
+        Ok(())
+    }
+}
+
+fn mat_payload(m: &Mat) -> Vec<u8> {
+    let mut p = Vec::with_capacity(16 + m.data.len() * 4);
+    p.extend_from_slice(&(m.rows as u64).to_le_bytes());
+    p.extend_from_slice(&(m.cols as u64).to_le_bytes());
+    for v in &m.data {
+        p.extend_from_slice(&v.to_le_bytes());
+    }
+    p
+}
+
+/// Save a bilinear family (BH / LBH / AH share the parameterization).
+pub fn save_model(path: &Path, kind: FamilyKind, pairs: &ProjectionPairs) -> Result<()> {
+    let mut w = SectionWriter::new();
+    let mut meta = Vec::new();
+    meta.extend_from_slice(&(kind as u32).to_le_bytes());
+    meta.extend_from_slice(&(pairs.k() as u32).to_le_bytes());
+    meta.extend_from_slice(&(pairs.dim() as u32).to_le_bytes());
+    w.section(tag::META, &meta);
+    w.section(tag::U_MAT, &mat_payload(&pairs.u));
+    w.section(tag::V_MAT, &mat_payload(&pairs.v));
+    w.finish(path)
+}
+
+/// Save a code array (the preprocessed database codes).
+pub fn save_codes(path: &Path, codes: &CodeArray) -> Result<()> {
+    let mut w = SectionWriter::new();
+    let mut p = Vec::with_capacity(12 + codes.codes.len() * 8);
+    p.extend_from_slice(&(codes.k as u32).to_le_bytes());
+    p.extend_from_slice(&(codes.codes.len() as u64).to_le_bytes());
+    for &c in &codes.codes {
+        p.extend_from_slice(&c.to_le_bytes());
+    }
+    w.section(tag::CODES, &p);
+    w.finish(path)
+}
+
+// ───────────────────────── reader ─────────────────────────
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.b.len() {
+            bail!("truncated file at byte {}", self.pos);
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+fn read_sections(data: &[u8]) -> Result<Vec<(u32, &[u8])>> {
+    let mut c = Cursor { b: data, pos: 0 };
+    if c.take(4)? != MAGIC {
+        bail!("bad magic — not a chh file");
+    }
+    let version = c.u32()?;
+    if version != VERSION {
+        bail!("unsupported version {version}");
+    }
+    let count = c.u32()?;
+    let mut out = Vec::with_capacity(count as usize);
+    for _ in 0..count {
+        let tag = c.u32()?;
+        let len = c.u64()? as usize;
+        out.push((tag, c.take(len)?));
+    }
+    Ok(out)
+}
+
+fn parse_mat(payload: &[u8]) -> Result<Mat> {
+    let mut c = Cursor { b: payload, pos: 0 };
+    let rows = c.u64()? as usize;
+    let cols = c.u64()? as usize;
+    let need = rows
+        .checked_mul(cols)
+        .and_then(|n| n.checked_mul(4))
+        .ok_or_else(|| anyhow!("matrix size overflow"))?;
+    let raw = c.take(need)?;
+    let data: Vec<f32> = raw
+        .chunks_exact(4)
+        .map(|ch| f32::from_le_bytes(ch.try_into().unwrap()))
+        .collect();
+    Ok(Mat::from_vec(rows, cols, data))
+}
+
+/// Load a bilinear model file.
+pub fn load_model(path: &Path) -> Result<ModelFile> {
+    let mut data = Vec::new();
+    std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?
+        .read_to_end(&mut data)?;
+    let sections = read_sections(&data)?;
+    let mut kind = None;
+    let mut u = None;
+    let mut v = None;
+    for (t, payload) in sections {
+        match t {
+            tag::META => {
+                let mut c = Cursor { b: payload, pos: 0 };
+                kind = Some(FamilyKind::from_u32(c.u32()?)?);
+                let _k = c.u32()?;
+                let _dim = c.u32()?;
+            }
+            tag::U_MAT => u = Some(parse_mat(payload)?),
+            tag::V_MAT => v = Some(parse_mat(payload)?),
+            _ => {} // forward compat: unknown sections skipped
+        }
+    }
+    let kind = kind.ok_or_else(|| anyhow!("missing META section"))?;
+    let u = u.ok_or_else(|| anyhow!("missing U section"))?;
+    let v = v.ok_or_else(|| anyhow!("missing V section"))?;
+    if u.rows != v.rows || u.cols != v.cols {
+        bail!("U/V shape mismatch");
+    }
+    Ok(ModelFile { kind, pairs: ProjectionPairs { u, v } })
+}
+
+/// Load a code array file.
+pub fn load_codes(path: &Path) -> Result<CodeArray> {
+    let mut data = Vec::new();
+    std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?
+        .read_to_end(&mut data)?;
+    let sections = read_sections(&data)?;
+    for (t, payload) in sections {
+        if t == tag::CODES {
+            let mut c = Cursor { b: payload, pos: 0 };
+            let k = c.u32()? as usize;
+            let n = c.u64()? as usize;
+            let raw = c.take(n * 8)?;
+            let mut arr = CodeArray::with_capacity(k, n);
+            for ch in raw.chunks_exact(8) {
+                arr.push(u64::from_le_bytes(ch.try_into().unwrap()));
+            }
+            return Ok(arr);
+        }
+    }
+    bail!("no CODES section in {}", path.display())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::testing::forall;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("chh_persist_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn model_roundtrip_exact() {
+        forall("model save/load roundtrip", 12, |rng| {
+            let k = rng.range(1, 33);
+            let d = rng.range(2, 128);
+            let pairs = ProjectionPairs::sample(d, k, rng);
+            let path = tmp("model");
+            save_model(&path, FamilyKind::Lbh, &pairs).map_err(|e| e.to_string())?;
+            let back = load_model(&path).map_err(|e| e.to_string())?;
+            let _ = std::fs::remove_file(&path);
+            crate::prop_assert!(back.kind == FamilyKind::Lbh, "kind");
+            crate::prop_assert!(back.pairs.u == pairs.u, "u matrix");
+            crate::prop_assert!(back.pairs.v == pairs.v, "v matrix");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn codes_roundtrip_exact() {
+        forall("codes save/load roundtrip", 12, |rng| {
+            let k = rng.range(1, 65);
+            let n = rng.range(0, 500);
+            let mut codes = CodeArray::new(k);
+            for _ in 0..n {
+                codes.push(rng.next_u64() & crate::hash::codes::mask(k));
+            }
+            let path = tmp("codes");
+            save_codes(&path, &codes).map_err(|e| e.to_string())?;
+            let back = load_codes(&path).map_err(|e| e.to_string())?;
+            let _ = std::fs::remove_file(&path);
+            crate::prop_assert!(back.k == k, "k");
+            crate::prop_assert!(back.codes == codes.codes, "codes");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn loaded_model_encodes_identically() {
+        let mut rng = Rng::seed_from_u64(5);
+        let bh = BhHash::sample(32, 12, &mut rng);
+        let path = tmp("encode");
+        save_model(&path, FamilyKind::Bh, &bh.pairs).unwrap();
+        let back = load_model(&path).unwrap().into_bh().unwrap();
+        let _ = std::fs::remove_file(&path);
+        use crate::hash::HashFamily;
+        for _ in 0..50 {
+            let x = rng.gauss_vec(32);
+            let r = crate::data::FeatRef::Dense(&x);
+            assert_eq!(bh.encode_point(r), back.encode_point(r));
+        }
+    }
+
+    #[test]
+    fn kind_mismatch_rejected() {
+        let mut rng = Rng::seed_from_u64(6);
+        let pairs = ProjectionPairs::sample(8, 4, &mut rng);
+        let path = tmp("kind");
+        save_model(&path, FamilyKind::Bh, &pairs).unwrap();
+        let m = load_model(&path).unwrap();
+        assert!(m.into_lbh().is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn garbage_rejected() {
+        let path = tmp("garbage");
+        std::fs::write(&path, b"not a chh file at all").unwrap();
+        assert!(load_model(&path).is_err());
+        assert!(load_codes(&path).is_err());
+        std::fs::write(&path, b"CH").unwrap();
+        assert!(load_model(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn truncated_rejected() {
+        let mut rng = Rng::seed_from_u64(7);
+        let pairs = ProjectionPairs::sample(16, 8, &mut rng);
+        let path = tmp("trunc");
+        save_model(&path, FamilyKind::Bh, &pairs).unwrap();
+        let data = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &data[..data.len() / 2]).unwrap();
+        assert!(load_model(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,179 @@
+//! Result emission: CSV files under `results/`, paper-style console tables,
+//! and ASCII line plots for the figure benchmarks so curve *shapes* can be
+//! eyeballed straight from `cargo bench` output.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+/// Directory results are written to (created on demand).
+pub fn results_dir() -> PathBuf {
+    let dir = std::env::var("CHH_RESULTS_DIR").unwrap_or_else(|_| "results".to_string());
+    PathBuf::from(dir)
+}
+
+/// Write a CSV file: header row + data rows. Returns the path written.
+pub fn write_csv(name: &str, header: &[&str], rows: &[Vec<String>]) -> anyhow::Result<PathBuf> {
+    let dir = results_dir();
+    fs::create_dir_all(&dir)?;
+    let path = dir.join(name);
+    let mut f = fs::File::create(&path)?;
+    writeln!(f, "{}", header.join(","))?;
+    for row in rows {
+        writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(path)
+}
+
+/// A named series of (x, y) points.
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: &str) -> Self {
+        Series { name: name.to_string(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+}
+
+/// Render multiple series as an ASCII plot (x binned to `width` columns).
+pub fn ascii_plot(title: &str, series: &[Series], width: usize, height: usize) -> String {
+    let mut out = format!("── {title} ──\n");
+    let pts: Vec<&(f64, f64)> = series.iter().flat_map(|s| s.points.iter()).collect();
+    if pts.is_empty() {
+        out.push_str("(no data)\n");
+        return out;
+    }
+    let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &&(x, y) in &pts {
+        x0 = x0.min(x);
+        x1 = x1.max(x);
+        y0 = y0.min(y);
+        y1 = y1.max(y);
+    }
+    if (x1 - x0).abs() < 1e-300 {
+        x1 = x0 + 1.0;
+    }
+    if (y1 - y0).abs() < 1e-300 {
+        y1 = y0 + 1.0;
+    }
+    let marks = ['*', 'o', '+', 'x', '#', '@', '%', '&'];
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, s) in series.iter().enumerate() {
+        let m = marks[si % marks.len()];
+        for &(x, y) in &s.points {
+            let cx = (((x - x0) / (x1 - x0)) * (width as f64 - 1.0)).round() as usize;
+            let cy = (((y - y0) / (y1 - y0)) * (height as f64 - 1.0)).round() as usize;
+            let row = height - 1 - cy.min(height - 1);
+            grid[row][cx.min(width - 1)] = m;
+        }
+    }
+    for (i, row) in grid.iter().enumerate() {
+        let label = if i == 0 {
+            format!("{y1:>10.4} ")
+        } else if i == height - 1 {
+            format!("{y0:>10.4} ")
+        } else {
+            " ".repeat(11)
+        };
+        out.push_str(&label);
+        out.push('|');
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&" ".repeat(11));
+    out.push('+');
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    out.push_str(&format!("{:>12}{:>width$.4}\n", format!("{x0:.4}"), x1, width = width - 1));
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!("  {} {}\n", marks[si % marks.len()], s.name));
+    }
+    out
+}
+
+/// Print a fixed-width table with a title.
+pub fn print_rows(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n── {title} ──");
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let fmt_row = |cells: &[String]| -> String {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:<w$}", c, w = widths.get(i).copied().unwrap_or(8) + 2))
+            .collect::<String>()
+    };
+    println!("{}", fmt_row(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>()));
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+/// Save experiment record as JSON under results/.
+pub fn write_json(name: &str, value: &crate::jsonio::Json) -> anyhow::Result<PathBuf> {
+    let dir = results_dir();
+    fs::create_dir_all(&dir)?;
+    let path = dir.join(name);
+    fs::write(&path, value.to_string_pretty())?;
+    Ok(path)
+}
+
+/// Read back a results JSON (used by report aggregation and tests).
+pub fn read_json(path: &Path) -> anyhow::Result<crate::jsonio::Json> {
+    let text = fs::read_to_string(path)?;
+    Ok(crate::jsonio::Json::parse(&text)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ascii_plot_contains_series_marks() {
+        let mut s1 = Series::new("a");
+        let mut s2 = Series::new("b");
+        for i in 0..20 {
+            s1.push(i as f64, (i as f64).sin());
+            s2.push(i as f64, (i as f64).cos());
+        }
+        let plot = ascii_plot("t", &[s1, s2], 40, 10);
+        assert!(plot.contains('*'));
+        assert!(plot.contains('o'));
+        assert!(plot.contains("a\n") && plot.contains("b\n"));
+    }
+
+    #[test]
+    fn ascii_plot_empty() {
+        let plot = ascii_plot("t", &[], 10, 5);
+        assert!(plot.contains("no data"));
+    }
+
+    #[test]
+    fn csv_and_json_roundtrip() {
+        let tmp = std::env::temp_dir().join(format!("chh_report_test_{}", std::process::id()));
+        std::env::set_var("CHH_RESULTS_DIR", &tmp);
+        let p = write_csv("t.csv", &["a", "b"], &[vec!["1".into(), "2".into()]]).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text, "a,b\n1,2\n");
+        let j = crate::jsonio::obj(vec![("x", crate::jsonio::Json::from(3usize))]);
+        let p = write_json("t.json", &j).unwrap();
+        let back = read_json(&p).unwrap();
+        assert_eq!(back.get("x").unwrap().as_usize(), Some(3));
+        std::env::remove_var("CHH_RESULTS_DIR");
+        let _ = std::fs::remove_dir_all(&tmp);
+    }
+}

@@ -1,0 +1,483 @@
+//! PJRT runtime: load and execute the AOT-compiled XLA artifacts.
+//!
+//! `make artifacts` runs `python/compile/aot.py` once, lowering the L2 JAX
+//! graphs (which embed the L1 Pallas kernels) to **HLO text** under
+//! `artifacts/` with a `manifest.json` describing shapes. This module is
+//! the only place the `xla` crate is touched: it loads the text, compiles
+//! each module once on the PJRT CPU client, caches the executable, and
+//! exposes typed f32 entry points. Python never runs at query time.
+//!
+//! Every artifact entry point has a native-Rust fallback so the crate is
+//! fully functional without `artifacts/` (tests assert parity between the
+//! two paths).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::jsonio::Json;
+use crate::linalg::Mat;
+
+/// Shape+dtype signature of one artifact input/output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    fn from_json(j: &Json) -> Result<Self> {
+        let shape = j
+            .get("shape")
+            .and_then(|s| s.as_arr())
+            .ok_or_else(|| anyhow!("spec missing shape"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = j
+            .get("dtype")
+            .and_then(|d| d.as_str())
+            .unwrap_or("f32")
+            .to_string();
+        Ok(TensorSpec { shape, dtype })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Manifest entry for one artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Artifact registry + compile cache.
+pub struct Runtime {
+    dir: PathBuf,
+    client: xla::PjRtClient,
+    meta: HashMap<String, ArtifactMeta>,
+    compiled: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Default artifacts directory (env override: `CHH_ARTIFACTS_DIR`).
+    pub fn default_dir() -> PathBuf {
+        std::env::var("CHH_ARTIFACTS_DIR")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Open the registry. Fails if PJRT cannot start; missing manifest is
+    /// fine (empty registry — native fallbacks everywhere).
+    pub fn open(dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let mut meta = HashMap::new();
+        let manifest = dir.join("manifest.json");
+        if manifest.exists() {
+            let text = std::fs::read_to_string(&manifest)
+                .with_context(|| format!("reading {}", manifest.display()))?;
+            let json = Json::parse(&text).context("parsing manifest.json")?;
+            let arts = json
+                .get("artifacts")
+                .and_then(|a| a.as_obj())
+                .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?;
+            for (name, entry) in arts {
+                let file = dir.join(
+                    entry
+                        .get("file")
+                        .and_then(|f| f.as_str())
+                        .ok_or_else(|| anyhow!("artifact {name} missing file"))?,
+                );
+                let inputs = entry
+                    .get("inputs")
+                    .and_then(|i| i.as_arr())
+                    .ok_or_else(|| anyhow!("artifact {name} missing inputs"))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<Vec<_>>>()?;
+                let outputs = entry
+                    .get("outputs")
+                    .and_then(|o| o.as_arr())
+                    .ok_or_else(|| anyhow!("artifact {name} missing outputs"))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<Vec<_>>>()?;
+                meta.insert(
+                    name.clone(),
+                    ArtifactMeta { name: name.clone(), file, inputs, outputs },
+                );
+            }
+        }
+        Ok(Runtime { dir: dir.to_path_buf(), client, meta, compiled: Mutex::new(HashMap::new()) })
+    }
+
+    /// Open with the default directory.
+    pub fn open_default() -> Result<Self> {
+        Self::open(&Self::default_dir())
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.meta.contains_key(name)
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.meta.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.meta.get(name)
+    }
+
+    /// Compile (once) and return the cached executable.
+    fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.compiled.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let meta = self
+            .meta
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?;
+        let path = meta
+            .file
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
+        // HLO *text* interchange: the xla_extension 0.5.1 proto parser
+        // rejects jax≥0.5 64-bit instruction ids; the text parser reassigns
+        // them (see /opt/xla-example/README.md).
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("loading {path}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        let exe = std::sync::Arc::new(exe);
+        self.compiled.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact on f32 buffers. Inputs are validated against the
+    /// manifest; outputs are returned as flat f32 vectors in manifest order
+    /// (artifacts are lowered with `return_tuple=True`).
+    pub fn run_f32(&self, name: &str, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let meta = self
+            .meta
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?
+            .clone();
+        if inputs.len() != meta.inputs.len() {
+            return Err(anyhow!(
+                "artifact {name}: {} inputs given, manifest wants {}",
+                inputs.len(),
+                meta.inputs.len()
+            ));
+        }
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (idx, ((data, shape), spec)) in inputs.iter().zip(meta.inputs.iter()).enumerate() {
+            if *shape != spec.shape.as_slice() {
+                return Err(anyhow!(
+                    "artifact {name} input {idx}: shape {shape:?} != manifest {:?}",
+                    spec.shape
+                ));
+            }
+            if data.len() != spec.numel() {
+                return Err(anyhow!(
+                    "artifact {name} input {idx}: {} elements != {}",
+                    data.len(),
+                    spec.numel()
+                ));
+            }
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape input {idx}: {e:?}"))?;
+            lits.push(lit);
+        }
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let parts = lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        if parts.len() != meta.outputs.len() {
+            return Err(anyhow!(
+                "artifact {name}: {} outputs, manifest wants {}",
+                parts.len(),
+                meta.outputs.len()
+            ));
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (p, spec) in parts.iter().zip(meta.outputs.iter()) {
+            let v = p.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+            if v.len() != spec.numel() {
+                return Err(anyhow!(
+                    "artifact {name}: output has {} elements, manifest says {}",
+                    v.len(),
+                    spec.numel()
+                ));
+            }
+            out.push(v);
+        }
+        Ok(out)
+    }
+}
+
+// ───────────────────── batch encoding through artifacts ─────────────────────
+
+/// Tile-batched bilinear encoder backed by the `encode_bh_<profile>`
+/// artifact: streams the database through fixed-shape (Tn, d) tiles and
+/// packs the sign of the returned pre-sign scores into codes. Produces
+/// *identical* codes to [`crate::hash::HashFamily::encode_all`] on the same
+/// projections (parity-tested in `rust/tests/`).
+pub struct BatchEncoder<'r> {
+    rt: &'r Runtime,
+    artifact: String,
+    tile_n: usize,
+    dim: usize,
+    k: usize,
+}
+
+impl<'r> BatchEncoder<'r> {
+    /// Look up the artifact named `encode_bh_<profile>` and read its tile
+    /// geometry from the manifest: inputs are X:(Tn,d), U:(d,k), V:(d,k).
+    pub fn bilinear(rt: &'r Runtime, profile: &str) -> Result<Self> {
+        let name = format!("encode_bh_{profile}");
+        let meta = rt
+            .meta(&name)
+            .ok_or_else(|| anyhow!("artifact {name} missing — run `make artifacts`"))?;
+        if meta.inputs.len() != 3 || meta.inputs[0].shape.len() != 2 {
+            return Err(anyhow!("artifact {name} has unexpected signature"));
+        }
+        let tile_n = meta.inputs[0].shape[0];
+        let dim = meta.inputs[0].shape[1];
+        let k = meta.inputs[1].shape[1];
+        Ok(BatchEncoder { rt, artifact: name, tile_n, dim, k })
+    }
+
+    pub fn tile_n(&self) -> usize {
+        self.tile_n
+    }
+
+    pub fn bits(&self) -> usize {
+        self.k
+    }
+
+    /// Encode all rows of `feats` with projection pairs (u, v) — rows of
+    /// `pairs.u`/`pairs.v` are the k projections; the artifact wants them
+    /// transposed to (d, k) column-major-by-bit.
+    pub fn encode_all(
+        &self,
+        feats: &crate::data::FeatureStore,
+        pairs: &crate::hash::ProjectionPairs,
+    ) -> Result<crate::hash::codes::CodeArray> {
+        if pairs.dim() != self.dim || pairs.k() != self.k {
+            return Err(anyhow!(
+                "projection shape ({}, {}) != artifact ({}, {})",
+                pairs.k(),
+                pairs.dim(),
+                self.k,
+                self.dim
+            ));
+        }
+        if feats.dim() != self.dim {
+            return Err(anyhow!("feature dim {} != artifact dim {}", feats.dim(), self.dim));
+        }
+        let ut = pairs.u.transpose(); // (d, k)
+        let vt = pairs.v.transpose();
+        let mut codes = crate::hash::codes::CodeArray::with_capacity(self.k, feats.len());
+        let n = feats.len();
+        let mut row0 = 0usize;
+        while row0 < n {
+            let tile: Mat = feats.dense_block(row0, self.tile_n);
+            let out = self.rt.run_f32(
+                &self.artifact,
+                &[
+                    (&tile.data, &[self.tile_n, self.dim]),
+                    (&ut.data, &[self.dim, self.k]),
+                    (&vt.data, &[self.dim, self.k]),
+                ],
+            )?;
+            let scores = &out[0]; // (Tn, k) pre-sign scores
+            let valid = (n - row0).min(self.tile_n);
+            for r in 0..valid {
+                codes.push(crate::hash::codes::pack_signs(&scores[r * self.k..(r + 1) * self.k]));
+            }
+            row0 += self.tile_n;
+        }
+        Ok(codes)
+    }
+}
+
+/// Margin scanner backed by the `margin_scan_<profile>` artifact:
+/// |X·w| over fixed tiles — the exhaustive baseline's hot loop on PJRT.
+pub struct MarginScanner<'r> {
+    rt: &'r Runtime,
+    artifact: String,
+    tile_n: usize,
+    dim: usize,
+}
+
+impl<'r> MarginScanner<'r> {
+    pub fn open(rt: &'r Runtime, profile: &str) -> Result<Self> {
+        let name = format!("margin_scan_{profile}");
+        let meta = rt
+            .meta(&name)
+            .ok_or_else(|| anyhow!("artifact {name} missing — run `make artifacts`"))?;
+        let tile_n = meta.inputs[0].shape[0];
+        let dim = meta.inputs[0].shape[1];
+        Ok(MarginScanner { rt, artifact: name, tile_n, dim })
+    }
+
+    /// |wᵀx| for every row (w is NOT normalized here; divide by ‖w‖ for
+    /// true margins — ranking is unaffected).
+    pub fn scan(&self, feats: &crate::data::FeatureStore, w: &[f32]) -> Result<Vec<f32>> {
+        if w.len() != self.dim {
+            return Err(anyhow!("w dim {} != artifact dim {}", w.len(), self.dim));
+        }
+        let n = feats.len();
+        let mut out = Vec::with_capacity(n);
+        let mut row0 = 0usize;
+        while row0 < n {
+            let tile = feats.dense_block(row0, self.tile_n);
+            let res = self.rt.run_f32(
+                &self.artifact,
+                &[(&tile.data, &[self.tile_n, self.dim]), (w, &[self.dim])],
+            )?;
+            let valid = (n - row0).min(self.tile_n);
+            out.extend_from_slice(&res[0][..valid]);
+            row0 += self.tile_n;
+        }
+        Ok(out)
+    }
+}
+
+/// Driver for the `lbh_step_<profile>` artifact: one fused Nesterov step
+/// of the §4 per-bit solve executed on PJRT. The trainer pads the sample
+/// matrix and residue to the artifact's fixed m (zero rows are
+/// gradient-neutral — property-tested in python/tests/test_model.py).
+pub struct LbhStepper<'r> {
+    rt: &'r Runtime,
+    artifact: String,
+    /// artifact-fixed training-sample count
+    pub m: usize,
+    /// feature dimension
+    pub dim: usize,
+}
+
+impl<'r> LbhStepper<'r> {
+    pub fn open(rt: &'r Runtime, profile: &str) -> Result<Self> {
+        let name = format!("lbh_step_{profile}");
+        let meta = rt
+            .meta(&name)
+            .ok_or_else(|| anyhow!("artifact {name} missing — run `make artifacts`"))?;
+        let m = meta.inputs[0].shape[0];
+        let dim = meta.inputs[0].shape[1];
+        Ok(LbhStepper { rt, artifact: name, m, dim })
+    }
+
+    /// Execute one step. `xm` is (m, d) and `r` is (m, m) — exactly the
+    /// artifact shapes (pad before calling). Returns (u_new, v_new, cost).
+    #[allow(clippy::too_many_arguments)]
+    pub fn step(
+        &self,
+        xm: &Mat,
+        r: &Mat,
+        u: &[f32],
+        v: &[f32],
+        u_prev: &[f32],
+        v_prev: &[f32],
+        lr: f32,
+        mu: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, f32)> {
+        if xm.rows != self.m || xm.cols != self.dim {
+            return Err(anyhow!(
+                "xm is {}x{}, artifact wants {}x{}",
+                xm.rows,
+                xm.cols,
+                self.m,
+                self.dim
+            ));
+        }
+        let out = self.rt.run_f32(
+            &self.artifact,
+            &[
+                (&xm.data, &[self.m, self.dim]),
+                (&r.data, &[self.m, self.m]),
+                (u, &[self.dim]),
+                (v, &[self.dim]),
+                (u_prev, &[self.dim]),
+                (v_prev, &[self.dim]),
+                (&[lr], &[1]),
+                (&[mu], &[1]),
+            ],
+        )?;
+        let cost = out[2][0];
+        let mut it = out.into_iter();
+        let u_new = it.next().unwrap();
+        let v_new = it.next().unwrap();
+        Ok((u_new, v_new, cost))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_spec_from_json() {
+        let j = Json::parse(r#"{"shape": [4, 8], "dtype": "f32"}"#).unwrap();
+        let s = TensorSpec::from_json(&j).unwrap();
+        assert_eq!(s.shape, vec![4, 8]);
+        assert_eq!(s.numel(), 32);
+        assert_eq!(s.dtype, "f32");
+    }
+
+    #[test]
+    fn open_missing_manifest_is_empty() {
+        let dir = std::env::temp_dir().join(format!("chh_rt_empty_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let rt = Runtime::open(&dir).unwrap();
+        assert!(rt.names().is_empty());
+        assert!(!rt.has("encode_bh_test"));
+        assert!(rt.run_f32("nope", &[]).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn manifest_parse_and_validation_errors() {
+        let dir = std::env::temp_dir().join(format!("chh_rt_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"artifacts": {"toy": {"file": "toy.hlo.txt",
+                "inputs": [{"shape": [2, 2], "dtype": "f32"}],
+                "outputs": [{"shape": [2, 2], "dtype": "f32"}]}}}"#,
+        )
+        .unwrap();
+        let rt = Runtime::open(&dir).unwrap();
+        assert!(rt.has("toy"));
+        let m = rt.meta("toy").unwrap();
+        assert_eq!(m.inputs[0].shape, vec![2, 2]);
+        // wrong arity
+        assert!(rt.run_f32("toy", &[]).is_err());
+        // wrong shape
+        let d = [0f32; 4];
+        assert!(rt.run_f32("toy", &[(&d, &[4usize] as &[usize])]).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,259 @@
+//! CSR sparse matrices for the text-corpus (tf-idf) feature store.
+//!
+//! 20-Newsgroups-style documents are extremely sparse (a few hundred
+//! non-zeros out of tens of thousands of dimensions); the SVM solver, the
+//! margin scans, and the hash encoders all consume rows through this module
+//! so the AL loop never materializes dense document vectors except inside
+//! fixed-shape PJRT tiles.
+
+use crate::linalg::Mat;
+
+/// Compressed sparse row matrix, f32 values, u32 column indices.
+#[derive(Clone, Debug, Default)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    pub indptr: Vec<usize>,
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+/// A single sparse row view.
+#[derive(Clone, Copy, Debug)]
+pub struct SparseRow<'a> {
+    pub indices: &'a [u32],
+    pub values: &'a [f32],
+}
+
+impl<'a> SparseRow<'a> {
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Dot with a dense vector.
+    #[inline]
+    pub fn dot_dense(&self, w: &[f32]) -> f32 {
+        let mut s = 0.0f32;
+        for (&j, &v) in self.indices.iter().zip(self.values.iter()) {
+            s += v * w[j as usize];
+        }
+        s
+    }
+
+    /// w += alpha * row (scatter-axpy).
+    #[inline]
+    pub fn axpy_into(&self, alpha: f32, w: &mut [f32]) {
+        for (&j, &v) in self.indices.iter().zip(self.values.iter()) {
+            w[j as usize] += alpha * v;
+        }
+    }
+
+    #[inline]
+    pub fn sq_norm(&self) -> f32 {
+        self.values.iter().map(|v| v * v).sum()
+    }
+
+    /// Scatter into a dense buffer (buffer is NOT cleared first).
+    pub fn scatter_into(&self, out: &mut [f32]) {
+        for (&j, &v) in self.indices.iter().zip(self.values.iter()) {
+            out[j as usize] = v;
+        }
+    }
+}
+
+/// Incremental CSR builder.
+#[derive(Default)]
+pub struct CsrBuilder {
+    cols: usize,
+    indptr: Vec<usize>,
+    indices: Vec<u32>,
+    values: Vec<f32>,
+}
+
+impl CsrBuilder {
+    pub fn new(cols: usize) -> Self {
+        CsrBuilder { cols, indptr: vec![0], indices: Vec::new(), values: Vec::new() }
+    }
+
+    /// Push a row given (col, value) pairs; pairs need not be sorted and
+    /// duplicate columns are summed.
+    pub fn push_row(&mut self, entries: &mut Vec<(u32, f32)>) {
+        entries.sort_unstable_by_key(|e| e.0);
+        let mut i = 0;
+        while i < entries.len() {
+            let col = entries[i].0;
+            debug_assert!((col as usize) < self.cols, "column out of range");
+            let mut v = entries[i].1;
+            let mut j = i + 1;
+            while j < entries.len() && entries[j].0 == col {
+                v += entries[j].1;
+                j += 1;
+            }
+            if v != 0.0 {
+                self.indices.push(col);
+                self.values.push(v);
+            }
+            i = j;
+        }
+        self.indptr.push(self.indices.len());
+    }
+
+    pub fn finish(self) -> Csr {
+        Csr {
+            rows: self.indptr.len() - 1,
+            cols: self.cols,
+            indptr: self.indptr,
+            indices: self.indices,
+            values: self.values,
+        }
+    }
+}
+
+impl Csr {
+    #[inline]
+    pub fn row(&self, i: usize) -> SparseRow<'_> {
+        let (a, b) = (self.indptr[i], self.indptr[i + 1]);
+        SparseRow { indices: &self.indices[a..b], values: &self.values[a..b] }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// ℓ2-normalize each row in place.
+    pub fn l2_normalize_rows(&mut self) {
+        for i in 0..self.rows {
+            let (a, b) = (self.indptr[i], self.indptr[i + 1]);
+            let n: f32 = self.values[a..b].iter().map(|v| v * v).sum::<f32>().sqrt();
+            if n > 0.0 {
+                let inv = 1.0 / n;
+                for v in &mut self.values[a..b] {
+                    *v *= inv;
+                }
+            }
+        }
+    }
+
+    /// Apply idf weights column-wise: v_ij *= idf[j].
+    pub fn scale_columns(&mut self, scale: &[f32]) {
+        assert_eq!(scale.len(), self.cols);
+        for (idx, v) in self.indices.iter().zip(self.values.iter_mut()) {
+            *v *= scale[*idx as usize];
+        }
+    }
+
+    /// Document frequency per column (number of rows with a non-zero).
+    pub fn column_doc_freq(&self) -> Vec<u32> {
+        let mut df = vec![0u32; self.cols];
+        for &j in &self.indices {
+            df[j as usize] += 1;
+        }
+        df
+    }
+
+    /// Densify a contiguous row block [row0, row0+n) into a `Mat`
+    /// (rows past the end are zero-padded) — PJRT tile staging.
+    pub fn dense_block(&self, row0: usize, n: usize) -> Mat {
+        let mut m = Mat::zeros(n, self.cols);
+        for r in 0..n {
+            let i = row0 + r;
+            if i >= self.rows {
+                break;
+            }
+            self.row(i).scatter_into(m.row_mut(r));
+        }
+        m
+    }
+
+    /// Full densification (tests / small data only).
+    pub fn to_dense(&self) -> Mat {
+        self.dense_block(0, self.rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Csr {
+        let mut b = CsrBuilder::new(5);
+        b.push_row(&mut vec![(0, 1.0), (3, 2.0)]);
+        b.push_row(&mut vec![(4, -1.0)]);
+        b.push_row(&mut vec![]);
+        b.push_row(&mut vec![(1, 0.5), (1, 0.5), (2, 3.0)]); // dup col summed
+        b.finish()
+    }
+
+    #[test]
+    fn builder_shapes() {
+        let m = sample();
+        assert_eq!(m.rows, 4);
+        assert_eq!(m.cols, 5);
+        assert_eq!(m.nnz(), 5);
+        assert_eq!(m.row(3).values, &[1.0, 3.0]);
+    }
+
+    #[test]
+    fn dup_columns_summed_and_sorted() {
+        let m = sample();
+        assert_eq!(m.row(3).indices, &[1, 2]);
+    }
+
+    #[test]
+    fn zero_rows_ok() {
+        let m = sample();
+        assert_eq!(m.row(2).nnz(), 0);
+        assert_eq!(m.row(2).dot_dense(&[1.; 5]), 0.0);
+    }
+
+    #[test]
+    fn dot_and_axpy_match_dense() {
+        let m = sample();
+        let w = vec![0.1, 0.2, 0.3, 0.4, 0.5];
+        let d = m.to_dense();
+        for i in 0..m.rows {
+            let sd = m.row(i).dot_dense(&w);
+            let dd = crate::linalg::dot(d.row(i), &w);
+            assert!((sd - dd).abs() < 1e-6);
+        }
+        let mut acc_s = vec![0.0f32; 5];
+        let mut acc_d = vec![0.0f32; 5];
+        m.row(0).axpy_into(2.0, &mut acc_s);
+        crate::linalg::axpy(2.0, d.row(0), &mut acc_d);
+        assert_eq!(acc_s, acc_d);
+    }
+
+    #[test]
+    fn normalize_rows_unit() {
+        let mut m = sample();
+        m.l2_normalize_rows();
+        for i in [0usize, 1, 3] {
+            let n = m.row(i).sq_norm().sqrt();
+            assert!((n - 1.0).abs() < 1e-6, "row {i} norm {n}");
+        }
+    }
+
+    #[test]
+    fn doc_freq_counts() {
+        let m = sample();
+        assert_eq!(m.column_doc_freq(), vec![1, 1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn dense_block_padding() {
+        let m = sample();
+        let blk = m.dense_block(3, 3);
+        assert_eq!(blk.rows, 3);
+        assert_eq!(blk.get(0, 2), 3.0);
+        assert!(blk.row(1).iter().all(|&v| v == 0.0));
+        assert!(blk.row(2).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn scale_columns_idf() {
+        let mut m = sample();
+        m.scale_columns(&[2.0, 2.0, 2.0, 2.0, 2.0]);
+        assert_eq!(m.row(0).values, &[2.0, 4.0]);
+    }
+}

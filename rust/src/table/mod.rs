@@ -1,0 +1,468 @@
+//! Hash-table search structures.
+//!
+//! * [`HyperplaneIndex`] — the paper's §4 compact protocol: ONE table over
+//!   k-bit codes; a query encodes the hyperplane normal, flips per family
+//!   rules (done inside `HashFamily::encode_query`), enumerates the Hamming
+//!   ball of radius r around the lookup code, and re-ranks the bucket
+//!   candidates by true margin `|wᵀx|/‖w‖`.
+//! * [`LshIndex`] — the randomized multi-table mode of Theorem 2
+//!   (`n^ρ` tables, exact-bucket probes), kept as the theory-faithful
+//!   baseline the compact scheme is measured against.
+
+use crate::data::FeatureStore;
+use crate::hash::codes::{ball_volume, CodeArray, HammingBall};
+use crate::hash::fasthash::CodeMap;
+use crate::hash::HashFamily;
+use crate::linalg::nrm2;
+
+/// Result of a point-to-hyperplane query.
+#[derive(Clone, Debug, Default)]
+pub struct QueryHit {
+    /// best candidate (index, margin |wᵀx|/‖w‖); None if ball was empty
+    pub best: Option<(usize, f32)>,
+    /// candidates scanned during re-ranking
+    pub scanned: usize,
+    /// hash buckets probed (ball volume actually enumerated)
+    pub probed: usize,
+    /// whether any non-empty bucket was found (Fig 3(c)/4(c) statistic)
+    pub nonempty: bool,
+}
+
+/// Single-table compact hyperplane index.
+pub struct HyperplaneIndex {
+    k: usize,
+    radius: usize,
+    buckets: CodeMap<Vec<u32>>,
+    codes: CodeArray,
+}
+
+impl HyperplaneIndex {
+    /// Encode every database point with `family` and build the table.
+    pub fn build(family: &dyn HashFamily, feats: &FeatureStore, radius: usize) -> Self {
+        Self::from_codes(family.encode_all(feats), radius)
+    }
+
+    /// Build from precomputed codes (e.g. the PJRT batch-encode path).
+    pub fn from_codes(codes: CodeArray, radius: usize) -> Self {
+        let k = codes.k;
+        let mut buckets: CodeMap<Vec<u32>> = CodeMap::default();
+        for (i, &c) in codes.codes.iter().enumerate() {
+            buckets.entry(c).or_default().push(i as u32);
+        }
+        HyperplaneIndex { k, radius, buckets, codes }
+    }
+
+    pub fn bits(&self) -> usize {
+        self.k
+    }
+
+    pub fn radius(&self) -> usize {
+        self.radius
+    }
+
+    pub fn len(&self) -> usize {
+        self.codes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.codes.is_empty()
+    }
+
+    pub fn bucket_count(&self) -> usize {
+        self.buckets.len()
+    }
+
+    /// Memory footprint estimate in bytes (codes + bucket index).
+    pub fn memory_bytes(&self) -> usize {
+        self.codes.codes.len() * 8
+            + self.buckets.len() * (8 + std::mem::size_of::<Vec<u32>>())
+            + self.codes.len() * 4
+    }
+
+    /// Collect candidate ids within the Hamming ball of `lookup_code`,
+    /// visiting buckets in increasing Hamming distance. Stops early once
+    /// `stop_after` candidates have been gathered AND the current distance
+    /// ring is fully enumerated (so ranking by ring is unbiased).
+    pub fn candidates_into(&self, lookup_code: u64, stop_after: usize, out: &mut Vec<u32>) -> usize {
+        out.clear();
+        let mut probed = 0usize;
+        let mut cur_weight = 0u32;
+        let mut enough_at: Option<u32> = None;
+        for mask in HammingBall::new(self.k, self.radius) {
+            let w = mask.count_ones();
+            if let Some(stop_w) = enough_at {
+                if w > stop_w {
+                    break;
+                }
+            }
+            probed += 1;
+            if let Some(ids) = self.buckets.get(&(lookup_code ^ mask)) {
+                out.extend_from_slice(ids);
+            }
+            if w > cur_weight {
+                cur_weight = w;
+            }
+            if out.len() >= stop_after && enough_at.is_none() {
+                enough_at = Some(w);
+            }
+        }
+        probed
+    }
+
+    /// Full query: encode `w`, gather ball candidates, re-rank by margin.
+    /// `eligible` filters candidates (the AL loop excludes labeled points).
+    pub fn query_filtered(
+        &self,
+        family: &dyn HashFamily,
+        w: &[f32],
+        feats: &FeatureStore,
+        eligible: impl Fn(usize) -> bool,
+    ) -> QueryHit {
+        let lookup = family.encode_query(w);
+        self.query_code_filtered(lookup, w, feats, eligible)
+    }
+
+    /// Query with a precomputed lookup code.
+    pub fn query_code_filtered(
+        &self,
+        lookup: u64,
+        w: &[f32],
+        feats: &FeatureStore,
+        eligible: impl Fn(usize) -> bool,
+    ) -> QueryHit {
+        let mut cand = Vec::new();
+        let probed = self.candidates_into(lookup, usize::MAX, &mut cand);
+        let w_norm = nrm2(w);
+        let mut best: Option<(usize, f32)> = None;
+        let mut scanned = 0usize;
+        let mut any = false;
+        for &id in &cand {
+            let id = id as usize;
+            any = true;
+            if !eligible(id) {
+                continue;
+            }
+            scanned += 1;
+            let m = crate::linalg::margin_feat(feats.row(id), w, w_norm);
+            if best.map_or(true, |(_, bm)| m < bm) {
+                best = Some((id, m));
+            }
+        }
+        QueryHit { best, scanned, probed, nonempty: any }
+    }
+
+    /// Unfiltered query.
+    pub fn query(&self, family: &dyn HashFamily, w: &[f32], feats: &FeatureStore) -> QueryHit {
+        self.query_filtered(family, w, feats, |_| true)
+    }
+
+    /// Top-T near-to-hyperplane neighbors: the paper's "short list L"
+    /// protocol, returning up to T eligible candidates sorted by ascending
+    /// true margin. Used for batch labeling and evaluation.
+    pub fn query_topk(
+        &self,
+        family: &dyn HashFamily,
+        w: &[f32],
+        feats: &FeatureStore,
+        t: usize,
+        eligible: impl Fn(usize) -> bool,
+    ) -> Vec<(usize, f32)> {
+        let lookup = family.encode_query(w);
+        let mut cand = Vec::new();
+        self.candidates_into(lookup, usize::MAX, &mut cand);
+        let w_norm = nrm2(w);
+        let mut scored: Vec<(usize, f32)> = cand
+            .into_iter()
+            .map(|id| id as usize)
+            .filter(|&id| eligible(id))
+            .map(|id| (id, crate::linalg::margin_feat(feats.row(id), w, w_norm)))
+            .collect();
+        scored.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal));
+        scored.truncate(t);
+        scored
+    }
+
+    /// Hamming-ranking fallback: scan ALL codes, return the eligible point
+    /// with the smallest Hamming distance to the lookup code, breaking ties
+    /// by true margin among the best ring. O(n) but cheap (XOR+POPCNT).
+    pub fn rank_search(
+        &self,
+        lookup: u64,
+        w: &[f32],
+        feats: &FeatureStore,
+        eligible: impl Fn(usize) -> bool,
+    ) -> QueryHit {
+        let mut best_d = u32::MAX;
+        let mut best: Option<(usize, f32)> = None;
+        let w_norm = nrm2(w);
+        let mut scanned = 0usize;
+        for (i, &c) in self.codes.codes.iter().enumerate() {
+            if !eligible(i) {
+                continue;
+            }
+            let d = (c ^ lookup).count_ones();
+            if d > best_d {
+                continue;
+            }
+            scanned += 1;
+            let m = crate::linalg::margin_feat(feats.row(i), w, w_norm);
+            if d < best_d || best.map_or(true, |(_, bm)| m < bm) {
+                best_d = d;
+                best = Some((i, m));
+            }
+        }
+        QueryHit { best, scanned, probed: 0, nonempty: best.is_some() }
+    }
+
+    /// Number of buckets a radius-r query enumerates: Σ C(k,i).
+    pub fn probe_volume(&self) -> u64 {
+        ball_volume(self.k, self.radius)
+    }
+}
+
+// ───────────────────────── multi-table randomized LSH ─────────────────────────
+
+/// Theorem-2-style multi-table index: L independent k-bit tables, each
+/// probed at the exact lookup code; the union of bucket members is
+/// re-ranked by margin.
+pub struct LshIndex<H: HashFamily> {
+    tables: Vec<(H, CodeMap<Vec<u32>>)>,
+    n: usize,
+}
+
+impl<H: HashFamily> LshIndex<H> {
+    /// Build L tables using `make(table_idx)` to draw each table's family.
+    pub fn build(
+        feats: &FeatureStore,
+        n_tables: usize,
+        mut make: impl FnMut(usize) -> H,
+    ) -> Self {
+        let mut tables = Vec::with_capacity(n_tables);
+        for t in 0..n_tables {
+            let fam = make(t);
+            let codes = fam.encode_all(feats);
+            let mut buckets: CodeMap<Vec<u32>> = CodeMap::default();
+            for (i, &c) in codes.codes.iter().enumerate() {
+                buckets.entry(c).or_default().push(i as u32);
+            }
+            tables.push((fam, buckets));
+        }
+        LshIndex { tables, n: feats.len() }
+    }
+
+    pub fn n_tables(&self) -> usize {
+        self.tables.len()
+    }
+
+    /// Query all tables; candidates are deduplicated with a visit mark.
+    pub fn query_filtered(
+        &self,
+        w: &[f32],
+        feats: &FeatureStore,
+        eligible: impl Fn(usize) -> bool,
+    ) -> QueryHit {
+        let mut visited = vec![false; self.n];
+        let w_norm = nrm2(w);
+        let mut best: Option<(usize, f32)> = None;
+        let mut scanned = 0usize;
+        let mut any = false;
+        for (fam, buckets) in &self.tables {
+            let code = fam.encode_query(w);
+            if let Some(ids) = buckets.get(&code) {
+                any = true;
+                for &id in ids {
+                    let id = id as usize;
+                    if visited[id] {
+                        continue;
+                    }
+                    visited[id] = true;
+                    if !eligible(id) {
+                        continue;
+                    }
+                    scanned += 1;
+                    let m = crate::linalg::margin_feat(feats.row(id), w, w_norm);
+                    if best.map_or(true, |(_, bm)| m < bm) {
+                        best = Some((id, m));
+                    }
+                }
+            }
+        }
+        QueryHit { best, scanned, probed: self.tables.len(), nonempty: any }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::test_blobs;
+    use crate::hash::codes::hamming;
+    use crate::hash::BhHash;
+    use crate::rng::Rng;
+    use crate::testing::forall;
+
+    #[test]
+    fn from_codes_buckets_cover_all_points() {
+        forall("buckets partition points", 32, |rng| {
+            let k = rng.range(4, 20);
+            let n = rng.range(1, 200);
+            let mut codes = CodeArray::new(k);
+            for _ in 0..n {
+                codes.push(rng.next_u64() & crate::hash::codes::mask(k));
+            }
+            let idx = HyperplaneIndex::from_codes(codes, 2);
+            let total: usize = idx.buckets.values().map(|v| v.len()).sum();
+            crate::prop_assert!(total == n, "bucket sizes sum {total} != {n}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn candidates_match_linear_scan() {
+        // Ball lookup must return exactly the points within Hamming radius.
+        forall("ball lookup == brute force", 24, |rng| {
+            let k = rng.range(6, 18);
+            let r = rng.range(0, 4);
+            let n = rng.range(10, 300);
+            let mut codes = CodeArray::new(k);
+            for _ in 0..n {
+                codes.push(rng.next_u64() & crate::hash::codes::mask(k));
+            }
+            let all = codes.codes.clone();
+            let idx = HyperplaneIndex::from_codes(codes, r);
+            let q = rng.next_u64() & crate::hash::codes::mask(k);
+            let mut cand = Vec::new();
+            idx.candidates_into(q, usize::MAX, &mut cand);
+            let mut got: Vec<u32> = cand.clone();
+            got.sort_unstable();
+            let mut want: Vec<u32> = (0..n as u32)
+                .filter(|&i| hamming(all[i as usize], q, k) <= r as u32)
+                .collect();
+            want.sort_unstable();
+            crate::prop_assert!(got == want, "mismatch k={k} r={r}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn query_returns_minimum_margin_candidate() {
+        let mut rng = Rng::seed_from_u64(5);
+        let ds = test_blobs(400, 16, 4, &mut rng);
+        let fam = BhHash::sample(16, 8, &mut rng);
+        let idx = HyperplaneIndex::build(&fam, ds.features(), 8); // full ball: all points
+        let w = crate::testing::unit_vec(&mut rng, 16);
+        let hit = idx.query(&fam, &w, ds.features());
+        assert!(hit.nonempty);
+        let (best_i, best_m) = hit.best.unwrap();
+        // brute force minimum margin
+        let wn = nrm2(&w);
+        let mut bf = (0usize, f32::INFINITY);
+        for i in 0..ds.len() {
+            let m = crate::linalg::margin_feat(ds.features().row(i), &w, wn);
+            if m < bf.1 {
+                bf = (i, m);
+            }
+        }
+        assert_eq!(best_i, bf.0);
+        assert!((best_m - bf.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn eligible_filter_respected() {
+        let mut rng = Rng::seed_from_u64(6);
+        let ds = test_blobs(100, 8, 2, &mut rng);
+        let fam = BhHash::sample(8, 6, &mut rng);
+        let idx = HyperplaneIndex::build(&fam, ds.features(), 6);
+        let w = crate::testing::unit_vec(&mut rng, 8);
+        let banned = 37usize;
+        // ban everything except one point: query must return it
+        let hit = idx.query_filtered(&fam, &w, ds.features(), |i| i == banned);
+        assert_eq!(hit.best.unwrap().0, banned);
+        assert_eq!(hit.scanned, 1);
+    }
+
+    #[test]
+    fn empty_ball_reports_empty() {
+        let mut codes = CodeArray::new(16);
+        codes.push(0xFFFF);
+        let idx = HyperplaneIndex::from_codes(codes, 1);
+        let hit = idx.query_code_filtered(0, &[1.0; 4], &FeatureStore::Dense(crate::linalg::Mat::zeros(1, 4)), |_| true);
+        assert!(!hit.nonempty);
+        assert!(hit.best.is_none());
+        assert_eq!(hit.probed as u64, ball_volume(16, 1));
+    }
+
+    #[test]
+    fn rank_search_finds_closest_ring() {
+        let mut rng = Rng::seed_from_u64(8);
+        let ds = test_blobs(200, 16, 2, &mut rng);
+        let fam = BhHash::sample(16, 10, &mut rng);
+        let idx = HyperplaneIndex::build(&fam, ds.features(), 0);
+        let w = crate::testing::unit_vec(&mut rng, 16);
+        let lookup = fam.encode_query(&w);
+        let hit = idx.rank_search(lookup, &w, ds.features(), |_| true);
+        let (i, _) = hit.best.unwrap();
+        let d_best = hamming(idx.codes.get(i), lookup, 10);
+        for j in 0..ds.len() {
+            assert!(hamming(idx.codes.get(j), lookup, 10) >= d_best);
+        }
+    }
+
+    #[test]
+    fn lsh_union_dedup() {
+        let mut rng = Rng::seed_from_u64(9);
+        let ds = test_blobs(300, 16, 3, &mut rng);
+        let mut seeds: Vec<u64> = (0..8).map(|_| rng.next_u64()).collect();
+        let lsh = LshIndex::build(ds.features(), 8, |t| {
+            BhHash::sample(16, 6, &mut Rng::seed_from_u64(seeds[t]))
+        });
+        seeds.clear();
+        let w = crate::testing::unit_vec(&mut rng, 16);
+        let hit = lsh.query_filtered(&w, ds.features(), |_| true);
+        assert!(hit.probed == 8);
+        if let Some((i, m)) = hit.best {
+            assert!(i < 300);
+            assert!(m >= 0.0);
+        }
+    }
+
+    #[test]
+    fn query_topk_sorted_and_filtered() {
+        let mut rng = Rng::seed_from_u64(77);
+        let ds = test_blobs(300, 16, 3, &mut rng);
+        let fam = BhHash::sample(16, 8, &mut rng);
+        let idx = HyperplaneIndex::build(&fam, ds.features(), 8); // full ball
+        let w = crate::testing::unit_vec(&mut rng, 16);
+        let top = idx.query_topk(&fam, &w, ds.features(), 10, |i| i % 2 == 0);
+        assert!(top.len() <= 10);
+        for pair in top.windows(2) {
+            assert!(pair[0].1 <= pair[1].1, "must be margin-sorted");
+        }
+        assert!(top.iter().all(|&(i, _)| i % 2 == 0), "filter respected");
+        // the best entry matches query_filtered's best under same filter
+        let single = idx.query_filtered(&fam, &w, ds.features(), |i| i % 2 == 0);
+        assert_eq!(top[0].0, single.best.unwrap().0);
+    }
+
+    #[test]
+    fn probe_volume_formula() {
+        let codes = CodeArray::new(20);
+        let idx = HyperplaneIndex::from_codes(codes, 4);
+        assert_eq!(idx.probe_volume(), 1 + 20 + 190 + 1140 + 4845);
+    }
+
+    #[test]
+    fn stop_after_early_exit_completes_ring() {
+        // with stop_after=1 the search must still finish the distance ring
+        // it found candidates in (unbiased ring ranking)
+        let mut codes = CodeArray::new(8);
+        codes.push(0b0000_0001); // distance 1 from 0
+        codes.push(0b0000_0010); // distance 1 from 0
+        codes.push(0b0000_0111); // distance 3
+        let idx = HyperplaneIndex::from_codes(codes, 3);
+        let mut cand = Vec::new();
+        idx.candidates_into(0, 1, &mut cand);
+        let mut got = cand.clone();
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 1], "both distance-1 points must be found");
+    }
+}

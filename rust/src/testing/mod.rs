@@ -1,0 +1,145 @@
+//! Minimal property-based testing framework (proptest is not in the
+//! vendored registry).
+//!
+//! A property is a closure over a seeded [`crate::rng::Rng`]; `forall` runs
+//! it for N cases with derived seeds and reports the failing seed so any
+//! counter-example can be replayed deterministically:
+//!
+//! ```
+//! use chh::testing::forall;
+//! forall("reverse twice is identity", 64, |rng| {
+//!     let n = rng.below(100);
+//!     let v: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+//!     let mut w = v.clone();
+//!     w.reverse();
+//!     w.reverse();
+//!     if w == v { Ok(()) } else { Err("mismatch".to_string()) }
+//! });
+//! ```
+
+use crate::rng::Rng;
+
+/// Run `prop` for `cases` seeds; panics with the offending seed on failure.
+pub fn forall<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    // Base seed fixed for reproducibility; override with CHH_PROP_SEED to
+    // replay a reported failure directly.
+    let base = std::env::var("CHH_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok());
+    if let Some(seed) = base {
+        let mut rng = Rng::seed_from_u64(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed at replay seed {seed}: {msg}");
+        }
+        return;
+    }
+    for case in 0..cases {
+        let seed = 0x5EED_0000_0000_0000u64 ^ case.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::seed_from_u64(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case} (replay with CHH_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert helper producing property-style errors.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+/// Assert two f32 slices are elementwise close.
+pub fn assert_close_slice(a: &[f32], b: &[f32], tol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        let scale = 1.0 + x.abs().max(y.abs());
+        if (x - y).abs() > tol * scale {
+            return Err(format!("element {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+/// Generate a random unit vector of dimension d.
+pub fn unit_vec(rng: &mut Rng, d: usize) -> Vec<f32> {
+    let mut v = rng.gauss_vec(d);
+    crate::linalg::normalize(&mut v);
+    v
+}
+
+/// Generate a pair (w, x) of unit vectors with an exact angle θ between
+/// them (used to validate collision probabilities at controlled angles).
+pub fn pair_with_angle(rng: &mut Rng, d: usize, theta: f32) -> (Vec<f32>, Vec<f32>) {
+    assert!(d >= 2);
+    let w = unit_vec(rng, d);
+    // Gram-Schmidt a random direction against w.
+    let mut e = rng.gauss_vec(d);
+    let proj = crate::linalg::dot(&e, &w);
+    for i in 0..d {
+        e[i] -= proj * w[i];
+    }
+    crate::linalg::normalize(&mut e);
+    let x: Vec<f32> = (0..d).map(|i| theta.cos() * w[i] + theta.sin() * e[i]).collect();
+    (w, x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{cosine, nrm2};
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("u64 xor self is zero", 32, |rng| {
+            let x = rng.next_u64();
+            prop_assert!(x ^ x == 0, "xor");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn forall_reports_failures() {
+        forall("always fails", 4, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn unit_vec_is_unit() {
+        forall("unit vec norm 1", 32, |rng| {
+            let d = rng.range(2, 64);
+            let v = unit_vec(rng, d);
+            prop_assert!((nrm2(&v) - 1.0).abs() < 1e-4, "norm {}", nrm2(&v));
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pair_with_angle_has_requested_angle() {
+        forall("controlled angle", 64, |rng| {
+            let d = rng.range(2, 128);
+            let theta = (rng.f32() * std::f32::consts::PI).max(1e-3);
+            let (w, x) = pair_with_angle(rng, d, theta);
+            let got = cosine(&w, &x).acos();
+            prop_assert!((got - theta).abs() < 1e-2, "want {theta} got {got}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn assert_close_slice_detects_mismatch() {
+        assert!(assert_close_slice(&[1.0], &[1.0 + 1e-7], 1e-5).is_ok());
+        assert!(assert_close_slice(&[1.0], &[1.2], 1e-5).is_err());
+        assert!(assert_close_slice(&[1.0], &[1.0, 2.0], 1e-5).is_err());
+    }
+}

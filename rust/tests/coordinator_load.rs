@@ -1,0 +1,108 @@
+//! Coordinator under load: correctness and liveness of the router when
+//! many submitters share a small queue (backpressure), plus integration
+//! with the active-learning exclusion protocol.
+
+use std::collections::HashSet;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use chh::coordinator::{QueryRequest, Router};
+use chh::data::test_blobs;
+use chh::hash::{BhHash, HashFamily};
+use chh::rng::Rng;
+use chh::table::HyperplaneIndex;
+use chh::testing::unit_vec;
+
+fn build(n: usize, seed: u64) -> (Arc<dyn HashFamily>, Arc<HyperplaneIndex>, Arc<chh::data::FeatureStore>) {
+    let mut rng = Rng::seed_from_u64(seed);
+    let ds = test_blobs(n, 24, 4, &mut rng);
+    let fam: Arc<dyn HashFamily> = Arc::new(BhHash::sample(24, 12, &mut rng));
+    let idx = Arc::new(HyperplaneIndex::build(fam.as_ref(), ds.features(), 4));
+    (fam, idx, Arc::new(ds.features().clone()))
+}
+
+#[test]
+fn no_query_lost_or_duplicated_under_contention() {
+    let (fam, idx, feats) = build(1000, 1);
+    let router = Arc::new(Router::new(fam, idx, feats, 3, 4));
+    let mut handles = Vec::new();
+    for t in 0..6u64 {
+        let r = router.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::seed_from_u64(t + 10);
+            let mut ids = Vec::new();
+            for _ in 0..50 {
+                let resp = r
+                    .submit(QueryRequest { w: unit_vec(&mut rng, 24), exclude: None })
+                    .wait();
+                ids.push(resp.id);
+            }
+            ids
+        }));
+    }
+    let mut all_ids: Vec<u64> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+    assert_eq!(all_ids.len(), 300);
+    all_ids.sort_unstable();
+    all_ids.dedup();
+    assert_eq!(all_ids.len(), 300, "response ids must be unique");
+    assert_eq!(router.stats().completed.load(Ordering::Relaxed), 300);
+}
+
+#[test]
+fn batched_one_vs_all_iteration_protocol() {
+    // emulate one AL iteration: submit the 10 one-vs-all hyperplanes as a
+    // batch with a shared labeled-set exclusion, get 10 candidates back
+    let (fam, idx, feats) = build(2000, 2);
+    let router = Router::new(fam, idx, feats.clone(), 2, 32);
+    let mut rng = Rng::seed_from_u64(3);
+    let labeled: HashSet<usize> = (0..50).collect();
+    let labeled = Arc::new(labeled);
+    let reqs: Vec<QueryRequest> = (0..10)
+        .map(|_| QueryRequest { w: unit_vec(&mut rng, 24), exclude: Some(labeled.clone()) })
+        .collect();
+    let resps = router.submit_batch(reqs);
+    assert_eq!(resps.len(), 10);
+    for r in &resps {
+        if let Some((idx, margin)) = r.hit.best {
+            assert!(!labeled.contains(&idx), "labeled point returned");
+            assert!(margin >= 0.0);
+        }
+    }
+    router.shutdown();
+}
+
+#[test]
+fn throughput_counters_consistent() {
+    let (fam, idx, feats) = build(500, 4);
+    let router = Router::new(fam, idx, feats, 2, 8);
+    let mut rng = Rng::seed_from_u64(5);
+    let n = 100;
+    let mut nonempty_from_hits = 0u64;
+    for _ in 0..n {
+        let resp = router
+            .submit(QueryRequest { w: unit_vec(&mut rng, 24), exclude: None })
+            .wait();
+        if !resp.hit.nonempty {
+            nonempty_from_hits += 1;
+        }
+    }
+    let st = router.stats();
+    assert_eq!(st.submitted.load(Ordering::Relaxed), n);
+    assert_eq!(st.completed.load(Ordering::Relaxed), n);
+    assert_eq!(st.empty_lookups.load(Ordering::Relaxed), nonempty_from_hits);
+    router.shutdown();
+}
+
+#[test]
+fn router_survives_shutdown_with_pending_work() {
+    let (fam, idx, feats) = build(300, 6);
+    let router = Router::new(fam, idx, feats, 1, 2);
+    let mut rng = Rng::seed_from_u64(7);
+    // submit and wait for a few, then shutdown cleanly
+    for _ in 0..5 {
+        router
+            .submit(QueryRequest { w: unit_vec(&mut rng, 24), exclude: None })
+            .wait();
+    }
+    router.shutdown(); // must not hang or panic
+}

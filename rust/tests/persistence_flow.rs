@@ -1,0 +1,66 @@
+//! Deployment-lifecycle integration: train → save → reload in a "fresh
+//! process" (new objects, no shared state) → rebuild the index from saved
+//! codes → identical query results. This is the offline-train /
+//! online-serve split a production user runs.
+
+use chh::data::{tiny1m_like, TinyConfig};
+use chh::hash::{HashFamily, LbhHash};
+use chh::lbh::{LbhTrainConfig, LbhTrainer};
+use chh::persist::{load_codes, load_model, save_codes, save_model, FamilyKind};
+use chh::rng::Rng;
+use chh::table::HyperplaneIndex;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("chh_flow_{}_{name}", std::process::id()))
+}
+
+#[test]
+fn train_save_reload_serve_roundtrip() {
+    let mut rng = Rng::seed_from_u64(77);
+    let ds = tiny1m_like(&TinyConfig { n: 3000, d: 64, ..Default::default() }, &mut rng);
+
+    // ── offline: train + encode + persist ────────────────────────────
+    let sample = rng.sample_indices(ds.len(), 256);
+    let refs = rng.sample_indices(ds.len(), 2000);
+    let trainer = LbhTrainer::new(LbhTrainConfig { bits: 14, iters_per_bit: 60, ..Default::default() });
+    let (lbh, _) = trainer.train(ds.features(), &sample, &refs, &mut rng);
+    let codes = lbh.encode_all(ds.features());
+    let model_path = tmp("model");
+    let codes_path = tmp("codes");
+    save_model(&model_path, FamilyKind::Lbh, &lbh.pairs).unwrap();
+    save_codes(&codes_path, &codes).unwrap();
+
+    // ── online: reload into fresh objects ────────────────────────────
+    let lbh2: LbhHash = load_model(&model_path).unwrap().into_lbh().unwrap();
+    let codes2 = load_codes(&codes_path).unwrap();
+    assert_eq!(codes2.codes, codes.codes, "persisted codes identical");
+    let index_fresh = HyperplaneIndex::from_codes(codes2, 3);
+    let index_orig = HyperplaneIndex::from_codes(codes, 3);
+
+    // queries answered identically by the reloaded stack
+    for _ in 0..25 {
+        let w = chh::testing::unit_vec(&mut rng, 64);
+        let a = index_orig.query_filtered(&lbh, &w, ds.features(), |_| true);
+        let b = index_fresh.query_filtered(&lbh2, &w, ds.features(), |_| true);
+        assert_eq!(a.best.map(|(i, _)| i), b.best.map(|(i, _)| i));
+        assert_eq!(a.scanned, b.scanned);
+        assert_eq!(a.nonempty, b.nonempty);
+    }
+    let _ = std::fs::remove_file(&model_path);
+    let _ = std::fs::remove_file(&codes_path);
+}
+
+#[test]
+fn saved_model_queries_match_without_codes_file() {
+    // codes can always be regenerated from the model alone
+    let mut rng = Rng::seed_from_u64(78);
+    let ds = tiny1m_like(&TinyConfig { n: 1500, d: 32, ..Default::default() }, &mut rng);
+    let fam = chh::hash::BhHash::sample(32, 10, &mut rng);
+    let path = tmp("bh_model");
+    save_model(&path, FamilyKind::Bh, &fam.pairs).unwrap();
+    let fam2 = load_model(&path).unwrap().into_bh().unwrap();
+    let c1 = fam.encode_all(ds.features());
+    let c2 = fam2.encode_all(ds.features());
+    assert_eq!(c1.codes, c2.codes);
+    let _ = std::fs::remove_file(&path);
+}

@@ -1,0 +1,240 @@
+//! Cross-layer integration: AOT artifacts (JAX+Pallas → HLO → PJRT) must
+//! produce bit-identical hash codes and numerically identical scans to the
+//! native Rust implementations.
+//!
+//! These tests are skipped (with a loud message) when `artifacts/` has not
+//! been built — run `make artifacts` first.
+
+use chh::data::{test_blobs, FeatureStore};
+use chh::hash::{BhHash, HashFamily};
+use chh::rng::Rng;
+use chh::runtime::{BatchEncoder, MarginScanner, Runtime};
+
+fn runtime_or_skip() -> Option<Runtime> {
+    // tests run from the crate root; artifacts/ lives there
+    let rt = match Runtime::open_default() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("SKIP: PJRT unavailable: {e:#}");
+            return None;
+        }
+    };
+    if !rt.has("encode_bh_test") {
+        eprintln!("SKIP: artifacts missing — run `make artifacts`");
+        return None;
+    }
+    Some(rt)
+}
+
+#[test]
+fn pjrt_encode_matches_native_codes_exactly() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::seed_from_u64(31);
+    // 600 points: pads the last 256-row tile
+    let ds = test_blobs(600, 64, 4, &mut rng);
+    let bh = BhHash::sample(64, 8, &mut rng);
+    let native = bh.encode_all(ds.features());
+    let enc = BatchEncoder::bilinear(&rt, "test").expect("encoder");
+    assert_eq!(enc.tile_n(), 256);
+    assert_eq!(enc.bits(), 8);
+    let pjrt = enc.encode_all(ds.features(), &bh.pairs).expect("pjrt encode");
+    assert_eq!(native.len(), pjrt.len());
+    let mismatches = native
+        .codes
+        .iter()
+        .zip(pjrt.codes.iter())
+        .filter(|(a, b)| a != b)
+        .count();
+    // float32 GEMM reassociation can flip a score that is exactly at the
+    // sign boundary; on random data this should essentially never happen
+    assert!(
+        mismatches <= native.len() / 500,
+        "{mismatches}/{} code mismatches between native and PJRT",
+        native.len()
+    );
+}
+
+#[test]
+fn pjrt_margin_scan_matches_native() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::seed_from_u64(32);
+    let ds = test_blobs(300, 64, 3, &mut rng);
+    let w = chh::testing::unit_vec(&mut rng, 64);
+    let scanner = MarginScanner::open(&rt, "test").expect("scanner");
+    let got = scanner.scan(ds.features(), &w).expect("scan");
+    assert_eq!(got.len(), 300);
+    for i in 0..300 {
+        let want = ds.features().row(i).dot(&w).abs();
+        assert!(
+            (got[i] - want).abs() < 1e-4 * (1.0 + want),
+            "row {i}: pjrt {} native {}",
+            got[i],
+            want
+        );
+    }
+}
+
+#[test]
+fn pjrt_hamming_rank_matches_popcount() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::seed_from_u64(33);
+    let k = 8usize;
+    let n = 256usize;
+    // random codes as ±1 floats
+    let mut codes_pm = vec![0f32; n * k];
+    let mut codes: Vec<u64> = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = rng.next_u64() & chh::hash::codes::mask(k);
+        codes.push(c);
+        for j in 0..k {
+            codes_pm[i * k + j] = if (c >> j) & 1 == 1 { 1.0 } else { -1.0 };
+        }
+    }
+    let q = rng.next_u64() & chh::hash::codes::mask(k);
+    let q_pm: Vec<f32> = (0..k).map(|j| if (q >> j) & 1 == 1 { 1.0 } else { -1.0 }).collect();
+    let out = rt
+        .run_f32("hamming_rank_test", &[(&codes_pm, &[n, k]), (&q_pm, &[k])])
+        .expect("run");
+    for i in 0..n {
+        let want = chh::hash::codes::hamming(codes[i], q, k) as f32;
+        assert_eq!(out[0][i], want, "row {i}");
+    }
+}
+
+#[test]
+fn pjrt_lbh_step_matches_native_step() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let meta = rt.meta("lbh_step_test").unwrap().clone();
+    let m = meta.inputs[0].shape[0];
+    let d = meta.inputs[0].shape[1];
+    let mut rng = Rng::seed_from_u64(34);
+    // unit-norm rows, similarity-derived R (same construction as training)
+    let ds = test_blobs(m, d, 4, &mut rng);
+    let mut xm = chh::linalg::Mat::zeros(m, d);
+    for i in 0..m {
+        ds.features().row(i).scatter_into(xm.row_mut(i));
+    }
+    xm.l2_normalize_rows();
+    let s = chh::lbh::similarity_matrix(&xm, 0.8, 0.2);
+    let mut r = s.clone();
+    chh::linalg::scal(8.0, &mut r.data);
+    let u = rng.gauss_vec(d);
+    let v = rng.gauss_vec(d);
+    let lr = [0.05f32];
+    let mu = [0.9f32];
+    let out = rt
+        .run_f32(
+            "lbh_step_test",
+            &[
+                (&xm.data, &[m, d]),
+                (&r.data, &[m, m]),
+                (&u, &[d]),
+                (&v, &[d]),
+                (&u, &[d]),
+                (&v, &[d]),
+                (&lr, &[1]),
+                (&mu, &[1]),
+            ],
+        )
+        .expect("run lbh_step");
+    // native replica of the same Nesterov step (u_prev == u ⇒ lookahead = u)
+    let (gu, gv) = chh::lbh::surrogate_grad(&xm, &r, &u, &v);
+    let un: Vec<f32> = u.iter().zip(gu.iter()).map(|(a, g)| a - lr[0] * g).collect();
+    let vn: Vec<f32> = v.iter().zip(gv.iter()).map(|(a, g)| a - lr[0] * g).collect();
+    for i in 0..d {
+        assert!(
+            (out[0][i] - un[i]).abs() < 1e-3 * (1.0 + un[i].abs()),
+            "u[{i}]: pjrt {} native {}",
+            out[0][i],
+            un[i]
+        );
+        assert!(
+            (out[1][i] - vn[i]).abs() < 1e-3 * (1.0 + vn[i].abs()),
+            "v[{i}]: pjrt {} native {}",
+            out[1][i],
+            vn[i]
+        );
+    }
+    // cost output: compare against native surrogate at the new point
+    let mut buf = Vec::new();
+    let native_cost = chh::lbh::surrogate_eval(&xm, &r, &un, &vn, &mut buf);
+    assert!(
+        (out[2][0] - native_cost).abs() < 2e-2 * (1.0 + native_cost.abs()),
+        "cost: pjrt {} native {}",
+        out[2][0],
+        native_cost
+    );
+}
+
+#[test]
+fn pjrt_trainer_produces_working_hash() {
+    // Full PJRT-backed LBH training (every Nesterov step on XLA) must
+    // produce a hash of comparable retrieval quality to the native trainer
+    // on the same data/seed.
+    let Some(rt) = runtime_or_skip() else { return };
+    let stepper = match chh::runtime::LbhStepper::open(&rt, "test") {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("SKIP: {e:#}");
+            return;
+        }
+    };
+    let mut rng = Rng::seed_from_u64(40);
+    let ds = test_blobs(600, stepper.dim, 4, &mut rng);
+    let sample = rng.sample_indices(ds.len(), 96); // < artifact m → padded
+    let refs: Vec<usize> = (0..ds.len()).collect();
+    let trainer = chh::lbh::LbhTrainer::new(chh::lbh::LbhTrainConfig {
+        bits: 8,
+        iters_per_bit: 40,
+        ..Default::default()
+    });
+    let mut rng_a = Rng::seed_from_u64(41);
+    let (fam_pjrt, stats_pjrt) = trainer
+        .train_pjrt(&stepper, ds.features(), &sample, &refs, &mut rng_a)
+        .expect("pjrt training");
+    let mut rng_b = Rng::seed_from_u64(41);
+    let (fam_native, stats_native) = trainer.train(ds.features(), &sample, &refs, &mut rng_b);
+    // same thresholds (identical rule on identical data)
+    assert!((stats_pjrt.t1 - stats_native.t1).abs() < 1e-5);
+    assert!((stats_pjrt.t2 - stats_native.t2).abs() < 1e-5);
+    // both reduce per-bit cost to a similar level (float paths differ, so
+    // compare aggregate quality, not bit-exact projections)
+    let sum = |v: &[f32]| v.iter().map(|&x| x as f64).sum::<f64>();
+    let c_p = sum(&stats_pjrt.discrete_costs);
+    let c_n = sum(&stats_native.discrete_costs);
+    assert!(
+        c_p < 0.5 * c_n.min(0.0) || (c_p - c_n).abs() < 0.5 * c_n.abs().max(1.0),
+        "pjrt discrete cost {c_p} vs native {c_n}"
+    );
+    // and the trained hash actually works as an index
+    let index = chh::table::HyperplaneIndex::build(&fam_pjrt, ds.features(), 3);
+    let w = chh::testing::unit_vec(&mut rng, stepper.dim);
+    let hit = index.query(&fam_pjrt, &w, ds.features());
+    assert!(hit.probed > 0);
+    let _ = fam_native;
+}
+
+#[test]
+fn manifest_covers_all_profiles() {
+    let Some(rt) = runtime_or_skip() else { return };
+    for profile in ["test", "news", "tiny"] {
+        for kind in [
+            "encode_bh",
+            "encode_ah",
+            "encode_eh",
+            "margin_scan",
+            "hamming_rank",
+            "lbh_step",
+        ] {
+            let name = format!("{kind}_{profile}");
+            assert!(rt.has(&name), "artifact {name} missing from manifest");
+        }
+    }
+}
+
+#[test]
+fn shape_validation_rejects_wrong_inputs() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let bad = vec![0f32; 10];
+    assert!(rt.run_f32("encode_bh_test", &[(&bad, &[10usize] as &[usize])]).is_err());
+}
