@@ -1,0 +1,110 @@
+//! Online serving demo: dynamic sharded index + fan-out router.
+//!
+//! Plays out the deployment the static `serve_hyperplane` example can't:
+//! points arrive and retire *while* hyperplane queries are being served.
+//! An ingest thread streams new points in and retires old ones (50/50
+//! churn); the query loop meanwhile emulates an active-learning consumer
+//! that labels (and therefore removes) each returned candidate.
+//!
+//! Run: `cargo run --release --example online_serving`
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+use chh::coordinator::{OnlineRouter, QueryRequest};
+use chh::data::{tiny1m_like, TinyConfig};
+use chh::hash::{BhHash, HashFamily};
+use chh::online::{QueryBudget, ShardedIndex};
+use chh::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::seed_from_u64(7);
+    let n = 40_000;
+    let k = 18;
+    let radius = 3;
+    let shards = 8;
+    println!("online_serving: n={n} d=128 k={k} r={radius} shards={shards}");
+    let data = tiny1m_like(&TinyConfig { n, d: 128, ..Default::default() }, &mut rng);
+    let family: Arc<dyn HashFamily> = Arc::new(BhHash::sample(data.dim(), k, &mut rng));
+
+    // warm the index with half the stream
+    let index = Arc::new(ShardedIndex::new(k, radius, shards));
+    let warm = n / 2;
+    let t0 = Instant::now();
+    for i in 0..warm {
+        index.insert_point(family.as_ref(), i as u32, data.features().row(i));
+    }
+    index.compact();
+    println!(
+        "warm load: {warm} points in {:.2}s, {} live, memory ~ {:.1} MB",
+        t0.elapsed().as_secs_f64(),
+        index.len(),
+        index.memory_bytes() as f64 / 1e6
+    );
+
+    let feats = Arc::new(data.features().clone());
+    let budget = QueryBudget::new(1024, 64); // best-first: ~1/6 of the r=3 ball
+    let router = OnlineRouter::new(family.clone(), index.clone(), feats.clone(), 3, 64, budget);
+
+    // ingest thread: stream the second half in, retire old points 50/50
+    let ingest_idx = index.clone();
+    let ingest_fam = family.clone();
+    let ingest_feats = feats.clone();
+    let ingest = std::thread::spawn(move || {
+        let mut rng = Rng::seed_from_u64(99);
+        let mut next = warm;
+        let mut ops = 0usize;
+        while next < n {
+            ingest_idx.insert_point(ingest_fam.as_ref(), next as u32, ingest_feats.row(next));
+            next += 1;
+            ingest_idx.remove(rng.below(next) as u32);
+            ops += 2;
+        }
+        ops
+    });
+
+    // query loop: an AL consumer that "labels" (removes) what it selects
+    let iters = 40;
+    let batch = 10;
+    let t0 = Instant::now();
+    let mut labeled = 0usize;
+    for _ in 0..iters {
+        let reqs: Vec<QueryRequest> = (0..batch)
+            .map(|_| QueryRequest {
+                w: chh::testing::unit_vec(&mut rng, data.dim()),
+                exclude: None,
+            })
+            .collect();
+        for resp in router.submit_batch(reqs) {
+            if let Some((id, _margin)) = resp.hit.best {
+                if index.remove(id as u32) {
+                    labeled += 1; // labeled points leave the pool
+                }
+            }
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let ops = ingest.join().expect("ingest thread");
+    let st = router.stats();
+    let served = iters * batch;
+    println!("\nserved {served} queries while ingesting ({ops} churn ops) in {secs:.3}s");
+    println!("  throughput : {:.0} queries/s", served as f64 / secs);
+    println!(
+        "  latency    : mean {:.1}µs  p50 {:.1}µs  p95 {:.1}µs",
+        st.latency_mean() * 1e6,
+        st.latency_p50() * 1e6,
+        st.latency_p95() * 1e6
+    );
+    println!(
+        "  labeled    : {labeled}   empty lookups {}   candidates/query {:.1}",
+        st.empty_lookups.load(Ordering::Relaxed),
+        st.candidates_scanned.load(Ordering::Relaxed) as f64 / served as f64
+    );
+    println!(
+        "  index      : {} live, epochs {:?}",
+        index.len(),
+        index.epochs()
+    );
+    router.shutdown();
+}

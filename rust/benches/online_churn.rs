@@ -1,0 +1,138 @@
+//! Online-serving benchmark: insert + query throughput of the sharded
+//! dynamic index under 50/50 churn, plus the probe-budget/latency
+//! trade-off of probability-ordered multi-probe vs the full Hamming ball.
+//!
+//! Run: `cargo bench --bench online_churn`
+//! (`CHH_BENCH_FULL=1` uses n=200k instead of 30k.)
+
+use std::time::Instant;
+
+use chh::data::{tiny1m_like, TinyConfig};
+use chh::hash::{BhHash, HashFamily};
+use chh::metrics::Histogram;
+use chh::online::{QueryBudget, ShardedIndex};
+use chh::report::write_csv;
+use chh::rng::Rng;
+use chh::testing::unit_vec;
+
+fn main() {
+    let full = chh::bench::full_scale();
+    let n = if full { 200_000 } else { 30_000 };
+    let d = 128;
+    let k = 20;
+    let radius = 4;
+    let shards = 8;
+    let mut rng = Rng::seed_from_u64(2012);
+    println!("online_churn: n={n} d={d} k={k} r={radius} shards={shards}");
+    let data = tiny1m_like(&TinyConfig { n, d, ..Default::default() }, &mut rng);
+    let fam = BhHash::sample(d, k, &mut rng);
+    let codes = fam.encode_all(data.features());
+
+    // ── bulk load ────────────────────────────────────────────────────
+    let warm = n / 2;
+    let index = ShardedIndex::new(k, radius, shards);
+    let t0 = Instant::now();
+    for id in 0..warm {
+        index.insert(id as u32, codes.get(id));
+    }
+    index.compact();
+    let load_secs = t0.elapsed().as_secs_f64();
+    println!(
+        "bulk load: {warm} inserts in {load_secs:.3}s ({:.0} inserts/s), memory ~ {:.1} MB",
+        warm as f64 / load_secs,
+        index.memory_bytes() as f64 / 1e6
+    );
+
+    // ── probe budget sweep (read-only) ───────────────────────────────
+    let queries: Vec<Vec<f32>> = (0..100).map(|_| unit_vec(&mut rng, d)).collect();
+    let full_ball = index.planner().full_volume() as usize;
+    let mut rows = Vec::new();
+    for &(probes, top) in
+        &[(full_ball, usize::MAX), (1024, usize::MAX), (256, 64), (64, 32), (16, 16)]
+    {
+        let budget = QueryBudget::new(probes, top);
+        let mut h = Histogram::new();
+        let mut hits = 0usize;
+        let mut margin_sum = 0.0f64;
+        let mut scanned = 0usize;
+        for w in &queries {
+            let t0 = Instant::now();
+            let hit = index.query(&fam, w, data.features(), budget, |_| true);
+            h.record(t0.elapsed().as_secs_f64());
+            scanned += hit.scanned;
+            if let Some((_, m)) = hit.best {
+                hits += 1;
+                margin_sum += m as f64;
+            }
+        }
+        rows.push(vec![
+            format!("T={probes} top={}", if top == usize::MAX { "inf".into() } else { top.to_string() }),
+            format!("{:.1}", h.mean() * 1e6),
+            format!("{:.1}", h.percentile(95.0) * 1e6),
+            format!("{}", scanned / queries.len()),
+            format!("{hits}/{}", queries.len()),
+            format!("{:.5}", margin_sum / hits.max(1) as f64),
+        ]);
+    }
+    chh::report::print_rows(
+        "probe budget sweep (best-first multi-probe, read-only)",
+        &["budget", "mean(us)", "p95(us)", "cands", "hit rate", "mean margin"],
+        &rows,
+    );
+    write_csv(
+        "online_probe_sweep.csv",
+        &["budget", "mean_us", "p95_us", "cands", "hits", "margin"],
+        &rows,
+    )
+    .expect("csv");
+
+    // ── 50/50 churn: inserts+removes interleaved with queries ────────
+    let budget = QueryBudget::new(1024, 64);
+    let churn_ops = if full { 200_000 } else { 40_000 };
+    let mut next = warm;
+    let mut removed = 0usize;
+    let mut qh = Histogram::new();
+    let mut q = 0usize;
+    let t0 = Instant::now();
+    for op in 0..churn_ops {
+        if op % 2 == 0 && next < n {
+            index.insert(next as u32, codes.get(next));
+            next += 1;
+        } else {
+            let victim = rng.below(next) as u32;
+            if index.remove(victim) {
+                removed += 1;
+            }
+        }
+        if op % 8 == 0 {
+            let w = &queries[q % queries.len()];
+            q += 1;
+            let tq = Instant::now();
+            let hit = index.query(&fam, w, data.features(), budget, |_| true);
+            qh.record(tq.elapsed().as_secs_f64());
+            std::hint::black_box(hit);
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let churn_rows = vec![vec![
+        format!("{churn_ops}"),
+        format!("{q}"),
+        format!("{:.0}", (churn_ops + q) as f64 / secs),
+        format!("{:.1}", qh.mean() * 1e6),
+        format!("{:.1}", qh.percentile(95.0) * 1e6),
+        format!("{removed}"),
+        format!("{}", index.len()),
+        format!("{}", index.total_epoch()),
+    ]];
+    chh::report::print_rows(
+        "50/50 churn (insert+remove) with interleaved queries",
+        &["ops", "queries", "ops/s", "q mean(us)", "q p95(us)", "removed", "live", "epochs"],
+        &churn_rows,
+    );
+    write_csv(
+        "online_churn.csv",
+        &["ops", "queries", "ops_per_s", "q_mean_us", "q_p95_us", "removed", "live", "epochs"],
+        &churn_rows,
+    )
+    .expect("csv");
+}

@@ -17,15 +17,26 @@
 //! The vendored registry has no tokio, so the implementation uses OS
 //! threads + `std::sync::mpsc` bounded channels; the public API is
 //! synchronous-with-handles (submit returns a ticket, `recv` joins it).
+//!
+//! Two routers share the job-queue machinery:
+//!
+//! * [`Router`] — the static path over a prebuilt [`HyperplaneIndex`];
+//!   one worker answers one query end to end.
+//! * [`OnlineRouter`] — the dynamic path over a
+//!   [`crate::online::ShardedIndex`]: every query is split into one job
+//!   per shard, workers probe their shard's epoch snapshot with the
+//!   query's best-first probe plan, and the last-finishing shard merges
+//!   the partial hits and resolves the caller's ticket.
 
 use std::collections::HashSet;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::data::FeatureStore;
 use crate::hash::HashFamily;
+use crate::online::{merge_hits, QueryBudget, ShardedIndex};
 use crate::table::{HyperplaneIndex, QueryHit};
 
 /// A point-to-hyperplane query.
@@ -202,6 +213,177 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>, sh: Arc<Shared>) {
     }
 }
 
+// ───────────────────────── online (sharded) router ─────────────────────────
+
+/// Shared state of the online router.
+struct OnlineShared {
+    family: Arc<dyn HashFamily>,
+    index: Arc<ShardedIndex>,
+    feats: Arc<FeatureStore>,
+    stats: Arc<RouterStats>,
+    budget: QueryBudget,
+}
+
+/// Per-query merge rendezvous: shard jobs deposit partial hits; the last
+/// one to finish merges, records stats and resolves the caller's ticket.
+struct MergeState {
+    id: u64,
+    lookup: u64,
+    masks: Arc<Vec<u64>>,
+    w: Vec<f32>,
+    exclude: Option<Arc<HashSet<usize>>>,
+    submitted: Instant,
+    remaining: AtomicUsize,
+    partials: Mutex<Vec<QueryHit>>,
+    reply: Mutex<Option<Sender<QueryResponse>>>,
+}
+
+struct OnlineJob {
+    shard: usize,
+    state: Arc<MergeState>,
+}
+
+/// Fan-out router over a dynamic [`ShardedIndex`]: one job per shard per
+/// query, merged on completion. Writers mutate the index concurrently
+/// through their own `Arc<ShardedIndex>` handle — workers only ever touch
+/// epoch snapshots, so serving and churn never block each other.
+pub struct OnlineRouter {
+    tx: SyncSender<OnlineJob>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    next_id: AtomicU64,
+    stats: Arc<RouterStats>,
+    shared: Arc<OnlineShared>,
+}
+
+impl OnlineRouter {
+    /// Spawn `workers` probe threads. `queue_cap` bounds the *shard job*
+    /// queue (it is raised to at least one full query's fan-out so a
+    /// single submit can never deadlock on its own jobs).
+    pub fn new(
+        family: Arc<dyn HashFamily>,
+        index: Arc<ShardedIndex>,
+        feats: Arc<FeatureStore>,
+        workers: usize,
+        queue_cap: usize,
+        budget: QueryBudget,
+    ) -> Self {
+        let stats = Arc::new(RouterStats::default());
+        let shared = Arc::new(OnlineShared {
+            family,
+            index: index.clone(),
+            feats,
+            stats: stats.clone(),
+            budget,
+        });
+        let (tx, rx) = sync_channel::<OnlineJob>(queue_cap.max(index.shard_count()));
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..workers.max(1))
+            .map(|_| {
+                let rx = rx.clone();
+                let sh = shared.clone();
+                std::thread::spawn(move || online_worker_loop(rx, sh))
+            })
+            .collect();
+        OnlineRouter { tx, workers: handles, next_id: AtomicU64::new(0), stats, shared }
+    }
+
+    pub fn stats(&self) -> &RouterStats {
+        &self.stats
+    }
+
+    pub fn index(&self) -> &Arc<ShardedIndex> {
+        &self.shared.index
+    }
+
+    /// Submit one query: the leader encodes the hyperplane, materializes
+    /// the query-adapted probe plan once, and enqueues one job per shard.
+    pub fn submit(&self, req: QueryRequest) -> Pending {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let lookup = self.shared.family.encode_query(&req.w);
+        let scores = self.shared.family.query_bit_scores(&req.w);
+        let masks = Arc::new(
+            self.shared.index.plan_masks(scores.as_deref(), self.shared.budget.probes),
+        );
+        let n_shards = self.shared.index.shard_count();
+        let (reply_tx, reply_rx) = std::sync::mpsc::channel();
+        let state = Arc::new(MergeState {
+            id,
+            lookup,
+            masks,
+            w: req.w,
+            exclude: req.exclude,
+            submitted: Instant::now(),
+            remaining: AtomicUsize::new(n_shards),
+            partials: Mutex::new(Vec::with_capacity(n_shards)),
+            reply: Mutex::new(Some(reply_tx)),
+        });
+        self.stats.submitted.fetch_add(1, Ordering::Relaxed);
+        for shard in 0..n_shards {
+            self.tx
+                .send(OnlineJob { shard, state: state.clone() })
+                .expect("online router workers are gone");
+        }
+        Pending { id, rx: reply_rx }
+    }
+
+    /// Submit a batch and wait for all responses, in submission order.
+    pub fn submit_batch(&self, reqs: Vec<QueryRequest>) -> Vec<QueryResponse> {
+        let pendings: Vec<Pending> = reqs.into_iter().map(|r| self.submit(r)).collect();
+        pendings.into_iter().map(|p| p.wait()).collect()
+    }
+
+    /// Drain the queue and join the workers.
+    pub fn shutdown(self) {
+        drop(self.tx);
+        for h in self.workers {
+            let _ = h.join();
+        }
+    }
+}
+
+fn online_worker_loop(rx: Arc<Mutex<Receiver<OnlineJob>>>, sh: Arc<OnlineShared>) {
+    loop {
+        let job = {
+            let guard = rx.lock().unwrap();
+            match guard.recv() {
+                Ok(j) => j,
+                Err(_) => return,
+            }
+        };
+        let st = &job.state;
+        let view = sh.index.shards()[job.shard].view();
+        let hit = match &st.exclude {
+            Some(ex) => view.query(
+                &st.masks,
+                st.lookup,
+                &st.w,
+                &sh.feats,
+                sh.budget.top,
+                |i| !ex.contains(&i),
+            ),
+            None => view.query(&st.masks, st.lookup, &st.w, &sh.feats, sh.budget.top, |_| true),
+        };
+        st.partials.lock().unwrap().push(hit);
+        if st.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            // last shard done: merge, record, reply
+            let parts = std::mem::take(&mut *st.partials.lock().unwrap());
+            let hit = merge_hits(&parts);
+            sh.stats.completed.fetch_add(1, Ordering::Relaxed);
+            if !hit.nonempty {
+                sh.stats.empty_lookups.fetch_add(1, Ordering::Relaxed);
+            }
+            sh.stats
+                .candidates_scanned
+                .fetch_add(hit.scanned as u64, Ordering::Relaxed);
+            let latency = st.submitted.elapsed();
+            sh.stats.latencies.lock().unwrap().record_duration(latency);
+            if let Some(tx) = st.reply.lock().unwrap().take() {
+                let _ = tx.send(QueryResponse { id: st.id, hit, latency });
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -280,6 +462,107 @@ mod tests {
         }
         assert!(router.stats().latency_mean() > 0.0);
         assert!(router.stats().latency_p95() >= router.stats().latency_p50());
+        router.shutdown();
+    }
+
+    fn setup_online(
+        n: usize,
+        shards: usize,
+    ) -> (Arc<BhHash>, Arc<ShardedIndex>, Arc<FeatureStore>, Rng) {
+        let mut rng = Rng::seed_from_u64(31);
+        let ds = test_blobs(n, 16, 3, &mut rng);
+        let fam = Arc::new(BhHash::sample(16, 10, &mut rng));
+        let codes = fam.encode_all(ds.features());
+        let idx = Arc::new(ShardedIndex::from_codes(&codes, 4, shards));
+        (fam, idx, Arc::new(ds.features().clone()), rng)
+    }
+
+    #[test]
+    fn online_router_matches_inline_query() {
+        let (fam, idx, feats, mut rng) = setup_online(600, 4);
+        let budget = QueryBudget::unlimited();
+        let router = OnlineRouter::new(fam.clone(), idx.clone(), feats.clone(), 3, 16, budget);
+        for _ in 0..12 {
+            let w = unit_vec(&mut rng, 16);
+            let direct = idx.query(fam.as_ref(), &w, &feats, budget, |_| true);
+            let resp = router.submit(QueryRequest { w, exclude: None }).wait();
+            assert_eq!(resp.hit.best.map(|(i, _)| i), direct.best.map(|(i, _)| i));
+            assert_eq!(resp.hit.scanned, direct.scanned);
+            assert_eq!(resp.hit.nonempty, direct.nonempty);
+        }
+        assert_eq!(router.stats().completed.load(Ordering::Relaxed), 12);
+        router.shutdown();
+    }
+
+    #[test]
+    fn online_router_serves_during_churn() {
+        let (fam, idx, feats, mut rng) = setup_online(800, 4);
+        let router = Arc::new(OnlineRouter::new(
+            fam.clone(),
+            idx.clone(),
+            feats.clone(),
+            2,
+            8,
+            QueryBudget::unlimited(),
+        ));
+        // writer thread: remove even ids, re-insert some
+        let widx = idx.clone();
+        let wfam = fam.clone();
+        let wfeats = feats.clone();
+        let writer = std::thread::spawn(move || {
+            for id in (0..800u32).step_by(2) {
+                widx.remove(id);
+                if id % 8 == 0 {
+                    widx.insert_point(wfam.as_ref(), id, wfeats.row(id as usize));
+                }
+            }
+            widx.compact();
+        });
+        let mut answered = 0usize;
+        for _ in 0..30 {
+            let w = unit_vec(&mut rng, 16);
+            let resp = router.submit(QueryRequest { w, exclude: None }).wait();
+            if let Some((i, m)) = resp.hit.best {
+                assert!(i < 800);
+                assert!(m.is_finite() && m >= 0.0);
+                answered += 1;
+            }
+        }
+        writer.join().unwrap();
+        // after churn settles: removed-and-not-reinserted ids never surface
+        for _ in 0..20 {
+            let w = unit_vec(&mut rng, 16);
+            let resp = router.submit(QueryRequest { w, exclude: None }).wait();
+            if let Some((i, _)) = resp.hit.best {
+                let i = i as u32;
+                assert!(i % 2 == 1 || i % 8 == 0, "removed id {i} returned");
+            }
+        }
+        assert!(answered > 0, "full-ball queries on 800 points should hit");
+    }
+
+    #[test]
+    fn online_router_respects_exclusions_and_order() {
+        let (fam, idx, feats, mut rng) = setup_online(300, 2);
+        let router =
+            OnlineRouter::new(fam, idx, feats, 2, 4, QueryBudget::unlimited());
+        let w = unit_vec(&mut rng, 16);
+        let first = router.submit(QueryRequest { w: w.clone(), exclude: None }).wait();
+        let reqs: Vec<QueryRequest> = (0..8)
+            .map(|_| QueryRequest { w: w.clone(), exclude: None })
+            .collect();
+        let resps = router.submit_batch(reqs);
+        for (i, r) in resps.iter().enumerate() {
+            assert_eq!(r.id, 1 + i as u64, "submission order preserved");
+        }
+        if let Some((best, _)) = first.hit.best {
+            let mut ex = HashSet::new();
+            ex.insert(best);
+            let filtered = router
+                .submit(QueryRequest { w, exclude: Some(Arc::new(ex)) })
+                .wait();
+            assert_ne!(filtered.hit.best.map(|(i, _)| i), Some(best));
+        }
         router.shutdown();
     }
 

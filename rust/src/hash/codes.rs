@@ -285,6 +285,47 @@ mod tests {
     }
 
     #[test]
+    fn ball_weight_classes_have_binomial_counts() {
+        // each distance ring inside the ball is complete: exactly C(k,w)
+        // masks of weight w, so a prefix of the enumeration is always a
+        // union of full rings plus part of the last ring
+        forall("ring sizes are binomial", 32, |rng| {
+            let k = rng.range(2, 20);
+            let r = rng.range(0, k.min(5) + 1);
+            let mut per_weight = vec![0u64; r + 1];
+            for m in HammingBall::new(k, r) {
+                per_weight[m.count_ones() as usize] += 1;
+            }
+            for (w, &count) in per_weight.iter().enumerate() {
+                crate::prop_assert!(
+                    count == binom(k, w),
+                    "k={k} r={r}: weight {w} has {count} masks, want {}",
+                    binom(k, w)
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ball_enumeration_agrees_with_planner_set() {
+        // the online planner and the static ball walker must agree on the
+        // probe universe for any cost assignment (order may differ)
+        forall("ball == planner universe", 16, |rng| {
+            let k = rng.range(2, 16);
+            let r = rng.range(0, k.min(4) + 1);
+            let costs: Vec<f64> = (0..k).map(|_| 0.5 + rng.f64()).collect();
+            let planner = crate::online::ProbePlanner::with_costs(k, r, costs);
+            let mut a: Vec<u64> = HammingBall::new(k, r).collect();
+            let mut b: Vec<u64> = planner.plan(usize::MAX).collect();
+            a.sort_unstable();
+            b.sort_unstable();
+            crate::prop_assert!(a == b, "k={k} r={r}: universes differ");
+            Ok(())
+        });
+    }
+
+    #[test]
     fn ball_radius_zero_is_exact_bucket() {
         let masks: Vec<u64> = HammingBall::new(16, 0).collect();
         assert_eq!(masks, vec![0]);

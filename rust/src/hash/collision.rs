@@ -88,6 +88,63 @@ where
     hits as f64 / trials as f64
 }
 
+// ──────────────────── probe-ordering model (online serving) ────────────────────
+
+/// Per-bit collision model backing the online [`crate::online::ProbePlanner`]:
+/// a *target* (near-hyperplane) point matches each lookup bit independently
+/// with probability `p₁(r_target)`, while a *background* point matches with
+/// `p₁(r_background) < p₁(r_target)` (Lemma 1 is monotone decreasing in r).
+/// A bucket at flip-mask `m` is worth probing in proportion to how strongly
+/// it is *enriched* in targets relative to background — the likelihood ratio
+///
+/// ```text
+/// L(m) = Π_{j∈m} (1−p_t)/(1−p_b) · Π_{j∉m} p_t/p_b
+/// ```
+///
+/// which decays by a constant odds factor per flipped bit. The planner works
+/// in −log space: each flipped bit costs [`CollisionModel::bit_cost`] ≥ 0 and
+/// best-first probing visits masks by ascending total cost (descending
+/// modeled collision mass).
+#[derive(Clone, Copy, Debug)]
+pub struct CollisionModel {
+    /// distance r = α² the retrieval targets sit at (small)
+    pub r_target: f64,
+    /// distance of the background bulk (large)
+    pub r_background: f64,
+}
+
+impl CollisionModel {
+    /// Defaults matched to the paper's regime: targets within α ≈ 0.15 rad
+    /// of the hyperplane against a bulk at the domain midpoint.
+    pub fn bh_default() -> Self {
+        CollisionModel { r_target: 0.15 * 0.15, r_background: 0.5 * R_MAX }
+    }
+
+    /// The per-flipped-bit log-odds cost
+    /// `ln[(p_t/(1−p_t)) / (p_b/(1−p_b))]` under the BH family (Lemma 1),
+    /// clamped to be non-negative and finite.
+    pub fn bit_cost(&self) -> f64 {
+        let clamp = |p: f64| p.clamp(1e-6, 0.5);
+        let pt = clamp(p_bh(self.r_target));
+        let pb = clamp(p_bh(self.r_background));
+        let odds = |p: f64| p / (1.0 - p);
+        (odds(pt) / odds(pb)).ln().max(0.0)
+    }
+}
+
+/// Modeled (relative) collision mass of probing flip-mask `mask` when bit j
+/// costs `costs[j]`: `exp(−Σ_{j∈mask} costs[j])`, normalized so the exact
+/// bucket (empty mask) has mass 1.
+pub fn probe_mass(mask: u64, costs: &[f64]) -> f64 {
+    let mut total = 0.0f64;
+    for (j, &c) in costs.iter().enumerate() {
+        if (mask >> j) & 1 == 1 {
+            total += c;
+        }
+    }
+    (-total).exp()
+}
+
 /// Convenience Monte-Carlo estimators for the three randomized families.
 pub fn mc_bh(alpha: f64, dim: usize, trials: usize, rng: &mut Rng) -> f64 {
     mc_collision(alpha, dim, trials, rng, |r| BhHash::sample(dim, 1, r))
@@ -189,6 +246,30 @@ mod tests {
         assert!(bits >= 10, "bits {bits}");
         // out-of-domain r(1+ε) → None
         assert!(theorem2_params(p_ah, R_MAX, 3.0, 100).is_none());
+    }
+
+    #[test]
+    fn collision_model_cost_positive_and_monotone() {
+        let m = CollisionModel::bh_default();
+        let c = m.bit_cost();
+        assert!(c > 0.0 && c.is_finite(), "cost {c}");
+        // widening the target/background gap raises the per-bit cost
+        let tighter = CollisionModel { r_target: 0.01, r_background: 0.9 * R_MAX };
+        assert!(tighter.bit_cost() > c);
+        // degenerate model (target == background) has zero cost: all probes
+        // equally worthwhile, planner falls back to weight ordering
+        let flat = CollisionModel { r_target: 0.3, r_background: 0.3 };
+        assert!(flat.bit_cost().abs() < 1e-12);
+    }
+
+    #[test]
+    fn probe_mass_multiplies_per_flipped_bit() {
+        let costs = vec![0.5f64, 1.0, 2.0];
+        assert!((probe_mass(0b000, &costs) - 1.0).abs() < 1e-12);
+        assert!((probe_mass(0b001, &costs) - (-0.5f64).exp()).abs() < 1e-12);
+        assert!((probe_mass(0b110, &costs) - (-3.0f64).exp()).abs() < 1e-12);
+        // more flips at equal cost ⇒ strictly less mass
+        assert!(probe_mass(0b111, &costs) < probe_mass(0b011, &costs));
     }
 
     #[test]

@@ -46,6 +46,15 @@ pub trait HashFamily: Send + Sync {
     /// informative (small-α) points land at small Hamming distance.
     fn encode_query(&self, w: &[f32]) -> u64;
 
+    /// Per-bit confidence of the query encoding: the pre-sign score
+    /// magnitude `|s_j|` of each bit, used by the online probe planner to
+    /// flip low-confidence bits first (query-directed multi-probe, in the
+    /// spirit of Lv et al.). `None` means the family exposes no natural
+    /// score and the planner falls back to uniform per-bit costs.
+    fn query_bit_scores(&self, _w: &[f32]) -> Option<Vec<f32>> {
+        None
+    }
+
     /// Encode every row of a feature store (native CPU path; the PJRT
     /// batch path in `crate::runtime` produces identical codes).
     fn encode_all(&self, feats: &crate::data::FeatureStore) -> codes::CodeArray {
@@ -122,6 +131,13 @@ fn bilinear_encode(pairs: &ProjectionPairs, x: FeatRef<'_>) -> u64 {
     pack_signs(&prods)
 }
 
+/// Pre-sign bilinear score magnitudes |(u_jᵀw)(w ᵀv_j)| of a query — the
+/// bit-flip confidence shared by BH and LBH.
+fn bilinear_query_scores(pairs: &ProjectionPairs, w: &[f32]) -> Vec<f32> {
+    let (pu, pv) = pairs.project(FeatRef::Dense(w));
+    pu.iter().zip(pv.iter()).map(|(a, b)| (a * b).abs()).collect()
+}
+
 /// Batch bilinear encode. Dense stores go through a row-blocked GEMM
 /// (`(X·Uᵀ) ⊙ (X·Vᵀ)` with k-wide accumulator rows) instead of per-point
 /// dot products — ~2× faster from cache locality alone (§Perf pass).
@@ -190,6 +206,10 @@ impl HashFamily for BhHash {
         flip(bilinear_encode(&self.pairs, FeatRef::Dense(w)), self.bits())
     }
 
+    fn query_bit_scores(&self, w: &[f32]) -> Option<Vec<f32>> {
+        Some(bilinear_query_scores(&self.pairs, w))
+    }
+
     fn encode_all(&self, feats: &crate::data::FeatureStore) -> codes::CodeArray {
         bilinear_encode_all(&self.pairs, feats)
     }
@@ -224,6 +244,10 @@ impl HashFamily for LbhHash {
 
     fn encode_query(&self, w: &[f32]) -> u64 {
         flip(bilinear_encode(&self.pairs, FeatRef::Dense(w)), self.bits())
+    }
+
+    fn query_bit_scores(&self, w: &[f32]) -> Option<Vec<f32>> {
+        Some(bilinear_query_scores(&self.pairs, w))
     }
 
     fn encode_all(&self, feats: &crate::data::FeatureStore) -> codes::CodeArray {
@@ -561,6 +585,29 @@ mod tests {
             d_perp < d_par,
             "perp total {d_perp} should be < near-parallel total {d_par}"
         );
+    }
+
+    #[test]
+    fn query_bit_scores_are_presign_magnitudes() {
+        let mut rng = Rng::seed_from_u64(17);
+        let bh = BhHash::sample(24, 14, &mut rng);
+        let w = unit_vec(&mut rng, 24);
+        let scores = bh.query_bit_scores(&w).expect("BH exposes scores");
+        assert_eq!(scores.len(), 14);
+        assert!(scores.iter().all(|s| *s >= 0.0), "magnitudes are non-negative");
+        // consistency: sign of the raw bilinear product must reproduce the
+        // (pre-flip) point encoding of w
+        let (pu, pv) = bh.pairs.project(FeatRef::Dense(&w));
+        let point = bh.encode_point(FeatRef::Dense(&w));
+        for j in 0..14 {
+            let prod = pu[j] * pv[j];
+            assert!((prod.abs() - scores[j]).abs() < 1e-6, "bit {j}");
+            let bit = (point >> j) & 1;
+            assert_eq!(bit == 1, prod >= 0.0, "bit {j} sign");
+        }
+        // EH keeps the uniform fallback
+        let eh = EhHash::sampled(24, 8, 32, &mut rng);
+        assert!(eh.query_bit_scores(&w).is_none());
     }
 
     #[test]

@@ -14,8 +14,10 @@
 //!
 //! * **L3 (this crate)** — the coordinator: hash tables, Hamming-ball
 //!   lookup, the LBH trainer driver, the SVM active-learning engine, a
-//!   hyperplane-query router/batcher, and the PJRT runtime that executes
-//!   AOT-compiled XLA artifacts.
+//!   hyperplane-query router/batcher, the online serving subsystem
+//!   (sharded dynamic index + probability-ordered multi-probe, see
+//!   [`online`]), and the PJRT runtime that executes AOT-compiled XLA
+//!   artifacts.
 //! * **L2 (python/compile/model.py)** — JAX graphs for batch encoding,
 //!   LBH Nesterov training steps, margin scans and Hamming ranking, lowered
 //!   once to HLO text by `make artifacts`.
@@ -47,6 +49,28 @@
 //! let hit = index.query(&family, &w, data.features());
 //! println!("{hit:?}");
 //! ```
+//!
+//! ## Online serving
+//!
+//! The static table answers queries over a fixed database; the [`online`]
+//! subsystem serves a *changing* one — dynamic insert/remove, per-shard
+//! epoch snapshots and a best-first probe planner with a per-query budget
+//! (`docs/ONLINE.md` has the architecture notes):
+//!
+//! ```no_run
+//! use chh::prelude::*;
+//!
+//! let mut rng = Rng::seed_from_u64(7);
+//! let data = chh::data::tiny1m_like(&TinyConfig { n: 20_000, ..TinyConfig::default() }, &mut rng);
+//! let family = chh::hash::BhHash::sample(data.dim(), 20, &mut rng);
+//! let index = ShardedIndex::new(20, 4, 8);
+//! for i in 0..data.len() {
+//!     index.insert_point(&family, i as u32, data.features().row(i));
+//! }
+//! let w = vec![0.1f32; data.dim()];
+//! let hit = index.query(&family, &w, data.features(), QueryBudget::new(512, 64), |_| true);
+//! index.remove(hit.best.map(|(i, _)| i as u32).unwrap_or(0));
+//! ```
 
 pub mod active;
 pub mod bench;
@@ -60,6 +84,7 @@ pub mod jsonio;
 pub mod lbh;
 pub mod linalg;
 pub mod metrics;
+pub mod online;
 pub mod persist;
 pub mod report;
 pub mod rng;
@@ -75,6 +100,7 @@ pub mod prelude {
     pub use crate::data::{newsgroups_like, tiny1m_like, Dataset, FeatureStore, NewsConfig, TinyConfig};
     pub use crate::hash::{AhHash, BhHash, EhHash, HashFamily, LbhHash};
     pub use crate::lbh::{LbhTrainer, LbhTrainConfig};
+    pub use crate::online::{ProbePlanner, QueryBudget, ShardedIndex};
     pub use crate::rng::Rng;
     pub use crate::svm::{LinearSvm, SvmConfig};
     pub use crate::table::{HyperplaneIndex, QueryHit};

@@ -6,6 +6,7 @@
 //! * `al-run`          — one active-learning experiment (Figs. 3/4 rows)
 //! * `train-hash`      — train LBH projections and report diagnostics
 //! * `serve`           — run the hyperplane-query router on synthetic load
+//! * `serve-online`    — sharded dynamic index under 50/50 churn + queries
 //! * `encode`          — batch-encode a synthetic dataset (native vs PJRT)
 
 use std::sync::Arc;
@@ -34,6 +35,7 @@ fn main() {
         "al-run" => cmd_al_run(&rest),
         "train-hash" => cmd_train_hash(&rest),
         "serve" => cmd_serve(&rest),
+        "serve-online" => cmd_serve_online(&rest),
         "encode" => cmd_encode(&rest),
         "eval" => cmd_eval(&rest),
         "theorem2" => cmd_theorem2(&rest),
@@ -61,6 +63,7 @@ fn usage() -> String {
        al-run        active-learning experiment (one strategy)\n\
        train-hash    train LBH projections, print diagnostics\n\
        serve         hyperplane-query router under synthetic load\n\
+       serve-online  sharded dynamic index under churn + query load\n\
        encode        batch-encode a synthetic dataset (native vs PJRT)\n\
        eval          retrieval quality (recall@T, margin ratio) per family\n\
        theorem2      randomized multi-table LSH vs the compact single table\n\
@@ -457,6 +460,131 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
         st.latency_p95() * 1e6,
         st.empty_lookups.load(std::sync::atomic::Ordering::Relaxed)
     );
+    router.shutdown();
+    Ok(())
+}
+
+fn cmd_serve_online(rest: &[String]) -> anyhow::Result<()> {
+    use chh::online::{QueryBudget, ShardedIndex};
+    let args = ExperimentConfig::cli_opts(Args::new(
+        "chh serve-online",
+        "sharded dynamic index under concurrent churn + query load",
+    ))
+    .opt("queries", "2000", "number of hyperplane queries")
+    .opt("workers", "4", "router worker threads")
+    .opt("shards", "8", "index shards")
+    .opt("probes", "0", "per-query probe budget (0 = full Hamming ball)")
+    .opt("top", "64", "stop probing once this many candidates are ranked")
+    .opt("churn-ops", "0", "insert/remove ops run concurrently (0 = n/2)")
+    .opt("snapshot", "", "save the post-churn shard snapshot to this path");
+    let p = args.parse(rest).map_err(|h| anyhow::anyhow!("{h}"))?;
+    let cfg = ExperimentConfig::from_parsed(&p)?;
+    let queries = p.usize("queries")?;
+    let workers = p.usize("workers")?;
+    let shards = p.usize("shards")?.max(1);
+    let top = p.usize("top")?.max(1);
+    let mut rng = Rng::seed_from_u64(cfg.seed);
+    let data = make_dataset(&cfg, &mut rng);
+    let fam: Arc<dyn HashFamily> = Arc::new(BhHash::sample(data.dim(), cfg.bits(), &mut rng));
+    let index = Arc::new(ShardedIndex::new(cfg.bits(), cfg.radius(), shards));
+    let warm = data.len() * 3 / 4;
+    let t0 = std::time::Instant::now();
+    for i in 0..warm {
+        index.insert_point(fam.as_ref(), i as u32, data.features().row(i));
+    }
+    index.compact();
+    let probes = match p.usize("probes")? {
+        0 => index.planner().full_volume() as usize,
+        v => v,
+    };
+    let budget = QueryBudget::new(probes, top);
+    println!(
+        "serve-online: n={} warm={warm} k={} r={} shards={shards} probes={probes} top={top}  (built in {:.2}s)",
+        data.len(),
+        cfg.bits(),
+        cfg.radius(),
+        t0.elapsed().as_secs_f64()
+    );
+    let feats = Arc::new(data.features().clone());
+    let router = chh::coordinator::OnlineRouter::new(
+        fam.clone(),
+        index.clone(),
+        feats.clone(),
+        workers,
+        256,
+        budget,
+    );
+    // concurrent churn: 50/50 inserts (new points) and removes (random live)
+    let churn_ops = match p.usize("churn-ops")? {
+        0 => data.len() / 2,
+        v => v,
+    };
+    let churn_idx = index.clone();
+    let churn_fam = fam.clone();
+    let churn_feats = feats.clone();
+    let churn_seed = cfg.seed ^ 0xC0FFEE;
+    let churn = std::thread::spawn(move || {
+        let mut rng = Rng::seed_from_u64(churn_seed);
+        let n = churn_feats.len();
+        let mut inserted = warm;
+        for op in 0..churn_ops {
+            if op % 2 == 0 && inserted < n {
+                churn_idx.insert_point(
+                    churn_fam.as_ref(),
+                    inserted as u32,
+                    churn_feats.row(inserted),
+                );
+                inserted += 1;
+            } else {
+                let victim = rng.below(inserted.max(1)) as u32;
+                churn_idx.remove(victim);
+            }
+        }
+        churn_ops
+    });
+    let t0 = std::time::Instant::now();
+    let mut done = 0usize;
+    while done < queries {
+        let take = 16.min(queries - done);
+        let reqs: Vec<_> = (0..take)
+            .map(|_| chh::coordinator::QueryRequest {
+                w: chh::testing::unit_vec(&mut rng, data.dim()),
+                exclude: None,
+            })
+            .collect();
+        let _ = router.submit_batch(reqs);
+        done += take;
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let ops = churn.join().expect("churn thread");
+    let st = router.stats();
+    use std::sync::atomic::Ordering::Relaxed;
+    println!(
+        "{queries} queries + {ops} churn ops in {secs:.3}s  ({:.0} qps)",
+        queries as f64 / secs
+    );
+    println!(
+        "  latency   : p50 {:.1}µs  p95 {:.1}µs  mean {:.1}µs",
+        st.latency_p50() * 1e6,
+        st.latency_p95() * 1e6,
+        st.latency_mean() * 1e6
+    );
+    println!(
+        "  scanned/q : {:.1}   empty {}   live points {}",
+        st.candidates_scanned.load(Relaxed) as f64 / queries.max(1) as f64,
+        st.empty_lookups.load(Relaxed),
+        index.len()
+    );
+    println!(
+        "  epochs    : {:?}  (memory ~ {:.1} MB)",
+        index.epochs(),
+        index.memory_bytes() as f64 / 1e6
+    );
+    let snap = p.str("snapshot");
+    if !snap.is_empty() {
+        chh::persist::save_sharded(std::path::Path::new(snap), &index)?;
+        println!("  snapshot  : saved to {snap}");
+    }
     router.shutdown();
     Ok(())
 }

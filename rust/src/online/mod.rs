@@ -1,0 +1,442 @@
+//! Online serving: a sharded *dynamic* hyperplane index with
+//! probability-ordered multi-probe.
+//!
+//! [`crate::table::HyperplaneIndex`] is build-once/static — the right shape
+//! for reproducing the paper's figures, the wrong shape for the serving
+//! deployment the roadmap targets (heavy traffic, millions of points,
+//! continuous active-learning label churn). This module adds the dynamic
+//! half of the stack:
+//!
+//! * [`ShardedIndex`] — N independent [`Shard`]s, each a frozen generation
+//!   plus a small mutable delta with `insert`/`remove`/`compact` and
+//!   epoch-versioned snapshots ([`ShardView`]), so readers never block
+//!   writers and writers never invalidate an in-flight query.
+//! * [`ProbePlanner`] — replaces blind radius-order Hamming-ball
+//!   enumeration with a best-first probe sequence: candidate lookup codes
+//!   ordered by modeled collision mass under the bilinear collision model
+//!   `p₁ = 1/2 − 2α²/π²` (Lemma 1, [`crate::hash::collision`]), optionally
+//!   sharpened per query by the family's pre-sign bit scores.
+//! * [`QueryBudget`] — per-query probe budget `T` plus a `top` early-exit:
+//!   stop probing once that many candidates have been margin-ranked.
+//!
+//! The fan-out/merge serving layer on top of this lives in
+//! [`crate::coordinator::OnlineRouter`]; snapshot persistence in
+//! [`crate::persist::save_sharded`]. See `docs/ONLINE.md` for the full
+//! architecture notes.
+
+mod probe;
+mod shard;
+
+pub use probe::{ProbePlan, ProbePlanner};
+pub use shard::{Shard, ShardView};
+
+use crate::data::{FeatRef, FeatureStore};
+use crate::hash::codes::CodeArray;
+use crate::hash::collision::CollisionModel;
+use crate::hash::HashFamily;
+use crate::table::QueryHit;
+
+/// Per-query probe spending policy. Both limits apply **per shard** —
+/// shards are probed independently (and, in the coordinator, in
+/// parallel), so they cannot cheaply coordinate a global candidate
+/// count. [`ShardedIndex::query_code`] and
+/// [`crate::coordinator::OnlineRouter`] share these semantics exactly.
+#[derive(Clone, Copy, Debug)]
+pub struct QueryBudget {
+    /// maximum buckets probed (best-first), per shard
+    pub probes: usize,
+    /// stop probing a shard once this many of its candidates have been
+    /// margin-ranked
+    pub top: usize,
+}
+
+impl QueryBudget {
+    pub fn new(probes: usize, top: usize) -> Self {
+        QueryBudget { probes, top }
+    }
+
+    /// No limits: probe the full ball — the static-table behavior.
+    pub fn unlimited() -> Self {
+        QueryBudget { probes: usize::MAX, top: usize::MAX }
+    }
+}
+
+impl Default for QueryBudget {
+    fn default() -> Self {
+        Self::unlimited()
+    }
+}
+
+/// Merge shard-local partial hits into one [`QueryHit`]: best = smallest
+/// margin, counters summed.
+pub fn merge_hits(parts: &[QueryHit]) -> QueryHit {
+    let mut out = QueryHit::default();
+    for p in parts {
+        out.scanned += p.scanned;
+        out.probed += p.probed;
+        out.nonempty |= p.nonempty;
+        if let Some((id, m)) = p.best {
+            if out.best.map_or(true, |(_, bm)| m < bm) {
+                out.best = Some((id, m));
+            }
+        }
+    }
+    out
+}
+
+/// Sharded dynamic hyperplane index.
+///
+/// Ids are row indices into the serving [`FeatureStore`] (the store itself
+/// is append-only in a deployment; the index controls visibility). Routing
+/// is `id % shards`, so sequential id spaces balance perfectly and a
+/// persisted snapshot reloads onto the same layout.
+pub struct ShardedIndex {
+    k: usize,
+    radius: usize,
+    planner: ProbePlanner,
+    shards: Vec<Shard>,
+    /// auto-compact a shard when its delta reaches this many slots
+    /// (0 disables auto-compaction)
+    compact_threshold: usize,
+}
+
+impl ShardedIndex {
+    /// Empty index over `k`-bit codes with flip radius `radius` and
+    /// `n_shards` shards, probe order from the default BH collision model.
+    pub fn new(k: usize, radius: usize, n_shards: usize) -> Self {
+        Self::with_planner(
+            ProbePlanner::from_model(k, radius, &CollisionModel::bh_default()),
+            n_shards,
+        )
+    }
+
+    /// Empty index with an explicit probe policy.
+    pub fn with_planner(planner: ProbePlanner, n_shards: usize) -> Self {
+        assert!(n_shards >= 1, "need at least one shard");
+        ShardedIndex {
+            k: planner.bits(),
+            radius: planner.radius(),
+            planner,
+            shards: (0..n_shards).map(|_| Shard::new()).collect(),
+            compact_threshold: 4096,
+        }
+    }
+
+    /// Bulk-load precomputed codes (ids 0..n), then compact every shard so
+    /// serving starts from frozen generations.
+    pub fn from_codes(codes: &CodeArray, radius: usize, n_shards: usize) -> Self {
+        let idx = Self::new(codes.k, radius, n_shards);
+        for (i, &c) in codes.codes.iter().enumerate() {
+            idx.insert(i as u32, c);
+        }
+        idx.compact();
+        idx
+    }
+
+    /// Auto-compaction threshold (delta slots per shard); 0 disables.
+    pub fn set_compact_threshold(&mut self, slots: usize) {
+        self.compact_threshold = slots;
+    }
+
+    pub fn bits(&self) -> usize {
+        self.k
+    }
+
+    pub fn radius(&self) -> usize {
+        self.radius
+    }
+
+    pub fn planner(&self) -> &ProbePlanner {
+        &self.planner
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shards(&self) -> &[Shard] {
+        &self.shards
+    }
+
+    #[inline]
+    pub fn shard_of(&self, id: u32) -> usize {
+        id as usize % self.shards.len()
+    }
+
+    /// Live points across all shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.iter().all(|s| s.is_empty())
+    }
+
+    /// Per-shard compaction epochs.
+    pub fn epochs(&self) -> Vec<u64> {
+        self.shards.iter().map(|s| s.epoch()).collect()
+    }
+
+    /// Sum of shard epochs — a monotone global version counter.
+    pub fn total_epoch(&self) -> u64 {
+        self.shards.iter().map(|s| s.epoch()).sum()
+    }
+
+    /// Approximate heap footprint across shards.
+    pub fn memory_bytes(&self) -> usize {
+        self.shards.iter().map(|s| s.memory_bytes()).sum()
+    }
+
+    #[inline]
+    fn maybe_compact(&self, shard: &Shard) {
+        if self.compact_threshold > 0 && shard.pending_len() >= self.compact_threshold {
+            shard.compact();
+        }
+    }
+
+    /// Insert (or upsert) a precomputed code.
+    pub fn insert(&self, id: u32, code: u64) {
+        let shard = &self.shards[self.shard_of(id)];
+        shard.insert(id, code);
+        self.maybe_compact(shard);
+    }
+
+    /// Encode a feature row with `family` and insert it.
+    pub fn insert_point(&self, family: &dyn HashFamily, id: u32, x: FeatRef<'_>) {
+        debug_assert_eq!(family.bits(), self.k, "family code length mismatch");
+        self.insert(id, family.encode_point(x));
+    }
+
+    /// Remove a point; returns whether it was live. Remove-heavy phases
+    /// auto-compact too — frozen tombstones count toward the threshold,
+    /// keeping per-query view snapshots cheap.
+    pub fn remove(&self, id: u32) -> bool {
+        let shard = &self.shards[self.shard_of(id)];
+        let removed = shard.remove(id);
+        if removed {
+            self.maybe_compact(shard);
+        }
+        removed
+    }
+
+    /// Whether `id` is currently live.
+    pub fn contains(&self, id: u32) -> bool {
+        self.shards[self.shard_of(id)].contains(id)
+    }
+
+    /// Compact every shard.
+    pub fn compact(&self) {
+        for s in &self.shards {
+            s.compact();
+        }
+    }
+
+    /// Point-in-time views of all shards (one epoch-consistent snapshot
+    /// per shard; the set is the unit the coordinator fans out over).
+    pub fn views(&self) -> Vec<ShardView> {
+        self.shards.iter().map(|s| s.view()).collect()
+    }
+
+    /// Materialize the best-first probe sequence for a query: at most
+    /// `probes` flip masks (never more than the radius-`r` ball volume —
+    /// the plan iterator is exhausted before that), query-adapted when
+    /// per-bit scores are given. Materialization is what lets the
+    /// coordinator share one plan across parallel shard jobs; with large
+    /// `k`/`radius`, pass a finite `probes` rather than relying on `top`
+    /// alone, since `top` only bounds probing, not planning.
+    pub fn plan_masks(&self, scores: Option<&[f32]>, probes: usize) -> Vec<u64> {
+        match scores {
+            Some(s) => self.planner.query_scaled(s).plan(probes).collect(),
+            None => self.planner.plan(probes).collect(),
+        }
+    }
+
+    /// Query with a precomputed lookup code (and optional per-bit scores),
+    /// probing every shard inline: one shared probe plan, one
+    /// [`ShardView::query`] per shard, partials merged with
+    /// [`merge_hits`] — the same semantics (and per-shard `top`) as the
+    /// coordinator's parallel path, minus the threads. `probed`/`scanned`
+    /// therefore count per-shard work summed over shards.
+    pub fn query_code(
+        &self,
+        lookup: u64,
+        scores: Option<&[f32]>,
+        w: &[f32],
+        feats: &FeatureStore,
+        budget: QueryBudget,
+        eligible: impl Fn(usize) -> bool,
+    ) -> QueryHit {
+        let masks = self.plan_masks(scores, budget.probes);
+        let parts: Vec<QueryHit> = self
+            .views()
+            .iter()
+            .map(|v| v.query(&masks, lookup, w, feats, budget.top, &eligible))
+            .collect();
+        merge_hits(&parts)
+    }
+
+    /// Full query: encode the hyperplane, adapt the probe order to the
+    /// query's bit confidences, probe, margin-rank.
+    pub fn query(
+        &self,
+        family: &dyn HashFamily,
+        w: &[f32],
+        feats: &FeatureStore,
+        budget: QueryBudget,
+        eligible: impl Fn(usize) -> bool,
+    ) -> QueryHit {
+        let lookup = family.encode_query(w);
+        let scores = family.query_bit_scores(w);
+        self.query_code(lookup, scores.as_deref(), w, feats, budget, eligible)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::test_blobs;
+    use crate::hash::BhHash;
+    use crate::rng::Rng;
+    use crate::testing::unit_vec;
+
+    #[test]
+    fn routing_balances_sequential_ids() {
+        let idx = ShardedIndex::new(8, 2, 4);
+        for id in 0..1000u32 {
+            idx.insert(id, (id % 13) as u64);
+        }
+        assert_eq!(idx.len(), 1000);
+        for s in idx.shards() {
+            assert_eq!(s.len(), 250);
+        }
+    }
+
+    #[test]
+    fn query_finds_minimum_margin_like_static_index() {
+        let mut rng = Rng::seed_from_u64(21);
+        let ds = test_blobs(400, 16, 4, &mut rng);
+        let fam = BhHash::sample(16, 8, &mut rng);
+        // radius = bits ⇒ the whole code space: every point is a candidate
+        let codes = fam.encode_all(ds.features());
+        let idx = ShardedIndex::from_codes(&codes, 8, 3);
+        let w = unit_vec(&mut rng, 16);
+        let hit = idx.query(&fam, &w, ds.features(), QueryBudget::unlimited(), |_| true);
+        assert!(hit.nonempty);
+        let (best_i, best_m) = hit.best.unwrap();
+        let wn = crate::linalg::nrm2(&w);
+        let mut bf = (0usize, f32::INFINITY);
+        for i in 0..ds.len() {
+            let m = crate::linalg::margin_feat(ds.features().row(i), &w, wn);
+            if m < bf.1 {
+                bf = (i, m);
+            }
+        }
+        assert_eq!(best_i, bf.0);
+        assert!((best_m - bf.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn removed_points_never_returned() {
+        let mut rng = Rng::seed_from_u64(22);
+        let ds = test_blobs(300, 16, 3, &mut rng);
+        let fam = BhHash::sample(16, 10, &mut rng);
+        let codes = fam.encode_all(ds.features());
+        let idx = ShardedIndex::from_codes(&codes, 10, 4);
+        let w = unit_vec(&mut rng, 16);
+        // peel off the best candidate 20 times; it must never reappear
+        let mut removed = Vec::new();
+        for _ in 0..20 {
+            let hit = idx.query(&fam, &w, ds.features(), QueryBudget::unlimited(), |_| true);
+            let (best, _) = hit.best.expect("full-space query finds something");
+            assert!(
+                !removed.contains(&(best as u32)),
+                "removed id {best} resurfaced"
+            );
+            assert!(idx.remove(best as u32));
+            removed.push(best as u32);
+        }
+        assert_eq!(idx.len(), 280);
+    }
+
+    #[test]
+    fn probe_budget_limits_buckets() {
+        let mut rng = Rng::seed_from_u64(23);
+        let ds = test_blobs(500, 16, 3, &mut rng);
+        let fam = BhHash::sample(16, 12, &mut rng);
+        let codes = fam.encode_all(ds.features());
+        let idx = ShardedIndex::from_codes(&codes, 3, 2);
+        let w = unit_vec(&mut rng, 16);
+        let hit = idx.query(&fam, &w, ds.features(), QueryBudget::new(17, usize::MAX), |_| true);
+        // budget is per shard; probed sums over the 2 shards
+        assert!(hit.probed <= 2 * 17, "budget respected, probed {}", hit.probed);
+        assert!(hit.probed >= 17, "both shards probe the planned masks");
+    }
+
+    #[test]
+    fn top_early_exit_stops_probing() {
+        let idx = ShardedIndex::new(8, 8, 1);
+        // all points in one bucket at distance 1 from the lookup
+        for id in 0..50u32 {
+            idx.insert(id, 0b0000_0001);
+        }
+        let feats = FeatureStore::Dense(crate::linalg::Mat::zeros(50, 4));
+        let hit = idx.query_code(
+            0,
+            None,
+            &[1.0; 4],
+            &feats,
+            QueryBudget::new(usize::MAX, 10),
+            |_| true,
+        );
+        // the planner needed only to reach the weight-1 ring
+        assert!(hit.probed < 20, "early exit after top hit, probed {}", hit.probed);
+        assert!(hit.scanned >= 10);
+    }
+
+    #[test]
+    fn auto_compaction_bounds_delta() {
+        let mut idx = ShardedIndex::new(8, 2, 2);
+        idx.set_compact_threshold(64);
+        for id in 0..1000u32 {
+            idx.insert(id, (id % 5) as u64);
+        }
+        for s in idx.shards() {
+            assert!(s.delta_len() < 64, "delta kept below threshold");
+        }
+        assert!(idx.total_epoch() > 0, "compactions happened");
+        assert_eq!(idx.len(), 1000);
+    }
+
+    #[test]
+    fn remove_heavy_churn_also_compacts() {
+        let mut idx = ShardedIndex::new(8, 2, 2);
+        idx.set_compact_threshold(32);
+        for id in 0..600u32 {
+            idx.insert(id, (id % 9) as u64);
+        }
+        idx.compact();
+        // pure removal phase: tombstones alone must trigger compaction
+        for id in 0..500u32 {
+            idx.remove(id);
+        }
+        for s in idx.shards() {
+            assert!(s.pending_len() < 32, "tombstone backlog bounded");
+        }
+        assert_eq!(idx.len(), 100);
+    }
+
+    #[test]
+    fn merge_hits_takes_global_minimum() {
+        let parts = vec![
+            QueryHit { best: Some((3, 0.5)), scanned: 2, probed: 4, nonempty: true },
+            QueryHit { best: Some((9, 0.1)), scanned: 3, probed: 4, nonempty: true },
+            QueryHit { best: None, scanned: 0, probed: 4, nonempty: false },
+        ];
+        let m = merge_hits(&parts);
+        assert_eq!(m.best, Some((9, 0.1)));
+        assert_eq!(m.scanned, 5);
+        assert_eq!(m.probed, 12);
+        assert!(m.nonempty);
+        assert_eq!(merge_hits(&[]).best, None);
+    }
+}

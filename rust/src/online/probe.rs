@@ -1,0 +1,341 @@
+//! Probability-ordered multi-probe planning.
+//!
+//! [`crate::table::HyperplaneIndex`] enumerates the Hamming ball in blind
+//! radius order: every weight-2 mask before any weight-3 mask, regardless
+//! of *which* bits flip. The online planner replaces that with a
+//! **best-first** sequence: candidate lookup codes ordered by modeled
+//! collision mass, where flipping bit `j` costs `c_j ≥ 0` in −log mass
+//! (see [`crate::hash::collision::CollisionModel`]) and a mask's mass is
+//! `exp(−Σ_{j∈mask} c_j)`. With uniform costs the order degenerates to the
+//! classic radius order; with query-adaptive costs (scaled by the query's
+//! per-bit score magnitudes from [`crate::hash::HashFamily::query_bit_scores`])
+//! low-confidence bits are flipped first, the way query-directed
+//! multi-probe LSH spends its probes.
+//!
+//! Enumeration uses the Lv-style two-successor heap walk over bits sorted
+//! by ascending cost: pop the cheapest frontier mask, emit it, push its
+//! *shift* (advance the highest flipped bit) and *expand* (also flip the
+//! next bit) successors. Each mask of weight ≤ radius is generated exactly
+//! once, in nondecreasing total cost, in O(log heap) per probe — no
+//! materialization of the full ball.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::hash::collision::{probe_mass, CollisionModel};
+
+/// Immutable per-index probe policy: code length, maximum flip weight
+/// (the Hamming-ball radius being refined) and per-bit flip costs.
+#[derive(Clone, Debug)]
+pub struct ProbePlanner {
+    k: usize,
+    radius: usize,
+    costs: Vec<f64>,
+}
+
+impl ProbePlanner {
+    /// Planner with explicit per-bit costs (one per code bit). Non-finite
+    /// or negative costs are clamped to 0.
+    pub fn with_costs(k: usize, radius: usize, costs: Vec<f64>) -> Self {
+        assert!((1..=64).contains(&k));
+        assert_eq!(costs.len(), k, "one flip cost per bit");
+        let costs = costs
+            .into_iter()
+            .map(|c| if c.is_finite() && c > 0.0 { c } else { 0.0 })
+            .collect();
+        ProbePlanner { k, radius: radius.min(k), costs }
+    }
+
+    /// Uniform costs: best-first order degenerates to radius order (ties
+    /// within a weight class broken arbitrarily), matching the static
+    /// table's Hamming-ball enumeration set-for-set.
+    pub fn uniform(k: usize, radius: usize) -> Self {
+        Self::with_costs(k, radius, vec![1.0; k])
+    }
+
+    /// Costs derived from the family's collision model (Lemma 1): every
+    /// bit costs the model's target-vs-background log-odds.
+    pub fn from_model(k: usize, radius: usize, model: &CollisionModel) -> Self {
+        Self::with_costs(k, radius, vec![model.bit_cost().max(1e-9); k])
+    }
+
+    /// Query-adaptive refinement: scale each bit's cost by the query's
+    /// normalized score magnitude, so low-confidence bits (pre-sign score
+    /// near 0) are cheap to flip and get probed first. The scale factor is
+    /// clamped to [0.05, 20] to keep the plan well conditioned.
+    pub fn query_scaled(&self, scores: &[f32]) -> ProbePlanner {
+        if scores.len() != self.k {
+            return self.clone();
+        }
+        let mean = scores.iter().map(|&s| s as f64).sum::<f64>() / self.k as f64;
+        if !(mean.is_finite() && mean > 0.0) {
+            return self.clone();
+        }
+        let costs = self
+            .costs
+            .iter()
+            .zip(scores.iter())
+            .map(|(&c, &s)| c * ((s as f64 / mean).clamp(0.05, 20.0)))
+            .collect();
+        ProbePlanner { k: self.k, radius: self.radius, costs }
+    }
+
+    pub fn bits(&self) -> usize {
+        self.k
+    }
+
+    pub fn radius(&self) -> usize {
+        self.radius
+    }
+
+    pub fn costs(&self) -> &[f64] {
+        &self.costs
+    }
+
+    /// Modeled collision mass of a flip mask, relative to the exact bucket.
+    pub fn mass(&self, mask: u64) -> f64 {
+        probe_mass(mask, &self.costs)
+    }
+
+    /// Number of probes a full (budget-unlimited) plan emits: the ball
+    /// volume Σ_{i≤r} C(k,i).
+    pub fn full_volume(&self) -> u64 {
+        crate::hash::codes::ball_volume(self.k, self.radius)
+    }
+
+    /// Best-first probe sequence, at most `budget` flip masks (the empty
+    /// mask — the exact bucket — is always probe #1). XOR each yielded
+    /// mask with the lookup code to get the bucket to probe.
+    pub fn plan(&self, budget: usize) -> ProbePlan {
+        // sort bit positions by ascending cost; the heap walk needs the
+        // "next bit" to never be cheaper than the current one
+        let mut perm: Vec<u16> = (0..self.k as u16).collect();
+        perm.sort_by(|&a, &b| {
+            self.costs[a as usize]
+                .partial_cmp(&self.costs[b as usize])
+                .unwrap_or(Ordering::Equal)
+        });
+        let sorted_costs: Vec<f64> = perm.iter().map(|&j| self.costs[j as usize]).collect();
+        let mut heap = BinaryHeap::new();
+        if self.radius >= 1 {
+            heap.push(Frontier { cost: sorted_costs[0], set: vec![0] });
+        }
+        ProbePlan {
+            perm,
+            costs: sorted_costs,
+            k: self.k,
+            radius: self.radius,
+            remaining: budget,
+            emitted_root: false,
+            heap,
+        }
+    }
+}
+
+/// Heap node: a flip set as strictly increasing indices into the
+/// cost-sorted bit order, with its total cost.
+struct Frontier {
+    cost: f64,
+    set: Vec<u16>,
+}
+
+impl PartialEq for Frontier {
+    fn eq(&self, other: &Self) -> bool {
+        self.cost.total_cmp(&other.cost) == Ordering::Equal
+    }
+}
+
+impl Eq for Frontier {}
+
+impl PartialOrd for Frontier {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Frontier {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert so the cheapest mask pops first
+        other.cost.total_cmp(&self.cost)
+    }
+}
+
+/// Iterator over the planned flip masks, best-first.
+pub struct ProbePlan {
+    perm: Vec<u16>,
+    costs: Vec<f64>,
+    k: usize,
+    radius: usize,
+    remaining: usize,
+    emitted_root: bool,
+    heap: BinaryHeap<Frontier>,
+}
+
+impl ProbePlan {
+    fn mask_of(&self, set: &[u16]) -> u64 {
+        set.iter().fold(0u64, |m, &i| m | (1u64 << self.perm[i as usize]))
+    }
+}
+
+impl Iterator for ProbePlan {
+    type Item = u64;
+
+    fn next(&mut self) -> Option<u64> {
+        if self.remaining == 0 {
+            return None;
+        }
+        if !self.emitted_root {
+            self.emitted_root = true;
+            self.remaining -= 1;
+            return Some(0); // the exact bucket
+        }
+        let top = self.heap.pop()?;
+        let last = *top.set.last().expect("frontier sets are non-empty") as usize;
+        if last + 1 < self.k {
+            // shift: advance the highest flipped bit to the next position
+            let mut shifted = top.set.clone();
+            *shifted.last_mut().unwrap() = (last + 1) as u16;
+            self.heap.push(Frontier {
+                cost: top.cost - self.costs[last] + self.costs[last + 1],
+                set: shifted,
+            });
+            // expand: additionally flip the next position
+            if top.set.len() < self.radius {
+                let mut expanded = top.set.clone();
+                expanded.push((last + 1) as u16);
+                self.heap.push(Frontier {
+                    cost: top.cost + self.costs[last + 1],
+                    set: expanded,
+                });
+            }
+        }
+        self.remaining -= 1;
+        Some(self.mask_of(&top.set))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hash::codes::{ball_volume, HammingBall};
+    use crate::testing::forall;
+    use std::collections::HashSet;
+
+    #[test]
+    fn full_budget_covers_exactly_the_hamming_ball() {
+        forall("plan == ball as a set", 32, |rng| {
+            let k = rng.range(2, 18);
+            let r = rng.range(0, k.min(4) + 1);
+            let costs: Vec<f64> = (0..k).map(|_| 0.1 + 4.9 * rng.f64()).collect();
+            let planner = ProbePlanner::with_costs(k, r, costs);
+            let got: HashSet<u64> = planner.plan(usize::MAX).collect();
+            let want: HashSet<u64> = HammingBall::new(k, r).collect();
+            crate::prop_assert!(
+                got == want,
+                "k={k} r={r}: plan {} masks vs ball {}",
+                got.len(),
+                want.len()
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn masses_nonincreasing_along_plan() {
+        forall("best-first order", 32, |rng| {
+            let k = rng.range(2, 16);
+            let r = rng.range(1, k.min(4) + 1);
+            let costs: Vec<f64> = (0..k).map(|_| 0.1 + 4.9 * rng.f64()).collect();
+            let planner = ProbePlanner::with_costs(k, r, costs);
+            let masses: Vec<f64> = planner.plan(usize::MAX).map(|m| planner.mass(m)).collect();
+            for (i, pair) in masses.windows(2).enumerate() {
+                crate::prop_assert!(
+                    pair[0] >= pair[1] - 1e-12,
+                    "probe {i}: mass {} then {}",
+                    pair[0],
+                    pair[1]
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn budget_t_plan_is_top_t_by_modeled_mass() {
+        // The satellite property: a budget-T best-first plan visits exactly
+        // the T ball masks with the highest modeled collision mass.
+        forall("top-T by mass", 24, |rng| {
+            let k = rng.range(3, 14);
+            let r = rng.range(1, k.min(4) + 1);
+            // distinct random costs ⇒ distinct subset sums almost surely
+            let costs: Vec<f64> = (0..k).map(|_| 0.1 + 4.9 * rng.f64()).collect();
+            let planner = ProbePlanner::with_costs(k, r, costs);
+            let mut ranked: Vec<u64> = HammingBall::new(k, r).collect();
+            ranked.sort_by(|&a, &b| {
+                planner.mass(b).partial_cmp(&planner.mass(a)).unwrap()
+            });
+            let t = rng.range(1, ranked.len() + 1);
+            let got: HashSet<u64> = planner.plan(t).collect();
+            let want: HashSet<u64> = ranked[..t].iter().copied().collect();
+            crate::prop_assert!(
+                got == want,
+                "k={k} r={r} T={t}: plan set differs from top-T"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn uniform_costs_reproduce_radius_order() {
+        let planner = ProbePlanner::uniform(12, 3);
+        assert_eq!(planner.full_volume(), ball_volume(12, 3));
+        let mut last_w = 0u32;
+        let mut n = 0u64;
+        for mask in planner.plan(usize::MAX) {
+            let w = mask.count_ones();
+            assert!(w >= last_w, "weights must be nondecreasing under uniform costs");
+            assert!(w as usize <= 3);
+            last_w = w;
+            n += 1;
+        }
+        assert_eq!(n, ball_volume(12, 3));
+    }
+
+    #[test]
+    fn budget_truncates_and_root_is_first() {
+        let planner = ProbePlanner::uniform(16, 4);
+        let plan: Vec<u64> = planner.plan(5).collect();
+        assert_eq!(plan.len(), 5);
+        assert_eq!(plan[0], 0, "exact bucket probes first");
+        assert!(plan[1..].iter().all(|&m| m.count_ones() == 1));
+        assert!(planner.plan(0).next().is_none());
+        // radius 0: only the exact bucket regardless of budget
+        let exact = ProbePlanner::uniform(8, 0);
+        let plan: Vec<u64> = exact.plan(100).collect();
+        assert_eq!(plan, vec![0]);
+    }
+
+    #[test]
+    fn query_scaled_prefers_low_confidence_bits() {
+        let planner = ProbePlanner::from_model(8, 2, &CollisionModel::bh_default());
+        // bit 5 has a tiny score ⇒ cheapest flip ⇒ first single-bit probe
+        let mut scores = vec![1.0f32; 8];
+        scores[5] = 1e-3;
+        let scaled = planner.query_scaled(&scores);
+        let plan: Vec<u64> = scaled.plan(3).collect();
+        assert_eq!(plan[0], 0);
+        assert_eq!(plan[1], 1u64 << 5, "lowest-confidence bit flips first");
+        // mismatched score length falls back to the unscaled plan
+        let fallback = planner.query_scaled(&[1.0; 3]);
+        assert_eq!(fallback.costs(), planner.costs());
+    }
+
+    #[test]
+    fn k64_masks_do_not_overflow() {
+        let planner = ProbePlanner::uniform(64, 1);
+        let plan: Vec<u64> = planner.plan(usize::MAX).collect();
+        assert_eq!(plan.len(), 65);
+        let set: HashSet<u64> = plan.into_iter().collect();
+        assert!(set.contains(&(1u64 << 63)));
+    }
+}

@@ -1,0 +1,493 @@
+//! A single dynamic shard: frozen snapshot + small mutable delta.
+//!
+//! Mutations follow an LSM-lite discipline so readers can probe without
+//! holding any lock for the duration of a query:
+//!
+//! * **Frozen** — an immutable, `Arc`-shared generation holding the bulk
+//!   of the shard: id/code arrays plus a bucket map from code to
+//!   positions. Readers clone the `Arc` (one refcount bump) and then work
+//!   entirely on their private snapshot.
+//! * **Delta** — recent inserts (append-only arrays + bucket map) and a
+//!   set of ids removed from the frozen generation. Kept small by
+//!   compaction, so cloning it into a [`ShardView`] is cheap.
+//! * **compact()** — merges delta into a fresh `Frozen`, swaps the `Arc`,
+//!   bumps the shard epoch and clears the delta. Writers briefly block on
+//!   one another (and on compaction) via the delta mutex; readers holding
+//!   an older view are untouched — they keep the previous epoch's `Arc`
+//!   until they drop it.
+//!
+//! Lock ordering is always delta → frozen, and the frozen mutex is only
+//! ever held to clone or swap the `Arc`, so no lock is held across any
+//! O(n) work that a reader could observe.
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::data::FeatureStore;
+use crate::hash::fasthash::CodeMap;
+use crate::linalg::nrm2;
+use crate::table::QueryHit;
+
+/// Immutable generation of a shard.
+pub(crate) struct Frozen {
+    pub(crate) ids: Vec<u32>,
+    pub(crate) codes: Vec<u64>,
+    /// code → positions into `ids`/`codes`
+    buckets: CodeMap<Vec<u32>>,
+    /// id (widened to the u64 key domain) → position
+    pos_of: CodeMap<u32>,
+}
+
+impl Frozen {
+    fn empty() -> Self {
+        Frozen {
+            ids: Vec::new(),
+            codes: Vec::new(),
+            buckets: CodeMap::default(),
+            pos_of: CodeMap::default(),
+        }
+    }
+
+    fn build(entries: Vec<(u32, u64)>) -> Self {
+        let mut f = Frozen {
+            ids: Vec::with_capacity(entries.len()),
+            codes: Vec::with_capacity(entries.len()),
+            buckets: CodeMap::default(),
+            pos_of: CodeMap::default(),
+        };
+        for (id, code) in entries {
+            let pos = f.ids.len() as u32;
+            f.ids.push(id);
+            f.codes.push(code);
+            f.buckets.entry(code).or_default().push(pos);
+            f.pos_of.insert(id as u64, pos);
+        }
+        f
+    }
+
+    fn contains(&self, id: u32) -> bool {
+        self.pos_of.contains_key(&(id as u64))
+    }
+}
+
+/// Mutable tail of a shard since the last compaction.
+struct Delta {
+    ids: Vec<u32>,
+    codes: Vec<u64>,
+    /// false ⇒ slot superseded (upsert) or removed
+    live: Vec<bool>,
+    live_count: usize,
+    buckets: CodeMap<Vec<u32>>,
+    /// id → newest delta position
+    pos_of: CodeMap<u32>,
+    /// ids whose frozen entry is dead (removed or superseded)
+    removed_frozen: HashSet<u32>,
+}
+
+impl Delta {
+    fn empty() -> Self {
+        Delta {
+            ids: Vec::new(),
+            codes: Vec::new(),
+            live: Vec::new(),
+            live_count: 0,
+            buckets: CodeMap::default(),
+            pos_of: CodeMap::default(),
+            removed_frozen: HashSet::new(),
+        }
+    }
+}
+
+/// The live (id, code) set of a shard: frozen entries not tombstoned by
+/// the delta, then the delta's live slots. The single source of truth for
+/// both compaction and snapshot persistence — keep the visibility rules
+/// in one place.
+fn merge_live(frozen: &Frozen, d: &Delta) -> Vec<(u32, u64)> {
+    let mut out = Vec::with_capacity(frozen.ids.len() + d.live_count);
+    for (i, &id) in frozen.ids.iter().enumerate() {
+        if !d.removed_frozen.contains(&id) {
+            out.push((id, frozen.codes[i]));
+        }
+    }
+    for (i, &id) in d.ids.iter().enumerate() {
+        if d.live[i] {
+            out.push((id, d.codes[i]));
+        }
+    }
+    out
+}
+
+/// One shard of the online index.
+pub struct Shard {
+    epoch: AtomicU64,
+    frozen: Mutex<Arc<Frozen>>,
+    delta: Mutex<Delta>,
+}
+
+impl Default for Shard {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Shard {
+    pub fn new() -> Self {
+        Shard {
+            epoch: AtomicU64::new(0),
+            frozen: Mutex::new(Arc::new(Frozen::empty())),
+            delta: Mutex::new(Delta::empty()),
+        }
+    }
+
+    /// Compactions performed so far — the version a [`ShardView`] carries.
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    fn frozen_arc(&self) -> Arc<Frozen> {
+        self.frozen.lock().unwrap().clone()
+    }
+
+    /// Insert (or upsert) `id` with hash `code`.
+    pub fn insert(&self, id: u32, code: u64) {
+        let mut d = self.delta.lock().unwrap();
+        let prev = d.pos_of.get(&(id as u64)).copied();
+        if let Some(pos) = prev {
+            if d.live[pos as usize] {
+                d.live[pos as usize] = false;
+                d.live_count -= 1;
+            }
+        } else if self.frozen_arc().contains(id) {
+            // only a delta miss needs to consult (and possibly tombstone)
+            // the frozen generation — delta hits skip the frozen lock
+            d.removed_frozen.insert(id);
+        }
+        let pos = d.ids.len() as u32;
+        d.ids.push(id);
+        d.codes.push(code);
+        d.live.push(true);
+        d.live_count += 1;
+        d.pos_of.insert(id as u64, pos);
+        d.buckets.entry(code).or_default().push(pos);
+    }
+
+    /// Remove `id`; returns whether it was present and live.
+    pub fn remove(&self, id: u32) -> bool {
+        let mut d = self.delta.lock().unwrap();
+        if let Some(pos) = d.pos_of.get(&(id as u64)).copied() {
+            let pos = pos as usize;
+            if d.live[pos] {
+                d.live[pos] = false;
+                d.live_count -= 1;
+                return true;
+            }
+            return false; // already removed (a dead slot masks any frozen entry)
+        }
+        if self.frozen_arc().contains(id) && d.removed_frozen.insert(id) {
+            return true;
+        }
+        false
+    }
+
+    /// Whether `id` is currently live.
+    pub fn contains(&self, id: u32) -> bool {
+        let d = self.delta.lock().unwrap();
+        if let Some(&pos) = d.pos_of.get(&(id as u64)) {
+            return d.live[pos as usize];
+        }
+        let frozen = self.frozen_arc();
+        frozen.contains(id) && !d.removed_frozen.contains(&id)
+    }
+
+    /// Live points in this shard.
+    pub fn len(&self) -> usize {
+        let d = self.delta.lock().unwrap();
+        let frozen = self.frozen_arc();
+        let removed = d.removed_frozen.iter().filter(|&&id| frozen.contains(id)).count();
+        frozen.ids.len() - removed + d.live_count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Delta slots (live + dead) — the quantity compaction bounds.
+    pub fn delta_len(&self) -> usize {
+        self.delta.lock().unwrap().ids.len()
+    }
+
+    /// Points in the frozen generation (before delta/removals).
+    pub fn frozen_len(&self) -> usize {
+        self.frozen_arc().ids.len()
+    }
+
+    /// Live (id, code) pairs, merged across frozen and delta — the payload
+    /// a persisted snapshot stores.
+    pub fn live_entries(&self) -> Vec<(u32, u64)> {
+        let d = self.delta.lock().unwrap();
+        let frozen = self.frozen_arc();
+        merge_live(&frozen, &d)
+    }
+
+    /// Delta slots plus frozen tombstones — the total mutation backlog the
+    /// next compaction will fold in. This (not just `delta_len`) is what
+    /// auto-compaction thresholds, so remove-heavy workloads also get
+    /// compacted and view snapshots stay cheap to clone.
+    pub fn pending_len(&self) -> usize {
+        let d = self.delta.lock().unwrap();
+        d.ids.len() + d.removed_frozen.len()
+    }
+
+    /// Merge the delta into a fresh frozen generation and bump the epoch.
+    /// Readers holding an older [`ShardView`] are unaffected.
+    pub fn compact(&self) {
+        let mut d = self.delta.lock().unwrap();
+        if d.ids.is_empty() && d.removed_frozen.is_empty() {
+            return;
+        }
+        let frozen = self.frozen_arc();
+        let entries = merge_live(&frozen, &d);
+        *self.frozen.lock().unwrap() = Arc::new(Frozen::build(entries));
+        self.epoch.fetch_add(1, Ordering::AcqRel);
+        *d = Delta::empty();
+    }
+
+    /// Epoch-consistent read snapshot: shares the frozen generation by
+    /// `Arc` and clones the (compaction-bounded) delta, so probing runs
+    /// without touching the shard's locks again.
+    pub fn view(&self) -> ShardView {
+        let d = self.delta.lock().unwrap();
+        let frozen = self.frozen_arc();
+        ShardView {
+            epoch: self.epoch.load(Ordering::Acquire),
+            frozen,
+            delta_ids: d.ids.clone(),
+            delta_codes: d.codes.clone(),
+            delta_live: d.live.clone(),
+            delta_buckets: d.buckets.clone(),
+            removed_frozen: d.removed_frozen.clone(),
+        }
+    }
+
+    /// Approximate heap footprint in bytes (capacities, not lengths).
+    pub fn memory_bytes(&self) -> usize {
+        let d = self.delta.lock().unwrap();
+        let frozen = self.frozen_arc();
+        let map_entry = |ksz: usize, vsz: usize, cap: usize| cap * (ksz + vsz + 1);
+        let bucket_bytes = |b: &CodeMap<Vec<u32>>| {
+            map_entry(8, std::mem::size_of::<Vec<u32>>(), b.capacity())
+                + b.values().map(|v| v.capacity() * 4).sum::<usize>()
+        };
+        frozen.ids.capacity() * 4
+            + frozen.codes.capacity() * 8
+            + bucket_bytes(&frozen.buckets)
+            + map_entry(8, 4, frozen.pos_of.capacity())
+            + d.ids.capacity() * 4
+            + d.codes.capacity() * 8
+            + d.live.capacity()
+            + bucket_bytes(&d.buckets)
+            + map_entry(8, 4, d.pos_of.capacity())
+            + d.removed_frozen.capacity() * 5
+    }
+}
+
+/// A consistent point-in-time view of one shard.
+pub struct ShardView {
+    /// shard compaction epoch this view was taken at
+    pub epoch: u64,
+    frozen: Arc<Frozen>,
+    delta_ids: Vec<u32>,
+    delta_codes: Vec<u64>,
+    delta_live: Vec<bool>,
+    delta_buckets: CodeMap<Vec<u32>>,
+    removed_frozen: HashSet<u32>,
+}
+
+impl ShardView {
+    /// Append the live ids hashed to bucket `code`; returns how many were
+    /// appended.
+    pub fn probe_into(&self, code: u64, out: &mut Vec<u32>) -> usize {
+        let before = out.len();
+        if let Some(ps) = self.frozen.buckets.get(&code) {
+            for &p in ps {
+                let id = self.frozen.ids[p as usize];
+                if !self.removed_frozen.contains(&id) {
+                    out.push(id);
+                }
+            }
+        }
+        if let Some(ps) = self.delta_buckets.get(&code) {
+            for &p in ps {
+                if self.delta_live[p as usize] {
+                    out.push(self.delta_ids[p as usize]);
+                }
+            }
+        }
+        out.len() - before
+    }
+
+    /// Shard-local probe sequence: visit `lookup ^ mask` for each planned
+    /// flip mask, margin-rank the live candidates against `w`, stop early
+    /// once `top` candidates have been ranked. The partial [`QueryHit`]s
+    /// of several shards merge with [`crate::online::merge_hits`].
+    pub fn query(
+        &self,
+        masks: &[u64],
+        lookup: u64,
+        w: &[f32],
+        feats: &FeatureStore,
+        top: usize,
+        eligible: impl Fn(usize) -> bool,
+    ) -> QueryHit {
+        let w_norm = nrm2(w);
+        let mut cand: Vec<u32> = Vec::new();
+        let mut best: Option<(usize, f32)> = None;
+        let mut scanned = 0usize;
+        let mut probed = 0usize;
+        let mut any = false;
+        for &mask in masks {
+            probed += 1;
+            self.probe_into(lookup ^ mask, &mut cand);
+            if !cand.is_empty() {
+                any = true;
+                for &id in &cand {
+                    let id = id as usize;
+                    if !eligible(id) {
+                        continue;
+                    }
+                    scanned += 1;
+                    let m = crate::linalg::margin_feat(feats.row(id), w, w_norm);
+                    if best.map_or(true, |(_, bm)| m < bm) {
+                        best = Some((id, m));
+                    }
+                }
+                cand.clear();
+            }
+            if scanned >= top {
+                break;
+            }
+        }
+        QueryHit { best, scanned, probed, nonempty: any }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_remove_contains_len() {
+        let s = Shard::new();
+        assert!(s.is_empty());
+        s.insert(3, 0b101);
+        s.insert(9, 0b101);
+        s.insert(4, 0b010);
+        assert_eq!(s.len(), 3);
+        assert!(s.contains(3) && s.contains(9) && s.contains(4));
+        assert!(s.remove(9));
+        assert!(!s.remove(9), "double remove is a no-op");
+        assert!(!s.contains(9));
+        assert_eq!(s.len(), 2);
+        assert!(!s.remove(1000), "absent id");
+    }
+
+    #[test]
+    fn view_filters_removed_and_sees_delta() {
+        let s = Shard::new();
+        for id in 0..10u32 {
+            s.insert(id, 0xAB);
+        }
+        s.compact();
+        assert_eq!(s.epoch(), 1);
+        s.remove(4); // frozen removal
+        s.insert(77, 0xAB); // delta insert
+        s.insert(78, 0xCD);
+        s.remove(78); // delta removal
+        let v = s.view();
+        let mut got = Vec::new();
+        v.probe_into(0xAB, &mut got);
+        got.sort_unstable();
+        let want: Vec<u32> = (0..10).filter(|&i| i != 4).chain([77]).collect();
+        assert_eq!(got, want);
+        let mut none = Vec::new();
+        assert_eq!(v.probe_into(0xCD, &mut none), 0, "removed delta entry invisible");
+    }
+
+    #[test]
+    fn upsert_changes_code_without_duplicates() {
+        let s = Shard::new();
+        s.insert(5, 0b001);
+        s.compact();
+        s.insert(5, 0b110); // upsert with a new code
+        assert_eq!(s.len(), 1);
+        let v = s.view();
+        let mut old = Vec::new();
+        assert_eq!(v.probe_into(0b001, &mut old), 0, "old code masked");
+        let mut new = Vec::new();
+        assert_eq!(v.probe_into(0b110, &mut new), 1);
+        assert_eq!(new, vec![5]);
+        s.compact();
+        assert_eq!(s.len(), 1);
+        let mut after = Vec::new();
+        assert_eq!(s.view().probe_into(0b110, &mut after), 1);
+    }
+
+    #[test]
+    fn compaction_preserves_live_set_and_bumps_epoch() {
+        let s = Shard::new();
+        for id in 0..100u32 {
+            s.insert(id, (id % 7) as u64);
+        }
+        for id in (0..100u32).step_by(3) {
+            s.remove(id);
+        }
+        let before: Vec<(u32, u64)> = {
+            let mut e = s.live_entries();
+            e.sort_unstable();
+            e
+        };
+        let e0 = s.epoch();
+        s.compact();
+        assert_eq!(s.epoch(), e0 + 1);
+        assert_eq!(s.delta_len(), 0);
+        let mut after = s.live_entries();
+        after.sort_unstable();
+        assert_eq!(before, after);
+        // no-op compaction does not bump the epoch
+        s.compact();
+        assert_eq!(s.epoch(), e0 + 1);
+    }
+
+    #[test]
+    fn old_views_survive_concurrent_compaction() {
+        let s = Shard::new();
+        for id in 0..50u32 {
+            s.insert(id, 1);
+        }
+        let v = s.view();
+        s.remove(0);
+        s.compact();
+        s.remove(1);
+        s.compact();
+        // the old view still answers from its epoch
+        let mut got = Vec::new();
+        v.probe_into(1, &mut got);
+        assert_eq!(got.len(), 50);
+        assert_eq!(v.epoch, 0);
+        let mut now = Vec::new();
+        s.view().probe_into(1, &mut now);
+        assert_eq!(now.len(), 48);
+    }
+
+    #[test]
+    fn memory_bytes_grows_with_content() {
+        let s = Shard::new();
+        let empty = s.memory_bytes();
+        for id in 0..1000u32 {
+            s.insert(id, (id as u64) & 0xF);
+        }
+        s.compact();
+        assert!(s.memory_bytes() > empty + 1000 * 12, "codes+ids payload counted");
+    }
+}

@@ -31,6 +31,8 @@ mod tag {
     pub const U_MAT: u32 = 2;
     pub const V_MAT: u32 = 3;
     pub const CODES: u32 = 4; // [k u32, n u64, words...]
+    pub const SHARDS_META: u32 = 5; // [k u32, radius u32, n_shards u32, n_live u64]
+    pub const SHARD: u32 = 6; // [shard u32, epoch u64, n u64, n × (id u32, code u64)]
 }
 
 /// Hash-family kind discriminator for META.
@@ -148,6 +150,48 @@ pub fn save_codes(path: &Path, codes: &CodeArray) -> Result<()> {
     w.finish(path)
 }
 
+/// Save an online [`crate::online::ShardedIndex`] snapshot: shard layout
+/// plus every shard's live (id, code) entries, merged across its frozen
+/// generation and delta at call time. Epochs are recorded for diagnostics;
+/// they restart at zero in a fresh process.
+///
+/// Only k/radius/entries are persisted — a custom [`crate::online::ProbePlanner`]
+/// (e.g. from `with_planner` with hand-tuned costs) and the compaction
+/// threshold are NOT stored; [`load_sharded`] rebuilds with the default
+/// collision-model planner. Reapply non-default policy after loading.
+pub fn save_sharded(path: &Path, index: &crate::online::ShardedIndex) -> Result<()> {
+    // Collect every shard's entries BEFORE writing the meta count: each
+    // live_entries() call is an atomic per-shard snapshot, so the file's
+    // total always matches its sections even if writers churn the index
+    // between shard reads (the load-side count check would otherwise
+    // reject a backup taken under load).
+    let snapshots: Vec<(u64, Vec<(u32, u64)>)> = index
+        .shards()
+        .iter()
+        .map(|s| (s.epoch(), s.live_entries()))
+        .collect();
+    let total: u64 = snapshots.iter().map(|(_, e)| e.len() as u64).sum();
+    let mut w = SectionWriter::new();
+    let mut meta = Vec::new();
+    meta.extend_from_slice(&(index.bits() as u32).to_le_bytes());
+    meta.extend_from_slice(&(index.radius() as u32).to_le_bytes());
+    meta.extend_from_slice(&(index.shard_count() as u32).to_le_bytes());
+    meta.extend_from_slice(&total.to_le_bytes());
+    w.section(tag::SHARDS_META, &meta);
+    for (i, (epoch, entries)) in snapshots.into_iter().enumerate() {
+        let mut p = Vec::with_capacity(20 + entries.len() * 12);
+        p.extend_from_slice(&(i as u32).to_le_bytes());
+        p.extend_from_slice(&epoch.to_le_bytes());
+        p.extend_from_slice(&(entries.len() as u64).to_le_bytes());
+        for (id, code) in entries {
+            p.extend_from_slice(&id.to_le_bytes());
+            p.extend_from_slice(&code.to_le_bytes());
+        }
+        w.section(tag::SHARD, &p);
+    }
+    w.finish(path)
+}
+
 // ───────────────────────── reader ─────────────────────────
 
 struct Cursor<'a> {
@@ -241,6 +285,70 @@ pub fn load_model(path: &Path) -> Result<ModelFile> {
     Ok(ModelFile { kind, pairs: ProjectionPairs { u, v } })
 }
 
+/// Load a [`crate::online::ShardedIndex`] snapshot saved by
+/// [`save_sharded`]. The id→shard routing is deterministic (`id % shards`),
+/// so entries reload onto the same shard they were saved from; every shard
+/// is compacted after loading so serving starts from frozen generations.
+/// The probe policy is rebuilt from the default collision model — a
+/// custom planner is not part of the snapshot (see [`save_sharded`]).
+pub fn load_sharded(path: &Path) -> Result<crate::online::ShardedIndex> {
+    let mut data = Vec::new();
+    std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?
+        .read_to_end(&mut data)?;
+    let sections = read_sections(&data)?;
+    let mut index: Option<crate::online::ShardedIndex> = None;
+    let mut loaded = 0u64;
+    let mut expect = 0u64;
+    for (t, payload) in sections {
+        match t {
+            tag::SHARDS_META => {
+                let mut c = Cursor { b: payload, pos: 0 };
+                let k = c.u32()? as usize;
+                let radius = c.u32()? as usize;
+                let n_shards = c.u32()? as usize;
+                expect = c.u64()?;
+                if !(1..=64).contains(&k) || n_shards == 0 {
+                    bail!("bad shard snapshot meta: k={k}, shards={n_shards}");
+                }
+                index = Some(crate::online::ShardedIndex::new(k, radius, n_shards));
+            }
+            tag::SHARD => {
+                let idx = index
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("SHARD section before SHARDS_META"))?;
+                let mut c = Cursor { b: payload, pos: 0 };
+                let shard = c.u32()? as usize;
+                let _epoch = c.u64()?;
+                let n = c.u64()? as usize;
+                if shard >= idx.shard_count() {
+                    bail!("shard index {shard} out of range");
+                }
+                let code_mask = crate::hash::codes::mask(idx.bits());
+                for _ in 0..n {
+                    let id = u32::from_le_bytes(c.take(4)?.try_into().unwrap());
+                    let code = c.u64()?;
+                    if idx.shard_of(id) != shard {
+                        bail!("entry {id} misrouted to shard {shard}");
+                    }
+                    if code & !code_mask != 0 {
+                        bail!("entry {id}: code {code:#x} exceeds {} bits", idx.bits());
+                    }
+                    idx.insert(id, code);
+                    loaded += 1;
+                }
+            }
+            _ => {}
+        }
+    }
+    let index = index.ok_or_else(|| anyhow!("missing SHARDS_META section"))?;
+    if loaded != expect {
+        bail!("shard snapshot holds {loaded} entries, meta says {expect}");
+    }
+    index.compact();
+    Ok(index)
+}
+
 /// Load a code array file.
 pub fn load_codes(path: &Path) -> Result<CodeArray> {
     let mut data = Vec::new();
@@ -324,6 +432,44 @@ mod tests {
             let r = crate::data::FeatRef::Dense(&x);
             assert_eq!(bh.encode_point(r), back.encode_point(r));
         }
+    }
+
+    #[test]
+    fn sharded_snapshot_roundtrip() {
+        let mut rng = Rng::seed_from_u64(9);
+        let idx = crate::online::ShardedIndex::new(12, 3, 4);
+        for id in 0..500u32 {
+            idx.insert(id, rng.next_u64() & crate::hash::codes::mask(12));
+        }
+        for id in (0..500u32).step_by(7) {
+            idx.remove(id);
+        }
+        // deliberately leave an uncompacted delta: save must merge it
+        let path = tmp("sharded");
+        save_sharded(&path, &idx).unwrap();
+        let back = load_sharded(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(back.shard_count(), 4);
+        assert_eq!(back.bits(), 12);
+        assert_eq!(back.radius(), 3);
+        assert_eq!(back.len(), idx.len());
+        for (a, b) in idx.shards().iter().zip(back.shards()) {
+            let mut ea = a.live_entries();
+            ea.sort_unstable();
+            let mut eb = b.live_entries();
+            eb.sort_unstable();
+            assert_eq!(ea, eb, "per-shard live entries survive the roundtrip");
+        }
+    }
+
+    #[test]
+    fn sharded_loader_rejects_model_files() {
+        let mut rng = Rng::seed_from_u64(10);
+        let pairs = ProjectionPairs::sample(8, 4, &mut rng);
+        let path = tmp("not_sharded");
+        save_model(&path, FamilyKind::Bh, &pairs).unwrap();
+        assert!(load_sharded(&path).is_err(), "no SHARDS_META section");
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -10,9 +10,16 @@
 //! Every artifact entry point has a native-Rust fallback so the crate is
 //! fully functional without `artifacts/` (tests assert parity between the
 //! two paths).
+//!
+//! The `xla` crate is behind the off-by-default `pjrt` cargo feature (the
+//! default registry does not ship it); without the feature this module
+//! still parses manifests and validates shapes, but `run_f32` reports
+//! that PJRT execution is not compiled in — callers already handle that
+//! error path because it is indistinguishable from "artifacts missing".
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+#[cfg(feature = "pjrt")]
 use std::sync::Mutex;
 
 use anyhow::{anyhow, Context, Result};
@@ -61,8 +68,10 @@ pub struct ArtifactMeta {
 /// Artifact registry + compile cache.
 pub struct Runtime {
     dir: PathBuf,
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
     meta: HashMap<String, ArtifactMeta>,
+    #[cfg(feature = "pjrt")]
     compiled: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
 }
 
@@ -74,9 +83,12 @@ impl Runtime {
             .unwrap_or_else(|_| PathBuf::from("artifacts"))
     }
 
-    /// Open the registry. Fails if PJRT cannot start; missing manifest is
-    /// fine (empty registry — native fallbacks everywhere).
+    /// Open the registry. With the `pjrt` feature, fails if PJRT cannot
+    /// start; in a default (non-`pjrt`) build it only reads the manifest
+    /// and execution fails later, at `run_f32`. A missing manifest is fine
+    /// either way (empty registry — native fallbacks everywhere).
     pub fn open(dir: &Path) -> Result<Self> {
+        #[cfg(feature = "pjrt")]
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
         let mut meta = HashMap::new();
         let manifest = dir.join("manifest.json");
@@ -115,7 +127,14 @@ impl Runtime {
                 );
             }
         }
-        Ok(Runtime { dir: dir.to_path_buf(), client, meta, compiled: Mutex::new(HashMap::new()) })
+        Ok(Runtime {
+            dir: dir.to_path_buf(),
+            #[cfg(feature = "pjrt")]
+            client,
+            meta,
+            #[cfg(feature = "pjrt")]
+            compiled: Mutex::new(HashMap::new()),
+        })
     }
 
     /// Open with the default directory.
@@ -142,6 +161,7 @@ impl Runtime {
     }
 
     /// Compile (once) and return the cached executable.
+    #[cfg(feature = "pjrt")]
     fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
         if let Some(e) = self.compiled.lock().unwrap().get(name) {
             return Ok(e.clone());
@@ -185,7 +205,6 @@ impl Runtime {
                 meta.inputs.len()
             ));
         }
-        let mut lits = Vec::with_capacity(inputs.len());
         for (idx, ((data, shape), spec)) in inputs.iter().zip(meta.inputs.iter()).enumerate() {
             if *shape != spec.shape.as_slice() {
                 return Err(anyhow!(
@@ -200,6 +219,36 @@ impl Runtime {
                     spec.numel()
                 ));
             }
+        }
+        self.execute_f32(name, &meta, inputs)
+    }
+
+    /// Execution half of [`Self::run_f32`] when PJRT is compiled out:
+    /// validation has passed, but there is nothing to run the HLO on.
+    #[cfg(not(feature = "pjrt"))]
+    fn execute_f32(
+        &self,
+        name: &str,
+        _meta: &ArtifactMeta,
+        _inputs: &[(&[f32], &[usize])],
+    ) -> Result<Vec<Vec<f32>>> {
+        Err(anyhow!(
+            "artifact '{name}' validated, but PJRT execution is not compiled in \
+             (build with `--features pjrt`)"
+        ))
+    }
+
+    /// Execution half of [`Self::run_f32`]: stage literals, run the cached
+    /// executable, untuple and validate the outputs.
+    #[cfg(feature = "pjrt")]
+    fn execute_f32(
+        &self,
+        name: &str,
+        meta: &ArtifactMeta,
+        inputs: &[(&[f32], &[usize])],
+    ) -> Result<Vec<Vec<f32>>> {
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (idx, (data, shape)) in inputs.iter().enumerate() {
             let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
             let lit = xla::Literal::vec1(data)
                 .reshape(&dims)

@@ -72,11 +72,17 @@ impl HyperplaneIndex {
         self.buckets.len()
     }
 
-    /// Memory footprint estimate in bytes (codes + bucket index).
+    /// Memory footprint estimate in bytes: code words, the bucket map's
+    /// table (key + `Vec` header + control byte per slot, at allocated
+    /// capacity) and the bucket entry payloads at their allocated
+    /// capacity. Counting capacities rather than lengths is what makes the
+    /// Tables-efficiency numbers honest — `Vec` growth doubling means the
+    /// resident payload can be up to 2× the live entry count.
     pub fn memory_bytes(&self) -> usize {
-        self.codes.codes.len() * 8
-            + self.buckets.len() * (8 + std::mem::size_of::<Vec<u32>>())
-            + self.codes.len() * 4
+        let bucket_payload: usize = self.buckets.values().map(|v| v.capacity() * 4).sum();
+        self.codes.codes.capacity() * 8
+            + self.buckets.capacity() * (8 + std::mem::size_of::<Vec<u32>>() + 1)
+            + bucket_payload
     }
 
     /// Collect candidate ids within the Hamming ball of `lookup_code`,
@@ -441,6 +447,28 @@ mod tests {
         // the best entry matches query_filtered's best under same filter
         let single = idx.query_filtered(&fam, &w, ds.features(), |i| i % 2 == 0);
         assert_eq!(top[0].0, single.best.unwrap().0);
+    }
+
+    #[test]
+    fn memory_bytes_counts_bucket_payloads() {
+        let mut rng = Rng::seed_from_u64(41);
+        let k = 16;
+        let n = 5000usize;
+        let mut codes = CodeArray::with_capacity(k, n);
+        for _ in 0..n {
+            codes.push(rng.next_u64() & crate::hash::codes::mask(k));
+        }
+        let idx = HyperplaneIndex::from_codes(codes, 2);
+        // lower bound: every entry id (4B) + every code word (8B) must be
+        // accounted for, plus per-bucket map overhead
+        let floor = n * 4
+            + n * 8
+            + idx.bucket_count() * (8 + std::mem::size_of::<Vec<u32>>());
+        assert!(
+            idx.memory_bytes() >= floor,
+            "memory_bytes {} under-reports floor {floor}",
+            idx.memory_bytes()
+        );
     }
 
     #[test]

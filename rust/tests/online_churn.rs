@@ -1,0 +1,186 @@
+//! Acceptance tests for the online serving subsystem:
+//!
+//! 1. `ShardedIndex` with one shard and a probe budget covering the whole
+//!    Hamming ball answers exactly like the static `HyperplaneIndex` built
+//!    from the same codes.
+//! 2. Under interleaved insert/remove churn — single-threaded and
+//!    concurrent — a query never returns a removed id.
+
+use std::collections::HashSet;
+use std::sync::Arc;
+
+use chh::data::test_blobs;
+use chh::hash::{BhHash, HashFamily};
+use chh::online::{QueryBudget, ShardedIndex};
+use chh::rng::Rng;
+use chh::table::HyperplaneIndex;
+use chh::testing::unit_vec;
+
+#[test]
+fn single_shard_full_budget_matches_static_index() {
+    let mut rng = Rng::seed_from_u64(70);
+    let ds = test_blobs(1200, 24, 4, &mut rng);
+    let fam = BhHash::sample(24, 14, &mut rng);
+    let codes = fam.encode_all(ds.features());
+    let radius = 3;
+    let static_idx = HyperplaneIndex::from_codes(codes.clone(), radius);
+    let online_idx = ShardedIndex::from_codes(&codes, radius, 1);
+    assert_eq!(online_idx.len(), ds.len());
+    let budget = QueryBudget::new(static_idx.probe_volume() as usize, usize::MAX);
+    for _ in 0..40 {
+        let w = unit_vec(&mut rng, 24);
+        let lookup = fam.encode_query(&w);
+        let a = static_idx.query_code_filtered(lookup, &w, ds.features(), |_| true);
+        let b = online_idx.query_code(lookup, None, &w, ds.features(), budget, |_| true);
+        assert_eq!(
+            a.best.map(|(i, _)| i),
+            b.best.map(|(i, _)| i),
+            "best candidate must match the static table"
+        );
+        if let (Some((_, ma)), Some((_, mb))) = (a.best, b.best) {
+            assert!((ma - mb).abs() < 1e-7, "margins {ma} vs {mb}");
+        }
+        assert_eq!(a.scanned, b.scanned, "same candidate set scanned");
+        assert_eq!(a.nonempty, b.nonempty);
+        assert_eq!(a.probed, b.probed, "full budget probes the whole ball");
+    }
+}
+
+#[test]
+fn query_adaptive_probe_order_preserves_full_ball_results() {
+    // reordering probes must not change the full-budget result set
+    let mut rng = Rng::seed_from_u64(71);
+    let ds = test_blobs(800, 16, 3, &mut rng);
+    let fam = BhHash::sample(16, 12, &mut rng);
+    let codes = fam.encode_all(ds.features());
+    let static_idx = HyperplaneIndex::from_codes(codes.clone(), 3);
+    let online_idx = ShardedIndex::from_codes(&codes, 3, 1);
+    for _ in 0..25 {
+        let w = unit_vec(&mut rng, 16);
+        let a = static_idx.query_filtered(&fam, &w, ds.features(), |_| true);
+        let b = online_idx.query(&fam, &w, ds.features(), QueryBudget::unlimited(), |_| true);
+        assert_eq!(a.best.map(|(i, _)| i), b.best.map(|(i, _)| i));
+        assert_eq!(a.scanned, b.scanned);
+    }
+}
+
+#[test]
+fn interleaved_churn_never_returns_removed_ids() {
+    let mut rng = Rng::seed_from_u64(72);
+    let ds = test_blobs(1000, 16, 4, &mut rng);
+    let fam = BhHash::sample(16, 10, &mut rng);
+    let mut online = ShardedIndex::new(10, 2, 3);
+    online.set_compact_threshold(64); // force frequent epoch turnover
+    let online = online;
+    let mut live: HashSet<u32> = HashSet::new();
+    // seed half the points
+    for id in 0..500u32 {
+        online.insert_point(&fam, id, ds.features().row(id as usize));
+        live.insert(id);
+    }
+    let budget = QueryBudget::unlimited();
+    let mut next = 500u32;
+    for round in 0..60 {
+        // interleave: a few inserts, a few removes, then queries
+        for _ in 0..5 {
+            if (next as usize) < ds.len() {
+                online.insert_point(&fam, next, ds.features().row(next as usize));
+                live.insert(next);
+                next += 1;
+            }
+        }
+        for _ in 0..5 {
+            let victim = live.iter().next().copied();
+            if let Some(victim) = victim {
+                assert!(online.remove(victim), "live id {victim} must remove");
+                live.remove(&victim);
+            }
+        }
+        let w = unit_vec(&mut rng, 16);
+        let hit = online.query(&fam, &w, ds.features(), budget, |_| true);
+        if let Some((id, _)) = hit.best {
+            assert!(
+                live.contains(&(id as u32)),
+                "round {round}: removed/never-inserted id {id} returned"
+            );
+        }
+        assert_eq!(online.len(), live.len(), "round {round}: live count drift");
+    }
+    assert!(online.total_epoch() > 0, "compactions must have happened");
+}
+
+#[test]
+fn concurrent_churn_respects_removals() {
+    // writer removes a doomed set while readers query concurrently; after
+    // the writer joins, no doomed id may ever be returned again
+    let mut rng = Rng::seed_from_u64(73);
+    let ds = test_blobs(1500, 16, 4, &mut rng);
+    let fam = Arc::new(BhHash::sample(16, 10, &mut rng));
+    let codes = fam.encode_all(ds.features());
+    let index = Arc::new(ShardedIndex::from_codes(&codes, 4, 4));
+    let feats = Arc::new(ds.features().clone());
+    let doomed: Vec<u32> = (0..1500u32).filter(|i| i % 3 == 0).collect();
+    let widx = index.clone();
+    let doomed_w = doomed.clone();
+    let writer = std::thread::spawn(move || {
+        for id in doomed_w {
+            widx.remove(id);
+        }
+        widx.compact();
+    });
+    // concurrent readers: results must always be in-bounds and finite
+    let mut readers = Vec::new();
+    for t in 0..3u64 {
+        let idx = index.clone();
+        let fam = fam.clone();
+        let feats = feats.clone();
+        readers.push(std::thread::spawn(move || {
+            let mut rng = Rng::seed_from_u64(90 + t);
+            for _ in 0..40 {
+                let w = unit_vec(&mut rng, 16);
+                let hit = idx.query(fam.as_ref(), &w, &feats, QueryBudget::unlimited(), |_| true);
+                if let Some((id, m)) = hit.best {
+                    assert!(id < 1500);
+                    assert!(m.is_finite());
+                }
+            }
+        }));
+    }
+    writer.join().unwrap();
+    for r in readers {
+        r.join().unwrap();
+    }
+    let doomed_set: HashSet<u32> = doomed.into_iter().collect();
+    assert_eq!(index.len(), 1500 - doomed_set.len());
+    for _ in 0..40 {
+        let w = unit_vec(&mut rng, 16);
+        let hit = index.query(fam.as_ref(), &w, ds.features(), QueryBudget::unlimited(), |_| true);
+        if let Some((id, _)) = hit.best {
+            assert!(!doomed_set.contains(&(id as u32)), "doomed id {id} returned");
+        }
+    }
+}
+
+#[test]
+fn snapshot_roundtrip_preserves_query_results() {
+    let mut rng = Rng::seed_from_u64(74);
+    let ds = test_blobs(900, 16, 3, &mut rng);
+    let fam = BhHash::sample(16, 12, &mut rng);
+    let codes = fam.encode_all(ds.features());
+    let index = ShardedIndex::from_codes(&codes, 3, 4);
+    for id in (0..900u32).step_by(5) {
+        index.remove(id);
+    }
+    let path = std::env::temp_dir().join(format!("chh_online_snap_{}", std::process::id()));
+    chh::persist::save_sharded(&path, &index).unwrap();
+    let back = chh::persist::load_sharded(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(back.len(), index.len());
+    for _ in 0..25 {
+        let w = unit_vec(&mut rng, 16);
+        let a = index.query(&fam, &w, ds.features(), QueryBudget::unlimited(), |_| true);
+        let b = back.query(&fam, &w, ds.features(), QueryBudget::unlimited(), |_| true);
+        assert_eq!(a.best.map(|(i, _)| i), b.best.map(|(i, _)| i));
+        assert_eq!(a.scanned, b.scanned);
+    }
+}
