@@ -1,0 +1,123 @@
+//! Batch-path throughput: the data-parallel engine vs its serial twin on
+//! every offline hot path — full-database encode, batch hyperplane
+//! queries, retrieval eval (exhaustive ground truth included) and LBH
+//! training. Parity is asserted inline: the pooled runs must produce the
+//! exact serial results while beating serial wall-clock.
+//!
+//! Run: `cargo bench --bench batch_throughput`
+//! (`CHH_BENCH_FULL=1` for paper-scale n.)
+
+use std::hint::black_box;
+
+use chh::bench::{fmt_dur, print_table, Bench, BenchStats};
+use chh::data::{tiny1m_like, TinyConfig};
+use chh::eval::{evaluate, evaluate_with};
+use chh::hash::{BhHash, HashFamily};
+use chh::lbh::{LbhTrainConfig, LbhTrainer};
+use chh::par::Pool;
+use chh::rng::Rng;
+use chh::table::HyperplaneIndex;
+
+const WORKERS: usize = 4;
+
+fn speedup_row(name: &str, serial: &BenchStats, pooled: &BenchStats) -> Vec<String> {
+    vec![
+        name.to_string(),
+        fmt_dur(serial.mean),
+        fmt_dur(pooled.mean),
+        format!("{:.2}x", serial.mean_secs() / pooled.mean_secs().max(1e-12)),
+    ]
+}
+
+fn main() {
+    let full = chh::bench::full_scale();
+    let n = if full { 200_000 } else { 30_000 };
+    let b = if full { Bench::default() } else { Bench::quick() };
+    let mut rng = Rng::seed_from_u64(2012);
+    let data = tiny1m_like(&TinyConfig { n, ..Default::default() }, &mut rng);
+    let bh = BhHash::sample(384, 20, &mut rng);
+    let serial = Pool::serial();
+    let pooled = Pool::new(WORKERS);
+    let mut rows = Vec::new();
+    let mut summary = Vec::new();
+
+    // ── encode_all: the database-wide GEMM path ──────────────────────
+    let enc_serial = b.run(&format!("encode_all n={n} serial"), || {
+        black_box(bh.encode_all_pool(data.features(), &serial));
+    });
+    let enc_pooled = b.run(&format!("encode_all n={n} workers={WORKERS}"), || {
+        black_box(bh.encode_all_pool(data.features(), &pooled));
+    });
+    assert_eq!(
+        bh.encode_all_pool(data.features(), &serial).codes,
+        bh.encode_all_pool(data.features(), &pooled).codes,
+        "encode parity"
+    );
+    summary.push(speedup_row("encode_all", &enc_serial, &enc_pooled));
+    rows.push(enc_serial);
+    rows.push(enc_pooled);
+
+    // ── query_batch: one AL round's worth of hyperplanes ─────────────
+    let index = HyperplaneIndex::build_with(&bh, data.features(), 4, &pooled);
+    let queries: Vec<Vec<f32>> =
+        (0..64).map(|_| chh::testing::unit_vec(&mut rng, 384)).collect();
+    let qb_serial = b.run("query_batch q=64 serial", || {
+        black_box(index.query_batch(&bh, &queries, data.features(), &serial));
+    });
+    let qb_pooled = b.run(&format!("query_batch q=64 workers={WORKERS}"), || {
+        black_box(index.query_batch(&bh, &queries, data.features(), &pooled));
+    });
+    summary.push(speedup_row("query_batch", &qb_serial, &qb_pooled));
+    rows.push(qb_serial);
+    rows.push(qb_pooled);
+
+    // ── evaluate: recall@T with exhaustive ground truth ──────────────
+    let eval_queries: Vec<Vec<f32>> =
+        (0..12).map(|_| chh::testing::unit_vec(&mut rng, 384)).collect();
+    let ev_serial = b.run("evaluate q=12 t=20 serial", || {
+        black_box(evaluate(&bh, &index, data.features(), &eval_queries, 20));
+    });
+    let ev_pooled = b.run(&format!("evaluate q=12 t=20 workers={WORKERS}"), || {
+        black_box(evaluate_with(&bh, &index, data.features(), &eval_queries, 20, &pooled));
+    });
+    summary.push(speedup_row("evaluate", &ev_serial, &ev_pooled));
+    rows.push(ev_serial);
+    rows.push(ev_pooled);
+
+    // ── LBH training: surrogate grad/eval + O(m²) residue ────────────
+    // m must clear the trainer's TRAIN_PAR_MIN_M gate or both runs are
+    // serial and the comparison is vacuous
+    let m = if full { 2048 } else { chh::lbh::TRAIN_PAR_MIN_M + 256 };
+    let sample: Vec<usize> = (0..m).collect();
+    let refs: Vec<usize> = (0..data.len().min(2000)).collect();
+    let train_with = |workers: usize| {
+        let trainer = LbhTrainer::new(LbhTrainConfig {
+            bits: 4,
+            iters_per_bit: 20,
+            workers,
+            ..Default::default()
+        });
+        let mut trng = Rng::seed_from_u64(99);
+        trainer.train(data.features(), &sample, &refs, &mut trng)
+    };
+    let (tr_serial_out, tr_serial) =
+        Bench::once(&format!("lbh train m={m} k=4 serial"), || train_with(1));
+    let (tr_pooled_out, tr_pooled) =
+        Bench::once(&format!("lbh train m={m} k=4 workers={WORKERS}"), || train_with(WORKERS));
+    assert_eq!(
+        tr_serial_out.0.pairs.u.data, tr_pooled_out.0.pairs.u.data,
+        "training parity"
+    );
+    summary.push(speedup_row("lbh_train", &tr_serial, &tr_pooled));
+    rows.push(tr_serial);
+    rows.push(tr_pooled);
+
+    print_table(&format!("batch throughput (n={n}, {WORKERS} workers)"), &rows);
+    chh::report::print_rows(
+        "serial vs pooled wall-clock",
+        &["path", "serial", "pooled", "speedup"],
+        &summary,
+    );
+    chh::report::write_csv("batch_throughput.csv", &["path", "serial", "pooled", "speedup"], &summary)
+        .expect("csv");
+}

@@ -106,6 +106,10 @@ pub struct ExperimentConfig {
     pub max_classes: Option<usize>,
     /// evaluate AP every this many AL iterations (1 = every iteration)
     pub eval_every: usize,
+    /// data-parallel worker threads for the batch paths (encode, batch
+    /// query, eval, LBH training): 0 = all cores, 1 = serial. Results are
+    /// bit-identical for every setting (see docs/PARALLEL.md).
+    pub workers: usize,
 }
 
 impl ExperimentConfig {
@@ -127,6 +131,7 @@ impl ExperimentConfig {
             seed: 2012,
             max_classes: None,
             eval_every: 10,
+            workers: 0,
         }
     }
 
@@ -156,6 +161,7 @@ impl ExperimentConfig {
             .opt("seed", "2012", "master RNG seed")
             .opt("classes", "0", "max classes evaluated (0 = all)")
             .opt("eval-every", "10", "AP evaluation interval")
+            .opt("workers", "0", "batch-path worker threads (0 = all cores, 1 = serial)")
     }
 
     /// Build from parsed CLI options registered by [`Self::cli_opts`].
@@ -188,6 +194,7 @@ impl ExperimentConfig {
             cfg.max_classes = Some(classes);
         }
         cfg.eval_every = p.usize("eval-every")?.max(1);
+        cfg.workers = p.usize("workers")?;
         Ok(cfg)
     }
 }
@@ -239,7 +246,7 @@ mod tests {
     fn from_cli() {
         let args = ExperimentConfig::cli_opts(Args::new("t", "t"));
         let toks: Vec<String> =
-            ["--profile", "tiny", "--n", "50k", "--bits", "24", "--radius", "2"]
+            ["--profile", "tiny", "--n", "50k", "--bits", "24", "--radius", "2", "--workers", "3"]
                 .iter()
                 .map(|s| s.to_string())
                 .collect();
@@ -249,5 +256,12 @@ mod tests {
         assert_eq!(cfg.n, 50_000);
         assert_eq!(cfg.bits(), 24);
         assert_eq!(cfg.radius(), 2);
+        assert_eq!(cfg.workers, 3);
+    }
+
+    #[test]
+    fn workers_defaults_to_auto() {
+        let cfg = ExperimentConfig::for_profile(DatasetProfile::Test);
+        assert_eq!(cfg.workers, 0, "0 = all cores");
     }
 }

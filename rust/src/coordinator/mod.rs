@@ -173,6 +173,50 @@ impl Router {
         pendings.into_iter().map(|p| p.wait()).collect()
     }
 
+    /// Synchronous data-parallel batch: bypass the job queue and answer
+    /// `reqs` directly on `pool` workers (the offline/eval shape of the
+    /// workload; the queue stays the serving path). Hits come back in
+    /// request order and are bit-identical to looping [`Self::submit`] —
+    /// the submitted/completed/scanned counters are updated, latency
+    /// percentiles are not (there is no queueing to measure).
+    pub fn query_batch_pooled(
+        &self,
+        reqs: &[QueryRequest],
+        pool: &crate::par::Pool,
+    ) -> Vec<QueryHit> {
+        let sh = &self.shared;
+        let hits: Vec<QueryHit> = pool
+            .map(reqs.len(), crate::table::QUERY_CHUNK, |range| {
+                range
+                    .map(|qi| {
+                        let req = &reqs[qi];
+                        let lookup = sh.family.encode_query(&req.w);
+                        match &req.exclude {
+                            Some(ex) => sh.index.query_code_filtered(
+                                lookup,
+                                &req.w,
+                                &sh.feats,
+                                |i| !ex.contains(&i),
+                            ),
+                            None => sh
+                                .index
+                                .query_code_filtered(lookup, &req.w, &sh.feats, |_| true),
+                        }
+                    })
+                    .collect::<Vec<_>>()
+            })
+            .into_iter()
+            .flatten()
+            .collect();
+        let scanned: usize = hits.iter().map(|h| h.scanned).sum();
+        let empty = hits.iter().filter(|h| !h.nonempty).count();
+        self.stats.submitted.fetch_add(reqs.len() as u64, Ordering::Relaxed);
+        self.stats.completed.fetch_add(reqs.len() as u64, Ordering::Relaxed);
+        self.stats.empty_lookups.fetch_add(empty as u64, Ordering::Relaxed);
+        self.stats.candidates_scanned.fetch_add(scanned as u64, Ordering::Relaxed);
+        hits
+    }
+
     /// Drain the queue and join the workers.
     pub fn shutdown(self) {
         drop(self.tx);
@@ -330,6 +374,68 @@ impl OnlineRouter {
     pub fn submit_batch(&self, reqs: Vec<QueryRequest>) -> Vec<QueryResponse> {
         let pendings: Vec<Pending> = reqs.into_iter().map(|r| self.submit(r)).collect();
         pendings.into_iter().map(|p| p.wait()).collect()
+    }
+
+    /// Synchronous data-parallel batch: answer `reqs` on the caller
+    /// thread, reusing `pool` for the per-shard fan-out of each query
+    /// ([`ShardedIndex::query_code_pool`]) instead of the job queue. Hits
+    /// come back in request order with the same per-shard budget
+    /// semantics as [`Self::submit`]; counters are updated, latency
+    /// percentiles are not.
+    pub fn query_batch_pooled(
+        &self,
+        reqs: &[QueryRequest],
+        pool: &crate::par::Pool,
+    ) -> Vec<QueryHit> {
+        let sh = &self.shared;
+        let run_one = |req: &QueryRequest, fan: &crate::par::Pool| -> QueryHit {
+            let lookup = sh.family.encode_query(&req.w);
+            let scores = sh.family.query_bit_scores(&req.w);
+            match &req.exclude {
+                Some(ex) => sh.index.query_code_pool(
+                    lookup,
+                    scores.as_deref(),
+                    &req.w,
+                    &sh.feats,
+                    sh.budget,
+                    |i| !ex.contains(&i),
+                    fan,
+                ),
+                None => sh.index.query_code_pool(
+                    lookup,
+                    scores.as_deref(),
+                    &req.w,
+                    &sh.feats,
+                    sh.budget,
+                    |_| true,
+                    fan,
+                ),
+            }
+        };
+        // Many queries: parallelize across requests (each request's shard
+        // fan-out then runs inline on its worker) — shard count must not
+        // cap batch parallelism. A single query instead spends the
+        // workers on its per-shard fan-out. Hits are identical either
+        // way: shard partials always merge in shard order.
+        let hits: Vec<QueryHit> = if reqs.len() == 1 {
+            vec![run_one(&reqs[0], pool)]
+        } else {
+            pool.map(reqs.len(), crate::table::QUERY_CHUNK, |range| {
+                range
+                    .map(|qi| run_one(&reqs[qi], &crate::par::Pool::serial()))
+                    .collect::<Vec<_>>()
+            })
+            .into_iter()
+            .flatten()
+            .collect()
+        };
+        let scanned: usize = hits.iter().map(|h| h.scanned).sum();
+        let empty = hits.iter().filter(|h| !h.nonempty).count();
+        self.stats.submitted.fetch_add(reqs.len() as u64, Ordering::Relaxed);
+        self.stats.completed.fetch_add(reqs.len() as u64, Ordering::Relaxed);
+        self.stats.empty_lookups.fetch_add(empty as u64, Ordering::Relaxed);
+        self.stats.candidates_scanned.fetch_add(scanned as u64, Ordering::Relaxed);
+        hits
     }
 
     /// Drain the queue and join the workers.
@@ -562,6 +668,49 @@ mod tests {
                 .submit(QueryRequest { w, exclude: Some(Arc::new(ex)) })
                 .wait();
             assert_ne!(filtered.hit.best.map(|(i, _)| i), Some(best));
+        }
+        router.shutdown();
+    }
+
+    #[test]
+    fn pooled_batch_matches_queued_path() {
+        let (fam, idx, feats, mut rng) = setup(400);
+        let router = Router::new(fam.clone(), idx.clone(), feats.clone(), 2, 16);
+        let reqs: Vec<QueryRequest> = (0..12)
+            .map(|_| QueryRequest { w: unit_vec(&mut rng, 16), exclude: None })
+            .collect();
+        let queued = router.submit_batch(reqs.clone());
+        let pooled = router.query_batch_pooled(&reqs, &crate::par::Pool::new(4));
+        assert_eq!(pooled.len(), queued.len());
+        for (p, q) in pooled.iter().zip(queued.iter()) {
+            assert_eq!(p.best, q.hit.best);
+            assert_eq!(p.scanned, q.hit.scanned);
+        }
+        router.shutdown();
+    }
+
+    #[test]
+    fn online_pooled_batch_matches_queued_path() {
+        let (fam, idx, feats, mut rng) = setup_online(500, 3);
+        let router = OnlineRouter::new(
+            fam,
+            idx,
+            feats,
+            2,
+            8,
+            QueryBudget::new(128, 64),
+        );
+        let reqs: Vec<QueryRequest> = (0..10)
+            .map(|_| QueryRequest { w: unit_vec(&mut rng, 16), exclude: None })
+            .collect();
+        let queued = router.submit_batch(reqs.clone());
+        for workers in [1, 4] {
+            let pooled = router.query_batch_pooled(&reqs, &crate::par::Pool::new(workers));
+            for (p, q) in pooled.iter().zip(queued.iter()) {
+                assert_eq!(p.best, q.hit.best, "workers={workers}");
+                assert_eq!(p.scanned, q.hit.scanned);
+                assert_eq!(p.nonempty, q.hit.nonempty);
+            }
         }
         router.shutdown();
     }

@@ -9,15 +9,41 @@
 use crate::data::FeatureStore;
 use crate::hash::HashFamily;
 use crate::linalg::{margin_feat, nrm2};
+use crate::par::Pool;
 use crate::table::HyperplaneIndex;
 
-/// Ground truth: indices of the T smallest-margin points for a query.
+/// Database rows per parallel work unit in the exhaustive margin scan.
+const MARGIN_CHUNK: usize = 4096;
+
+/// Ground truth: indices of the T smallest-margin points for a query
+/// (at most `feats.len()` entries).
 pub fn exhaustive_topk(feats: &FeatureStore, w: &[f32], t: usize) -> Vec<(usize, f32)> {
+    exhaustive_topk_with(feats, w, t, &Pool::serial())
+}
+
+/// [`exhaustive_topk`] with the O(n·d) margin scan fanned out over
+/// `pool`. Margins are per-row independent and reassembled in row order,
+/// so the result is identical for any worker count.
+pub fn exhaustive_topk_with(
+    feats: &FeatureStore,
+    w: &[f32],
+    t: usize,
+    pool: &Pool,
+) -> Vec<(usize, f32)> {
     let wn = nrm2(w);
-    let mut all: Vec<(usize, f32)> =
-        (0..feats.len()).map(|i| (i, margin_feat(feats.row(i), w, wn))).collect();
+    let mut all: Vec<(usize, f32)> = pool
+        .map(feats.len(), MARGIN_CHUNK, |range| {
+            range.map(|i| (i, margin_feat(feats.row(i), w, wn))).collect::<Vec<_>>()
+        })
+        .into_iter()
+        .flatten()
+        .collect();
     // partial selection: T smallest margins
     let t = t.min(all.len());
+    if t == 0 {
+        // empty store (or t = 0): select_nth on an empty slice panics
+        return Vec::new();
+    }
     all.select_nth_unstable_by(t.saturating_sub(1), |a, b| {
         a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal)
     });
@@ -29,9 +55,13 @@ pub fn exhaustive_topk(feats: &FeatureStore, w: &[f32], t: usize) -> Vec<(usize,
 /// One query's retrieval evaluation.
 #[derive(Clone, Debug, Default)]
 pub struct QueryEval {
-    /// |retrieved ∩ true-topT| / T
+    /// |retrieved ∩ truth| / |truth|, where the truth set is the true
+    /// top-T — truncated to the database size when `t > n`, so recall can
+    /// reach 1.0 on small datasets
     pub recall_at_t: f64,
-    /// best retrieved margin / true minimum margin (≥ 1; 1 = perfect)
+    /// best retrieved margin / true minimum margin (≥ 1; 1 = perfect —
+    /// including when the true minimum is exactly 0 and the probe
+    /// retrieved that very point)
     pub margin_ratio: f64,
     /// candidates the hash probe scanned
     pub scanned: usize,
@@ -67,11 +97,19 @@ pub fn eval_query(
         }
     }
     QueryEval {
-        recall_at_t: hits as f64 / t.max(1) as f64,
-        margin_ratio: if cand.is_empty() || true_best <= 0.0 {
+        // divide by the actual truth-set size, not t: exhaustive_topk
+        // truncates to feats.len() when t > n
+        recall_at_t: hits as f64 / truth.len().max(1) as f64,
+        margin_ratio: if cand.is_empty() {
+            f64::INFINITY
+        } else if best == true_best {
+            // covers true_best == 0 with the on-hyperplane point retrieved
+            1.0
+        } else if true_best <= 0.0 {
+            // genuine miss of a zero-margin point: infinitely worse
             f64::INFINITY
         } else {
-            (best / true_best.max(1e-12)) as f64
+            (best / true_best) as f64
         },
         scanned: cand.len(),
         nonempty: !cand.is_empty(),
@@ -96,12 +134,33 @@ pub fn evaluate(
     queries: &[Vec<f32>],
     t: usize,
 ) -> EvalSummary {
+    evaluate_with(family, index, feats, queries, t, &Pool::serial())
+}
+
+/// [`evaluate`] with one work unit per query fanned out over `pool` —
+/// each query carries its own exhaustive ground-truth scan, the eval
+/// bottleneck. Per-query results are aggregated in query order, so the
+/// summary is bit-identical for any worker count.
+pub fn evaluate_with(
+    family: &dyn HashFamily,
+    index: &HyperplaneIndex,
+    feats: &FeatureStore,
+    queries: &[Vec<f32>],
+    t: usize,
+    pool: &Pool,
+) -> EvalSummary {
+    let evals: Vec<QueryEval> = pool
+        .map(queries.len(), 1, |range| {
+            range.map(|q| eval_query(family, index, feats, &queries[q], t)).collect::<Vec<_>>()
+        })
+        .into_iter()
+        .flatten()
+        .collect();
     let mut recall = 0.0;
     let mut ratios: Vec<f64> = Vec::new();
     let mut scanned = 0usize;
     let mut nonempty = 0usize;
-    for w in queries {
-        let e = eval_query(family, index, feats, w, t);
+    for e in &evals {
         recall += e.recall_at_t;
         if e.margin_ratio.is_finite() {
             ratios.push(e.margin_ratio);
@@ -179,6 +238,47 @@ mod tests {
         }
         assert!((last - 1.0).abs() < 1e-9);
     }
+
+    #[test]
+    fn recall_reaches_one_when_t_exceeds_dataset() {
+        // regression: with t > n the old denominator (t) capped recall at
+        // n/t < 1 even for a perfect retriever
+        let mut rng = Rng::seed_from_u64(7);
+        let n = 40;
+        let ds = test_blobs(n, 8, 2, &mut rng);
+        let fam = BhHash::sample(8, 6, &mut rng);
+        // full ball: every point retrieved
+        let index = HyperplaneIndex::build(&fam, ds.features(), 6);
+        let w = unit_vec(&mut rng, 8);
+        let e = eval_query(&fam, &index, ds.features(), &w, n * 3);
+        assert_eq!(e.scanned, n);
+        assert!((e.recall_at_t - 1.0).abs() < 1e-12, "recall {}", e.recall_at_t);
+    }
+
+    #[test]
+    fn zero_margin_point_retrieved_reports_ratio_one() {
+        // one point exactly on the hyperplane (margin 0): retrieving it
+        // must report a perfect ratio, not ∞
+        let mut m = crate::linalg::Mat::zeros(3, 4);
+        m.row_mut(0).copy_from_slice(&[0.0, 2.0, 0.0, 0.0]); // ⟂ w: margin 0
+        m.row_mut(1).copy_from_slice(&[1.0, 1.0, 0.0, 0.0]);
+        m.row_mut(2).copy_from_slice(&[3.0, 0.0, 1.0, 0.0]);
+        let feats = FeatureStore::Dense(m);
+        let w = vec![1.0, 0.0, 0.0, 0.0];
+        let mut rng = Rng::seed_from_u64(9);
+        let fam = BhHash::sample(4, 5, &mut rng);
+        let index = HyperplaneIndex::build(&fam, &feats, 5); // full ball
+        let e = eval_query(&fam, &index, &feats, &w, 2);
+        assert_eq!(e.scanned, 3);
+        assert_eq!(e.margin_ratio, 1.0, "exact hit on zero-margin point");
+        // an index that misses everything still reports ∞
+        let empty = HyperplaneIndex::from_codes(crate::hash::codes::CodeArray::new(5), 0);
+        let miss = eval_query(&fam, &empty, &feats, &w, 2);
+        assert!(miss.margin_ratio.is_infinite());
+    }
+
+    // evaluate_with / exhaustive_topk_with parity across worker counts is
+    // covered by the integration suite in rust/tests/batch_parallel.rs.
 
     #[test]
     fn empty_index_reports_inf_ratio() {

@@ -156,13 +156,11 @@ impl Iterator for HammingBall {
             // Gosper's hack: next mask with the same popcount
             let v = self.cur;
             let c = v & v.wrapping_neg();
-            let r = v + c;
-            // guard overflow when v's top run touches bit 63 (k = 64)
-            let next = if c == 0 || r == 0 {
-                0
-            } else {
-                (((v ^ r) >> 2) / c) | r
-            };
+            // When v is the final (top-aligned) mask of a 64-bit weight
+            // class, v + c is exactly 2^64: wrap to 0 and treat the class
+            // as exhausted. A plain `v + c` would panic in debug builds.
+            let r = v.wrapping_add(c);
+            let next = if r == 0 { 0 } else { (((v ^ r) >> 2) / c) | r };
             if next == 0 || next > self.limit {
                 self.cur = 0; // weight class exhausted; advance weight
                 continue;
@@ -282,6 +280,29 @@ mod tests {
             }
             Ok(())
         });
+        // The 63/64-bit boundary (bounded radius): the last mask of a
+        // weight class is top-aligned there and Gosper's next-permutation
+        // addition reaches 2^64 at k = 64 — regression for the wrapping
+        // guard in `HammingBall::next`.
+        for k in [63usize, 64] {
+            for r in 0..=2usize {
+                let masks: Vec<u64> = HammingBall::new(k, r).collect();
+                assert_eq!(
+                    masks.len() as u64,
+                    ball_volume(k, r),
+                    "k={k} r={r}: enumeration incomplete"
+                );
+                let set: std::collections::HashSet<_> = masks.iter().collect();
+                assert_eq!(set.len(), masks.len(), "k={k} r={r}: duplicates");
+                let mut last_w = 0;
+                for &m in &masks {
+                    let w = m.count_ones() as usize;
+                    assert!(w >= last_w && w <= r, "k={k} r={r}: weight order");
+                    assert_eq!(m & !mask(k), 0, "k={k} r={r}: bits above k");
+                    last_w = w;
+                }
+            }
+        }
     }
 
     #[test]

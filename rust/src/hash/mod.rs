@@ -27,8 +27,15 @@ pub mod fasthash;
 
 use crate::data::FeatRef;
 use crate::linalg::Mat;
+use crate::par::Pool;
 use crate::rng::Rng;
 use codes::{flip, pack_signs};
+
+/// Rows per parallel work unit in the batch-encode paths. Fixed (never
+/// derived from the worker count) so chunk boundaries — and with them any
+/// accumulation order — are identical for every `workers` setting; see
+/// the determinism contract in [`crate::par`].
+pub const ENCODE_CHUNK: usize = 1024;
 
 /// A family of k hash functions producing a ≤64-bit code.
 pub trait HashFamily: Send + Sync {
@@ -58,9 +65,19 @@ pub trait HashFamily: Send + Sync {
     /// Encode every row of a feature store (native CPU path; the PJRT
     /// batch path in `crate::runtime` produces identical codes).
     fn encode_all(&self, feats: &crate::data::FeatureStore) -> codes::CodeArray {
+        self.encode_all_pool(feats, &Pool::serial())
+    }
+
+    /// Data-parallel batch encode: [`ENCODE_CHUNK`]-row blocks fanned out
+    /// over `pool`, bit-identical to [`Self::encode_all`] for any worker
+    /// count (rows are independent and reassembled in block order).
+    fn encode_all_pool(&self, feats: &crate::data::FeatureStore, pool: &Pool) -> codes::CodeArray {
+        let blocks = pool.map(feats.len(), ENCODE_CHUNK, |range| {
+            range.map(|i| self.encode_point(feats.row(i))).collect::<Vec<u64>>()
+        });
         let mut arr = codes::CodeArray::with_capacity(self.bits(), feats.len());
-        for i in 0..feats.len() {
-            arr.push(self.encode_point(feats.row(i)));
+        for b in blocks {
+            arr.codes.extend_from_slice(&b);
         }
         arr
     }
@@ -140,50 +157,51 @@ fn bilinear_query_scores(pairs: &ProjectionPairs, w: &[f32]) -> Vec<f32> {
 
 /// Batch bilinear encode. Dense stores go through a row-blocked GEMM
 /// (`(X·Uᵀ) ⊙ (X·Vᵀ)` with k-wide accumulator rows) instead of per-point
-/// dot products — ~2× faster from cache locality alone (§Perf pass).
-/// Sparse stores keep the per-point sparse-dot path.
-fn bilinear_encode_all(pairs: &ProjectionPairs, feats: &crate::data::FeatureStore) -> codes::CodeArray {
+/// dot products — ~2× faster from cache locality alone (§Perf pass) —
+/// with the [`ENCODE_CHUNK`]-row blocks fanned out over `pool`. Each row's
+/// accumulation is independent, so the result is bit-identical to the
+/// serial path for any worker count. Sparse stores keep the per-point
+/// sparse-dot path, chunked the same way.
+fn bilinear_encode_all(
+    pairs: &ProjectionPairs,
+    feats: &crate::data::FeatureStore,
+    pool: &Pool,
+) -> codes::CodeArray {
     let k = pairs.k();
-    let mut arr = codes::CodeArray::with_capacity(k, feats.len());
-    match feats {
+    let blocks: Vec<Vec<u64>> = match feats {
         crate::data::FeatureStore::Dense(x) => {
             let ut = pairs.u.transpose(); // (d, k)
             let vt = pairs.v.transpose();
-            const BLOCK: usize = 4096;
-            let mut row0 = 0usize;
-            let mut scores = vec![0.0f32; k];
-            while row0 < x.rows {
-                let rows = BLOCK.min(x.rows - row0);
-                // pu/pv block: (rows, k)
-                let mut pu = Mat::zeros(rows, k);
-                let mut pv = Mat::zeros(rows, k);
-                for r in 0..rows {
-                    let xr = x.row(row0 + r);
-                    let pur = pu.row_mut(r);
+            pool.map(x.rows, ENCODE_CHUNK, |range| {
+                let mut out = Vec::with_capacity(range.len());
+                let mut pu = vec![0.0f32; k];
+                let mut pv = vec![0.0f32; k];
+                let mut scores = vec![0.0f32; k];
+                for r in range {
+                    let xr = x.row(r);
+                    pu.fill(0.0);
+                    pv.fill(0.0);
                     for (t, &a) in xr.iter().enumerate() {
                         if a != 0.0 {
-                            crate::linalg::axpy(a, ut.row(t), pur);
+                            crate::linalg::axpy(a, ut.row(t), &mut pu);
+                            crate::linalg::axpy(a, vt.row(t), &mut pv);
                         }
                     }
-                    let pvr = pv.row_mut(r);
-                    for (t, &a) in xr.iter().enumerate() {
-                        if a != 0.0 {
-                            crate::linalg::axpy(a, vt.row(t), pvr);
-                        }
+                    for ((s, &a), &b) in scores.iter_mut().zip(pu.iter()).zip(pv.iter()) {
+                        *s = a * b;
                     }
-                    for j in 0..k {
-                        scores[j] = pur[j] * pvr[j];
-                    }
-                    arr.push(pack_signs(&scores));
+                    out.push(pack_signs(&scores));
                 }
-                row0 += rows;
-            }
+                out
+            })
         }
-        _ => {
-            for i in 0..feats.len() {
-                arr.push(bilinear_encode(pairs, feats.row(i)));
-            }
-        }
+        _ => pool.map(feats.len(), ENCODE_CHUNK, |range| {
+            range.map(|i| bilinear_encode(pairs, feats.row(i))).collect()
+        }),
+    };
+    let mut arr = codes::CodeArray::with_capacity(k, feats.len());
+    for b in blocks {
+        arr.codes.extend_from_slice(&b);
     }
     arr
 }
@@ -210,8 +228,8 @@ impl HashFamily for BhHash {
         Some(bilinear_query_scores(&self.pairs, w))
     }
 
-    fn encode_all(&self, feats: &crate::data::FeatureStore) -> codes::CodeArray {
-        bilinear_encode_all(&self.pairs, feats)
+    fn encode_all_pool(&self, feats: &crate::data::FeatureStore, pool: &Pool) -> codes::CodeArray {
+        bilinear_encode_all(&self.pairs, feats, pool)
     }
 }
 
@@ -250,8 +268,8 @@ impl HashFamily for LbhHash {
         Some(bilinear_query_scores(&self.pairs, w))
     }
 
-    fn encode_all(&self, feats: &crate::data::FeatureStore) -> codes::CodeArray {
-        bilinear_encode_all(&self.pairs, feats)
+    fn encode_all_pool(&self, feats: &crate::data::FeatureStore, pool: &Pool) -> codes::CodeArray {
+        bilinear_encode_all(&self.pairs, feats, pool)
     }
 }
 
@@ -621,4 +639,8 @@ mod tests {
             assert_eq!(arr.get(i), bh.encode_point(ds.features().row(i)));
         }
     }
+
+    // encode_all_pool parity across families, store layouts and worker
+    // counts is covered by the integration suite in
+    // rust/tests/batch_parallel.rs.
 }

@@ -17,12 +17,43 @@
 //! The native Rust implementation below is the reference path; the PJRT
 //! artifact `lbh_step` (see `python/compile/model.py` and
 //! `crate::runtime`) executes the same step as a fused XLA computation and
-//! is parity-tested against this module.
+//! is parity-tested against this module. Both paths now share one generic
+//! stepper loop ([`LbhTrainer::train_core`]) — the native stepper computes
+//! the Nesterov step in-process, the PJRT stepper dispatches the fused
+//! artifact; residue updates, thresholds and discrete bit extraction are
+//! common code.
+//!
+//! The O(m²) inner products (surrogate cost/gradient, residue update) are
+//! data-parallel over a [`crate::par::Pool`] with fixed row chunks, so
+//! training output is **bit-identical for every `workers` setting** (see
+//! `docs/PARALLEL.md`).
 
 use crate::data::FeatureStore;
 use crate::hash::{LbhHash, ProjectionPairs};
-use crate::linalg::{dot, Mat};
+use crate::linalg::{axpy, dot, Mat};
+use crate::par::Pool;
 use crate::rng::Rng;
+
+/// Rows per parallel work unit inside the trainer. Fixed (never derived
+/// from the worker count) so float accumulation order is identical for
+/// every `workers` setting.
+const TRAIN_CHUNK: usize = 64;
+
+/// Below this sample size the trainer's inner loops run serially even
+/// when `workers > 1`: the pool spawns scoped threads per call, and for
+/// small m the spawn cost rivals the chunk work (the paper's news
+/// profile, m = 500, is in that regime). The gate depends only on the
+/// problem size, so results stay bit-identical either way.
+pub const TRAIN_PAR_MIN_M: usize = 1024;
+
+/// Minimum reference rows the paper's 5% threshold rule needs.
+pub const MIN_THRESHOLD_REFS: usize = 20;
+
+/// Default thresholds used when the reference set is too small for the
+/// 5% quantile rule: saturate |cos| ≥ 0.9 to similar, ≤ 0.1 to dissimilar
+/// (the shape the rule converges to on well-spread data).
+pub const FALLBACK_T1: f32 = 0.9;
+pub const FALLBACK_T2: f32 = 0.1;
 
 /// Training hyper-parameters.
 #[derive(Clone, Debug)]
@@ -36,11 +67,16 @@ pub struct LbhTrainConfig {
     /// Nesterov momentum
     pub momentum: f32,
     /// similarity saturation thresholds (eq. 12); `None` = the paper's
-    /// top/bottom-5% rule computed on the training subsample
+    /// top/bottom-5% rule computed on the training subsample, falling
+    /// back to [`FALLBACK_T1`]/[`FALLBACK_T2`] when fewer than
+    /// [`MIN_THRESHOLD_REFS`] reference rows are available
     pub t1: Option<f32>,
     pub t2: Option<f32>,
     /// cap on the reference set used by the threshold rule
     pub threshold_ref_cap: usize,
+    /// data-parallel worker threads for the O(m²)/O(md) training loops
+    /// (0 = all cores, 1 = serial); the result is identical either way
+    pub workers: usize,
 }
 
 impl Default for LbhTrainConfig {
@@ -53,6 +89,7 @@ impl Default for LbhTrainConfig {
             t1: None,
             t2: None,
             threshold_ref_cap: 4000,
+            workers: 0,
         }
     }
 }
@@ -70,6 +107,9 @@ pub struct LbhTrainStats {
     /// thresholds actually used
     pub t1: f32,
     pub t2: f32,
+    /// whether the documented fallback thresholds were used because the
+    /// reference set was smaller than [`MIN_THRESHOLD_REFS`]
+    pub fallback_thresholds: bool,
     pub train_secs: f64,
 }
 
@@ -107,7 +147,10 @@ pub fn similarity_matrix(xm: &Mat, t1: f32, t2: f32) -> Mat {
 pub fn threshold_rule(xm: &Mat, reference: &Mat) -> (f32, f32) {
     let m = xm.rows;
     let n = reference.rows;
-    assert!(n >= 20, "reference set too small for 5% quantiles");
+    assert!(
+        n >= MIN_THRESHOLD_REFS,
+        "reference set too small for 5% quantiles (use the trainer's fallback)"
+    );
     let top_k = (n as f64 * 0.05).ceil() as usize;
     let bot_k = top_k;
     let mut t1_acc = 0.0f64;
@@ -132,76 +175,166 @@ pub fn threshold_rule(xm: &Mat, reference: &Mat) -> (f32, f32) {
     (t1, t2)
 }
 
-/// One bit's state during the Nesterov solve.
-struct BitState {
-    u: Vec<f32>,
-    v: Vec<f32>,
-    yu: Vec<f32>,
-    yv: Vec<f32>,
-}
-
 /// Evaluate b̃ (sigmoid codes) and the surrogate cost −b̃ᵀRb̃ at (u, v).
 /// Public so the PJRT `lbh_step` artifact can be parity-tested against it.
 pub fn surrogate_eval(xm: &Mat, r: &Mat, u: &[f32], v: &[f32], btil: &mut Vec<f32>) -> f32 {
+    surrogate_eval_pool(xm, r, u, v, btil, &Pool::serial())
+}
+
+/// [`surrogate_eval`] with the per-row work fanned out over `pool`.
+/// Cost partials accumulate per [`TRAIN_CHUNK`] and fold in chunk order,
+/// so the result is bit-identical for any worker count.
+pub fn surrogate_eval_pool(
+    xm: &Mat,
+    r: &Mat,
+    u: &[f32],
+    v: &[f32],
+    btil: &mut Vec<f32>,
+    pool: &Pool,
+) -> f32 {
     let m = xm.rows;
     btil.clear();
-    for i in 0..m {
-        let xi = xm.row(i);
-        btil.push(sigmoid_pm(dot(xi, u) * dot(xi, v)));
-    }
+    btil.resize(m, 0.0);
+    pool.for_each_mut(btil.as_mut_slice(), TRAIN_CHUNK, |c, part| {
+        let row0 = c * TRAIN_CHUNK;
+        for (off, b) in part.iter_mut().enumerate() {
+            let xi = xm.row(row0 + off);
+            *b = sigmoid_pm(dot(xi, u) * dot(xi, v));
+        }
+    });
     // cost = −b̃ᵀ R b̃
-    let mut cost = 0.0f32;
-    for i in 0..m {
-        cost -= btil[i] * dot(r.row(i), btil);
-    }
-    cost
+    let b = &*btil;
+    pool.map_reduce(
+        m,
+        TRAIN_CHUNK,
+        |range| {
+            let mut part = 0.0f32;
+            for i in range {
+                part -= b[i] * dot(r.row(i), b);
+            }
+            part
+        },
+        |a, c| a + c,
+    )
+    .unwrap_or(0.0)
 }
 
 /// Gradient of the surrogate at (u, v) (eq. 18). Returns (g_u, g_v).
 /// Public so the PJRT `lbh_step` artifact can be parity-tested against it.
 pub fn surrogate_grad(xm: &Mat, r: &Mat, u: &[f32], v: &[f32]) -> (Vec<f32>, Vec<f32>) {
+    surrogate_grad_pool(xm, r, u, v, &Pool::serial())
+}
+
+/// [`surrogate_grad`] with the O(m·d) projection pass, the O(m²) Σ pass
+/// and the gradient accumulation fanned out over `pool`. Per-chunk
+/// gradient partials fold in chunk order — bit-identical for any worker
+/// count.
+pub fn surrogate_grad_pool(
+    xm: &Mat,
+    r: &Mat,
+    u: &[f32],
+    v: &[f32],
+    pool: &Pool,
+) -> (Vec<f32>, Vec<f32>) {
     let m = xm.rows;
     let d = xm.cols;
-    let mut pu = Vec::with_capacity(m); // Xu
-    let mut pv = Vec::with_capacity(m); // Xv
-    let mut btil = Vec::with_capacity(m);
-    for i in 0..m {
-        let xi = xm.row(i);
-        let a = dot(xi, u);
-        let b = dot(xi, v);
-        pu.push(a);
-        pv.push(b);
-        btil.push(sigmoid_pm(a * b));
-    }
-    // σ_i = (R b̃)_i · (1 − b̃_i²)
-    let mut sigma = Vec::with_capacity(m);
-    for i in 0..m {
-        sigma.push(dot(r.row(i), &btil) * (1.0 - btil[i] * btil[i]));
-    }
-    // g_u = −Σ_i σ_i (x_i·v) x_i ; g_v = −Σ_i σ_i (x_i·u) x_i
+    // pass 1: per-row projections (x_i·u, x_i·v) and sigmoid code b̃_i
+    let proj: Vec<(f32, f32, f32)> = pool
+        .map(m, TRAIN_CHUNK, |range| {
+            range
+                .map(|i| {
+                    let xi = xm.row(i);
+                    let a = dot(xi, u);
+                    let b = dot(xi, v);
+                    (a, b, sigmoid_pm(a * b))
+                })
+                .collect::<Vec<_>>()
+        })
+        .into_iter()
+        .flatten()
+        .collect();
+    let btil: Vec<f32> = proj.iter().map(|p| p.2).collect();
+    // pass 2: σ_i = (R b̃)_i · (1 − b̃_i²)
+    let sigma: Vec<f32> = pool
+        .map(m, TRAIN_CHUNK, |range| {
+            range
+                .map(|i| dot(r.row(i), &btil) * (1.0 - btil[i] * btil[i]))
+                .collect::<Vec<_>>()
+        })
+        .into_iter()
+        .flatten()
+        .collect();
+    // pass 3: g_u = −Σ_i σ_i (x_i·v) x_i ; g_v = −Σ_i σ_i (x_i·u) x_i,
+    // accumulated per chunk and folded in chunk order
+    let parts: Vec<(Vec<f32>, Vec<f32>)> = pool.map(m, TRAIN_CHUNK, |range| {
+        let mut gu = vec![0.0f32; d];
+        let mut gv = vec![0.0f32; d];
+        for i in range {
+            let xi = xm.row(i);
+            let (pu_i, pv_i, _) = proj[i];
+            axpy(-sigma[i] * pv_i, xi, &mut gu);
+            axpy(-sigma[i] * pu_i, xi, &mut gv);
+        }
+        (gu, gv)
+    });
     let mut gu = vec![0.0f32; d];
     let mut gv = vec![0.0f32; d];
-    for i in 0..m {
-        let xi = xm.row(i);
-        crate::linalg::axpy(-sigma[i] * pv[i], xi, &mut gu);
-        crate::linalg::axpy(-sigma[i] * pu[i], xi, &mut gv);
+    for (cu, cv) in parts {
+        axpy(1.0, &cu, &mut gu);
+        axpy(1.0, &cv, &mut gv);
     }
     (gu, gv)
 }
 
 /// Discrete bit vector b_j = sgn(Xu ⊙ Xv) and discrete cost −bᵀRb.
-fn discrete_eval(xm: &Mat, r: &Mat, u: &[f32], v: &[f32]) -> (Vec<f32>, f32) {
+fn discrete_eval(xm: &Mat, r: &Mat, u: &[f32], v: &[f32], pool: &Pool) -> (Vec<f32>, f32) {
     let m = xm.rows;
-    let mut b = Vec::with_capacity(m);
-    for i in 0..m {
-        let xi = xm.row(i);
-        b.push(if dot(xi, u) * dot(xi, v) >= 0.0 { 1.0 } else { -1.0 });
-    }
-    let mut cost = 0.0f32;
-    for i in 0..m {
-        cost -= b[i] * dot(r.row(i), &b);
-    }
+    let b: Vec<f32> = pool
+        .map(m, TRAIN_CHUNK, |range| {
+            range
+                .map(|i| {
+                    let xi = xm.row(i);
+                    if dot(xi, u) * dot(xi, v) >= 0.0 {
+                        1.0
+                    } else {
+                        -1.0
+                    }
+                })
+                .collect::<Vec<_>>()
+        })
+        .into_iter()
+        .flatten()
+        .collect();
+    let cost = pool
+        .map_reduce(
+            m,
+            TRAIN_CHUNK,
+            |range| {
+                let mut part = 0.0f32;
+                for i in range {
+                    part -= b[i] * dot(r.row(i), &b);
+                }
+                part
+            },
+            |a, c| a + c,
+        )
+        .unwrap_or(0.0);
     (b, cost)
+}
+
+/// R ← R − b bᵀ, row-chunked over the pool (each element is written by
+/// exactly one chunk, so the update is trivially deterministic).
+fn residue_update(r: &mut Mat, b: &[f32], pool: &Pool) {
+    let m = r.cols;
+    pool.for_each_mut(&mut r.data, TRAIN_CHUNK * m, |c, part| {
+        let row0 = c * TRAIN_CHUNK;
+        for (local, row) in part.chunks_mut(m).enumerate() {
+            let bi = b[row0 + local];
+            for (x, &bj) in row.iter_mut().zip(b) {
+                *x -= bi * bj;
+            }
+        }
+    });
 }
 
 /// The LBH trainer.
@@ -216,7 +349,8 @@ impl LbhTrainer {
 
     /// Train on `sample_idx` rows of `feats`. `reference_idx` feeds the
     /// threshold rule (pass the same indices to self-reference, or a wider
-    /// sample of the database as the paper does).
+    /// sample of the database as the paper does). Runs the native stepper;
+    /// `cfg.workers` controls data parallelism (same result either way).
     pub fn train(
         &self,
         feats: &FeatureStore,
@@ -224,126 +358,41 @@ impl LbhTrainer {
         reference_idx: &[usize],
         rng: &mut Rng,
     ) -> (LbhHash, LbhTrainStats) {
-        let t0 = std::time::Instant::now();
-        let d = feats.dim();
-        let m = sample_idx.len();
-        assert!(m >= 8, "need at least 8 training samples");
-        // densify + unit-normalize the training subsample
-        let mut xm = Mat::zeros(m, d);
-        for (r, &i) in sample_idx.iter().enumerate() {
-            feats.row(i).scatter_into(xm.row_mut(r));
-        }
-        xm.l2_normalize_rows();
-
-        // thresholds
-        let (t1, t2) = match (self.cfg.t1, self.cfg.t2) {
-            (Some(a), Some(b)) => (a, b),
-            _ => {
-                let cap = self.cfg.threshold_ref_cap.min(reference_idx.len()).max(20.min(reference_idx.len()));
-                let mut xr = Mat::zeros(cap, d);
-                for (r, &i) in reference_idx.iter().take(cap).enumerate() {
-                    feats.row(i).scatter_into(xr.row_mut(r));
-                }
-                xr.l2_normalize_rows();
-                threshold_rule(&xm, &xr)
-            }
+        // gate BEFORE building the step closure so the per-iteration
+        // surrogate calls (the dominant cost) honor the small-sample rule
+        let pool = if sample_idx.len() < TRAIN_PAR_MIN_M {
+            Pool::serial()
+        } else {
+            Pool::new(self.cfg.workers)
         };
-        assert!(t2 < t1, "thresholds must satisfy t2 < t1 (t1={t1}, t2={t2})");
-
-        let s = similarity_matrix(&xm, t1, t2);
-        let k = self.cfg.bits;
-        // R₀ = k·S
-        let mut r = Mat::zeros(m, m);
-        for (dst, src) in r.data.iter_mut().zip(s.data.iter()) {
-            *dst = k as f32 * src;
-        }
-        let residue_before = r.data.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>();
-
-        let mut stats = LbhTrainStats {
-            t1,
-            t2,
-            residue_before,
-            ..Default::default()
+        let mut step_buf: Vec<f32> = Vec::new();
+        let step = |xm: &Mat,
+                    r: &Mat,
+                    u: &[f32],
+                    v: &[f32],
+                    u_prev: &[f32],
+                    v_prev: &[f32],
+                    lr: f32,
+                    mu: f32| {
+            // Nesterov lookahead y = x + μ(x − x_prev), gradient step from y
+            let yu: Vec<f32> = u.iter().zip(u_prev).map(|(x, p)| x + mu * (x - p)).collect();
+            let yv: Vec<f32> = v.iter().zip(v_prev).map(|(x, p)| x + mu * (x - p)).collect();
+            let (gu, gv) = surrogate_grad_pool(xm, r, &yu, &yv, &pool);
+            let u_new: Vec<f32> = yu.iter().zip(&gu).map(|(y, g)| y - lr * g).collect();
+            let v_new: Vec<f32> = yv.iter().zip(&gv).map(|(y, g)| y - lr * g).collect();
+            let cost = surrogate_eval_pool(xm, r, &u_new, &v_new, &mut step_buf, &pool);
+            Ok::<_, anyhow::Error>((u_new, v_new, cost))
         };
-        let mut u_all = Mat::zeros(k, d);
-        let mut v_all = Mat::zeros(k, d);
-        let mut btil_buf: Vec<f32> = Vec::with_capacity(m);
-
-        for j in 0..k {
-            // random-projection warm start (what h_j^B would have used)
-            let mut st = BitState {
-                u: rng.gauss_vec(d),
-                v: rng.gauss_vec(d),
-                yu: vec![0.0; d],
-                yv: vec![0.0; d],
-            };
-            st.yu.copy_from_slice(&st.u);
-            st.yv.copy_from_slice(&st.v);
-            let mut lr = self.cfg.lr;
-            let mu = self.cfg.momentum;
-            let mut best_cost = surrogate_eval(&xm, &r, &st.u, &st.v, &mut btil_buf);
-            let mut best_u = st.u.clone();
-            let mut best_v = st.v.clone();
-            let mut prev_u = st.u.clone();
-            let mut prev_v = st.v.clone();
-            for _t in 0..self.cfg.iters_per_bit {
-                // Nesterov lookahead: y = x + μ(x − x_prev)
-                for i in 0..d {
-                    st.yu[i] = st.u[i] + mu * (st.u[i] - prev_u[i]);
-                    st.yv[i] = st.v[i] + mu * (st.v[i] - prev_v[i]);
-                }
-                let (gu, gv) = surrogate_grad(&xm, &r, &st.yu, &st.yv);
-                prev_u.copy_from_slice(&st.u);
-                prev_v.copy_from_slice(&st.v);
-                for i in 0..d {
-                    st.u[i] = st.yu[i] - lr * gu[i];
-                    st.v[i] = st.yv[i] - lr * gv[i];
-                }
-                let cost = surrogate_eval(&xm, &r, &st.u, &st.v, &mut btil_buf);
-                if cost < best_cost {
-                    best_cost = cost;
-                    best_u.copy_from_slice(&st.u);
-                    best_v.copy_from_slice(&st.v);
-                    // mild step growth: self-tunes lr across problem scales
-                    lr *= 1.02;
-                } else if !cost.is_finite() || cost > best_cost.abs() * 4.0 + best_cost {
-                    // diverged: restart from best with smaller step
-                    lr *= 0.5;
-                    st.u.copy_from_slice(&best_u);
-                    st.v.copy_from_slice(&best_v);
-                    prev_u.copy_from_slice(&best_u);
-                    prev_v.copy_from_slice(&best_v);
-                    if lr < 1e-6 {
-                        break;
-                    }
-                }
-            }
-            let (b, dcost) = discrete_eval(&xm, &r, &best_u, &best_v);
-            stats.bit_costs.push(best_cost);
-            stats.discrete_costs.push(dcost);
-            u_all.row_mut(j).copy_from_slice(&best_u);
-            v_all.row_mut(j).copy_from_slice(&best_v);
-            // R ← R − b bᵀ
-            for i in 0..m {
-                let bi = b[i];
-                let row = r.row_mut(i);
-                for ip in 0..m {
-                    row[ip] -= bi * b[ip];
-                }
-            }
-        }
-        stats.residue_after = r.data.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>();
-        stats.train_secs = t0.elapsed().as_secs_f64();
-        (LbhHash::from_pairs(ProjectionPairs { u: u_all, v: v_all }), stats)
+        self.train_core(feats, sample_idx, reference_idx, rng, sample_idx.len(), step, true, &pool)
+            .unwrap_or_else(|e| panic!("native LBH training failed: {e:#}"))
     }
-}
 
-impl LbhTrainer {
     /// PJRT-backed training: identical algorithm to [`Self::train`] but
     /// every Nesterov step executes the fused `lbh_step_<profile>` XLA
     /// artifact (L2 graph + L1 Pallas gradient kernels). The sample is
-    /// zero-padded to the artifact's fixed m — padding is gradient-neutral.
-    /// Residue updates and the discrete bit extraction stay native.
+    /// zero-padded to the artifact's fixed m — padding is gradient- and
+    /// cost-neutral. Residue updates, thresholds and the discrete bit
+    /// extraction run on the shared native path.
     pub fn train_pjrt(
         &self,
         stepper: &crate::runtime::LbhStepper<'_>,
@@ -352,82 +401,195 @@ impl LbhTrainer {
         reference_idx: &[usize],
         rng: &mut Rng,
     ) -> anyhow::Result<(LbhHash, LbhTrainStats)> {
+        anyhow::ensure!(
+            feats.dim() == stepper.dim,
+            "dim {} != artifact {}",
+            feats.dim(),
+            stepper.dim
+        );
+        let pool = Pool::new(self.cfg.workers);
+        // warm_start_eval = false: the stepper's XLA-computed costs are
+        // the only costs comparable to each other (native vs XLA float
+        // paths differ at the ~1e-2 level), so the best-so-far baseline
+        // must come from the same engine
+        self.train_core(
+            feats,
+            sample_idx,
+            reference_idx,
+            rng,
+            stepper.m,
+            |xm, r, u, v, u_prev, v_prev, lr, mu| stepper.step(xm, r, u, v, u_prev, v_prev, lr, mu),
+            false,
+            &pool,
+        )
+    }
+
+    /// The shared per-bit solve both entry points drive: build the
+    /// (possibly padded) sample matrix, pick thresholds, then for each bit
+    /// run `step` under the adaptive-lr Nesterov loop, extract the
+    /// discrete bit and downdate the residue. `pad_to` is the stepper's
+    /// fixed row count (`sample_idx.len()` when no padding is needed);
+    /// rows `ms..pad_to` stay zero and are gradient- and cost-neutral.
+    /// `warm_start_eval` seeds best-so-far from a native surrogate eval of
+    /// the warm start — pass false when the stepper's costs come from a
+    /// different float engine (PJRT) and are not comparable to it.
+    #[allow(clippy::too_many_arguments)]
+    fn train_core<S>(
+        &self,
+        feats: &FeatureStore,
+        sample_idx: &[usize],
+        reference_idx: &[usize],
+        rng: &mut Rng,
+        pad_to: usize,
+        mut step: S,
+        warm_start_eval: bool,
+        pool: &Pool,
+    ) -> anyhow::Result<(LbhHash, LbhTrainStats)>
+    where
+        S: FnMut(
+            &Mat,
+            &Mat,
+            &[f32],
+            &[f32],
+            &[f32],
+            &[f32],
+            f32,
+            f32,
+        ) -> anyhow::Result<(Vec<f32>, Vec<f32>, f32)>,
+    {
         let t0 = std::time::Instant::now();
         let d = feats.dim();
-        anyhow::ensure!(d == stepper.dim, "dim {} != artifact {}", d, stepper.dim);
-        let ms = sample_idx.len().min(stepper.m);
+        let ms = sample_idx.len().min(pad_to);
         anyhow::ensure!(ms >= 8, "need at least 8 training samples");
-        let m_art = stepper.m;
-        // padded sample matrix
+        let m_art = pad_to.max(ms);
+        // small samples: per-call thread-spawn cost rivals the chunk work,
+        // so drop to the serial twin (identical result, see TRAIN_PAR_MIN_M)
+        let serial = Pool::serial();
+        let pool = if ms < TRAIN_PAR_MIN_M { &serial } else { pool };
+        // densify + unit-normalize the training subsample (padded rows
+        // stay zero)
         let mut xm = Mat::zeros(m_art, d);
         for (row, &i) in sample_idx.iter().take(ms).enumerate() {
             feats.row(i).scatter_into(xm.row_mut(row));
         }
         xm.l2_normalize_rows();
-        // thresholds + S on the real (unpadded) sample
-        let mut xs = Mat::zeros(ms, d);
-        xs.data.copy_from_slice(&xm.data[..ms * d]);
+        // the real (unpadded) sample for thresholds, S and discrete bits;
+        // without padding that is xm itself — no copy
+        let xs_pad: Option<Mat> = if m_art > ms {
+            let mut xs = Mat::zeros(ms, d);
+            xs.data.copy_from_slice(&xm.data[..ms * d]);
+            Some(xs)
+        } else {
+            None
+        };
+        let xs: &Mat = xs_pad.as_ref().unwrap_or(&xm);
+
+        // thresholds
+        let mut fallback = false;
         let (t1, t2) = match (self.cfg.t1, self.cfg.t2) {
             (Some(a), Some(b)) => (a, b),
             _ => {
-                let cap = self.cfg.threshold_ref_cap.min(reference_idx.len()).max(20.min(reference_idx.len()));
-                let mut xr = Mat::zeros(cap, d);
-                for (row, &i) in reference_idx.iter().take(cap).enumerate() {
-                    feats.row(i).scatter_into(xr.row_mut(row));
+                // clamp the configured cap up to the rule's minimum, then
+                // down to what is actually available — only a genuinely
+                // small reference set (never a small configured cap)
+                // triggers the fallback
+                let cap =
+                    self.cfg.threshold_ref_cap.max(MIN_THRESHOLD_REFS).min(reference_idx.len());
+                if cap < MIN_THRESHOLD_REFS {
+                    // too few reference rows for the 5% quantile rule:
+                    // fall back to the documented defaults instead of
+                    // crashing deep inside threshold_rule
+                    fallback = true;
+                    eprintln!(
+                        "lbh: only {} reference rows (< {MIN_THRESHOLD_REFS} needed for \
+                         the 5% threshold rule); using default thresholds \
+                         t1={FALLBACK_T1}, t2={FALLBACK_T2}",
+                        reference_idx.len()
+                    );
+                    (FALLBACK_T1, FALLBACK_T2)
+                } else {
+                    let mut xr = Mat::zeros(cap, d);
+                    for (row, &i) in reference_idx.iter().take(cap).enumerate() {
+                        feats.row(i).scatter_into(xr.row_mut(row));
+                    }
+                    xr.l2_normalize_rows();
+                    threshold_rule(xs, &xr)
                 }
-                xr.l2_normalize_rows();
-                threshold_rule(&xs, &xr)
             }
         };
-        let s = similarity_matrix(&xs, t1, t2);
+        anyhow::ensure!(t2 < t1, "thresholds must satisfy t2 < t1 (t1={t1}, t2={t2})");
+
+        let s = similarity_matrix(xs, t1, t2);
         let k = self.cfg.bits;
-        // residue on the real sample; padded copy refreshed per bit
+        // R₀ = k·S on the real sample; the padded copy handed to the
+        // stepper is refreshed per bit
         let mut r_small = Mat::zeros(ms, ms);
         for (dst, src) in r_small.data.iter_mut().zip(s.data.iter()) {
             *dst = k as f32 * src;
         }
         let residue_before =
             r_small.data.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>();
-        let mut stats =
-            LbhTrainStats { t1, t2, residue_before, ..Default::default() };
+        let mut stats = LbhTrainStats {
+            t1,
+            t2,
+            residue_before,
+            fallback_thresholds: fallback,
+            ..Default::default()
+        };
         let mut u_all = Mat::zeros(k, d);
         let mut v_all = Mat::zeros(k, d);
-        let mut r_pad = Mat::zeros(m_art, m_art);
+        let mut btil_buf: Vec<f32> = Vec::with_capacity(m_art);
+        // the padded residue is only materialized when padding is real —
+        // the native path steps directly on r_small
+        let mut r_pad: Option<Mat> = if m_art > ms { Some(Mat::zeros(m_art, m_art)) } else { None };
+
         for j in 0..k {
-            // refresh padded residue
-            for row in 0..m_art {
-                let dst = r_pad.row_mut(row);
-                if row < ms {
-                    dst[..ms].copy_from_slice(r_small.row(row));
-                    for x in dst[ms..].iter_mut() {
-                        *x = 0.0;
+            // refresh the stepper's residue from the live one
+            let r_step: &Mat = match r_pad.as_mut() {
+                Some(rp) => {
+                    for row in 0..m_art {
+                        let dst = rp.row_mut(row);
+                        if row < ms {
+                            dst[..ms].copy_from_slice(r_small.row(row));
+                            for x in dst[ms..].iter_mut() {
+                                *x = 0.0;
+                            }
+                        } else {
+                            for x in dst.iter_mut() {
+                                *x = 0.0;
+                            }
+                        }
                     }
-                } else {
-                    for x in dst.iter_mut() {
-                        *x = 0.0;
-                    }
+                    rp
                 }
-            }
+                None => &r_small,
+            };
+            // random-projection warm start (what h_j^B would have used)
             let mut u = rng.gauss_vec(d);
             let mut v = rng.gauss_vec(d);
             let mut u_prev = u.clone();
             let mut v_prev = v.clone();
             let mut lr = self.cfg.lr;
             let mu = self.cfg.momentum;
-            let mut best_cost = f32::INFINITY;
+            let mut best_cost = if warm_start_eval {
+                surrogate_eval_pool(&xm, r_step, &u, &v, &mut btil_buf, pool)
+            } else {
+                f32::INFINITY
+            };
             let mut best_u = u.clone();
             let mut best_v = v.clone();
             for _t in 0..self.cfg.iters_per_bit {
-                let (u_new, v_new, cost) =
-                    stepper.step(&xm, &r_pad, &u, &v, &u_prev, &v_prev, lr, mu)?;
+                let (u_new, v_new, cost) = step(&xm, r_step, &u, &v, &u_prev, &v_prev, lr, mu)?;
                 u_prev = std::mem::replace(&mut u, u_new);
                 v_prev = std::mem::replace(&mut v, v_new);
                 if cost < best_cost {
                     best_cost = cost;
                     best_u.copy_from_slice(&u);
                     best_v.copy_from_slice(&v);
+                    // mild step growth: self-tunes lr across problem scales
                     lr *= 1.02;
                 } else if !cost.is_finite() || cost > best_cost.abs() * 4.0 + best_cost {
+                    // diverged: restart from best with smaller step
                     lr *= 0.5;
                     u.copy_from_slice(&best_u);
                     v.copy_from_slice(&best_v);
@@ -438,18 +600,13 @@ impl LbhTrainer {
                     }
                 }
             }
-            let (b, dcost) = discrete_eval(&xs, &r_small, &best_u, &best_v);
+            let (b, dcost) = discrete_eval(xs, &r_small, &best_u, &best_v, pool);
             stats.bit_costs.push(best_cost);
             stats.discrete_costs.push(dcost);
             u_all.row_mut(j).copy_from_slice(&best_u);
             v_all.row_mut(j).copy_from_slice(&best_v);
-            for i in 0..ms {
-                let bi = b[i];
-                let row = r_small.row_mut(i);
-                for ip in 0..ms {
-                    row[ip] -= bi * b[ip];
-                }
-            }
+            // R ← R − b bᵀ
+            residue_update(&mut r_small, &b, pool);
         }
         stats.residue_after =
             r_small.data.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>();
@@ -522,6 +679,64 @@ mod tests {
         let (t1, t2) = threshold_rule(&xm, &xr);
         assert!(t2 < t1, "t1={t1} t2={t2}");
         assert!(t1 <= 1.0 && t2 > 0.0);
+    }
+
+    #[test]
+    fn small_reference_set_falls_back_instead_of_panicking() {
+        // regression: reference_idx.len() < 20 used to reach
+        // threshold_rule's n >= 20 assert and crash deep in training
+        let mut rng = Rng::seed_from_u64(31);
+        let ds = test_blobs(100, 12, 2, &mut rng);
+        let sample: Vec<usize> = (0..32).collect();
+        let tiny_refs: Vec<usize> = (0..10).collect();
+        let trainer = LbhTrainer::new(LbhTrainConfig {
+            bits: 4,
+            iters_per_bit: 10,
+            ..Default::default()
+        });
+        let (_h, stats) = trainer.train(ds.features(), &sample, &tiny_refs, &mut rng);
+        assert!(stats.fallback_thresholds);
+        assert_eq!(stats.t1, FALLBACK_T1);
+        assert_eq!(stats.t2, FALLBACK_T2);
+        // a healthy reference set keeps the quantile rule
+        let refs: Vec<usize> = (0..100).collect();
+        let (_h2, stats2) = trainer.train(ds.features(), &sample, &refs, &mut rng);
+        assert!(!stats2.fallback_thresholds);
+        // a small *configured cap* with plenty of references is clamped
+        // up to the rule's minimum, not silently degraded to the fallback
+        let capped = LbhTrainer::new(LbhTrainConfig {
+            bits: 4,
+            iters_per_bit: 10,
+            threshold_ref_cap: 10,
+            ..Default::default()
+        });
+        let (_h3, stats3) = capped.train(ds.features(), &sample, &refs, &mut rng);
+        assert!(!stats3.fallback_thresholds);
+    }
+
+    // full-trainer parity across worker counts (above TRAIN_PAR_MIN_M) is
+    // covered by the integration suite in rust/tests/batch_parallel.rs.
+
+    #[test]
+    fn surrogate_pool_parity() {
+        let mut rng = Rng::seed_from_u64(41);
+        let m = 200; // > TRAIN_CHUNK so chunking actually happens
+        let d = 12;
+        let mut xm = Mat::from_vec(m, d, rng.gauss_vec(m * d));
+        xm.l2_normalize_rows();
+        let s = similarity_matrix(&xm, 0.8, 0.2);
+        let u = rng.gauss_vec(d);
+        let v = rng.gauss_vec(d);
+        let mut b1 = Vec::new();
+        let mut b4 = Vec::new();
+        let c1 = surrogate_eval(&xm, &s, &u, &v, &mut b1);
+        let c4 = surrogate_eval_pool(&xm, &s, &u, &v, &mut b4, &Pool::new(4));
+        assert_eq!(c1.to_bits(), c4.to_bits());
+        assert_eq!(b1, b4);
+        let (gu1, gv1) = surrogate_grad(&xm, &s, &u, &v);
+        let (gu4, gv4) = surrogate_grad_pool(&xm, &s, &u, &v, &Pool::new(4));
+        assert_eq!(gu1, gu4);
+        assert_eq!(gv1, gv4);
     }
 
     #[test]

@@ -16,8 +16,10 @@
 //!   lookup, the LBH trainer driver, the SVM active-learning engine, a
 //!   hyperplane-query router/batcher, the online serving subsystem
 //!   (sharded dynamic index + probability-ordered multi-probe, see
-//!   [`online`]), and the PJRT runtime that executes AOT-compiled XLA
-//!   artifacts.
+//!   [`online`]), a data-parallel batch engine for the offline hot paths
+//!   (encode / batch query / train / eval, see [`par`] and
+//!   `docs/PARALLEL.md`), and the PJRT runtime that executes AOT-compiled
+//!   XLA artifacts.
 //! * **L2 (python/compile/model.py)** — JAX graphs for batch encoding,
 //!   LBH Nesterov training steps, margin scans and Hamming ranking, lowered
 //!   once to HLO text by `make artifacts`.
@@ -85,6 +87,7 @@ pub mod lbh;
 pub mod linalg;
 pub mod metrics;
 pub mod online;
+pub mod par;
 pub mod persist;
 pub mod report;
 pub mod rng;
@@ -101,6 +104,7 @@ pub mod prelude {
     pub use crate::hash::{AhHash, BhHash, EhHash, HashFamily, LbhHash};
     pub use crate::lbh::{LbhTrainer, LbhTrainConfig};
     pub use crate::online::{ProbePlanner, QueryBudget, ShardedIndex};
+    pub use crate::par::Pool;
     pub use crate::rng::Rng;
     pub use crate::svm::{LinearSvm, SvmConfig};
     pub use crate::table::{HyperplaneIndex, QueryHit};

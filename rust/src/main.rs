@@ -97,34 +97,40 @@ pub fn make_strategy(
     let bits = cfg.bits();
     let radius = cfg.radius();
     let d = data.dim();
+    let pool = chh::par::Pool::new(cfg.workers);
     Ok(match name {
         "random" => Strategy::Random,
         "exhaustive" => Strategy::Exhaustive,
         "ah" => {
             // dual-bit: k pairs → 2k bits total (paper uses 2× bits for AH)
             let fam: Arc<dyn HashFamily> = Arc::new(AhHash::sample(d, bits, rng));
-            let index = Arc::new(HyperplaneIndex::build(fam.as_ref(), data.features(), radius));
+            let index =
+                Arc::new(HyperplaneIndex::build_with(fam.as_ref(), data.features(), radius, &pool));
             Strategy::Hash { family: fam, index }
         }
         "eh" => {
             let s = (d.min(256)).max(16);
             let fam: Arc<dyn HashFamily> = Arc::new(EhHash::sampled(d, bits, s, rng));
-            let index = Arc::new(HyperplaneIndex::build(fam.as_ref(), data.features(), radius));
+            let index =
+                Arc::new(HyperplaneIndex::build_with(fam.as_ref(), data.features(), radius, &pool));
             Strategy::Hash { family: fam, index }
         }
         "bh" => {
             let fam: Arc<dyn HashFamily> = Arc::new(BhHash::sample(d, bits, rng));
-            let index = Arc::new(HyperplaneIndex::build(fam.as_ref(), data.features(), radius));
+            let index =
+                Arc::new(HyperplaneIndex::build_with(fam.as_ref(), data.features(), radius, &pool));
             Strategy::Hash { family: fam, index }
         }
         "lbh" => {
             let m = cfg.lbh_m();
             let sample = rng.sample_indices(data.len(), m);
             let reference = rng.sample_indices(data.len(), data.len().min(4000));
-            let trainer = LbhTrainer::new(LbhTrainConfig { bits, ..Default::default() });
+            let trainer =
+                LbhTrainer::new(LbhTrainConfig { bits, workers: cfg.workers, ..Default::default() });
             let (fam, _stats) = trainer.train(data.features(), &sample, &reference, rng);
             let fam: Arc<dyn HashFamily> = Arc::new(fam);
-            let index = Arc::new(HyperplaneIndex::build(fam.as_ref(), data.features(), radius));
+            let index =
+                Arc::new(HyperplaneIndex::build_with(fam.as_ref(), data.features(), radius, &pool));
             Strategy::Hash { family: fam, index }
         }
         other => anyhow::bail!("unknown strategy '{other}' (random|exhaustive|ah|eh|bh|lbh)"),
@@ -286,7 +292,14 @@ fn cmd_eval(rest: &[String]) -> anyhow::Result<()> {
             chh::active::Strategy::Hash { family, index } => (family.clone(), index.clone()),
             _ => unreachable!(),
         };
-        let s = chh::eval::evaluate(family.as_ref(), &index, data.features(), &ws, topk);
+        let s = chh::eval::evaluate_with(
+            family.as_ref(),
+            &index,
+            data.features(),
+            &ws,
+            topk,
+            &chh::par::Pool::new(cfg.workers),
+        );
         rows.push(vec![
             family.name().to_string(),
             format!("{:.3}", s.mean_recall),
@@ -390,6 +403,7 @@ fn cmd_train_hash(rest: &[String]) -> anyhow::Result<()> {
     let trainer = LbhTrainer::new(LbhTrainConfig {
         bits: cfg.bits(),
         iters_per_bit: p.usize("iters-per-bit")?,
+        workers: cfg.workers,
         ..Default::default()
     });
     let (fam, stats) = trainer.train(data.features(), &sample, &reference, &mut rng);
@@ -425,17 +439,22 @@ fn cmd_train_hash(rest: &[String]) -> anyhow::Result<()> {
 fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
     let args = ExperimentConfig::cli_opts(Args::new("chh serve", "router under synthetic load"))
         .opt("queries", "1000", "number of hyperplane queries")
-        .opt("workers", "2", "router worker threads")
-        .opt("batch", "16", "queries per submitted batch");
+        .opt("batch", "16", "queries per submitted batch")
+        .flag("pooled", "answer batches on the data-parallel pool instead of the worker queue");
     let p = args.parse(rest).map_err(|h| anyhow::anyhow!("{h}"))?;
     let cfg = ExperimentConfig::from_parsed(&p)?;
     let queries = p.usize("queries")?;
-    let workers = p.usize("workers")?;
+    let pooled_mode = p.flag("pooled");
+    // --workers (from the shared experiment options) doubles as the
+    // router thread count here
+    let workers = chh::par::effective(cfg.workers);
     let batch = p.usize("batch")?.max(1);
     let mut rng = Rng::seed_from_u64(cfg.seed);
     let data = make_dataset(&cfg, &mut rng);
+    let pool = chh::par::Pool::new(cfg.workers);
     let fam: Arc<dyn HashFamily> = Arc::new(BhHash::sample(data.dim(), cfg.bits(), &mut rng));
-    let index = Arc::new(HyperplaneIndex::build(fam.as_ref(), data.features(), cfg.radius()));
+    let index =
+        Arc::new(HyperplaneIndex::build_with(fam.as_ref(), data.features(), cfg.radius(), &pool));
     let feats = Arc::new(data.features().clone());
     let router = chh::coordinator::Router::new(fam, index, feats, workers, 64);
     let t0 = std::time::Instant::now();
@@ -448,18 +467,31 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
                 exclude: None,
             })
             .collect();
-        let _ = router.submit_batch(reqs);
+        if pooled_mode {
+            let _ = router.query_batch_pooled(&reqs, &pool);
+        } else {
+            let _ = router.submit_batch(reqs);
+        }
         done += take;
     }
     let secs = t0.elapsed().as_secs_f64();
     let st = router.stats();
-    println!(
-        "{queries} queries in {secs:.3}s  ({:.0} qps)  p50 {:.1}µs  p95 {:.1}µs  empty {}",
-        queries as f64 / secs,
-        st.latency_p50() * 1e6,
-        st.latency_p95() * 1e6,
-        st.empty_lookups.load(std::sync::atomic::Ordering::Relaxed)
-    );
+    if pooled_mode {
+        // the pooled path bypasses the queue, so there are no latencies
+        println!(
+            "{queries} queries in {secs:.3}s  ({:.0} qps, pooled batch path)  empty {}",
+            queries as f64 / secs,
+            st.empty_lookups.load(std::sync::atomic::Ordering::Relaxed)
+        );
+    } else {
+        println!(
+            "{queries} queries in {secs:.3}s  ({:.0} qps)  p50 {:.1}µs  p95 {:.1}µs  empty {}",
+            queries as f64 / secs,
+            st.latency_p50() * 1e6,
+            st.latency_p95() * 1e6,
+            st.empty_lookups.load(std::sync::atomic::Ordering::Relaxed)
+        );
+    }
     router.shutdown();
     Ok(())
 }
@@ -471,16 +503,18 @@ fn cmd_serve_online(rest: &[String]) -> anyhow::Result<()> {
         "sharded dynamic index under concurrent churn + query load",
     ))
     .opt("queries", "2000", "number of hyperplane queries")
-    .opt("workers", "4", "router worker threads")
     .opt("shards", "8", "index shards")
     .opt("probes", "0", "per-query probe budget (0 = full Hamming ball)")
     .opt("top", "64", "stop probing once this many candidates are ranked")
     .opt("churn-ops", "0", "insert/remove ops run concurrently (0 = n/2)")
-    .opt("snapshot", "", "save the post-churn shard snapshot to this path");
+    .opt("snapshot", "", "save the post-churn shard snapshot to this path")
+    .flag("pooled", "answer batches on the data-parallel pool instead of the worker queue");
     let p = args.parse(rest).map_err(|h| anyhow::anyhow!("{h}"))?;
     let cfg = ExperimentConfig::from_parsed(&p)?;
     let queries = p.usize("queries")?;
-    let workers = p.usize("workers")?;
+    let pooled_mode = p.flag("pooled");
+    // --workers (shared experiment option) sets the router thread count
+    let workers = chh::par::effective(cfg.workers);
     let shards = p.usize("shards")?.max(1);
     let top = p.usize("top")?.max(1);
     let mut rng = Rng::seed_from_u64(cfg.seed);
@@ -542,6 +576,7 @@ fn cmd_serve_online(rest: &[String]) -> anyhow::Result<()> {
         }
         churn_ops
     });
+    let pool = chh::par::Pool::new(cfg.workers);
     let t0 = std::time::Instant::now();
     let mut done = 0usize;
     while done < queries {
@@ -552,7 +587,11 @@ fn cmd_serve_online(rest: &[String]) -> anyhow::Result<()> {
                 exclude: None,
             })
             .collect();
-        let _ = router.submit_batch(reqs);
+        if pooled_mode {
+            let _ = router.query_batch_pooled(&reqs, &pool);
+        } else {
+            let _ = router.submit_batch(reqs);
+        }
         done += take;
     }
     let secs = t0.elapsed().as_secs_f64();
@@ -560,15 +599,19 @@ fn cmd_serve_online(rest: &[String]) -> anyhow::Result<()> {
     let st = router.stats();
     use std::sync::atomic::Ordering::Relaxed;
     println!(
-        "{queries} queries + {ops} churn ops in {secs:.3}s  ({:.0} qps)",
-        queries as f64 / secs
+        "{queries} queries + {ops} churn ops in {secs:.3}s  ({:.0} qps{})",
+        queries as f64 / secs,
+        if pooled_mode { ", pooled batch path" } else { "" }
     );
-    println!(
-        "  latency   : p50 {:.1}µs  p95 {:.1}µs  mean {:.1}µs",
-        st.latency_p50() * 1e6,
-        st.latency_p95() * 1e6,
-        st.latency_mean() * 1e6
-    );
+    if !pooled_mode {
+        // the pooled path bypasses the queue, so there are no latencies
+        println!(
+            "  latency   : p50 {:.1}µs  p95 {:.1}µs  mean {:.1}µs",
+            st.latency_p50() * 1e6,
+            st.latency_p95() * 1e6,
+            st.latency_mean() * 1e6
+        );
+    }
     println!(
         "  scanned/q : {:.1}   empty {}   live points {}",
         st.candidates_scanned.load(Relaxed) as f64 / queries.max(1) as f64,
@@ -597,9 +640,20 @@ fn cmd_encode(rest: &[String]) -> anyhow::Result<()> {
     let data = make_dataset(&cfg, &mut rng);
     let bh = BhHash::sample(data.dim(), cfg.bits(), &mut rng);
     let t0 = std::time::Instant::now();
-    let native = bh.encode_all(data.features());
+    let serial = bh.encode_all(data.features());
+    let serial_secs = t0.elapsed().as_secs_f64();
+    println!("native encode (serial):     {} points in {serial_secs:.3}s", serial.len());
+    let pool = chh::par::Pool::new(cfg.workers);
+    let t0 = std::time::Instant::now();
+    let native = bh.encode_all_pool(data.features(), &pool);
     let native_secs = t0.elapsed().as_secs_f64();
-    println!("native encode: {} points in {native_secs:.3}s", native.len());
+    anyhow::ensure!(native.codes == serial.codes, "pooled encode diverged from serial");
+    println!(
+        "native encode ({} workers): {} points in {native_secs:.3}s ({:.2}x, codes identical)",
+        pool.workers(),
+        native.len(),
+        serial_secs / native_secs.max(1e-9)
+    );
     match chh::runtime::Runtime::open_default() {
         Ok(rt) => match chh::runtime::BatchEncoder::bilinear(&rt, cfg.profile.name()) {
             Ok(enc) => {

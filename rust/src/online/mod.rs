@@ -289,6 +289,51 @@ impl ShardedIndex {
         let scores = family.query_bit_scores(w);
         self.query_code(lookup, scores.as_deref(), w, feats, budget, eligible)
     }
+
+    /// [`Self::query_code`] with the per-shard probes fanned out over
+    /// `pool` (one work unit per shard). Partials merge in shard order,
+    /// so the hit is bit-identical to the inline path for any worker
+    /// count. This is the shard fan-out the coordinator's synchronous
+    /// batch path reuses.
+    #[allow(clippy::too_many_arguments)]
+    pub fn query_code_pool(
+        &self,
+        lookup: u64,
+        scores: Option<&[f32]>,
+        w: &[f32],
+        feats: &FeatureStore,
+        budget: QueryBudget,
+        eligible: impl Fn(usize) -> bool + Sync,
+        pool: &crate::par::Pool,
+    ) -> QueryHit {
+        let masks = self.plan_masks(scores, budget.probes);
+        let views = self.views();
+        let parts: Vec<QueryHit> = pool
+            .map(views.len(), 1, |range| {
+                range
+                    .map(|si| views[si].query(&masks, lookup, w, feats, budget.top, &eligible))
+                    .collect::<Vec<_>>()
+            })
+            .into_iter()
+            .flatten()
+            .collect();
+        merge_hits(&parts)
+    }
+
+    /// [`Self::query`] with pooled shard fan-out.
+    pub fn query_pool(
+        &self,
+        family: &dyn HashFamily,
+        w: &[f32],
+        feats: &FeatureStore,
+        budget: QueryBudget,
+        eligible: impl Fn(usize) -> bool + Sync,
+        pool: &crate::par::Pool,
+    ) -> QueryHit {
+        let lookup = family.encode_query(w);
+        let scores = family.query_bit_scores(w);
+        self.query_code_pool(lookup, scores.as_deref(), w, feats, budget, eligible, pool)
+    }
 }
 
 #[cfg(test)]
@@ -424,6 +469,9 @@ mod tests {
         }
         assert_eq!(idx.len(), 100);
     }
+
+    // query_pool parity with the inline fan-out is covered by the
+    // integration suite in rust/tests/batch_parallel.rs.
 
     #[test]
     fn merge_hits_takes_global_minimum() {

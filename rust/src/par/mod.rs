@@ -1,0 +1,273 @@
+//! Data-parallel execution for the batch hot paths.
+//!
+//! The paper's headline application — active learning over a million
+//! samples — is dominated by embarrassingly parallel batch work: encode
+//! the whole database, answer a batch of hyperplane queries per AL round,
+//! accumulate LBH gradients over an m-row training sample. This module
+//! provides the one primitive all of those share: a [`Pool`] that splits
+//! an index range into fixed-size chunks and runs them on scoped OS
+//! threads (std-only — the vendored registry has no rayon).
+//!
+//! ## Determinism contract
+//!
+//! Every parallel path in the crate is **bit-identical to its serial
+//! twin** (`workers = 1`), for any worker count. Two rules make that
+//! hold, and new call sites must follow them (see `docs/PARALLEL.md`):
+//!
+//! 1. **Chunk boundaries are fixed by the caller**, never derived from
+//!    the worker count. A chunk is the unit of float accumulation, so
+//!    identical chunking ⇒ identical per-chunk rounding.
+//! 2. **Results are combined in chunk order.** [`Pool::map`] returns
+//!    chunk results in index order regardless of which worker finished
+//!    first, and [`Pool::map_reduce`] folds them left to right.
+//!
+//! Work is still *scheduled* dynamically (an atomic chunk cursor), so
+//! stragglers balance across workers without affecting the result.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Resolve a `workers` knob: 0 means "all available cores".
+pub fn effective(workers: usize) -> usize {
+    if workers == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        workers
+    }
+}
+
+/// A chunked fork-join pool over scoped threads.
+///
+/// `Pool` is a policy object (just a worker count) — threads live only
+/// for the duration of one `map`/`for_each` call, so it is `Copy`-cheap
+/// to construct, needs no shutdown, and nests safely (an inner call from
+/// a worker simply runs with its own scope).
+#[derive(Clone, Copy, Debug)]
+pub struct Pool {
+    workers: usize,
+}
+
+impl Pool {
+    /// Pool with `workers` threads; 0 resolves to all available cores.
+    pub fn new(workers: usize) -> Self {
+        Pool { workers: effective(workers) }
+    }
+
+    /// The serial special case — every parallel path's reference twin.
+    pub fn serial() -> Self {
+        Pool { workers: 1 }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    pub fn is_serial(&self) -> bool {
+        self.workers == 1
+    }
+
+    /// Split `0..n` into `chunk`-sized ranges, apply `f` to each, and
+    /// return the results **in chunk order** (independent of scheduling).
+    pub fn map<T, F>(&self, n: usize, chunk: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(Range<usize>) -> T + Sync,
+    {
+        let chunk = chunk.max(1);
+        if n == 0 {
+            return Vec::new();
+        }
+        let n_chunks = n.div_ceil(chunk);
+        let bounds = |c: usize| c * chunk..((c + 1) * chunk).min(n);
+        let w = self.workers.min(n_chunks);
+        if w <= 1 {
+            return (0..n_chunks).map(|c| f(bounds(c))).collect();
+        }
+        let next = AtomicUsize::new(0);
+        let per_worker: Vec<Vec<(usize, T)>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..w)
+                .map(|_| {
+                    s.spawn(|| {
+                        let mut local = Vec::new();
+                        loop {
+                            let c = next.fetch_add(1, Ordering::Relaxed);
+                            if c >= n_chunks {
+                                break;
+                            }
+                            local.push((c, f(bounds(c))));
+                        }
+                        local
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("par: worker panicked")).collect()
+        });
+        let mut slots: Vec<Option<T>> = (0..n_chunks).map(|_| None).collect();
+        for (c, t) in per_worker.into_iter().flatten() {
+            slots[c] = Some(t);
+        }
+        slots.into_iter().map(|t| t.expect("par: chunk never ran")).collect()
+    }
+
+    /// Side-effect-only variant of [`Self::map`].
+    pub fn for_each<F>(&self, n: usize, chunk: usize, f: F)
+    where
+        F: Fn(Range<usize>) + Sync,
+    {
+        self.map(n, chunk, f);
+    }
+
+    /// Map chunks, then fold the per-chunk results **left to right in
+    /// chunk order** — the deterministic reduction used for float
+    /// accumulators (gradient partials, cost sums).
+    pub fn map_reduce<T, F, R>(&self, n: usize, chunk: usize, map: F, reduce: R) -> Option<T>
+    where
+        T: Send,
+        F: Fn(Range<usize>) -> T + Sync,
+        R: Fn(T, T) -> T,
+    {
+        self.map(n, chunk, map).into_iter().reduce(reduce)
+    }
+
+    /// Run `f` over disjoint `chunk_len`-sized mutable sub-slices of
+    /// `data`. `f` receives the chunk index (chunk `c` starts at element
+    /// `c * chunk_len`). Safe because the chunks never alias; results are
+    /// deterministic because every element is written by exactly one
+    /// chunk.
+    pub fn for_each_mut<T, F>(&self, data: &mut [T], chunk_len: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        let chunk_len = chunk_len.max(1);
+        if data.is_empty() {
+            return;
+        }
+        let n_chunks = data.len().div_ceil(chunk_len);
+        let w = self.workers.min(n_chunks);
+        if w <= 1 {
+            for (c, part) in data.chunks_mut(chunk_len).enumerate() {
+                f(c, part);
+            }
+            return;
+        }
+        let queue = Mutex::new(data.chunks_mut(chunk_len).enumerate());
+        std::thread::scope(|s| {
+            for _ in 0..w {
+                s.spawn(|| loop {
+                    // take the next chunk while holding the lock, run it after
+                    let item = queue.lock().expect("par: queue poisoned").next();
+                    match item {
+                        Some((c, part)) => f(c, part),
+                        None => break,
+                    }
+                });
+            }
+        });
+    }
+}
+
+impl Default for Pool {
+    /// All available cores.
+    fn default() -> Self {
+        Pool::new(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn effective_resolves_zero_to_cores() {
+        assert!(effective(0) >= 1);
+        assert_eq!(effective(3), 3);
+        assert_eq!(Pool::new(0).workers(), effective(0));
+        assert!(Pool::serial().is_serial());
+    }
+
+    #[test]
+    fn map_preserves_chunk_order() {
+        for workers in [1, 2, 4, 7] {
+            let pool = Pool::new(workers);
+            let got = pool.map(103, 10, |r| (r.start, r.end));
+            assert_eq!(got.len(), 11);
+            for (c, &(lo, hi)) in got.iter().enumerate() {
+                assert_eq!(lo, c * 10);
+                assert_eq!(hi, (c * 10 + 10).min(103));
+            }
+        }
+    }
+
+    #[test]
+    fn map_handles_empty_and_single() {
+        let pool = Pool::new(4);
+        assert!(pool.map(0, 8, |r| r.len()).is_empty());
+        assert_eq!(pool.map(3, 8, |r| r.len()), vec![3]);
+    }
+
+    #[test]
+    fn map_reduce_is_left_fold_in_chunk_order() {
+        // string concatenation is order-sensitive: any scheduling
+        // nondeterminism would scramble the result
+        let serial = Pool::serial()
+            .map_reduce(57, 5, |r| format!("[{}..{})", r.start, r.end), |a, b| a + &b)
+            .unwrap();
+        for workers in [2, 4, 8] {
+            let par = Pool::new(workers)
+                .map_reduce(57, 5, |r| format!("[{}..{})", r.start, r.end), |a, b| a + &b)
+                .unwrap();
+            assert_eq!(par, serial, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn for_each_mut_writes_every_element_once() {
+        for workers in [1, 3, 8] {
+            let pool = Pool::new(workers);
+            let mut data = vec![0u32; 1000];
+            pool.for_each_mut(&mut data, 64, |c, part| {
+                for (off, x) in part.iter_mut().enumerate() {
+                    *x += (c * 64 + off) as u32 + 1;
+                }
+            });
+            for (i, &x) in data.iter().enumerate() {
+                assert_eq!(x, i as u32 + 1, "workers={workers} element {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn float_accumulation_parity_across_worker_counts() {
+        // the contract the batch paths rely on: fixed chunks + ordered
+        // fold ⇒ bit-identical sums for every worker count
+        let xs: Vec<f32> = (0..10_000).map(|i| ((i * 2654435761_usize) as f32).sin()).collect();
+        let sum_with = |workers: usize| -> f32 {
+            Pool::new(workers)
+                .map_reduce(
+                    xs.len(),
+                    256,
+                    |r| r.map(|i| xs[i]).fold(0.0f32, |a, v| a + v),
+                    |a, b| a + b,
+                )
+                .unwrap()
+        };
+        let serial = sum_with(1);
+        for workers in [2, 3, 4, 8] {
+            let par = sum_with(workers);
+            assert_eq!(par.to_bits(), serial.to_bits(), "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn nested_pools_do_not_deadlock() {
+        let outer = Pool::new(4);
+        let inner = Pool::new(2);
+        let got = outer.map(8, 1, |r| {
+            inner.map(4, 1, |q| q.start + r.start).into_iter().sum::<usize>()
+        });
+        let want: Vec<usize> = (0..8).map(|i| (0..4).map(|q| q + i).sum()).collect();
+        assert_eq!(got, want);
+    }
+}

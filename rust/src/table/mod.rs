@@ -14,6 +14,12 @@ use crate::hash::codes::{ball_volume, CodeArray, HammingBall};
 use crate::hash::fasthash::CodeMap;
 use crate::hash::HashFamily;
 use crate::linalg::nrm2;
+use crate::par::Pool;
+
+/// Queries per parallel work unit in [`HyperplaneIndex::query_batch`] and
+/// the coordinator's pooled batch path; fixed so the split is independent
+/// of the worker count.
+pub(crate) const QUERY_CHUNK: usize = 4;
 
 /// Result of a point-to-hyperplane query.
 #[derive(Clone, Debug, Default)]
@@ -39,7 +45,18 @@ pub struct HyperplaneIndex {
 impl HyperplaneIndex {
     /// Encode every database point with `family` and build the table.
     pub fn build(family: &dyn HashFamily, feats: &FeatureStore, radius: usize) -> Self {
-        Self::from_codes(family.encode_all(feats), radius)
+        Self::build_with(family, feats, radius, &Pool::serial())
+    }
+
+    /// [`Self::build`] with the batch encode fanned out over `pool`
+    /// (identical table for any worker count).
+    pub fn build_with(
+        family: &dyn HashFamily,
+        feats: &FeatureStore,
+        radius: usize,
+        pool: &Pool,
+    ) -> Self {
+        Self::from_codes(family.encode_all_pool(feats, pool), radius)
     }
 
     /// Build from precomputed codes (e.g. the PJRT batch-encode path).
@@ -160,6 +177,25 @@ impl HyperplaneIndex {
     /// Unfiltered query.
     pub fn query(&self, family: &dyn HashFamily, w: &[f32], feats: &FeatureStore) -> QueryHit {
         self.query_filtered(family, w, feats, |_| true)
+    }
+
+    /// Answer a batch of hyperplane queries (e.g. all one-vs-all SVM
+    /// normals of an AL round) with the per-query work fanned out over
+    /// `pool`. Queries are independent, so the hits are bit-identical to
+    /// calling [`Self::query`] in a loop, in query order.
+    pub fn query_batch(
+        &self,
+        family: &dyn HashFamily,
+        queries: &[Vec<f32>],
+        feats: &FeatureStore,
+        pool: &Pool,
+    ) -> Vec<QueryHit> {
+        pool.map(queries.len(), QUERY_CHUNK, |range| {
+            range.map(|q| self.query(family, &queries[q], feats)).collect::<Vec<_>>()
+        })
+        .into_iter()
+        .flatten()
+        .collect()
     }
 
     /// Top-T near-to-hyperplane neighbors: the paper's "short list L"
@@ -448,6 +484,9 @@ mod tests {
         let single = idx.query_filtered(&fam, &w, ds.features(), |i| i % 2 == 0);
         assert_eq!(top[0].0, single.best.unwrap().0);
     }
+
+    // build_with / query_batch parity across worker counts is covered by
+    // the integration suite in rust/tests/batch_parallel.rs.
 
     #[test]
     fn memory_bytes_counts_bucket_payloads() {

@@ -1,0 +1,155 @@
+//! End-to-end parity of the data-parallel batch engine: every pooled
+//! path (encode, build, batch query, eval, LBH training, sharded
+//! fan-out) must be bit-identical to its `workers = 1` serial twin.
+
+use chh::data::{newsgroups_like, test_blobs, NewsConfig};
+use chh::eval::{evaluate, evaluate_with};
+use chh::hash::{AhHash, BhHash, EhHash, HashFamily};
+use chh::lbh::{LbhTrainConfig, LbhTrainer};
+use chh::online::{QueryBudget, ShardedIndex};
+use chh::par::Pool;
+use chh::rng::Rng;
+use chh::table::HyperplaneIndex;
+use chh::testing::unit_vec;
+
+const WORKER_COUNTS: [usize; 3] = [2, 3, 4];
+
+#[test]
+fn encode_parity_across_families_and_stores() {
+    let mut rng = Rng::seed_from_u64(1);
+    // n large enough that every family splits into several encode chunks
+    let dense = test_blobs(5_000, 32, 4, &mut rng);
+    let sparse = newsgroups_like(
+        &NewsConfig { n: 3_000, vocab: 256, classes: 6, ..Default::default() },
+        &mut rng,
+    );
+    let fams: Vec<Box<dyn HashFamily>> = vec![
+        Box::new(BhHash::sample(32, 20, &mut rng)),
+        Box::new(AhHash::sample(32, 10, &mut rng)),
+        Box::new(EhHash::sampled(32, 12, 64, &mut rng)),
+    ];
+    let sfams: Vec<Box<dyn HashFamily>> = vec![
+        Box::new(BhHash::sample(256, 20, &mut rng)),
+        Box::new(AhHash::sample(256, 10, &mut rng)),
+    ];
+    for fam in &fams {
+        let serial = fam.encode_all(dense.features());
+        for w in WORKER_COUNTS {
+            let par = fam.encode_all_pool(dense.features(), &Pool::new(w));
+            assert_eq!(par.codes, serial.codes, "{} dense workers={w}", fam.name());
+        }
+    }
+    for fam in &sfams {
+        let serial = fam.encode_all(sparse.features());
+        for w in WORKER_COUNTS {
+            let par = fam.encode_all_pool(sparse.features(), &Pool::new(w));
+            assert_eq!(par.codes, serial.codes, "{} sparse workers={w}", fam.name());
+        }
+    }
+}
+
+#[test]
+fn index_build_and_query_batch_parity() {
+    let mut rng = Rng::seed_from_u64(2);
+    let ds = test_blobs(3_000, 24, 4, &mut rng);
+    let fam = BhHash::sample(24, 14, &mut rng);
+    let serial_idx = HyperplaneIndex::build(&fam, ds.features(), 3);
+    let queries: Vec<Vec<f32>> = (0..40).map(|_| unit_vec(&mut rng, 24)).collect();
+    let serial_hits = serial_idx.query_batch(&fam, &queries, ds.features(), &Pool::serial());
+    for w in WORKER_COUNTS {
+        let pool = Pool::new(w);
+        let idx = HyperplaneIndex::build_with(&fam, ds.features(), 3, &pool);
+        assert_eq!(idx.bucket_count(), serial_idx.bucket_count(), "workers={w}");
+        let hits = idx.query_batch(&fam, &queries, ds.features(), &pool);
+        assert_eq!(hits.len(), serial_hits.len());
+        for (h, s) in hits.iter().zip(serial_hits.iter()) {
+            assert_eq!(h.best, s.best, "workers={w}");
+            assert_eq!(h.scanned, s.scanned);
+            assert_eq!(h.probed, s.probed);
+            assert_eq!(h.nonempty, s.nonempty);
+        }
+    }
+}
+
+#[test]
+fn evaluate_parity_including_exhaustive_truth() {
+    let mut rng = Rng::seed_from_u64(3);
+    // n > one margin chunk so the exhaustive scan actually splits
+    let ds = test_blobs(6_000, 16, 3, &mut rng);
+    let fam = BhHash::sample(16, 12, &mut rng);
+    let idx = HyperplaneIndex::build(&fam, ds.features(), 2);
+    let queries: Vec<Vec<f32>> = (0..12).map(|_| unit_vec(&mut rng, 16)).collect();
+    let serial = evaluate(&fam, &idx, ds.features(), &queries, 20);
+    for w in WORKER_COUNTS {
+        let par = evaluate_with(&fam, &idx, ds.features(), &queries, 20, &Pool::new(w));
+        assert_eq!(par.mean_recall.to_bits(), serial.mean_recall.to_bits(), "workers={w}");
+        assert_eq!(par.median_margin_ratio.to_bits(), serial.median_margin_ratio.to_bits());
+        assert_eq!(par.mean_scanned.to_bits(), serial.mean_scanned.to_bits());
+        assert_eq!(par.nonempty_frac.to_bits(), serial.nonempty_frac.to_bits());
+    }
+    let w0 = &queries[0];
+    let serial_top = chh::eval::exhaustive_topk(ds.features(), w0, 50);
+    for w in WORKER_COUNTS {
+        let par_top = chh::eval::exhaustive_topk_with(ds.features(), w0, 50, &Pool::new(w));
+        assert_eq!(par_top, serial_top, "workers={w}");
+    }
+}
+
+#[test]
+fn lbh_training_parity_and_projection_bits() {
+    // identical projections (bit-for-bit), costs and residues at
+    // workers = 1 vs workers > 1. m must clear TRAIN_PAR_MIN_M or the
+    // trainer's small-sample gate would run everything serially and the
+    // parity check would be vacuous.
+    let m = chh::lbh::TRAIN_PAR_MIN_M + 64;
+    let ds = test_blobs(m + 300, 16, 4, &mut Rng::seed_from_u64(4));
+    let sample: Vec<usize> = (0..m).collect();
+    let refs: Vec<usize> = (0..m + 300).collect();
+    let run = |workers: usize| {
+        let trainer = LbhTrainer::new(LbhTrainConfig {
+            bits: 3,
+            iters_per_bit: 12,
+            workers,
+            ..Default::default()
+        });
+        let mut rng = Rng::seed_from_u64(777);
+        trainer.train(ds.features(), &sample, &refs, &mut rng)
+    };
+    let (h1, s1) = run(1);
+    for w in WORKER_COUNTS {
+        let (hw, sw) = run(w);
+        assert_eq!(hw.pairs.u.data, h1.pairs.u.data, "u parity workers={w}");
+        assert_eq!(hw.pairs.v.data, h1.pairs.v.data, "v parity workers={w}");
+        assert_eq!(sw.bit_costs, s1.bit_costs, "surrogate costs workers={w}");
+        assert_eq!(sw.discrete_costs, s1.discrete_costs, "discrete costs workers={w}");
+        assert_eq!(sw.residue_after.to_bits(), s1.residue_after.to_bits());
+        assert_eq!(sw.t1, s1.t1);
+        assert_eq!(sw.t2, s1.t2);
+    }
+    // and the trained hashes encode identically
+    let c1 = h1.encode_all(ds.features());
+    let (h4, _) = run(4);
+    let c4 = h4.encode_all_pool(ds.features(), &Pool::new(4));
+    assert_eq!(c1.codes, c4.codes);
+}
+
+#[test]
+fn sharded_fanout_parity() {
+    let mut rng = Rng::seed_from_u64(5);
+    let ds = test_blobs(1_200, 16, 3, &mut rng);
+    let fam = BhHash::sample(16, 12, &mut rng);
+    let codes = fam.encode_all(ds.features());
+    let idx = ShardedIndex::from_codes(&codes, 3, 6);
+    let budget = QueryBudget::new(96, 48);
+    for _ in 0..6 {
+        let w = unit_vec(&mut rng, 16);
+        let inline = idx.query(&fam, &w, ds.features(), budget, |_| true);
+        for workers in WORKER_COUNTS {
+            let pooled =
+                idx.query_pool(&fam, &w, ds.features(), budget, |_| true, &Pool::new(workers));
+            assert_eq!(pooled.best, inline.best, "workers={workers}");
+            assert_eq!(pooled.scanned, inline.scanned);
+            assert_eq!(pooled.probed, inline.probed);
+        }
+    }
+}
