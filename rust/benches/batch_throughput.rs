@@ -9,7 +9,8 @@
 
 use std::hint::black_box;
 
-use chh::bench::{fmt_dur, print_table, Bench, BenchStats};
+use chh::bench::{fmt_dur, print_table, Bench, BenchStats, JsonReport};
+use chh::jsonio::Json;
 use chh::data::{tiny1m_like, TinyConfig};
 use chh::eval::{evaluate, evaluate_with};
 use chh::hash::{BhHash, HashFamily};
@@ -120,4 +121,22 @@ fn main() {
     );
     chh::report::write_csv("batch_throughput.csv", &["path", "serial", "pooled", "speedup"], &summary)
         .expect("csv");
+    let mut json = JsonReport::new("batch_throughput");
+    for s in &rows {
+        json.push_stats(s);
+    }
+    for row in &summary {
+        json.push(
+            "speedup",
+            vec![
+                ("path", Json::from(row[0].as_str())),
+                ("serial", Json::from(row[1].as_str())),
+                ("pooled", Json::from(row[2].as_str())),
+                ("speedup", Json::from(row[3].as_str())),
+            ],
+        );
+    }
+    if let Some(path) = json.finish().expect("write --json results") {
+        println!("json results → {}", path.display());
+    }
 }

@@ -7,8 +7,10 @@
 
 use std::time::Instant;
 
+use chh::bench::JsonReport;
 use chh::data::{tiny1m_like, TinyConfig};
 use chh::hash::{BhHash, HashFamily};
+use chh::jsonio::Json;
 use chh::metrics::Histogram;
 use chh::online::{QueryBudget, ShardedIndex};
 use chh::report::write_csv;
@@ -16,6 +18,7 @@ use chh::rng::Rng;
 use chh::testing::unit_vec;
 
 fn main() {
+    let mut json = JsonReport::new("online_churn");
     let full = chh::bench::full_scale();
     let n = if full { 200_000 } else { 30_000 };
     let d = 128;
@@ -41,6 +44,15 @@ fn main() {
         "bulk load: {warm} inserts in {load_secs:.3}s ({:.0} inserts/s), memory ~ {:.1} MB",
         warm as f64 / load_secs,
         index.memory_bytes() as f64 / 1e6
+    );
+    json.push(
+        "bulk_load",
+        vec![
+            ("inserts", Json::from(warm)),
+            ("secs", Json::Num(load_secs)),
+            ("inserts_per_s", Json::Num(warm as f64 / load_secs)),
+            ("memory_bytes", Json::from(index.memory_bytes())),
+        ],
     );
 
     // ── probe budget sweep (read-only) ───────────────────────────────
@@ -73,6 +85,19 @@ fn main() {
             format!("{hits}/{}", queries.len()),
             format!("{:.5}", margin_sum / hits.max(1) as f64),
         ]);
+        json.push(
+            "probe_sweep",
+            vec![
+                ("probes", Json::from(probes.min(u32::MAX as usize))),
+                ("top", Json::from(top.min(u32::MAX as usize))),
+                ("mean_us", Json::Num(h.mean() * 1e6)),
+                ("p95_us", Json::Num(h.percentile(95.0) * 1e6)),
+                ("cands_per_q", Json::from(scanned / queries.len())),
+                ("hits", Json::from(hits)),
+                ("queries", Json::from(queries.len())),
+                ("mean_margin", Json::Num(margin_sum / hits.max(1) as f64)),
+            ],
+        );
     }
     chh::report::print_rows(
         "probe budget sweep (best-first multi-probe, read-only)",
@@ -135,4 +160,20 @@ fn main() {
         &churn_rows,
     )
     .expect("csv");
+    json.push(
+        "churn",
+        vec![
+            ("ops", Json::from(churn_ops)),
+            ("queries", Json::from(q)),
+            ("ops_per_s", Json::Num((churn_ops + q) as f64 / secs)),
+            ("q_mean_us", Json::Num(qh.mean() * 1e6)),
+            ("q_p95_us", Json::Num(qh.percentile(95.0) * 1e6)),
+            ("removed", Json::from(removed)),
+            ("live", Json::from(index.len())),
+            ("epochs", Json::from(index.total_epoch() as usize)),
+        ],
+    );
+    if let Some(path) = json.finish().expect("write --json results") {
+        println!("json results → {}", path.display());
+    }
 }

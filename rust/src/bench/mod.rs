@@ -4,8 +4,17 @@
 //! [`Bench::run`] for its measurements and the `report` module for the
 //! paper-style tables. The harness does warmup, adaptive iteration count to
 //! hit a target measurement window, and robust summary stats.
+//!
+//! Machine-readable output: every bench that builds a [`JsonReport`] also
+//! honors `--json <path>` on its command line
+//! (`cargo bench --bench online_churn -- --json BENCH_online_churn.json`),
+//! writing its records as one JSON document so CI and trend tooling can
+//! diff runs without scraping tables.
 
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
+
+use crate::jsonio::{obj, Json};
 
 /// Summary statistics of one benchmark case.
 #[derive(Clone, Debug)]
@@ -26,6 +35,71 @@ impl BenchStats {
     /// Throughput given a per-iteration item count.
     pub fn throughput(&self, items_per_iter: f64) -> f64 {
         items_per_iter / self.mean_secs().max(1e-12)
+    }
+
+    /// Machine-readable record for a [`JsonReport`].
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", Json::from(self.name.as_str())),
+            ("iters", Json::from(self.iters as usize)),
+            ("mean_s", Json::Num(self.mean.as_secs_f64())),
+            ("p50_s", Json::Num(self.p50.as_secs_f64())),
+            ("p95_s", Json::Num(self.p95.as_secs_f64())),
+            ("min_s", Json::Num(self.min.as_secs_f64())),
+        ])
+    }
+}
+
+/// Path given via `--json <path>` on this process's command line, if any.
+/// Unknown other arguments (e.g. the `--bench` cargo appends to
+/// `harness = false` targets) are ignored.
+pub fn json_path_from_args() -> Option<PathBuf> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .map(PathBuf::from)
+}
+
+/// Collector for a bench's machine-readable results.
+///
+/// Records accumulate unconditionally (they're cheap); [`Self::finish`]
+/// writes them only when the process was invoked with `--json <path>`,
+/// and returns the path written so the bench can announce it.
+pub struct JsonReport {
+    bench: String,
+    records: Vec<Json>,
+}
+
+impl JsonReport {
+    pub fn new(bench: &str) -> Self {
+        JsonReport { bench: bench.to_string(), records: Vec::new() }
+    }
+
+    /// Append one named record of key/value fields.
+    pub fn push(&mut self, kind: &str, fields: Vec<(&str, Json)>) {
+        let mut all = vec![("kind", Json::from(kind))];
+        all.extend(fields);
+        self.records.push(obj(all));
+    }
+
+    /// Append one measured case.
+    pub fn push_stats(&mut self, s: &BenchStats) {
+        self.records.push(s.to_json());
+    }
+
+    /// Write the document if `--json <path>` was given.
+    pub fn finish(&self) -> anyhow::Result<Option<PathBuf>> {
+        let Some(path) = json_path_from_args() else {
+            return Ok(None);
+        };
+        let doc = obj(vec![
+            ("bench", Json::from(self.bench.as_str())),
+            ("full_scale", Json::from(full_scale())),
+            ("records", Json::Arr(self.records.clone())),
+        ]);
+        std::fs::write(&path, doc.to_string_pretty())?;
+        Ok(Some(path))
     }
 }
 
@@ -184,5 +258,20 @@ mod tests {
         assert!(fmt_dur(Duration::from_micros(5)).ends_with("µs"));
         assert!(fmt_dur(Duration::from_millis(5)).ends_with("ms"));
         assert!(fmt_dur(Duration::from_secs(5)).ends_with('s'));
+    }
+
+    #[test]
+    fn json_report_records_are_well_formed() {
+        let mut rep = JsonReport::new("t");
+        let (_, s) = Bench::once("case", || 1 + 1);
+        rep.push_stats(&s);
+        rep.push("load", vec![("ops", Json::from(7usize))]);
+        // the records are valid Json values regardless of --json
+        assert_eq!(rep.records.len(), 2);
+        assert_eq!(rep.records[0].get("name").unwrap().as_str(), Some("case"));
+        assert_eq!(rep.records[1].get("kind").unwrap().as_str(), Some("load"));
+        assert_eq!(rep.records[1].get("ops").unwrap().as_usize(), Some(7));
+        // no --json flag in the test harness argv ⇒ nothing written
+        assert!(rep.finish().unwrap().is_none());
     }
 }

@@ -66,13 +66,28 @@ struct Job {
 }
 
 /// Router statistics (atomic, cheap to read while serving).
-#[derive(Default)]
 pub struct RouterStats {
     pub submitted: AtomicU64,
     pub completed: AtomicU64,
     pub empty_lookups: AtomicU64,
     pub candidates_scanned: AtomicU64,
+    /// recent queued-path latencies (bounded ring — routers are
+    /// long-lived, so an unbounded per-query reservoir would leak)
     latencies: Mutex<crate::metrics::Histogram>,
+}
+
+impl Default for RouterStats {
+    fn default() -> Self {
+        RouterStats {
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            empty_lookups: AtomicU64::new(0),
+            candidates_scanned: AtomicU64::new(0),
+            latencies: Mutex::new(crate::metrics::Histogram::with_capacity(
+                crate::metrics::SERVING_RESERVOIR,
+            )),
+        }
+    }
 }
 
 impl RouterStats {
@@ -86,6 +101,12 @@ impl RouterStats {
 
     pub fn latency_mean(&self) -> f64 {
         self.latencies.lock().unwrap().mean()
+    }
+
+    /// Several percentiles with one lock acquisition and one sort —
+    /// prefer this over repeated `latency_p*` calls while serving.
+    pub fn latency_percentiles(&self, ps: &[f64]) -> Vec<f64> {
+        self.latencies.lock().unwrap().percentiles(ps)
     }
 }
 
@@ -151,6 +172,21 @@ impl Router {
 
     pub fn stats(&self) -> &RouterStats {
         &self.stats
+    }
+
+    /// The hash family queries are encoded with.
+    pub fn family(&self) -> &Arc<dyn HashFamily> {
+        &self.shared.family
+    }
+
+    /// The index this router serves.
+    pub fn index(&self) -> &Arc<HyperplaneIndex> {
+        &self.shared.index
+    }
+
+    /// The serving feature store (margins are ranked against its rows).
+    pub fn feats(&self) -> &Arc<FeatureStore> {
+        &self.shared.feats
     }
 
     /// Submit one query; blocks when the queue is full (backpressure).
@@ -337,6 +373,21 @@ impl OnlineRouter {
 
     pub fn index(&self) -> &Arc<ShardedIndex> {
         &self.shared.index
+    }
+
+    /// The hash family queries are encoded with.
+    pub fn family(&self) -> &Arc<dyn HashFamily> {
+        &self.shared.family
+    }
+
+    /// The serving feature store (margins are ranked against its rows).
+    pub fn feats(&self) -> &Arc<FeatureStore> {
+        &self.shared.feats
+    }
+
+    /// The per-shard probe budget every query runs under.
+    pub fn budget(&self) -> QueryBudget {
+        self.shared.budget
     }
 
     /// Submit one query: the leader encodes the hyperplane, materializes

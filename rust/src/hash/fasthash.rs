@@ -54,6 +54,18 @@ impl BuildHasher for CodeHashBuilder {
 /// HashMap keyed by hash codes with the fast hasher.
 pub type CodeMap<V> = std::collections::HashMap<u64, V, CodeHashBuilder>;
 
+/// Approximate heap bytes of a bucket map at allocated capacity: per
+/// slot the u64 key, the `Vec` header and a control byte, plus every
+/// bucket's id payload at its allocated capacity. Counting capacities
+/// rather than lengths keeps the accounting honest under `Vec` growth
+/// doubling. The one formula shared by [`crate::table::HyperplaneIndex`],
+/// [`crate::table::LshIndex`] and the online shards — their memory
+/// comparisons are only meaningful while they agree on it.
+pub fn bucket_map_bytes(m: &CodeMap<Vec<u32>>) -> usize {
+    m.capacity() * (8 + std::mem::size_of::<Vec<u32>>() + 1)
+        + m.values().map(|v| v.capacity() * 4).sum::<usize>()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,11 +1,22 @@
 //! Minimal JSON reader/writer (the vendored registry has no serde).
 //!
 //! Used for the AOT artifact manifest (`artifacts/manifest.json`) written by
-//! `python/compile/aot.py`, and for the `results/*.json` experiment records.
+//! `python/compile/aot.py`, for the `results/*.json` experiment records, and
+//! as the wire format of the HTTP serving front-end (`crate::server`).
 //! Supports the full JSON grammar except `\u` surrogate pairs beyond the BMP.
+//!
+//! The parser is total: every failure — including truncated escapes, invalid
+//! UTF-8 (via [`Json::parse_bytes`]) and nesting deeper than [`MAX_DEPTH`] —
+//! is a [`JsonError`], never a panic, so untrusted network payloads can be
+//! fed to it directly.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
+
+/// Maximum container nesting the parser accepts. The recursive-descent
+/// parser spends one stack frame per level, so the cap is what keeps a
+/// `[[[[…` payload from overflowing the stack of a serving thread.
+pub const MAX_DEPTH: usize = 128;
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
@@ -26,7 +37,7 @@ pub struct JsonError {
 
 impl Json {
     pub fn parse(s: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { b: s.as_bytes(), pos: 0 };
+        let mut p = Parser { b: s.as_bytes(), pos: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -34,6 +45,15 @@ impl Json {
             return Err(p.err("trailing characters"));
         }
         Ok(v)
+    }
+
+    /// Parse a raw byte payload (e.g. an HTTP request body). Invalid UTF-8
+    /// is a [`JsonError`] at the first bad byte, not a panic — the entry
+    /// point network handlers should use.
+    pub fn parse_bytes(b: &[u8]) -> Result<Json, JsonError> {
+        let s = std::str::from_utf8(b)
+            .map_err(|e| JsonError { pos: e.valid_up_to(), msg: "invalid utf-8".to_string() })?;
+        Json::parse(s)
     }
 
     // -- typed accessors ---------------------------------------------------
@@ -109,7 +129,14 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                // `-0.0` must stay `-0` (not collapse to the integer `0`)
+                // so float payloads round-trip bit-exactly over the wire;
+                // non-finite values have no JSON spelling — emit null
+                // rather than the unparseable `NaN`/`inf`
+                let neg_zero = *n == 0.0 && n.is_sign_negative();
+                if !n.is_finite() {
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 1e15 && !neg_zero {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{n}");
@@ -219,6 +246,8 @@ fn write_escaped(out: &mut String, s: &str) {
 struct Parser<'a> {
     b: &'a [u8],
     pos: usize,
+    /// current container nesting, capped at [`MAX_DEPTH`]
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -267,12 +296,22 @@ impl<'a> Parser<'a> {
         }
     }
 
+    fn enter(&mut self) -> Result<(), JsonError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        Ok(())
+    }
+
     fn array(&mut self) -> Result<Json, JsonError> {
         self.eat(b'[')?;
+        self.enter()?;
         let mut out = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(out));
         }
         loop {
@@ -283,6 +322,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.pos += 1,
                 Some(b']') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(out));
                 }
                 _ => return Err(self.err("expected ',' or ']'")),
@@ -292,10 +332,12 @@ impl<'a> Parser<'a> {
 
     fn object(&mut self) -> Result<Json, JsonError> {
         self.eat(b'{')?;
+        self.enter()?;
         let mut out = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(out));
         }
         loop {
@@ -311,6 +353,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.pos += 1,
                 Some(b'}') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(out));
                 }
                 _ => return Err(self.err("expected ',' or '}'")),
@@ -354,13 +397,24 @@ impl<'a> Parser<'a> {
                     }
                     self.pos += 1;
                 }
-                Some(_) => {
-                    // consume one UTF-8 char
-                    let rest = std::str::from_utf8(&self.b[self.pos..])
-                        .map_err(|_| self.err("invalid utf8"))?;
-                    let c = rest.chars().next().unwrap();
-                    s.push(c);
-                    self.pos += c.len_utf8();
+                Some(c0) => {
+                    // consume one UTF-8 char: sequence length from the lead
+                    // byte, then validate just that window (O(1) per char —
+                    // no panic on a truncated or malformed tail)
+                    let len = match c0 {
+                        0x00..=0x7f => 1,
+                        0xc0..=0xdf => 2,
+                        0xe0..=0xef => 3,
+                        0xf0..=0xf7 => 4,
+                        _ => return Err(self.err("invalid utf-8")),
+                    };
+                    if self.pos + len > self.b.len() {
+                        return Err(self.err("truncated utf-8"));
+                    }
+                    let ch = std::str::from_utf8(&self.b[self.pos..self.pos + len])
+                        .map_err(|_| self.err("invalid utf-8"))?;
+                    s.push_str(ch);
+                    self.pos += len;
                 }
             }
         }
@@ -389,7 +443,8 @@ impl<'a> Parser<'a> {
                 self.pos += 1;
             }
         }
-        let txt = std::str::from_utf8(&self.b[start..self.pos]).unwrap();
+        let txt = std::str::from_utf8(&self.b[start..self.pos])
+            .map_err(|_| self.err("bad number"))?;
         txt.parse::<f64>().map(Json::Num).map_err(|_| self.err("bad number"))
     }
 }
@@ -446,8 +501,77 @@ mod tests {
     }
 
     #[test]
+    fn negative_zero_roundtrips() {
+        let v = Json::Num(-0.0);
+        assert_eq!(v.to_string_compact(), "-0");
+        let back = Json::parse("-0").unwrap().as_f64().unwrap();
+        assert!(back == 0.0 && back.is_sign_negative());
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        for v in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let doc = Json::Arr(vec![Json::Num(v)]).to_string_compact();
+            assert_eq!(doc, "[null]", "no JSON spelling for {v}");
+            assert!(Json::parse(&doc).is_ok(), "output must stay parseable");
+        }
+    }
+
+    #[test]
     fn builder_obj() {
         let v = obj(vec![("k", Json::from(1usize)), ("s", Json::from("v"))]);
         assert_eq!(v.to_string_compact(), r#"{"k":1,"s":"v"}"#);
+    }
+
+    #[test]
+    fn truncated_escapes_are_errors_not_panics() {
+        // every prefix of a valid document must parse or error — never panic
+        for bad in [
+            "\"\\",        // string ends inside an escape
+            "\"\\u",       // \u with no hex digits
+            "\"\\u00",     // \u with too few hex digits
+            "\"\\u12",     // ditto
+            "\"\\q\"",     // unknown escape
+            "\"abc\\u12g4\"", // non-hex in the escape
+        ] {
+            assert!(Json::parse(bad).is_err(), "should reject {bad:?}");
+        }
+        let full = r#"{"w": [1.5, -2e3], "s": "a\u00e9b"}"#;
+        for cut in 0..full.len() {
+            let _ = Json::parse(&full[..cut]); // must not panic
+        }
+    }
+
+    #[test]
+    fn parse_bytes_rejects_invalid_utf8() {
+        assert!(Json::parse_bytes(br#"{"a": 1}"#).is_ok());
+        // 0xff is never valid UTF-8; error position points at the bad byte
+        let err = Json::parse_bytes(b"\"ab\xff\"").unwrap_err();
+        assert_eq!(err.pos, 3);
+        // lead byte promising a continuation that never comes
+        assert!(Json::parse_bytes(b"\"\xc3").is_err());
+    }
+
+    #[test]
+    fn deep_nesting_is_bounded() {
+        // one level under the cap parses...
+        let ok = format!("{}1{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+        assert!(Json::parse(&ok).is_ok());
+        // ...the cap itself errors instead of overflowing the stack
+        let deep = format!("{}1{}", "[".repeat(MAX_DEPTH + 1), "]".repeat(MAX_DEPTH + 1));
+        assert!(Json::parse(&deep).is_err());
+        let very_deep = "[".repeat(100_000);
+        assert!(Json::parse(&very_deep).is_err());
+        let mixed = format!("{}{}", r#"{"a":"#.repeat(MAX_DEPTH + 1), "1");
+        let err = Json::parse(&mixed).unwrap_err();
+        assert!(err.msg.contains("deep"), "objects count toward the depth cap: {err}");
+    }
+
+    #[test]
+    fn siblings_do_not_accumulate_depth() {
+        // depth is nesting, not total container count: a long flat array
+        // of small objects must parse
+        let flat = format!("[{}{{}}]", "{},".repeat(1000));
+        assert!(Json::parse(&flat).is_ok());
     }
 }

@@ -18,8 +18,9 @@
 //!   (sharded dynamic index + probability-ordered multi-probe, see
 //!   [`online`]), a data-parallel batch engine for the offline hot paths
 //!   (encode / batch query / train / eval, see [`par`] and
-//!   `docs/PARALLEL.md`), and the PJRT runtime that executes AOT-compiled
-//!   XLA artifacts.
+//!   `docs/PARALLEL.md`), an HTTP serving front-end with dynamic
+//!   micro-batching (see [`server`] and `docs/SERVING.md`), and the PJRT
+//!   runtime that executes AOT-compiled XLA artifacts.
 //! * **L2 (python/compile/model.py)** — JAX graphs for batch encoding,
 //!   LBH Nesterov training steps, margin scans and Hamming ranking, lowered
 //!   once to HLO text by `make artifacts`.
@@ -92,6 +93,7 @@ pub mod persist;
 pub mod report;
 pub mod rng;
 pub mod runtime;
+pub mod server;
 pub mod sparse;
 pub mod svm;
 pub mod table;

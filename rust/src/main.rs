@@ -7,6 +7,8 @@
 //! * `train-hash`      — train LBH projections and report diagnostics
 //! * `serve`           — run the hyperplane-query router on synthetic load
 //! * `serve-online`    — sharded dynamic index under 50/50 churn + queries
+//! * `serve-http`      — HTTP front-end with dynamic micro-batching
+//! * `loadgen`         — open/closed-loop load generator for serve-http
 //! * `encode`          — batch-encode a synthetic dataset (native vs PJRT)
 
 use std::sync::Arc;
@@ -36,6 +38,8 @@ fn main() {
         "train-hash" => cmd_train_hash(&rest),
         "serve" => cmd_serve(&rest),
         "serve-online" => cmd_serve_online(&rest),
+        "serve-http" => cmd_serve_http(&rest),
+        "loadgen" => cmd_loadgen(&rest),
         "encode" => cmd_encode(&rest),
         "eval" => cmd_eval(&rest),
         "theorem2" => cmd_theorem2(&rest),
@@ -64,6 +68,8 @@ fn usage() -> String {
        train-hash    train LBH projections, print diagnostics\n\
        serve         hyperplane-query router under synthetic load\n\
        serve-online  sharded dynamic index under churn + query load\n\
+       serve-http    HTTP/1.1 front-end with dynamic micro-batching\n\
+       loadgen       open/closed-loop load generator for serve-http\n\
        encode        batch-encode a synthetic dataset (native vs PJRT)\n\
        eval          retrieval quality (recall@T, margin ratio) per family\n\
        theorem2      randomized multi-table LSH vs the compact single table\n\
@@ -342,11 +348,15 @@ fn cmd_theorem2(rest: &[String]) -> anyhow::Result<()> {
         "Theorem 2 parameters for n={}, r={r}, eps={eps}:  L={tables} tables x k={bits} bits",
         data.len()
     );
+    let pool = chh::par::Pool::new(cfg.workers);
     let t0 = std::time::Instant::now();
     let mut seeds: Vec<u64> = (0..tables).map(|_| rng.next_u64()).collect();
-    let lsh = chh::table::LshIndex::build(data.features(), tables, |t| {
-        BhHash::sample(data.dim(), bits, &mut Rng::seed_from_u64(seeds[t]))
-    });
+    let lsh = chh::table::LshIndex::build_with(
+        data.features(),
+        tables,
+        |t| BhHash::sample(data.dim(), bits, &mut Rng::seed_from_u64(seeds[t])),
+        &pool,
+    );
     seeds.clear();
     let lsh_build = t0.elapsed();
     let t0 = std::time::Instant::now();
@@ -384,8 +394,14 @@ fn cmd_theorem2(rest: &[String]) -> anyhow::Result<()> {
         &["index", "build", "query", "mean margin"],
         &rows,
     );
-    println!("\nThe compact table reaches comparable margins with {tables}x less memory —");
-    println!("the storage/computation argument of §4 against Theorem 2's n^rho tables.");
+    let (lsh_mb, compact_mb) =
+        (lsh.memory_bytes() as f64 / 1e6, cindex.memory_bytes() as f64 / 1e6);
+    println!(
+        "\nmemory: LSH tables {lsh_mb:.2} MB vs compact {compact_mb:.2} MB \
+         ({:.1}x) — the storage/computation argument of §4 against \
+         Theorem 2's n^rho tables.",
+        lsh_mb / compact_mb.max(1e-9)
+    );
     Ok(())
 }
 
@@ -484,11 +500,12 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
             st.empty_lookups.load(std::sync::atomic::Ordering::Relaxed)
         );
     } else {
+        let pct = st.latency_percentiles(&[50.0, 95.0]);
         println!(
             "{queries} queries in {secs:.3}s  ({:.0} qps)  p50 {:.1}µs  p95 {:.1}µs  empty {}",
             queries as f64 / secs,
-            st.latency_p50() * 1e6,
-            st.latency_p95() * 1e6,
+            pct[0] * 1e6,
+            pct[1] * 1e6,
             st.empty_lookups.load(std::sync::atomic::Ordering::Relaxed)
         );
     }
@@ -605,10 +622,11 @@ fn cmd_serve_online(rest: &[String]) -> anyhow::Result<()> {
     );
     if !pooled_mode {
         // the pooled path bypasses the queue, so there are no latencies
+        let pct = st.latency_percentiles(&[50.0, 95.0]);
         println!(
             "  latency   : p50 {:.1}µs  p95 {:.1}µs  mean {:.1}µs",
-            st.latency_p50() * 1e6,
-            st.latency_p95() * 1e6,
+            pct[0] * 1e6,
+            pct[1] * 1e6,
             st.latency_mean() * 1e6
         );
     }
@@ -629,6 +647,315 @@ fn cmd_serve_online(rest: &[String]) -> anyhow::Result<()> {
         println!("  snapshot  : saved to {snap}");
     }
     router.shutdown();
+    Ok(())
+}
+
+fn cmd_serve_http(rest: &[String]) -> anyhow::Result<()> {
+    use chh::online::{QueryBudget, ShardedIndex};
+    use chh::server::{BatcherConfig, Server, ServerConfig, Stack};
+    let args = ExperimentConfig::cli_opts(Args::new(
+        "chh serve-http",
+        "HTTP/1.1 front-end over the routers with dynamic micro-batching",
+    ))
+    .opt("addr", "127.0.0.1:8080", "listen address (port 0 = ephemeral)")
+    .opt("mode", "static", "index mode: static | online")
+    .opt("shards", "8", "online: index shards")
+    .opt("probes", "0", "online: per-shard probe budget (0 = full Hamming ball)")
+    .opt("top", "64", "online: stop probing a shard once this many candidates are ranked")
+    .opt("snapshot", "", "online: load a shard snapshot saved by serve-online (same profile/seed!)")
+    .opt("max-batch", "32", "micro-batcher: flush at this many queued queries")
+    .opt("max-wait-us", "200", "micro-batcher: flush once the oldest query waited this long")
+    .opt("queue-cap", "1024", "micro-batcher admission queue bound (overflow -> 503)")
+    .opt("max-conns", "256", "concurrent connection cap (overflow -> 503)")
+    .opt("for-secs", "0", "serve this long then exit (0 = until POST /shutdown)");
+    let p = args.parse(rest).map_err(|h| anyhow::anyhow!("{h}"))?;
+    let cfg = ExperimentConfig::from_parsed(&p)?;
+    let mut rng = Rng::seed_from_u64(cfg.seed);
+    eprintln!("building {} dataset (n={}, d={})...", cfg.profile.name(), cfg.n, cfg.profile.dim());
+    let data = make_dataset(&cfg, &mut rng);
+    let fam: Arc<dyn HashFamily> = Arc::new(BhHash::sample(data.dim(), cfg.bits(), &mut rng));
+    let feats = Arc::new(data.features().clone());
+    let pool = chh::par::Pool::new(cfg.workers);
+    let mode = p.str("mode").to_string();
+    let stack = match mode.as_str() {
+        "static" => {
+            let index = Arc::new(HyperplaneIndex::build_with(
+                fam.as_ref(),
+                data.features(),
+                cfg.radius(),
+                &pool,
+            ));
+            // the queue workers are idle here — the HTTP path answers
+            // through the batcher's pooled flush — so 1 thread suffices
+            let router =
+                chh::coordinator::Router::new(fam.clone(), index, feats.clone(), 1, 64);
+            Stack::Static(Arc::new(router))
+        }
+        "online" => {
+            let snap = p.str("snapshot");
+            let index = if snap.is_empty() {
+                let index =
+                    ShardedIndex::new(cfg.bits(), cfg.radius(), p.usize("shards")?.max(1));
+                for i in 0..data.len() {
+                    index.insert_point(fam.as_ref(), i as u32, data.features().row(i));
+                }
+                index.compact();
+                index
+            } else {
+                let index = chh::persist::load_sharded(std::path::Path::new(snap))?;
+                anyhow::ensure!(
+                    index.bits() == fam.bits(),
+                    "snapshot holds {}-bit codes but the sampled family emits {} \
+                     (use the profile/bits/seed the snapshot was built with)",
+                    index.bits(),
+                    fam.bits()
+                );
+                let n = feats.len();
+                for s in index.shards() {
+                    for (id, _) in s.live_entries() {
+                        anyhow::ensure!(
+                            (id as usize) < n,
+                            "snapshot id {id} outside the serving feature store (n={n})"
+                        );
+                    }
+                }
+                index
+            };
+            let probes = match p.usize("probes")? {
+                0 => index.planner().full_volume() as usize,
+                v => v,
+            };
+            let budget = QueryBudget::new(probes, p.usize("top")?.max(1));
+            let router = chh::coordinator::OnlineRouter::new(
+                fam.clone(),
+                Arc::new(index),
+                feats.clone(),
+                1,
+                64,
+                budget,
+            );
+            Stack::Online(Arc::new(router))
+        }
+        other => anyhow::bail!("unknown --mode '{other}' (static|online)"),
+    };
+    let max_batch = p.usize("max-batch")?.max(1);
+    let max_wait_us = p.u64("max-wait-us")?;
+    let server_cfg = ServerConfig {
+        addr: p.str("addr").to_string(),
+        max_conns: p.usize("max-conns")?.max(1),
+        batch: BatcherConfig {
+            max_batch,
+            max_wait: std::time::Duration::from_micros(max_wait_us),
+            queue_cap: p.usize("queue-cap")?.max(1),
+        },
+        pool_workers: cfg.workers,
+        idle_timeout: std::time::Duration::from_secs(5),
+    };
+    let handle = Server::spawn(stack, server_cfg)?;
+    println!(
+        "serve-http: listening on {} (mode={mode}, n={}, dim={}, k={}, r={}, \
+         batch<={max_batch}, wait<={max_wait_us}us)",
+        handle.addr(),
+        data.len(),
+        data.dim(),
+        cfg.bits(),
+        cfg.radius()
+    );
+    let for_secs = p.u64("for-secs")?;
+    if for_secs > 0 {
+        let stopper = handle.stopper();
+        std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_secs(for_secs));
+            stopper.trigger();
+        });
+    }
+    handle.wait();
+    println!("serve-http: stopped");
+    Ok(())
+}
+
+fn cmd_loadgen(rest: &[String]) -> anyhow::Result<()> {
+    use chh::metrics::Histogram;
+    use chh::server::protocol;
+    use chh::server::HttpClient;
+    use std::time::{Duration, Instant};
+    let args = Args::new("chh loadgen", "open/closed-loop load generator for chh serve-http")
+        .opt("addr", "127.0.0.1:8080", "server address")
+        .opt("queries", "1000", "total queries to send")
+        .opt("concurrency", "8", "client connections (one thread each)")
+        .opt("mode", "closed", "closed (back-to-back) | open (paced by --rate)")
+        .opt("rate", "2000", "open loop: total target queries/sec")
+        .opt("topk", "0", "use /query_topk with this T instead of /query (0 = /query)")
+        .opt("seed", "2012", "rng seed for the query hyperplanes")
+        .opt("json", "", "write machine-readable results to this path")
+        .flag("shutdown", "POST /shutdown to the server when done");
+    let p = args.parse(rest).map_err(|h| anyhow::anyhow!("{h}"))?;
+    let addr = p.str("addr").to_string();
+    let queries = p.usize("queries")?;
+    let conc = p.usize("concurrency")?.max(1);
+    let open_loop = match p.str("mode") {
+        "closed" => false,
+        "open" => true,
+        other => anyhow::bail!("unknown --mode '{other}' (closed|open)"),
+    };
+    let rate = p.f64("rate")?;
+    let topk = p.usize("topk")?;
+    let seed = p.u64("seed")?;
+    // learn the index dimensionality (and readiness) from /stats
+    let mut probe = HttpClient::connect_retry(&addr, Duration::from_secs(10))
+        .map_err(|e| anyhow::anyhow!("connecting to {addr}: {e}"))?;
+    probe.set_timeout(Duration::from_secs(10))?;
+    let resp = probe.get("/stats").map_err(|e| anyhow::anyhow!("GET /stats: {e}"))?;
+    anyhow::ensure!(resp.status == 200, "GET /stats returned {}", resp.status);
+    let stats = chh::jsonio::Json::parse_bytes(&resp.body)
+        .map_err(|e| anyhow::anyhow!("parsing /stats: {e}"))?;
+    let dim = stats
+        .get("dim")
+        .and_then(|d| d.as_usize())
+        .ok_or_else(|| anyhow::anyhow!("/stats has no dim field"))?;
+    let server_mode =
+        stats.get("mode").and_then(|m| m.as_str()).unwrap_or("?").to_string();
+    drop(probe);
+    println!(
+        "loadgen: {queries} queries (dim={dim}) -> {addr} [{server_mode}]  \
+         {} loop, {conc} connections{}",
+        if open_loop { "open" } else { "closed" },
+        if open_loop { format!(", target {rate:.0} q/s") } else { String::new() }
+    );
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for t in 0..conc {
+        let n_t = queries / conc + usize::from(t < queries % conc);
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(
+            move || -> (Histogram, usize, usize, usize) {
+                let mut h = Histogram::new();
+                let (mut ok, mut rejected, mut failed) = (0usize, 0usize, 0usize);
+                let mut rng = Rng::seed_from_u64(seed ^ (0x9E3779B9 + t as u64));
+                let mut client = match HttpClient::connect_retry(&addr, Duration::from_secs(5)) {
+                    Ok(c) => c,
+                    Err(_) => return (h, 0, 0, n_t),
+                };
+                let _ = client.set_timeout(Duration::from_secs(30));
+                let interval = if open_loop { conc as f64 / rate.max(1e-9) } else { 0.0 };
+                let start = Instant::now();
+                for i in 0..n_t {
+                    if open_loop {
+                        let due = start + Duration::from_secs_f64(i as f64 * interval);
+                        let now = Instant::now();
+                        if due > now {
+                            std::thread::sleep(due - now);
+                        }
+                    }
+                    let w = chh::testing::unit_vec(&mut rng, dim);
+                    let (path, body) = if topk > 0 {
+                        ("/query_topk", protocol::topk_body(&w, topk))
+                    } else {
+                        ("/query", protocol::query_body(&w))
+                    };
+                    let q0 = Instant::now();
+                    let reconnect = match client.post(path, &body) {
+                        Ok(resp) => {
+                            match resp.status {
+                                200 => {
+                                    h.record(q0.elapsed().as_secs_f64());
+                                    ok += 1;
+                                }
+                                503 => rejected += 1,
+                                _ => failed += 1,
+                            }
+                            // honor Connection: close (shed 503s and
+                            // shutdown replies close the socket) — keep
+                            // using a dead connection and the next query
+                            // burns as a spurious transport failure
+                            !resp.keep_alive
+                        }
+                        Err(_) => {
+                            failed += 1;
+                            true
+                        }
+                    };
+                    if reconnect {
+                        match HttpClient::connect(&addr) {
+                            Ok(c) => {
+                                client = c;
+                                let _ = client.set_timeout(Duration::from_secs(30));
+                            }
+                            Err(_) => {
+                                failed += n_t - i - 1;
+                                break;
+                            }
+                        }
+                    }
+                }
+                (h, ok, rejected, failed)
+            },
+        ));
+    }
+    let mut hist = Histogram::new();
+    let (mut ok, mut rejected, mut failed) = (0usize, 0usize, 0usize);
+    for hd in handles {
+        let (h, o, r, f) = hd.join().expect("loadgen worker");
+        hist.merge(&h);
+        ok += o;
+        rejected += r;
+        failed += f;
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let (p50, p95, p99) = (
+        hist.percentile(50.0) * 1e6,
+        hist.percentile(95.0) * 1e6,
+        hist.percentile(99.0) * 1e6,
+    );
+    let rows = vec![vec![
+        format!("{ok}"),
+        format!("{rejected}"),
+        format!("{failed}"),
+        format!("{:.0}", ok as f64 / secs.max(1e-9)),
+        format!("{p50:.1}"),
+        format!("{p95:.1}"),
+        format!("{p99:.1}"),
+        format!("{:.1}", hist.mean() * 1e6),
+    ]];
+    chh::report::print_rows(
+        &format!(
+            "loadgen: {} loop, {conc} connections, {secs:.2}s wall",
+            if open_loop { "open" } else { "closed" }
+        ),
+        &["ok", "503", "failed", "qps", "p50(us)", "p95(us)", "p99(us)", "mean(us)"],
+        &rows,
+    );
+    let json_path = p.str("json");
+    if !json_path.is_empty() {
+        use chh::jsonio::{obj, Json};
+        let doc = obj(vec![
+            ("tool", Json::from("loadgen")),
+            ("mode", Json::from(if open_loop { "open" } else { "closed" })),
+            ("queries", Json::from(queries)),
+            ("concurrency", Json::from(conc)),
+            ("ok", Json::from(ok)),
+            ("rejected_503", Json::from(rejected)),
+            ("failed", Json::from(failed)),
+            ("wall_secs", Json::Num(secs)),
+            ("qps", Json::Num(ok as f64 / secs.max(1e-9))),
+            ("p50_us", Json::Num(p50)),
+            ("p95_us", Json::Num(p95)),
+            ("p99_us", Json::Num(p99)),
+            ("mean_us", Json::Num(hist.mean() * 1e6)),
+        ]);
+        std::fs::write(json_path, doc.to_string_pretty())?;
+        println!("json results -> {json_path}");
+    }
+    if p.flag("shutdown") {
+        let mut c = HttpClient::connect(&addr)
+            .map_err(|e| anyhow::anyhow!("reconnecting for shutdown: {e}"))?;
+        let resp = c
+            .post("/shutdown", "")
+            .map_err(|e| anyhow::anyhow!("POST /shutdown: {e}"))?;
+        anyhow::ensure!(resp.status == 200, "POST /shutdown returned {}", resp.status);
+        println!("loadgen: server shutdown requested");
+    }
+    anyhow::ensure!(ok > 0, "no query succeeded ({rejected} rejected, {failed} failed)");
     Ok(())
 }
 

@@ -100,11 +100,24 @@ impl Stopwatch {
     }
 }
 
-/// Fixed-capacity latency reservoir with percentile queries.
+/// Sample reservoir with percentile queries. [`Self::new`] keeps every
+/// sample (bench/eval uses, where run length is known and bounded);
+/// [`Self::with_capacity`] keeps a ring of the most recent `cap`
+/// samples — the right mode for long-lived servers, where an unbounded
+/// per-request `Vec` would grow forever and percentile sorts over the
+/// full history would stall the recording hot path.
 #[derive(Debug, Clone)]
 pub struct Histogram {
     samples: Vec<f64>,
+    /// ring bound; `None` keeps everything
+    cap: Option<usize>,
+    /// next slot to overwrite once the ring is full
+    next: usize,
 }
+
+/// Default ring size for serving-path histograms: big enough for stable
+/// tail percentiles, small enough that a locked percentile sort is µs.
+pub const SERVING_RESERVOIR: usize = 4096;
 
 impl Default for Histogram {
     fn default() -> Self {
@@ -114,15 +127,39 @@ impl Default for Histogram {
 
 impl Histogram {
     pub fn new() -> Self {
-        Histogram { samples: Vec::new() }
+        Histogram { samples: Vec::new(), cap: None, next: 0 }
+    }
+
+    /// Keep only the most recent `cap` samples (ring buffer).
+    pub fn with_capacity(cap: usize) -> Self {
+        Histogram { samples: Vec::new(), cap: Some(cap.max(1)), next: 0 }
     }
 
     pub fn record(&mut self, v: f64) {
-        self.samples.push(v);
+        match self.cap {
+            Some(cap) if self.samples.len() >= cap => {
+                self.samples[self.next] = v;
+                self.next = (self.next + 1) % cap;
+            }
+            _ => self.samples.push(v),
+        }
     }
 
     pub fn record_duration(&mut self, d: Duration) {
         self.record(d.as_secs_f64());
+    }
+
+    /// Fold another histogram's samples into this one (e.g. merging the
+    /// per-thread latency reservoirs of a load generator). Respects this
+    /// histogram's own ring bound.
+    pub fn merge(&mut self, other: &Histogram) {
+        if self.cap.is_none() {
+            self.samples.extend_from_slice(&other.samples);
+        } else {
+            for &v in &other.samples {
+                self.record(v);
+            }
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -142,13 +179,25 @@ impl Histogram {
 
     /// Percentile in [0, 100] by nearest-rank on a sorted copy.
     pub fn percentile(&self, p: f64) -> f64 {
+        self.percentiles(&[p])[0]
+    }
+
+    /// Several percentiles from one sorted pass — use this (not repeated
+    /// [`Self::percentile`] calls, each of which clones and sorts) when
+    /// reading p50/p95/p99 together, especially under a lock the
+    /// recording hot path contends on.
+    pub fn percentiles(&self, ps: &[f64]) -> Vec<f64> {
         if self.samples.is_empty() {
-            return 0.0;
+            return vec![0.0; ps.len()];
         }
         let mut s = self.samples.clone();
         s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let rank = ((p / 100.0) * (s.len() as f64 - 1.0)).round() as usize;
-        s[rank.min(s.len() - 1)]
+        ps.iter()
+            .map(|&p| {
+                let rank = ((p / 100.0) * (s.len() as f64 - 1.0)).round() as usize;
+                s[rank.min(s.len() - 1)]
+            })
+            .collect()
     }
 
     pub fn min(&self) -> f64 {
@@ -212,6 +261,42 @@ mod tests {
     }
 
     #[test]
+    fn histogram_ring_keeps_most_recent() {
+        let mut h = Histogram::with_capacity(10);
+        for i in 1..=100 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.len(), 10, "ring bound holds");
+        // only the most recent samples (91..=100) survive
+        assert_eq!(h.min(), 91.0);
+        assert_eq!(h.max(), 100.0);
+        assert!((h.mean() - 95.5).abs() < 1e-9);
+        // merging into a ring respects the bound too
+        let mut other = Histogram::new();
+        for i in 0..50 {
+            other.record(i as f64);
+        }
+        h.merge(&other);
+        assert_eq!(h.len(), 10);
+    }
+
+    #[test]
+    fn histogram_merge_combines_samples() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        for i in 1..=50 {
+            a.record(i as f64);
+        }
+        for i in 51..=100 {
+            b.record(i as f64);
+        }
+        a.merge(&b);
+        assert_eq!(a.len(), 100);
+        assert_eq!(a.percentile(100.0), 100.0);
+        assert_eq!(a.min(), 1.0);
+    }
+
+    #[test]
     fn histogram_percentiles() {
         let mut h = Histogram::new();
         for i in 1..=100 {
@@ -221,5 +306,9 @@ mod tests {
         assert_eq!(h.percentile(100.0), 100.0);
         assert!((h.percentile(50.0) - 50.0).abs() <= 1.0);
         assert!((h.mean() - 50.5).abs() < 1e-9);
+        // batched read agrees with the one-at-a-time path
+        let batch = h.percentiles(&[0.0, 50.0, 100.0]);
+        assert_eq!(batch, vec![h.percentile(0.0), h.percentile(50.0), h.percentile(100.0)]);
+        assert_eq!(Histogram::new().percentiles(&[50.0, 99.0]), vec![0.0, 0.0]);
     }
 }

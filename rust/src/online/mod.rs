@@ -290,6 +290,35 @@ impl ShardedIndex {
         self.query_code(lookup, scores.as_deref(), w, feats, budget, eligible)
     }
 
+    /// Top-T near-to-hyperplane neighbors — the dynamic-index analogue of
+    /// [`crate::table::HyperplaneIndex::query_topk`]: probe every shard
+    /// with the query-adapted plan (same per-shard budget semantics as
+    /// [`Self::query`]), merge the margin-ranked candidates and return up
+    /// to `t` of them sorted by ascending margin (ties by id, so the
+    /// order is deterministic across shard layouts).
+    pub fn query_topk(
+        &self,
+        family: &dyn HashFamily,
+        w: &[f32],
+        feats: &FeatureStore,
+        t: usize,
+        budget: QueryBudget,
+        eligible: impl Fn(usize) -> bool,
+    ) -> Vec<(usize, f32)> {
+        let lookup = family.encode_query(w);
+        let scores = family.query_bit_scores(w);
+        let masks = self.plan_masks(scores.as_deref(), budget.probes);
+        let mut scored: Vec<(usize, f32)> = Vec::new();
+        for v in self.views() {
+            v.query_topk(&masks, lookup, w, feats, budget.top, &eligible, &mut scored);
+        }
+        scored.sort_by(|a, b| {
+            a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal).then(a.0.cmp(&b.0))
+        });
+        scored.truncate(t);
+        scored
+    }
+
     /// [`Self::query_code`] with the per-shard probes fanned out over
     /// `pool` (one work unit per shard). Partials merge in shard order,
     /// so the hit is bit-identical to the inline path for any worker
@@ -472,6 +501,34 @@ mod tests {
 
     // query_pool parity with the inline fan-out is covered by the
     // integration suite in rust/tests/batch_parallel.rs.
+
+    #[test]
+    fn query_topk_matches_static_table_on_full_ball() {
+        let mut rng = Rng::seed_from_u64(27);
+        let ds = test_blobs(300, 16, 3, &mut rng);
+        let fam = BhHash::sample(16, 8, &mut rng);
+        let codes = fam.encode_all(ds.features());
+        let idx = ShardedIndex::from_codes(&codes, 8, 3); // radius = bits: full ball
+        let table = crate::table::HyperplaneIndex::from_codes(codes, 8);
+        let w = unit_vec(&mut rng, 16);
+        let online = idx.query_topk(&fam, &w, ds.features(), 12, QueryBudget::unlimited(), |_| {
+            true
+        });
+        let fixed = table.query_topk(&fam, &w, ds.features(), 12, |_| true);
+        assert_eq!(online.len(), fixed.len());
+        for ((ia, ma), (ib, mb)) in online.iter().zip(fixed.iter()) {
+            assert_eq!(ia, ib, "same ids in same margin order");
+            assert_eq!(ma.to_bits(), mb.to_bits(), "identical margins");
+        }
+        // sorted ascending, filter respected
+        for pair in online.windows(2) {
+            assert!(pair[0].1 <= pair[1].1);
+        }
+        let even = idx.query_topk(&fam, &w, ds.features(), 8, QueryBudget::unlimited(), |i| {
+            i % 2 == 0
+        });
+        assert!(even.iter().all(|&(i, _)| i % 2 == 0));
+    }
 
     #[test]
     fn merge_hits_takes_global_minimum() {

@@ -271,14 +271,13 @@ impl Shard {
     }
 
     /// Approximate heap footprint in bytes (capacities, not lengths).
+    /// Bucket maps use the accounting shared with the static tables
+    /// ([`crate::hash::fasthash::bucket_map_bytes`]).
     pub fn memory_bytes(&self) -> usize {
         let d = self.delta.lock().unwrap();
         let frozen = self.frozen_arc();
         let map_entry = |ksz: usize, vsz: usize, cap: usize| cap * (ksz + vsz + 1);
-        let bucket_bytes = |b: &CodeMap<Vec<u32>>| {
-            map_entry(8, std::mem::size_of::<Vec<u32>>(), b.capacity())
-                + b.values().map(|v| v.capacity() * 4).sum::<usize>()
-        };
+        let bucket_bytes = crate::hash::fasthash::bucket_map_bytes;
         frozen.ids.capacity() * 4
             + frozen.codes.capacity() * 8
             + bucket_bytes(&frozen.buckets)
@@ -369,6 +368,42 @@ impl ShardView {
             }
         }
         QueryHit { best, scanned, probed, nonempty: any }
+    }
+
+    /// Like [`Self::query`], but append every margin-ranked candidate to
+    /// `out` instead of keeping only the minimum — the shard-local half
+    /// of the paper's "short list L" protocol. The same per-shard `top`
+    /// early-exit applies; the caller merges and truncates across shards
+    /// ([`crate::online::ShardedIndex::query_topk`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn query_topk(
+        &self,
+        masks: &[u64],
+        lookup: u64,
+        w: &[f32],
+        feats: &FeatureStore,
+        top: usize,
+        eligible: impl Fn(usize) -> bool,
+        out: &mut Vec<(usize, f32)>,
+    ) {
+        let w_norm = nrm2(w);
+        let mut cand: Vec<u32> = Vec::new();
+        let mut scanned = 0usize;
+        for &mask in masks {
+            self.probe_into(lookup ^ mask, &mut cand);
+            for &id in &cand {
+                let id = id as usize;
+                if !eligible(id) {
+                    continue;
+                }
+                scanned += 1;
+                out.push((id, crate::linalg::margin_feat(feats.row(id), w, w_norm)));
+            }
+            cand.clear();
+            if scanned >= top {
+                break;
+            }
+        }
     }
 }
 

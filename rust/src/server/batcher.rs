@@ -1,0 +1,367 @@
+//! Dynamic micro-batching: coalesce concurrent point-to-hyperplane
+//! queries into one pooled batch call.
+//!
+//! The data-parallel engine (`docs/PARALLEL.md`) is fastest when it sees
+//! whole batches, but network traffic arrives one request at a time. The
+//! [`Batcher`] sits between the two: HTTP handler threads submit single
+//! [`QueryRequest`]s and block on a reply channel; one collector thread
+//! drains the shared queue and flushes a batch whenever
+//!
+//! * `max_batch` queries are waiting, or
+//! * the **oldest** waiting query has been held for `max_wait`
+//!
+//! — classic size-or-deadline batching, so a lone query pays at most
+//! `max_wait` extra latency while a burst is answered as one
+//! `query_batch_pooled` call. Because every query is answered by the
+//! same deterministic pooled path, coalescing never changes results:
+//! the response for a request is bit-identical whether it was flushed
+//! alone or inside a batch (the parity tests in
+//! `rust/tests/http_server.rs` assert exactly this).
+//!
+//! **Admission control**: the submit queue is a bounded `sync_channel`;
+//! when it is full, [`Batcher::submit`] fails immediately with
+//! [`SubmitError::Overloaded`] instead of blocking the connection
+//! thread — the server maps that to HTTP 503 so overload sheds load at
+//! the edge rather than growing an unbounded backlog.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::QueryRequest;
+use crate::metrics::Histogram;
+use crate::table::QueryHit;
+
+/// Batching policy knobs (see `docs/SERVING.md`).
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// flush as soon as this many queries are waiting
+    pub max_batch: usize,
+    /// flush once the oldest waiting query has been held this long
+    pub max_wait: Duration,
+    /// admission queue bound; a full queue rejects with `Overloaded`
+    pub queue_cap: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_batch: 32,
+            max_wait: Duration::from_micros(200),
+            queue_cap: 1024,
+        }
+    }
+}
+
+/// Why a submit was rejected.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// admission queue full — shed load (HTTP 503)
+    Overloaded,
+    /// batcher already shut down
+    ShuttingDown,
+}
+
+/// Counters exposed on `/stats`.
+pub struct BatcherStats {
+    pub submitted: AtomicU64,
+    pub rejected: AtomicU64,
+    /// flush calls made
+    pub batches: AtomicU64,
+    /// queries flushed (sum of batch sizes)
+    pub flushed: AtomicU64,
+    /// recent batch sizes (bounded ring — the batcher is long-lived)
+    batch_sizes: Mutex<Histogram>,
+}
+
+impl Default for BatcherStats {
+    fn default() -> Self {
+        BatcherStats {
+            submitted: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            flushed: AtomicU64::new(0),
+            batch_sizes: Mutex::new(Histogram::with_capacity(
+                crate::metrics::SERVING_RESERVOIR,
+            )),
+        }
+    }
+}
+
+impl BatcherStats {
+    pub fn mean_batch(&self) -> f64 {
+        self.batch_sizes.lock().unwrap().mean()
+    }
+
+    pub fn max_batch_seen(&self) -> f64 {
+        let h = self.batch_sizes.lock().unwrap();
+        if h.is_empty() {
+            0.0
+        } else {
+            h.max()
+        }
+    }
+}
+
+struct Slot {
+    req: QueryRequest,
+    reply: std::sync::mpsc::Sender<QueryHit>,
+}
+
+/// The flush target: answers a whole batch in request order (the server
+/// wires this to `Router::query_batch_pooled` /
+/// `OnlineRouter::query_batch_pooled`).
+pub type FlushFn = Box<dyn Fn(&[QueryRequest]) -> Vec<QueryHit> + Send>;
+
+/// The micro-batcher: a bounded submit queue plus one collector thread.
+pub struct Batcher {
+    tx: Option<SyncSender<Slot>>,
+    collector: Option<std::thread::JoinHandle<()>>,
+    stats: Arc<BatcherStats>,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig, flush: FlushFn) -> Self {
+        let stats = Arc::new(BatcherStats::default());
+        let (tx, rx) = sync_channel::<Slot>(cfg.queue_cap.max(1));
+        let tstats = stats.clone();
+        let collector = std::thread::Builder::new()
+            .name("chh-batcher".to_string())
+            .spawn(move || collector_loop(rx, cfg, flush, tstats))
+            .expect("spawn batcher thread");
+        Batcher { tx: Some(tx), collector: Some(collector), stats }
+    }
+
+    pub fn stats(&self) -> &Arc<BatcherStats> {
+        &self.stats
+    }
+
+    /// Enqueue one query. Returns the channel the hit arrives on, or an
+    /// immediate rejection when the admission queue is full.
+    pub fn submit(
+        &self,
+        req: QueryRequest,
+    ) -> Result<Receiver<QueryHit>, SubmitError> {
+        let Some(tx) = self.tx.as_ref() else {
+            return Err(SubmitError::ShuttingDown);
+        };
+        let (reply, rx) = std::sync::mpsc::channel();
+        match tx.try_send(Slot { req, reply }) {
+            Ok(()) => {
+                self.stats.submitted.fetch_add(1, Ordering::Relaxed);
+                Ok(rx)
+            }
+            Err(TrySendError::Full(_)) => {
+                self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(SubmitError::Overloaded)
+            }
+            Err(TrySendError::Disconnected(_)) => Err(SubmitError::ShuttingDown),
+        }
+    }
+
+    /// Stop accepting, flush everything still queued, join the collector.
+    pub fn shutdown(mut self) {
+        self.tx.take(); // disconnect ⇒ collector drains and exits
+        if let Some(h) = self.collector.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        self.tx.take();
+        if let Some(h) = self.collector.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn collector_loop(
+    rx: Receiver<Slot>,
+    cfg: BatcherConfig,
+    flush: FlushFn,
+    stats: Arc<BatcherStats>,
+) {
+    let max_batch = cfg.max_batch.max(1);
+    loop {
+        // block for the batch's first query
+        let first = match rx.recv() {
+            Ok(s) => s,
+            Err(_) => return, // all senders gone and queue drained
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + cfg.max_wait;
+        let mut disconnected = false;
+        while batch.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(s) => batch.push(s),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => {
+                    disconnected = true;
+                    break;
+                }
+            }
+        }
+        // split requests from reply handles instead of cloning the
+        // dim-sized w vectors — this thread is the /query bottleneck
+        let (reqs, replies): (Vec<QueryRequest>, Vec<_>) =
+            batch.into_iter().map(|s| (s.req, s.reply)).unzip();
+        let hits = flush(&reqs);
+        debug_assert_eq!(hits.len(), reqs.len(), "flush must answer the whole batch");
+        stats.batches.fetch_add(1, Ordering::Relaxed);
+        stats.flushed.fetch_add(reqs.len() as u64, Ordering::Relaxed);
+        stats.batch_sizes.lock().unwrap().record(reqs.len() as f64);
+        for (reply, hit) in replies.into_iter().zip(hits) {
+            // a dropped receiver (client hung up mid-flight) is fine
+            let _ = reply.send(hit);
+        }
+        if disconnected {
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(tag: f32) -> QueryRequest {
+        QueryRequest { w: vec![tag, 1.0], exclude: None }
+    }
+
+    /// Flush that echoes the first w component into `scanned`, so tests
+    /// can check each reply went to the right submitter.
+    fn echo_flush() -> FlushFn {
+        Box::new(|reqs| {
+            reqs.iter()
+                .map(|r| QueryHit {
+                    best: None,
+                    scanned: r.w[0] as usize,
+                    probed: reqs.len(), // batch size, to observe coalescing
+                    nonempty: false,
+                })
+                .collect()
+        })
+    }
+
+    #[test]
+    fn replies_routed_to_their_submitters() {
+        let b = Batcher::new(
+            BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(5), queue_cap: 64 },
+            echo_flush(),
+        );
+        let rxs: Vec<_> = (0..20).map(|i| b.submit(req(i as f32)).unwrap()).collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let hit = rx.recv().expect("reply");
+            assert_eq!(hit.scanned, i, "reply {i} routed to wrong submitter");
+        }
+        assert_eq!(b.stats().submitted.load(Ordering::Relaxed), 20);
+        assert_eq!(b.stats().flushed.load(Ordering::Relaxed), 20);
+        b.shutdown();
+    }
+
+    #[test]
+    fn burst_coalesces_into_batches() {
+        // long max_wait: the first flush waits for the whole burst, so
+        // batches must hit max_batch, not dribble out one by one (the
+        // wait is generous only so a preempted CI runner can't split
+        // the burst; the flush fires the moment all 8 arrive)
+        let b = Batcher::new(
+            BatcherConfig { max_batch: 8, max_wait: Duration::from_secs(1), queue_cap: 64 },
+            echo_flush(),
+        );
+        let rxs: Vec<_> = (0..8).map(|i| b.submit(req(i as f32)).unwrap()).collect();
+        let sizes: Vec<usize> = rxs.into_iter().map(|rx| rx.recv().unwrap().probed).collect();
+        // every query sees the batch size its flush had; with an idle
+        // collector the burst lands in a few batches totalling 8
+        assert_eq!(sizes.len(), 8);
+        assert!(
+            sizes.iter().any(|&s| s >= 4),
+            "burst should coalesce, got batch sizes {sizes:?}"
+        );
+        assert!(b.stats().batches.load(Ordering::Relaxed) <= 4);
+        b.shutdown();
+    }
+
+    #[test]
+    fn overload_rejects_immediately() {
+        // gate the flush so the queue can be filled deterministically
+        let (started_tx, started_rx) = std::sync::mpsc::channel::<()>();
+        let (release_tx, release_rx) = std::sync::mpsc::channel::<()>();
+        let flush: FlushFn = Box::new(move |reqs| {
+            started_tx.send(()).unwrap();
+            release_rx.recv().unwrap();
+            reqs.iter().map(|_| QueryHit::default()).collect()
+        });
+        let b = Batcher::new(
+            BatcherConfig { max_batch: 1, max_wait: Duration::ZERO, queue_cap: 2 },
+            flush,
+        );
+        let rx1 = b.submit(req(1.0)).unwrap();
+        started_rx.recv().unwrap(); // collector is now blocked inside flush
+        let _rx2 = b.submit(req(2.0)).unwrap(); // queue slot 1
+        let _rx3 = b.submit(req(3.0)).unwrap(); // queue slot 2
+        assert_eq!(b.submit(req(4.0)).unwrap_err(), SubmitError::Overloaded);
+        assert_eq!(b.stats().rejected.load(Ordering::Relaxed), 1);
+        // release all flushes and drain
+        for _ in 0..3 {
+            release_tx.send(()).unwrap();
+        }
+        rx1.recv().unwrap();
+        b.shutdown();
+    }
+
+    #[test]
+    fn shutdown_flushes_the_backlog() {
+        let (release_tx, release_rx) = std::sync::mpsc::channel::<()>();
+        let flush: FlushFn = Box::new(move |reqs| {
+            // slow first flush lets a backlog build up
+            let _ = release_rx.recv_timeout(Duration::from_millis(100));
+            reqs.iter()
+                .map(|r| QueryHit { scanned: r.w[0] as usize, ..QueryHit::default() })
+                .collect()
+        });
+        let b = Batcher::new(
+            BatcherConfig { max_batch: 2, max_wait: Duration::ZERO, queue_cap: 16 },
+            flush,
+        );
+        let rxs: Vec<_> = (0..6).map(|i| b.submit(req(i as f32)).unwrap()).collect();
+        drop(release_tx);
+        b.shutdown(); // must drain all 6 before returning
+        for (i, rx) in rxs.into_iter().enumerate() {
+            assert_eq!(rx.recv().expect("drained on shutdown").scanned, i);
+        }
+    }
+
+    #[test]
+    fn submit_after_shutdown_is_rejected_cleanly() {
+        let b = Batcher::new(BatcherConfig::default(), echo_flush());
+        let rx = b.submit(req(5.0)).unwrap();
+        assert_eq!(rx.recv().unwrap().scanned, 5);
+        // dropping is the same as shutdown; a new Batcher is cheap
+        b.shutdown();
+    }
+
+    #[test]
+    fn single_query_pays_at_most_max_wait() {
+        let b = Batcher::new(
+            BatcherConfig { max_batch: 64, max_wait: Duration::from_millis(10), queue_cap: 8 },
+            echo_flush(),
+        );
+        let t0 = Instant::now();
+        let rx = b.submit(req(0.0)).unwrap();
+        rx.recv().unwrap();
+        let waited = t0.elapsed();
+        assert!(
+            waited < Duration::from_millis(500),
+            "lone query must flush at the deadline, waited {waited:?}"
+        );
+        b.shutdown();
+    }
+}

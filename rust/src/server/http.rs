@@ -1,0 +1,423 @@
+//! Minimal HTTP/1.1 framing over `std::io` streams.
+//!
+//! The vendored registry has no hyper/tokio, so the serving front-end
+//! frames requests by hand: request line + headers + `Content-Length`
+//! body (no chunked encoding — every client we ship sends sized bodies).
+//! Both sides of the wire live here: the server-side [`MessageReader`] +
+//! [`write_response`] used by [`crate::server::Server`], and the
+//! client-side [`HttpClient`] used by `chh loadgen` and the integration
+//! tests.
+//!
+//! All limits are hard errors, not truncations: oversized heads/bodies,
+//! malformed request lines and non-numeric lengths each map to a
+//! [`HttpError`] the connection loop turns into a `400`/`413` response
+//! (or a clean close). Reading never panics on adversarial input.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// Cap on request/status line + headers.
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+/// Cap on a request or response body.
+pub const MAX_BODY_BYTES: usize = 8 * 1024 * 1024;
+
+#[derive(Debug, thiserror::Error)]
+pub enum HttpError {
+    /// Peer closed the connection before sending any bytes (normal end
+    /// of a keep-alive session).
+    #[error("connection closed")]
+    Closed,
+    /// Read timed out (idle keep-alive connection reaped).
+    #[error("read timed out")]
+    Timeout,
+    #[error("message too large: {0}")]
+    TooLarge(&'static str),
+    #[error("malformed http: {0}")]
+    Malformed(String),
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+fn io_err(e: std::io::Error) -> HttpError {
+    match e.kind() {
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => HttpError::Timeout,
+        _ => HttpError::Io(e),
+    }
+}
+
+/// One parsed HTTP request.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    /// path only (any `?query` suffix is kept verbatim — no routes use one)
+    pub path: String,
+    pub keep_alive: bool,
+    pub body: Vec<u8>,
+}
+
+/// One parsed HTTP response (client side).
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub keep_alive: bool,
+    pub body: Vec<u8>,
+}
+
+fn find_blank_line(b: &[u8]) -> Option<usize> {
+    b.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Incremental message framing over a stream: buffers whatever the
+/// transport delivered beyond the current message so back-to-back
+/// (or pipelined) keep-alive messages never lose bytes.
+pub struct MessageReader<R: Read> {
+    inner: R,
+    /// bytes read from the transport but not yet consumed
+    pending: Vec<u8>,
+}
+
+impl<R: Read> MessageReader<R> {
+    pub fn new(inner: R) -> Self {
+        MessageReader { inner, pending: Vec::new() }
+    }
+
+    /// The underlying stream (the client writes its next request here).
+    pub fn get_mut(&mut self) -> &mut R {
+        &mut self.inner
+    }
+
+    /// Read up to the blank line; leftover bytes stay in `pending`.
+    fn read_head(&mut self) -> Result<Vec<u8>, HttpError> {
+        let mut buf = std::mem::take(&mut self.pending);
+        let mut chunk = [0u8; 2048];
+        loop {
+            if let Some(end) = find_blank_line(&buf) {
+                if end > MAX_HEAD_BYTES {
+                    return Err(HttpError::TooLarge("head"));
+                }
+                self.pending = buf.split_off(end + 4);
+                buf.truncate(end);
+                return Ok(buf);
+            }
+            if buf.len() > MAX_HEAD_BYTES {
+                return Err(HttpError::TooLarge("head"));
+            }
+            let n = self.inner.read(&mut chunk).map_err(io_err)?;
+            if n == 0 {
+                if buf.is_empty() {
+                    return Err(HttpError::Closed);
+                }
+                return Err(HttpError::Malformed("eof inside head".to_string()));
+            }
+            buf.extend_from_slice(&chunk[..n]);
+        }
+    }
+
+    /// Take exactly `content_length` body bytes; any surplus already
+    /// buffered belongs to the next message and stays pending.
+    fn read_body(&mut self, content_length: usize) -> Result<Vec<u8>, HttpError> {
+        if self.pending.len() >= content_length {
+            let rest = self.pending.split_off(content_length);
+            return Ok(std::mem::replace(&mut self.pending, rest));
+        }
+        let mut body = std::mem::take(&mut self.pending);
+        let start = body.len();
+        body.resize(content_length, 0);
+        self.inner.read_exact(&mut body[start..]).map_err(io_err)?;
+        Ok(body)
+    }
+
+    /// Read and parse one request. `Err(Closed)` means the peer hung up
+    /// cleanly between requests.
+    pub fn request(&mut self) -> Result<Request, HttpError> {
+        let head = self.read_head()?;
+        let head = std::str::from_utf8(&head)
+            .map_err(|_| HttpError::Malformed("head is not utf-8".to_string()))?;
+        let mut lines = head.lines();
+        let first = lines.next().unwrap_or("");
+        let mut parts = first.split_ascii_whitespace();
+        let (Some(method), Some(path), Some(version)) = (parts.next(), parts.next(), parts.next())
+        else {
+            return Err(HttpError::Malformed(format!("bad request line {first:?}")));
+        };
+        if !version.starts_with("HTTP/1.") {
+            return Err(HttpError::Malformed(format!("unsupported version {version:?}")));
+        }
+        let (content_length, keep_alive) = parse_headers(lines, version == "HTTP/1.1")?;
+        let body = self.read_body(content_length)?;
+        Ok(Request { method: method.to_string(), path: path.to_string(), keep_alive, body })
+    }
+
+    /// Read and parse one response (client side).
+    pub fn response(&mut self) -> Result<Response, HttpError> {
+        let head = self.read_head()?;
+        let head = std::str::from_utf8(&head)
+            .map_err(|_| HttpError::Malformed("head is not utf-8".to_string()))?;
+        let mut lines = head.lines();
+        let first = lines.next().unwrap_or("");
+        let mut parts = first.split_ascii_whitespace();
+        let (Some(version), Some(code)) = (parts.next(), parts.next()) else {
+            return Err(HttpError::Malformed(format!("bad status line {first:?}")));
+        };
+        if !version.starts_with("HTTP/1.") {
+            return Err(HttpError::Malformed(format!("unsupported version {version:?}")));
+        }
+        let status = code
+            .parse::<u16>()
+            .map_err(|_| HttpError::Malformed(format!("bad status code {code:?}")))?;
+        let (content_length, keep_alive) = parse_headers(lines, version == "HTTP/1.1")?;
+        let body = self.read_body(content_length)?;
+        Ok(Response { status, keep_alive, body })
+    }
+}
+
+/// Parse headers (after the first line) into the two fields the framing
+/// needs; `default_keep_alive` comes from the HTTP version.
+fn parse_headers(
+    lines: std::str::Lines<'_>,
+    default_keep_alive: bool,
+) -> Result<(usize, bool), HttpError> {
+    let mut content_length = 0usize;
+    let mut keep_alive = default_keep_alive;
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let Some((k, v)) = line.split_once(':') else {
+            return Err(HttpError::Malformed(format!("bad header line {line:?}")));
+        };
+        let k = k.trim().to_ascii_lowercase();
+        let v = v.trim();
+        match k.as_str() {
+            "content-length" => {
+                content_length = v
+                    .parse::<usize>()
+                    .map_err(|_| HttpError::Malformed(format!("bad content-length {v:?}")))?;
+                if content_length > MAX_BODY_BYTES {
+                    return Err(HttpError::TooLarge("body"));
+                }
+            }
+            "connection" => {
+                let v = v.to_ascii_lowercase();
+                if v.contains("close") {
+                    keep_alive = false;
+                } else if v.contains("keep-alive") {
+                    keep_alive = true;
+                }
+            }
+            "transfer-encoding" => {
+                return Err(HttpError::Malformed("chunked bodies unsupported".to_string()));
+            }
+            _ => {}
+        }
+    }
+    Ok((content_length, keep_alive))
+}
+
+/// Human reason phrase for the handful of statuses the server emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Write one JSON response.
+pub fn write_response<W: Write>(
+    w: &mut W,
+    status: u16,
+    body: &[u8],
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        status,
+        reason(status),
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" }
+    );
+    w.write_all(head.as_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Write one request (client side).
+pub fn write_request<W: Write>(
+    w: &mut W,
+    method: &str,
+    path: &str,
+    body: &[u8],
+) -> std::io::Result<()> {
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: keep-alive\r\n\r\n",
+        body.len()
+    );
+    w.write_all(head.as_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// A keep-alive JSON-over-HTTP client for `chh loadgen` and tests.
+pub struct HttpClient {
+    conn: MessageReader<TcpStream>,
+}
+
+impl HttpClient {
+    pub fn connect(addr: &str) -> std::io::Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(HttpClient { conn: MessageReader::new(stream) })
+    }
+
+    /// Connect, retrying for up to `wait` (the server may still be
+    /// binding — loadgen and the CI smoke test start right after
+    /// spawning it).
+    pub fn connect_retry(addr: &str, wait: Duration) -> std::io::Result<Self> {
+        let deadline = Instant::now() + wait;
+        loop {
+            match Self::connect(addr) {
+                Ok(c) => return Ok(c),
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        return Err(e);
+                    }
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        }
+    }
+
+    pub fn set_timeout(&self, d: Duration) -> std::io::Result<()> {
+        self.conn.inner.set_read_timeout(Some(d))
+    }
+
+    /// One request/response round trip on the persistent connection.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: &[u8],
+    ) -> Result<Response, HttpError> {
+        write_request(self.conn.get_mut(), method, path, body)?;
+        self.conn.response()
+    }
+
+    pub fn post(&mut self, path: &str, body: &str) -> Result<Response, HttpError> {
+        self.request("POST", path, body.as_bytes())
+    }
+
+    pub fn get(&mut self, path: &str) -> Result<Response, HttpError> {
+        self.request("GET", path, &[])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn req(raw: &[u8]) -> Result<Request, HttpError> {
+        MessageReader::new(Cursor::new(raw.to_vec())).request()
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let r = req(b"POST /query HTTP/1.1\r\nHost: x\r\nContent-Length: 5\r\n\r\nhello").unwrap();
+        assert_eq!(r.method, "POST");
+        assert_eq!(r.path, "/query");
+        assert!(r.keep_alive, "http/1.1 defaults to keep-alive");
+        assert_eq!(r.body, b"hello");
+    }
+
+    #[test]
+    fn parses_get_without_body_and_connection_close() {
+        let r = req(b"GET /healthz HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap();
+        assert_eq!(r.method, "GET");
+        assert!(!r.keep_alive);
+        assert!(r.body.is_empty());
+    }
+
+    #[test]
+    fn http10_defaults_to_close() {
+        let r = req(b"GET / HTTP/1.0\r\n\r\n").unwrap();
+        assert!(!r.keep_alive);
+    }
+
+    #[test]
+    fn clean_eof_is_closed() {
+        assert!(matches!(req(b""), Err(HttpError::Closed)));
+    }
+
+    #[test]
+    fn malformed_inputs_rejected() {
+        assert!(matches!(req(b"garbage\r\n\r\n"), Err(HttpError::Malformed(_))));
+        assert!(matches!(req(b"GET /\r\n\r\n"), Err(HttpError::Malformed(_))));
+        assert!(matches!(req(b"GET / SPDY/9\r\n\r\n"), Err(HttpError::Malformed(_))));
+        assert!(matches!(
+            req(b"POST / HTTP/1.1\r\nContent-Length: x\r\n\r\n"),
+            Err(HttpError::Malformed(_))
+        ));
+        assert!(matches!(
+            req(b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n"),
+            Err(HttpError::Malformed(_))
+        ));
+        // truncated body
+        assert!(req(b"POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc").is_err());
+    }
+
+    #[test]
+    fn oversized_head_and_body_rejected() {
+        let mut big = b"GET / HTTP/1.1\r\n".to_vec();
+        big.extend_from_slice(format!("X: {}\r\n\r\n", "y".repeat(MAX_HEAD_BYTES)).as_bytes());
+        assert!(matches!(req(&big), Err(HttpError::TooLarge("head"))));
+        let huge = format!("POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY_BYTES + 1);
+        assert!(matches!(req(huge.as_bytes()), Err(HttpError::TooLarge("body"))));
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let mut wire = Vec::new();
+        write_response(&mut wire, 200, br#"{"ok":true}"#, true).unwrap();
+        let resp = MessageReader::new(Cursor::new(wire)).response().unwrap();
+        assert_eq!(resp.status, 200);
+        assert!(resp.keep_alive);
+        assert_eq!(resp.body, br#"{"ok":true}"#);
+        let mut wire = Vec::new();
+        write_response(&mut wire, 503, b"{}", false).unwrap();
+        let resp = MessageReader::new(Cursor::new(wire)).response().unwrap();
+        assert_eq!(resp.status, 503);
+        assert!(!resp.keep_alive);
+    }
+
+    #[test]
+    fn request_roundtrip() {
+        let mut wire = Vec::new();
+        write_request(&mut wire, "POST", "/query", br#"{"w":[1]}"#).unwrap();
+        let r = req(&wire).unwrap();
+        assert_eq!(r.method, "POST");
+        assert_eq!(r.path, "/query");
+        assert_eq!(r.body, br#"{"w":[1]}"#);
+    }
+
+    #[test]
+    fn pipelined_requests_keep_their_bytes() {
+        // two requests land in one transport buffer: the reader must
+        // frame both without losing or mixing bytes
+        let mut wire = Vec::new();
+        write_request(&mut wire, "POST", "/a", b"one").unwrap();
+        write_request(&mut wire, "POST", "/b", b"two!").unwrap();
+        let mut reader = MessageReader::new(Cursor::new(wire));
+        let r1 = reader.request().unwrap();
+        let r2 = reader.request().unwrap();
+        assert_eq!((r1.path.as_str(), r1.body.as_slice()), ("/a", b"one".as_slice()));
+        assert_eq!((r2.path.as_str(), r2.body.as_slice()), ("/b", b"two!".as_slice()));
+        assert!(matches!(reader.request(), Err(HttpError::Closed)));
+    }
+}

@@ -1,0 +1,746 @@
+//! The network serving subsystem: a std-only HTTP/1.1 front-end that
+//! exposes the routers over the wire, with dynamic micro-batching into
+//! the data-parallel engine.
+//!
+//! ```text
+//!                    ┌────────────────────── Server ──────────────────────┐
+//!  clients ── TCP ──▶│ acceptor → per-connection threads (≤ max_conns)    │
+//!                    │   /query ───▶ Batcher ──▶ query_batch_pooled ──┐   │
+//!                    │   /query_topk /insert /remove /healthz /stats  │   │
+//!                    │◀─ JSON responses ◀─────────── per-query hits ◀─┘   │
+//!                    └────────────────────────────────────────────────────┘
+//! ```
+//!
+//! * **Framing** ([`http`]) — hand-rolled HTTP/1.1 with keep-alive and
+//!   `Content-Length` bodies; total parsing, hard size limits.
+//! * **Protocol** ([`protocol`]) — JSON bodies via [`crate::jsonio`];
+//!   float payloads round-trip bit-exactly, so wire responses are
+//!   bit-identical to direct router calls.
+//! * **Micro-batching** ([`batcher`]) — concurrent `/query` requests
+//!   coalesce (flush on `max_batch` or `max_wait`) into one
+//!   `query_batch_pooled` call; a bounded admission queue rejects
+//!   overload with HTTP 503 instead of queueing unboundedly.
+//! * **Serving stacks** — [`Stack::Static`] (prebuilt
+//!   [`crate::table::HyperplaneIndex`] behind a
+//!   [`crate::coordinator::Router`]) or [`Stack::Online`] (dynamic
+//!   [`crate::online::ShardedIndex`] behind an
+//!   [`crate::coordinator::OnlineRouter`], with `/insert` + `/remove`).
+//!
+//! `chh serve-http` wires a stack to this server; `chh loadgen` drives
+//! it. See `docs/SERVING.md` for the protocol and operational notes.
+
+pub mod batcher;
+pub mod http;
+pub mod protocol;
+
+pub use batcher::{Batcher, BatcherConfig, BatcherStats, SubmitError};
+pub use http::{HttpClient, HttpError};
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{OnlineRouter, QueryRequest, Router};
+use crate::data::FeatureStore;
+use crate::hash::HashFamily;
+use crate::jsonio::{obj, Json};
+use crate::metrics::Histogram;
+use crate::table::QueryHit;
+
+/// Which index the server fronts. Both variants answer `/query` through
+/// the micro-batcher; only `Online` accepts `/insert` + `/remove`.
+#[derive(Clone)]
+pub enum Stack {
+    Static(Arc<Router>),
+    Online(Arc<OnlineRouter>),
+}
+
+impl Stack {
+    pub fn mode(&self) -> &'static str {
+        match self {
+            Stack::Static(_) => "static",
+            Stack::Online(_) => "online",
+        }
+    }
+
+    fn family(&self) -> &Arc<dyn HashFamily> {
+        match self {
+            Stack::Static(r) => r.family(),
+            Stack::Online(r) => r.family(),
+        }
+    }
+
+    fn feats(&self) -> &Arc<FeatureStore> {
+        match self {
+            Stack::Static(r) => r.feats(),
+            Stack::Online(r) => r.feats(),
+        }
+    }
+
+    fn query_batch_pooled(&self, reqs: &[QueryRequest], pool: &crate::par::Pool) -> Vec<QueryHit> {
+        match self {
+            Stack::Static(r) => r.query_batch_pooled(reqs, pool),
+            Stack::Online(r) => r.query_batch_pooled(reqs, pool),
+        }
+    }
+}
+
+/// Server configuration (see `docs/SERVING.md` for the knobs).
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// listen address; port 0 binds an ephemeral port (tests)
+    pub addr: String,
+    /// concurrent-connection cap; the acceptor sheds connections beyond
+    /// it with an immediate 503 (keep-alive clients hold one each)
+    pub max_conns: usize,
+    /// micro-batcher policy
+    pub batch: BatcherConfig,
+    /// worker threads of the flush pool (0 = all cores,
+    /// [`crate::par::effective`])
+    pub pool_workers: usize,
+    /// reap keep-alive connections idle this long
+    pub idle_timeout: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            max_conns: 256,
+            batch: BatcherConfig::default(),
+            pool_workers: 0,
+            idle_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+struct ServerStats {
+    started: Instant,
+    http_requests: AtomicU64,
+    bad_requests: AtomicU64,
+    /// buckets probed across all answered queries
+    probes_total: AtomicU64,
+    /// submit→reply wall time of /query requests
+    latency: Mutex<Histogram>,
+}
+
+struct State {
+    stack: Stack,
+    batcher: Batcher,
+    budget_desc: Option<(usize, usize)>,
+    shutdown: AtomicBool,
+    addr: SocketAddr,
+    max_conns: usize,
+    active_conns: AtomicUsize,
+    /// over-cap connections currently being refused on shed threads
+    shedding_conns: AtomicUsize,
+    idle_timeout: Duration,
+    stats: ServerStats,
+}
+
+/// Cap on concurrent courtesy-503 shed threads; past this, over-cap
+/// connections are dropped outright so the acceptor keeps draining.
+const MAX_SHEDDING: usize = 64;
+
+impl State {
+    fn dim(&self) -> usize {
+        self.stack.feats().dim()
+    }
+}
+
+/// Handle to trigger shutdown from another thread (timers, signal shims).
+#[derive(Clone)]
+pub struct Stopper {
+    state: Arc<State>,
+}
+
+impl Stopper {
+    pub fn trigger(&self) {
+        trigger_shutdown(&self.state);
+    }
+}
+
+fn trigger_shutdown(state: &State) {
+    if !state.shutdown.swap(true, Ordering::SeqCst) {
+        // one poke unblocks the acceptor; connection threads notice the
+        // flag at their next request boundary or idle timeout
+        let _ = TcpStream::connect(state.addr);
+    }
+}
+
+/// A running server; join it with [`Self::wait`] or stop it with
+/// [`Self::shutdown`].
+pub struct ServerHandle {
+    state: Arc<State>,
+    acceptor: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// The actually-bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.state.addr
+    }
+
+    /// A cloneable trigger usable from other threads.
+    pub fn stopper(&self) -> Stopper {
+        Stopper { state: self.state.clone() }
+    }
+
+    /// Block until the server shuts down (a `POST /shutdown`, or any
+    /// [`Stopper`]): joins the acceptor, waits for the connection
+    /// threads to drain (bounded by `idle_timeout` + in-flight work),
+    /// then drains the batcher.
+    pub fn wait(mut self) {
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        while self.state.active_conns.load(Ordering::SeqCst) > 0 {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // connection threads are gone; the batcher (owned by `state`)
+        // drains and joins when the last Arc drops — force that here if
+        // we hold the last one, so callers observe a fully-stopped server
+        drop(self.state);
+    }
+
+    /// Trigger shutdown and wait for a clean stop.
+    pub fn shutdown(self) {
+        trigger_shutdown(&self.state);
+        self.wait();
+    }
+}
+
+/// The HTTP front-end.
+pub struct Server;
+
+impl Server {
+    /// Bind, spawn the batcher + acceptor, return immediately.
+    pub fn spawn(stack: Stack, cfg: ServerConfig) -> anyhow::Result<ServerHandle> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .map_err(|e| anyhow::anyhow!("binding {}: {e}", cfg.addr))?;
+        let addr = listener.local_addr()?;
+        let flush_stack = stack.clone();
+        let pool = crate::par::Pool::new(cfg.pool_workers);
+        let batcher = Batcher::new(
+            cfg.batch,
+            Box::new(move |reqs: &[QueryRequest]| flush_stack.query_batch_pooled(reqs, &pool)),
+        );
+        let budget_desc = match &stack {
+            Stack::Online(r) => {
+                let b = r.budget();
+                Some((b.probes, b.top))
+            }
+            Stack::Static(_) => None,
+        };
+        let state = Arc::new(State {
+            stack,
+            batcher,
+            budget_desc,
+            shutdown: AtomicBool::new(false),
+            addr,
+            max_conns: cfg.max_conns.max(1),
+            active_conns: AtomicUsize::new(0),
+            shedding_conns: AtomicUsize::new(0),
+            idle_timeout: cfg.idle_timeout,
+            stats: ServerStats {
+                started: Instant::now(),
+                http_requests: AtomicU64::new(0),
+                bad_requests: AtomicU64::new(0),
+                probes_total: AtomicU64::new(0),
+                // bounded ring: a long-lived server must not grow memory
+                // per request, and /stats sorts this under the same mutex
+                // the query path records into
+                latency: Mutex::new(Histogram::with_capacity(
+                    crate::metrics::SERVING_RESERVOIR,
+                )),
+            },
+        });
+        let astate = state.clone();
+        let acceptor = std::thread::Builder::new()
+            .name("chh-http-accept".to_string())
+            .spawn(move || acceptor_loop(&listener, &astate))
+            .expect("spawn http acceptor");
+        Ok(ServerHandle { state, acceptor: Some(acceptor) })
+    }
+}
+
+fn acceptor_loop(listener: &TcpListener, state: &Arc<State>) {
+    loop {
+        if state.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if state.shutdown.load(Ordering::SeqCst) {
+                    return; // the accept was a shutdown poke
+                }
+                // connection cap: shed load at the edge with a 503
+                // instead of growing an unbounded thread count. The
+                // courtesy 503 (write + drain) blocks for up to ~400ms
+                // on a misbehaving client, so it runs on a short-lived
+                // detached thread — the acceptor itself must never
+                // stall, least of all under overload. Past MAX_SHEDDING
+                // concurrent sheds, degrade to a plain drop.
+                if state.active_conns.load(Ordering::SeqCst) >= state.max_conns {
+                    if state.shedding_conns.fetch_add(1, Ordering::SeqCst) < MAX_SHEDDING {
+                        let sstate = state.clone();
+                        let spawned = std::thread::Builder::new()
+                            .name("chh-http-shed".to_string())
+                            .spawn(move || {
+                                shed_connection(&stream);
+                                sstate.shedding_conns.fetch_sub(1, Ordering::SeqCst);
+                            });
+                        if spawned.is_err() {
+                            state.shedding_conns.fetch_sub(1, Ordering::SeqCst);
+                        }
+                    } else {
+                        state.shedding_conns.fetch_sub(1, Ordering::SeqCst);
+                        // dropped without ceremony: shed capacity is full
+                    }
+                    continue;
+                }
+                state.active_conns.fetch_add(1, Ordering::SeqCst);
+                let cstate = state.clone();
+                let spawned = std::thread::Builder::new()
+                    .name("chh-http-conn".to_string())
+                    .spawn(move || {
+                        let _guard = ConnGuard(&cstate);
+                        handle_conn(&cstate, &stream);
+                    });
+                if spawned.is_err() {
+                    // thread spawn failed (resource exhaustion): undo
+                    state.active_conns.fetch_sub(1, Ordering::SeqCst);
+                }
+            }
+            Err(_) => {
+                if state.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                // transient accept error (EMFILE, aborted handshake):
+                // back off briefly rather than spinning
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+}
+
+/// Refuse an over-cap connection with a 503 the client can actually
+/// read: write the response first, then [`drain_and_close`].
+fn shed_connection(stream: &TcpStream) {
+    let body = protocol::error_json("overloaded: connection limit reached");
+    let mut out = stream;
+    if http::write_response(&mut out, 503, body.as_bytes(), false).is_ok() {
+        drain_and_close(stream);
+    }
+}
+
+/// Bounded drain, then close. Dropping a socket with unread request
+/// bytes makes the kernel send RST, which can race ahead of a
+/// just-written response and surface client-side as a bare transport
+/// error instead of the clean status we sent. Pulling the pending bytes
+/// out first lets the FIN (and the response) land. Best-effort and
+/// bounded — short timeout, few reads — so a misbehaving or very large
+/// sender cannot hold the thread; payloads beyond the drain window may
+/// still observe a reset.
+fn drain_and_close(stream: &TcpStream) {
+    use std::io::Read;
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
+    let mut sink = [0u8; 4096];
+    let mut reader = stream;
+    for _ in 0..8 {
+        match reader.read(&mut sink) {
+            Ok(0) | Err(_) => break, // client closed (read our reply) or idle
+            Ok(_) => {}
+        }
+    }
+    let _ = stream.shutdown(std::net::Shutdown::Both);
+}
+
+/// Decrements the live-connection counter even if a handler panics.
+struct ConnGuard<'a>(&'a Arc<State>);
+
+impl Drop for ConnGuard<'_> {
+    fn drop(&mut self) {
+        self.0.active_conns.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+fn handle_conn(state: &Arc<State>, stream: &TcpStream) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(state.idle_timeout));
+    let mut reader = http::MessageReader::new(stream);
+    loop {
+        match reader.request() {
+            Ok(req) => {
+                state.stats.http_requests.fetch_add(1, Ordering::Relaxed);
+                let reply = dispatch(state, &req);
+                let keep = req.keep_alive && !state.shutdown.load(Ordering::SeqCst);
+                let mut out = stream;
+                if http::write_response(&mut out, reply.status, reply.body.as_bytes(), keep)
+                    .is_err()
+                    || !keep
+                {
+                    return;
+                }
+            }
+            // clean close / idle reap / transport error: nothing to say
+            Err(HttpError::Closed) | Err(HttpError::Timeout) | Err(HttpError::Io(_)) => return,
+            Err(e) => {
+                // framing is unreliable after a malformed request — answer
+                // and close (draining first, so the 4xx isn't destroyed
+                // by a reset triggered by unread request bytes)
+                state.stats.bad_requests.fetch_add(1, Ordering::Relaxed);
+                let status = if matches!(e, HttpError::TooLarge(_)) { 413 } else { 400 };
+                let body = protocol::error_json(&e.to_string());
+                let mut out = stream;
+                let _ = http::write_response(&mut out, status, body.as_bytes(), false);
+                drain_and_close(stream);
+                return;
+            }
+        }
+    }
+}
+
+struct Reply {
+    status: u16,
+    body: String,
+}
+
+fn ok_json(v: Json) -> Reply {
+    Reply { status: 200, body: v.to_string_compact() }
+}
+
+fn err_json(status: u16, msg: &str) -> Reply {
+    Reply { status, body: protocol::error_json(msg) }
+}
+
+const ROUTES: &[&str] =
+    &["/healthz", "/stats", "/query", "/query_topk", "/insert", "/remove", "/shutdown"];
+
+fn dispatch(state: &Arc<State>, req: &http::Request) -> Reply {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => handle_healthz(state),
+        ("GET", "/stats") => handle_stats(state),
+        ("POST", "/query") => handle_query(state, &req.body),
+        ("POST", "/query_topk") => handle_topk(state, &req.body),
+        ("POST", "/insert") => handle_insert(state, &req.body),
+        ("POST", "/remove") => handle_remove(state, &req.body),
+        ("POST", "/shutdown") => {
+            trigger_shutdown(state);
+            ok_json(obj(vec![("shutting_down", Json::from(true))]))
+        }
+        (_, path) if ROUTES.contains(&path) => {
+            err_json(405, &format!("wrong method for {path}"))
+        }
+        (_, path) => err_json(404, &format!("no route {path}")),
+    }
+}
+
+fn handle_healthz(state: &Arc<State>) -> Reply {
+    ok_json(obj(vec![
+        ("status", Json::from("ok")),
+        ("mode", Json::from(state.stack.mode())),
+        ("uptime_secs", Json::Num(state.stats.started.elapsed().as_secs_f64())),
+    ]))
+}
+
+fn handle_query(state: &Arc<State>, body: &[u8]) -> Reply {
+    let req = match protocol::parse_query(body, state.dim()) {
+        Ok(r) => r,
+        Err(e) => return err_json(e.status, &e.msg),
+    };
+    let t0 = Instant::now();
+    match state.batcher.submit(req) {
+        Ok(rx) => match rx.recv() {
+            Ok(hit) => {
+                state.stats.latency.lock().unwrap().record_duration(t0.elapsed());
+                state.stats.probes_total.fetch_add(hit.probed as u64, Ordering::Relaxed);
+                ok_json(protocol::hit_json(&hit))
+            }
+            Err(_) => err_json(500, "batcher dropped the query"),
+        },
+        Err(SubmitError::Overloaded) => err_json(503, "overloaded: admission queue full"),
+        Err(SubmitError::ShuttingDown) => err_json(503, "shutting down"),
+    }
+}
+
+fn handle_topk(state: &Arc<State>, body: &[u8]) -> Reply {
+    let (req, t) = match protocol::parse_topk(body, state.dim()) {
+        Ok(r) => r,
+        Err(e) => return err_json(e.status, &e.msg),
+    };
+    let eligible = |i: usize| req.exclude.as_ref().map_or(true, |ex| !ex.contains(&i));
+    let hits = match &state.stack {
+        Stack::Static(r) => {
+            r.index().query_topk(r.family().as_ref(), &req.w, r.feats(), t, eligible)
+        }
+        Stack::Online(r) => r.index().query_topk(
+            r.family().as_ref(),
+            &req.w,
+            r.feats(),
+            t,
+            r.budget(),
+            eligible,
+        ),
+    };
+    ok_json(protocol::topk_json(&hits))
+}
+
+fn handle_insert(state: &Arc<State>, body: &[u8]) -> Reply {
+    let id = match protocol::parse_id(body) {
+        Ok(id) => id,
+        Err(e) => return err_json(e.status, &e.msg),
+    };
+    let Stack::Online(r) = &state.stack else {
+        return err_json(400, "static index is immutable; serve with --mode online");
+    };
+    let n = r.feats().len();
+    if id as usize >= n {
+        return err_json(
+            400,
+            &format!("id {id} outside the serving feature store (n={n})"),
+        );
+    }
+    r.index().insert_point(r.family().as_ref(), id, r.feats().row(id as usize));
+    ok_json(obj(vec![
+        ("inserted", Json::from(true)),
+        ("id", Json::from(id as usize)),
+        ("live", Json::from(r.index().len())),
+    ]))
+}
+
+fn handle_remove(state: &Arc<State>, body: &[u8]) -> Reply {
+    let id = match protocol::parse_id(body) {
+        Ok(id) => id,
+        Err(e) => return err_json(e.status, &e.msg),
+    };
+    let Stack::Online(r) = &state.stack else {
+        return err_json(400, "static index is immutable; serve with --mode online");
+    };
+    let removed = r.index().remove(id);
+    ok_json(obj(vec![
+        ("removed", Json::from(removed)),
+        ("id", Json::from(id as usize)),
+        ("live", Json::from(r.index().len())),
+    ]))
+}
+
+fn handle_stats(state: &Arc<State>) -> Reply {
+    let s = &state.stats;
+    let router_stats = match &state.stack {
+        Stack::Static(r) => r.stats(),
+        Stack::Online(r) => r.stats(),
+    };
+    let b = state.batcher.stats();
+    // one sort under the lock the query path records into
+    let (pcts, lat_mean, lat_count) = {
+        let lat = s.latency.lock().unwrap();
+        (lat.percentiles(&[50.0, 95.0, 99.0]), lat.mean(), lat.len())
+    };
+    let lat_json = obj(vec![
+        ("p50_us", Json::Num(pcts[0] * 1e6)),
+        ("p95_us", Json::Num(pcts[1] * 1e6)),
+        ("p99_us", Json::Num(pcts[2] * 1e6)),
+        ("mean_us", Json::Num(lat_mean * 1e6)),
+        ("count", Json::from(lat_count)),
+    ]);
+    let mut fields = vec![
+        ("mode", Json::from(state.stack.mode())),
+        ("dim", Json::from(state.dim())),
+        ("bits", Json::from(state.stack.family().bits())),
+        ("family", Json::from(state.stack.family().name())),
+        ("uptime_secs", Json::Num(s.started.elapsed().as_secs_f64())),
+        (
+            "http",
+            obj(vec![
+                ("requests", Json::from(s.http_requests.load(Ordering::Relaxed) as usize)),
+                ("bad_requests", Json::from(s.bad_requests.load(Ordering::Relaxed) as usize)),
+                ("probes_total", Json::from(s.probes_total.load(Ordering::Relaxed) as usize)),
+                ("latency", lat_json),
+            ]),
+        ),
+        (
+            "router",
+            obj(vec![
+                (
+                    "submitted",
+                    Json::from(router_stats.submitted.load(Ordering::Relaxed) as usize),
+                ),
+                (
+                    "completed",
+                    Json::from(router_stats.completed.load(Ordering::Relaxed) as usize),
+                ),
+                (
+                    "empty_lookups",
+                    Json::from(router_stats.empty_lookups.load(Ordering::Relaxed) as usize),
+                ),
+                (
+                    "candidates_scanned",
+                    Json::from(router_stats.candidates_scanned.load(Ordering::Relaxed) as usize),
+                ),
+            ]),
+        ),
+        (
+            "batcher",
+            obj(vec![
+                ("submitted", Json::from(b.submitted.load(Ordering::Relaxed) as usize)),
+                ("rejected", Json::from(b.rejected.load(Ordering::Relaxed) as usize)),
+                ("batches", Json::from(b.batches.load(Ordering::Relaxed) as usize)),
+                ("flushed", Json::from(b.flushed.load(Ordering::Relaxed) as usize)),
+                ("mean_batch", Json::Num(b.mean_batch())),
+                ("max_batch", Json::Num(b.max_batch_seen())),
+            ]),
+        ),
+    ];
+    match &state.stack {
+        Stack::Static(r) => {
+            let idx = r.index();
+            fields.push((
+                "static",
+                obj(vec![
+                    ("points", Json::from(idx.len())),
+                    ("buckets", Json::from(idx.bucket_count())),
+                    ("radius", Json::from(idx.radius())),
+                    ("probe_volume", Json::from(idx.probe_volume() as usize)),
+                    ("memory_bytes", Json::from(idx.memory_bytes())),
+                ]),
+            ));
+        }
+        Stack::Online(r) => {
+            let idx = r.index();
+            let (probes, top) = state.budget_desc.unwrap_or((usize::MAX, usize::MAX));
+            fields.push((
+                "online",
+                obj(vec![
+                    ("shards", Json::from(idx.shard_count())),
+                    ("live", Json::from(idx.len())),
+                    ("radius", Json::from(idx.radius())),
+                    (
+                        "epochs",
+                        Json::Arr(idx.epochs().iter().map(|&e| Json::from(e as usize)).collect()),
+                    ),
+                    ("memory_bytes", Json::from(idx.memory_bytes())),
+                    ("budget_probes", Json::from(probes.min(u32::MAX as usize))),
+                    ("budget_top", Json::from(top.min(u32::MAX as usize))),
+                ]),
+            ));
+        }
+    }
+    ok_json(obj(fields))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::test_blobs;
+    use crate::hash::BhHash;
+    use crate::rng::Rng;
+    use crate::table::HyperplaneIndex;
+
+    fn static_state() -> Arc<State> {
+        let mut rng = Rng::seed_from_u64(3);
+        let ds = test_blobs(200, 8, 3, &mut rng);
+        let fam: Arc<dyn HashFamily> = Arc::new(BhHash::sample(8, 6, &mut rng));
+        let idx = Arc::new(HyperplaneIndex::build(fam.as_ref(), ds.features(), 3));
+        let feats = Arc::new(ds.features().clone());
+        let router = Arc::new(Router::new(fam, idx, feats, 1, 4));
+        let stack = Stack::Static(router);
+        let flush_stack = stack.clone();
+        let pool = crate::par::Pool::serial();
+        let batcher = Batcher::new(
+            BatcherConfig::default(),
+            Box::new(move |reqs: &[QueryRequest]| flush_stack.query_batch_pooled(reqs, &pool)),
+        );
+        Arc::new(State {
+            stack,
+            batcher,
+            budget_desc: None,
+            shutdown: AtomicBool::new(false),
+            addr: "127.0.0.1:1".parse().unwrap(),
+            max_conns: 4,
+            active_conns: AtomicUsize::new(0),
+            shedding_conns: AtomicUsize::new(0),
+            idle_timeout: Duration::from_secs(1),
+            stats: ServerStats {
+                started: Instant::now(),
+                http_requests: AtomicU64::new(0),
+                bad_requests: AtomicU64::new(0),
+                probes_total: AtomicU64::new(0),
+                latency: Mutex::new(Histogram::with_capacity(
+                    crate::metrics::SERVING_RESERVOIR,
+                )),
+            },
+        })
+    }
+
+    fn post(path: &str, body: &str) -> http::Request {
+        http::Request {
+            method: "POST".to_string(),
+            path: path.to_string(),
+            keep_alive: true,
+            body: body.as_bytes().to_vec(),
+        }
+    }
+
+    #[test]
+    fn dispatch_routes_and_statuses() {
+        let state = static_state();
+        let get = |p: &str| http::Request {
+            method: "GET".to_string(),
+            path: p.to_string(),
+            keep_alive: true,
+            body: Vec::new(),
+        };
+        assert_eq!(dispatch(&state, &get("/healthz")).status, 200);
+        assert_eq!(dispatch(&state, &get("/stats")).status, 200);
+        assert_eq!(dispatch(&state, &get("/nope")).status, 404);
+        assert_eq!(dispatch(&state, &get("/query")).status, 405, "GET on a POST route");
+        assert_eq!(dispatch(&state, &post("/query", "junk")).status, 400);
+        let wrong_dim = protocol::query_body(&[1.0; 3]);
+        assert_eq!(dispatch(&state, &post("/query", &wrong_dim)).status, 400);
+        let good = protocol::query_body(&[0.5; 8]);
+        let reply = dispatch(&state, &post("/query", &good));
+        assert_eq!(reply.status, 200);
+        assert!(protocol::parse_hit(reply.body.as_bytes()).is_ok());
+        // static stack refuses mutations
+        assert_eq!(dispatch(&state, &post("/insert", &protocol::id_body(3))).status, 400);
+        assert_eq!(dispatch(&state, &post("/remove", &protocol::id_body(3))).status, 400);
+    }
+
+    #[test]
+    fn stats_body_is_valid_json_with_counters() {
+        let state = static_state();
+        let good = protocol::query_body(&[0.25; 8]);
+        for _ in 0..3 {
+            assert_eq!(dispatch(&state, &post("/query", &good)).status, 200);
+        }
+        let reply = dispatch(
+            &state,
+            &http::Request {
+                method: "GET".to_string(),
+                path: "/stats".to_string(),
+                keep_alive: true,
+                body: Vec::new(),
+            },
+        );
+        let v = Json::parse(&reply.body).unwrap();
+        assert_eq!(v.get("mode").unwrap().as_str(), Some("static"));
+        assert_eq!(v.get("dim").unwrap().as_usize(), Some(8));
+        let batcher = v.get("batcher").unwrap();
+        assert_eq!(batcher.get("flushed").unwrap().as_usize(), Some(3));
+        let latency = v.get("http").unwrap().get("latency").unwrap();
+        assert_eq!(latency.get("count").unwrap().as_usize(), Some(3));
+        assert!(v.get("static").unwrap().get("memory_bytes").unwrap().as_usize().unwrap() > 0);
+    }
+
+    #[test]
+    fn shutdown_endpoint_sets_the_flag() {
+        let state = static_state();
+        // state.addr points nowhere routable-free; the poke connects fail
+        // silently, which is fine for this unit test
+        let reply = dispatch(&state, &post("/shutdown", ""));
+        assert_eq!(reply.status, 200);
+        assert!(state.shutdown.load(Ordering::SeqCst));
+    }
+}

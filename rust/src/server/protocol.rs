@@ -1,0 +1,328 @@
+//! JSON wire protocol of the serving front-end.
+//!
+//! Request bodies are parsed with [`crate::jsonio`] (total parser — no
+//! panic on malformed/truncated network payloads) into the coordinator's
+//! native types; responses are rendered back to JSON. Keeping both
+//! directions here means the CLI load generator, the integration tests
+//! and the server agree on one serialization — the parity tests compare
+//! responses bit-for-bit against direct router calls, which works
+//! because `f32 → f64 → shortest-decimal → f64 → f32` round-trips
+//! exactly.
+//!
+//! Bodies:
+//!
+//! * `POST /query`      `{"w": [f32...], "exclude": [id...]?}`
+//! * `POST /query_topk` `{"w": [f32...], "t": usize, "exclude": [id...]?}`
+//! * `POST /insert`     `{"id": u32}`  (re-encode row `id` of the serving
+//!   feature store — the store is append-only in a deployment; the index
+//!   controls visibility)
+//! * `POST /remove`     `{"id": u32}`
+
+use std::collections::HashSet;
+use std::sync::Arc;
+
+use crate::coordinator::QueryRequest;
+use crate::jsonio::{obj, Json};
+use crate::table::QueryHit;
+
+/// A protocol-level rejection: maps to an HTTP status + JSON error body.
+#[derive(Debug)]
+pub struct ProtoError {
+    pub status: u16,
+    pub msg: String,
+}
+
+impl ProtoError {
+    pub fn bad(msg: impl Into<String>) -> Self {
+        ProtoError { status: 400, msg: msg.into() }
+    }
+}
+
+fn parse_body(body: &[u8]) -> Result<Json, ProtoError> {
+    Json::parse_bytes(body).map_err(|e| ProtoError::bad(format!("bad json: {e}")))
+}
+
+fn parse_w(v: &Json, dim: usize) -> Result<Vec<f32>, ProtoError> {
+    let arr = v
+        .get("w")
+        .and_then(|w| w.as_arr())
+        .ok_or_else(|| ProtoError::bad("missing \"w\" array"))?;
+    if arr.len() != dim {
+        return Err(ProtoError::bad(format!(
+            "\"w\" has {} dims, index expects {dim}",
+            arr.len()
+        )));
+    }
+    arr.iter()
+        .map(|x| {
+            // reject what f32 can't represent finitely: a 1e39 entry
+            // would cast to inf, poison the margins with NaN, and make
+            // the response unserializable
+            match x.as_f64() {
+                Some(f) if (f as f32).is_finite() => Ok(f as f32),
+                Some(_) => Err(ProtoError::bad("\"w\" entries must be finite f32s")),
+                None => Err(ProtoError::bad("\"w\" entries must be numbers")),
+            }
+        })
+        .collect()
+}
+
+fn parse_exclude(v: &Json) -> Result<Option<Arc<HashSet<usize>>>, ProtoError> {
+    let Some(ex) = v.get("exclude") else {
+        return Ok(None);
+    };
+    let arr = ex
+        .as_arr()
+        .ok_or_else(|| ProtoError::bad("\"exclude\" must be an array of ids"))?;
+    let mut set = HashSet::with_capacity(arr.len());
+    for x in arr {
+        set.insert(
+            x.as_usize()
+                .ok_or_else(|| ProtoError::bad("\"exclude\" entries must be non-negative ints"))?,
+        );
+    }
+    Ok(Some(Arc::new(set)))
+}
+
+/// Parse a `/query` body into a router request.
+pub fn parse_query(body: &[u8], dim: usize) -> Result<QueryRequest, ProtoError> {
+    let v = parse_body(body)?;
+    Ok(QueryRequest { w: parse_w(&v, dim)?, exclude: parse_exclude(&v)? })
+}
+
+/// Parse a `/query_topk` body: the request plus the list length `t`.
+pub fn parse_topk(body: &[u8], dim: usize) -> Result<(QueryRequest, usize), ProtoError> {
+    let v = parse_body(body)?;
+    let t = v
+        .get("t")
+        .and_then(|t| t.as_usize())
+        .ok_or_else(|| ProtoError::bad("missing \"t\" (short-list length)"))?;
+    if t == 0 {
+        return Err(ProtoError::bad("\"t\" must be >= 1"));
+    }
+    Ok((QueryRequest { w: parse_w(&v, dim)?, exclude: parse_exclude(&v)? }, t))
+}
+
+/// Parse an `/insert` or `/remove` body: the point id.
+pub fn parse_id(body: &[u8]) -> Result<u32, ProtoError> {
+    let v = parse_body(body)?;
+    let id = v
+        .get("id")
+        .and_then(|x| x.as_usize())
+        .ok_or_else(|| ProtoError::bad("missing \"id\""))?;
+    u32::try_from(id).map_err(|_| ProtoError::bad(format!("id {id} exceeds u32")))
+}
+
+/// Serialize a `/query` body (the client half — loadgen and tests).
+pub fn query_body(w: &[f32]) -> String {
+    obj(vec![("w", Json::Arr(w.iter().map(|&x| Json::Num(x as f64)).collect()))])
+        .to_string_compact()
+}
+
+/// Serialize a `/query_topk` body.
+pub fn topk_body(w: &[f32], t: usize) -> String {
+    obj(vec![
+        ("w", Json::Arr(w.iter().map(|&x| Json::Num(x as f64)).collect())),
+        ("t", Json::from(t)),
+    ])
+    .to_string_compact()
+}
+
+/// Serialize an `/insert` / `/remove` body.
+pub fn id_body(id: u32) -> String {
+    obj(vec![("id", Json::from(id as usize))]).to_string_compact()
+}
+
+/// Render a [`QueryHit`] response.
+pub fn hit_json(hit: &QueryHit) -> Json {
+    let best = match hit.best {
+        Some((id, m)) => obj(vec![("id", Json::from(id)), ("margin", Json::Num(m as f64))]),
+        None => Json::Null,
+    };
+    obj(vec![
+        ("best", best),
+        ("scanned", Json::from(hit.scanned)),
+        ("probed", Json::from(hit.probed)),
+        ("nonempty", Json::from(hit.nonempty)),
+    ])
+}
+
+/// Parse a `/query` response back into a [`QueryHit`] (client half).
+pub fn parse_hit(body: &[u8]) -> Result<QueryHit, ProtoError> {
+    let v = parse_body(body)?;
+    let best = match v.get("best") {
+        None | Some(Json::Null) => None,
+        Some(b) => {
+            let id = b
+                .get("id")
+                .and_then(|x| x.as_usize())
+                .ok_or_else(|| ProtoError::bad("best.id missing"))?;
+            let m = b
+                .get("margin")
+                .and_then(|x| x.as_f64())
+                .ok_or_else(|| ProtoError::bad("best.margin missing"))?;
+            Some((id, m as f32))
+        }
+    };
+    let field = |k: &str| v.get(k).and_then(|x| x.as_usize());
+    Ok(QueryHit {
+        best,
+        scanned: field("scanned").ok_or_else(|| ProtoError::bad("scanned missing"))?,
+        probed: field("probed").ok_or_else(|| ProtoError::bad("probed missing"))?,
+        nonempty: v
+            .get("nonempty")
+            .and_then(|x| x.as_bool())
+            .ok_or_else(|| ProtoError::bad("nonempty missing"))?,
+    })
+}
+
+/// Render a `/query_topk` response.
+pub fn topk_json(hits: &[(usize, f32)]) -> Json {
+    obj(vec![(
+        "hits",
+        Json::Arr(
+            hits.iter()
+                .map(|&(id, m)| obj(vec![("id", Json::from(id)), ("margin", Json::Num(m as f64))]))
+                .collect(),
+        ),
+    )])
+}
+
+/// Parse a `/query_topk` response (client half).
+pub fn parse_topk_hits(body: &[u8]) -> Result<Vec<(usize, f32)>, ProtoError> {
+    let v = parse_body(body)?;
+    let arr = v
+        .get("hits")
+        .and_then(|h| h.as_arr())
+        .ok_or_else(|| ProtoError::bad("hits missing"))?;
+    arr.iter()
+        .map(|h| {
+            let id = h
+                .get("id")
+                .and_then(|x| x.as_usize())
+                .ok_or_else(|| ProtoError::bad("hit id missing"))?;
+            let m = h
+                .get("margin")
+                .and_then(|x| x.as_f64())
+                .ok_or_else(|| ProtoError::bad("hit margin missing"))?;
+            Ok((id, m as f32))
+        })
+        .collect()
+}
+
+/// Render an error body.
+pub fn error_json(msg: &str) -> String {
+    obj(vec![("error", Json::from(msg))]).to_string_compact()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn query_body_roundtrips_bit_exact() {
+        // adversarial f32s: subnormals, max, negative zero, odd fractions
+        let w = vec![1.0f32, -0.0, f32::MIN_POSITIVE, 3.4e38, -2.718_281_8, 1.0e-8];
+        let body = query_body(&w);
+        let req = parse_query(body.as_bytes(), w.len()).unwrap();
+        for (a, b) in w.iter().zip(req.w.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "f32 roundtrip must be exact");
+        }
+        assert!(req.exclude.is_none());
+    }
+
+    #[test]
+    fn dim_mismatch_rejected() {
+        let body = query_body(&[1.0, 2.0]);
+        let err = parse_query(body.as_bytes(), 3).unwrap_err();
+        assert_eq!(err.status, 400);
+        assert!(err.msg.contains("dims"));
+    }
+
+    #[test]
+    fn exclude_parsed() {
+        let body = r#"{"w":[1,2],"exclude":[3,5,5]}"#;
+        let req = parse_query(body.as_bytes(), 2).unwrap();
+        let ex = req.exclude.unwrap();
+        assert!(ex.contains(&3) && ex.contains(&5));
+        assert_eq!(ex.len(), 2);
+    }
+
+    #[test]
+    fn malformed_bodies_rejected() {
+        for bad in [
+            &b"not json"[..],
+            br#"{"w": "nope"}"#,
+            br#"{"w": [1, "x"]}"#,
+            br#"{}"#,
+            br#"{"w":[1,2],"exclude":[-1]}"#,
+            br#"{"w":[1e39, 0]}"#,
+            b"\xff\xfe",
+        ] {
+            assert!(parse_query(bad, 2).is_err(), "should reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn topk_body_roundtrip() {
+        let body = topk_body(&[0.5, -0.5], 7);
+        let (req, t) = parse_topk(body.as_bytes(), 2).unwrap();
+        assert_eq!(t, 7);
+        assert_eq!(req.w, vec![0.5, -0.5]);
+        assert!(parse_topk(br#"{"w":[1,2],"t":0}"#, 2).is_err());
+        assert!(parse_topk(br#"{"w":[1,2]}"#, 2).is_err());
+    }
+
+    #[test]
+    fn id_body_roundtrip() {
+        assert_eq!(parse_id(id_body(42).as_bytes()).unwrap(), 42);
+        assert!(parse_id(br#"{"id": -3}"#).is_err());
+        assert!(parse_id(br#"{"id": 1.5}"#).is_err());
+        assert!(parse_id(br#"{"id": 4294967296}"#).is_err());
+        assert!(parse_id(br#"{}"#).is_err());
+    }
+
+    #[test]
+    fn hit_roundtrips_bit_exact() {
+        let hit = QueryHit {
+            best: Some((123, 0.123_456_79_f32)),
+            scanned: 9,
+            probed: 4,
+            nonempty: true,
+        };
+        let back = parse_hit(hit_json(&hit).to_string_compact().as_bytes()).unwrap();
+        assert_eq!(back.best.unwrap().0, 123);
+        assert_eq!(
+            back.best.unwrap().1.to_bits(),
+            hit.best.unwrap().1.to_bits(),
+            "margin must round-trip exactly"
+        );
+        assert_eq!(back.scanned, 9);
+        assert_eq!(back.probed, 4);
+        assert!(back.nonempty);
+        // empty hit
+        let empty = QueryHit::default();
+        let back = parse_hit(hit_json(&empty).to_string_compact().as_bytes()).unwrap();
+        assert!(back.best.is_none());
+        assert!(!back.nonempty);
+    }
+
+    #[test]
+    fn topk_hits_roundtrip() {
+        let hits = vec![(1usize, 0.25f32), (7, 0.5), (2, f32::MIN_POSITIVE)];
+        let back =
+            parse_topk_hits(topk_json(&hits).to_string_compact().as_bytes()).unwrap();
+        assert_eq!(back.len(), 3);
+        for ((ia, ma), (ib, mb)) in hits.iter().zip(back.iter()) {
+            assert_eq!(ia, ib);
+            assert_eq!(ma.to_bits(), mb.to_bits());
+        }
+    }
+
+    #[test]
+    fn error_json_is_valid() {
+        let e = error_json("boom \"quoted\"");
+        let v = Json::parse(&e).unwrap();
+        assert_eq!(v.get("error").unwrap().as_str(), Some("boom \"quoted\""));
+    }
+}

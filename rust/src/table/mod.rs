@@ -89,17 +89,13 @@ impl HyperplaneIndex {
         self.buckets.len()
     }
 
-    /// Memory footprint estimate in bytes: code words, the bucket map's
-    /// table (key + `Vec` header + control byte per slot, at allocated
-    /// capacity) and the bucket entry payloads at their allocated
-    /// capacity. Counting capacities rather than lengths is what makes the
-    /// Tables-efficiency numbers honest — `Vec` growth doubling means the
-    /// resident payload can be up to 2× the live entry count.
+    /// Memory footprint estimate in bytes: code words plus the bucket
+    /// map at allocated capacity
+    /// ([`crate::hash::fasthash::bucket_map_bytes`] — the accounting
+    /// shared with [`LshIndex`] and the online shards, so cross-index
+    /// memory comparisons stay apples-to-apples).
     pub fn memory_bytes(&self) -> usize {
-        let bucket_payload: usize = self.buckets.values().map(|v| v.capacity() * 4).sum();
-        self.codes.codes.capacity() * 8
-            + self.buckets.capacity() * (8 + std::mem::size_of::<Vec<u32>>() + 1)
-            + bucket_payload
+        self.codes.codes.capacity() * 8 + crate::hash::fasthash::bucket_map_bytes(&self.buckets)
     }
 
     /// Collect candidate ids within the Hamming ball of `lookup_code`,
@@ -219,7 +215,11 @@ impl HyperplaneIndex {
             .filter(|&id| eligible(id))
             .map(|id| (id, crate::linalg::margin_feat(feats.row(id), w, w_norm)))
             .collect();
-        scored.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal));
+        // ties broken by id: identical margins (duplicate rows) must
+        // order the same here and in the online index's query_topk
+        scored.sort_by(|a, b| {
+            a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal).then(a.0.cmp(&b.0))
+        });
         scored.truncate(t);
         scored
     }
@@ -277,23 +277,58 @@ impl<H: HashFamily> LshIndex<H> {
     pub fn build(
         feats: &FeatureStore,
         n_tables: usize,
-        mut make: impl FnMut(usize) -> H,
+        make: impl FnMut(usize) -> H,
     ) -> Self {
-        let mut tables = Vec::with_capacity(n_tables);
-        for t in 0..n_tables {
-            let fam = make(t);
-            let codes = fam.encode_all(feats);
-            let mut buckets: CodeMap<Vec<u32>> = CodeMap::default();
-            for (i, &c) in codes.codes.iter().enumerate() {
-                buckets.entry(c).or_default().push(i as u32);
-            }
-            tables.push((fam, buckets));
-        }
+        Self::build_with(feats, n_tables, make, &Pool::serial())
+    }
+
+    /// [`Self::build`] with the per-table encode + bucket work fanned out
+    /// over `pool` — the multi-table analogue of
+    /// [`HyperplaneIndex::build_with`]. Families are drawn serially in
+    /// table order first (`make` may hold a sequential RNG), so the
+    /// resulting tables are identical for any worker count.
+    pub fn build_with(
+        feats: &FeatureStore,
+        n_tables: usize,
+        make: impl FnMut(usize) -> H,
+        pool: &Pool,
+    ) -> Self {
+        let fams: Vec<H> = (0..n_tables).map(make).collect();
+        let bucket_sets: Vec<CodeMap<Vec<u32>>> = pool
+            .map(n_tables, 1, |range| {
+                range
+                    .map(|t| {
+                        let codes = fams[t].encode_all(feats);
+                        let mut buckets: CodeMap<Vec<u32>> = CodeMap::default();
+                        for (i, &c) in codes.codes.iter().enumerate() {
+                            buckets.entry(c).or_default().push(i as u32);
+                        }
+                        buckets
+                    })
+                    .collect::<Vec<_>>()
+            })
+            .into_iter()
+            .flatten()
+            .collect();
+        let tables = fams.into_iter().zip(bucket_sets).collect();
         LshIndex { tables, n: feats.len() }
     }
 
     pub fn n_tables(&self) -> usize {
         self.tables.len()
+    }
+
+    /// Memory footprint estimate mirroring
+    /// [`HyperplaneIndex::memory_bytes`]'s accounting (the shared
+    /// [`crate::hash::fasthash::bucket_map_bytes`] formula), summed over
+    /// all L tables. The families' projection parameters are not counted
+    /// (the compact table does not count its family either) — this
+    /// measures the L× table storage Theorem 2 pays for.
+    pub fn memory_bytes(&self) -> usize {
+        self.tables
+            .iter()
+            .map(|(_, buckets)| crate::hash::fasthash::bucket_map_bytes(buckets))
+            .sum()
     }
 
     /// Query all tables; candidates are deduplicated with a visit mark.
@@ -330,6 +365,26 @@ impl<H: HashFamily> LshIndex<H> {
             }
         }
         QueryHit { best, scanned, probed: self.tables.len(), nonempty: any }
+    }
+
+    /// Answer a batch of hyperplane queries with the per-query work
+    /// fanned out over `pool` — the multi-table analogue of
+    /// [`HyperplaneIndex::query_batch`]. Queries are independent, so hits
+    /// are bit-identical to a serial loop, in query order.
+    pub fn query_batch(
+        &self,
+        queries: &[Vec<f32>],
+        feats: &FeatureStore,
+        pool: &Pool,
+    ) -> Vec<QueryHit> {
+        pool.map(queries.len(), QUERY_CHUNK, |range| {
+            range
+                .map(|q| self.query_filtered(&queries[q], feats, |_| true))
+                .collect::<Vec<_>>()
+        })
+        .into_iter()
+        .flatten()
+        .collect()
     }
 }
 
@@ -485,8 +540,31 @@ mod tests {
         assert_eq!(top[0].0, single.best.unwrap().0);
     }
 
-    // build_with / query_batch parity across worker counts is covered by
-    // the integration suite in rust/tests/batch_parallel.rs.
+    // build_with / query_batch parity across worker counts (for both
+    // HyperplaneIndex and LshIndex) is covered by the integration suite
+    // in rust/tests/batch_parallel.rs.
+
+    #[test]
+    fn lsh_memory_bytes_counts_every_table() {
+        let mut rng = Rng::seed_from_u64(43);
+        let ds = test_blobs(2000, 16, 3, &mut rng);
+        let mut seeds: Vec<u64> = (0..6).map(|_| rng.next_u64()).collect();
+        let lsh = LshIndex::build(ds.features(), 6, |t| {
+            BhHash::sample(16, 8, &mut Rng::seed_from_u64(seeds[t]))
+        });
+        seeds.clear();
+        // floor: every entry id (4B) appears in every table
+        assert!(
+            lsh.memory_bytes() >= 6 * 2000 * 4,
+            "memory_bytes {} under-reports the L x n entry payload",
+            lsh.memory_bytes()
+        );
+        // the single compact table reports less than L tables over the
+        // same points — the Theorem-2 storage argument in numbers
+        let fam = BhHash::sample(16, 8, &mut rng);
+        let compact = HyperplaneIndex::build(&fam, ds.features(), 2);
+        assert!(lsh.memory_bytes() > compact.memory_bytes());
+    }
 
     #[test]
     fn memory_bytes_counts_bucket_payloads() {

@@ -134,6 +134,31 @@ fn lbh_training_parity_and_projection_bits() {
 }
 
 #[test]
+fn lsh_multi_table_build_and_query_batch_parity() {
+    let mut rng = Rng::seed_from_u64(6);
+    let ds = test_blobs(2_000, 16, 3, &mut rng);
+    let mut seeds: Vec<u64> = (0..10).map(|_| rng.next_u64()).collect();
+    let make = |t: usize| BhHash::sample(16, 8, &mut Rng::seed_from_u64(seeds[t]));
+    let serial = chh::table::LshIndex::build(ds.features(), 10, make);
+    let queries: Vec<Vec<f32>> = (0..24).map(|_| unit_vec(&mut rng, 16)).collect();
+    let serial_hits = serial.query_batch(&queries, ds.features(), &Pool::serial());
+    for w in WORKER_COUNTS {
+        let pool = Pool::new(w);
+        let idx = chh::table::LshIndex::build_with(ds.features(), 10, make, &pool);
+        assert_eq!(idx.n_tables(), 10);
+        assert_eq!(idx.memory_bytes(), serial.memory_bytes(), "workers={w}");
+        let hits = idx.query_batch(&queries, ds.features(), &pool);
+        assert_eq!(hits.len(), serial_hits.len());
+        for (h, s) in hits.iter().zip(serial_hits.iter()) {
+            assert_eq!(h.best, s.best, "workers={w}");
+            assert_eq!(h.scanned, s.scanned);
+            assert_eq!(h.nonempty, s.nonempty);
+        }
+    }
+    seeds.clear();
+}
+
+#[test]
 fn sharded_fanout_parity() {
     let mut rng = Rng::seed_from_u64(5);
     let ds = test_blobs(1_200, 16, 3, &mut rng);

@@ -1,0 +1,301 @@
+//! End-to-end tests of the HTTP serving front-end: a live server on an
+//! ephemeral port, driven by a raw TCP client. The core assertion is the
+//! acceptance criterion of the serving subsystem — responses that crossed
+//! the wire (JSON both ways, coalesced through the micro-batcher) are
+//! **bit-identical** to direct `query_batch_pooled` calls on the same
+//! index — plus mutation round-trips, malformed-input behavior and
+//! graceful shutdown.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use chh::coordinator::{OnlineRouter, QueryRequest, Router};
+use chh::data::test_blobs;
+use chh::hash::{BhHash, HashFamily};
+use chh::online::{QueryBudget, ShardedIndex};
+use chh::par::Pool;
+use chh::rng::Rng;
+use chh::server::{protocol, BatcherConfig, HttpClient, Server, ServerConfig, Stack};
+use chh::table::HyperplaneIndex;
+use chh::testing::unit_vec;
+
+const DIM: usize = 16;
+
+fn server_cfg() -> ServerConfig {
+    ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        max_conns: 32,
+        batch: BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            queue_cap: 256,
+        },
+        pool_workers: 2,
+        // short idle reap so shutdown never waits long on parked clients
+        idle_timeout: Duration::from_millis(300),
+    }
+}
+
+fn static_stack(n: usize, seed: u64) -> (Stack, Arc<Router>) {
+    let mut rng = Rng::seed_from_u64(seed);
+    let ds = test_blobs(n, DIM, 3, &mut rng);
+    let fam: Arc<dyn HashFamily> = Arc::new(BhHash::sample(DIM, 10, &mut rng));
+    let idx = Arc::new(HyperplaneIndex::build(fam.as_ref(), ds.features(), 4));
+    let feats = Arc::new(ds.features().clone());
+    let router = Arc::new(Router::new(fam, idx, feats, 1, 16));
+    (Stack::Static(router.clone()), router)
+}
+
+fn online_stack(n: usize, seed: u64) -> (Stack, Arc<OnlineRouter>) {
+    let mut rng = Rng::seed_from_u64(seed);
+    let ds = test_blobs(n, DIM, 3, &mut rng);
+    let fam: Arc<dyn HashFamily> = Arc::new(BhHash::sample(DIM, 10, &mut rng));
+    let codes = fam.encode_all(ds.features());
+    let idx = Arc::new(ShardedIndex::from_codes(&codes, 4, 3));
+    let feats = Arc::new(ds.features().clone());
+    let router = Arc::new(OnlineRouter::new(
+        fam,
+        idx,
+        feats,
+        1,
+        16,
+        QueryBudget::new(256, 64),
+    ));
+    (Stack::Online(router.clone()), router)
+}
+
+fn assert_hits_identical(wire: &chh::table::QueryHit, direct: &chh::table::QueryHit, ctx: &str) {
+    match (wire.best, direct.best) {
+        (Some((wi, wm)), Some((di, dm))) => {
+            assert_eq!(wi, di, "{ctx}: best id");
+            assert_eq!(wm.to_bits(), dm.to_bits(), "{ctx}: margin must be bit-identical");
+        }
+        (None, None) => {}
+        (a, b) => panic!("{ctx}: best mismatch {a:?} vs {b:?}"),
+    }
+    assert_eq!(wire.scanned, direct.scanned, "{ctx}: scanned");
+    assert_eq!(wire.probed, direct.probed, "{ctx}: probed");
+    assert_eq!(wire.nonempty, direct.nonempty, "{ctx}: nonempty");
+}
+
+#[test]
+fn static_wire_responses_match_query_batch_pooled() {
+    let (stack, router) = static_stack(500, 11);
+    let handle = Server::spawn(stack, server_cfg()).expect("spawn server");
+    let addr = handle.addr().to_string();
+    let mut rng = Rng::seed_from_u64(99);
+    let ws: Vec<Vec<f32>> = (0..24).map(|_| unit_vec(&mut rng, DIM)).collect();
+    let mut client = HttpClient::connect_retry(&addr, Duration::from_secs(5)).unwrap();
+    client.set_timeout(Duration::from_secs(10)).unwrap();
+    let mut wire_hits = Vec::new();
+    for w in &ws {
+        let resp = client.post("/query", &protocol::query_body(w)).expect("post /query");
+        assert_eq!(resp.status, 200);
+        wire_hits.push(protocol::parse_hit(&resp.body).expect("parse hit"));
+    }
+    drop(client);
+    let reqs: Vec<QueryRequest> =
+        ws.iter().map(|w| QueryRequest { w: w.clone(), exclude: None }).collect();
+    let direct = router.query_batch_pooled(&reqs, &Pool::new(2));
+    for (i, (wh, dh)) in wire_hits.iter().zip(direct.iter()).enumerate() {
+        assert_hits_identical(wh, dh, &format!("static query {i}"));
+    }
+    handle.shutdown();
+}
+
+#[test]
+fn concurrent_clients_through_the_batcher_stay_bit_identical() {
+    let (stack, router) = static_stack(600, 21);
+    let handle = Server::spawn(stack, server_cfg()).expect("spawn server");
+    let addr = handle.addr().to_string();
+    let threads = 6;
+    let per = 15;
+    let mut joins = Vec::new();
+    for t in 0..threads {
+        let addr = addr.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Rng::seed_from_u64(1000 + t as u64);
+            let mut client = HttpClient::connect_retry(&addr, Duration::from_secs(5)).unwrap();
+            client.set_timeout(Duration::from_secs(10)).unwrap();
+            let mut out = Vec::new();
+            for _ in 0..per {
+                let w = unit_vec(&mut rng, DIM);
+                let resp =
+                    client.post("/query", &protocol::query_body(&w)).expect("post /query");
+                assert_eq!(resp.status, 200);
+                out.push((w, protocol::parse_hit(&resp.body).expect("parse hit")));
+            }
+            out
+        }));
+    }
+    let all: Vec<(Vec<f32>, chh::table::QueryHit)> =
+        joins.into_iter().flat_map(|j| j.join().expect("client thread")).collect();
+    assert_eq!(all.len(), threads * per);
+    // every wire answer — whatever batch it was coalesced into — must be
+    // bit-identical to the direct pooled call for the same hyperplane
+    let reqs: Vec<QueryRequest> =
+        all.iter().map(|(w, _)| QueryRequest { w: w.clone(), exclude: None }).collect();
+    let direct = router.query_batch_pooled(&reqs, &Pool::new(3));
+    for (i, ((_, wh), dh)) in all.iter().zip(direct.iter()).enumerate() {
+        assert_hits_identical(wh, dh, &format!("concurrent query {i}"));
+    }
+    // the batcher processed every query exactly once
+    let mut stats_client = HttpClient::connect_retry(&addr, Duration::from_secs(5)).unwrap();
+    let resp = stats_client.get("/stats").expect("get /stats");
+    let v = chh::jsonio::Json::parse_bytes(&resp.body).expect("stats json");
+    let batcher = v.get("batcher").expect("batcher section");
+    assert_eq!(
+        batcher.get("flushed").and_then(|x| x.as_usize()),
+        Some(threads * per),
+        "batcher must flush every submitted query exactly once"
+    );
+    let batches = batcher.get("batches").and_then(|x| x.as_usize()).unwrap();
+    assert!(batches <= threads * per, "batch count can never exceed query count");
+    drop(stats_client);
+    handle.shutdown();
+}
+
+#[test]
+fn online_wire_parity_insert_remove_and_topk() {
+    let (stack, router) = online_stack(400, 31);
+    let handle = Server::spawn(stack, server_cfg()).expect("spawn server");
+    let addr = handle.addr().to_string();
+    let mut rng = Rng::seed_from_u64(77);
+    let mut client = HttpClient::connect_retry(&addr, Duration::from_secs(5)).unwrap();
+    client.set_timeout(Duration::from_secs(10)).unwrap();
+
+    // wire vs direct parity on the online stack
+    let ws: Vec<Vec<f32>> = (0..10).map(|_| unit_vec(&mut rng, DIM)).collect();
+    let mut wire_hits = Vec::new();
+    for w in &ws {
+        let resp = client.post("/query", &protocol::query_body(w)).expect("post /query");
+        assert_eq!(resp.status, 200);
+        wire_hits.push(protocol::parse_hit(&resp.body).expect("parse hit"));
+    }
+    let reqs: Vec<QueryRequest> =
+        ws.iter().map(|w| QueryRequest { w: w.clone(), exclude: None }).collect();
+    let direct = router.query_batch_pooled(&reqs, &Pool::new(2));
+    for (i, (wh, dh)) in wire_hits.iter().zip(direct.iter()).enumerate() {
+        assert_hits_identical(wh, dh, &format!("online query {i}"));
+    }
+
+    // topk over the wire == direct index call, bit for bit
+    let w = ws[0].clone();
+    let resp = client.post("/query_topk", &protocol::topk_body(&w, 7)).expect("post topk");
+    assert_eq!(resp.status, 200);
+    let wire_top = protocol::parse_topk_hits(&resp.body).expect("parse topk");
+    let direct_top = router.index().query_topk(
+        router.family().as_ref(),
+        &w,
+        router.feats(),
+        7,
+        router.budget(),
+        |_| true,
+    );
+    assert_eq!(wire_top.len(), direct_top.len());
+    for ((wi, wm), (di, dm)) in wire_top.iter().zip(direct_top.iter()) {
+        assert_eq!(wi, di);
+        assert_eq!(wm.to_bits(), dm.to_bits());
+    }
+
+    // remove the best hit over the wire; it must vanish from the index
+    let (best, _) = wire_hits[0].best.expect("small blob query hits");
+    let resp = client.post("/remove", &protocol::id_body(best as u32)).expect("post remove");
+    assert_eq!(resp.status, 200);
+    assert!(!router.index().contains(best as u32), "removed over the wire");
+    let resp = client.post("/query", &protocol::query_body(&ws[0])).expect("re-query");
+    let requeried = protocol::parse_hit(&resp.body).expect("parse hit");
+    assert_ne!(
+        requeried.best.map(|(i, _)| i),
+        Some(best),
+        "removed id must not be served again"
+    );
+    // double remove reports removed=false
+    let resp = client.post("/remove", &protocol::id_body(best as u32)).expect("re-remove");
+    let v = chh::jsonio::Json::parse_bytes(&resp.body).unwrap();
+    assert_eq!(v.get("removed").and_then(|x| x.as_bool()), Some(false));
+
+    // insert it back
+    let resp = client.post("/insert", &protocol::id_body(best as u32)).expect("post insert");
+    assert_eq!(resp.status, 200);
+    assert!(router.index().contains(best as u32), "re-inserted over the wire");
+    // out-of-store ids are rejected
+    let resp = client.post("/insert", &protocol::id_body(1_000_000)).expect("bad insert");
+    assert_eq!(resp.status, 400);
+
+    drop(client);
+    handle.shutdown();
+}
+
+#[test]
+fn malformed_requests_get_clean_errors() {
+    let (stack, _router) = static_stack(200, 41);
+    let handle = Server::spawn(stack, server_cfg()).expect("spawn server");
+    let addr = handle.addr().to_string();
+
+    // request-level garbage: 400 then close
+    {
+        use std::io::{Read, Write};
+        let mut s = std::net::TcpStream::connect(&addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        s.write_all(b"total garbage\r\n\r\n").unwrap();
+        let mut buf = Vec::new();
+        s.read_to_end(&mut buf).unwrap();
+        let text = String::from_utf8_lossy(&buf);
+        assert!(text.starts_with("HTTP/1.1 400"), "got {text:?}");
+    }
+
+    let mut client = HttpClient::connect_retry(&addr, Duration::from_secs(5)).unwrap();
+    client.set_timeout(Duration::from_secs(5)).unwrap();
+    // route-level errors keep the connection usable
+    let resp = client.post("/no_such_route", "{}").unwrap();
+    assert_eq!(resp.status, 404);
+    let resp = client.get("/query").unwrap();
+    assert_eq!(resp.status, 405, "GET on a POST route");
+    let resp = client.post("/query", "{not json").unwrap();
+    assert_eq!(resp.status, 400);
+    let resp = client.post("/query", &protocol::query_body(&[1.0; 3])).unwrap();
+    assert_eq!(resp.status, 400, "dimension mismatch");
+    let resp = client.post("/query", r#"{"w": [[1],[2]]}"#).unwrap();
+    assert_eq!(resp.status, 400, "non-numeric w");
+    // the static stack refuses mutations
+    let resp = client.post("/insert", &protocol::id_body(1)).unwrap();
+    assert_eq!(resp.status, 400);
+    // deeply nested payloads are rejected, not stack-overflowed
+    let deep = format!("{}1{}", "[".repeat(4000), "]".repeat(4000));
+    let resp = client.post("/query", &deep).unwrap();
+    assert_eq!(resp.status, 400);
+    // and a good request still works on the same connection
+    let resp = client.post("/query", &protocol::query_body(&[0.5; DIM])).unwrap();
+    assert_eq!(resp.status, 200);
+    let resp = client.get("/healthz").unwrap();
+    assert_eq!(resp.status, 200);
+    drop(client);
+    handle.shutdown();
+}
+
+#[test]
+fn graceful_shutdown_over_http() {
+    let (stack, _router) = static_stack(200, 51);
+    let handle = Server::spawn(stack, server_cfg()).expect("spawn server");
+    let addr = handle.addr().to_string();
+    let mut client = HttpClient::connect_retry(&addr, Duration::from_secs(5)).unwrap();
+    client.set_timeout(Duration::from_secs(5)).unwrap();
+    // a query first, so shutdown happens on a warm server
+    let resp = client.post("/query", &protocol::query_body(&[0.25; DIM])).unwrap();
+    assert_eq!(resp.status, 200);
+    let resp = client.post("/shutdown", "").expect("post /shutdown");
+    assert_eq!(resp.status, 200);
+    assert!(!resp.keep_alive, "shutdown response closes the connection");
+    drop(client);
+    // wait() must return: acceptor poked, connections drained, batcher
+    // joined — a hang here fails the test by timeout
+    handle.wait();
+    // the listener is gone; fresh connections are refused (allow a beat
+    // for the OS to tear the socket down)
+    std::thread::sleep(Duration::from_millis(50));
+    assert!(
+        std::net::TcpStream::connect(&addr).is_err(),
+        "listener must be closed after shutdown"
+    );
+}
