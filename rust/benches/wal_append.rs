@@ -1,0 +1,138 @@
+//! WAL append throughput: the durable-insert hot path under each fsync
+//! policy, plus group-commit behavior with concurrent appenders.
+//!
+//! Run: `cargo bench --bench wal_append`
+//! (`CHH_BENCH_FULL=1` runs 5× the ops; `--json <path>` writes records.)
+//!
+//! What to look for: `always` is fsync-bound per *batch* — with one
+//! appender that means one fsync per op, with N concurrent appenders
+//! group commit amortizes one fsync over the whole burst, so ops/s
+//! should climb with concurrency while mean batch size grows.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use chh::bench::JsonReport;
+use chh::hash::codes::mask;
+use chh::jsonio::Json;
+use chh::online::ShardedIndex;
+use chh::rng::Rng;
+use chh::wal::{DurableIndex, FsyncPolicy, WalConfig};
+
+fn durable_in(dir: std::path::PathBuf, fsync: FsyncPolicy) -> DurableIndex {
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = WalConfig { dir, fsync, segment_bytes: 64 << 20 };
+    DurableIndex::create(Arc::new(ShardedIndex::new(16, 2, 4)), &cfg)
+        .expect("create bench wal dir")
+}
+
+fn main() {
+    let mut json = JsonReport::new("wal_append");
+    let full = chh::bench::full_scale();
+    let n_ops = if full { 20_000 } else { 4_000 };
+    let base = std::env::temp_dir().join(format!("chh_bench_wal_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+    std::fs::create_dir_all(&base).expect("bench tmp dir");
+    println!("wal_append: {n_ops} acknowledged ops per case  ({})", base.display());
+
+    // ── single appender per policy ───────────────────────────────────
+    let policies =
+        [FsyncPolicy::Always, FsyncPolicy::EveryN(64), FsyncPolicy::IntervalMs(5)];
+    let mut rows = Vec::new();
+    for policy in policies {
+        let dir = base.join(format!("seq_{policy}").replace(':', "_"));
+        let d = durable_in(dir, policy);
+        let mut rng = Rng::seed_from_u64(1);
+        let t0 = Instant::now();
+        for i in 0..n_ops {
+            d.insert((i % 65_536) as u32, rng.next_u64() & mask(16)).unwrap();
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let st = d.wal_stats();
+        let fsyncs = st.fsyncs.load(std::sync::atomic::Ordering::Relaxed);
+        let bytes = st.bytes.load(std::sync::atomic::Ordering::Relaxed);
+        rows.push(vec![
+            policy.to_string(),
+            format!("{:.0}", n_ops as f64 / secs),
+            format!("{:.2}", secs * 1e6 / n_ops as f64),
+            format!("{fsyncs}"),
+            format!("{bytes}"),
+        ]);
+        json.push(
+            "append_seq",
+            vec![
+                ("policy", Json::from(policy.to_string())),
+                ("ops", Json::from(n_ops)),
+                ("ops_per_s", Json::Num(n_ops as f64 / secs)),
+                ("mean_us", Json::Num(secs * 1e6 / n_ops as f64)),
+                ("fsyncs", Json::from(fsyncs as usize)),
+                ("wal_bytes", Json::from(bytes as usize)),
+            ],
+        );
+        drop(d);
+    }
+    chh::report::print_rows(
+        "single appender: durable insert (journal + apply + ack)",
+        &["fsync", "ops/s", "mean(us)", "fsyncs", "wal bytes"],
+        &rows,
+    );
+
+    // ── concurrent appenders: group commit under fsync=always ────────
+    let mut rows = Vec::new();
+    for &threads in &[1usize, 2, 4, 8] {
+        let dir = base.join(format!("conc_{threads}"));
+        let d = Arc::new(durable_in(dir, FsyncPolicy::Always));
+        let per = n_ops / threads;
+        let t0 = Instant::now();
+        let joins: Vec<_> = (0..threads)
+            .map(|t| {
+                let d = d.clone();
+                std::thread::spawn(move || {
+                    let mut rng = Rng::seed_from_u64(7 + t as u64);
+                    for i in 0..per {
+                        d.insert(((t * per + i) % 65_536) as u32, rng.next_u64() & mask(16))
+                            .unwrap();
+                    }
+                })
+            })
+            .collect();
+        for j in joins {
+            j.join().expect("bench appender");
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let total = per * threads;
+        let (mean_batch, p95_batch, max_batch, _) = d.wal_stats().batch_stats();
+        let fsyncs = d.wal_stats().fsyncs.load(std::sync::atomic::Ordering::Relaxed);
+        rows.push(vec![
+            format!("{threads}"),
+            format!("{:.0}", total as f64 / secs),
+            format!("{mean_batch:.2}"),
+            format!("{p95_batch:.0}"),
+            format!("{max_batch:.0}"),
+            format!("{fsyncs}"),
+        ]);
+        json.push(
+            "group_commit",
+            vec![
+                ("threads", Json::from(threads)),
+                ("ops", Json::from(total)),
+                ("ops_per_s", Json::Num(total as f64 / secs)),
+                ("mean_batch", Json::Num(mean_batch)),
+                ("p95_batch", Json::Num(p95_batch)),
+                ("max_batch", Json::Num(max_batch)),
+                ("fsyncs", Json::from(fsyncs as usize)),
+            ],
+        );
+        drop(d);
+    }
+    chh::report::print_rows(
+        "group commit: concurrent appenders, fsync=always (one fsync per burst)",
+        &["threads", "ops/s", "mean batch", "p95 batch", "max batch", "fsyncs"],
+        &rows,
+    );
+
+    let _ = std::fs::remove_dir_all(&base);
+    if let Some(path) = json.finish().expect("write --json results") {
+        println!("json results → {}", path.display());
+    }
+}

@@ -19,8 +19,10 @@
 //!   [`online`]), a data-parallel batch engine for the offline hot paths
 //!   (encode / batch query / train / eval, see [`par`] and
 //!   `docs/PARALLEL.md`), an HTTP serving front-end with dynamic
-//!   micro-batching (see [`server`] and `docs/SERVING.md`), and the PJRT
-//!   runtime that executes AOT-compiled XLA artifacts.
+//!   micro-batching (see [`server`] and `docs/SERVING.md`), a durability
+//!   subsystem for the online index — write-ahead log, background
+//!   snapshots, crash recovery (see [`wal`] and `docs/DURABILITY.md`) —
+//!   and the PJRT runtime that executes AOT-compiled XLA artifacts.
 //! * **L2 (python/compile/model.py)** — JAX graphs for batch encoding,
 //!   LBH Nesterov training steps, margin scans and Hamming ranking, lowered
 //!   once to HLO text by `make artifacts`.
@@ -98,6 +100,7 @@ pub mod sparse;
 pub mod svm;
 pub mod table;
 pub mod testing;
+pub mod wal;
 
 /// Convenience re-exports for downstream users and the examples.
 pub mod prelude {
@@ -110,4 +113,5 @@ pub mod prelude {
     pub use crate::rng::Rng;
     pub use crate::svm::{LinearSvm, SvmConfig};
     pub use crate::table::{HyperplaneIndex, QueryHit};
+    pub use crate::wal::{DurableIndex, FsyncPolicy, WalConfig};
 }

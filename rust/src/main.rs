@@ -8,6 +8,8 @@
 //! * `serve`           — run the hyperplane-query router on synthetic load
 //! * `serve-online`    — sharded dynamic index under 50/50 churn + queries
 //! * `serve-http`      — HTTP front-end with dynamic micro-batching
+//!   (with `--wal-dir`: WAL-backed durability and crash recovery)
+//! * `recover`         — rebuild an online index from a WAL directory
 //! * `loadgen`         — open/closed-loop load generator for serve-http
 //! * `encode`          — batch-encode a synthetic dataset (native vs PJRT)
 
@@ -39,6 +41,7 @@ fn main() {
         "serve" => cmd_serve(&rest),
         "serve-online" => cmd_serve_online(&rest),
         "serve-http" => cmd_serve_http(&rest),
+        "recover" => cmd_recover(&rest),
         "loadgen" => cmd_loadgen(&rest),
         "encode" => cmd_encode(&rest),
         "eval" => cmd_eval(&rest),
@@ -68,7 +71,8 @@ fn usage() -> String {
        train-hash    train LBH projections, print diagnostics\n\
        serve         hyperplane-query router under synthetic load\n\
        serve-online  sharded dynamic index under churn + query load\n\
-       serve-http    HTTP/1.1 front-end with dynamic micro-batching\n\
+       serve-http    HTTP/1.1 front-end with dynamic micro-batching (--wal-dir: durability)\n\
+       recover       rebuild an online index from a WAL directory\n\
        loadgen       open/closed-loop load generator for serve-http\n\
        encode        batch-encode a synthetic dataset (native vs PJRT)\n\
        eval          retrieval quality (recall@T, margin ratio) per family\n\
@@ -650,8 +654,29 @@ fn cmd_serve_online(rest: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Resolve the online serving budget: an explicit `--probes` wins;
+/// `--probes 0` defers to the budget stored with the index (restored
+/// from a snapshot / WAL recovery), falling back to the full Hamming
+/// ball when none was stored.
+fn resolve_budget(
+    p: &chh::cli::Parsed,
+    index: &chh::online::ShardedIndex,
+) -> anyhow::Result<chh::online::QueryBudget> {
+    use chh::online::QueryBudget;
+    let stored = index.default_budget();
+    let cli_top = p.usize("top")?.max(1);
+    Ok(match p.usize("probes")? {
+        0 if stored.probes != usize::MAX => QueryBudget::new(
+            stored.probes,
+            if stored.top != usize::MAX { stored.top } else { cli_top },
+        ),
+        0 => QueryBudget::new(index.planner().full_volume() as usize, cli_top),
+        v => QueryBudget::new(v, cli_top),
+    })
+}
+
 fn cmd_serve_http(rest: &[String]) -> anyhow::Result<()> {
-    use chh::online::{QueryBudget, ShardedIndex};
+    use chh::online::ShardedIndex;
     use chh::server::{BatcherConfig, Server, ServerConfig, Stack};
     let args = ExperimentConfig::cli_opts(Args::new(
         "chh serve-http",
@@ -667,6 +692,13 @@ fn cmd_serve_http(rest: &[String]) -> anyhow::Result<()> {
     .opt("max-wait-us", "200", "micro-batcher: flush once the oldest query waited this long")
     .opt("queue-cap", "1024", "micro-batcher admission queue bound (overflow -> 503)")
     .opt("max-conns", "256", "concurrent connection cap (overflow -> 503)")
+    .opt("wal-dir", "", "online: durable directory — journal mutations, recover on restart")
+    .opt("fsync", "always", "wal durability of acked mutations: always | every:<n> | interval:<ms>")
+    .opt(
+        "snapshot-every",
+        "0",
+        "wal: background checkpoint after this many mutations (0 = shutdown only)",
+    )
     .opt("for-secs", "0", "serve this long then exit (0 = until POST /shutdown)");
     let p = args.parse(rest).map_err(|h| anyhow::anyhow!("{h}"))?;
     let cfg = ExperimentConfig::from_parsed(&p)?;
@@ -677,6 +709,12 @@ fn cmd_serve_http(rest: &[String]) -> anyhow::Result<()> {
     let feats = Arc::new(data.features().clone());
     let pool = chh::par::Pool::new(cfg.workers);
     let mode = p.str("mode").to_string();
+    let wal_dir = p.str("wal-dir").to_string();
+    anyhow::ensure!(
+        wal_dir.is_empty() || mode == "online",
+        "--wal-dir requires --mode online (the static index is immutable)"
+    );
+    let mut durability: Option<chh::server::Durability> = None;
     let stack = match mode.as_str() {
         "static" => {
             let index = Arc::new(HyperplaneIndex::build_with(
@@ -692,21 +730,19 @@ fn cmd_serve_http(rest: &[String]) -> anyhow::Result<()> {
             Stack::Static(Arc::new(router))
         }
         "online" => {
-            let snap = p.str("snapshot");
-            let index = if snap.is_empty() {
-                let index =
-                    ShardedIndex::new(cfg.bits(), cfg.radius(), p.usize("shards")?.max(1));
-                for i in 0..data.len() {
-                    index.insert_point(fam.as_ref(), i as u32, data.features().row(i));
-                }
-                index.compact();
-                index
+            let snapshot_every = p.u64("snapshot-every")?;
+            let wal_cfg = if wal_dir.is_empty() {
+                None
             } else {
-                let index = chh::persist::load_sharded(std::path::Path::new(snap))?;
+                let mut c = chh::wal::WalConfig::new(&wal_dir);
+                c.fsync = p.str("fsync").parse()?;
+                Some(c)
+            };
+            let validate = |index: &ShardedIndex, what: &str| -> anyhow::Result<()> {
                 anyhow::ensure!(
                     index.bits() == fam.bits(),
-                    "snapshot holds {}-bit codes but the sampled family emits {} \
-                     (use the profile/bits/seed the snapshot was built with)",
+                    "{what} holds {}-bit codes but the sampled family emits {} \
+                     (use the profile/bits/seed it was built with)",
                     index.bits(),
                     fam.bits()
                 );
@@ -715,20 +751,75 @@ fn cmd_serve_http(rest: &[String]) -> anyhow::Result<()> {
                     for (id, _) in s.live_entries() {
                         anyhow::ensure!(
                             (id as usize) < n,
-                            "snapshot id {id} outside the serving feature store (n={n})"
+                            "{what} id {id} outside the serving feature store (n={n})"
                         );
                     }
                 }
-                index
+                Ok(())
             };
-            let probes = match p.usize("probes")? {
-                0 => index.planner().full_volume() as usize,
-                v => v,
+            // an existing durable directory wins over --snapshot and the
+            // fresh build: the server resumes exactly where it crashed
+            let (index, budget) = match &wal_cfg {
+                Some(c) if chh::wal::is_wal_dir(&c.dir) => {
+                    let (durable, report) = chh::wal::DurableIndex::open(c)?;
+                    eprintln!(
+                        "serve-http: recovered {}: {}",
+                        c.dir.display(),
+                        report.summary()
+                    );
+                    let index = durable.index().clone();
+                    validate(&index, "recovered state")?;
+                    let budget = resolve_budget(&p, &index)?;
+                    // write the resolved budget back so an explicit
+                    // --probes override survives the next checkpoint
+                    index.set_default_budget(budget);
+                    durability = Some(chh::server::Durability {
+                        durable: Arc::new(durable),
+                        snapshot_every_ops: snapshot_every,
+                    });
+                    (index, budget)
+                }
+                _ => {
+                    let snap = p.str("snapshot");
+                    let index = if snap.is_empty() {
+                        let index = ShardedIndex::new(
+                            cfg.bits(),
+                            cfg.radius(),
+                            p.usize("shards")?.max(1),
+                        );
+                        for i in 0..data.len() {
+                            index.insert_point(fam.as_ref(), i as u32, data.features().row(i));
+                        }
+                        index.compact();
+                        index
+                    } else {
+                        let index = chh::persist::load_sharded(std::path::Path::new(snap))?;
+                        validate(&index, "snapshot")?;
+                        index
+                    };
+                    let budget = resolve_budget(&p, &index)?;
+                    // carry the operational budget in the index so
+                    // snapshots (and the WAL base snapshot) restore it
+                    index.set_default_budget(budget);
+                    let index = Arc::new(index);
+                    if let Some(c) = &wal_cfg {
+                        let durable =
+                            Arc::new(chh::wal::DurableIndex::create(index.clone(), c)?);
+                        eprintln!(
+                            "serve-http: durable dir {} initialized (base snapshot gen 0)",
+                            c.dir.display()
+                        );
+                        durability = Some(chh::server::Durability {
+                            durable,
+                            snapshot_every_ops: snapshot_every,
+                        });
+                    }
+                    (index, budget)
+                }
             };
-            let budget = QueryBudget::new(probes, p.usize("top")?.max(1));
             let router = chh::coordinator::OnlineRouter::new(
                 fam.clone(),
-                Arc::new(index),
+                index,
                 feats.clone(),
                 1,
                 64,
@@ -751,15 +842,20 @@ fn cmd_serve_http(rest: &[String]) -> anyhow::Result<()> {
         pool_workers: cfg.workers,
         idle_timeout: std::time::Duration::from_secs(5),
     };
-    let handle = Server::spawn(stack, server_cfg)?;
+    let handle = Server::spawn_with_durability(stack, server_cfg, durability)?;
     println!(
         "serve-http: listening on {} (mode={mode}, n={}, dim={}, k={}, r={}, \
-         batch<={max_batch}, wait<={max_wait_us}us)",
+         batch<={max_batch}, wait<={max_wait_us}us{})",
         handle.addr(),
         data.len(),
         data.dim(),
         cfg.bits(),
-        cfg.radius()
+        cfg.radius(),
+        if wal_dir.is_empty() {
+            String::new()
+        } else {
+            format!(", wal={wal_dir} fsync={}", p.str("fsync"))
+        }
     );
     let for_secs = p.u64("for-secs")?;
     if for_secs > 0 {
@@ -771,6 +867,92 @@ fn cmd_serve_http(rest: &[String]) -> anyhow::Result<()> {
     }
     handle.wait();
     println!("serve-http: stopped");
+    Ok(())
+}
+
+fn cmd_recover(rest: &[String]) -> anyhow::Result<()> {
+    let args = Args::new(
+        "chh recover",
+        "rebuild an online index from a durable WAL directory (snapshot + replay)",
+    )
+    .opt("wal-dir", "", "durable directory written by serve-http --wal-dir (required)")
+    .opt(
+        "fsync",
+        "always",
+        "fsync policy used while writing the post-recovery checkpoint",
+    )
+    .opt("save", "", "also save the recovered index to this standalone snapshot path")
+    .opt("json", "", "write a machine-readable recovery report to this path")
+    .flag("inspect", "read-only: report what recovery finds, write nothing back")
+    .flag("force", "checkpoint even a lossy recovery, discarding what could not be applied");
+    let p = args.parse(rest).map_err(|h| anyhow::anyhow!("{h}"))?;
+    let dir = p.str("wal-dir").to_string();
+    anyhow::ensure!(!dir.is_empty(), "--wal-dir is required");
+    let dirp = std::path::Path::new(&dir);
+    let (index, report) = if p.flag("inspect") {
+        let (index, report) = chh::wal::recover(dirp)?;
+        (Arc::new(index), report)
+    } else {
+        // open() recovers, then folds the replayed suffix into a fresh
+        // checkpoint and collects covered segments — a subsequent
+        // restart (or SIGKILL) replays nothing. A lossy recovery is
+        // refused unless --force explicitly accepts the loss.
+        let mut wal_cfg = chh::wal::WalConfig::new(dirp);
+        wal_cfg.fsync = p.str("fsync").parse()?;
+        let (durable, report) = if p.flag("force") {
+            chh::wal::DurableIndex::open_forced(&wal_cfg)?
+        } else {
+            chh::wal::DurableIndex::open(&wal_cfg)?
+        };
+        let index = durable.index().clone();
+        // open() already checkpointed; a plain drop closes the log
+        drop(durable);
+        (index, report)
+    };
+    println!("recover: {}", report.summary());
+    let b = index.default_budget();
+    let fmt_budget = |v: usize| {
+        if v == usize::MAX { "inf".to_string() } else { v.to_string() }
+    };
+    println!(
+        "recover: k={} radius={} shards={} live={}  (compact-threshold={}, budget T={} top={})",
+        index.bits(),
+        index.radius(),
+        index.shard_count(),
+        index.len(),
+        index.compact_threshold(),
+        fmt_budget(b.probes),
+        fmt_budget(b.top),
+    );
+    let save = p.str("save");
+    if !save.is_empty() {
+        chh::persist::save_sharded(std::path::Path::new(save), &index)?;
+        println!("recover: standalone snapshot -> {save}");
+    }
+    let json_path = p.str("json");
+    if !json_path.is_empty() {
+        use chh::jsonio::{obj, Json};
+        let doc = obj(vec![
+            ("tool", Json::from("recover")),
+            ("wal_dir", Json::from(dir.as_str())),
+            ("report", report.to_json()),
+            ("bits", Json::from(index.bits())),
+            ("radius", Json::from(index.radius())),
+            ("shards", Json::from(index.shard_count())),
+            ("live", Json::from(index.len())),
+        ]);
+        std::fs::write(json_path, doc.to_string_pretty())?;
+        println!("recover: json report -> {json_path}");
+    }
+    if report.lossy() && !p.flag("force") {
+        anyhow::bail!(
+            "lossy recovery: the longest valid prefix was recovered, but part of the \
+             log could not be applied ({} segments skipped{}) — rerun with --force to \
+             accept the loss and checkpoint the prefix",
+            report.segments_skipped,
+            if report.snapshot_fallback { ", snapshot fallback" } else { "" }
+        );
+    }
     Ok(())
 }
 
@@ -786,6 +968,11 @@ fn cmd_loadgen(rest: &[String]) -> anyhow::Result<()> {
         .opt("mode", "closed", "closed (back-to-back) | open (paced by --rate)")
         .opt("rate", "2000", "open loop: total target queries/sec")
         .opt("topk", "0", "use /query_topk with this T instead of /query (0 = /query)")
+        .opt(
+            "mutate-frac",
+            "0",
+            "send this fraction of requests as /insert + /remove mutations (online servers)",
+        )
         .opt("seed", "2012", "rng seed for the query hyperplanes")
         .opt("json", "", "write machine-readable results to this path")
         .flag("shutdown", "POST /shutdown to the server when done");
@@ -800,6 +987,11 @@ fn cmd_loadgen(rest: &[String]) -> anyhow::Result<()> {
     };
     let rate = p.f64("rate")?;
     let topk = p.usize("topk")?;
+    let mutate_frac = p.f64("mutate-frac")?;
+    anyhow::ensure!(
+        (0.0..=1.0).contains(&mutate_frac),
+        "--mutate-frac must be in [0, 1]"
+    );
     let seed = p.u64("seed")?;
     // learn the index dimensionality (and readiness) from /stats
     let mut probe = HttpClient::connect_retry(&addr, Duration::from_secs(10))
@@ -815,6 +1007,15 @@ fn cmd_loadgen(rest: &[String]) -> anyhow::Result<()> {
         .ok_or_else(|| anyhow::anyhow!("/stats has no dim field"))?;
     let server_mode =
         stats.get("mode").and_then(|m| m.as_str()).unwrap_or("?").to_string();
+    // valid /insert id range, needed only when driving mutations
+    let points = stats.get("points").and_then(|x| x.as_usize()).unwrap_or(0);
+    if mutate_frac > 0.0 {
+        anyhow::ensure!(
+            server_mode == "online",
+            "--mutate-frac needs an online-mode server (got mode={server_mode})"
+        );
+        anyhow::ensure!(points > 0, "/stats reports no points to mutate");
+    }
     drop(probe);
     println!(
         "loadgen: {queries} queries (dim={dim}) -> {addr} [{server_mode}]  \
@@ -828,13 +1029,14 @@ fn cmd_loadgen(rest: &[String]) -> anyhow::Result<()> {
         let n_t = queries / conc + usize::from(t < queries % conc);
         let addr = addr.clone();
         handles.push(std::thread::spawn(
-            move || -> (Histogram, usize, usize, usize) {
+            move || -> (Histogram, usize, usize, usize, usize) {
                 let mut h = Histogram::new();
                 let (mut ok, mut rejected, mut failed) = (0usize, 0usize, 0usize);
+                let mut mok = 0usize;
                 let mut rng = Rng::seed_from_u64(seed ^ (0x9E3779B9 + t as u64));
                 let mut client = match HttpClient::connect_retry(&addr, Duration::from_secs(5)) {
                     Ok(c) => c,
-                    Err(_) => return (h, 0, 0, n_t),
+                    Err(_) => return (h, 0, 0, n_t, 0),
                 };
                 let _ = client.set_timeout(Duration::from_secs(30));
                 let interval = if open_loop { conc as f64 / rate.max(1e-9) } else { 0.0 };
@@ -847,16 +1049,29 @@ fn cmd_loadgen(rest: &[String]) -> anyhow::Result<()> {
                             std::thread::sleep(due - now);
                         }
                     }
-                    let w = chh::testing::unit_vec(&mut rng, dim);
-                    let (path, body) = if topk > 0 {
-                        ("/query_topk", protocol::topk_body(&w, topk))
+                    let is_mutation = mutate_frac > 0.0 && rng.bernoulli(mutate_frac);
+                    let (path, body) = if is_mutation {
+                        // 50/50 insert/remove over random store ids —
+                        // the durable-serving churn shape
+                        let id = rng.below(points) as u32;
+                        if rng.bernoulli(0.5) {
+                            ("/insert", protocol::id_body(id))
+                        } else {
+                            ("/remove", protocol::id_body(id))
+                        }
                     } else {
-                        ("/query", protocol::query_body(&w))
+                        let w = chh::testing::unit_vec(&mut rng, dim);
+                        if topk > 0 {
+                            ("/query_topk", protocol::topk_body(&w, topk))
+                        } else {
+                            ("/query", protocol::query_body(&w))
+                        }
                     };
                     let q0 = Instant::now();
                     let reconnect = match client.post(path, &body) {
                         Ok(resp) => {
                             match resp.status {
+                                200 if is_mutation => mok += 1,
                                 200 => {
                                     h.record(q0.elapsed().as_secs_f64());
                                     ok += 1;
@@ -888,18 +1103,19 @@ fn cmd_loadgen(rest: &[String]) -> anyhow::Result<()> {
                         }
                     }
                 }
-                (h, ok, rejected, failed)
+                (h, ok, rejected, failed, mok)
             },
         ));
     }
     let mut hist = Histogram::new();
-    let (mut ok, mut rejected, mut failed) = (0usize, 0usize, 0usize);
+    let (mut ok, mut rejected, mut failed, mut mutations) = (0usize, 0usize, 0usize, 0usize);
     for hd in handles {
-        let (h, o, r, f) = hd.join().expect("loadgen worker");
+        let (h, o, r, f, m) = hd.join().expect("loadgen worker");
         hist.merge(&h);
         ok += o;
         rejected += r;
         failed += f;
+        mutations += m;
     }
     let secs = t0.elapsed().as_secs_f64();
     let (p50, p95, p99) = (
@@ -925,6 +1141,9 @@ fn cmd_loadgen(rest: &[String]) -> anyhow::Result<()> {
         &["ok", "503", "failed", "qps", "p50(us)", "p95(us)", "p99(us)", "mean(us)"],
         &rows,
     );
+    if mutate_frac > 0.0 {
+        println!("mutations: {mutations} applied (acked durable per the server's fsync policy)");
+    }
     let json_path = p.str("json");
     if !json_path.is_empty() {
         use chh::jsonio::{obj, Json};
@@ -934,6 +1153,7 @@ fn cmd_loadgen(rest: &[String]) -> anyhow::Result<()> {
             ("queries", Json::from(queries)),
             ("concurrency", Json::from(conc)),
             ("ok", Json::from(ok)),
+            ("mutations_ok", Json::from(mutations)),
             ("rejected_503", Json::from(rejected)),
             ("failed", Json::from(failed)),
             ("wall_secs", Json::Num(secs)),
@@ -955,7 +1175,10 @@ fn cmd_loadgen(rest: &[String]) -> anyhow::Result<()> {
         anyhow::ensure!(resp.status == 200, "POST /shutdown returned {}", resp.status);
         println!("loadgen: server shutdown requested");
     }
-    anyhow::ensure!(ok > 0, "no query succeeded ({rejected} rejected, {failed} failed)");
+    anyhow::ensure!(
+        ok + mutations > 0,
+        "no request succeeded ({rejected} rejected, {failed} failed)"
+    );
     Ok(())
 }
 

@@ -98,6 +98,15 @@ pub struct ShardedIndex {
     /// auto-compact a shard when its delta reaches this many slots
     /// (0 disables auto-compaction)
     compact_threshold: usize,
+    /// advisory serving budget carried with the index (persisted by
+    /// [`crate::persist::save_sharded`]); queries still take an explicit
+    /// budget — this is the operational default a server falls back to.
+    /// Atomics (not a field behind `&mut`) so a server can write the
+    /// resolved budget back into an already-shared index at startup;
+    /// the pair is not updated atomically together — set it before
+    /// serving, not concurrently with readers that need consistency.
+    default_probes: std::sync::atomic::AtomicUsize,
+    default_top: std::sync::atomic::AtomicUsize,
 }
 
 impl ShardedIndex {
@@ -119,6 +128,8 @@ impl ShardedIndex {
             planner,
             shards: (0..n_shards).map(|_| Shard::new()).collect(),
             compact_threshold: 4096,
+            default_probes: std::sync::atomic::AtomicUsize::new(usize::MAX),
+            default_top: std::sync::atomic::AtomicUsize::new(usize::MAX),
         }
     }
 
@@ -136,6 +147,29 @@ impl ShardedIndex {
     /// Auto-compaction threshold (delta slots per shard); 0 disables.
     pub fn set_compact_threshold(&mut self, slots: usize) {
         self.compact_threshold = slots;
+    }
+
+    pub fn compact_threshold(&self) -> usize {
+        self.compact_threshold
+    }
+
+    /// The operational default budget carried with (and persisted
+    /// alongside) this index. Purely advisory: every query method takes
+    /// an explicit [`QueryBudget`]. Takes `&self` so a startup path can
+    /// write the resolved budget back into a shared index (see the
+    /// field docs for the consistency caveat).
+    pub fn set_default_budget(&self, budget: QueryBudget) {
+        use std::sync::atomic::Ordering;
+        self.default_probes.store(budget.probes, Ordering::Relaxed);
+        self.default_top.store(budget.top, Ordering::Relaxed);
+    }
+
+    pub fn default_budget(&self) -> QueryBudget {
+        use std::sync::atomic::Ordering;
+        QueryBudget::new(
+            self.default_probes.load(Ordering::Relaxed),
+            self.default_top.load(Ordering::Relaxed),
+        )
     }
 
     pub fn bits(&self) -> usize {

@@ -33,6 +33,25 @@ mod tag {
     pub const CODES: u32 = 4; // [k u32, n u64, words...]
     pub const SHARDS_META: u32 = 5; // [k u32, radius u32, n_shards u32, n_live u64]
     pub const SHARD: u32 = 6; // [shard u32, epoch u64, n u64, n × (id u32, code u64)]
+    pub const SHARDS_CONFIG: u32 = 7; // [compact_threshold u64, probes u64, top u64]
+}
+
+/// `usize::MAX` (an unlimited budget) encodes as `u64::MAX` so the value
+/// survives a 32-bit ↔ 64-bit round trip unambiguously.
+fn budget_word(v: usize) -> u64 {
+    if v == usize::MAX {
+        u64::MAX
+    } else {
+        v as u64
+    }
+}
+
+fn budget_from_word(w: u64) -> usize {
+    if w == u64::MAX {
+        usize::MAX
+    } else {
+        w as usize
+    }
 }
 
 /// Hash-family kind discriminator for META.
@@ -104,14 +123,47 @@ impl SectionWriter {
     }
 
     fn finish(self, path: &Path) -> Result<()> {
-        let mut f = std::fs::File::create(path)
-            .with_context(|| format!("creating {}", path.display()))?;
-        f.write_all(MAGIC)?;
-        f.write_all(&VERSION.to_le_bytes())?;
-        f.write_all(&self.sections.to_le_bytes())?;
-        f.write_all(&self.buf)?;
-        Ok(())
+        let mut out = Vec::with_capacity(12 + self.buf.len());
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&self.sections.to_le_bytes());
+        out.extend_from_slice(&self.buf);
+        atomic_write(path, &out)
     }
+}
+
+/// Crash-safe file replacement: write `<path>.tmp`, fsync it, then
+/// rename over `path` (and best-effort fsync the directory so the
+/// rename itself is durable). Dying at any point leaves either the old
+/// complete file or the new complete file — never a truncated hybrid —
+/// plus at worst a stale `.tmp` that every loader ignores. All persist
+/// writers ([`SectionWriter`]) and the WAL manifest/snapshot writers go
+/// through this.
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
+    let name = path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .ok_or_else(|| anyhow!("atomic_write: {} has no file name", path.display()))?;
+    let tmp = path.with_file_name(format!("{name}.tmp"));
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(bytes)?;
+        f.sync_all()
+            .with_context(|| format!("fsyncing {}", tmp.display()))?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} over {}", tmp.display(), path.display()))?;
+    // durable rename: fsync the parent directory where the platform
+    // allows opening one (Unix); elsewhere the rename is still atomic
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            if let Ok(d) = std::fs::File::open(parent) {
+                let _ = d.sync_all();
+            }
+        }
+    }
+    Ok(())
 }
 
 fn mat_payload(m: &Mat) -> Vec<u8> {
@@ -155,10 +207,14 @@ pub fn save_codes(path: &Path, codes: &CodeArray) -> Result<()> {
 /// generation and delta at call time. Epochs are recorded for diagnostics;
 /// they restart at zero in a fresh process.
 ///
-/// Only k/radius/entries are persisted — a custom [`crate::online::ProbePlanner`]
-/// (e.g. from `with_planner` with hand-tuned costs) and the compaction
-/// threshold are NOT stored; [`load_sharded`] rebuilds with the default
-/// collision-model planner. Reapply non-default policy after loading.
+/// Operational config rides along in an optional section: the
+/// compaction threshold and the index's default [`crate::online::QueryBudget`],
+/// restored by [`load_sharded`] (snapshots written before this section
+/// existed load with current defaults). A custom
+/// [`crate::online::ProbePlanner`] (e.g. from `with_planner` with
+/// hand-tuned costs) is still NOT stored; [`load_sharded`] rebuilds with
+/// the default collision-model planner — reapply a non-default planner
+/// after loading.
 pub fn save_sharded(path: &Path, index: &crate::online::ShardedIndex) -> Result<()> {
     // Collect every shard's entries BEFORE writing the meta count: each
     // live_entries() call is an atomic per-shard snapshot, so the file's
@@ -178,6 +234,12 @@ pub fn save_sharded(path: &Path, index: &crate::online::ShardedIndex) -> Result<
     meta.extend_from_slice(&(index.shard_count() as u32).to_le_bytes());
     meta.extend_from_slice(&total.to_le_bytes());
     w.section(tag::SHARDS_META, &meta);
+    let budget = index.default_budget();
+    let mut cfg = Vec::with_capacity(24);
+    cfg.extend_from_slice(&(index.compact_threshold() as u64).to_le_bytes());
+    cfg.extend_from_slice(&budget_word(budget.probes).to_le_bytes());
+    cfg.extend_from_slice(&budget_word(budget.top).to_le_bytes());
+    w.section(tag::SHARDS_CONFIG, &cfg);
     for (i, (epoch, entries)) in snapshots.into_iter().enumerate() {
         let mut p = Vec::with_capacity(20 + entries.len() * 12);
         p.extend_from_slice(&(i as u32).to_le_bytes());
@@ -298,10 +360,15 @@ pub fn load_sharded(path: &Path) -> Result<crate::online::ShardedIndex> {
         .read_to_end(&mut data)?;
     let sections = read_sections(&data)?;
     let mut index: Option<crate::online::ShardedIndex> = None;
+    let mut config: Option<(u64, u64, u64)> = None;
     let mut loaded = 0u64;
     let mut expect = 0u64;
     for (t, payload) in sections {
         match t {
+            tag::SHARDS_CONFIG => {
+                let mut c = Cursor { b: payload, pos: 0 };
+                config = Some((c.u64()?, c.u64()?, c.u64()?));
+            }
             tag::SHARDS_META => {
                 let mut c = Cursor { b: payload, pos: 0 };
                 let k = c.u32()? as usize;
@@ -341,9 +408,18 @@ pub fn load_sharded(path: &Path) -> Result<crate::online::ShardedIndex> {
             _ => {}
         }
     }
-    let index = index.ok_or_else(|| anyhow!("missing SHARDS_META section"))?;
+    let mut index = index.ok_or_else(|| anyhow!("missing SHARDS_META section"))?;
     if loaded != expect {
         bail!("shard snapshot holds {loaded} entries, meta says {expect}");
+    }
+    if let Some((threshold, probes, top)) = config {
+        // snapshots predating the config section simply keep the
+        // defaults the index was constructed with
+        index.set_compact_threshold(budget_from_word(threshold));
+        index.set_default_budget(crate::online::QueryBudget::new(
+            budget_from_word(probes),
+            budget_from_word(top),
+        ));
     }
     index.compact();
     Ok(index)
@@ -460,6 +536,96 @@ mod tests {
             eb.sort_unstable();
             assert_eq!(ea, eb, "per-shard live entries survive the roundtrip");
         }
+    }
+
+    #[test]
+    fn sharded_config_roundtrip() {
+        let mut idx = crate::online::ShardedIndex::new(10, 2, 3);
+        idx.set_compact_threshold(1234);
+        idx.set_default_budget(crate::online::QueryBudget::new(77, 9));
+        idx.insert(5, 0b11);
+        let path = tmp("sharded_cfg");
+        save_sharded(&path, &idx).unwrap();
+        let back = load_sharded(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(back.compact_threshold(), 1234);
+        assert_eq!(back.default_budget().probes, 77);
+        assert_eq!(back.default_budget().top, 9);
+        // unlimited budgets survive too (usize::MAX ↔ u64::MAX)
+        let unl = crate::online::ShardedIndex::new(10, 2, 3);
+        unl.set_default_budget(crate::online::QueryBudget::unlimited());
+        save_sharded(&path, &unl).unwrap();
+        let back = load_sharded(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(back.default_budget().probes, usize::MAX);
+        assert_eq!(back.default_budget().top, usize::MAX);
+    }
+
+    #[test]
+    fn sharded_snapshot_without_config_section_gets_defaults() {
+        // hand-build an old-format file: SHARDS_META only, no
+        // SHARDS_CONFIG — loaders must fall back to current defaults
+        let mut data = Vec::new();
+        data.extend_from_slice(MAGIC);
+        data.extend_from_slice(&VERSION.to_le_bytes());
+        data.extend_from_slice(&1u32.to_le_bytes()); // one section
+        let mut meta = Vec::new();
+        meta.extend_from_slice(&12u32.to_le_bytes()); // k
+        meta.extend_from_slice(&3u32.to_le_bytes()); // radius
+        meta.extend_from_slice(&2u32.to_le_bytes()); // shards
+        meta.extend_from_slice(&0u64.to_le_bytes()); // no entries
+        data.extend_from_slice(&tag::SHARDS_META.to_le_bytes());
+        data.extend_from_slice(&(meta.len() as u64).to_le_bytes());
+        data.extend_from_slice(&meta);
+        let path = tmp("sharded_oldfmt");
+        std::fs::write(&path, &data).unwrap();
+        let back = load_sharded(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let defaults = crate::online::ShardedIndex::new(12, 3, 2);
+        assert_eq!(back.compact_threshold(), defaults.compact_threshold());
+        assert_eq!(back.default_budget().probes, defaults.default_budget().probes);
+        assert_eq!(back.default_budget().top, defaults.default_budget().top);
+    }
+
+    #[test]
+    fn truncated_tmp_leftover_is_ignored_by_loaders() {
+        // simulate a crash mid-atomic-write: a good file plus a
+        // truncated `<path>.tmp` next to it — loading the real path must
+        // succeed untouched by the leftover
+        let mut rng = Rng::seed_from_u64(11);
+        let pairs = ProjectionPairs::sample(8, 4, &mut rng);
+        let path = tmp("tmp_leftover");
+        save_model(&path, FamilyKind::Bh, &pairs).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        let tmp_path = path.with_file_name(format!(
+            "{}.tmp",
+            path.file_name().unwrap().to_str().unwrap()
+        ));
+        std::fs::write(&tmp_path, &good[..good.len() / 3]).unwrap();
+        let back = load_model(&path).unwrap();
+        assert_eq!(back.pairs.u, pairs.u);
+        // and the next atomic write simply replaces the stale tmp
+        save_model(&path, FamilyKind::Bh, &pairs).unwrap();
+        assert!(load_model(&path).is_ok());
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(&tmp_path);
+    }
+
+    #[test]
+    fn atomic_write_replaces_whole_file() {
+        let path = tmp("atomic");
+        atomic_write(&path, b"first version, longer than the second").unwrap();
+        atomic_write(&path, b"second").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"second");
+        assert!(
+            !path.with_file_name(format!(
+                "{}.tmp",
+                path.file_name().unwrap().to_str().unwrap()
+            ))
+            .exists(),
+            "no tmp debris after a successful write"
+        );
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -26,6 +26,13 @@
 //!   [`crate::online::ShardedIndex`] behind an
 //!   [`crate::coordinator::OnlineRouter`], with `/insert` + `/remove`).
 //!
+//! * **Durability** (optional) — [`Server::spawn_with_durability`]
+//!   routes `/insert`/`/remove` through a [`crate::wal::DurableIndex`]
+//!   (journal → apply → ack once durable), runs a background
+//!   snapshotter, reports WAL/snapshot counters on `/stats`, and writes
+//!   a final checkpoint on graceful shutdown so a clean stop never
+//!   needs replay. See `docs/DURABILITY.md`.
+//!
 //! `chh serve-http` wires a stack to this server; `chh loadgen` drives
 //! it. See `docs/SERVING.md` for the protocol and operational notes.
 
@@ -47,6 +54,16 @@ use crate::hash::HashFamily;
 use crate::jsonio::{obj, Json};
 use crate::metrics::Histogram;
 use crate::table::QueryHit;
+use crate::wal::DurableIndex;
+
+/// Durability wiring for an online stack: mutations journal through
+/// `durable` (which must wrap the same [`crate::online::ShardedIndex`]
+/// the router serves), and a background snapshotter checkpoints every
+/// `snapshot_every_ops` journaled mutations (0 = only on shutdown).
+pub struct Durability {
+    pub durable: Arc<DurableIndex>,
+    pub snapshot_every_ops: u64,
+}
 
 /// Which index the server fronts. Both variants answer `/query` through
 /// the micro-batcher; only `Online` accepts `/insert` + `/remove`.
@@ -128,6 +145,8 @@ struct ServerStats {
 struct State {
     stack: Stack,
     batcher: Batcher,
+    /// journaling wrapper around the online index, when serving durably
+    durable: Option<Arc<DurableIndex>>,
     budget_desc: Option<(usize, usize)>,
     shutdown: AtomicBool,
     addr: SocketAddr,
@@ -174,6 +193,8 @@ fn trigger_shutdown(state: &State) {
 pub struct ServerHandle {
     state: Arc<State>,
     acceptor: Option<std::thread::JoinHandle<()>>,
+    /// background snapshotter (durable serving only): stop flag + thread
+    snapshotter: Option<(Arc<AtomicBool>, std::thread::JoinHandle<()>)>,
 }
 
 impl ServerHandle {
@@ -190,7 +211,8 @@ impl ServerHandle {
     /// Block until the server shuts down (a `POST /shutdown`, or any
     /// [`Stopper`]): joins the acceptor, waits for the connection
     /// threads to drain (bounded by `idle_timeout` + in-flight work),
-    /// then drains the batcher.
+    /// writes a final WAL checkpoint when serving durably (so a clean
+    /// stop replays nothing on restart), then drains the batcher.
     pub fn wait(mut self) {
         if let Some(h) = self.acceptor.take() {
             let _ = h.join();
@@ -198,9 +220,22 @@ impl ServerHandle {
         while self.state.active_conns.load(Ordering::SeqCst) > 0 {
             std::thread::sleep(Duration::from_millis(5));
         }
-        // connection threads are gone; the batcher (owned by `state`)
-        // drains and joins when the last Arc drops — force that here if
-        // we hold the last one, so callers observe a fully-stopped server
+        // connection threads are gone ⇒ no more mutations can arrive;
+        // stop the snapshotter first so the final checkpoint below is
+        // the last word, then flush + checkpoint the WAL
+        if let Some((stop, h)) = self.snapshotter.take() {
+            stop.store(true, Ordering::SeqCst);
+            let _ = h.join();
+        }
+        if let Some(d) = &self.state.durable {
+            match d.checkpoint() {
+                Ok(gen) => eprintln!("serve-http: shutdown checkpoint gen {gen}"),
+                Err(e) => eprintln!("serve-http: shutdown checkpoint FAILED: {e:#}"),
+            }
+        }
+        // the batcher (owned by `state`) drains and joins when the last
+        // Arc drops — force that here if we hold the last one, so
+        // callers observe a fully-stopped server
         drop(self.state);
     }
 
@@ -217,6 +252,22 @@ pub struct Server;
 impl Server {
     /// Bind, spawn the batcher + acceptor, return immediately.
     pub fn spawn(stack: Stack, cfg: ServerConfig) -> anyhow::Result<ServerHandle> {
+        Self::spawn_with_durability(stack, cfg, None)
+    }
+
+    /// [`Self::spawn`] with WAL-backed durability: `/insert`/`/remove`
+    /// journal through `durability.durable` before applying, `/stats`
+    /// gains a `durability` section, a background snapshotter
+    /// checkpoints on the configured cadence, and graceful shutdown
+    /// writes a final checkpoint.
+    pub fn spawn_with_durability(
+        stack: Stack,
+        cfg: ServerConfig,
+        durability: Option<Durability>,
+    ) -> anyhow::Result<ServerHandle> {
+        if durability.is_some() && !matches!(stack, Stack::Online(_)) {
+            anyhow::bail!("durability requires the online stack");
+        }
         let listener = TcpListener::bind(&cfg.addr)
             .map_err(|e| anyhow::anyhow!("binding {}: {e}", cfg.addr))?;
         let addr = listener.local_addr()?;
@@ -233,9 +284,14 @@ impl Server {
             }
             Stack::Static(_) => None,
         };
+        let (durable, snapshot_every_ops) = match durability {
+            Some(d) => (Some(d.durable), d.snapshot_every_ops),
+            None => (None, 0),
+        };
         let state = Arc::new(State {
             stack,
             batcher,
+            durable,
             budget_desc,
             shutdown: AtomicBool::new(false),
             addr,
@@ -261,7 +317,34 @@ impl Server {
             .name("chh-http-accept".to_string())
             .spawn(move || acceptor_loop(&listener, &astate))
             .expect("spawn http acceptor");
-        Ok(ServerHandle { state, acceptor: Some(acceptor) })
+        // background snapshotter: checkpoint once enough mutations have
+        // been journaled since the last snapshot; polling (rather than
+        // waking per op) keeps the mutation path free of extra signaling
+        let snapshotter = match (&state.durable, snapshot_every_ops) {
+            (Some(d), every) if every > 0 => {
+                let stop = Arc::new(AtomicBool::new(false));
+                let (sstop, sd) = (stop.clone(), d.clone());
+                let h = std::thread::Builder::new()
+                    .name("chh-wal-snapshot".to_string())
+                    .spawn(move || {
+                        while !sstop.load(Ordering::SeqCst) {
+                            std::thread::sleep(Duration::from_millis(200));
+                            if sstop.load(Ordering::SeqCst) {
+                                break;
+                            }
+                            if sd.ops_since_snapshot() >= every {
+                                if let Err(e) = sd.checkpoint() {
+                                    eprintln!("snapshotter: checkpoint failed: {e:#}");
+                                }
+                            }
+                        }
+                    })
+                    .expect("spawn wal snapshotter");
+                Some((stop, h))
+            }
+            _ => None,
+        };
+        Ok(ServerHandle { state, acceptor: Some(acceptor), snapshotter })
     }
 }
 
@@ -502,7 +585,16 @@ fn handle_insert(state: &Arc<State>, body: &[u8]) -> Reply {
             &format!("id {id} outside the serving feature store (n={n})"),
         );
     }
-    r.index().insert_point(r.family().as_ref(), id, r.feats().row(id as usize));
+    if let Some(d) = &state.durable {
+        // journal → apply → ack; a 200 means the op is durable per the
+        // fsync policy
+        if let Err(e) = d.insert_point(r.family().as_ref(), id, r.feats().row(id as usize))
+        {
+            return err_json(500, &format!("durable insert failed: {e:#}"));
+        }
+    } else {
+        r.index().insert_point(r.family().as_ref(), id, r.feats().row(id as usize));
+    }
     ok_json(obj(vec![
         ("inserted", Json::from(true)),
         ("id", Json::from(id as usize)),
@@ -518,7 +610,14 @@ fn handle_remove(state: &Arc<State>, body: &[u8]) -> Reply {
     let Stack::Online(r) = &state.stack else {
         return err_json(400, "static index is immutable; serve with --mode online");
     };
-    let removed = r.index().remove(id);
+    let removed = if let Some(d) = &state.durable {
+        match d.remove(id) {
+            Ok(removed) => removed,
+            Err(e) => return err_json(500, &format!("durable remove failed: {e:#}")),
+        }
+    } else {
+        r.index().remove(id)
+    };
     ok_json(obj(vec![
         ("removed", Json::from(removed)),
         ("id", Json::from(id as usize)),
@@ -548,6 +647,9 @@ fn handle_stats(state: &Arc<State>) -> Reply {
     let mut fields = vec![
         ("mode", Json::from(state.stack.mode())),
         ("dim", Json::from(state.dim())),
+        // feature-store size: the valid id range for /insert (loadgen
+        // uses this to drive mutations)
+        ("points", Json::from(state.stack.feats().len())),
         ("bits", Json::from(state.stack.family().bits())),
         ("family", Json::from(state.stack.family().name())),
         ("uptime_secs", Json::Num(s.started.elapsed().as_secs_f64())),
@@ -627,6 +729,9 @@ fn handle_stats(state: &Arc<State>) -> Reply {
             ));
         }
     }
+    if let Some(d) = &state.durable {
+        fields.push(("durability", d.stats_json()));
+    }
     ok_json(obj(fields))
 }
 
@@ -655,6 +760,7 @@ mod tests {
         Arc::new(State {
             stack,
             batcher,
+            durable: None,
             budget_desc: None,
             shutdown: AtomicBool::new(false),
             addr: "127.0.0.1:1".parse().unwrap(),

@@ -1,0 +1,259 @@
+//! WAL record framing: CRC32-guarded frames with torn-tail tolerance.
+//!
+//! Each record is one frame on disk:
+//!
+//! ```text
+//! | payload_len u32 | crc32(payload) u32 | payload |
+//! ```
+//!
+//! All integers little-endian (matching the persist container). The
+//! payload's first byte is the op tag; every op has a fixed payload
+//! length, so any bit damage is caught twice — by the CRC and by the
+//! exact-length decode. Readers treat the first bad frame as the end of
+//! the segment ([`read_segment_bytes`]): a crash mid-append leaves a
+//! torn tail, and the longest valid prefix is exactly the set of writes
+//! that were fully on disk.
+
+/// One durable operation against the online index.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Record {
+    /// Insert (or upsert) `id` with hash `code`.
+    Insert { id: u32, code: u64 },
+    /// Remove `id` (idempotent on replay).
+    Remove { id: u32 },
+    /// A snapshot with this generation covers every preceding record.
+    /// Purely a marker for diagnostics/tooling — the manifest is the
+    /// authority on which snapshot recovery starts from.
+    Checkpoint { gen: u64 },
+}
+
+const OP_INSERT: u8 = 1;
+const OP_REMOVE: u8 = 2;
+const OP_CHECKPOINT: u8 = 3;
+
+/// Frame header: payload length + CRC.
+pub const FRAME_HEADER: usize = 8;
+/// Sanity bound on the length field — real payloads are ≤ 13 bytes, but
+/// the reader stays tolerant of future (larger) record kinds up to this.
+const MAX_PAYLOAD: usize = 1 << 16;
+
+// ───────────────────────── crc32 (IEEE) ─────────────────────────
+
+fn crc_table() -> &'static [u32; 256] {
+    static TABLE: std::sync::OnceLock<[u32; 256]> = std::sync::OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, slot) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *slot = c;
+        }
+        t
+    })
+}
+
+/// CRC-32 (IEEE 802.3, the zlib/PNG polynomial).
+pub fn crc32(data: &[u8]) -> u32 {
+    let t = crc_table();
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = t[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// ───────────────────────── encode ─────────────────────────
+
+fn payload(rec: &Record) -> Vec<u8> {
+    match *rec {
+        Record::Insert { id, code } => {
+            let mut p = Vec::with_capacity(13);
+            p.push(OP_INSERT);
+            p.extend_from_slice(&id.to_le_bytes());
+            p.extend_from_slice(&code.to_le_bytes());
+            p
+        }
+        Record::Remove { id } => {
+            let mut p = Vec::with_capacity(5);
+            p.push(OP_REMOVE);
+            p.extend_from_slice(&id.to_le_bytes());
+            p
+        }
+        Record::Checkpoint { gen } => {
+            let mut p = Vec::with_capacity(9);
+            p.push(OP_CHECKPOINT);
+            p.extend_from_slice(&gen.to_le_bytes());
+            p
+        }
+    }
+}
+
+/// Append `rec` as one frame to `buf`.
+pub fn encode_into(rec: &Record, buf: &mut Vec<u8>) {
+    let p = payload(rec);
+    buf.extend_from_slice(&(p.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&crc32(&p).to_le_bytes());
+    buf.extend_from_slice(&p);
+}
+
+/// On-disk size of one record's frame.
+pub fn frame_len(rec: &Record) -> usize {
+    FRAME_HEADER
+        + match rec {
+            Record::Insert { .. } => 13,
+            Record::Remove { .. } => 5,
+            Record::Checkpoint { .. } => 9,
+        }
+}
+
+// ───────────────────────── decode ─────────────────────────
+
+fn decode_payload(p: &[u8]) -> Option<Record> {
+    match (p.first().copied()?, p.len()) {
+        (OP_INSERT, 13) => Some(Record::Insert {
+            id: u32::from_le_bytes(p[1..5].try_into().unwrap()),
+            code: u64::from_le_bytes(p[5..13].try_into().unwrap()),
+        }),
+        (OP_REMOVE, 5) => Some(Record::Remove {
+            id: u32::from_le_bytes(p[1..5].try_into().unwrap()),
+        }),
+        (OP_CHECKPOINT, 9) => Some(Record::Checkpoint {
+            gen: u64::from_le_bytes(p[1..9].try_into().unwrap()),
+        }),
+        _ => None,
+    }
+}
+
+/// Result of scanning one segment's bytes.
+#[derive(Debug)]
+pub struct SegmentRead {
+    /// the valid record prefix, in append order
+    pub records: Vec<Record>,
+    /// bytes consumed by that prefix (the logical truncation point)
+    pub valid_bytes: usize,
+    /// whether bytes past the prefix exist (torn tail or corruption)
+    pub torn: bool,
+}
+
+/// Decode frames until the first bad one (short header, absurd length,
+/// CRC mismatch, or unknown op) and stop there. Never errors: a damaged
+/// or truncated segment yields its longest valid prefix.
+pub fn read_segment_bytes(data: &[u8]) -> SegmentRead {
+    let mut records = Vec::new();
+    let mut pos = 0usize;
+    loop {
+        if pos == data.len() {
+            return SegmentRead { records, valid_bytes: pos, torn: false };
+        }
+        if pos + FRAME_HEADER > data.len() {
+            break;
+        }
+        let len = u32::from_le_bytes(data[pos..pos + 4].try_into().unwrap()) as usize;
+        let crc = u32::from_le_bytes(data[pos + 4..pos + 8].try_into().unwrap());
+        if len == 0 || len > MAX_PAYLOAD || pos + FRAME_HEADER + len > data.len() {
+            break;
+        }
+        let p = &data[pos + FRAME_HEADER..pos + FRAME_HEADER + len];
+        if crc32(p) != crc {
+            break;
+        }
+        let Some(rec) = decode_payload(p) else { break };
+        records.push(rec);
+        pos += FRAME_HEADER + len;
+    }
+    SegmentRead { records, valid_bytes: pos, torn: true }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_records() -> Vec<Record> {
+        vec![
+            Record::Insert { id: 7, code: 0xDEAD_BEEF },
+            Record::Remove { id: 7 },
+            Record::Insert { id: u32::MAX, code: u64::MAX },
+            Record::Checkpoint { gen: 42 },
+            Record::Insert { id: 0, code: 0 },
+        ]
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // standard test vector for CRC-32/IEEE
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn roundtrip_all_record_kinds() {
+        let recs = sample_records();
+        let mut buf = Vec::new();
+        for r in &recs {
+            let before = buf.len();
+            encode_into(r, &mut buf);
+            assert_eq!(buf.len() - before, frame_len(r), "frame_len matches encoding");
+        }
+        let read = read_segment_bytes(&buf);
+        assert_eq!(read.records, recs);
+        assert_eq!(read.valid_bytes, buf.len());
+        assert!(!read.torn);
+    }
+
+    #[test]
+    fn truncation_at_every_byte_yields_a_frame_prefix() {
+        let recs = sample_records();
+        let mut buf = Vec::new();
+        let mut boundaries = vec![0usize];
+        for r in &recs {
+            encode_into(r, &mut buf);
+            boundaries.push(buf.len());
+        }
+        for cut in 0..=buf.len() {
+            let read = read_segment_bytes(&buf[..cut]);
+            // the number of whole frames below the cut
+            let want = boundaries.iter().filter(|&&b| b <= cut).count() - 1;
+            assert_eq!(read.records.len(), want, "cut at byte {cut}");
+            assert_eq!(read.records[..], recs[..want]);
+            assert_eq!(read.valid_bytes, boundaries[want]);
+            assert_eq!(read.torn, cut != boundaries[want]);
+        }
+    }
+
+    #[test]
+    fn corruption_stops_at_the_damaged_frame() {
+        let recs = sample_records();
+        let mut buf = Vec::new();
+        let mut boundaries = vec![0usize];
+        for r in &recs {
+            encode_into(r, &mut buf);
+            boundaries.push(buf.len());
+        }
+        for pos in 0..buf.len() {
+            let mut bad = buf.clone();
+            bad[pos] ^= 0x5A;
+            let read = read_segment_bytes(&bad);
+            // the frame containing the flipped byte is the first loss
+            let frame = boundaries.iter().filter(|&&b| b <= pos).count() - 1;
+            assert!(
+                read.records.len() <= frame,
+                "flip at {pos}: got {} records, damage was in frame {frame}",
+                read.records.len()
+            );
+            assert_eq!(read.records[..], recs[..read.records.len()]);
+            assert!(read.torn);
+        }
+    }
+
+    #[test]
+    fn garbage_is_empty_prefix() {
+        let read = read_segment_bytes(b"not a wal segment, definitely");
+        assert!(read.records.is_empty());
+        assert_eq!(read.valid_bytes, 0);
+        assert!(read.torn);
+        let empty = read_segment_bytes(b"");
+        assert!(empty.records.is_empty() && !empty.torn);
+    }
+}

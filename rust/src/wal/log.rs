@@ -1,0 +1,603 @@
+//! The append-only segmented log: one dedicated writer thread doing
+//! group commit under a configurable fsync policy.
+//!
+//! ```text
+//!  mutator threads ── append(rec) ──▶ bounded channel ──▶ writer thread
+//!        ▲                                                 │  coalesce burst
+//!        └────────────── ack (ticket) ◀────────────────────┘  write_all + fsync
+//! ```
+//!
+//! Appenders enqueue an encoded frame and receive an [`AppendTicket`];
+//! the writer drains whatever is queued (one `write_all` for the whole
+//! burst — *group commit*), applies the fsync policy, then acks every
+//! ticket in the burst. Under [`FsyncPolicy::Always`] a ticket resolves
+//! only after the data is fsynced, so N concurrent mutators share one
+//! fsync instead of paying one each; under `EveryN`/`IntervalMs` tickets
+//! resolve after the buffered write and the fsync runs on its cadence
+//! (a crash can lose the still-unsynced suffix — the documented
+//! trade-off, see `docs/DURABILITY.md`).
+//!
+//! Segments are `wal-{seq:016}.log`; the writer rolls to `seq+1` once a
+//! segment passes `segment_bytes`. A reopened log always starts a fresh
+//! segment — appending after a torn tail would strand every later frame
+//! behind the bad one, since readers stop at the first damaged frame.
+
+use std::fs::File;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::frame::{encode_into, Record};
+use crate::metrics::Histogram;
+
+/// When acknowledged appends become crash-durable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FsyncPolicy {
+    /// fsync every group commit before acking it — an acked op is never
+    /// lost (the default)
+    Always,
+    /// fsync once this many records have accumulated since the last sync
+    EveryN(u64),
+    /// fsync on a timer; the writer wakes itself if appends go quiet
+    IntervalMs(u64),
+}
+
+impl std::str::FromStr for FsyncPolicy {
+    type Err = anyhow::Error;
+
+    /// `always` | `every:<n>` | `interval:<ms>`
+    fn from_str(s: &str) -> Result<Self> {
+        if s == "always" {
+            return Ok(FsyncPolicy::Always);
+        }
+        if let Some(n) = s.strip_prefix("every:") {
+            let n: u64 = n.parse().context("--fsync every:<n> needs an integer")?;
+            return Ok(FsyncPolicy::EveryN(n.max(1)));
+        }
+        if let Some(ms) = s.strip_prefix("interval:") {
+            let ms: u64 = ms.parse().context("--fsync interval:<ms> needs an integer")?;
+            return Ok(FsyncPolicy::IntervalMs(ms.max(1)));
+        }
+        bail!("unknown fsync policy '{s}' (always | every:<n> | interval:<ms>)")
+    }
+}
+
+impl std::fmt::Display for FsyncPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FsyncPolicy::Always => write!(f, "always"),
+            FsyncPolicy::EveryN(n) => write!(f, "every:{n}"),
+            FsyncPolicy::IntervalMs(ms) => write!(f, "interval:{ms}"),
+        }
+    }
+}
+
+/// Writer-side counters, shared with `/stats`.
+pub struct WalStats {
+    /// records durably appended (written, per the policy)
+    pub records: AtomicU64,
+    /// frame bytes written across all segments
+    pub bytes: AtomicU64,
+    /// fsync calls issued
+    pub fsyncs: AtomicU64,
+    /// segment rolls (size-triggered plus explicit rotations)
+    pub rotations: AtomicU64,
+    /// group-commit burst sizes (bounded reservoir)
+    batches: Mutex<Histogram>,
+}
+
+impl Default for WalStats {
+    fn default() -> Self {
+        WalStats {
+            records: AtomicU64::new(0),
+            bytes: AtomicU64::new(0),
+            fsyncs: AtomicU64::new(0),
+            rotations: AtomicU64::new(0),
+            batches: Mutex::new(Histogram::with_capacity(crate::metrics::SERVING_RESERVOIR)),
+        }
+    }
+}
+
+impl WalStats {
+    fn record_batch(&self, n: usize) {
+        self.batches.lock().unwrap().record(n as f64);
+    }
+
+    /// (mean, p95, max, count) of recent group-commit burst sizes.
+    pub fn batch_stats(&self) -> (f64, f64, f64, usize) {
+        let h = self.batches.lock().unwrap();
+        if h.is_empty() {
+            return (0.0, 0.0, 0.0, 0);
+        }
+        (h.mean(), h.percentile(95.0), h.max(), h.len())
+    }
+}
+
+/// Resolves when the writer has made an append durable per the policy.
+pub struct AppendTicket {
+    rx: Receiver<Result<(), String>>,
+}
+
+impl AppendTicket {
+    /// Block until the writer acks (or reports a write error).
+    pub fn wait(self) -> Result<()> {
+        match self.rx.recv() {
+            Ok(Ok(())) => Ok(()),
+            Ok(Err(e)) => Err(anyhow!("wal write failed: {e}")),
+            Err(_) => Err(anyhow!("wal writer gone before ack")),
+        }
+    }
+}
+
+enum Cmd {
+    Append(Vec<u8>, Sender<Result<(), String>>),
+    /// fsync + close the current segment, open the next; replies with
+    /// the new segment's seq
+    Rotate(Sender<Result<u64, String>>),
+    /// fsync now regardless of policy
+    Flush(Sender<Result<(), String>>),
+}
+
+/// Handle to the segmented log; all I/O happens on the writer thread.
+pub struct Wal {
+    tx: Option<SyncSender<Cmd>>,
+    writer: Option<std::thread::JoinHandle<()>>,
+    stats: Arc<WalStats>,
+}
+
+/// `dir/wal-{seq:016}.log`
+pub fn segment_path(dir: &Path, seq: u64) -> PathBuf {
+    dir.join(format!("wal-{seq:016}.log"))
+}
+
+/// Parse a segment file name back to its seq.
+pub fn segment_seq(name: &str) -> Option<u64> {
+    name.strip_prefix("wal-")?.strip_suffix(".log")?.parse().ok()
+}
+
+/// Existing segments in `dir`, ascending by seq.
+pub fn list_segments(dir: &Path) -> Result<Vec<(u64, PathBuf)>> {
+    let mut out = Vec::new();
+    for entry in
+        std::fs::read_dir(dir).with_context(|| format!("listing {}", dir.display()))?
+    {
+        let entry = entry?;
+        if let Some(seq) = entry.file_name().to_str().and_then(segment_seq) {
+            out.push((seq, entry.path()));
+        }
+    }
+    out.sort_by_key(|&(seq, _)| seq);
+    Ok(out)
+}
+
+/// Bound on commands drained per group commit (keeps a single burst's
+/// buffer, and the ack latency of its first op, bounded).
+const MAX_BURST: usize = 4096;
+/// Appender channel bound — backpressure rather than unbounded memory if
+/// mutators outrun the disk.
+const QUEUE_CAP: usize = 8192;
+
+impl Wal {
+    /// Open the log for writing, starting a fresh segment at `start_seq`.
+    pub fn open(
+        dir: &Path,
+        policy: FsyncPolicy,
+        segment_bytes: u64,
+        start_seq: u64,
+    ) -> Result<Wal> {
+        let file = File::create(segment_path(dir, start_seq))
+            .with_context(|| format!("creating wal segment {start_seq} in {}", dir.display()))?;
+        let stats = Arc::new(WalStats::default());
+        let (tx, rx) = sync_channel::<Cmd>(QUEUE_CAP);
+        let wstats = stats.clone();
+        let wdir = dir.to_path_buf();
+        let writer = std::thread::Builder::new()
+            .name("chh-wal-writer".to_string())
+            .spawn(move || {
+                writer_loop(rx, wdir, policy, segment_bytes.max(1), start_seq, file, wstats)
+            })
+            .context("spawning wal writer thread")?;
+        Ok(Wal { tx: Some(tx), writer: Some(writer), stats })
+    }
+
+    pub fn stats(&self) -> &Arc<WalStats> {
+        &self.stats
+    }
+
+    /// Enqueue one record; the returned ticket resolves when it is
+    /// durable per the fsync policy. The enqueue order is the replay
+    /// order — callers serialize enqueue-then-apply (see
+    /// [`super::DurableIndex`]).
+    pub fn append(&self, rec: &Record) -> AppendTicket {
+        let (ack, rx) = std::sync::mpsc::channel();
+        let mut frame = Vec::with_capacity(super::frame::frame_len(rec));
+        encode_into(rec, &mut frame);
+        match self.tx.as_ref() {
+            Some(tx) => {
+                if let Err(e) = tx.send(Cmd::Append(frame, ack.clone())) {
+                    let _ = ack.send(Err(format!("wal writer stopped: {e}")));
+                }
+            }
+            None => {
+                let _ = ack.send(Err("wal closed".to_string()));
+            }
+        }
+        AppendTicket { rx }
+    }
+
+    /// fsync + close the current segment and open the next; everything
+    /// appended before this call is durable once it returns. Returns the
+    /// new (empty) segment's seq.
+    pub fn rotate(&self) -> Result<u64> {
+        let (ack, rx) = std::sync::mpsc::channel();
+        self.tx
+            .as_ref()
+            .ok_or_else(|| anyhow!("wal closed"))?
+            .send(Cmd::Rotate(ack))
+            .map_err(|_| anyhow!("wal writer stopped"))?;
+        match rx.recv() {
+            Ok(Ok(seq)) => Ok(seq),
+            Ok(Err(e)) => Err(anyhow!("wal rotate failed: {e}")),
+            Err(_) => Err(anyhow!("wal writer gone during rotate")),
+        }
+    }
+
+    /// Force an fsync now (used by graceful shutdown).
+    pub fn flush(&self) -> Result<()> {
+        let (ack, rx) = std::sync::mpsc::channel();
+        self.tx
+            .as_ref()
+            .ok_or_else(|| anyhow!("wal closed"))?
+            .send(Cmd::Flush(ack))
+            .map_err(|_| anyhow!("wal writer stopped"))?;
+        match rx.recv() {
+            Ok(Ok(())) => Ok(()),
+            Ok(Err(e)) => Err(anyhow!("wal flush failed: {e}")),
+            Err(_) => Err(anyhow!("wal writer gone during flush")),
+        }
+    }
+}
+
+impl Drop for Wal {
+    fn drop(&mut self) {
+        // disconnect; the writer drains the queue, fsyncs, and exits
+        self.tx.take();
+        if let Some(h) = self.writer.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+struct WriterState {
+    dir: PathBuf,
+    policy: FsyncPolicy,
+    segment_bytes: u64,
+    seq: u64,
+    file: File,
+    in_segment: u64,
+    unsynced: u64,
+    last_sync: Instant,
+    stats: Arc<WalStats>,
+    /// sticky I/O error: once the disk fails, every later op is refused
+    /// with this message instead of silently acking lost writes
+    fail: Option<String>,
+}
+
+impl WriterState {
+    fn fsync(&mut self) -> std::io::Result<()> {
+        if self.unsynced > 0 || matches!(self.policy, FsyncPolicy::Always) {
+            self.file.sync_all()?;
+            self.stats.fsyncs.fetch_add(1, Ordering::Relaxed);
+        }
+        self.unsynced = 0;
+        self.last_sync = Instant::now();
+        Ok(())
+    }
+
+    fn roll(&mut self) -> std::io::Result<u64> {
+        self.file.sync_all()?;
+        self.stats.fsyncs.fetch_add(1, Ordering::Relaxed);
+        self.unsynced = 0;
+        self.last_sync = Instant::now();
+        self.seq += 1;
+        self.file = File::create(segment_path(&self.dir, self.seq))?;
+        self.in_segment = 0;
+        self.stats.rotations.fetch_add(1, Ordering::Relaxed);
+        Ok(self.seq)
+    }
+
+    /// Write one coalesced burst, apply the policy's fsync, ack tickets.
+    fn commit(&mut self, buf: &[u8], acks: Vec<Sender<Result<(), String>>>) {
+        if acks.is_empty() {
+            return;
+        }
+        if let Some(msg) = &self.fail {
+            let msg = msg.clone();
+            for a in acks {
+                let _ = a.send(Err(msg.clone()));
+            }
+            return;
+        }
+        let res = self.try_commit(buf, acks.len() as u64);
+        match res {
+            Ok(()) => {
+                for a in acks {
+                    let _ = a.send(Ok(()));
+                }
+            }
+            Err(e) => {
+                let msg = e.to_string();
+                self.fail = Some(msg.clone());
+                for a in acks {
+                    let _ = a.send(Err(msg.clone()));
+                }
+            }
+        }
+    }
+
+    fn try_commit(&mut self, buf: &[u8], n: u64) -> std::io::Result<()> {
+        self.file.write_all(buf)?;
+        self.in_segment += buf.len() as u64;
+        self.unsynced += n;
+        self.stats.records.fetch_add(n, Ordering::Relaxed);
+        self.stats.bytes.fetch_add(buf.len() as u64, Ordering::Relaxed);
+        self.stats.record_batch(n as usize);
+        let due = match self.policy {
+            FsyncPolicy::Always => true,
+            FsyncPolicy::EveryN(k) => self.unsynced >= k,
+            FsyncPolicy::IntervalMs(ms) => {
+                self.last_sync.elapsed() >= Duration::from_millis(ms)
+            }
+        };
+        if due {
+            self.fsync()?;
+        }
+        if self.in_segment >= self.segment_bytes {
+            self.roll()?;
+        }
+        Ok(())
+    }
+
+    fn control(&mut self, cmd: Cmd) {
+        match cmd {
+            Cmd::Append(..) => unreachable!("appends are batched by the caller"),
+            Cmd::Rotate(ack) => {
+                if let Some(msg) = &self.fail {
+                    let _ = ack.send(Err(msg.clone()));
+                    return;
+                }
+                match self.roll() {
+                    Ok(seq) => {
+                        let _ = ack.send(Ok(seq));
+                    }
+                    Err(e) => {
+                        let msg = e.to_string();
+                        self.fail = Some(msg.clone());
+                        let _ = ack.send(Err(msg));
+                    }
+                }
+            }
+            Cmd::Flush(ack) => {
+                if let Some(msg) = &self.fail {
+                    let _ = ack.send(Err(msg.clone()));
+                    return;
+                }
+                match self.fsync() {
+                    Ok(()) => {
+                        let _ = ack.send(Ok(()));
+                    }
+                    Err(e) => {
+                        let msg = e.to_string();
+                        self.fail = Some(msg.clone());
+                        let _ = ack.send(Err(msg));
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn writer_loop(
+    rx: Receiver<Cmd>,
+    dir: PathBuf,
+    policy: FsyncPolicy,
+    segment_bytes: u64,
+    start_seq: u64,
+    file: File,
+    stats: Arc<WalStats>,
+) {
+    let mut st = WriterState {
+        dir,
+        policy,
+        segment_bytes,
+        seq: start_seq,
+        file,
+        in_segment: 0,
+        unsynced: 0,
+        last_sync: Instant::now(),
+        stats,
+        fail: None,
+    };
+    loop {
+        // wait for work; under an interval policy with dirty bytes, wake
+        // ourselves at the deadline so quiet periods still get synced
+        let first = match st.policy {
+            FsyncPolicy::IntervalMs(ms) if st.unsynced > 0 => {
+                let deadline = st.last_sync + Duration::from_millis(ms);
+                let now = Instant::now();
+                if now >= deadline {
+                    if let Err(e) = st.fsync() {
+                        st.fail = Some(e.to_string());
+                    }
+                    continue;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(cmd) => cmd,
+                    Err(RecvTimeoutError::Timeout) => {
+                        if let Err(e) = st.fsync() {
+                            st.fail = Some(e.to_string());
+                        }
+                        continue;
+                    }
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            _ => match rx.recv() {
+                Ok(cmd) => cmd,
+                Err(_) => break,
+            },
+        };
+        let mut cmds = vec![first];
+        while cmds.len() < MAX_BURST {
+            match rx.try_recv() {
+                Ok(cmd) => cmds.push(cmd),
+                Err(_) => break,
+            }
+        }
+        // coalesce contiguous appends into one write; controls are rare
+        // and act as commit barriers within the burst
+        let mut buf: Vec<u8> = Vec::new();
+        let mut acks: Vec<Sender<Result<(), String>>> = Vec::new();
+        for cmd in cmds {
+            match cmd {
+                Cmd::Append(frame, ack) => {
+                    buf.extend_from_slice(&frame);
+                    acks.push(ack);
+                }
+                ctrl => {
+                    st.commit(&buf, std::mem::take(&mut acks));
+                    buf.clear();
+                    st.control(ctrl);
+                }
+            }
+        }
+        st.commit(&buf, acks);
+    }
+    // channel closed: everything queued is written; leave the tail synced
+    if st.fail.is_none() {
+        let _ = st.file.sync_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::frame::read_segment_bytes;
+    use super::*;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("chh_wal_log_{}_{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn append_rotate_list_roundtrip() {
+        let dir = tmpdir("basic");
+        let wal = Wal::open(&dir, FsyncPolicy::Always, 1 << 20, 1).unwrap();
+        for id in 0..10u32 {
+            wal.append(&Record::Insert { id, code: id as u64 * 3 }).wait().unwrap();
+        }
+        let new_seq = wal.rotate().unwrap();
+        assert_eq!(new_seq, 2);
+        wal.append(&Record::Remove { id: 4 }).wait().unwrap();
+        assert_eq!(wal.stats().records.load(Ordering::Relaxed), 11);
+        drop(wal);
+        let segs = list_segments(&dir).unwrap();
+        assert_eq!(segs.iter().map(|&(s, _)| s).collect::<Vec<_>>(), vec![1, 2]);
+        let first = read_segment_bytes(&std::fs::read(&segs[0].1).unwrap());
+        assert_eq!(first.records.len(), 10);
+        assert!(!first.torn);
+        let second = read_segment_bytes(&std::fs::read(&segs[1].1).unwrap());
+        assert_eq!(second.records, vec![Record::Remove { id: 4 }]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn size_triggered_roll_keeps_every_record() {
+        let dir = tmpdir("roll");
+        // tiny cap: every few appends roll a segment
+        let wal = Wal::open(&dir, FsyncPolicy::EveryN(100), 64, 1).unwrap();
+        for id in 0..40u32 {
+            wal.append(&Record::Insert { id, code: 1 }).wait().unwrap();
+        }
+        drop(wal);
+        let segs = list_segments(&dir).unwrap();
+        assert!(segs.len() > 1, "size cap must roll segments, got {}", segs.len());
+        let mut all = Vec::new();
+        for (_, p) in &segs {
+            let read = read_segment_bytes(&std::fs::read(p).unwrap());
+            assert!(!read.torn);
+            all.extend(read.records);
+        }
+        let want: Vec<Record> =
+            (0..40u32).map(|id| Record::Insert { id, code: 1 }).collect();
+        assert_eq!(all, want, "records in order across rolled segments");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn concurrent_appenders_all_acked_and_logged() {
+        let dir = tmpdir("conc");
+        let wal = Arc::new(Wal::open(&dir, FsyncPolicy::Always, 1 << 20, 1).unwrap());
+        let threads = 4;
+        let per = 50;
+        let mut joins = Vec::new();
+        for t in 0..threads {
+            let wal = wal.clone();
+            joins.push(std::thread::spawn(move || {
+                for i in 0..per {
+                    let id = (t * 1000 + i) as u32;
+                    wal.append(&Record::Insert { id, code: id as u64 }).wait().unwrap();
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(
+            wal.stats().records.load(Ordering::Relaxed),
+            (threads * per) as u64
+        );
+        let (_, _, max_batch, batches) = wal.stats().batch_stats();
+        assert!(batches > 0 && max_batch >= 1.0);
+        drop(wal);
+        let segs = list_segments(&dir).unwrap();
+        let read = read_segment_bytes(&std::fs::read(&segs[0].1).unwrap());
+        assert_eq!(read.records.len(), threads * per);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fsync_policy_parsing() {
+        assert_eq!("always".parse::<FsyncPolicy>().unwrap(), FsyncPolicy::Always);
+        assert_eq!("every:8".parse::<FsyncPolicy>().unwrap(), FsyncPolicy::EveryN(8));
+        assert_eq!(
+            "interval:25".parse::<FsyncPolicy>().unwrap(),
+            FsyncPolicy::IntervalMs(25)
+        );
+        assert!("sometimes".parse::<FsyncPolicy>().is_err());
+        assert!("every:x".parse::<FsyncPolicy>().is_err());
+        assert_eq!(FsyncPolicy::EveryN(8).to_string(), "every:8");
+    }
+
+    #[test]
+    fn interval_policy_syncs_a_quiet_log() {
+        let dir = tmpdir("interval");
+        let wal = Wal::open(&dir, FsyncPolicy::IntervalMs(10), 1 << 20, 1).unwrap();
+        wal.append(&Record::Insert { id: 1, code: 2 }).wait().unwrap();
+        // no further appends: the self-wakeup must fsync within ~interval
+        let t0 = Instant::now();
+        while wal.stats().fsyncs.load(Ordering::Relaxed) == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(5), "interval fsync never fired");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        drop(wal);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

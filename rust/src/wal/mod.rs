@@ -1,0 +1,497 @@
+//! Durability for the online index: write-ahead log, background
+//! snapshots, and crash recovery.
+//!
+//! The online serving stack ([`crate::online`], [`crate::server`])
+//! accepts `/insert` and `/remove` into RAM; this module makes those
+//! mutations survive a crash or redeploy. Three pieces:
+//!
+//! * **WAL** ([`log`], [`frame`]) — an append-only segmented log of
+//!   CRC32-framed records, written by one dedicated thread doing group
+//!   commit under a configurable [`FsyncPolicy`]. A torn tail (crash
+//!   mid-append) is tolerated on read: the longest valid frame prefix
+//!   is the recovered history.
+//! * **Snapshots** ([`snapshot`]) — a background (or on-demand)
+//!   checkpoint writes the full index via
+//!   [`crate::persist::save_sharded`] to a generation-numbered file
+//!   (temp + fsync + atomic rename), flips the manifest, and deletes
+//!   the WAL segments the snapshot covers.
+//! * **Recovery** ([`recover`]) — load the newest valid snapshot, then
+//!   idempotently replay the WAL suffix. The recovered index answers
+//!   queries bit-identically to the pre-crash index over every
+//!   acknowledged operation (`rust/tests/wal_recovery.rs` asserts
+//!   exactly this).
+//!
+//! [`DurableIndex`] is the glue: it journals each mutation *before*
+//! applying it to the wrapped [`ShardedIndex`], holding a tiny order
+//! lock across enqueue+apply so WAL order always equals apply order —
+//! that identity is what makes replay reproduce the live state exactly.
+//! The ack (and hence the client's 200) waits on the group-commit
+//! ticket, so under `--fsync always` an acknowledged op is never lost.
+//!
+//! `chh serve-http --wal-dir` wires this under the HTTP front-end;
+//! `chh recover` replays a directory standalone. Formats, fsync-policy
+//! trade-offs and the operational runbook live in `docs/DURABILITY.md`.
+
+pub mod frame;
+pub mod log;
+pub mod snapshot;
+
+pub use frame::Record;
+pub use log::{AppendTicket, FsyncPolicy, Wal, WalStats};
+pub use snapshot::{is_wal_dir, recover, RecoveryReport};
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::FeatRef;
+use crate::hash::HashFamily;
+use crate::jsonio::{obj, Json};
+use crate::online::ShardedIndex;
+
+/// Durability knobs.
+#[derive(Clone, Debug)]
+pub struct WalConfig {
+    /// the durable directory (manifest + snapshots + segments)
+    pub dir: PathBuf,
+    /// when acknowledged appends are crash-durable
+    pub fsync: FsyncPolicy,
+    /// roll to a new segment past this many bytes
+    pub segment_bytes: u64,
+}
+
+impl WalConfig {
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        WalConfig {
+            dir: dir.into(),
+            fsync: FsyncPolicy::Always,
+            segment_bytes: 64 << 20,
+        }
+    }
+}
+
+/// A [`ShardedIndex`] whose mutations are journaled before they are
+/// applied, with generation-numbered snapshots bounding replay.
+///
+/// **Failure contract**: a mutation is applied to the in-memory index
+/// before its durability ticket resolves (that ordering is what makes
+/// replay exact). If the journal write itself fails (disk full, dead
+/// device), the caller gets the error — but the op may remain visible
+/// in the served index until restart, and every subsequent mutation is
+/// refused with the same sticky error (rolling back is not possible in
+/// general: a failed upsert's previous code is unknown). Treat a
+/// journal failure as fail-stop: the server keeps answering reads, and
+/// the operator restarts onto a healthy disk.
+pub struct DurableIndex {
+    index: Arc<ShardedIndex>,
+    wal: Wal,
+    dir: PathBuf,
+    /// advisory exclusive lock on the directory, held for this value's
+    /// lifetime (the OS releases it if the process dies)
+    _lock: std::fs::File,
+    /// held across journal-enqueue + apply, so WAL order == apply order
+    /// (never across the fsync wait — group commit stays shared)
+    order: Mutex<()>,
+    /// one checkpoint at a time
+    snap_lock: Mutex<()>,
+    snapshot_gen: AtomicU64,
+    ops_since_snapshot: AtomicU64,
+}
+
+/// Take the directory's advisory lock (`LOCK` file, `flock`-style).
+/// Exactly one live `DurableIndex` may own a directory: without this, a
+/// second process (or a `chh recover` against a live server's dir)
+/// would checkpoint and GC segments the live writer is still
+/// appending acknowledged records to. The lock dies with the process,
+/// so a SIGKILL'd server never blocks its own recovery.
+fn acquire_dir_lock(dir: &std::path::Path) -> Result<std::fs::File> {
+    let path = dir.join("LOCK");
+    let f = std::fs::OpenOptions::new()
+        .create(true)
+        .write(true)
+        .truncate(false)
+        .open(&path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    if f.try_lock().is_err() {
+        bail!(
+            "{} is in use by another process (LOCK held); stop the server using it \
+             first, or point --wal-dir elsewhere",
+            dir.display()
+        );
+    }
+    Ok(f)
+}
+
+impl DurableIndex {
+    /// Start a durability directory from scratch around `index`: write
+    /// the base snapshot (generation 0) of its current contents, the
+    /// manifest, and open segment 1 for appends. Fails if `dir` already
+    /// holds a manifest — use [`Self::open`] to resume one.
+    pub fn create(index: Arc<ShardedIndex>, cfg: &WalConfig) -> Result<Self> {
+        std::fs::create_dir_all(&cfg.dir)
+            .with_context(|| format!("creating {}", cfg.dir.display()))?;
+        let lock = acquire_dir_lock(&cfg.dir)?;
+        if is_wal_dir(&cfg.dir) {
+            bail!(
+                "{} already holds a durable index (use DurableIndex::open / chh recover)",
+                cfg.dir.display()
+            );
+        }
+        // no manifest ⇒ not a durable dir: stale segment/snapshot debris
+        // (an interrupted create, a hand-cleaned dir) must not survive
+        // into the fresh history or recovery would replay garbage
+        snapshot::gc(&cfg.dir, u64::MAX, u64::MAX);
+        crate::persist::save_sharded(&snapshot::snapshot_path(&cfg.dir, 0), &index)?;
+        snapshot::write_manifest(
+            &cfg.dir,
+            &snapshot::Manifest { snapshot_gen: 0, replay_from_seq: 1 },
+        )?;
+        let wal = Wal::open(&cfg.dir, cfg.fsync, cfg.segment_bytes, 1)?;
+        Ok(DurableIndex {
+            index,
+            wal,
+            dir: cfg.dir.clone(),
+            _lock: lock,
+            order: Mutex::new(()),
+            snap_lock: Mutex::new(()),
+            snapshot_gen: AtomicU64::new(0),
+            ops_since_snapshot: AtomicU64::new(0),
+        })
+    }
+
+    /// Resume an existing durability directory: recover (snapshot +
+    /// replay), reopen the log on a fresh segment, and immediately
+    /// checkpoint so the replayed suffix is folded into a new snapshot
+    /// and old segments are collected. The report describes what
+    /// recovery found *before* that checkpoint.
+    ///
+    /// Refuses a **lossy** recovery (mid-log corruption, or a snapshot
+    /// fallback that may skip collected segments): checkpointing one
+    /// would GC the damaged segments — the only copy of whatever could
+    /// not be applied. Inspect with `chh recover --inspect`, then
+    /// accept the loss explicitly via [`Self::open_forced`]
+    /// (`chh recover --force`).
+    pub fn open(cfg: &WalConfig) -> Result<(Self, RecoveryReport)> {
+        Self::open_with(cfg, false)
+    }
+
+    /// [`Self::open`], but permits checkpointing past a lossy recovery,
+    /// discarding whatever could not be applied.
+    pub fn open_forced(cfg: &WalConfig) -> Result<(Self, RecoveryReport)> {
+        Self::open_with(cfg, true)
+    }
+
+    fn open_with(cfg: &WalConfig, allow_lossy: bool) -> Result<(Self, RecoveryReport)> {
+        // lock before reading anything: recovering a directory a live
+        // server still appends to must fail, not GC its segments
+        let lock = acquire_dir_lock(&cfg.dir)?;
+        let (index, report) = recover(&cfg.dir)?;
+        if report.lossy() && !allow_lossy {
+            bail!(
+                "lossy recovery of {} ({}); refusing to checkpoint — that would \
+                 delete the damaged segments. Inspect with `chh recover --inspect`, \
+                 then accept the loss with `chh recover --force`",
+                cfg.dir.display(),
+                report.summary()
+            );
+        }
+        // never append to an existing segment: a torn tail would strand
+        // every frame written after it
+        let next_seq = log::list_segments(&cfg.dir)?
+            .last()
+            .map(|&(seq, _)| seq + 1)
+            .unwrap_or(1);
+        let wal = Wal::open(&cfg.dir, cfg.fsync, cfg.segment_bytes, next_seq)?;
+        let durable = DurableIndex {
+            index: Arc::new(index),
+            wal,
+            dir: cfg.dir.clone(),
+            _lock: lock,
+            order: Mutex::new(()),
+            snap_lock: Mutex::new(()),
+            snapshot_gen: AtomicU64::new(report.snapshot_gen),
+            ops_since_snapshot: AtomicU64::new(0),
+        };
+        durable.checkpoint().context("post-recovery checkpoint")?;
+        Ok((durable, report))
+    }
+
+    /// The wrapped index (share this `Arc` with routers/servers — reads
+    /// need no journaling).
+    pub fn index(&self) -> &Arc<ShardedIndex> {
+        &self.index
+    }
+
+    pub fn dir(&self) -> &std::path::Path {
+        &self.dir
+    }
+
+    pub fn wal_stats(&self) -> &Arc<WalStats> {
+        self.wal.stats()
+    }
+
+    pub fn snapshot_gen(&self) -> u64 {
+        self.snapshot_gen.load(Ordering::Relaxed)
+    }
+
+    /// Mutations journaled since the last completed checkpoint — what a
+    /// `--snapshot-every` trigger compares against.
+    pub fn ops_since_snapshot(&self) -> u64 {
+        self.ops_since_snapshot.load(Ordering::Relaxed)
+    }
+
+    /// Journal, apply, then wait for the durability ack. Returns once
+    /// the record is durable per the fsync policy.
+    pub fn insert(&self, id: u32, code: u64) -> Result<()> {
+        let ticket = {
+            let _g = self.order.lock().unwrap();
+            let t = self.wal.append(&Record::Insert { id, code });
+            self.index.insert(id, code);
+            t
+        };
+        self.ops_since_snapshot.fetch_add(1, Ordering::Relaxed);
+        ticket.wait()
+    }
+
+    /// Encode a feature row with `family` and durably insert it.
+    pub fn insert_point(
+        &self,
+        family: &dyn HashFamily,
+        id: u32,
+        x: FeatRef<'_>,
+    ) -> Result<()> {
+        self.insert(id, family.encode_point(x))
+    }
+
+    /// Journal and apply a removal; `Ok(was_live)` once durable. The
+    /// record is journaled even for an absent id — replay is idempotent
+    /// and the log stays a faithful op history.
+    pub fn remove(&self, id: u32) -> Result<bool> {
+        let (ticket, removed) = {
+            let _g = self.order.lock().unwrap();
+            let t = self.wal.append(&Record::Remove { id });
+            let removed = self.index.remove(id);
+            (t, removed)
+        };
+        self.ops_since_snapshot.fetch_add(1, Ordering::Relaxed);
+        ticket.wait()?;
+        Ok(removed)
+    }
+
+    /// Write a new snapshot generation and collect the segments it
+    /// covers. Safe under concurrent mutations: the order lock is taken
+    /// only for the segment rotation, which guarantees every record in
+    /// the collected segments is already applied (and thus in the
+    /// snapshot); records racing into the fresh segment may also land in
+    /// the snapshot, and replaying them is idempotent.
+    pub fn checkpoint(&self) -> Result<u64> {
+        let _s = self.snap_lock.lock().unwrap();
+        let new_seq = {
+            let _g = self.order.lock().unwrap();
+            self.wal.rotate()?
+        };
+        let ops0 = self.ops_since_snapshot.load(Ordering::Relaxed);
+        let gen = self.snapshot_gen.load(Ordering::Relaxed) + 1;
+        crate::persist::save_sharded(&snapshot::snapshot_path(&self.dir, gen), &self.index)?;
+        snapshot::write_manifest(
+            &self.dir,
+            &snapshot::Manifest { snapshot_gen: gen, replay_from_seq: new_seq },
+        )?;
+        // marker in the fresh segment; diagnostics only, no ack needed
+        let _ = self.wal.append(&Record::Checkpoint { gen });
+        snapshot::gc(&self.dir, gen, new_seq);
+        self.snapshot_gen.store(gen, Ordering::Relaxed);
+        self.ops_since_snapshot.fetch_sub(ops0, Ordering::Relaxed);
+        Ok(gen)
+    }
+
+    /// Force-fsync the log without snapshotting.
+    pub fn flush(&self) -> Result<()> {
+        self.wal.flush()
+    }
+
+    /// Final checkpoint + writer join. After a clean close, recovery
+    /// replays zero records.
+    pub fn close(self) -> Result<()> {
+        self.checkpoint()?;
+        drop(self.wal);
+        Ok(())
+    }
+
+    /// Durability counters for `/stats`.
+    pub fn stats_json(&self) -> Json {
+        let ws = self.wal.stats();
+        let (bmean, bp95, bmax, bcount) = ws.batch_stats();
+        let segments = log::list_segments(&self.dir).map(|s| s.len()).unwrap_or(0);
+        obj(vec![
+            ("wal_records", Json::from(ws.records.load(Ordering::Relaxed) as usize)),
+            ("wal_bytes", Json::from(ws.bytes.load(Ordering::Relaxed) as usize)),
+            ("wal_segments", Json::from(segments)),
+            ("fsyncs", Json::from(ws.fsyncs.load(Ordering::Relaxed) as usize)),
+            ("rotations", Json::from(ws.rotations.load(Ordering::Relaxed) as usize)),
+            ("last_snapshot_gen", Json::from(self.snapshot_gen() as usize)),
+            ("ops_since_snapshot", Json::from(self.ops_since_snapshot() as usize)),
+            (
+                "group_commit",
+                obj(vec![
+                    ("mean_batch", Json::Num(bmean)),
+                    ("p95_batch", Json::Num(bp95)),
+                    ("max_batch", Json::Num(bmax)),
+                    ("batches", Json::from(bcount)),
+                ]),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::online::QueryBudget;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d =
+            std::env::temp_dir().join(format!("chh_wal_mod_{}_{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn cfg(dir: &PathBuf) -> WalConfig {
+        WalConfig { dir: dir.clone(), fsync: FsyncPolicy::Always, segment_bytes: 1 << 20 }
+    }
+
+    #[test]
+    fn journal_apply_recover_cycle() {
+        let dir = tmpdir("cycle");
+        let index = Arc::new(ShardedIndex::new(10, 2, 3));
+        let d = DurableIndex::create(index.clone(), &cfg(&dir)).unwrap();
+        for id in 0..60u32 {
+            d.insert(id, (id % 11) as u64).unwrap();
+        }
+        for id in (0..60u32).step_by(5) {
+            assert!(d.remove(id).unwrap());
+        }
+        assert!(!d.remove(999).unwrap(), "absent id reports not-live");
+        assert_eq!(index.len(), 48);
+        // crash-style end: drop without checkpoint
+        drop(d);
+        let (back, report) = recover(&dir).unwrap();
+        assert_eq!(report.snapshot_gen, 0);
+        assert_eq!(report.inserts, 60);
+        assert_eq!(report.removes, 13);
+        assert_eq!(report.live, 48);
+        assert!(!report.snapshot_fallback);
+        assert_eq!(back.len(), index.len());
+        assert_eq!(back.bits(), 10);
+        assert_eq!(back.radius(), 2);
+        for (a, b) in index.shards().iter().zip(back.shards()) {
+            let (mut ea, mut eb) = (a.live_entries(), b.live_entries());
+            ea.sort_unstable();
+            eb.sort_unstable();
+            assert_eq!(ea, eb);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn clean_close_leaves_nothing_to_replay() {
+        let dir = tmpdir("clean");
+        let index = Arc::new(ShardedIndex::new(8, 2, 2));
+        let d = DurableIndex::create(index, &cfg(&dir)).unwrap();
+        for id in 0..30u32 {
+            d.insert(id, id as u64 & 0x3F).unwrap();
+        }
+        d.close().unwrap();
+        let (back, report) = recover(&dir).unwrap();
+        assert_eq!(report.replayed, 0, "clean shutdown must need no replay");
+        assert_eq!(report.snapshot_gen, 1);
+        assert_eq!(back.len(), 30);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn checkpoint_rotates_and_collects_segments() {
+        let dir = tmpdir("ckpt");
+        let index = Arc::new(ShardedIndex::new(8, 2, 2));
+        let d = DurableIndex::create(index, &cfg(&dir)).unwrap();
+        for id in 0..20u32 {
+            d.insert(id, 1).unwrap();
+        }
+        assert_eq!(d.ops_since_snapshot(), 20);
+        let gen = d.checkpoint().unwrap();
+        assert_eq!(gen, 1);
+        assert_eq!(d.ops_since_snapshot(), 0);
+        // old snapshot + covered segment are gone; one fresh segment left
+        let snaps = snapshot::list_snapshots(&dir).unwrap();
+        assert_eq!(snaps.iter().map(|&(g, _)| g).collect::<Vec<_>>(), vec![1]);
+        let segs = log::list_segments(&dir).unwrap();
+        assert_eq!(segs.len(), 1);
+        assert!(segs[0].0 >= 2);
+        // more ops after the checkpoint land in the new segment
+        d.insert(100, 2).unwrap();
+        drop(d);
+        let (back, report) = recover(&dir).unwrap();
+        assert_eq!(report.snapshot_gen, 1);
+        assert_eq!(report.inserts, 1);
+        assert_eq!(back.len(), 21);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn open_resumes_and_folds_the_suffix() {
+        let dir = tmpdir("open");
+        {
+            let index = Arc::new(ShardedIndex::new(8, 2, 2));
+            let d = DurableIndex::create(index, &cfg(&dir)).unwrap();
+            for id in 0..25u32 {
+                d.insert(id, id as u64 % 7).unwrap();
+            }
+            drop(d); // no checkpoint: suffix lives in the WAL
+        }
+        let (d, report) = DurableIndex::open(&cfg(&dir)).unwrap();
+        assert_eq!(report.replayed, 25);
+        assert_eq!(d.index().len(), 25);
+        // open() checkpointed: a second recover needs nothing
+        let (_, r2) = recover(&dir).unwrap();
+        assert_eq!(r2.replayed, 0);
+        assert!(r2.snapshot_gen > report.snapshot_gen);
+        // and create() refuses to clobber the directory
+        assert!(DurableIndex::create(d.index().clone(), &cfg(&dir)).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn dir_lock_excludes_concurrent_owners() {
+        let dir = tmpdir("lock");
+        let index = Arc::new(ShardedIndex::new(8, 2, 2));
+        let d = DurableIndex::create(index, &cfg(&dir)).unwrap();
+        d.insert(1, 2).unwrap();
+        // a second owner (open or create) must be refused while d lives
+        assert!(DurableIndex::open(&cfg(&dir)).is_err(), "live dir must stay locked");
+        assert!(DurableIndex::create(d.index().clone(), &cfg(&dir)).is_err());
+        drop(d);
+        // the lock dies with its owner; the dir opens normally afterward
+        let (d2, report) = DurableIndex::open(&cfg(&dir)).unwrap();
+        assert_eq!(report.replayed, 1);
+        assert_eq!(d2.index().len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn snapshot_carries_operational_config() {
+        let dir = tmpdir("opcfg");
+        let mut raw = ShardedIndex::new(9, 2, 2);
+        raw.set_compact_threshold(777);
+        raw.set_default_budget(QueryBudget::new(123, 45));
+        let d = DurableIndex::create(Arc::new(raw), &cfg(&dir)).unwrap();
+        d.insert(1, 3).unwrap();
+        drop(d);
+        let (back, _) = recover(&dir).unwrap();
+        assert_eq!(back.compact_threshold(), 777);
+        assert_eq!(back.default_budget().probes, 123);
+        assert_eq!(back.default_budget().top, 45);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

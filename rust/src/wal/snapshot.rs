@@ -1,0 +1,359 @@
+//! Snapshots, the manifest, recovery, and segment GC.
+//!
+//! A durable directory holds three kinds of files:
+//!
+//! ```text
+//! MANIFEST.json               which snapshot is current + where replay starts
+//! snapshot-{gen:016}.chh      full index state (persist::save_sharded format)
+//! wal-{seq:016}.log           record segments after that snapshot
+//! ```
+//!
+//! Every writer is atomic (temp file + fsync + rename via
+//! [`crate::persist::atomic_write`]), and the manifest is only updated
+//! *after* its snapshot is fully durable — so at any crash point the
+//! directory names one complete, loadable snapshot. Recovery loads it
+//! and replays the WAL suffix in seq order; inserts are upserts and
+//! removes are idempotent, so records that are both in the snapshot and
+//! in the suffix (taken while mutators were live) replay harmlessly.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::frame::{read_segment_bytes, Record};
+use super::log::list_segments;
+use crate::jsonio::{obj, Json};
+use crate::online::ShardedIndex;
+
+pub(crate) const MANIFEST: &str = "MANIFEST.json";
+const MANIFEST_VERSION: usize = 1;
+
+/// `dir/snapshot-{gen:016}.chh`
+pub fn snapshot_path(dir: &Path, gen: u64) -> PathBuf {
+    dir.join(format!("snapshot-{gen:016}.chh"))
+}
+
+fn snapshot_gen_of(name: &str) -> Option<u64> {
+    name.strip_prefix("snapshot-")?.strip_suffix(".chh")?.parse().ok()
+}
+
+/// Existing snapshots in `dir`, ascending by generation. `.tmp` leftovers
+/// from an interrupted atomic write never match the suffix, so they are
+/// invisible here by construction.
+pub fn list_snapshots(dir: &Path) -> Result<Vec<(u64, PathBuf)>> {
+    let mut out = Vec::new();
+    for entry in
+        std::fs::read_dir(dir).with_context(|| format!("listing {}", dir.display()))?
+    {
+        let entry = entry?;
+        if let Some(gen) = entry.file_name().to_str().and_then(snapshot_gen_of) {
+            out.push((gen, entry.path()));
+        }
+    }
+    out.sort_by_key(|&(gen, _)| gen);
+    Ok(out)
+}
+
+/// The durable directory's root pointer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Manifest {
+    /// generation of the covering snapshot
+    pub snapshot_gen: u64,
+    /// first WAL segment NOT covered by that snapshot
+    pub replay_from_seq: u64,
+}
+
+pub(crate) fn write_manifest(dir: &Path, m: &Manifest) -> Result<()> {
+    let doc = obj(vec![
+        ("version", Json::from(MANIFEST_VERSION)),
+        ("snapshot_gen", Json::from(m.snapshot_gen as usize)),
+        ("replay_from_seq", Json::from(m.replay_from_seq as usize)),
+    ]);
+    crate::persist::atomic_write(&dir.join(MANIFEST), doc.to_string_pretty().as_bytes())
+}
+
+pub(crate) fn read_manifest(dir: &Path) -> Result<Option<Manifest>> {
+    let path = dir.join(MANIFEST);
+    let text = match std::fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e).with_context(|| format!("reading {}", path.display())),
+    };
+    let v = Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+    let field = |k: &str| {
+        v.get(k)
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing field {k}"))
+    };
+    Ok(Some(Manifest {
+        snapshot_gen: field("snapshot_gen")? as u64,
+        replay_from_seq: field("replay_from_seq")? as u64,
+    }))
+}
+
+/// Whether `dir` looks like a durable index directory.
+pub fn is_wal_dir(dir: &Path) -> bool {
+    dir.join(MANIFEST).is_file()
+}
+
+/// What [`recover`] found and did.
+#[derive(Clone, Debug, Default)]
+pub struct RecoveryReport {
+    /// generation of the snapshot recovery started from
+    pub snapshot_gen: u64,
+    /// live entries in that snapshot
+    pub snapshot_entries: usize,
+    /// whether the manifest's snapshot was unreadable and an older
+    /// generation had to be used (entails replaying every segment)
+    pub snapshot_fallback: bool,
+    /// WAL segments scanned
+    pub segments: usize,
+    /// insert/remove records applied on top of the snapshot
+    pub replayed: usize,
+    pub inserts: usize,
+    pub removes: usize,
+    /// checkpoint markers seen (not applied)
+    pub checkpoints: usize,
+    /// a final segment ended in a torn tail; this many trailing bytes
+    /// were ignored
+    pub torn_bytes: u64,
+    /// a NON-final segment had a bad frame: replay stopped there and
+    /// this many later segments were not applied (data past the damage
+    /// is unrecoverable in order, so it is not applied at all)
+    pub segments_skipped: usize,
+    /// live points after replay + compaction
+    pub live: usize,
+}
+
+impl RecoveryReport {
+    /// Whether part of the durable history could NOT be applied: a bad
+    /// frame before the final segment, or a fallback to an older
+    /// snapshot whose covering segments may already be collected (the
+    /// replayed suffix then lands on a state with a gap). A lossy
+    /// recovery still yields the longest applicable prefix, but
+    /// checkpointing it destroys the unapplied remainder — callers must
+    /// opt in ([`super::DurableIndex::open_forced`]).
+    pub fn lossy(&self) -> bool {
+        self.segments_skipped > 0 || self.snapshot_fallback
+    }
+
+    /// One-line human summary for logs.
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "snapshot gen {} ({} entries){} + {} segments: replayed {} records \
+             ({} inserts, {} removes) -> {} live",
+            self.snapshot_gen,
+            self.snapshot_entries,
+            if self.snapshot_fallback { " [fallback]" } else { "" },
+            self.segments,
+            self.replayed,
+            self.inserts,
+            self.removes,
+            self.live
+        );
+        if self.torn_bytes > 0 {
+            s.push_str(&format!(", torn tail ({} bytes ignored)", self.torn_bytes));
+        }
+        if self.segments_skipped > 0 {
+            s.push_str(&format!(
+                ", CORRUPT mid-log: {} later segments not applied",
+                self.segments_skipped
+            ));
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("snapshot_gen", Json::from(self.snapshot_gen as usize)),
+            ("snapshot_entries", Json::from(self.snapshot_entries)),
+            ("snapshot_fallback", Json::from(self.snapshot_fallback)),
+            ("segments", Json::from(self.segments)),
+            ("replayed", Json::from(self.replayed)),
+            ("inserts", Json::from(self.inserts)),
+            ("removes", Json::from(self.removes)),
+            ("checkpoints", Json::from(self.checkpoints)),
+            ("torn_bytes", Json::from(self.torn_bytes as usize)),
+            ("segments_skipped", Json::from(self.segments_skipped)),
+            ("live", Json::from(self.live)),
+        ])
+    }
+}
+
+/// Rebuild the index from `dir`: newest valid snapshot + idempotent WAL
+/// replay. Read-only — the directory is not modified (use
+/// [`super::DurableIndex::open`] to also checkpoint and resume logging).
+///
+/// Damage tolerance:
+/// * a torn tail in the final segment (crash mid-append) is expected —
+///   replay keeps the longest valid frame prefix and reports the bytes
+///   ignored;
+/// * a bad frame in an earlier segment stops replay at that point (the
+///   longest valid prefix of the whole log) rather than erroring;
+/// * if the manifest's snapshot is unreadable, older generations are
+///   tried, and the full log is replayed over the one that loads.
+pub fn recover(dir: &Path) -> Result<(ShardedIndex, RecoveryReport)> {
+    let manifest = read_manifest(dir)?;
+    let snapshots = list_snapshots(dir)?;
+    if manifest.is_none() && snapshots.is_empty() {
+        bail!("{} is not a durable index directory (no manifest, no snapshots)", dir.display());
+    }
+    let mut report = RecoveryReport::default();
+
+    // pick the snapshot: the manifest's, else newest-loadable fallback
+    let mut index: Option<ShardedIndex> = None;
+    if let Some(m) = manifest {
+        if let Some((_, path)) = snapshots.iter().find(|&&(g, _)| g == m.snapshot_gen) {
+            match crate::persist::load_sharded(path) {
+                Ok(idx) => {
+                    report.snapshot_gen = m.snapshot_gen;
+                    index = Some(idx);
+                }
+                Err(e) => {
+                    eprintln!(
+                        "wal recover: manifest snapshot gen {} unreadable ({e:#}), \
+                         trying older generations",
+                        m.snapshot_gen
+                    );
+                }
+            }
+        }
+    }
+    if index.is_none() {
+        for (gen, path) in snapshots.iter().rev() {
+            match crate::persist::load_sharded(path) {
+                Ok(idx) => {
+                    report.snapshot_gen = *gen;
+                    report.snapshot_fallback = true;
+                    index = Some(idx);
+                    break;
+                }
+                Err(_) => continue,
+            }
+        }
+    }
+    let Some(index) = index else {
+        bail!("no loadable snapshot in {}", dir.display());
+    };
+    report.snapshot_entries = index.len();
+
+    // replay the suffix: from the manifest pointer, or — on fallback —
+    // everything still on disk (older segments may already be GC'd; the
+    // replayed prefix is still the longest recoverable one)
+    let replay_from = match (manifest, report.snapshot_fallback) {
+        (Some(m), false) => m.replay_from_seq,
+        _ => 0,
+    };
+    let segments: Vec<(u64, PathBuf)> = list_segments(dir)?
+        .into_iter()
+        .filter(|&(seq, _)| seq >= replay_from)
+        .collect();
+    let last = segments.len().saturating_sub(1);
+    for (i, (seq, path)) in segments.iter().enumerate() {
+        let data =
+            std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        let read = read_segment_bytes(&data);
+        report.segments += 1;
+        for rec in &read.records {
+            match *rec {
+                Record::Insert { id, code } => {
+                    index.insert(id, code);
+                    report.inserts += 1;
+                    report.replayed += 1;
+                }
+                Record::Remove { id } => {
+                    index.remove(id);
+                    report.removes += 1;
+                    report.replayed += 1;
+                }
+                Record::Checkpoint { .. } => report.checkpoints += 1,
+            }
+        }
+        if read.torn {
+            report.torn_bytes = (data.len() - read.valid_bytes) as u64;
+            if i != last {
+                // damage mid-log: later segments are after the break in
+                // the op order — applying them would reorder history
+                report.segments_skipped = last - i;
+                eprintln!(
+                    "wal recover: bad frame in segment {seq} (not the last); \
+                     stopping replay at the valid prefix"
+                );
+            }
+            break;
+        }
+    }
+    index.compact();
+    report.live = index.len();
+    Ok((index, report))
+}
+
+/// Delete snapshots older than `keep_gen` and segments before
+/// `keep_seq_from`. Called only after the manifest naming `keep_gen` /
+/// `keep_seq_from` is durable. Best-effort: a file that refuses to die
+/// wastes disk but never correctness.
+pub(crate) fn gc(dir: &Path, keep_gen: u64, keep_seq_from: u64) {
+    if let Ok(snaps) = list_snapshots(dir) {
+        for (gen, path) in snaps {
+            if gen < keep_gen {
+                let _ = std::fs::remove_file(path);
+            }
+        }
+    }
+    if let Ok(segs) = list_segments(dir) {
+        for (seq, path) in segs {
+            if seq < keep_seq_from {
+                let _ = std::fs::remove_file(path);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d =
+            std::env::temp_dir().join(format!("chh_wal_snap_{}_{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn manifest_roundtrip_and_missing() {
+        let dir = tmpdir("manifest");
+        assert!(read_manifest(&dir).unwrap().is_none());
+        assert!(!is_wal_dir(&dir));
+        let m = Manifest { snapshot_gen: 3, replay_from_seq: 17 };
+        write_manifest(&dir, &m).unwrap();
+        assert_eq!(read_manifest(&dir).unwrap(), Some(m));
+        assert!(is_wal_dir(&dir));
+        // a stale atomic-write temp file is invisible to the reader
+        std::fs::write(dir.join("MANIFEST.json.tmp"), b"{gar").unwrap();
+        assert_eq!(read_manifest(&dir).unwrap(), Some(m));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn snapshot_listing_skips_tmp_leftovers() {
+        let dir = tmpdir("listing");
+        std::fs::write(snapshot_path(&dir, 2), b"x").unwrap();
+        std::fs::write(snapshot_path(&dir, 10), b"x").unwrap();
+        std::fs::write(dir.join("snapshot-0000000000000011.chh.tmp"), b"trunc").unwrap();
+        std::fs::write(dir.join("unrelated.txt"), b"x").unwrap();
+        let gens: Vec<u64> =
+            list_snapshots(&dir).unwrap().into_iter().map(|(g, _)| g).collect();
+        assert_eq!(gens, vec![2, 10]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn recover_rejects_a_plain_directory() {
+        let dir = tmpdir("empty");
+        assert!(recover(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -15,9 +15,10 @@ use chh::hash::{BhHash, HashFamily};
 use chh::online::{QueryBudget, ShardedIndex};
 use chh::par::Pool;
 use chh::rng::Rng;
-use chh::server::{protocol, BatcherConfig, HttpClient, Server, ServerConfig, Stack};
+use chh::server::{protocol, BatcherConfig, Durability, HttpClient, Server, ServerConfig, Stack};
 use chh::table::HyperplaneIndex;
 use chh::testing::unit_vec;
+use chh::wal::{DurableIndex, FsyncPolicy, WalConfig};
 
 const DIM: usize = 16;
 
@@ -272,6 +273,73 @@ fn malformed_requests_get_clean_errors() {
     assert_eq!(resp.status, 200);
     drop(client);
     handle.shutdown();
+}
+
+#[test]
+fn durable_server_graceful_shutdown_needs_no_replay() {
+    let dir = std::env::temp_dir().join(format!("chh_http_wal_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    // online stack whose ShardedIndex is shared with a DurableIndex
+    let mut rng = Rng::seed_from_u64(61);
+    let ds = test_blobs(200, DIM, 3, &mut rng);
+    let fam: Arc<dyn HashFamily> = Arc::new(BhHash::sample(DIM, 10, &mut rng));
+    let codes = fam.encode_all(ds.features());
+    let idx = Arc::new(ShardedIndex::from_codes(&codes, 4, 3));
+    let feats = Arc::new(ds.features().clone());
+    let router = Arc::new(OnlineRouter::new(
+        fam,
+        idx.clone(),
+        feats,
+        1,
+        16,
+        QueryBudget::new(256, 64),
+    ));
+    let wal_cfg = WalConfig {
+        dir: dir.clone(),
+        fsync: FsyncPolicy::Always,
+        segment_bytes: 1 << 20,
+    };
+    let durable = Arc::new(DurableIndex::create(idx, &wal_cfg).expect("create wal dir"));
+    let handle = Server::spawn_with_durability(
+        Stack::Online(router.clone()),
+        server_cfg(),
+        Some(Durability { durable: durable.clone(), snapshot_every_ops: 0 }),
+    )
+    .expect("spawn durable server");
+    let addr = handle.addr().to_string();
+    let mut client = HttpClient::connect_retry(&addr, Duration::from_secs(5)).unwrap();
+    client.set_timeout(Duration::from_secs(10)).unwrap();
+    // mutate over the wire: 5 removes, 2 inserted back — all journaled
+    for id in 0..5u32 {
+        let resp = client.post("/remove", &protocol::id_body(id)).expect("post remove");
+        assert_eq!(resp.status, 200);
+    }
+    for id in 0..2u32 {
+        let resp = client.post("/insert", &protocol::id_body(id)).expect("post insert");
+        assert_eq!(resp.status, 200);
+    }
+    assert_eq!(router.index().len(), 197);
+    // /stats exposes the durability counters
+    let resp = client.get("/stats").expect("get /stats");
+    let v = chh::jsonio::Json::parse_bytes(&resp.body).expect("stats json");
+    let dur = v.get("durability").expect("durability section");
+    assert_eq!(dur.get("wal_records").and_then(|x| x.as_usize()), Some(7));
+    assert_eq!(dur.get("last_snapshot_gen").and_then(|x| x.as_usize()), Some(0));
+    assert!(dur.get("group_commit").is_some());
+    assert_eq!(v.get("points").and_then(|x| x.as_usize()), Some(200));
+    // graceful shutdown must flush + checkpoint before the server exits
+    let resp = client.post("/shutdown", "").expect("post /shutdown");
+    assert_eq!(resp.status, 200);
+    drop(client);
+    handle.wait();
+    assert!(durable.snapshot_gen() >= 1, "shutdown wrote a checkpoint");
+    drop(router);
+    drop(durable);
+    // a clean stop leaves nothing to replay, and no state is lost
+    let (back, report) = chh::wal::recover(&dir).expect("recover after clean stop");
+    assert_eq!(report.replayed, 0, "clean shutdown must replay zero records");
+    assert_eq!(back.len(), 197, "recovered live count matches the served index");
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]

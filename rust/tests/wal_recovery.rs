@@ -1,0 +1,253 @@
+//! Crash-recovery acceptance tests for the durability subsystem:
+//!
+//! * **Torn-tail fuzz** — truncate a WAL segment at *every* byte
+//!   boundary and assert recovery always yields exactly the longest
+//!   valid prefix of the journaled operations (never an error, never a
+//!   partial frame applied).
+//! * **Crash parity** — after concurrent inserts/removes (with
+//!   checkpoints racing them) and a crash-style stop, the recovered
+//!   index answers hyperplane queries **bit-identically** to the
+//!   pre-crash index over every acknowledged operation.
+//! * **Mid-log corruption** — a bad frame in a non-final segment stops
+//!   replay at the valid prefix instead of erroring or reordering.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use chh::data::test_blobs;
+use chh::hash::{BhHash, HashFamily};
+use chh::online::{QueryBudget, ShardedIndex};
+use chh::rng::Rng;
+use chh::testing::unit_vec;
+use chh::wal::{frame, log, recover, DurableIndex, FsyncPolicy, Record, WalConfig};
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("chh_wal_it_{}_{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn wal_cfg(dir: &PathBuf, segment_bytes: u64) -> WalConfig {
+    WalConfig { dir: dir.clone(), fsync: FsyncPolicy::Always, segment_bytes }
+}
+
+fn sorted_entries(index: &ShardedIndex) -> Vec<Vec<(u32, u64)>> {
+    index
+        .shards()
+        .iter()
+        .map(|s| {
+            let mut e = s.live_entries();
+            e.sort_unstable();
+            e
+        })
+        .collect()
+}
+
+#[test]
+fn torn_tail_fuzz_every_byte_boundary() {
+    let dir = tmpdir("fuzz");
+    let cfg = wal_cfg(&dir, 1 << 20);
+    let d = DurableIndex::create(Arc::new(ShardedIndex::new(12, 2, 3)), &cfg).unwrap();
+    // journal a deterministic op mix (removes may target absent ids —
+    // they journal and replay as no-ops)
+    let mut rng = Rng::seed_from_u64(5);
+    let mut ops: Vec<Record> = Vec::new();
+    for i in 0..40u32 {
+        if i % 4 == 3 {
+            let id = rng.below(40) as u32;
+            let _ = d.remove(id).unwrap();
+            ops.push(Record::Remove { id });
+        } else {
+            let code = rng.next_u64() & chh::hash::codes::mask(12);
+            d.insert(i, code).unwrap();
+            ops.push(Record::Insert { id: i, code });
+        }
+    }
+    // crash-style stop: drop without a checkpoint, ops live only in WAL
+    drop(d);
+    let segs = log::list_segments(&dir).unwrap();
+    assert_eq!(segs.len(), 1, "one big segment expected");
+    let seg_path = segs[0].1.clone();
+    let full = std::fs::read(&seg_path).unwrap();
+    let mut boundaries = vec![0usize];
+    for r in &ops {
+        boundaries.push(boundaries.last().unwrap() + frame::frame_len(r));
+    }
+    assert_eq!(*boundaries.last().unwrap(), full.len(), "frame accounting");
+    for cut in 0..=full.len() {
+        std::fs::write(&seg_path, &full[..cut]).unwrap();
+        let (back, report) =
+            recover(&dir).unwrap_or_else(|e| panic!("cut at byte {cut}: recover errored {e:#}"));
+        // the longest valid prefix = whole frames below the cut
+        let j = boundaries.iter().filter(|&&b| b <= cut).count() - 1;
+        assert_eq!(report.replayed, j, "cut at byte {cut}");
+        assert_eq!(report.torn_bytes, (cut - boundaries[j]) as u64, "cut at byte {cut}");
+        let expect = ShardedIndex::new(12, 2, 3);
+        for r in &ops[..j] {
+            match *r {
+                Record::Insert { id, code } => expect.insert(id, code),
+                Record::Remove { id } => {
+                    expect.remove(id);
+                }
+                Record::Checkpoint { .. } => unreachable!(),
+            }
+        }
+        assert_eq!(back.len(), expect.len(), "cut at byte {cut}");
+        assert_eq!(
+            sorted_entries(&back),
+            sorted_entries(&expect),
+            "cut at byte {cut}: recovered state must be the valid prefix's state"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn crash_parity_under_concurrent_churn_and_checkpoints() {
+    let dir = tmpdir("parity");
+    let mut rng = Rng::seed_from_u64(7);
+    let ds = test_blobs(300, 16, 3, &mut rng);
+    let fam = BhHash::sample(16, 10, &mut rng);
+    let codes = Arc::new(fam.encode_all(ds.features()));
+    // tiny segments: churn forces size-rolls, checkpoints force
+    // rotation + GC, all while appenders run
+    let cfg = wal_cfg(&dir, 2048);
+    let d = Arc::new(
+        DurableIndex::create(Arc::new(ShardedIndex::new(10, 3, 4)), &cfg).unwrap(),
+    );
+    let n = ds.len();
+    let mut joins = Vec::new();
+    for t in 0..4u64 {
+        let d = d.clone();
+        let codes = codes.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Rng::seed_from_u64(100 + t);
+            for _ in 0..150 {
+                let id = rng.below(n) as u32;
+                if rng.bernoulli(0.7) {
+                    d.insert(id, codes.get(id as usize)).unwrap();
+                } else {
+                    let _ = d.remove(id).unwrap();
+                }
+            }
+        }));
+    }
+    let ck = {
+        let d = d.clone();
+        std::thread::spawn(move || {
+            for _ in 0..3 {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+                d.checkpoint().unwrap();
+            }
+        })
+    };
+    for j in joins {
+        j.join().unwrap();
+    }
+    ck.join().unwrap();
+    // every op above was acknowledged (fsync: always) — snapshot the
+    // pre-crash answers, then "crash" (drop without final checkpoint)
+    let pre_index = d.index().clone();
+    let pre_entries = sorted_entries(&pre_index);
+    let pre_len = pre_index.len();
+    drop(d);
+    let (back, report) = recover(&dir).unwrap();
+    assert!(report.snapshot_gen >= 1, "mid-run checkpoints produced snapshots");
+    assert_eq!(back.len(), pre_len, "no acknowledged op may be lost");
+    assert_eq!(sorted_entries(&back), pre_entries, "live (id, code) sets identical");
+    // bit-identical serving: same hits, margins, and probe counters
+    let budget = QueryBudget::new(256, 64);
+    for q in 0..12 {
+        let w = unit_vec(&mut rng, 16);
+        let a = pre_index.query(&fam, &w, ds.features(), budget, |_| true);
+        let b = back.query(&fam, &w, ds.features(), budget, |_| true);
+        match (a.best, b.best) {
+            (Some((ia, ma)), Some((ib, mb))) => {
+                assert_eq!(ia, ib, "query {q}: best id");
+                assert_eq!(ma.to_bits(), mb.to_bits(), "query {q}: bit-identical margin");
+            }
+            (None, None) => {}
+            (x, y) => panic!("query {q}: best mismatch {x:?} vs {y:?}"),
+        }
+        assert_eq!(a.scanned, b.scanned, "query {q}: scanned");
+        assert_eq!(a.probed, b.probed, "query {q}: probed");
+        assert_eq!(a.nonempty, b.nonempty, "query {q}: nonempty");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn mid_log_corruption_yields_valid_prefix_not_error() {
+    let dir = tmpdir("midlog");
+    // ~6 frames per 128-byte segment: 60 inserts spread over many files
+    let cfg = wal_cfg(&dir, 128);
+    let d = DurableIndex::create(Arc::new(ShardedIndex::new(10, 2, 2)), &cfg).unwrap();
+    for id in 0..60u32 {
+        d.insert(id, (id % 13) as u64).unwrap();
+    }
+    drop(d);
+    let segs = log::list_segments(&dir).unwrap();
+    assert!(segs.len() >= 3, "expected several segments, got {}", segs.len());
+    // smash a byte in the middle of the second segment
+    let victim = segs[1].1.clone();
+    let mut bytes = std::fs::read(&victim).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xFF;
+    std::fs::write(&victim, &bytes).unwrap();
+    let (back, report) = recover(&dir).unwrap();
+    assert!(report.segments_skipped >= 1, "later segments must not be applied");
+    assert!(report.torn_bytes > 0);
+    // distinct ids, inserts only ⇒ live count == applied inserts, and
+    // the applied set is a strict prefix of the op order
+    assert_eq!(back.len(), report.inserts);
+    assert!(report.inserts < 60 && report.inserts > 0);
+    for shard in back.shards() {
+        for (id, code) in shard.live_entries() {
+            assert!(id < report.inserts as u32, "only prefix ids may be live");
+            assert_eq!(code, (id % 13) as u64);
+        }
+    }
+    // a lossy recovery must not be checkpointed implicitly: open()
+    // refuses (the damaged segments are the only copy of the lost
+    // tail), while open_forced() accepts the loss explicitly
+    assert!(report.lossy());
+    assert!(
+        DurableIndex::open(&cfg).is_err(),
+        "open() must refuse to checkpoint a lossy recovery"
+    );
+    let (d, forced_report) = DurableIndex::open_forced(&cfg).unwrap();
+    assert_eq!(d.index().len(), report.inserts);
+    assert_eq!(forced_report.inserts, report.inserts);
+    drop(d);
+    // forcing checkpointed the prefix: the dir is clean from here on
+    let (_, clean) = recover(&dir).unwrap();
+    assert!(!clean.lossy());
+    assert_eq!(clean.replayed, 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn reopen_after_crash_then_clean_close_is_stable() {
+    let dir = tmpdir("reopen");
+    let cfg = wal_cfg(&dir, 1 << 20);
+    {
+        let d = DurableIndex::create(Arc::new(ShardedIndex::new(8, 2, 2)), &cfg).unwrap();
+        for id in 0..50u32 {
+            d.insert(id, (id % 5) as u64).unwrap();
+        }
+        drop(d); // crash
+    }
+    // restart: open() replays the suffix and folds it into a checkpoint
+    let (d, report) = DurableIndex::open(&cfg).unwrap();
+    assert_eq!(report.replayed, 50);
+    assert_eq!(d.index().len(), 50);
+    for id in 50..70u32 {
+        d.insert(id, 1).unwrap();
+    }
+    d.close().unwrap();
+    // after a clean close nothing replays, state is complete
+    let (back, r2) = recover(&dir).unwrap();
+    assert_eq!(r2.replayed, 0);
+    assert_eq!(back.len(), 70);
+    let _ = std::fs::remove_dir_all(&dir);
+}
