@@ -21,7 +21,7 @@ use chh::wal::{DurableIndex, FsyncPolicy, WalConfig};
 
 fn durable_in(dir: std::path::PathBuf, fsync: FsyncPolicy) -> DurableIndex {
     let _ = std::fs::remove_dir_all(&dir);
-    let cfg = WalConfig { dir, fsync, segment_bytes: 64 << 20 };
+    let cfg = WalConfig { dir, fsync, segment_bytes: 64 << 20, faults: None };
     DurableIndex::create(Arc::new(ShardedIndex::new(16, 2, 4)), &cfg)
         .expect("create bench wal dir")
 }

@@ -22,7 +22,10 @@
 //!   micro-batching (see [`server`] and `docs/SERVING.md`), a durability
 //!   subsystem for the online index — write-ahead log, background
 //!   snapshots, crash recovery (see [`wal`] and `docs/DURABILITY.md`) —
-//!   and the PJRT runtime that executes AOT-compiled XLA artifacts.
+//!   replicated serving via WAL shipping — primary/replica read scaling
+//!   with bit-identical replica answers (see [`replicate`] and
+//!   `docs/REPLICATION.md`) — and the PJRT runtime that executes
+//!   AOT-compiled XLA artifacts.
 //! * **L2 (python/compile/model.py)** — JAX graphs for batch encoding,
 //!   LBH Nesterov training steps, margin scans and Hamming ranking, lowered
 //!   once to HLO text by `make artifacts`.
@@ -92,6 +95,7 @@ pub mod metrics;
 pub mod online;
 pub mod par;
 pub mod persist;
+pub mod replicate;
 pub mod report;
 pub mod rng;
 pub mod runtime;
@@ -110,6 +114,7 @@ pub mod prelude {
     pub use crate::lbh::{LbhTrainer, LbhTrainConfig};
     pub use crate::online::{ProbePlanner, QueryBudget, ShardedIndex};
     pub use crate::par::Pool;
+    pub use crate::replicate::{ReplicaConfig, ReplicaIndex};
     pub use crate::rng::Rng;
     pub use crate::svm::{LinearSvm, SvmConfig};
     pub use crate::table::{HyperplaneIndex, QueryHit};

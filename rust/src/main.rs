@@ -8,9 +8,11 @@
 //! * `serve`           — run the hyperplane-query router on synthetic load
 //! * `serve-online`    — sharded dynamic index under 50/50 churn + queries
 //! * `serve-http`      — HTTP front-end with dynamic micro-batching
-//!   (with `--wal-dir`: WAL-backed durability and crash recovery)
+//!   (`--wal-dir`: WAL-backed durability; `--replica-of`: read replica
+//!   tailing a primary's WAL stream)
 //! * `recover`         — rebuild an online index from a WAL directory
 //! * `loadgen`         — open/closed-loop load generator for serve-http
+//!   (`--replicas`: round-robin read fan-out across a replica fleet)
 //! * `encode`          — batch-encode a synthetic dataset (native vs PJRT)
 
 use std::sync::Arc;
@@ -71,9 +73,9 @@ fn usage() -> String {
        train-hash    train LBH projections, print diagnostics\n\
        serve         hyperplane-query router under synthetic load\n\
        serve-online  sharded dynamic index under churn + query load\n\
-       serve-http    HTTP/1.1 front-end with dynamic micro-batching (--wal-dir: durability)\n\
+       serve-http    HTTP/1.1 front-end (--wal-dir: durability; --replica-of: read replica)\n\
        recover       rebuild an online index from a WAL directory\n\
-       loadgen       open/closed-loop load generator for serve-http\n\
+       loadgen       load generator for serve-http (--replicas: read fan-out)\n\
        encode        batch-encode a synthetic dataset (native vs PJRT)\n\
        eval          retrieval quality (recall@T, margin ratio) per family\n\
        theorem2      randomized multi-table LSH vs the compact single table\n\
@@ -699,6 +701,13 @@ fn cmd_serve_http(rest: &[String]) -> anyhow::Result<()> {
         "0",
         "wal: background checkpoint after this many mutations (0 = shutdown only)",
     )
+    .opt(
+        "replica-of",
+        "",
+        "online: run as a read replica of this primary (tail its WAL stream; \
+         start with the SAME profile/n/bits/seed)",
+    )
+    .opt("poll-ms", "20", "replica: stream poll interval once caught up (ms)")
     .opt("for-secs", "0", "serve this long then exit (0 = until POST /shutdown)");
     let p = args.parse(rest).map_err(|h| anyhow::anyhow!("{h}"))?;
     let cfg = ExperimentConfig::from_parsed(&p)?;
@@ -710,11 +719,22 @@ fn cmd_serve_http(rest: &[String]) -> anyhow::Result<()> {
     let pool = chh::par::Pool::new(cfg.workers);
     let mode = p.str("mode").to_string();
     let wal_dir = p.str("wal-dir").to_string();
+    let replica_of = p.str("replica-of").to_string();
     anyhow::ensure!(
         wal_dir.is_empty() || mode == "online",
         "--wal-dir requires --mode online (the static index is immutable)"
     );
+    anyhow::ensure!(
+        replica_of.is_empty() || mode == "online",
+        "--replica-of requires --mode online"
+    );
+    anyhow::ensure!(
+        replica_of.is_empty() || wal_dir.is_empty(),
+        "--replica-of and --wal-dir are mutually exclusive (replicas keep no local WAL; \
+         the primary's directory is the source of truth)"
+    );
     let mut durability: Option<chh::server::Durability> = None;
+    let mut replica_role: Option<chh::server::ReplicaRole> = None;
     let stack = match mode.as_str() {
         "static" => {
             let index = Arc::new(HyperplaneIndex::build_with(
@@ -757,64 +777,149 @@ fn cmd_serve_http(rest: &[String]) -> anyhow::Result<()> {
                 }
                 Ok(())
             };
+            if !replica_of.is_empty() {
+                anyhow::ensure!(
+                    p.str("snapshot").is_empty(),
+                    "--replica-of bootstraps from the primary; --snapshot is not used"
+                );
+                // parity requires the replica to encode queries and rank
+                // margins exactly like the primary: same feature store
+                // (profile/n/seed) and same sampled family (bits/seed).
+                // Check what the primary advertises before bootstrapping.
+                let mut probe = chh::server::HttpClient::connect_retry(
+                    &replica_of,
+                    std::time::Duration::from_secs(10),
+                )
+                .map_err(|e| anyhow::anyhow!("connecting to primary {replica_of}: {e}"))?;
+                probe.set_timeout(std::time::Duration::from_secs(10))?;
+                let resp = probe
+                    .get("/stats")
+                    .map_err(|e| anyhow::anyhow!("GET /stats on primary: {e}"))?;
+                anyhow::ensure!(resp.status == 200, "primary /stats returned {}", resp.status);
+                let s = chh::jsonio::Json::parse_bytes(&resp.body)
+                    .map_err(|e| anyhow::anyhow!("parsing primary /stats: {e}"))?;
+                let sfield = |k: &str| s.get(k).and_then(|x| x.as_usize());
+                anyhow::ensure!(
+                    s.get("mode").and_then(|m| m.as_str()) == Some("online"),
+                    "primary must serve --mode online"
+                );
+                anyhow::ensure!(
+                    s.get("durability").is_some(),
+                    "primary has no WAL (start it with --wal-dir) — nothing to replicate"
+                );
+                anyhow::ensure!(
+                    sfield("dim") == Some(data.dim()) && sfield("points") == Some(data.len()),
+                    "primary serves dim={:?} points={:?} but this replica built dim={} \
+                     points={} — start the replica with the primary's profile/n/seed",
+                    sfield("dim"),
+                    sfield("points"),
+                    data.dim(),
+                    data.len()
+                );
+                anyhow::ensure!(
+                    sfield("bits") == Some(fam.bits())
+                        && s.get("family").and_then(|f| f.as_str()) == Some(fam.name()),
+                    "primary hashes with {:?}/{:?} bits but this replica sampled {}/{} — \
+                     match --bits and --seed",
+                    s.get("family").and_then(|f| f.as_str()),
+                    sfield("bits"),
+                    fam.name(),
+                    fam.bits()
+                );
+                // name+bits match can still hide a --seed mismatch (same
+                // shape, different hyperplanes) — compare the content
+                // fingerprint of the actual sampled family
+                let local_check =
+                    chh::replicate::family_fingerprint(fam.as_ref(), data.dim()) as usize;
+                anyhow::ensure!(
+                    sfield("family_check") == Some(local_check),
+                    "primary's hash family fingerprint {:?} != this replica's {local_check} \
+                     — the sampled hyperplanes differ; start the replica with the \
+                     primary's --seed (and --bits/--profile)",
+                    sfield("family_check")
+                );
+                drop(probe);
+            }
             // an existing durable directory wins over --snapshot and the
             // fresh build: the server resumes exactly where it crashed
-            let (index, budget) = match &wal_cfg {
-                Some(c) if chh::wal::is_wal_dir(&c.dir) => {
-                    let (durable, report) = chh::wal::DurableIndex::open(c)?;
-                    eprintln!(
-                        "serve-http: recovered {}: {}",
-                        c.dir.display(),
-                        report.summary()
-                    );
-                    let index = durable.index().clone();
-                    validate(&index, "recovered state")?;
-                    let budget = resolve_budget(&p, &index)?;
-                    // write the resolved budget back so an explicit
-                    // --probes override survives the next checkpoint
-                    index.set_default_budget(budget);
-                    durability = Some(chh::server::Durability {
-                        durable: Arc::new(durable),
-                        snapshot_every_ops: snapshot_every,
-                    });
-                    (index, budget)
-                }
-                _ => {
-                    let snap = p.str("snapshot");
-                    let index = if snap.is_empty() {
-                        let index = ShardedIndex::new(
-                            cfg.bits(),
-                            cfg.radius(),
-                            p.usize("shards")?.max(1),
-                        );
-                        for i in 0..data.len() {
-                            index.insert_point(fam.as_ref(), i as u32, data.features().row(i));
-                        }
-                        index.compact();
-                        index
-                    } else {
-                        let index = chh::persist::load_sharded(std::path::Path::new(snap))?;
-                        validate(&index, "snapshot")?;
-                        index
-                    };
-                    let budget = resolve_budget(&p, &index)?;
-                    // carry the operational budget in the index so
-                    // snapshots (and the WAL base snapshot) restore it
-                    index.set_default_budget(budget);
-                    let index = Arc::new(index);
-                    if let Some(c) = &wal_cfg {
-                        let durable =
-                            Arc::new(chh::wal::DurableIndex::create(index.clone(), c)?);
+            let (index, budget) = if !replica_of.is_empty() {
+                let mut rcfg = chh::replicate::ReplicaConfig::new(&replica_of);
+                rcfg.poll = std::time::Duration::from_millis(p.u64("poll-ms")?.max(1));
+                let replica = chh::replicate::ReplicaIndex::bootstrap(&rcfg)
+                    .map_err(|e| anyhow::anyhow!("bootstrapping from {replica_of}: {e:#}"))?;
+                let index = replica.index().clone();
+                validate(&index, "bootstrap snapshot")?;
+                let budget = resolve_budget(&p, &index)?;
+                index.set_default_budget(budget);
+                eprintln!(
+                    "serve-http: bootstrapped replica of {replica_of} ({} live points)",
+                    index.len()
+                );
+                let tailer = chh::replicate::spawn_tailer(replica.clone(), rcfg);
+                replica_role = Some(chh::server::ReplicaRole {
+                    replica,
+                    primary_addr: replica_of.clone(),
+                    tailer: Some(tailer),
+                });
+                (index, budget)
+            } else {
+                match &wal_cfg {
+                    Some(c) if chh::wal::is_wal_dir(&c.dir) => {
+                        let (durable, report) = chh::wal::DurableIndex::open(c)?;
                         eprintln!(
-                            "serve-http: durable dir {} initialized (base snapshot gen 0)",
-                            c.dir.display()
+                            "serve-http: recovered {}: {}",
+                            c.dir.display(),
+                            report.summary()
                         );
+                        let index = durable.index().clone();
+                        validate(&index, "recovered state")?;
+                        let budget = resolve_budget(&p, &index)?;
+                        // write the resolved budget back so an explicit
+                        // --probes override survives the next checkpoint
+                        index.set_default_budget(budget);
                         durability = Some(chh::server::Durability {
-                            durable,
+                            durable: Arc::new(durable),
                             snapshot_every_ops: snapshot_every,
                         });
+                        (index, budget)
                     }
-                    (index, budget)
+                    _ => {
+                        let snap = p.str("snapshot");
+                        let index = if snap.is_empty() {
+                            let index = ShardedIndex::new(
+                                cfg.bits(),
+                                cfg.radius(),
+                                p.usize("shards")?.max(1),
+                            );
+                            for i in 0..data.len() {
+                                index.insert_point(fam.as_ref(), i as u32, data.features().row(i));
+                            }
+                            index.compact();
+                            index
+                        } else {
+                            let index = chh::persist::load_sharded(std::path::Path::new(snap))?;
+                            validate(&index, "snapshot")?;
+                            index
+                        };
+                        let budget = resolve_budget(&p, &index)?;
+                        // carry the operational budget in the index so
+                        // snapshots (and the WAL base snapshot) restore it
+                        index.set_default_budget(budget);
+                        let index = Arc::new(index);
+                        if let Some(c) = &wal_cfg {
+                            let durable =
+                                Arc::new(chh::wal::DurableIndex::create(index.clone(), c)?);
+                            eprintln!(
+                                "serve-http: durable dir {} initialized (base snapshot gen 0)",
+                                c.dir.display()
+                            );
+                            durability = Some(chh::server::Durability {
+                                durable,
+                                snapshot_every_ops: snapshot_every,
+                            });
+                        }
+                        (index, budget)
+                    }
                 }
             };
             let router = chh::coordinator::OnlineRouter::new(
@@ -842,7 +947,10 @@ fn cmd_serve_http(rest: &[String]) -> anyhow::Result<()> {
         pool_workers: cfg.workers,
         idle_timeout: std::time::Duration::from_secs(5),
     };
-    let handle = Server::spawn_with_durability(stack, server_cfg, durability)?;
+    let handle = match replica_role {
+        Some(role) => Server::spawn_replica(stack, server_cfg, role)?,
+        None => Server::spawn_with_durability(stack, server_cfg, durability)?,
+    };
     println!(
         "serve-http: listening on {} (mode={mode}, n={}, dim={}, k={}, r={}, \
          batch<={max_batch}, wait<={max_wait_us}us{})",
@@ -851,7 +959,9 @@ fn cmd_serve_http(rest: &[String]) -> anyhow::Result<()> {
         data.dim(),
         cfg.bits(),
         cfg.radius(),
-        if wal_dir.is_empty() {
+        if !replica_of.is_empty() {
+            format!(", replica-of={replica_of}")
+        } else if wal_dir.is_empty() {
             String::new()
         } else {
             format!(", wal={wal_dir} fsync={}", p.str("fsync"))
@@ -936,6 +1046,10 @@ fn cmd_recover(rest: &[String]) -> anyhow::Result<()> {
             ("tool", Json::from("recover")),
             ("wal_dir", Json::from(dir.as_str())),
             ("report", report.to_json()),
+            // the WAL position replay stopped at — replication tests use
+            // this (with --inspect) to assert convergence points
+            ("last_applied_seq", Json::from(report.end_seg as usize)),
+            ("last_applied_off", Json::from(report.end_off as usize)),
             ("bits", Json::from(index.bits())),
             ("radius", Json::from(index.radius())),
             ("shards", Json::from(index.shard_count())),
@@ -962,7 +1076,12 @@ fn cmd_loadgen(rest: &[String]) -> anyhow::Result<()> {
     use chh::server::HttpClient;
     use std::time::{Duration, Instant};
     let args = Args::new("chh loadgen", "open/closed-loop load generator for chh serve-http")
-        .opt("addr", "127.0.0.1:8080", "server address")
+        .opt("addr", "127.0.0.1:8080", "server address (the primary: mutations always go here)")
+        .opt(
+            "replicas",
+            "",
+            "comma-separated replica addrs; reads round-robin across primary + replicas",
+        )
         .opt("queries", "1000", "total queries to send")
         .opt("concurrency", "8", "client connections (one thread each)")
         .opt("mode", "closed", "closed (back-to-back) | open (paced by --rate)")
@@ -1017,28 +1136,88 @@ fn cmd_loadgen(rest: &[String]) -> anyhow::Result<()> {
         anyhow::ensure!(points > 0, "/stats reports no points to mutate");
     }
     drop(probe);
+    // read fan-out targets: the primary plus any replicas
+    let mut read_addrs: Vec<String> = vec![addr.clone()];
+    for r in p.str("replicas").split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        read_addrs.push(r.to_string());
+    }
     println!(
         "loadgen: {queries} queries (dim={dim}) -> {addr} [{server_mode}]  \
-         {} loop, {conc} connections{}",
+         {} loop, {conc} connections{}{}",
         if open_loop { "open" } else { "closed" },
-        if open_loop { format!(", target {rate:.0} q/s") } else { String::new() }
+        if open_loop { format!(", target {rate:.0} q/s") } else { String::new() },
+        if read_addrs.len() > 1 {
+            format!(", reads round-robin over {} targets", read_addrs.len())
+        } else {
+            String::new()
+        }
     );
+
+    /// One lazily-(re)connected keep-alive client. Honors
+    /// `Connection: close` (shed 503s and shutdown replies close the
+    /// socket — keeping a dead connection burns the next request as a
+    /// spurious transport failure) and drops the client on errors so
+    /// the next request reconnects instead of failing forever.
+    struct Conn {
+        addr: String,
+        client: Option<HttpClient>,
+    }
+
+    impl Conn {
+        fn new(addr: String) -> Conn {
+            Conn { addr, client: None }
+        }
+
+        fn post(&mut self, path: &str, body: &str) -> Option<chh::server::http::Response> {
+            if self.client.is_none() {
+                // bounded connect: a dead replica in the rotation costs
+                // 1s per touch, not the OS's multi-minute SYN schedule
+                let c =
+                    HttpClient::connect_with_timeout(&self.addr, Duration::from_secs(1)).ok()?;
+                let _ = c.set_timeout(Duration::from_secs(30));
+                self.client = Some(c);
+            }
+            let c = self.client.as_mut().expect("client just connected");
+            match c.post(path, body) {
+                Ok(resp) => {
+                    if !resp.keep_alive {
+                        self.client = None;
+                    }
+                    Some(resp)
+                }
+                Err(_) => {
+                    self.client = None;
+                    None
+                }
+            }
+        }
+    }
+
     let t0 = Instant::now();
     let mut handles = Vec::new();
     for t in 0..conc {
         let n_t = queries / conc + usize::from(t < queries % conc);
         let addr = addr.clone();
+        let read_addrs = read_addrs.clone();
         handles.push(std::thread::spawn(
             move || -> (Histogram, usize, usize, usize, usize) {
                 let mut h = Histogram::new();
                 let (mut ok, mut rejected, mut failed) = (0usize, 0usize, 0usize);
                 let mut mok = 0usize;
                 let mut rng = Rng::seed_from_u64(seed ^ (0x9E3779B9 + t as u64));
-                let mut client = match HttpClient::connect_retry(&addr, Duration::from_secs(5)) {
-                    Ok(c) => c,
-                    Err(_) => return (h, 0, 0, n_t, 0),
-                };
-                let _ = client.set_timeout(Duration::from_secs(30));
+                let mut primary = Conn::new(addr);
+                let mut readers: Vec<Conn> =
+                    read_addrs.into_iter().map(Conn::new).collect();
+                // the server may still be binding: prime the primary
+                // connection with a retry window before the timed run
+                if let Ok(c) = HttpClient::connect_retry(&primary.addr, Duration::from_secs(5))
+                {
+                    let _ = c.set_timeout(Duration::from_secs(30));
+                    primary.client = Some(c);
+                }
+                // stagger the rotation so concurrent threads spread
+                // their first reads across the fleet
+                let mut rr = t;
                 let interval = if open_loop { conc as f64 / rate.max(1e-9) } else { 0.0 };
                 let start = Instant::now();
                 for i in 0..n_t {
@@ -1068,39 +1247,26 @@ fn cmd_loadgen(rest: &[String]) -> anyhow::Result<()> {
                         }
                     };
                     let q0 = Instant::now();
-                    let reconnect = match client.post(path, &body) {
-                        Ok(resp) => {
-                            match resp.status {
-                                200 if is_mutation => mok += 1,
-                                200 => {
-                                    h.record(q0.elapsed().as_secs_f64());
-                                    ok += 1;
-                                }
-                                503 => rejected += 1,
-                                _ => failed += 1,
-                            }
-                            // honor Connection: close (shed 503s and
-                            // shutdown replies close the socket) — keep
-                            // using a dead connection and the next query
-                            // burns as a spurious transport failure
-                            !resp.keep_alive
-                        }
-                        Err(_) => {
-                            failed += 1;
-                            true
-                        }
+                    // mutations always hit the primary (replicas answer
+                    // them 421); reads round-robin across the fleet
+                    let resp = if is_mutation {
+                        primary.post(path, &body)
+                    } else {
+                        let k = rr % readers.len();
+                        rr += 1;
+                        readers[k].post(path, &body)
                     };
-                    if reconnect {
-                        match HttpClient::connect(&addr) {
-                            Ok(c) => {
-                                client = c;
-                                let _ = client.set_timeout(Duration::from_secs(30));
+                    match resp {
+                        Some(resp) => match resp.status {
+                            200 if is_mutation => mok += 1,
+                            200 => {
+                                h.record(q0.elapsed().as_secs_f64());
+                                ok += 1;
                             }
-                            Err(_) => {
-                                failed += n_t - i - 1;
-                                break;
-                            }
-                        }
+                            503 => rejected += 1,
+                            _ => failed += 1,
+                        },
+                        None => failed += 1,
                     }
                 }
                 (h, ok, rejected, failed, mok)

@@ -100,6 +100,34 @@ impl Stopwatch {
     }
 }
 
+/// A lock-free integer gauge for serving-path counters and positions
+/// (replication lag, stream offsets, reconnect counts). Thin wrapper
+/// over an atomic so readers (`/stats`) never contend with the writer;
+/// a pair of gauges updated together is *not* read atomically — guard
+/// with a lock where torn pairs matter (cf.
+/// [`crate::wal::WalStats::durable_watermark`]).
+#[derive(Debug, Default)]
+pub struct Gauge(std::sync::atomic::AtomicU64);
+
+impl Gauge {
+    pub fn new(v: u64) -> Self {
+        Gauge(std::sync::atomic::AtomicU64::new(v))
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(std::sync::atomic::Ordering::Acquire)
+    }
+
+    pub fn set(&self, v: u64) {
+        self.0.store(v, std::sync::atomic::Ordering::Release)
+    }
+
+    /// Add `d` and return the new value.
+    pub fn add(&self, d: u64) -> u64 {
+        self.0.fetch_add(d, std::sync::atomic::Ordering::AcqRel) + d
+    }
+}
+
 /// Sample reservoir with percentile queries. [`Self::new`] keeps every
 /// sample (bench/eval uses, where run length is known and bounded);
 /// [`Self::with_capacity`] keeps a ring of the most recent `cap`
@@ -249,6 +277,17 @@ mod tests {
         assert_eq!(precision_at_k(&scores, &rel, 1), 1.0);
         assert_eq!(precision_at_k(&scores, &rel, 2), 0.5);
         assert_eq!(precision_at_k(&scores, &rel, 4), 0.5);
+    }
+
+    #[test]
+    fn gauge_set_get_add() {
+        let g = Gauge::new(5);
+        assert_eq!(g.get(), 5);
+        g.set(11);
+        assert_eq!(g.get(), 11);
+        assert_eq!(g.add(3), 14);
+        assert_eq!(g.get(), 14);
+        assert_eq!(Gauge::default().get(), 0);
     }
 
     #[test]

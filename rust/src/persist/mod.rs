@@ -358,7 +358,14 @@ pub fn load_sharded(path: &Path) -> Result<crate::online::ShardedIndex> {
     std::fs::File::open(path)
         .with_context(|| format!("opening {}", path.display()))?
         .read_to_end(&mut data)?;
-    let sections = read_sections(&data)?;
+    load_sharded_bytes(&data).with_context(|| format!("parsing {}", path.display()))
+}
+
+/// [`load_sharded`] over bytes already in memory — the replication
+/// bootstrap hands the snapshot over the wire instead of a path
+/// ([`crate::replicate::ReplicaIndex::bootstrap`]).
+pub fn load_sharded_bytes(data: &[u8]) -> Result<crate::online::ShardedIndex> {
+    let sections = read_sections(data)?;
     let mut index: Option<crate::online::ShardedIndex> = None;
     let mut config: Option<(u64, u64, u64)> = None;
     let mut loaded = 0u64;

@@ -1,0 +1,83 @@
+//! Replicated serving: WAL shipping from a durable primary to N read
+//! replicas — the horizontal read-scaling layer over [`crate::wal`] and
+//! [`crate::server`].
+//!
+//! ```text
+//!              writes                        GET /wal/stream?seg&off
+//!  clients ──▶ primary (serve-http --wal-dir) ◀──────────────┐
+//!              │ WAL: journal → fsync → durable watermark    │ tail + apply
+//!              ▼                                             │ (order lock)
+//!           snapshots ── GET /wal/bootstrap ──▶ replica (serve-http --replica-of)
+//!  clients ──▶ reads (round-robin) ──▶ replicas: /query /query_topk /stats
+//!                                      mutations → 421 + primary address
+//! ```
+//!
+//! Three pieces:
+//!
+//! * **Wire** ([`wire`]) — binary chunk formats for the two transfer
+//!   endpoints; total decoding, clean errors on any damage.
+//! * **Primary** ([`primary`]) — lock-free handlers over the durable
+//!   directory: the stream serves whole WAL frames **capped at the
+//!   fsynced watermark** (an op a crash could lose is never shipped),
+//!   and the bootstrap serves windowed snapshot bytes pinned to a
+//!   generation (superseded mid-transfer → `409`, restart).
+//! * **Replica** ([`replica`]) — [`ReplicaIndex`] applies records in
+//!   journal order under an order lock, exactly like the primary's
+//!   [`crate::wal::DurableIndex`], so replica query answers are
+//!   **bit-identical** to the primary's for every durable prefix
+//!   (`rust/tests/replication_faults.rs` asserts this at every frame
+//!   boundary); the [`Tailer`] drives it, reconnecting through primary
+//!   restarts and re-bootstrapping when it falls behind a segment GC.
+//!
+//! `chh serve-http --replica-of <addr>` runs the replica; `chh loadgen
+//! --replicas <addrs>` fans reads out across the fleet. Protocol, lag
+//! semantics and the failover runbook live in `docs/REPLICATION.md`.
+
+pub mod primary;
+pub mod replica;
+pub mod wire;
+
+pub use replica::{spawn_tailer, ReplicaConfig, ReplicaIndex, Tailer};
+pub use wire::{BootstrapChunk, StreamChunk};
+
+use crate::hash::HashFamily;
+
+/// Content fingerprint of a hash family: an FNV-1a fold of the codes it
+/// assigns to a small deterministic probe set. Two families sampled with
+/// different seeds (same dim/bits/kind) fingerprint differently with
+/// overwhelming probability, so a replica can verify it holds the
+/// primary's *actual* hyperplanes — `bits`+`family` name alone cannot
+/// catch a `--seed` mismatch, which would silently break answer parity.
+/// Served in `/stats` as `family_check`; 32-bit so it survives the JSON
+/// f64 number path exactly.
+pub fn family_fingerprint(family: &dyn HashFamily, dim: usize) -> u32 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for i in 0..4usize {
+        let w: Vec<f32> = (0..dim)
+            .map(|j| ((i * 31 + j * 17) % 23) as f32 / 7.0 - 1.5)
+            .collect();
+        for b in family.encode_query(&w).to_le_bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    (h ^ (h >> 32)) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hash::BhHash;
+    use crate::rng::Rng;
+
+    #[test]
+    fn family_fingerprint_is_deterministic_and_seed_sensitive() {
+        let a = BhHash::sample(16, 10, &mut Rng::seed_from_u64(1));
+        let b = BhHash::sample(16, 10, &mut Rng::seed_from_u64(2));
+        assert_eq!(family_fingerprint(&a, 16), family_fingerprint(&a, 16));
+        assert_ne!(
+            family_fingerprint(&a, 16),
+            family_fingerprint(&b, 16),
+            "different seeds must fingerprint differently"
+        );
+    }
+}

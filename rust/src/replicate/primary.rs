@@ -1,0 +1,336 @@
+//! Primary-side replication: serve the WAL stream and snapshot bootstrap
+//! off a live [`DurableIndex`]'s directory.
+//!
+//! Both handlers are pure reads over the durable directory — they take
+//! no locks against the WAL writer or the snapshotter. Safety comes from
+//! two invariants the durability subsystem already maintains:
+//!
+//! * **The durable watermark** ([`crate::wal::WalStats::durable_watermark`])
+//!   bounds what the stream serves. Bytes past the last fsync exist in
+//!   the page cache but can vanish in a crash; shipping them would let a
+//!   replica apply an operation the primary is allowed to lose. The
+//!   stream therefore caps every read at the watermark — a replica's
+//!   state is always a prefix of the *durable* history.
+//! * **Snapshot files are immutable** once their atomic rename lands, so
+//!   a windowed bootstrap transfer pinned to a generation is internally
+//!   consistent; if a checkpoint supersedes (and GCs) that generation
+//!   mid-transfer, the next window gets `409 Conflict` and the replica
+//!   restarts the transfer against the new generation.
+//!
+//! A replica that asks for a segment the checkpointer already collected
+//! gets a chunk with `bootstrap_required` set instead of an error — the
+//! signal to fall back from tailing to a fresh snapshot transfer.
+
+use std::io::{Read, Seek, SeekFrom};
+use std::path::Path;
+
+use crate::server::protocol::ProtoError;
+use crate::wal::{frame, log, snapshot, DurableIndex};
+
+use super::wire::{self, BootstrapChunk, StreamChunk};
+
+/// Per-response cap on streamed frame bytes (also the cap on the `max`
+/// query parameter). Well under the HTTP body limit.
+pub const MAX_STREAM_BYTES: usize = 1 << 20;
+/// Per-response cap on bootstrap snapshot bytes.
+pub const MAX_BOOTSTRAP_BYTES: usize = 4 << 20;
+
+fn internal(msg: String) -> ProtoError {
+    ProtoError { status: 500, msg }
+}
+
+/// Answer `GET /wal/stream?seg=<n>&off=<n>[&max=<bytes>]`.
+pub fn handle_stream(d: &DurableIndex, query: &str) -> Result<StreamChunk, ProtoError> {
+    let seg = wire::param_u64(query, "seg")
+        .ok_or_else(|| ProtoError::bad("missing seg parameter"))?;
+    let off = wire::param_u64(query, "off").unwrap_or(0);
+    let max = wire::param_u64(query, "max")
+        .unwrap_or(MAX_STREAM_BYTES as u64)
+        .clamp(1, MAX_STREAM_BYTES as u64) as usize;
+    let (durable_seg, durable_off) = d.durable_watermark();
+    stream_from_dir(d.dir(), seg, off, max, durable_seg, durable_off)
+}
+
+/// The stream read itself, parameterized on the directory and watermark
+/// (separable for tests).
+pub fn stream_from_dir(
+    dir: &Path,
+    seg: u64,
+    off: u64,
+    max: usize,
+    durable_seg: u64,
+    durable_off: u64,
+) -> Result<StreamChunk, ProtoError> {
+    let mut chunk = StreamChunk {
+        seg,
+        off,
+        next_seg: seg,
+        next_off: off,
+        durable_seg,
+        durable_off,
+        bootstrap_required: false,
+        frames: Vec::new(),
+    };
+    if seg > durable_seg || (seg == durable_seg && off > durable_off) {
+        // A correct replica can never be ahead of the watermark: every
+        // position it holds came from one of our own next-pointers,
+        // which stop at the fsynced frontier, and the frontier is
+        // monotone across restarts of the same directory. Being ahead
+        // means the history itself regressed (the WAL dir was wiped or
+        // replaced) — tell the replica to re-bootstrap onto the new
+        // history instead of letting it poll empty chunks forever.
+        chunk.bootstrap_required = true;
+        return Ok(chunk);
+    }
+    if seg == durable_seg && off == durable_off {
+        // caught-up idle poll — the common steady state: answer without
+        // touching the filesystem at all
+        return Ok(chunk);
+    }
+    let mut file = match std::fs::File::open(log::segment_path(dir, seg)) {
+        Ok(f) => f,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            // a checkpoint collected this segment: the replica is too
+            // far behind to tail — it must re-bootstrap
+            chunk.bootstrap_required = true;
+            return Ok(chunk);
+        }
+        Err(e) => return Err(internal(format!("opening wal segment {seg}: {e}"))),
+    };
+    let file_len = file
+        .metadata()
+        .map_err(|e| internal(format!("stat wal segment {seg}: {e}")))?
+        .len();
+    // never serve past the fsynced frontier; segments before the one the
+    // writer holds open are complete and fully durable
+    let cap = if seg < durable_seg { file_len } else { file_len.min(durable_off) };
+    if off < cap {
+        // windowed read, not the whole (up to segment_bytes) file: max
+        // budget plus one max-size frame, so the at-least-one-frame rule
+        // holds even when the first frame exceeds `max`
+        let window =
+            (cap - off).min((max + frame::FRAME_HEADER + frame::MAX_PAYLOAD) as u64) as usize;
+        let mut avail = vec![0u8; window];
+        // safe against concurrent appends: the file only ever grows and
+        // [off, off+window) lies below `cap`, which was on disk already
+        file.seek(SeekFrom::Start(off))
+            .and_then(|_| file.read_exact(&mut avail))
+            .map_err(|e| internal(format!("reading wal segment {seg}: {e}")))?;
+        let read = frame::read_segment_bytes(&avail);
+        // largest whole-frame prefix within `max`, but always at least
+        // one frame so a tiny `max` (frame-granular tests) still moves
+        let mut serve = 0usize;
+        for rec in &read.records {
+            let flen = frame::frame_len(rec);
+            if serve > 0 && serve + flen > max {
+                break;
+            }
+            serve += flen;
+        }
+        avail.truncate(serve);
+        chunk.frames = avail;
+    }
+    let end = off + chunk.frames.len() as u64;
+    if seg < durable_seg && end == file_len {
+        // completed segment fully consumed: hop to the next one
+        chunk.next_seg = seg + 1;
+        chunk.next_off = 0;
+    } else {
+        chunk.next_seg = seg;
+        chunk.next_off = end;
+    }
+    Ok(chunk)
+}
+
+/// Answer `GET /wal/bootstrap?gen=<g>&off=<n>`: one window of the pinned
+/// snapshot generation (`gen = u64::MAX` pins whatever is current). A
+/// superseded generation returns `409` — restart the transfer.
+pub fn handle_bootstrap(d: &DurableIndex, query: &str) -> Result<BootstrapChunk, ProtoError> {
+    let want_gen = wire::param_u64(query, "gen").unwrap_or(wire::GEN_CURRENT);
+    let off = wire::param_u64(query, "off").unwrap_or(0) as usize;
+    let manifest = snapshot::read_manifest(d.dir())
+        .map_err(|e| internal(format!("reading manifest: {e:#}")))?
+        .ok_or_else(|| internal("durable directory has no manifest".to_string()))?;
+    if want_gen != wire::GEN_CURRENT && want_gen != manifest.snapshot_gen {
+        return Err(ProtoError {
+            status: 409,
+            msg: format!(
+                "snapshot gen {want_gen} superseded by {} — restart the bootstrap",
+                manifest.snapshot_gen
+            ),
+        });
+    }
+    let path = snapshot::snapshot_path(d.dir(), manifest.snapshot_gen);
+    let mut file = match std::fs::File::open(&path) {
+        Ok(f) => f,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Err(ProtoError {
+                status: 409,
+                msg: "snapshot superseded during transfer — restart the bootstrap"
+                    .to_string(),
+            });
+        }
+        Err(e) => return Err(internal(format!("opening {}: {e}", path.display()))),
+    };
+    let total_len = file
+        .metadata()
+        .map_err(|e| internal(format!("stat {}: {e}", path.display())))?
+        .len();
+    if off as u64 > total_len {
+        return Err(ProtoError::bad(format!(
+            "bootstrap offset {off} beyond snapshot ({total_len} bytes)"
+        )));
+    }
+    // one window per request, seeked — not an O(file) read per window
+    // (snapshot files are immutable once renamed in, so this is stable)
+    let window = (total_len - off as u64).min(MAX_BOOTSTRAP_BYTES as u64) as usize;
+    let mut data = vec![0u8; window];
+    file.seek(SeekFrom::Start(off as u64))
+        .and_then(|_| file.read_exact(&mut data))
+        .map_err(|e| internal(format!("reading {}: {e}", path.display())))?;
+    Ok(BootstrapChunk {
+        gen: manifest.snapshot_gen,
+        replay_seg: manifest.replay_from_seq,
+        total_len,
+        off: off as u64,
+        data,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::online::ShardedIndex;
+    use crate::wal::{frame::Record, WalConfig};
+    use std::path::PathBuf;
+    use std::sync::Arc;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("chh_repl_primary_{}_{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn frames_of(chunk: &StreamChunk) -> Vec<Record> {
+        let read = frame::read_segment_bytes(&chunk.frames);
+        assert!(!read.torn, "stream chunks hold whole frames only");
+        read.records
+    }
+
+    #[test]
+    fn stream_serves_acked_prefix_and_advances() {
+        let dir = tmpdir("serve");
+        let d = DurableIndex::create(
+            Arc::new(ShardedIndex::new(10, 2, 2)),
+            &WalConfig::new(&dir),
+        )
+        .unwrap();
+        for id in 0..6u32 {
+            d.insert(id, id as u64).unwrap();
+        }
+        // frame-at-a-time (max=1 still serves one whole frame)
+        let (mut seg, mut off) = (1u64, 0u64);
+        let mut got = Vec::new();
+        loop {
+            let c =
+                handle_stream(&d, &format!("seg={seg}&off={off}&max=1")).unwrap();
+            assert!(!c.bootstrap_required);
+            let recs = frames_of(&c);
+            assert!(recs.len() <= 1);
+            if recs.is_empty() && (c.next_seg, c.next_off) == (seg, off) {
+                break; // caught up with the watermark
+            }
+            got.extend(recs);
+            seg = c.next_seg;
+            off = c.next_off;
+        }
+        let want: Vec<Record> =
+            (0..6u32).map(|id| Record::Insert { id, code: id as u64 }).collect();
+        assert_eq!(got, want);
+        // the final position equals the durable watermark
+        assert_eq!((seg, off), d.durable_watermark());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gcd_segment_demands_bootstrap_and_bootstrap_windows_assemble() {
+        let dir = tmpdir("gc");
+        let d = DurableIndex::create(
+            Arc::new(ShardedIndex::new(10, 2, 2)),
+            &WalConfig::new(&dir),
+        )
+        .unwrap();
+        for id in 0..10u32 {
+            d.insert(id, 3).unwrap();
+        }
+        d.checkpoint().unwrap(); // collects segment 1
+        let c = handle_stream(&d, "seg=1&off=0").unwrap();
+        assert!(c.bootstrap_required, "GC'd segment must demand a bootstrap");
+        // windowed transfer pinned to the current generation
+        let first = handle_bootstrap(&d, "").unwrap();
+        assert_eq!(first.off, 0);
+        let mut buf = first.data.clone();
+        while (buf.len() as u64) < first.total_len {
+            let c = handle_bootstrap(
+                &d,
+                &format!("gen={}&off={}", first.gen, buf.len()),
+            )
+            .unwrap();
+            assert!(!c.data.is_empty());
+            buf.extend_from_slice(&c.data);
+        }
+        let snap = crate::persist::load_sharded_bytes(&buf).unwrap();
+        assert_eq!(snap.len(), 10);
+        // a stale pinned generation is refused with 409
+        let err = handle_bootstrap(&d, &format!("gen={}&off=0", first.gen + 7))
+            .unwrap_err();
+        assert_eq!(err.status, 409);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stream_respects_the_durable_watermark() {
+        let dir = tmpdir("watermark");
+        // lazy fsync: acked-but-unsynced bytes must not be streamed
+        let mut cfg = WalConfig::new(&dir);
+        cfg.fsync = crate::wal::FsyncPolicy::EveryN(1_000_000);
+        let d =
+            DurableIndex::create(Arc::new(ShardedIndex::new(10, 2, 2)), &cfg).unwrap();
+        for id in 0..4u32 {
+            d.insert(id, 1).unwrap();
+        }
+        let c = handle_stream(&d, "seg=1&off=0").unwrap();
+        assert!(
+            frames_of(&c).is_empty(),
+            "unsynced frames are on disk but must not be served"
+        );
+        d.flush().unwrap();
+        let c = handle_stream(&d, "seg=1&off=0").unwrap();
+        assert_eq!(frames_of(&c).len(), 4, "flush makes them durable and servable");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn replica_ahead_of_the_watermark_is_told_to_rebootstrap() {
+        let dir = tmpdir("ahead");
+        let d = DurableIndex::create(
+            Arc::new(ShardedIndex::new(10, 2, 2)),
+            &WalConfig::new(&dir),
+        )
+        .unwrap();
+        d.insert(1, 1).unwrap();
+        let (dseg, doff) = d.durable_watermark();
+        // beyond the open segment, and beyond the offset within it:
+        // both mean the history this position came from no longer
+        // exists (wiped/replaced WAL dir) — resync, don't stall
+        let c = handle_stream(&d, &format!("seg={}&off=0", dseg + 5)).unwrap();
+        assert!(c.bootstrap_required);
+        let c = handle_stream(&d, &format!("seg={dseg}&off={}", doff + 999)).unwrap();
+        assert!(c.bootstrap_required);
+        // exactly at the watermark is the normal caught-up poll
+        let c = handle_stream(&d, &format!("seg={dseg}&off={doff}")).unwrap();
+        assert!(!c.bootstrap_required && c.frames.is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,514 @@
+//! Replica-side replication: bootstrap from the primary's snapshot, then
+//! tail its WAL stream and apply records in journal order.
+//!
+//! A [`ReplicaIndex`] wraps a [`ShardedIndex`] exactly the way
+//! [`crate::wal::DurableIndex`] does on the primary, with one apply path
+//! serialized under an order lock — so for any position `(seg, off)` in
+//! the durable history, the replica's live set is byte-for-byte the same
+//! set the primary's recovery would produce at that position, and its
+//! query answers (ids, margin bits, scanned/probed counters) are
+//! bit-identical to the primary's over that prefix.
+//!
+//! The [`Tailer`] is the background driver: fetch a chunk, apply it,
+//! poll again. It survives primary restarts (reconnect with backoff) and
+//! falling behind a checkpoint's segment GC (`bootstrap_required` →
+//! [`ReplicaIndex::resync`], a diff-apply of a fresh snapshot). During a
+//! resync the replica keeps answering reads — stale, and flagged
+//! `resyncing` in `/stats` — but it only ever holds entries that came
+//! from fsynced primary state, so an unacknowledged op is never served.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::jsonio::{obj, Json};
+use crate::metrics::Gauge;
+use crate::online::ShardedIndex;
+use crate::server::HttpClient;
+use crate::wal::frame::{read_segment_bytes, Record};
+
+use super::wire::{self, StreamChunk};
+
+/// How a replica reaches (and paces against) its primary.
+#[derive(Clone, Debug)]
+pub struct ReplicaConfig {
+    /// primary address (`host:port` of a `serve-http --wal-dir` server)
+    pub primary: String,
+    /// idle sleep once caught up with the durable watermark
+    pub poll: Duration,
+    /// sleep before reconnecting after a transport error
+    pub backoff: Duration,
+    /// per-fetch cap on streamed frame bytes
+    pub max_bytes: usize,
+    /// HTTP connect/read timeout
+    pub timeout: Duration,
+}
+
+impl ReplicaConfig {
+    pub fn new(primary: impl Into<String>) -> Self {
+        ReplicaConfig {
+            primary: primary.into(),
+            poll: Duration::from_millis(20),
+            backoff: Duration::from_millis(200),
+            max_bytes: super::primary::MAX_STREAM_BYTES,
+            timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+/// A read-only index kept in sync by WAL shipping. See the module docs
+/// for the consistency contract.
+pub struct ReplicaIndex {
+    index: Arc<ShardedIndex>,
+    /// serializes apply (and resync) so stream order == apply order —
+    /// the replica-side twin of the primary's order lock
+    order: Mutex<()>,
+    /// applied stream position `(seg, off)` — one mutex per pair (like
+    /// [`crate::wal::WalStats::durable_watermark`]) so a concurrent
+    /// `/stats` or convergence poll never observes a torn pair
+    applied: Mutex<(u64, u64)>,
+    /// primary durable watermark as last observed on the stream
+    primary_wm: Mutex<(u64, u64)>,
+    applied_records: Gauge,
+    checkpoints_seen: Gauge,
+    bootstraps: Gauge,
+    reconnects: Gauge,
+    resyncing: AtomicBool,
+}
+
+impl ReplicaIndex {
+    /// Wrap an index whose contents are a snapshot covering everything
+    /// before `(start_seg, 0)` — the constructor [`Self::bootstrap`] and
+    /// the tests share.
+    pub fn from_snapshot(index: ShardedIndex, start_seg: u64) -> Arc<ReplicaIndex> {
+        Arc::new(ReplicaIndex {
+            index: Arc::new(index),
+            order: Mutex::new(()),
+            applied: Mutex::new((start_seg, 0)),
+            primary_wm: Mutex::new((0, 0)),
+            applied_records: Gauge::new(0),
+            checkpoints_seen: Gauge::new(0),
+            bootstraps: Gauge::new(1),
+            reconnects: Gauge::new(0),
+            resyncing: AtomicBool::new(false),
+        })
+    }
+
+    /// Connect to the primary, transfer its current snapshot, and return
+    /// a replica positioned at that snapshot's replay start.
+    pub fn bootstrap(cfg: &ReplicaConfig) -> Result<Arc<ReplicaIndex>> {
+        let mut client = HttpClient::connect_retry(&cfg.primary, cfg.timeout)
+            .with_context(|| format!("connecting to primary {}", cfg.primary))?;
+        client.set_timeout(cfg.timeout)?;
+        let (_gen, replay_seg, bytes) = fetch_snapshot(&mut client)?;
+        let index = crate::persist::load_sharded_bytes(&bytes)
+            .context("parsing bootstrap snapshot")?;
+        Ok(Self::from_snapshot(index, replay_seg))
+    }
+
+    /// The served index (share this `Arc` with a router — reads need no
+    /// coordination with the tailer beyond the index's own epochs).
+    pub fn index(&self) -> &Arc<ShardedIndex> {
+        &self.index
+    }
+
+    /// Position `(segment, offset)` up to which the stream is applied.
+    pub fn position(&self) -> (u64, u64) {
+        *self.applied.lock().unwrap()
+    }
+
+    /// Insert/remove records applied since process start (checkpoint
+    /// markers are counted separately).
+    pub fn applied_records(&self) -> u64 {
+        self.applied_records.get()
+    }
+
+    /// Bootstrap transfers performed (1 = just the initial one).
+    pub fn bootstraps(&self) -> u64 {
+        self.bootstraps.get()
+    }
+
+    pub fn reconnects(&self) -> u64 {
+        self.reconnects.get()
+    }
+
+    pub(crate) fn note_reconnect(&self) {
+        self.reconnects.add(1);
+    }
+
+    /// The primary durable watermark as last observed on the stream
+    /// (`(0, 0)` before the first chunk).
+    pub fn observed_watermark(&self) -> (u64, u64) {
+        *self.primary_wm.lock().unwrap()
+    }
+
+    /// Whether the replica has applied everything the primary reported
+    /// durable (false until the first chunk has been observed).
+    pub fn caught_up(&self) -> bool {
+        let wm = self.observed_watermark();
+        wm.0 != 0 && self.position() == wm
+    }
+
+    /// `(lag_segments, lag_bytes)` against the last observed primary
+    /// watermark; `lag_bytes` is exact only while the replica is inside
+    /// the primary's current segment (`None` otherwise, and before the
+    /// first chunk).
+    pub fn lag(&self) -> (u64, Option<u64>) {
+        let (pseg, poff) = self.observed_watermark();
+        if pseg == 0 {
+            return (0, None);
+        }
+        let (aseg, aoff) = self.position();
+        let segs = pseg.saturating_sub(aseg);
+        let bytes = if segs == 0 { Some(poff.saturating_sub(aoff)) } else { None };
+        (segs, bytes)
+    }
+
+    /// Apply one stream chunk: whole frames, in order, under the order
+    /// lock; then advance the position to the chunk's `next` pointer.
+    /// Returns the number of insert/remove records applied.
+    pub fn apply_chunk(&self, chunk: &StreamChunk) -> Result<usize> {
+        *self.primary_wm.lock().unwrap() = (chunk.durable_seg, chunk.durable_off);
+        if chunk.bootstrap_required {
+            bail!("chunk demands a bootstrap — call resync() instead");
+        }
+        let (aseg, aoff) = self.position();
+        if (chunk.seg, chunk.off) != (aseg, aoff) {
+            bail!(
+                "chunk starts at ({}, {}) but replica is at ({aseg}, {aoff})",
+                chunk.seg,
+                chunk.off
+            );
+        }
+        let read = read_segment_bytes(&chunk.frames);
+        if read.torn {
+            bail!("stream chunk contains a partial frame (protocol violation)");
+        }
+        let _g = self.order.lock().unwrap();
+        let mut applied = 0u64;
+        for rec in &read.records {
+            match *rec {
+                Record::Insert { id, code } => {
+                    self.index.insert(id, code);
+                    applied += 1;
+                }
+                Record::Remove { id } => {
+                    self.index.remove(id);
+                    applied += 1;
+                }
+                Record::Checkpoint { .. } => {
+                    self.checkpoints_seen.add(1);
+                }
+            }
+        }
+        self.applied_records.add(applied);
+        *self.applied.lock().unwrap() = (chunk.next_seg, chunk.next_off);
+        Ok(applied as usize)
+    }
+
+    /// Full resynchronization after falling behind a segment GC: fetch a
+    /// fresh snapshot and diff-apply it (remove what the snapshot lost,
+    /// upsert what it holds, in the snapshot's deterministic order),
+    /// then resume tailing at its replay start. Reads keep flowing
+    /// meanwhile — stale, flagged `resyncing`, and still built only from
+    /// durable primary state.
+    ///
+    /// Caveat shared with crash recovery: the replica's within-bucket
+    /// scan order can differ from the live primary's (compaction
+    /// histories diverge), so two candidates with *exactly* equal f32
+    /// margins may tie-break differently on `/query` (first-encountered
+    /// wins); `/query_topk` orders ties by id and is unaffected.
+    pub fn resync(&self, client: &mut HttpClient) -> Result<()> {
+        self.resyncing.store(true, Ordering::SeqCst);
+        let out = self.resync_inner(client);
+        self.resyncing.store(false, Ordering::SeqCst);
+        out
+    }
+
+    fn resync_inner(&self, client: &mut HttpClient) -> Result<()> {
+        let (_gen, replay_seg, bytes) = fetch_snapshot(client)?;
+        let snap =
+            crate::persist::load_sharded_bytes(&bytes).context("parsing resync snapshot")?;
+        if snap.bits() != self.index.bits()
+            || snap.radius() != self.index.radius()
+            || snap.shard_count() != self.index.shard_count()
+        {
+            bail!(
+                "primary snapshot layout changed (k={} r={} shards={} vs local k={} r={} \
+                 shards={}) — restart the replica",
+                snap.bits(),
+                snap.radius(),
+                snap.shard_count(),
+                self.index.bits(),
+                self.index.radius(),
+                self.index.shard_count()
+            );
+        }
+        let _g = self.order.lock().unwrap();
+        let mut have: std::collections::HashMap<u32, u64> = std::collections::HashMap::new();
+        for s in self.index.shards() {
+            for (id, code) in s.live_entries() {
+                have.insert(id, code);
+            }
+        }
+        // apply the snapshot in its own (deterministic) order: entries
+        // already correct stay in place, everything else upserts —
+        // never in HashMap iteration order, which is randomized
+        for s in snap.shards() {
+            for (id, code) in s.live_entries() {
+                match have.remove(&id) {
+                    Some(c) if c == code => {}
+                    _ => self.index.insert(id, code),
+                }
+            }
+        }
+        // whatever is left was dropped by the snapshot's history
+        for (id, _) in have {
+            self.index.remove(id);
+        }
+        *self.applied.lock().unwrap() = (replay_seg, 0);
+        self.bootstraps.add(1);
+        Ok(())
+    }
+
+    /// Whether a resync transfer is in flight right now.
+    pub fn resyncing(&self) -> bool {
+        self.resyncing.load(Ordering::SeqCst)
+    }
+
+    /// The `/stats` replication section.
+    pub fn stats_json(&self, primary_addr: &str) -> Json {
+        let (lag_segments, lag_bytes) = self.lag();
+        let (aseg, aoff) = self.position();
+        let (pseg, poff) = self.observed_watermark();
+        obj(vec![
+            ("primary", Json::from(primary_addr)),
+            ("applied_seg", Json::from(aseg as usize)),
+            ("applied_off", Json::from(aoff as usize)),
+            ("applied_records", Json::from(self.applied_records.get() as usize)),
+            ("checkpoints_seen", Json::from(self.checkpoints_seen.get() as usize)),
+            ("primary_durable_seg", Json::from(pseg as usize)),
+            ("primary_durable_off", Json::from(poff as usize)),
+            ("lag_segments", Json::from(lag_segments as usize)),
+            (
+                "lag_bytes",
+                match lag_bytes {
+                    Some(b) => Json::from(b as usize),
+                    None => Json::Null,
+                },
+            ),
+            ("caught_up", Json::from(self.caught_up())),
+            ("resyncing", Json::from(self.resyncing())),
+            ("bootstraps", Json::from(self.bootstraps.get() as usize)),
+            ("reconnects", Json::from(self.reconnects.get() as usize)),
+        ])
+    }
+}
+
+/// Windowed snapshot transfer: pin the first window's generation, fetch
+/// until `total_len`, restart (bounded) when a checkpoint supersedes the
+/// pinned generation mid-transfer.
+fn fetch_snapshot(client: &mut HttpClient) -> Result<(u64, u64, Vec<u8>)> {
+    const MAX_RESTARTS: usize = 16;
+    for _ in 0..MAX_RESTARTS {
+        let mut gen = wire::GEN_CURRENT;
+        let mut replay_seg = 0u64;
+        let mut buf: Vec<u8> = Vec::new();
+        let mut superseded = false;
+        loop {
+            let path = format!("/wal/bootstrap?gen={gen}&off={}", buf.len());
+            let resp = client
+                .get(&path)
+                .map_err(|e| anyhow!("GET {path}: {e}"))?;
+            if resp.status == 409 {
+                superseded = true;
+                break;
+            }
+            if resp.status != 200 {
+                bail!(
+                    "bootstrap returned {}: {}",
+                    resp.status,
+                    String::from_utf8_lossy(&resp.body)
+                );
+            }
+            let chunk = wire::decode_bootstrap_chunk(&resp.body)?;
+            if chunk.off as usize != buf.len() {
+                bail!("bootstrap window at {} but expected {}", chunk.off, buf.len());
+            }
+            gen = chunk.gen;
+            replay_seg = chunk.replay_seg;
+            if chunk.data.is_empty() && (buf.len() as u64) < chunk.total_len {
+                bail!("empty bootstrap window before total_len");
+            }
+            buf.extend_from_slice(&chunk.data);
+            if buf.len() as u64 >= chunk.total_len {
+                return Ok((gen, replay_seg, buf));
+            }
+        }
+        if !superseded {
+            break;
+        }
+        // superseded: loop around and pin the new current generation
+    }
+    bail!("bootstrap kept getting superseded — primary checkpointing too fast")
+}
+
+/// Handle to the background tail thread; joins on [`Self::stop`] or drop.
+pub struct Tailer {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Tailer {
+    /// Signal the loop to stop and join it.
+    pub fn stop(mut self) {
+        self.halt();
+    }
+
+    fn halt(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Tailer {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+/// Spawn the tail loop for `replica` against `cfg.primary`.
+pub fn spawn_tailer(replica: Arc<ReplicaIndex>, cfg: ReplicaConfig) -> Tailer {
+    let stop = Arc::new(AtomicBool::new(false));
+    let tstop = stop.clone();
+    let handle = std::thread::Builder::new()
+        .name("chh-replica-tail".to_string())
+        .spawn(move || tail_loop(&replica, &cfg, &tstop))
+        .expect("spawn replica tailer");
+    Tailer { stop, handle: Some(handle) }
+}
+
+fn tail_loop(replica: &ReplicaIndex, cfg: &ReplicaConfig, stop: &AtomicBool) {
+    let mut client: Option<HttpClient> = None;
+    while !stop.load(Ordering::SeqCst) {
+        if client.is_none() {
+            match HttpClient::connect_with_timeout(&cfg.primary, cfg.timeout) {
+                Ok(c) => {
+                    let _ = c.set_timeout(cfg.timeout);
+                    client = Some(c);
+                }
+                Err(_) => {
+                    replica.note_reconnect();
+                    std::thread::sleep(cfg.backoff);
+                    continue;
+                }
+            }
+        }
+        let c = client.as_mut().expect("client just ensured");
+        let (seg, off) = replica.position();
+        let path = format!("/wal/stream?seg={seg}&off={off}&max={}", cfg.max_bytes);
+        let step = (|| -> Result<bool> {
+            let resp = c.get(&path).map_err(|e| anyhow!("GET {path}: {e}"))?;
+            if resp.status != 200 {
+                bail!(
+                    "stream returned {}: {}",
+                    resp.status,
+                    String::from_utf8_lossy(&resp.body)
+                );
+            }
+            let chunk = wire::decode_stream_chunk(&resp.body)?;
+            if chunk.bootstrap_required {
+                replica.resync(c).context("resync after segment GC")?;
+                return Ok(true);
+            }
+            let n = replica.apply_chunk(&chunk)?;
+            Ok(n > 0 || (chunk.next_seg, chunk.next_off) != (seg, off))
+        })();
+        match step {
+            Ok(true) => {} // progressed: fetch again immediately
+            Ok(false) => std::thread::sleep(cfg.poll),
+            Err(e) => {
+                eprintln!("replica tailer: {e:#}; reconnecting");
+                client = None;
+                replica.note_reconnect();
+                std::thread::sleep(cfg.backoff);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::wal::frame::encode_into;
+
+    fn chunk_of(records: &[Record], seg: u64, off: u64) -> StreamChunk {
+        let mut frames = Vec::new();
+        for r in records {
+            encode_into(r, &mut frames);
+        }
+        let next_off = off + frames.len() as u64;
+        StreamChunk {
+            seg,
+            off,
+            next_seg: seg,
+            next_off,
+            durable_seg: seg,
+            durable_off: next_off,
+            bootstrap_required: false,
+            frames,
+        }
+    }
+
+    #[test]
+    fn apply_chunk_advances_position_and_state() {
+        let r = ReplicaIndex::from_snapshot(ShardedIndex::new(8, 2, 2), 1);
+        assert_eq!(r.position(), (1, 0));
+        assert!(!r.caught_up(), "no watermark observed yet");
+        let c = chunk_of(
+            &[
+                Record::Insert { id: 1, code: 3 },
+                Record::Insert { id: 2, code: 5 },
+                Record::Checkpoint { gen: 1 },
+                Record::Remove { id: 1 },
+            ],
+            1,
+            0,
+        );
+        assert_eq!(r.apply_chunk(&c).unwrap(), 3, "checkpoint markers not counted");
+        assert_eq!(r.index().len(), 1);
+        assert!(r.index().contains(2) && !r.index().contains(1));
+        assert_eq!(r.position(), (c.next_seg, c.next_off));
+        assert!(r.caught_up());
+        assert_eq!(r.lag(), (0, Some(0)));
+    }
+
+    #[test]
+    fn apply_chunk_rejects_position_mismatch_and_torn_frames() {
+        let r = ReplicaIndex::from_snapshot(ShardedIndex::new(8, 2, 2), 1);
+        let misplaced = chunk_of(&[Record::Insert { id: 1, code: 1 }], 1, 999);
+        assert!(r.apply_chunk(&misplaced).is_err());
+        let mut torn = chunk_of(&[Record::Insert { id: 1, code: 1 }], 1, 0);
+        torn.frames.pop();
+        assert!(r.apply_chunk(&torn).is_err());
+        assert_eq!(r.position(), (1, 0), "failed chunks must not move the position");
+        assert_eq!(r.index().len(), 0);
+    }
+
+    #[test]
+    fn lag_accounting_across_segments() {
+        let r = ReplicaIndex::from_snapshot(ShardedIndex::new(8, 2, 2), 1);
+        let mut c = chunk_of(&[Record::Insert { id: 1, code: 1 }], 1, 0);
+        c.durable_seg = 3;
+        c.durable_off = 40;
+        r.apply_chunk(&c).unwrap();
+        let (segs, bytes) = r.lag();
+        assert_eq!(segs, 2);
+        assert_eq!(bytes, None, "cross-segment byte lag is unknowable");
+        assert!(!r.caught_up());
+    }
+}

@@ -1,0 +1,289 @@
+//! Binary wire bodies of the replication protocol.
+//!
+//! Replication moves raw WAL frames and snapshot bytes, so — unlike the
+//! query protocol in [`crate::server::protocol`] — its bodies are binary,
+//! not JSON: a fixed little-endian header followed by an opaque payload.
+//! Both messages are *total* to decode: any truncation, bad magic, wrong
+//! version or length mismatch is a clean error, never a panic — these
+//! bytes cross the network.
+//!
+//! ```text
+//! stream chunk    "CHWS" | u32 ver | u32 flags | seg off next_seg next_off
+//!                 durable_seg durable_off (u64 each) | u64 len | frames
+//! bootstrap chunk "CHWB" | u32 ver | gen replay_seg total_len off
+//!                 (u64 each) | u64 len | snapshot bytes
+//! ```
+//!
+//! The `frames` payload of a stream chunk is a whole-frame prefix in the
+//! on-disk WAL format ([`crate::wal::frame`]) — the replica re-decodes it
+//! with the same torn-tail-tolerant reader the recovery path uses, and
+//! treats a partial frame as a protocol violation (the primary never
+//! sends one).
+
+use anyhow::{bail, Result};
+
+/// Stream chunk magic.
+pub const STREAM_MAGIC: &[u8; 4] = b"CHWS";
+/// Bootstrap chunk magic.
+pub const BOOTSTRAP_MAGIC: &[u8; 4] = b"CHWB";
+/// Wire version both messages carry.
+pub const WIRE_VERSION: u32 = 1;
+/// `gen` request value meaning "whatever snapshot is current".
+pub const GEN_CURRENT: u64 = u64::MAX;
+
+const FLAG_BOOTSTRAP_REQUIRED: u32 = 1;
+
+/// One `/wal/stream` response: whole WAL frames from `(seg, off)`, the
+/// position to fetch next, and the primary's durable watermark (for lag
+/// accounting). `bootstrap_required` means the requested segment was
+/// already garbage-collected — the replica must re-bootstrap from a
+/// snapshot before tailing again.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StreamChunk {
+    pub seg: u64,
+    pub off: u64,
+    pub next_seg: u64,
+    pub next_off: u64,
+    pub durable_seg: u64,
+    pub durable_off: u64,
+    pub bootstrap_required: bool,
+    pub frames: Vec<u8>,
+}
+
+/// One `/wal/bootstrap` response: a window of the snapshot file for
+/// generation `gen`, whose WAL replay starts at segment `replay_seg`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BootstrapChunk {
+    pub gen: u64,
+    pub replay_seg: u64,
+    pub total_len: u64,
+    pub off: u64,
+    pub data: Vec<u8>,
+}
+
+// ───────────────────────── encode ─────────────────────────
+
+pub fn encode_stream_chunk(c: &StreamChunk) -> Vec<u8> {
+    let mut b = Vec::with_capacity(68 + c.frames.len());
+    b.extend_from_slice(STREAM_MAGIC);
+    b.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+    let flags = if c.bootstrap_required { FLAG_BOOTSTRAP_REQUIRED } else { 0 };
+    b.extend_from_slice(&flags.to_le_bytes());
+    for v in [c.seg, c.off, c.next_seg, c.next_off, c.durable_seg, c.durable_off] {
+        b.extend_from_slice(&v.to_le_bytes());
+    }
+    b.extend_from_slice(&(c.frames.len() as u64).to_le_bytes());
+    b.extend_from_slice(&c.frames);
+    b
+}
+
+pub fn encode_bootstrap_chunk(c: &BootstrapChunk) -> Vec<u8> {
+    let mut b = Vec::with_capacity(48 + c.data.len());
+    b.extend_from_slice(BOOTSTRAP_MAGIC);
+    b.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+    for v in [c.gen, c.replay_seg, c.total_len, c.off] {
+        b.extend_from_slice(&v.to_le_bytes());
+    }
+    b.extend_from_slice(&(c.data.len() as u64).to_le_bytes());
+    b.extend_from_slice(&c.data);
+    b
+}
+
+// ───────────────────────── decode ─────────────────────────
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        // checked: a hostile length field near usize::MAX must error,
+        // not wrap past the bounds check into a slice panic
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.b.len())
+            .ok_or_else(|| {
+                anyhow::anyhow!("truncated replication message at byte {}", self.pos)
+            })?;
+        let s = &self.b[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+fn header<'a>(b: &'a [u8], magic: &[u8; 4], what: &str) -> Result<Cursor<'a>> {
+    let mut c = Cursor { b, pos: 0 };
+    if c.take(4)? != magic {
+        bail!("bad magic — not a {what} message");
+    }
+    let ver = c.u32()?;
+    if ver != WIRE_VERSION {
+        bail!("unsupported {what} wire version {ver}");
+    }
+    Ok(c)
+}
+
+pub fn decode_stream_chunk(b: &[u8]) -> Result<StreamChunk> {
+    let mut c = header(b, STREAM_MAGIC, "stream")?;
+    let flags = c.u32()?;
+    let (seg, off) = (c.u64()?, c.u64()?);
+    let (next_seg, next_off) = (c.u64()?, c.u64()?);
+    let (durable_seg, durable_off) = (c.u64()?, c.u64()?);
+    let len = c.u64()? as usize;
+    let frames = c.take(len)?.to_vec();
+    if c.pos != b.len() {
+        bail!("stream message has {} trailing bytes", b.len() - c.pos);
+    }
+    Ok(StreamChunk {
+        seg,
+        off,
+        next_seg,
+        next_off,
+        durable_seg,
+        durable_off,
+        bootstrap_required: flags & FLAG_BOOTSTRAP_REQUIRED != 0,
+        frames,
+    })
+}
+
+pub fn decode_bootstrap_chunk(b: &[u8]) -> Result<BootstrapChunk> {
+    let mut c = header(b, BOOTSTRAP_MAGIC, "bootstrap")?;
+    let (gen, replay_seg) = (c.u64()?, c.u64()?);
+    let (total_len, off) = (c.u64()?, c.u64()?);
+    let len = c.u64()? as usize;
+    let data = c.take(len)?.to_vec();
+    if c.pos != b.len() {
+        bail!("bootstrap message has {} trailing bytes", b.len() - c.pos);
+    }
+    let end = off
+        .checked_add(len as u64)
+        .ok_or_else(|| anyhow::anyhow!("bootstrap window offset overflow"))?;
+    if end > total_len {
+        bail!("bootstrap window [{off}, {end}) exceeds total {total_len}");
+    }
+    Ok(BootstrapChunk { gen, replay_seg, total_len, off, data })
+}
+
+// ───────────────────────── query params ─────────────────────────
+
+/// Extract `key=<u64>` from an HTTP query string (`a=1&b=2`). Returns
+/// `None` for a missing key or an unparsable value.
+pub fn param_u64(query: &str, key: &str) -> Option<u64> {
+    query.split('&').find_map(|kv| {
+        let (k, v) = kv.split_once('=')?;
+        if k == key {
+            v.parse().ok()
+        } else {
+            None
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_stream() -> StreamChunk {
+        StreamChunk {
+            seg: 7,
+            off: 1234,
+            next_seg: 8,
+            next_off: 0,
+            durable_seg: 9,
+            durable_off: 555,
+            bootstrap_required: false,
+            frames: vec![1, 2, 3, 4, 5, 0xFF],
+        }
+    }
+
+    fn sample_bootstrap() -> BootstrapChunk {
+        BootstrapChunk {
+            gen: 3,
+            replay_seg: 12,
+            total_len: 100,
+            off: 40,
+            data: (0..60u8).collect(),
+        }
+    }
+
+    #[test]
+    fn stream_roundtrip() {
+        let c = sample_stream();
+        assert_eq!(decode_stream_chunk(&encode_stream_chunk(&c)).unwrap(), c);
+        let mut flagged = c.clone();
+        flagged.bootstrap_required = true;
+        flagged.frames.clear();
+        assert_eq!(
+            decode_stream_chunk(&encode_stream_chunk(&flagged)).unwrap(),
+            flagged
+        );
+    }
+
+    #[test]
+    fn bootstrap_roundtrip() {
+        let c = sample_bootstrap();
+        assert_eq!(decode_bootstrap_chunk(&encode_bootstrap_chunk(&c)).unwrap(), c);
+    }
+
+    #[test]
+    fn truncation_at_every_byte_is_a_clean_error() {
+        let s = encode_stream_chunk(&sample_stream());
+        for cut in 0..s.len() {
+            assert!(
+                decode_stream_chunk(&s[..cut]).is_err(),
+                "stream cut at {cut} must error"
+            );
+        }
+        let b = encode_bootstrap_chunk(&sample_bootstrap());
+        for cut in 0..b.len() {
+            assert!(
+                decode_bootstrap_chunk(&b[..cut]).is_err(),
+                "bootstrap cut at {cut} must error"
+            );
+        }
+    }
+
+    #[test]
+    fn malformed_messages_rejected() {
+        // wrong magic, cross-decoding, bad version, trailing junk,
+        // window past total — all errors, no panics
+        assert!(decode_stream_chunk(b"nope").is_err());
+        assert!(decode_stream_chunk(&encode_bootstrap_chunk(&sample_bootstrap())).is_err());
+        assert!(decode_bootstrap_chunk(&encode_stream_chunk(&sample_stream())).is_err());
+        let mut bad_ver = encode_stream_chunk(&sample_stream());
+        bad_ver[4] = 99;
+        assert!(decode_stream_chunk(&bad_ver).is_err());
+        let mut trailing = encode_stream_chunk(&sample_stream());
+        trailing.push(0);
+        assert!(decode_stream_chunk(&trailing).is_err());
+        // hostile length field: u64::MAX must be a clean error, not an
+        // overflow panic (frames_len lives at bytes 60..68)
+        let mut huge_len = encode_stream_chunk(&sample_stream());
+        huge_len[60..68].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(decode_stream_chunk(&huge_len).is_err());
+        let mut past_total = sample_bootstrap();
+        past_total.total_len = 10;
+        assert!(decode_bootstrap_chunk(&encode_bootstrap_chunk(&past_total)).is_err());
+    }
+
+    #[test]
+    fn query_param_parsing() {
+        assert_eq!(param_u64("seg=3&off=128", "seg"), Some(3));
+        assert_eq!(param_u64("seg=3&off=128", "off"), Some(128));
+        assert_eq!(param_u64("seg=3&off=128", "max"), None);
+        assert_eq!(param_u64("", "seg"), None);
+        assert_eq!(param_u64("seg=abc", "seg"), None);
+        assert_eq!(param_u64("seg", "seg"), None);
+        assert_eq!(param_u64("off=1&off=2", "off"), Some(1), "first occurrence wins");
+    }
+}

@@ -222,7 +222,9 @@ pub fn reason(status: u16) -> &'static str {
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        409 => "Conflict",
         413 => "Payload Too Large",
+        421 => "Misdirected Request",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
         _ => "Unknown",
@@ -274,6 +276,29 @@ impl HttpClient {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true)?;
         Ok(HttpClient { conn: MessageReader::new(stream) })
+    }
+
+    /// [`Self::connect`] with a bounded connect timeout per resolved
+    /// address — a blackholed peer costs `timeout`, not the OS's
+    /// multi-minute SYN retry schedule. Used by reconnect loops (the
+    /// replica tailer, loadgen's per-target connections) that must keep
+    /// making progress past a dead host.
+    pub fn connect_with_timeout(addr: &str, timeout: Duration) -> std::io::Result<Self> {
+        use std::net::ToSocketAddrs;
+        let mut last = std::io::Error::new(
+            std::io::ErrorKind::InvalidInput,
+            format!("{addr} resolved to no addresses"),
+        );
+        for sa in addr.to_socket_addrs()? {
+            match TcpStream::connect_timeout(&sa, timeout) {
+                Ok(stream) => {
+                    stream.set_nodelay(true)?;
+                    return Ok(HttpClient { conn: MessageReader::new(stream) });
+                }
+                Err(e) => last = e,
+            }
+        }
+        Err(last)
     }
 
     /// Connect, retrying for up to `wait` (the server may still be

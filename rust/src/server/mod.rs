@@ -32,6 +32,13 @@
 //!   snapshotter, reports WAL/snapshot counters on `/stats`, and writes
 //!   a final checkpoint on graceful shutdown so a clean stop never
 //!   needs replay. See `docs/DURABILITY.md`.
+//! * **Replication** — a durable server is automatically a replication
+//!   *primary*: `GET /wal/stream` serves fsynced WAL frames and
+//!   `GET /wal/bootstrap` serves snapshot windows ([`crate::replicate`]).
+//!   [`Server::spawn_replica`] runs the read-only *replica* role: reads
+//!   as usual, mutations answered `421` with the primary's address, a
+//!   `replication` lag section in `/stats`, and the background tailer
+//!   joined on shutdown. See `docs/REPLICATION.md`.
 //!
 //! `chh serve-http` wires a stack to this server; `chh loadgen` drives
 //! it. See `docs/SERVING.md` for the protocol and operational notes.
@@ -53,6 +60,7 @@ use crate::data::FeatureStore;
 use crate::hash::HashFamily;
 use crate::jsonio::{obj, Json};
 use crate::metrics::Histogram;
+use crate::replicate::{ReplicaIndex, Tailer};
 use crate::table::QueryHit;
 use crate::wal::DurableIndex;
 
@@ -63,6 +71,15 @@ use crate::wal::DurableIndex;
 pub struct Durability {
     pub durable: Arc<DurableIndex>,
     pub snapshot_every_ops: u64,
+}
+
+/// Replica wiring for an online stack: `replica` must wrap the same
+/// [`crate::online::ShardedIndex`] the router serves; `tailer` (if
+/// given) is stopped and joined on graceful shutdown.
+pub struct ReplicaRole {
+    pub replica: Arc<ReplicaIndex>,
+    pub primary_addr: String,
+    pub tailer: Option<Tailer>,
 }
 
 /// Which index the server fronts. Both variants answer `/query` through
@@ -146,7 +163,14 @@ struct State {
     stack: Stack,
     batcher: Batcher,
     /// journaling wrapper around the online index, when serving durably
+    /// (a durable server doubles as a replication primary)
     durable: Option<Arc<DurableIndex>>,
+    /// replica role: the tailed index plus the primary's address
+    /// (mutations are answered 421 pointing there)
+    replica: Option<(Arc<ReplicaIndex>, String)>,
+    /// content fingerprint of the serving hash family, computed once at
+    /// spawn (immutable for the server's lifetime; /stats is polled)
+    family_check: u32,
     budget_desc: Option<(usize, usize)>,
     shutdown: AtomicBool,
     addr: SocketAddr,
@@ -165,6 +189,17 @@ const MAX_SHEDDING: usize = 64;
 impl State {
     fn dim(&self) -> usize {
         self.stack.feats().dim()
+    }
+
+    /// Serving role for `/healthz` and `/stats`.
+    fn role(&self) -> &'static str {
+        if self.replica.is_some() {
+            "replica"
+        } else if self.durable.is_some() {
+            "primary"
+        } else {
+            "standalone"
+        }
     }
 }
 
@@ -195,6 +230,8 @@ pub struct ServerHandle {
     acceptor: Option<std::thread::JoinHandle<()>>,
     /// background snapshotter (durable serving only): stop flag + thread
     snapshotter: Option<(Arc<AtomicBool>, std::thread::JoinHandle<()>)>,
+    /// background WAL tailer (replica serving only), joined on shutdown
+    tailer: Option<Tailer>,
 }
 
 impl ServerHandle {
@@ -227,6 +264,11 @@ impl ServerHandle {
             stop.store(true, Ordering::SeqCst);
             let _ = h.join();
         }
+        // replica role: stop tailing before the server object unwinds so
+        // no apply races the final stats readers
+        if let Some(t) = self.tailer.take() {
+            t.stop();
+        }
         if let Some(d) = &self.state.durable {
             match d.checkpoint() {
                 Ok(gen) => eprintln!("serve-http: shutdown checkpoint gen {gen}"),
@@ -258,15 +300,43 @@ impl Server {
     /// [`Self::spawn`] with WAL-backed durability: `/insert`/`/remove`
     /// journal through `durability.durable` before applying, `/stats`
     /// gains a `durability` section, a background snapshotter
-    /// checkpoints on the configured cadence, and graceful shutdown
-    /// writes a final checkpoint.
+    /// checkpoints on the configured cadence, graceful shutdown writes a
+    /// final checkpoint — and the server answers the replication
+    /// endpoints (`/wal/stream`, `/wal/bootstrap`) as a primary.
     pub fn spawn_with_durability(
         stack: Stack,
         cfg: ServerConfig,
         durability: Option<Durability>,
     ) -> anyhow::Result<ServerHandle> {
+        Self::spawn_inner(stack, cfg, durability, None)
+    }
+
+    /// Run the read-replica role: reads as usual off `stack`'s index
+    /// (which `role.replica` keeps in sync by tailing the primary),
+    /// mutations answered `421` with the primary's address, replication
+    /// lag in `/stats`, and the tailer joined on graceful shutdown.
+    pub fn spawn_replica(
+        stack: Stack,
+        cfg: ServerConfig,
+        role: ReplicaRole,
+    ) -> anyhow::Result<ServerHandle> {
+        if !matches!(stack, Stack::Online(_)) {
+            anyhow::bail!("the replica role requires the online stack");
+        }
+        Self::spawn_inner(stack, cfg, None, Some(role))
+    }
+
+    fn spawn_inner(
+        stack: Stack,
+        cfg: ServerConfig,
+        durability: Option<Durability>,
+        replica_role: Option<ReplicaRole>,
+    ) -> anyhow::Result<ServerHandle> {
         if durability.is_some() && !matches!(stack, Stack::Online(_)) {
             anyhow::bail!("durability requires the online stack");
+        }
+        if durability.is_some() && replica_role.is_some() {
+            anyhow::bail!("a server is a primary or a replica, not both");
         }
         let listener = TcpListener::bind(&cfg.addr)
             .map_err(|e| anyhow::anyhow!("binding {}: {e}", cfg.addr))?;
@@ -288,10 +358,20 @@ impl Server {
             Some(d) => (Some(d.durable), d.snapshot_every_ops),
             None => (None, 0),
         };
+        let (replica, tailer) = match replica_role {
+            Some(r) => (Some((r.replica, r.primary_addr)), r.tailer),
+            None => (None, None),
+        };
+        let family_check = crate::replicate::family_fingerprint(
+            stack.family().as_ref(),
+            stack.feats().dim(),
+        );
         let state = Arc::new(State {
             stack,
             batcher,
             durable,
+            replica,
+            family_check,
             budget_desc,
             shutdown: AtomicBool::new(false),
             addr,
@@ -344,7 +424,7 @@ impl Server {
             }
             _ => None,
         };
-        Ok(ServerHandle { state, acceptor: Some(acceptor), snapshotter })
+        Ok(ServerHandle { state, acceptor: Some(acceptor), snapshotter, tailer })
     }
 }
 
@@ -460,8 +540,7 @@ fn handle_conn(state: &Arc<State>, stream: &TcpStream) {
                 let reply = dispatch(state, &req);
                 let keep = req.keep_alive && !state.shutdown.load(Ordering::SeqCst);
                 let mut out = stream;
-                if http::write_response(&mut out, reply.status, reply.body.as_bytes(), keep)
-                    .is_err()
+                if http::write_response(&mut out, reply.status, &reply.body, keep).is_err()
                     || !keep
                 {
                     return;
@@ -487,28 +566,47 @@ fn handle_conn(state: &Arc<State>, stream: &TcpStream) {
 
 struct Reply {
     status: u16,
-    body: String,
+    /// JSON on every route except the replication transfers, which are
+    /// binary ([`crate::replicate::wire`])
+    body: Vec<u8>,
 }
 
 fn ok_json(v: Json) -> Reply {
-    Reply { status: 200, body: v.to_string_compact() }
+    Reply { status: 200, body: v.to_string_compact().into_bytes() }
 }
 
 fn err_json(status: u16, msg: &str) -> Reply {
-    Reply { status, body: protocol::error_json(msg) }
+    Reply { status, body: protocol::error_json(msg).into_bytes() }
 }
 
-const ROUTES: &[&str] =
-    &["/healthz", "/stats", "/query", "/query_topk", "/insert", "/remove", "/shutdown"];
+const ROUTES: &[&str] = &[
+    "/healthz",
+    "/stats",
+    "/query",
+    "/query_topk",
+    "/insert",
+    "/remove",
+    "/shutdown",
+    "/wal/stream",
+    "/wal/bootstrap",
+];
 
 fn dispatch(state: &Arc<State>, req: &http::Request) -> Reply {
-    match (req.method.as_str(), req.path.as_str()) {
+    // the replication endpoints carry `?seg=...`-style parameters; every
+    // other route ignores its query string
+    let (route, query) = match req.path.split_once('?') {
+        Some((r, q)) => (r, q),
+        None => (req.path.as_str(), ""),
+    };
+    match (req.method.as_str(), route) {
         ("GET", "/healthz") => handle_healthz(state),
         ("GET", "/stats") => handle_stats(state),
         ("POST", "/query") => handle_query(state, &req.body),
         ("POST", "/query_topk") => handle_topk(state, &req.body),
         ("POST", "/insert") => handle_insert(state, &req.body),
         ("POST", "/remove") => handle_remove(state, &req.body),
+        ("GET", "/wal/stream") => handle_wal_stream(state, query),
+        ("GET", "/wal/bootstrap") => handle_wal_bootstrap(state, query),
         ("POST", "/shutdown") => {
             trigger_shutdown(state);
             ok_json(obj(vec![("shutting_down", Json::from(true))]))
@@ -524,8 +622,36 @@ fn handle_healthz(state: &Arc<State>) -> Reply {
     ok_json(obj(vec![
         ("status", Json::from("ok")),
         ("mode", Json::from(state.stack.mode())),
+        ("role", Json::from(state.role())),
         ("uptime_secs", Json::Num(state.stats.started.elapsed().as_secs_f64())),
     ]))
+}
+
+/// Serve fsynced WAL frames to a tailing replica (primaries only).
+fn handle_wal_stream(state: &Arc<State>, query: &str) -> Reply {
+    let Some(d) = &state.durable else {
+        return err_json(400, "not a replication primary (serve with --wal-dir)");
+    };
+    match crate::replicate::primary::handle_stream(d, query) {
+        Ok(chunk) => {
+            Reply { status: 200, body: crate::replicate::wire::encode_stream_chunk(&chunk) }
+        }
+        Err(e) => err_json(e.status, &e.msg),
+    }
+}
+
+/// Serve a snapshot window for replica bootstrap (primaries only).
+fn handle_wal_bootstrap(state: &Arc<State>, query: &str) -> Reply {
+    let Some(d) = &state.durable else {
+        return err_json(400, "not a replication primary (serve with --wal-dir)");
+    };
+    match crate::replicate::primary::handle_bootstrap(d, query) {
+        Ok(chunk) => Reply {
+            status: 200,
+            body: crate::replicate::wire::encode_bootstrap_chunk(&chunk),
+        },
+        Err(e) => err_json(e.status, &e.msg),
+    }
 }
 
 fn handle_query(state: &Arc<State>, body: &[u8]) -> Reply {
@@ -570,7 +696,23 @@ fn handle_topk(state: &Arc<State>, body: &[u8]) -> Reply {
     ok_json(protocol::topk_json(&hits))
 }
 
+/// The 421 a read replica answers mutations with: the op belongs on the
+/// primary, whose address rides along in the body.
+fn replica_redirect(primary: &str) -> Reply {
+    Reply {
+        status: 421,
+        body: protocol::redirect_json(
+            "read-only replica; send mutations to the primary",
+            primary,
+        )
+        .into_bytes(),
+    }
+}
+
 fn handle_insert(state: &Arc<State>, body: &[u8]) -> Reply {
+    if let Some((_, primary)) = &state.replica {
+        return replica_redirect(primary);
+    }
     let id = match protocol::parse_id(body) {
         Ok(id) => id,
         Err(e) => return err_json(e.status, &e.msg),
@@ -603,6 +745,9 @@ fn handle_insert(state: &Arc<State>, body: &[u8]) -> Reply {
 }
 
 fn handle_remove(state: &Arc<State>, body: &[u8]) -> Reply {
+    if let Some((_, primary)) = &state.replica {
+        return replica_redirect(primary);
+    }
     let id = match protocol::parse_id(body) {
         Ok(id) => id,
         Err(e) => return err_json(e.status, &e.msg),
@@ -646,12 +791,16 @@ fn handle_stats(state: &Arc<State>) -> Reply {
     ]);
     let mut fields = vec![
         ("mode", Json::from(state.stack.mode())),
+        ("role", Json::from(state.role())),
         ("dim", Json::from(state.dim())),
         // feature-store size: the valid id range for /insert (loadgen
         // uses this to drive mutations)
         ("points", Json::from(state.stack.feats().len())),
         ("bits", Json::from(state.stack.family().bits())),
         ("family", Json::from(state.stack.family().name())),
+        // content fingerprint: lets a replica verify it sampled the same
+        // hyperplanes (name+bits alone cannot catch a --seed mismatch)
+        ("family_check", Json::from(state.family_check as usize)),
         ("uptime_secs", Json::Num(s.started.elapsed().as_secs_f64())),
         (
             "http",
@@ -732,6 +881,9 @@ fn handle_stats(state: &Arc<State>) -> Reply {
     if let Some(d) = &state.durable {
         fields.push(("durability", d.stats_json()));
     }
+    if let Some((r, primary)) = &state.replica {
+        fields.push(("replication", r.stats_json(primary)));
+    }
     ok_json(obj(fields))
 }
 
@@ -757,10 +909,16 @@ mod tests {
             BatcherConfig::default(),
             Box::new(move |reqs: &[QueryRequest]| flush_stack.query_batch_pooled(reqs, &pool)),
         );
+        let family_check = crate::replicate::family_fingerprint(
+            stack.family().as_ref(),
+            stack.feats().dim(),
+        );
         Arc::new(State {
             stack,
             batcher,
             durable: None,
+            replica: None,
+            family_check,
             budget_desc: None,
             shutdown: AtomicBool::new(false),
             addr: "127.0.0.1:1".parse().unwrap(),
@@ -808,10 +966,18 @@ mod tests {
         let good = protocol::query_body(&[0.5; 8]);
         let reply = dispatch(&state, &post("/query", &good));
         assert_eq!(reply.status, 200);
-        assert!(protocol::parse_hit(reply.body.as_bytes()).is_ok());
+        assert!(protocol::parse_hit(&reply.body).is_ok());
         // static stack refuses mutations
         assert_eq!(dispatch(&state, &post("/insert", &protocol::id_body(3))).status, 400);
         assert_eq!(dispatch(&state, &post("/remove", &protocol::id_body(3))).status, 400);
+        // replication endpoints exist but need a WAL-backed primary
+        assert_eq!(
+            dispatch(&state, &get("/wal/stream?seg=1&off=0")).status,
+            400,
+            "stream without --wal-dir"
+        );
+        assert_eq!(dispatch(&state, &get("/wal/bootstrap")).status, 400);
+        assert_eq!(dispatch(&state, &post("/wal/stream", "")).status, 405);
     }
 
     #[test]
@@ -830,8 +996,9 @@ mod tests {
                 body: Vec::new(),
             },
         );
-        let v = Json::parse(&reply.body).unwrap();
+        let v = Json::parse_bytes(&reply.body).unwrap();
         assert_eq!(v.get("mode").unwrap().as_str(), Some("static"));
+        assert_eq!(v.get("role").unwrap().as_str(), Some("standalone"));
         assert_eq!(v.get("dim").unwrap().as_usize(), Some(8));
         let batcher = v.get("batcher").unwrap();
         assert_eq!(batcher.get("flushed").unwrap().as_usize(), Some(3));

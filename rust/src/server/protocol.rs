@@ -215,6 +215,14 @@ pub fn error_json(msg: &str) -> String {
     obj(vec![("error", Json::from(msg))]).to_string_compact()
 }
 
+/// Render the `421 Misdirected Request` body a read replica answers
+/// mutations with: the error plus the primary's address, so a client can
+/// follow the redirect without a second discovery round trip.
+pub fn redirect_json(msg: &str, primary: &str) -> String {
+    obj(vec![("error", Json::from(msg)), ("primary", Json::from(primary))])
+        .to_string_compact()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -324,5 +332,102 @@ mod tests {
         let e = error_json("boom \"quoted\"");
         let v = Json::parse(&e).unwrap();
         assert_eq!(v.get("error").unwrap().as_str(), Some("boom \"quoted\""));
+    }
+
+    #[test]
+    fn redirect_json_carries_the_primary() {
+        let e = redirect_json("read-only replica", "10.0.0.7:8080");
+        let v = Json::parse(&e).unwrap();
+        assert_eq!(v.get("error").unwrap().as_str(), Some("read-only replica"));
+        assert_eq!(v.get("primary").unwrap().as_str(), Some("10.0.0.7:8080"));
+    }
+
+    /// A finite f32 drawn from raw bit patterns: exercises subnormals,
+    /// extreme exponents and odd mantissas — not just "nice" values.
+    fn adversarial_f32(rng: &mut crate::rng::Rng) -> f32 {
+        loop {
+            let v = f32::from_bits(rng.next_u64() as u32);
+            if v.is_finite() {
+                return v;
+            }
+        }
+    }
+
+    #[test]
+    fn query_and_topk_bodies_roundtrip_bit_exact_forall() {
+        crate::testing::forall("wire w roundtrip", 64, |rng| {
+            let dim = rng.range(1, 33);
+            let mut w: Vec<f32> = (0..dim).map(|_| adversarial_f32(rng)).collect();
+            // plant the canonical adversaries deterministically
+            w[0] = -0.0;
+            if dim > 1 {
+                w[1] = f32::from_bits(1); // smallest subnormal
+            }
+            if dim > 2 {
+                w[2] = f32::MAX;
+            }
+            if dim > 3 {
+                w[3] = -f32::MAX;
+            }
+            let req = parse_query(query_body(&w).as_bytes(), dim)
+                .map_err(|e| format!("parse_query: {}", e.msg))?;
+            for (i, (a, b)) in w.iter().zip(req.w.iter()).enumerate() {
+                crate::prop_assert!(
+                    a.to_bits() == b.to_bits(),
+                    "query w[{i}]: {a:?} != {b:?}"
+                );
+            }
+            let t = rng.range(1, 100);
+            let (req2, t2) = parse_topk(topk_body(&w, t).as_bytes(), dim)
+                .map_err(|e| format!("parse_topk: {}", e.msg))?;
+            crate::prop_assert!(t2 == t, "t roundtrip");
+            for (a, b) in w.iter().zip(req2.w.iter()) {
+                crate::prop_assert!(a.to_bits() == b.to_bits(), "topk w bits");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn hit_and_topk_responses_roundtrip_bit_exact_forall() {
+        crate::testing::forall("wire hit roundtrip", 64, |rng| {
+            let hit = QueryHit {
+                best: if rng.below(8) == 0 {
+                    None
+                } else {
+                    Some((rng.below(1 << 20), adversarial_f32(rng)))
+                },
+                scanned: rng.below(10_000),
+                probed: rng.below(10_000),
+                nonempty: rng.below(2) == 1,
+            };
+            let back = parse_hit(hit_json(&hit).to_string_compact().as_bytes())
+                .map_err(|e| format!("parse_hit: {}", e.msg))?;
+            match (hit.best, back.best) {
+                (Some((ia, ma)), Some((ib, mb))) => {
+                    crate::prop_assert!(ia == ib, "best id");
+                    crate::prop_assert!(
+                        ma.to_bits() == mb.to_bits(),
+                        "margin bits {ma:?} vs {mb:?}"
+                    );
+                }
+                (None, None) => {}
+                (a, b) => return Err(format!("best mismatch {a:?} vs {b:?}")),
+            }
+            crate::prop_assert!(back.scanned == hit.scanned, "scanned");
+            crate::prop_assert!(back.probed == hit.probed, "probed");
+            crate::prop_assert!(back.nonempty == hit.nonempty, "nonempty");
+            let hits: Vec<(usize, f32)> = (0..rng.below(20))
+                .map(|_| (rng.below(1 << 20), adversarial_f32(rng)))
+                .collect();
+            let back =
+                parse_topk_hits(topk_json(&hits).to_string_compact().as_bytes())
+                    .map_err(|e| format!("parse_topk_hits: {}", e.msg))?;
+            crate::prop_assert!(back.len() == hits.len(), "topk len");
+            for ((ia, ma), (ib, mb)) in hits.iter().zip(back.iter()) {
+                crate::prop_assert!(ia == ib && ma.to_bits() == mb.to_bits(), "topk entry");
+            }
+            Ok(())
+        });
     }
 }

@@ -1,0 +1,118 @@
+//! Injectable fault plans for the WAL's disk I/O — the error layer the
+//! replication fault tests drive.
+//!
+//! A [`FaultPlan`] wraps the two syscalls the durability contract rests
+//! on — the segment `write_all` and the `fsync` — with a counter and a
+//! trigger point. Once the trigger fires the plan keeps failing (a dead
+//! disk does not come back), which exercises exactly the sticky-error
+//! fail-stop path of [`super::log::Wal`]: the op that hit the fault is
+//! refused to its caller (never acknowledged), every later op is refused
+//! with the same message, and — because the durable watermark only
+//! advances after a successful fsync — the replication stream never
+//! ships the un-fsynced suffix to a replica.
+//!
+//! Plans are plain shared state (`Arc<FaultPlan>` in
+//! [`super::WalConfig::faults`]), so a test can arm the next fsync while
+//! the writer thread is live:
+//!
+//! ```
+//! use chh::wal::FaultPlan;
+//! let plan = FaultPlan::new();
+//! plan.fail_fsync_at(plan.fsyncs_seen() + 1); // the very next fsync dies
+//! ```
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Counting fault injector for WAL writes and fsyncs. All counters are
+/// 1-based: `fail_write_at(n)` makes the n-th (and every later) write
+/// fail; 0 disables the trigger.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    writes_seen: AtomicU64,
+    fsyncs_seen: AtomicU64,
+    fail_write_at: AtomicU64,
+    fail_fsync_at: AtomicU64,
+}
+
+fn injected(what: &str) -> std::io::Error {
+    std::io::Error::other(format!("injected wal {what} fault"))
+}
+
+impl FaultPlan {
+    /// A disarmed plan (counts, never fails) behind the `Arc` the config
+    /// wants.
+    pub fn new() -> Arc<FaultPlan> {
+        Arc::new(FaultPlan::default())
+    }
+
+    /// Fail the `n`-th write (1-based) and every write after it; 0 disarms.
+    pub fn fail_write_at(&self, n: u64) {
+        self.fail_write_at.store(n, Ordering::SeqCst);
+    }
+
+    /// Fail the `n`-th fsync (1-based) and every fsync after it; 0 disarms.
+    pub fn fail_fsync_at(&self, n: u64) {
+        self.fail_fsync_at.store(n, Ordering::SeqCst);
+    }
+
+    /// Writes observed so far (whether or not they were failed).
+    pub fn writes_seen(&self) -> u64 {
+        self.writes_seen.load(Ordering::SeqCst)
+    }
+
+    /// Fsyncs observed so far (whether or not they were failed).
+    pub fn fsyncs_seen(&self) -> u64 {
+        self.fsyncs_seen.load(Ordering::SeqCst)
+    }
+
+    /// Called by the writer before each segment write.
+    pub(crate) fn on_write(&self) -> std::io::Result<()> {
+        let n = self.writes_seen.fetch_add(1, Ordering::SeqCst) + 1;
+        let at = self.fail_write_at.load(Ordering::SeqCst);
+        if at != 0 && n >= at {
+            return Err(injected("write"));
+        }
+        Ok(())
+    }
+
+    /// Called by the writer before each fsync.
+    pub(crate) fn on_fsync(&self) -> std::io::Result<()> {
+        let n = self.fsyncs_seen.fetch_add(1, Ordering::SeqCst) + 1;
+        let at = self.fail_fsync_at.load(Ordering::SeqCst);
+        if at != 0 && n >= at {
+            return Err(injected("fsync"));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disarmed_plan_only_counts() {
+        let p = FaultPlan::new();
+        for _ in 0..5 {
+            p.on_write().unwrap();
+            p.on_fsync().unwrap();
+        }
+        assert_eq!(p.writes_seen(), 5);
+        assert_eq!(p.fsyncs_seen(), 5);
+    }
+
+    #[test]
+    fn trigger_is_sticky() {
+        let p = FaultPlan::new();
+        p.fail_write_at(3);
+        assert!(p.on_write().is_ok());
+        assert!(p.on_write().is_ok());
+        assert!(p.on_write().is_err(), "third write fails");
+        assert!(p.on_write().is_err(), "and stays failed");
+        // fsyncs are independent
+        assert!(p.on_fsync().is_ok());
+        p.fail_fsync_at(p.fsyncs_seen() + 1);
+        assert!(p.on_fsync().is_err());
+    }
+}

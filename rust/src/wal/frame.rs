@@ -35,7 +35,9 @@ const OP_CHECKPOINT: u8 = 3;
 pub const FRAME_HEADER: usize = 8;
 /// Sanity bound on the length field — real payloads are ≤ 13 bytes, but
 /// the reader stays tolerant of future (larger) record kinds up to this.
-const MAX_PAYLOAD: usize = 1 << 16;
+/// Public so the replication stream can size read windows that always
+/// hold at least one whole frame.
+pub const MAX_PAYLOAD: usize = 1 << 16;
 
 // ───────────────────────── crc32 (IEEE) ─────────────────────────
 

@@ -89,6 +89,12 @@ pub struct WalStats {
     pub rotations: AtomicU64,
     /// group-commit burst sizes (bounded reservoir)
     batches: Mutex<Histogram>,
+    /// `(segment seq, byte offset)` up to which every frame is fsynced.
+    /// This is the watermark the replication stream may serve: bytes
+    /// past it exist in the page cache but could vanish in a crash, so
+    /// shipping them would let a replica apply an op the primary can
+    /// lose. One mutex (not two atomics) so the pair is never torn.
+    durable: Mutex<(u64, u64)>,
 }
 
 impl Default for WalStats {
@@ -99,6 +105,7 @@ impl Default for WalStats {
             fsyncs: AtomicU64::new(0),
             rotations: AtomicU64::new(0),
             batches: Mutex::new(Histogram::with_capacity(crate::metrics::SERVING_RESERVOIR)),
+            durable: Mutex::new((0, 0)),
         }
     }
 }
@@ -106,6 +113,17 @@ impl Default for WalStats {
 impl WalStats {
     fn record_batch(&self, n: usize) {
         self.batches.lock().unwrap().record(n as f64);
+    }
+
+    /// The fsynced frontier `(segment seq, byte offset within it)` —
+    /// everything at or before it survives a crash; nothing after it may
+    /// be replicated.
+    pub fn durable_watermark(&self) -> (u64, u64) {
+        *self.durable.lock().unwrap()
+    }
+
+    fn set_durable(&self, seg: u64, off: u64) {
+        *self.durable.lock().unwrap() = (seg, off);
     }
 
     /// (mean, p95, max, count) of recent group-commit burst sizes.
@@ -190,16 +208,30 @@ impl Wal {
         segment_bytes: u64,
         start_seq: u64,
     ) -> Result<Wal> {
+        Self::open_with_faults(dir, policy, segment_bytes, start_seq, None)
+    }
+
+    /// [`Self::open`] with an injectable fault plan on the write/fsync
+    /// path (testing only — pass `None` in production wiring).
+    pub fn open_with_faults(
+        dir: &Path,
+        policy: FsyncPolicy,
+        segment_bytes: u64,
+        start_seq: u64,
+        faults: Option<Arc<super::fault::FaultPlan>>,
+    ) -> Result<Wal> {
         let file = File::create(segment_path(dir, start_seq))
             .with_context(|| format!("creating wal segment {start_seq} in {}", dir.display()))?;
         let stats = Arc::new(WalStats::default());
+        // nothing is durable yet in the fresh segment
+        stats.set_durable(start_seq, 0);
         let (tx, rx) = sync_channel::<Cmd>(QUEUE_CAP);
         let wstats = stats.clone();
         let wdir = dir.to_path_buf();
         let writer = std::thread::Builder::new()
             .name("chh-wal-writer".to_string())
             .spawn(move || {
-                writer_loop(rx, wdir, policy, segment_bytes.max(1), start_seq, file, wstats)
+                writer_loop(rx, wdir, policy, segment_bytes.max(1), start_seq, file, wstats, faults)
             })
             .context("spawning wal writer thread")?;
         Ok(Wal { tx: Some(tx), writer: Some(writer), stats })
@@ -283,16 +315,29 @@ struct WriterState {
     unsynced: u64,
     last_sync: Instant,
     stats: Arc<WalStats>,
+    /// injectable write/fsync failures (tests); None in production
+    faults: Option<Arc<super::fault::FaultPlan>>,
     /// sticky I/O error: once the disk fails, every later op is refused
     /// with this message instead of silently acking lost writes
     fail: Option<String>,
 }
 
 impl WriterState {
+    fn sync_file(&mut self) -> std::io::Result<()> {
+        if let Some(f) = &self.faults {
+            f.on_fsync()?;
+        }
+        self.file.sync_all()?;
+        self.stats.fsyncs.fetch_add(1, Ordering::Relaxed);
+        // only now are the written bytes crash-durable — advance the
+        // watermark the replication stream is allowed to serve
+        self.stats.set_durable(self.seq, self.in_segment);
+        Ok(())
+    }
+
     fn fsync(&mut self) -> std::io::Result<()> {
         if self.unsynced > 0 || matches!(self.policy, FsyncPolicy::Always) {
-            self.file.sync_all()?;
-            self.stats.fsyncs.fetch_add(1, Ordering::Relaxed);
+            self.sync_file()?;
         }
         self.unsynced = 0;
         self.last_sync = Instant::now();
@@ -300,13 +345,14 @@ impl WriterState {
     }
 
     fn roll(&mut self) -> std::io::Result<u64> {
-        self.file.sync_all()?;
-        self.stats.fsyncs.fetch_add(1, Ordering::Relaxed);
+        self.sync_file()?;
         self.unsynced = 0;
         self.last_sync = Instant::now();
         self.seq += 1;
         self.file = File::create(segment_path(&self.dir, self.seq))?;
         self.in_segment = 0;
+        // the fresh (empty) segment is trivially durable up to byte 0
+        self.stats.set_durable(self.seq, 0);
         self.stats.rotations.fetch_add(1, Ordering::Relaxed);
         Ok(self.seq)
     }
@@ -341,6 +387,9 @@ impl WriterState {
     }
 
     fn try_commit(&mut self, buf: &[u8], n: u64) -> std::io::Result<()> {
+        if let Some(f) = &self.faults {
+            f.on_write()?;
+        }
         self.file.write_all(buf)?;
         self.in_segment += buf.len() as u64;
         self.unsynced += n;
@@ -402,6 +451,7 @@ impl WriterState {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn writer_loop(
     rx: Receiver<Cmd>,
     dir: PathBuf,
@@ -410,6 +460,7 @@ fn writer_loop(
     start_seq: u64,
     file: File,
     stats: Arc<WalStats>,
+    faults: Option<Arc<super::fault::FaultPlan>>,
 ) {
     let mut st = WriterState {
         dir,
@@ -421,6 +472,7 @@ fn writer_loop(
         unsynced: 0,
         last_sync: Instant::now(),
         stats,
+        faults,
         fail: None,
     };
     loop {
@@ -479,8 +531,8 @@ fn writer_loop(
         st.commit(&buf, acks);
     }
     // channel closed: everything queued is written; leave the tail synced
-    if st.fail.is_none() {
-        let _ = st.file.sync_all();
+    if st.fail.is_none() && st.file.sync_all().is_ok() {
+        st.stats.set_durable(st.seq, st.in_segment);
     }
 }
 
@@ -584,6 +636,74 @@ mod tests {
         assert!("sometimes".parse::<FsyncPolicy>().is_err());
         assert!("every:x".parse::<FsyncPolicy>().is_err());
         assert_eq!(FsyncPolicy::EveryN(8).to_string(), "every:8");
+    }
+
+    #[test]
+    fn durable_watermark_tracks_fsyncs_and_rolls() {
+        let dir = tmpdir("watermark");
+        let wal = Wal::open(&dir, FsyncPolicy::Always, 1 << 20, 1).unwrap();
+        assert_eq!(wal.stats().durable_watermark(), (1, 0));
+        let rec = Record::Insert { id: 1, code: 2 };
+        wal.append(&rec).wait().unwrap();
+        let fl = super::super::frame::frame_len(&rec) as u64;
+        // fsync: always ⇒ by ack time the frame is durable
+        assert_eq!(wal.stats().durable_watermark(), (1, fl));
+        let new_seq = wal.rotate().unwrap();
+        assert_eq!(wal.stats().durable_watermark(), (new_seq, 0));
+        drop(wal);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lazy_policy_watermark_lags_written_bytes() {
+        let dir = tmpdir("lazy_watermark");
+        // huge EveryN: acks resolve after the buffered write, before any
+        // fsync — the watermark must NOT cover those bytes
+        let wal = Wal::open(&dir, FsyncPolicy::EveryN(1_000_000), 1 << 20, 1).unwrap();
+        for id in 0..10u32 {
+            wal.append(&Record::Insert { id, code: 3 }).wait().unwrap();
+        }
+        assert_eq!(
+            wal.stats().durable_watermark(),
+            (1, 0),
+            "unsynced bytes are not durable"
+        );
+        wal.flush().unwrap();
+        let (seg, off) = wal.stats().durable_watermark();
+        assert_eq!(seg, 1);
+        assert_eq!(off, wal.stats().bytes.load(Ordering::Relaxed));
+        drop(wal);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn injected_fsync_fault_is_sticky_and_freezes_the_watermark() {
+        let dir = tmpdir("fault");
+        let plan = super::super::fault::FaultPlan::new();
+        let wal = Wal::open_with_faults(
+            &dir,
+            FsyncPolicy::Always,
+            1 << 20,
+            1,
+            Some(plan.clone()),
+        )
+        .unwrap();
+        for id in 0..5u32 {
+            wal.append(&Record::Insert { id, code: 1 }).wait().unwrap();
+        }
+        let before = wal.stats().durable_watermark();
+        plan.fail_fsync_at(plan.fsyncs_seen() + 1);
+        let err = wal.append(&Record::Insert { id: 99, code: 1 }).wait();
+        assert!(err.is_err(), "faulted op must not be acknowledged");
+        // sticky fail-stop: later ops refused, watermark frozen
+        assert!(wal.append(&Record::Insert { id: 100, code: 1 }).wait().is_err());
+        assert_eq!(
+            wal.stats().durable_watermark(),
+            before,
+            "un-fsynced bytes never become durable"
+        );
+        drop(wal);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

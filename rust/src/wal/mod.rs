@@ -32,13 +32,15 @@
 //! `chh recover` replays a directory standalone. Formats, fsync-policy
 //! trade-offs and the operational runbook live in `docs/DURABILITY.md`.
 
+pub mod fault;
 pub mod frame;
 pub mod log;
 pub mod snapshot;
 
+pub use fault::FaultPlan;
 pub use frame::Record;
 pub use log::{AppendTicket, FsyncPolicy, Wal, WalStats};
-pub use snapshot::{is_wal_dir, recover, RecoveryReport};
+pub use snapshot::{is_wal_dir, recover, Manifest, RecoveryReport};
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -60,6 +62,9 @@ pub struct WalConfig {
     pub fsync: FsyncPolicy,
     /// roll to a new segment past this many bytes
     pub segment_bytes: u64,
+    /// injectable write/fsync failures on the WAL path (fault tests
+    /// only; `None` in production)
+    pub faults: Option<Arc<FaultPlan>>,
 }
 
 impl WalConfig {
@@ -68,6 +73,7 @@ impl WalConfig {
             dir: dir.into(),
             fsync: FsyncPolicy::Always,
             segment_bytes: 64 << 20,
+            faults: None,
         }
     }
 }
@@ -148,7 +154,8 @@ impl DurableIndex {
             &cfg.dir,
             &snapshot::Manifest { snapshot_gen: 0, replay_from_seq: 1 },
         )?;
-        let wal = Wal::open(&cfg.dir, cfg.fsync, cfg.segment_bytes, 1)?;
+        let wal =
+            Wal::open_with_faults(&cfg.dir, cfg.fsync, cfg.segment_bytes, 1, cfg.faults.clone())?;
         Ok(DurableIndex {
             index,
             wal,
@@ -203,7 +210,13 @@ impl DurableIndex {
             .last()
             .map(|&(seq, _)| seq + 1)
             .unwrap_or(1);
-        let wal = Wal::open(&cfg.dir, cfg.fsync, cfg.segment_bytes, next_seq)?;
+        let wal = Wal::open_with_faults(
+            &cfg.dir,
+            cfg.fsync,
+            cfg.segment_bytes,
+            next_seq,
+            cfg.faults.clone(),
+        )?;
         let durable = DurableIndex {
             index: Arc::new(index),
             wal,
@@ -230,6 +243,12 @@ impl DurableIndex {
 
     pub fn wal_stats(&self) -> &Arc<WalStats> {
         self.wal.stats()
+    }
+
+    /// The fsynced `(segment, offset)` frontier — the farthest point the
+    /// replication stream ([`crate::replicate`]) is allowed to serve.
+    pub fn durable_watermark(&self) -> (u64, u64) {
+        self.wal.stats().durable_watermark()
     }
 
     pub fn snapshot_gen(&self) -> u64 {
@@ -359,7 +378,12 @@ mod tests {
     }
 
     fn cfg(dir: &PathBuf) -> WalConfig {
-        WalConfig { dir: dir.clone(), fsync: FsyncPolicy::Always, segment_bytes: 1 << 20 }
+        WalConfig {
+            dir: dir.clone(),
+            fsync: FsyncPolicy::Always,
+            segment_bytes: 1 << 20,
+            faults: None,
+        }
     }
 
     #[test]

@@ -72,7 +72,10 @@ pub(crate) fn write_manifest(dir: &Path, m: &Manifest) -> Result<()> {
     crate::persist::atomic_write(&dir.join(MANIFEST), doc.to_string_pretty().as_bytes())
 }
 
-pub(crate) fn read_manifest(dir: &Path) -> Result<Option<Manifest>> {
+/// Read the directory's root pointer (`None` when no manifest exists).
+/// Public for the replication bootstrap handler, which must pair a
+/// snapshot generation with its replay start atomically.
+pub fn read_manifest(dir: &Path) -> Result<Option<Manifest>> {
     let path = dir.join(MANIFEST);
     let text = match std::fs::read_to_string(&path) {
         Ok(t) => t,
@@ -124,6 +127,12 @@ pub struct RecoveryReport {
     pub segments_skipped: usize,
     /// live points after replay + compaction
     pub live: usize,
+    /// WAL position `(segment seq, byte offset)` replay stopped at — the
+    /// "last applied seq" a replication test (or a resuming tailer)
+    /// compares convergence points against. When no segment was scanned
+    /// this is `(replay start, 0)`.
+    pub end_seg: u64,
+    pub end_off: u64,
 }
 
 impl RecoveryReport {
@@ -177,6 +186,8 @@ impl RecoveryReport {
             ("torn_bytes", Json::from(self.torn_bytes as usize)),
             ("segments_skipped", Json::from(self.segments_skipped)),
             ("live", Json::from(self.live)),
+            ("end_seg", Json::from(self.end_seg as usize)),
+            ("end_off", Json::from(self.end_off as usize)),
         ])
     }
 }
@@ -249,12 +260,16 @@ pub fn recover(dir: &Path) -> Result<(ShardedIndex, RecoveryReport)> {
         .into_iter()
         .filter(|&(seq, _)| seq >= replay_from)
         .collect();
+    report.end_seg = replay_from;
+    report.end_off = 0;
     let last = segments.len().saturating_sub(1);
     for (i, (seq, path)) in segments.iter().enumerate() {
         let data =
             std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
         let read = read_segment_bytes(&data);
         report.segments += 1;
+        report.end_seg = *seq;
+        report.end_off = read.valid_bytes as u64;
         for rec in &read.records {
             match *rec {
                 Record::Insert { id, code } => {

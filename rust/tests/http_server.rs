@@ -14,8 +14,11 @@ use chh::data::test_blobs;
 use chh::hash::{BhHash, HashFamily};
 use chh::online::{QueryBudget, ShardedIndex};
 use chh::par::Pool;
+use chh::replicate::{spawn_tailer, ReplicaConfig, ReplicaIndex};
 use chh::rng::Rng;
-use chh::server::{protocol, BatcherConfig, Durability, HttpClient, Server, ServerConfig, Stack};
+use chh::server::{
+    protocol, BatcherConfig, Durability, HttpClient, ReplicaRole, Server, ServerConfig, Stack,
+};
 use chh::table::HyperplaneIndex;
 use chh::testing::unit_vec;
 use chh::wal::{DurableIndex, FsyncPolicy, WalConfig};
@@ -298,6 +301,7 @@ fn durable_server_graceful_shutdown_needs_no_replay() {
         dir: dir.clone(),
         fsync: FsyncPolicy::Always,
         segment_bytes: 1 << 20,
+        faults: None,
     };
     let durable = Arc::new(DurableIndex::create(idx, &wal_cfg).expect("create wal dir"));
     let handle = Server::spawn_with_durability(
@@ -339,6 +343,165 @@ fn durable_server_graceful_shutdown_needs_no_replay() {
     let (back, report) = chh::wal::recover(&dir).expect("recover after clean stop");
     assert_eq!(report.replayed, 0, "clean shutdown must replay zero records");
     assert_eq!(back.len(), 197, "recovered live count matches the served index");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn replica_answers_reads_bit_identically_under_wire_churn() {
+    let dir = std::env::temp_dir().join(format!("chh_http_repl_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    // ── primary: durable online server over a prebuilt index ─────────
+    let mut rng = Rng::seed_from_u64(71);
+    let ds = test_blobs(300, DIM, 3, &mut rng);
+    let fam: Arc<dyn HashFamily> = Arc::new(BhHash::sample(DIM, 10, &mut rng));
+    let codes = fam.encode_all(ds.features());
+    let idx = Arc::new(ShardedIndex::from_codes(&codes, 4, 3));
+    let feats = Arc::new(ds.features().clone());
+    let budget = QueryBudget::new(256, 64);
+    let wal_cfg = WalConfig {
+        dir: dir.clone(),
+        fsync: FsyncPolicy::Always,
+        segment_bytes: 1 << 20,
+        faults: None,
+    };
+    let durable = Arc::new(DurableIndex::create(idx.clone(), &wal_cfg).expect("create wal"));
+    let prouter = Arc::new(OnlineRouter::new(
+        fam.clone(),
+        idx.clone(),
+        feats.clone(),
+        1,
+        16,
+        budget,
+    ));
+    let primary = Server::spawn_with_durability(
+        Stack::Online(prouter),
+        server_cfg(),
+        Some(Durability { durable: durable.clone(), snapshot_every_ops: 0 }),
+    )
+    .expect("spawn primary");
+    let paddr = primary.addr().to_string();
+
+    // ── replica: bootstrap over HTTP, tail in the background, serve ──
+    let rcfg = ReplicaConfig {
+        poll: Duration::from_millis(5),
+        ..ReplicaConfig::new(&paddr)
+    };
+    let replica = ReplicaIndex::bootstrap(&rcfg).expect("bootstrap replica");
+    assert_eq!(replica.index().len(), 300, "base snapshot carries the prebuilt index");
+    let tailer = spawn_tailer(replica.clone(), rcfg);
+    // parity needs the same family + feature store the primary serves
+    let rrouter = Arc::new(OnlineRouter::new(
+        fam.clone(),
+        replica.index().clone(),
+        feats.clone(),
+        1,
+        16,
+        budget,
+    ));
+    let replica_srv = Server::spawn_replica(
+        Stack::Online(rrouter),
+        server_cfg(),
+        ReplicaRole {
+            replica: replica.clone(),
+            primary_addr: paddr.clone(),
+            tailer: Some(tailer),
+        },
+    )
+    .expect("spawn replica server");
+    let raddr = replica_srv.addr().to_string();
+
+    // ── concurrent wire mutations through the primary ────────────────
+    let threads = 4;
+    let mut joins = Vec::new();
+    for t in 0..threads {
+        let paddr = paddr.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Rng::seed_from_u64(4000 + t as u64);
+            let mut client = HttpClient::connect_retry(&paddr, Duration::from_secs(5)).unwrap();
+            client.set_timeout(Duration::from_secs(10)).unwrap();
+            for _ in 0..40 {
+                let id = rng.below(300) as u32;
+                let path = if rng.bernoulli(0.6) { "/insert" } else { "/remove" };
+                let resp = client.post(path, &protocol::id_body(id)).expect("mutation");
+                assert_eq!(resp.status, 200, "primary mutation under churn");
+            }
+        }));
+    }
+    for j in joins {
+        j.join().expect("mutator thread");
+    }
+
+    // ── quiesce: the replica reaches the durable watermark ───────────
+    let deadline = std::time::Instant::now() + Duration::from_secs(20);
+    while !(replica.caught_up() && replica.index().len() == idx.len()) {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "replica never caught up: {:?} vs {:?}",
+            replica.position(),
+            durable.durable_watermark()
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // ── identical reads over the wire, bit for bit ───────────────────
+    let mut pc = HttpClient::connect_retry(&paddr, Duration::from_secs(5)).unwrap();
+    let mut rc = HttpClient::connect_retry(&raddr, Duration::from_secs(5)).unwrap();
+    pc.set_timeout(Duration::from_secs(10)).unwrap();
+    rc.set_timeout(Duration::from_secs(10)).unwrap();
+    for q in 0..16 {
+        let w = unit_vec(&mut rng, DIM);
+        let ph = {
+            let resp = pc.post("/query", &protocol::query_body(&w)).unwrap();
+            assert_eq!(resp.status, 200);
+            protocol::parse_hit(&resp.body).unwrap()
+        };
+        let rh = {
+            let resp = rc.post("/query", &protocol::query_body(&w)).unwrap();
+            assert_eq!(resp.status, 200);
+            protocol::parse_hit(&resp.body).unwrap()
+        };
+        assert_hits_identical(&rh, &ph, &format!("replica query {q}"));
+        let pt = {
+            let resp = pc.post("/query_topk", &protocol::topk_body(&w, 9)).unwrap();
+            protocol::parse_topk_hits(&resp.body).unwrap()
+        };
+        let rt = {
+            let resp = rc.post("/query_topk", &protocol::topk_body(&w, 9)).unwrap();
+            protocol::parse_topk_hits(&resp.body).unwrap()
+        };
+        assert_eq!(pt.len(), rt.len(), "topk {q} length");
+        for ((pi, pm), (ri, rm)) in pt.iter().zip(rt.iter()) {
+            assert_eq!(pi, ri, "topk {q} id");
+            assert_eq!(pm.to_bits(), rm.to_bits(), "topk {q} margin bits");
+        }
+    }
+
+    // ── role surfaces: 421 on replica mutations, stats sections ──────
+    let resp = rc.post("/insert", &protocol::id_body(1)).unwrap();
+    assert_eq!(resp.status, 421, "replica mutations are misdirected");
+    let v = chh::jsonio::Json::parse_bytes(&resp.body).unwrap();
+    assert_eq!(v.get("primary").and_then(|x| x.as_str()), Some(paddr.as_str()));
+    let resp = rc.post("/remove", &protocol::id_body(1)).unwrap();
+    assert_eq!(resp.status, 421);
+    let stats = {
+        let resp = rc.get("/stats").unwrap();
+        chh::jsonio::Json::parse_bytes(&resp.body).unwrap()
+    };
+    assert_eq!(stats.get("role").and_then(|x| x.as_str()), Some("replica"));
+    let repl = stats.get("replication").expect("replication section");
+    assert_eq!(repl.get("caught_up").and_then(|x| x.as_bool()), Some(true));
+    assert_eq!(repl.get("lag_bytes").and_then(|x| x.as_usize()), Some(0));
+    assert_eq!(repl.get("lag_segments").and_then(|x| x.as_usize()), Some(0));
+    assert!(repl.get("applied_records").and_then(|x| x.as_usize()).unwrap() >= 160);
+    let pstats = {
+        let resp = pc.get("/stats").unwrap();
+        chh::jsonio::Json::parse_bytes(&resp.body).unwrap()
+    };
+    assert_eq!(pstats.get("role").and_then(|x| x.as_str()), Some("primary"));
+    drop(pc);
+    drop(rc);
+    replica_srv.shutdown(); // joins the tailer
+    primary.shutdown();
     let _ = std::fs::remove_dir_all(&dir);
 }
 

@@ -1,0 +1,430 @@
+//! Fault-injection acceptance tests for WAL-shipping replication:
+//!
+//! * **Frame-boundary kill/restart fuzz** — stream a primary's WAL to a
+//!   replica one frame per connection (a fresh HTTP client per fetch =
+//!   the stream killed and restarted at *every* frame boundary) and
+//!   assert after each frame that the replica's state is exactly the
+//!   corresponding prefix of acknowledged operations — never more,
+//!   never reordered — and that the converged replica answers queries
+//!   bit-identically to the primary.
+//! * **GC resync** — a replica that falls behind a checkpoint's segment
+//!   GC gets `bootstrap_required`, re-bootstraps from the fresh
+//!   snapshot, and still converges to the primary's exact state.
+//! * **Unacked ops never ship** — with an injected fsync fault, the op
+//!   that was refused to its caller (and everything after it) stays off
+//!   the stream: a replica serves only durable, acknowledged history.
+//! * **Live tailer convergence** — the background tailer follows a
+//!   primary under concurrent multi-threaded churn with checkpoints
+//!   racing it, reaches lag 0, and matches the primary bit for bit.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use chh::coordinator::OnlineRouter;
+use chh::data::test_blobs;
+use chh::hash::{BhHash, HashFamily};
+use chh::online::{QueryBudget, ShardedIndex};
+use chh::replicate::{primary, spawn_tailer, wire, ReplicaConfig, ReplicaIndex};
+use chh::rng::Rng;
+use chh::server::{BatcherConfig, Durability, HttpClient, Server, ServerConfig, Stack};
+use chh::testing::unit_vec;
+use chh::wal::{frame, DurableIndex, FaultPlan, FsyncPolicy, Record, WalConfig};
+
+const DIM: usize = 16;
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("chh_repl_it_{}_{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn server_cfg() -> ServerConfig {
+    ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        max_conns: 32,
+        batch: BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            queue_cap: 256,
+        },
+        pool_workers: 2,
+        idle_timeout: Duration::from_millis(300),
+    }
+}
+
+fn sorted_entries(index: &ShardedIndex) -> Vec<Vec<(u32, u64)>> {
+    index
+        .shards()
+        .iter()
+        .map(|s| {
+            let mut e = s.live_entries();
+            e.sort_unstable();
+            e
+        })
+        .collect()
+}
+
+/// Apply a record prefix to a fresh index with the primary's layout.
+fn expect_index(ops: &[Record], bits: usize, radius: usize, shards: usize) -> ShardedIndex {
+    let idx = ShardedIndex::new(bits, radius, shards);
+    for r in ops {
+        match *r {
+            Record::Insert { id, code } => idx.insert(id, code),
+            Record::Remove { id } => {
+                idx.remove(id);
+            }
+            Record::Checkpoint { .. } => {}
+        }
+    }
+    idx
+}
+
+fn assert_query_parity(
+    a: &ShardedIndex,
+    b: &ShardedIndex,
+    fam: &dyn HashFamily,
+    feats: &chh::data::FeatureStore,
+    rng: &mut Rng,
+    ctx: &str,
+) {
+    let budget = QueryBudget::new(256, 64);
+    for q in 0..10 {
+        let w = unit_vec(rng, DIM);
+        let ha = a.query(fam, &w, feats, budget, |_| true);
+        let hb = b.query(fam, &w, feats, budget, |_| true);
+        match (ha.best, hb.best) {
+            (Some((ia, ma)), Some((ib, mb))) => {
+                assert_eq!(ia, ib, "{ctx}: query {q} best id");
+                assert_eq!(
+                    ma.to_bits(),
+                    mb.to_bits(),
+                    "{ctx}: query {q} margin must be bit-identical"
+                );
+            }
+            (None, None) => {}
+            (x, y) => panic!("{ctx}: query {q} best mismatch {x:?} vs {y:?}"),
+        }
+        assert_eq!(ha.scanned, hb.scanned, "{ctx}: query {q} scanned");
+        assert_eq!(ha.probed, hb.probed, "{ctx}: query {q} probed");
+        assert_eq!(ha.nonempty, hb.nonempty, "{ctx}: query {q} nonempty");
+    }
+}
+
+/// A durable online primary behind a live HTTP server, plus the op
+/// journal driven through it.
+struct Primary {
+    fam: Arc<dyn HashFamily>,
+    feats: Arc<chh::data::FeatureStore>,
+    index: Arc<ShardedIndex>,
+    durable: Arc<DurableIndex>,
+    handle: chh::server::ServerHandle,
+    addr: String,
+}
+
+fn spawn_primary(dir: &PathBuf, seed: u64, segment_bytes: u64) -> Primary {
+    let mut rng = Rng::seed_from_u64(seed);
+    let ds = test_blobs(200, DIM, 3, &mut rng);
+    let fam: Arc<dyn HashFamily> = Arc::new(BhHash::sample(DIM, 10, &mut rng));
+    let feats = Arc::new(ds.features().clone());
+    let index = Arc::new(ShardedIndex::new(10, 2, 3));
+    let wal_cfg = WalConfig {
+        dir: dir.clone(),
+        fsync: FsyncPolicy::Always,
+        segment_bytes,
+        faults: None,
+    };
+    let durable = Arc::new(DurableIndex::create(index.clone(), &wal_cfg).expect("create wal"));
+    let router = Arc::new(OnlineRouter::new(
+        fam.clone(),
+        index.clone(),
+        feats.clone(),
+        1,
+        16,
+        QueryBudget::new(256, 64),
+    ));
+    let handle = Server::spawn_with_durability(
+        Stack::Online(router),
+        server_cfg(),
+        Some(Durability { durable: durable.clone(), snapshot_every_ops: 0 }),
+    )
+    .expect("spawn primary");
+    let addr = handle.addr().to_string();
+    Primary { fam, feats, index, durable, handle, addr }
+}
+
+/// Acknowledged insert/remove mix, returned as the journaled op order.
+fn churn_ops(p: &Primary, rng: &mut Rng, n: usize) -> Vec<Record> {
+    let mut ops = Vec::with_capacity(n);
+    for i in 0..n {
+        if i % 4 == 3 {
+            let id = rng.below(200) as u32;
+            let _ = p.durable.remove(id).unwrap();
+            ops.push(Record::Remove { id });
+        } else {
+            let id = rng.below(200) as u32;
+            let code = p.fam.encode_point(p.feats.row(id as usize));
+            p.durable.insert(id, code).unwrap();
+            ops.push(Record::Insert { id, code });
+        }
+    }
+    ops
+}
+
+#[test]
+fn stream_kill_and_restart_at_every_frame_boundary() {
+    let dir = tmpdir("framekill");
+    let p = spawn_primary(&dir, 17, 1 << 20);
+    let mut rng = Rng::seed_from_u64(99);
+    let ops = churn_ops(&p, &mut rng, 48);
+
+    // bootstrap over HTTP: the base snapshot (gen 0) is the empty index
+    let rcfg = ReplicaConfig::new(&p.addr);
+    let replica = ReplicaIndex::bootstrap(&rcfg).expect("bootstrap");
+    assert_eq!(replica.index().len(), 0, "gen-0 base snapshot is empty");
+    assert_eq!(replica.position(), (1, 0));
+
+    // one frame per connection: drop the client after every fetch (the
+    // kill), reconnect fresh (the restart) — every frame boundary is a
+    // kill point
+    let mut applied = 0usize;
+    let mut rounds = 0usize;
+    while applied < ops.len() {
+        rounds += 1;
+        assert!(rounds < 10_000, "stream stopped making progress at op {applied}");
+        let mut client =
+            HttpClient::connect_retry(&p.addr, Duration::from_secs(5)).expect("reconnect");
+        client.set_timeout(Duration::from_secs(5)).unwrap();
+        let (seg, off) = replica.position();
+        let resp = client
+            .get(&format!("/wal/stream?seg={seg}&off={off}&max=1"))
+            .expect("fetch stream");
+        assert_eq!(resp.status, 200);
+        let chunk = wire::decode_stream_chunk(&resp.body).expect("decode chunk");
+        assert!(!chunk.bootstrap_required, "nothing was GC'd in this test");
+        let n = replica.apply_chunk(&chunk).expect("apply");
+        assert!(n <= 1, "max=1 must serve at most one frame");
+        applied += n;
+        drop(client); // kill the stream at this frame boundary
+        // the replica is exactly the acknowledged prefix — never ahead,
+        // never reordered
+        let expect = expect_index(&ops[..applied], 10, 2, 3);
+        assert_eq!(
+            sorted_entries(replica.index()),
+            sorted_entries(&expect),
+            "after {applied} applied frames"
+        );
+    }
+
+    // converged: bit-identical to the live primary
+    assert_eq!(replica.applied_records(), ops.len() as u64);
+    assert_eq!(sorted_entries(replica.index()), sorted_entries(&p.index));
+    assert!(replica.caught_up(), "final chunk carried the watermark");
+    assert_query_parity(
+        &p.index,
+        replica.index(),
+        p.fam.as_ref(),
+        &p.feats,
+        &mut rng,
+        "frame-boundary converged",
+    );
+    p.handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn segment_gc_forces_resync_and_replica_still_converges() {
+    let dir = tmpdir("gcresync");
+    let p = spawn_primary(&dir, 23, 1 << 20);
+    let mut rng = Rng::seed_from_u64(7);
+    let _ = churn_ops(&p, &mut rng, 20);
+
+    let rcfg = ReplicaConfig::new(&p.addr);
+    let replica = ReplicaIndex::bootstrap(&rcfg).expect("bootstrap");
+    assert_eq!(replica.bootstraps(), 1);
+
+    // the replica sleeps through a checkpoint: segment 1 gets GC'd
+    let _ = churn_ops(&p, &mut rng, 10);
+    p.durable.checkpoint().expect("checkpoint");
+    let _ = churn_ops(&p, &mut rng, 10);
+
+    let mut client =
+        HttpClient::connect_retry(&p.addr, Duration::from_secs(5)).expect("connect");
+    client.set_timeout(Duration::from_secs(5)).unwrap();
+    let (seg, off) = replica.position();
+    let resp = client
+        .get(&format!("/wal/stream?seg={seg}&off={off}"))
+        .expect("fetch stream");
+    let chunk = wire::decode_stream_chunk(&resp.body).expect("decode");
+    assert!(
+        chunk.bootstrap_required,
+        "a GC'd segment must demand a bootstrap, got {chunk:?}"
+    );
+    replica.resync(&mut client).expect("resync");
+    assert_eq!(replica.bootstraps(), 2);
+
+    // tail the remainder to convergence
+    let mut rounds = 0;
+    loop {
+        rounds += 1;
+        assert!(rounds < 10_000, "resynced replica never converged");
+        let (seg, off) = replica.position();
+        let resp = client
+            .get(&format!("/wal/stream?seg={seg}&off={off}"))
+            .expect("fetch stream");
+        let chunk = wire::decode_stream_chunk(&resp.body).expect("decode");
+        assert!(!chunk.bootstrap_required);
+        let n = replica.apply_chunk(&chunk).expect("apply");
+        if n == 0 && replica.position() == (seg, off) && replica.caught_up() {
+            break;
+        }
+    }
+    assert_eq!(sorted_entries(replica.index()), sorted_entries(&p.index));
+    assert_query_parity(
+        &p.index,
+        replica.index(),
+        p.fam.as_ref(),
+        &p.feats,
+        &mut rng,
+        "post-resync",
+    );
+    p.handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn injected_fsync_fault_never_ships_the_unacked_op() {
+    let dir = tmpdir("fsyncfault");
+    let faults = FaultPlan::new();
+    let cfg = WalConfig {
+        dir: dir.clone(),
+        fsync: FsyncPolicy::Always,
+        segment_bytes: 1 << 20,
+        faults: Some(faults.clone()),
+    };
+    let d = DurableIndex::create(Arc::new(ShardedIndex::new(10, 2, 3)), &cfg).unwrap();
+    let mut acked: Vec<Record> = Vec::new();
+    for id in 0..12u32 {
+        d.insert(id, (id % 7) as u64).unwrap();
+        acked.push(Record::Insert { id, code: (id % 7) as u64 });
+    }
+    // the disk "dies": the next fsync (and all later ones) fail
+    faults.fail_fsync_at(faults.fsyncs_seen() + 1);
+    assert!(d.insert(500, 1).is_err(), "op on the dead disk must not be acked");
+    assert!(d.insert(501, 1).is_err(), "sticky fail-stop refuses later ops too");
+    // fail-stop contract: the op may linger in the primary's RAM...
+    assert!(d.index().contains(500));
+    // ...but the stream serves only the durable prefix — a replica can
+    // never observe the unacknowledged op
+    let (dseg, doff) = d.durable_watermark();
+    let chunk =
+        primary::stream_from_dir(&dir, 1, 0, primary::MAX_STREAM_BYTES, dseg, doff).unwrap();
+    let read = frame::read_segment_bytes(&chunk.frames);
+    assert!(!read.torn);
+    assert_eq!(read.records, acked, "exactly the acknowledged ops, nothing after");
+    let replica = ReplicaIndex::from_snapshot(ShardedIndex::new(10, 2, 3), 1);
+    replica.apply_chunk(&chunk).unwrap();
+    assert!(!replica.index().contains(500), "unacked op must never be served");
+    assert_eq!(replica.index().len(), 12);
+    drop(d);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn injected_write_fault_behaves_the_same() {
+    let dir = tmpdir("writefault");
+    let faults = FaultPlan::new();
+    let cfg = WalConfig {
+        dir: dir.clone(),
+        fsync: FsyncPolicy::Always,
+        segment_bytes: 1 << 20,
+        faults: Some(faults.clone()),
+    };
+    let d = DurableIndex::create(Arc::new(ShardedIndex::new(10, 2, 3)), &cfg).unwrap();
+    for id in 0..5u32 {
+        d.insert(id, 1).unwrap();
+    }
+    faults.fail_write_at(faults.writes_seen() + 1);
+    assert!(d.insert(600, 1).is_err());
+    let (dseg, doff) = d.durable_watermark();
+    let chunk =
+        primary::stream_from_dir(&dir, 1, 0, primary::MAX_STREAM_BYTES, dseg, doff).unwrap();
+    let read = frame::read_segment_bytes(&chunk.frames);
+    assert_eq!(read.records.len(), 5, "only the 5 acked inserts are streamable");
+    drop(d);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn live_tailer_converges_under_concurrent_churn_and_checkpoints() {
+    let dir = tmpdir("tailer");
+    let p = spawn_primary(&dir, 41, 4096); // small segments: rolls mid-run
+    let rcfg = ReplicaConfig {
+        poll: Duration::from_millis(5),
+        backoff: Duration::from_millis(20),
+        ..ReplicaConfig::new(&p.addr)
+    };
+    let replica = ReplicaIndex::bootstrap(&rcfg).expect("bootstrap");
+    let tailer = spawn_tailer(replica.clone(), rcfg);
+
+    // concurrent churn through the durable primary while checkpoints
+    // rotate + GC segments under the tailer
+    let mut joins = Vec::new();
+    for t in 0..3u64 {
+        let durable = p.durable.clone();
+        let fam = p.fam.clone();
+        let feats = p.feats.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Rng::seed_from_u64(1000 + t);
+            for _ in 0..80 {
+                let id = rng.below(200) as u32;
+                if rng.bernoulli(0.7) {
+                    let code = fam.encode_point(feats.row(id as usize));
+                    durable.insert(id, code).unwrap();
+                } else {
+                    let _ = durable.remove(id).unwrap();
+                }
+            }
+        }));
+    }
+    let ck = {
+        let durable = p.durable.clone();
+        std::thread::spawn(move || {
+            for _ in 0..2 {
+                std::thread::sleep(Duration::from_millis(10));
+                durable.checkpoint().unwrap();
+            }
+        })
+    };
+    for j in joins {
+        j.join().unwrap();
+    }
+    ck.join().unwrap();
+
+    // quiesced: the tailer must reach the durable watermark and match
+    let deadline = Instant::now() + Duration::from_secs(20);
+    while !(replica.caught_up() && replica.index().len() == p.index.len()) {
+        assert!(
+            Instant::now() < deadline,
+            "tailer never converged: pos {:?} vs watermark {:?}, {} vs {} live",
+            replica.position(),
+            p.durable.durable_watermark(),
+            replica.index().len(),
+            p.index.len()
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(sorted_entries(replica.index()), sorted_entries(&p.index));
+    let mut rng = Rng::seed_from_u64(5);
+    assert_query_parity(
+        &p.index,
+        replica.index(),
+        p.fam.as_ref(),
+        &p.feats,
+        &mut rng,
+        "tailer converged",
+    );
+    tailer.stop();
+    p.handle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -28,7 +28,7 @@ fn tmpdir(name: &str) -> PathBuf {
 }
 
 fn wal_cfg(dir: &PathBuf, segment_bytes: u64) -> WalConfig {
-    WalConfig { dir: dir.clone(), fsync: FsyncPolicy::Always, segment_bytes }
+    WalConfig { dir: dir.clone(), fsync: FsyncPolicy::Always, segment_bytes, faults: None }
 }
 
 fn sorted_entries(index: &ShardedIndex) -> Vec<Vec<(u32, u64)>> {
@@ -82,6 +82,13 @@ fn torn_tail_fuzz_every_byte_boundary() {
         let j = boundaries.iter().filter(|&&b| b <= cut).count() - 1;
         assert_eq!(report.replayed, j, "cut at byte {cut}");
         assert_eq!(report.torn_bytes, (cut - boundaries[j]) as u64, "cut at byte {cut}");
+        // the reported end position is the valid-prefix boundary — what
+        // `chh recover --inspect --json` exposes as last_applied_seq/off
+        assert_eq!(
+            (report.end_seg, report.end_off),
+            (1, boundaries[j] as u64),
+            "cut at byte {cut}: end position"
+        );
         let expect = ShardedIndex::new(12, 2, 3);
         for r in &ops[..j] {
             match *r {
