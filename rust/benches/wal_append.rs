@@ -67,6 +67,7 @@ fn main() {
                 ("mean_us", Json::Num(secs * 1e6 / n_ops as f64)),
                 ("fsyncs", Json::from(fsyncs as usize)),
                 ("wal_bytes", Json::from(bytes as usize)),
+                ("fsync_us", st.fsync_hist.summary_json(1e3)),
             ],
         );
         drop(d);
@@ -121,6 +122,8 @@ fn main() {
                 ("p95_batch", Json::Num(p95_batch)),
                 ("max_batch", Json::Num(max_batch)),
                 ("fsyncs", Json::from(fsyncs as usize)),
+                ("fsync_us", d.wal_stats().fsync_hist.summary_json(1e3)),
+                ("commit_batch", d.wal_stats().commit_batch.summary_json(1.0)),
             ],
         );
         drop(d);

@@ -220,14 +220,32 @@ impl Router {
         reqs: &[QueryRequest],
         pool: &crate::par::Pool,
     ) -> Vec<QueryHit> {
+        self.query_batch_pooled_traced(reqs, pool).0
+    }
+
+    /// [`Self::query_batch_pooled`] plus the batch's per-stage
+    /// wall-clock, summed over requests. The untraced entry point
+    /// delegates here, so traced and untraced hits are bit-identical by
+    /// construction. On the static index the probe-plan and merge work
+    /// is fused into the table scan, so only `encode` and `scan` are
+    /// populated.
+    pub fn query_batch_pooled_traced(
+        &self,
+        reqs: &[QueryRequest],
+        pool: &crate::par::Pool,
+    ) -> (Vec<QueryHit>, crate::obs::StageTimes) {
         let sh = &self.shared;
-        let hits: Vec<QueryHit> = pool
+        let results: Vec<(QueryHit, crate::obs::StageTimes)> = pool
             .map(reqs.len(), crate::table::QUERY_CHUNK, |range| {
                 range
                     .map(|qi| {
                         let req = &reqs[qi];
+                        let mut st = crate::obs::StageTimes::default();
+                        let t0 = Instant::now();
                         let lookup = sh.family.encode_query(&req.w);
-                        match &req.exclude {
+                        st.encode = t0.elapsed();
+                        let t1 = Instant::now();
+                        let hit = match &req.exclude {
                             Some(ex) => sh.index.query_code_filtered(
                                 lookup,
                                 &req.w,
@@ -237,20 +255,28 @@ impl Router {
                             None => sh
                                 .index
                                 .query_code_filtered(lookup, &req.w, &sh.feats, |_| true),
-                        }
+                        };
+                        st.scan = t1.elapsed();
+                        (hit, st)
                     })
                     .collect::<Vec<_>>()
             })
             .into_iter()
             .flatten()
             .collect();
+        let mut times = crate::obs::StageTimes::default();
+        let mut hits = Vec::with_capacity(results.len());
+        for (h, st) in results {
+            times.add(&st);
+            hits.push(h);
+        }
         let scanned: usize = hits.iter().map(|h| h.scanned).sum();
         let empty = hits.iter().filter(|h| !h.nonempty).count();
         self.stats.submitted.fetch_add(reqs.len() as u64, Ordering::Relaxed);
         self.stats.completed.fetch_add(reqs.len() as u64, Ordering::Relaxed);
         self.stats.empty_lookups.fetch_add(empty as u64, Ordering::Relaxed);
         self.stats.candidates_scanned.fetch_add(scanned as u64, Ordering::Relaxed);
-        hits
+        (hits, times)
     }
 
     /// Drain the queue and join the workers.
@@ -438,37 +464,56 @@ impl OnlineRouter {
         reqs: &[QueryRequest],
         pool: &crate::par::Pool,
     ) -> Vec<QueryHit> {
+        self.query_batch_pooled_traced(reqs, pool).0
+    }
+
+    /// [`Self::query_batch_pooled`] plus the batch's per-stage
+    /// wall-clock (encode / probe planning / shard scan / merge), summed
+    /// over requests. The untraced entry point delegates here, so traced
+    /// and untraced hits are bit-identical by construction.
+    pub fn query_batch_pooled_traced(
+        &self,
+        reqs: &[QueryRequest],
+        pool: &crate::par::Pool,
+    ) -> (Vec<QueryHit>, crate::obs::StageTimes) {
         let sh = &self.shared;
-        let run_one = |req: &QueryRequest, fan: &crate::par::Pool| -> QueryHit {
-            let lookup = sh.family.encode_query(&req.w);
-            let scores = sh.family.query_bit_scores(&req.w);
-            match &req.exclude {
-                Some(ex) => sh.index.query_code_pool(
-                    lookup,
-                    scores.as_deref(),
-                    &req.w,
-                    &sh.feats,
-                    sh.budget,
-                    |i| !ex.contains(&i),
-                    fan,
-                ),
-                None => sh.index.query_code_pool(
-                    lookup,
-                    scores.as_deref(),
-                    &req.w,
-                    &sh.feats,
-                    sh.budget,
-                    |_| true,
-                    fan,
-                ),
-            }
-        };
+        let run_one =
+            |req: &QueryRequest, fan: &crate::par::Pool| -> (QueryHit, crate::obs::StageTimes) {
+                let mut st = crate::obs::StageTimes::default();
+                let t0 = Instant::now();
+                let lookup = sh.family.encode_query(&req.w);
+                let scores = sh.family.query_bit_scores(&req.w);
+                st.encode = t0.elapsed();
+                let hit = match &req.exclude {
+                    Some(ex) => sh.index.query_code_pool_timed(
+                        lookup,
+                        scores.as_deref(),
+                        &req.w,
+                        &sh.feats,
+                        sh.budget,
+                        |i| !ex.contains(&i),
+                        fan,
+                        &mut st,
+                    ),
+                    None => sh.index.query_code_pool_timed(
+                        lookup,
+                        scores.as_deref(),
+                        &req.w,
+                        &sh.feats,
+                        sh.budget,
+                        |_| true,
+                        fan,
+                        &mut st,
+                    ),
+                };
+                (hit, st)
+            };
         // Many queries: parallelize across requests (each request's shard
         // fan-out then runs inline on its worker) — shard count must not
         // cap batch parallelism. A single query instead spends the
         // workers on its per-shard fan-out. Hits are identical either
         // way: shard partials always merge in shard order.
-        let hits: Vec<QueryHit> = if reqs.len() == 1 {
+        let results: Vec<(QueryHit, crate::obs::StageTimes)> = if reqs.len() == 1 {
             vec![run_one(&reqs[0], pool)]
         } else {
             pool.map(reqs.len(), crate::table::QUERY_CHUNK, |range| {
@@ -480,13 +525,19 @@ impl OnlineRouter {
             .flatten()
             .collect()
         };
+        let mut times = crate::obs::StageTimes::default();
+        let mut hits = Vec::with_capacity(results.len());
+        for (h, st) in results {
+            times.add(&st);
+            hits.push(h);
+        }
         let scanned: usize = hits.iter().map(|h| h.scanned).sum();
         let empty = hits.iter().filter(|h| !h.nonempty).count();
         self.stats.submitted.fetch_add(reqs.len() as u64, Ordering::Relaxed);
         self.stats.completed.fetch_add(reqs.len() as u64, Ordering::Relaxed);
         self.stats.empty_lookups.fetch_add(empty as u64, Ordering::Relaxed);
         self.stats.candidates_scanned.fetch_add(scanned as u64, Ordering::Relaxed);
-        hits
+        (hits, times)
     }
 
     /// Drain the queue and join the workers.
@@ -763,6 +814,44 @@ mod tests {
                 assert_eq!(p.nonempty, q.hit.nonempty);
             }
         }
+        router.shutdown();
+    }
+
+    #[test]
+    fn traced_batch_is_bit_identical_and_reports_stages() {
+        // online path: all four stages populate
+        let (fam, idx, feats, mut rng) = setup_online(500, 3);
+        let router = OnlineRouter::new(fam, idx, feats, 2, 8, QueryBudget::new(128, 64));
+        let reqs: Vec<QueryRequest> = (0..10)
+            .map(|_| QueryRequest { w: unit_vec(&mut rng, 16), exclude: None })
+            .collect();
+        let pool = crate::par::Pool::new(2);
+        let plain = router.query_batch_pooled(&reqs, &pool);
+        let (traced, times) = router.query_batch_pooled_traced(&reqs, &pool);
+        assert_eq!(plain.len(), traced.len());
+        for (p, t) in plain.iter().zip(traced.iter()) {
+            assert_eq!(p.best.map(|(i, m)| (i, m.to_bits())), t.best.map(|(i, m)| (i, m.to_bits())));
+            assert_eq!(p.scanned, t.scanned);
+            assert_eq!(p.probed, t.probed);
+            assert_eq!(p.nonempty, t.nonempty);
+        }
+        assert!(times.encode > Duration::ZERO, "encode stage timed");
+        assert!(times.scan > Duration::ZERO, "scan stage timed");
+        router.shutdown();
+        // static path: encode + scan populate, probe/merge stay zero
+        let (fam, idx, feats, mut rng) = setup(300);
+        let router = Router::new(fam, idx, feats, 2, 8);
+        let reqs: Vec<QueryRequest> = (0..6)
+            .map(|_| QueryRequest { w: unit_vec(&mut rng, 16), exclude: None })
+            .collect();
+        let plain = router.query_batch_pooled(&reqs, &pool);
+        let (traced, times) = router.query_batch_pooled_traced(&reqs, &pool);
+        for (p, t) in plain.iter().zip(traced.iter()) {
+            assert_eq!(p.best.map(|(i, m)| (i, m.to_bits())), t.best.map(|(i, m)| (i, m.to_bits())));
+            assert_eq!(p.scanned, t.scanned);
+        }
+        assert!(times.scan > Duration::ZERO);
+        assert_eq!(times.probe, Duration::ZERO, "static path has no separate probe stage");
         router.shutdown();
     }
 

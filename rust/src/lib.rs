@@ -92,6 +92,7 @@ pub mod jsonio;
 pub mod lbh;
 pub mod linalg;
 pub mod metrics;
+pub mod obs;
 pub mod online;
 pub mod par;
 pub mod persist;

@@ -708,6 +708,13 @@ fn cmd_serve_http(rest: &[String]) -> anyhow::Result<()> {
          start with the SAME profile/n/bits/seed)",
     )
     .opt("poll-ms", "20", "replica: stream poll interval once caught up (ms)")
+    .opt(
+        "slow-ms",
+        "0",
+        "slow-query threshold: requests slower than this are logged with their \
+         per-stage breakdown (0 = off)",
+    )
+    .opt("slow-log", "", "slow-query JSON-lines path (size-rotated); stderr when unset")
     .opt("for-secs", "0", "serve this long then exit (0 = until POST /shutdown)");
     let p = args.parse(rest).map_err(|h| anyhow::anyhow!("{h}"))?;
     let cfg = ExperimentConfig::from_parsed(&p)?;
@@ -946,6 +953,11 @@ fn cmd_serve_http(rest: &[String]) -> anyhow::Result<()> {
         },
         pool_workers: cfg.workers,
         idle_timeout: std::time::Duration::from_secs(5),
+        slow_ms: p.u64("slow-ms")?,
+        slow_log: {
+            let sl = p.str("slow-log");
+            if sl.is_empty() { None } else { Some(std::path::PathBuf::from(sl)) }
+        },
     };
     let handle = match replica_role {
         Some(role) => Server::spawn_replica(stack, server_cfg, role)?,
@@ -999,9 +1011,9 @@ fn cmd_recover(rest: &[String]) -> anyhow::Result<()> {
     let dir = p.str("wal-dir").to_string();
     anyhow::ensure!(!dir.is_empty(), "--wal-dir is required");
     let dirp = std::path::Path::new(&dir);
-    let (index, report) = if p.flag("inspect") {
+    let (index, report, wal_hists) = if p.flag("inspect") {
         let (index, report) = chh::wal::recover(dirp)?;
-        (Arc::new(index), report)
+        (Arc::new(index), report, None)
     } else {
         // open() recovers, then folds the replayed suffix into a fresh
         // checkpoint and collects covered segments — a subsequent
@@ -1015,9 +1027,16 @@ fn cmd_recover(rest: &[String]) -> anyhow::Result<()> {
             chh::wal::DurableIndex::open(&wal_cfg)?
         };
         let index = durable.index().clone();
+        // fsync / group-commit histograms of the post-recovery
+        // checkpoint write — captured before the drop closes the log
+        let ws = durable.wal_stats().clone();
+        let wal_hists = Some(chh::jsonio::obj(vec![
+            ("fsync_us", ws.fsync_hist.summary_json(1e3)),
+            ("commit_batch", ws.commit_batch.summary_json(1.0)),
+        ]));
         // open() already checkpointed; a plain drop closes the log
         drop(durable);
-        (index, report)
+        (index, report, wal_hists)
     };
     println!("recover: {}", report.summary());
     let b = index.default_budget();
@@ -1054,6 +1073,9 @@ fn cmd_recover(rest: &[String]) -> anyhow::Result<()> {
             ("radius", Json::from(index.radius())),
             ("shards", Json::from(index.shard_count())),
             ("live", Json::from(index.len())),
+            // checkpoint-write WAL histograms (null under --inspect,
+            // which opens nothing for writing)
+            ("wal", wal_hists.unwrap_or(Json::Null)),
         ]);
         std::fs::write(json_path, doc.to_string_pretty())?;
         println!("recover: json report -> {json_path}");
@@ -1135,6 +1157,27 @@ fn cmd_loadgen(rest: &[String]) -> anyhow::Result<()> {
         );
         anyhow::ensure!(points > 0, "/stats reports no points to mutate");
     }
+    // one-shot build/identity line so runs are attributable to a binary
+    if let Ok(hz) = probe.get("/healthz") {
+        if let Ok(h) = chh::jsonio::Json::parse_bytes(&hz.body) {
+            let s = |k: &str| h.get(k).and_then(|v| v.as_str()).unwrap_or("?").to_string();
+            println!(
+                "loadgen: server {} v{} ({}) role={} uptime={:.0}s",
+                s("mode"),
+                s("version"),
+                s("git_hash"),
+                s("role"),
+                h.get("uptime_secs").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            );
+        }
+    }
+    // scrape the server's metrics before the run so the post-run scrape
+    // can be reported as deltas attributable to this load
+    let scrape_before = probe
+        .get("/metrics")
+        .ok()
+        .filter(|r| r.status == 200)
+        .map(|r| chh::obs::parse_scrape(&String::from_utf8_lossy(&r.body)));
     drop(probe);
     // read fan-out targets: the primary plus any replicas
     let mut read_addrs: Vec<String> = vec![addr.clone()];
@@ -1310,6 +1353,59 @@ fn cmd_loadgen(rest: &[String]) -> anyhow::Result<()> {
     if mutate_frac > 0.0 {
         println!("mutations: {mutations} applied (acked durable per the server's fsync policy)");
     }
+    // post-run scrape: server-side stage deltas sit next to the
+    // client-side percentiles, so "where did the time go" needs no
+    // second tool
+    let scrape_after = HttpClient::connect_with_timeout(&addr, Duration::from_secs(2))
+        .ok()
+        .and_then(|mut c| {
+            let _ = c.set_timeout(Duration::from_secs(5));
+            c.get("/metrics").ok()
+        })
+        .filter(|r| r.status == 200)
+        .map(|r| chh::obs::parse_scrape(&String::from_utf8_lossy(&r.body)));
+    let mut server_json: Option<chh::jsonio::Json> = None;
+    if let (Some(before), Some(after)) = (scrape_before.as_ref(), scrape_after.as_ref()) {
+        let delta = |name: &str, label: &str| -> f64 {
+            chh::obs::series_value(after, name, label).unwrap_or(0.0)
+                - chh::obs::series_value(before, name, label).unwrap_or(0.0)
+        };
+        let mut rows = Vec::new();
+        let mut stage_json = Vec::new();
+        for &stage in chh::server::STAGES {
+            let label = format!("stage=\"{stage}\"");
+            let n = delta("chh_stage_seconds_count", &label);
+            let sum = delta("chh_stage_seconds_sum", &label);
+            let mean_us = sum * 1e6 / n.max(1.0);
+            rows.push(vec![
+                stage.to_string(),
+                format!("{n:.0}"),
+                format!("{mean_us:.1}"),
+                format!("{:.1}", sum * 1e3),
+            ]);
+            stage_json.push((
+                stage,
+                chh::jsonio::obj(vec![
+                    ("observations", chh::jsonio::Json::Num(n)),
+                    ("mean_us", chh::jsonio::Json::Num(mean_us)),
+                    ("total_ms", chh::jsonio::Json::Num(sum * 1e3)),
+                ]),
+            ));
+        }
+        chh::report::print_rows(
+            "server stages (/metrics delta over this run)",
+            &["stage", "obs", "mean(us)", "total(ms)"],
+            &rows,
+        );
+        let served = delta(
+            "chh_http_requests_total",
+            if topk > 0 { "route=\"/query_topk\"" } else { "route=\"/query\"" },
+        );
+        server_json = Some(chh::jsonio::obj(vec![
+            ("queries_served", chh::jsonio::Json::Num(served)),
+            ("stages", chh::jsonio::obj(stage_json)),
+        ]));
+    }
     let json_path = p.str("json");
     if !json_path.is_empty() {
         use chh::jsonio::{obj, Json};
@@ -1328,6 +1424,8 @@ fn cmd_loadgen(rest: &[String]) -> anyhow::Result<()> {
             ("p95_us", Json::Num(p95)),
             ("p99_us", Json::Num(p99)),
             ("mean_us", Json::Num(hist.mean() * 1e6)),
+            // server-side /metrics deltas (null if a scrape failed)
+            ("server", server_json.unwrap_or(Json::Null)),
         ]);
         std::fs::write(json_path, doc.to_string_pretty())?;
         println!("json results -> {json_path}");

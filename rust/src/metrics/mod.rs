@@ -228,11 +228,22 @@ impl Histogram {
             .collect()
     }
 
+    /// Smallest recorded sample; 0.0 when empty — consistent with
+    /// [`Self::mean`]/[`Self::percentile`], and finite so `/stats` JSON
+    /// never renders an idle reservoir as `null` (jsonio serializes
+    /// non-finite numbers as `null`).
     pub fn min(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
         self.samples.iter().copied().fold(f64::INFINITY, f64::min)
     }
 
+    /// Largest recorded sample; 0.0 when empty (see [`Self::min`]).
     pub fn max(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
         self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
     }
 }
@@ -297,6 +308,26 @@ mod tests {
         sw.time(|| std::thread::sleep(Duration::from_millis(5)));
         assert_eq!(sw.count(), 2);
         assert!(sw.total_secs() >= 0.009);
+    }
+
+    #[test]
+    fn empty_histogram_min_max_are_finite_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.min(), 0.0, "empty min must be 0.0, not inf");
+        assert_eq!(h.max(), 0.0, "empty max must be 0.0, not -inf");
+        // and they serialize as numbers, not null
+        let v = crate::jsonio::obj(vec![
+            ("min", crate::jsonio::Json::Num(h.min())),
+            ("max", crate::jsonio::Json::Num(h.max())),
+        ]);
+        let s = v.to_string_compact();
+        assert!(!s.contains("null"), "idle stats must not render null: {s}");
+        // non-empty behavior unchanged
+        let mut h = Histogram::new();
+        h.record(3.0);
+        h.record(-1.0);
+        assert_eq!(h.min(), -1.0);
+        assert_eq!(h.max(), 3.0);
     }
 
     #[test]

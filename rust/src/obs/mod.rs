@@ -1,0 +1,777 @@
+//! Unified observability: metrics registry, Prometheus text exposition,
+//! per-request tracing, and the slow-query log.
+//!
+//! The serving stack's only runtime window used to be the hand-assembled
+//! `/stats` JSON; this module adds the pieces fleet tooling expects:
+//!
+//! * [`Counter`] / [`Gauge`] / [`Hist`] — atomic metric primitives. The
+//!   histogram uses **fixed log-spaced buckets** recorded with three
+//!   relaxed `fetch_add`s, so hot paths (per-batch stage timings, WAL
+//!   fsyncs) never take the reservoir mutex that
+//!   [`crate::metrics::Histogram`] needs.
+//! * [`Registry`] — a global-free, label-aware collection of named
+//!   metrics, rendered as Prometheus text exposition (`GET /metrics`).
+//!   Callback metrics let already-existing atomics (router counters, WAL
+//!   gauges, replication watermarks) appear in the scrape without being
+//!   rewritten.
+//! * [`Trace`] / [`gen_request_id`] — a per-request stage breakdown plus
+//!   the `x-chh-request-id` correlation id the HTTP layer propagates
+//!   (generated when absent, echoed in responses, logged by the replica
+//!   tailer).
+//! * [`SlowLog`] — JSON-lines of requests over a `--slow-ms` threshold,
+//!   rotated by size.
+//!
+//! Everything here is `std`-only and crash-tolerant: metric recording
+//! never blocks, and slow-log I/O failures are swallowed — observability
+//! must not take down serving.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::jsonio::{obj, Json};
+
+// ───────────────────────────── primitives ─────────────────────────────
+
+/// Monotonically increasing atomic counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Self {
+        Counter(AtomicU64::new(0))
+    }
+
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// An f64 gauge (value stored as bits in an atomic).
+#[derive(Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn new() -> Self {
+        Gauge(AtomicU64::new(0))
+    }
+
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Log-spaced latency bucket upper bounds, in **nanoseconds**: a 1-2.5-5
+/// decade ladder from 1µs to 10s. Render with `scale = 1e9` so `le`
+/// values come out in seconds, per Prometheus convention.
+pub const LATENCY_BOUNDS_NS: &[u64] = &[
+    1_000,
+    2_500,
+    5_000,
+    10_000,
+    25_000,
+    50_000,
+    100_000,
+    250_000,
+    500_000,
+    1_000_000,
+    2_500_000,
+    5_000_000,
+    10_000_000,
+    25_000_000,
+    50_000_000,
+    100_000_000,
+    250_000_000,
+    500_000_000,
+    1_000_000_000,
+    2_500_000_000,
+    5_000_000_000,
+    10_000_000_000,
+];
+
+/// Power-of-two size bucket upper bounds (group-commit batch sizes and
+/// similar counts). Render with `scale = 1.0`.
+pub const SIZE_BOUNDS: &[u64] =
+    &[1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096, 8192];
+
+/// Fixed-bucket histogram: recording is three relaxed `fetch_add`s, so
+/// it is safe on paths where a mutex would serialize workers (stage
+/// timings inside the batch flush, the WAL writer's fsync loop).
+///
+/// Raw values are `u64` in whatever unit the bounds are in (ns for
+/// [`LATENCY_BOUNDS_NS`], plain counts for [`SIZE_BOUNDS`]); rendering
+/// divides by a scale so the exposition shows seconds.
+pub struct Hist {
+    bounds: &'static [u64],
+    /// one slot per bound plus the +Inf overflow slot
+    buckets: Box<[AtomicU64]>,
+    sum: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Hist {
+    pub fn new(bounds: &'static [u64]) -> Self {
+        debug_assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds must be sorted");
+        let buckets = (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect();
+        Hist { bounds, buckets, sum: AtomicU64::new(0), count: AtomicU64::new(0) }
+    }
+
+    pub fn latency() -> Self {
+        Hist::new(LATENCY_BOUNDS_NS)
+    }
+
+    pub fn sizes() -> Self {
+        Hist::new(SIZE_BOUNDS)
+    }
+
+    /// Record one observation (raw units).
+    pub fn record(&self, raw: u64) {
+        let i = self.bounds.partition_point(|&b| b < raw);
+        self.buckets[i].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(raw, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a duration in nanoseconds (use with [`LATENCY_BOUNDS_NS`]).
+    pub fn observe_duration(&self, d: Duration) {
+        self.record(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum_raw(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn bounds(&self) -> &'static [u64] {
+        self.bounds
+    }
+
+    /// Per-bucket counts (non-cumulative), overflow slot last.
+    fn snapshot(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Percentile estimate from the bucket counts (raw units): linear
+    /// interpolation inside the landing bucket; observations past the
+    /// last bound report the last bound (the estimate saturates).
+    pub fn approx_percentile(&self, p: f64) -> f64 {
+        let counts = self.snapshot();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((p / 100.0) * total as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &n) in counts.iter().enumerate() {
+            if cum + n >= target {
+                if i >= self.bounds.len() {
+                    return *self.bounds.last().unwrap_or(&0) as f64;
+                }
+                let lo = if i == 0 { 0 } else { self.bounds[i - 1] } as f64;
+                let hi = self.bounds[i] as f64;
+                let frac = (target - cum) as f64 / n as f64;
+                return lo + (hi - lo) * frac;
+            }
+            cum += n;
+        }
+        *self.bounds.last().unwrap_or(&0) as f64
+    }
+
+    /// Summary document for JSON reports (`chh recover --json`, the
+    /// `wal_append` bench): raw values divided by `scale`.
+    pub fn summary_json(&self, scale: f64) -> Json {
+        let count = self.count();
+        let sum = self.sum_raw() as f64 / scale;
+        let mean = if count == 0 { 0.0 } else { sum / count as f64 };
+        obj(vec![
+            ("count", Json::from(count as usize)),
+            ("sum", Json::Num(sum)),
+            ("mean", Json::Num(mean)),
+            ("p50", Json::Num(self.approx_percentile(50.0) / scale)),
+            ("p95", Json::Num(self.approx_percentile(95.0) / scale)),
+            ("p99", Json::Num(self.approx_percentile(99.0) / scale)),
+        ])
+    }
+}
+
+// ───────────────────────────── registry ─────────────────────────────
+
+type Callback = Box<dyn Fn() -> f64 + Send + Sync>;
+
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    /// computed at scrape time (wraps already-existing atomics)
+    Func(Callback),
+    Hist {
+        h: Arc<Hist>,
+        scale: f64,
+    },
+}
+
+struct Series {
+    labels: Vec<(String, String)>,
+    metric: Metric,
+}
+
+struct Family {
+    help: String,
+    kind: &'static str,
+    series: Vec<Series>,
+}
+
+/// A named collection of metrics with label support, rendered as
+/// Prometheus text exposition. Global-free: the server owns one, tests
+/// build as many as they want. The internal mutex is taken only at
+/// registration and render time — recording goes through the `Arc`ed
+/// primitives and never touches it.
+#[derive(Default)]
+pub struct Registry {
+    families: Mutex<BTreeMap<String, Family>>,
+}
+
+/// `(key, value)` label pairs at registration. Values are escaped at
+/// render time, so any string is safe.
+pub type Labels = Vec<(&'static str, String)>;
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    fn register(&self, name: &str, help: &str, kind: &'static str, labels: Labels, m: Metric) {
+        let mut fams = self.families.lock().unwrap();
+        let fam = fams.entry(name.to_string()).or_insert_with(|| Family {
+            help: help.to_string(),
+            kind,
+            series: Vec::new(),
+        });
+        debug_assert_eq!(fam.kind, kind, "metric {name} registered with two kinds");
+        fam.series.push(Series {
+            labels: labels.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
+            metric: m,
+        });
+    }
+
+    /// Register and return a counter (name should end in `_total`).
+    pub fn counter(&self, name: &str, help: &str, labels: Labels) -> Arc<Counter> {
+        let c = Arc::new(Counter::new());
+        self.register(name, help, "counter", labels, Metric::Counter(c.clone()));
+        c
+    }
+
+    /// Register and return a gauge.
+    pub fn gauge(&self, name: &str, help: &str, labels: Labels) -> Arc<Gauge> {
+        let g = Arc::new(Gauge::new());
+        self.register(name, help, "gauge", labels, Metric::Gauge(g.clone()));
+        g
+    }
+
+    /// Register a gauge computed at scrape time.
+    pub fn gauge_fn(
+        &self,
+        name: &str,
+        help: &str,
+        labels: Labels,
+        f: impl Fn() -> f64 + Send + Sync + 'static,
+    ) {
+        self.register(name, help, "gauge", labels, Metric::Func(Box::new(f)));
+    }
+
+    /// Register a counter whose value lives in an existing atomic,
+    /// read at scrape time.
+    pub fn counter_fn(
+        &self,
+        name: &str,
+        help: &str,
+        labels: Labels,
+        f: impl Fn() -> f64 + Send + Sync + 'static,
+    ) {
+        self.register(name, help, "counter", labels, Metric::Func(Box::new(f)));
+    }
+
+    /// Register and return a histogram with the given bucket bounds;
+    /// `scale` divides raw values for rendering (1e9 turns ns into s).
+    pub fn hist(
+        &self,
+        name: &str,
+        help: &str,
+        labels: Labels,
+        bounds: &'static [u64],
+        scale: f64,
+    ) -> Arc<Hist> {
+        let h = Arc::new(Hist::new(bounds));
+        self.register_hist(name, help, labels, h.clone(), scale);
+        h
+    }
+
+    /// Register an externally-owned histogram (e.g. the WAL's fsync
+    /// timings, which live in [`crate::wal::WalStats`]).
+    pub fn register_hist(&self, name: &str, help: &str, labels: Labels, h: Arc<Hist>, scale: f64) {
+        self.register(name, help, "histogram", labels, Metric::Hist { h, scale });
+    }
+
+    /// Render the whole registry as Prometheus text exposition
+    /// (`text/plain; version=0.0.4`).
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::with_capacity(4096);
+        let fams = self.families.lock().unwrap();
+        for (name, fam) in fams.iter() {
+            let _ = writeln!(out, "# HELP {name} {}", escape_help(&fam.help));
+            let _ = writeln!(out, "# TYPE {name} {}", fam.kind);
+            for s in &fam.series {
+                match &s.metric {
+                    Metric::Counter(c) => {
+                        let _ = writeln!(out, "{name}{} {}", labels_str(&s.labels, None), c.get());
+                    }
+                    Metric::Gauge(g) => {
+                        let _ = writeln!(
+                            out,
+                            "{name}{} {}",
+                            labels_str(&s.labels, None),
+                            fmt_f64(g.get())
+                        );
+                    }
+                    Metric::Func(f) => {
+                        let _ = writeln!(
+                            out,
+                            "{name}{} {}",
+                            labels_str(&s.labels, None),
+                            fmt_f64(f())
+                        );
+                    }
+                    Metric::Hist { h, scale } => {
+                        let counts = h.snapshot();
+                        let mut cum = 0u64;
+                        for (i, &n) in counts.iter().enumerate() {
+                            cum += n;
+                            let le = if i < h.bounds.len() {
+                                fmt_f64(h.bounds[i] as f64 / scale)
+                            } else {
+                                "+Inf".to_string()
+                            };
+                            let _ = writeln!(
+                                out,
+                                "{name}_bucket{} {cum}",
+                                labels_str(&s.labels, Some(&le))
+                            );
+                        }
+                        let _ = writeln!(
+                            out,
+                            "{name}_sum{} {}",
+                            labels_str(&s.labels, None),
+                            fmt_f64(h.sum_raw() as f64 / scale)
+                        );
+                        let _ = writeln!(
+                            out,
+                            "{name}_count{} {}",
+                            labels_str(&s.labels, None),
+                            h.count()
+                        );
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+fn fmt_f64(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v.is_infinite() {
+        if v > 0.0 { "+Inf" } else { "-Inf" }.to_string()
+    } else {
+        format!("{v}")
+    }
+}
+
+fn escape_help(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('\n', "\\n")
+}
+
+fn escape_label(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// `{k="v",...}` (with the `le` bucket label appended when given), or
+/// the empty string for an unlabeled series.
+fn labels_str(labels: &[(String, String)], le: Option<&str>) -> String {
+    if labels.is_empty() && le.is_none() {
+        return String::new();
+    }
+    let mut parts: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{k}=\"{}\"", escape_label(v))).collect();
+    if let Some(le) = le {
+        parts.push(format!("le=\"{le}\""));
+    }
+    format!("{{{}}}", parts.join(","))
+}
+
+// ─────────────────────── scrape parsing (client) ───────────────────────
+
+/// Parse an exposition body into `(series, value)` pairs — the client
+/// half `loadgen` and the CI smoke use to diff two scrapes. Comment and
+/// blank lines are skipped; a malformed sample line yields `None` from
+/// the value parse and is dropped.
+pub fn parse_scrape(text: &str) -> Vec<(String, f64)> {
+    text.lines()
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .filter_map(|l| {
+            let (k, v) = l.rsplit_once(' ')?;
+            let val = match v {
+                "+Inf" => f64::INFINITY,
+                "-Inf" => f64::NEG_INFINITY,
+                _ => v.parse().ok()?,
+            };
+            Some((k.to_string(), val))
+        })
+        .collect()
+}
+
+/// Look up one series by family name and (optionally) a `key="value"`
+/// label pair that must appear among its labels.
+pub fn series_value(scrape: &[(String, f64)], name: &str, label: &str) -> Option<f64> {
+    scrape
+        .iter()
+        .find(|(k, _)| match k.split_once('{') {
+            Some((n, rest)) => {
+                n == name
+                    && (label.is_empty()
+                        || rest.trim_end_matches('}').split(',').any(|kv| kv == label))
+            }
+            None => *k == name && label.is_empty(),
+        })
+        .map(|(_, v)| *v)
+}
+
+// ───────────────────────────── tracing ─────────────────────────────
+
+/// Per-stage durations of one batch flush, accumulated inside the query
+/// path (coordinator + online index) and recorded into stage-labeled
+/// histograms by the server. Plain data — carrying it through the
+/// pipeline never changes what is computed, only what is measured.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StageTimes {
+    /// hyperplane encoding (`encode_query` + per-bit scores)
+    pub encode: Duration,
+    /// probe planning (`plan_masks`)
+    pub probe: Duration,
+    /// shard scans (table probes + margin re-ranking)
+    pub scan: Duration,
+    /// cross-shard partial-hit merge
+    pub merge: Duration,
+}
+
+impl StageTimes {
+    pub fn add(&mut self, o: &StageTimes) {
+        self.encode += o.encode;
+        self.probe += o.probe;
+        self.scan += o.scan;
+        self.merge += o.merge;
+    }
+}
+
+/// One request's trace: the correlation id plus named stage durations,
+/// carried from accept to response. Rendered into the slow-query log
+/// when the request exceeds the threshold.
+pub struct Trace {
+    pub id: String,
+    stages: Vec<(&'static str, Duration)>,
+}
+
+impl Trace {
+    pub fn new(id: String) -> Self {
+        Trace { id, stages: Vec::new() }
+    }
+
+    pub fn stage(&mut self, name: &'static str, d: Duration) {
+        self.stages.push((name, d));
+    }
+
+    pub fn stages(&self) -> &[(&'static str, Duration)] {
+        &self.stages
+    }
+
+    /// The slow-log JSON line (compact, no trailing newline).
+    pub fn slow_line(&self, route: &str, status: u16, total: Duration) -> String {
+        let stages = Json::Obj(
+            self.stages
+                .iter()
+                .map(|&(n, d)| (n.to_string(), Json::Num(d.as_secs_f64() * 1e6)))
+                .collect(),
+        );
+        obj(vec![
+            ("request_id", Json::from(self.id.as_str())),
+            ("route", Json::from(route)),
+            ("status", Json::from(status as usize)),
+            ("total_us", Json::Num(total.as_secs_f64() * 1e6)),
+            ("stages_us", stages),
+        ])
+        .to_string_compact()
+    }
+}
+
+/// Generate a request id: 16 hex chars mixing wall-clock nanos, the pid
+/// and a process-wide counter — unique enough to correlate a request
+/// across primary logs, the slow log and replica tailer output without
+/// coordination.
+pub fn gen_request_id() -> String {
+    static CTR: AtomicU64 = AtomicU64::new(0);
+    let t = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    let c = CTR.fetch_add(1, Ordering::Relaxed).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    let pid = std::process::id() as u64;
+    format!("{:016x}", t ^ (pid << 48) ^ c)
+}
+
+// ───────────────────────────── slow log ─────────────────────────────
+
+/// Append-only JSON-lines log of slow requests, rotated by size: when
+/// the active file would exceed `max_bytes` it is renamed to
+/// `<path>.1` (replacing any previous rotation) and a fresh file is
+/// started. Write errors are swallowed — the log is diagnostics, not
+/// durability.
+pub struct SlowLog {
+    path: PathBuf,
+    max_bytes: u64,
+    inner: Mutex<SlowInner>,
+}
+
+struct SlowInner {
+    file: Option<std::fs::File>,
+    written: u64,
+}
+
+impl SlowLog {
+    pub fn create(path: impl Into<PathBuf>, max_bytes: u64) -> Self {
+        SlowLog {
+            path: path.into(),
+            max_bytes: max_bytes.max(1024),
+            inner: Mutex::new(SlowInner { file: None, written: 0 }),
+        }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    fn open(path: &Path) -> Option<(std::fs::File, u64)> {
+        let f = std::fs::OpenOptions::new().create(true).append(true).open(path).ok()?;
+        let len = f.metadata().map(|m| m.len()).unwrap_or(0);
+        Some((f, len))
+    }
+
+    /// Append one line (a newline is added).
+    pub fn append(&self, line: &str) {
+        let mut g = self.inner.lock().unwrap();
+        if g.file.is_none() {
+            if let Some((f, len)) = Self::open(&self.path) {
+                g.file = Some(f);
+                g.written = len;
+            } else {
+                return;
+            }
+        }
+        let add = line.len() as u64 + 1;
+        if g.written > 0 && g.written + add > self.max_bytes {
+            g.file = None;
+            let mut rotated = self.path.as_os_str().to_owned();
+            rotated.push(".1");
+            let _ = std::fs::rename(&self.path, PathBuf::from(rotated));
+            match Self::open(&self.path) {
+                Some((f, len)) => {
+                    g.file = Some(f);
+                    g.written = len;
+                }
+                None => return,
+            }
+        }
+        if let Some(f) = g.file.as_mut() {
+            if f.write_all(line.as_bytes()).and_then(|_| f.write_all(b"\n")).is_ok() {
+                g.written += add;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hist_buckets_and_percentiles() {
+        let h = Hist::new(&[10, 100, 1000]);
+        for v in [1, 5, 10, 50, 99, 500, 5000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 7);
+        assert_eq!(h.sum_raw(), 1 + 5 + 10 + 50 + 99 + 500 + 5000);
+        // bucket placement: le=10 gets {1,5,10}, le=100 gets {50,99},
+        // le=1000 gets {500}, +Inf gets {5000}
+        assert_eq!(h.snapshot(), vec![3, 2, 1, 1]);
+        let p50 = h.approx_percentile(50.0);
+        assert!(p50 > 0.0 && p50 <= 100.0, "p50={p50}");
+        // p100 lands in the overflow bucket and saturates at the last bound
+        assert_eq!(h.approx_percentile(100.0), 1000.0);
+        // empty histogram reports zeros
+        let empty = Hist::latency();
+        assert_eq!(empty.approx_percentile(50.0), 0.0);
+        assert_eq!(empty.count(), 0);
+    }
+
+    #[test]
+    fn hist_summary_json_scales() {
+        let h = Hist::latency();
+        h.observe_duration(Duration::from_micros(100));
+        h.observe_duration(Duration::from_micros(300));
+        let s = h.summary_json(1e3); // ns → µs
+        assert_eq!(s.get("count").and_then(|v| v.as_usize()), Some(2));
+        let sum = s.get("sum").and_then(|v| v.as_f64()).unwrap();
+        assert!((sum - 400.0).abs() < 1.0, "sum µs = {sum}");
+        assert!(s.get("p95").and_then(|v| v.as_f64()).unwrap() > 0.0);
+    }
+
+    #[test]
+    fn registry_renders_valid_exposition() {
+        let reg = Registry::new();
+        let c = reg.counter("chh_test_total", "test counter", vec![("route", "/q".into())]);
+        c.add(3);
+        let g = reg.gauge("chh_test_gauge", "a gauge", vec![]);
+        g.set(2.5);
+        reg.gauge_fn("chh_test_fn", "computed", vec![], || 7.0);
+        let h = reg.hist("chh_test_seconds", "latency", vec![("stage", "scan".into())],
+            LATENCY_BOUNDS_NS, 1e9);
+        h.observe_duration(Duration::from_micros(80));
+        h.observe_duration(Duration::from_millis(3));
+        let text = reg.render();
+        // HELP/TYPE lines present for every family
+        for fam in ["chh_test_total", "chh_test_gauge", "chh_test_fn", "chh_test_seconds"] {
+            assert!(text.contains(&format!("# HELP {fam} ")), "missing HELP for {fam}");
+            assert!(text.contains(&format!("# TYPE {fam} ")), "missing TYPE for {fam}");
+        }
+        let scrape = parse_scrape(&text);
+        assert_eq!(series_value(&scrape, "chh_test_total", r#"route="/q""#), Some(3.0));
+        assert_eq!(series_value(&scrape, "chh_test_gauge", ""), Some(2.5));
+        assert_eq!(series_value(&scrape, "chh_test_fn", ""), Some(7.0));
+        assert_eq!(series_value(&scrape, "chh_test_seconds_count", r#"stage="scan""#), Some(2.0));
+        // bucket counts are cumulative and end at +Inf == _count
+        let mut last = 0.0;
+        let mut inf = None;
+        for (k, v) in &scrape {
+            if k.starts_with("chh_test_seconds_bucket") {
+                assert!(*v >= last, "bucket counts must be monotone: {k} {v}");
+                last = *v;
+                if k.contains("le=\"+Inf\"") {
+                    inf = Some(*v);
+                }
+            }
+        }
+        assert_eq!(inf, Some(2.0));
+    }
+
+    #[test]
+    fn labels_are_escaped() {
+        let reg = Registry::new();
+        let c = reg.counter("chh_esc_total", "esc", vec![("k", "a\"b\\c\nd".into())]);
+        c.inc();
+        let text = reg.render();
+        assert!(text.contains(r#"k="a\"b\\c\nd""#), "escaped label missing: {text}");
+        // the sample line still parses
+        let scrape = parse_scrape(&text);
+        assert!(scrape.iter().any(|(k, v)| k.starts_with("chh_esc_total") && *v == 1.0));
+    }
+
+    #[test]
+    fn request_ids_are_unique_and_hex() {
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..1000 {
+            let id = gen_request_id();
+            assert_eq!(id.len(), 16);
+            assert!(id.chars().all(|c| c.is_ascii_hexdigit()));
+            assert!(seen.insert(id), "duplicate request id");
+        }
+    }
+
+    #[test]
+    fn trace_slow_line_is_valid_json() {
+        let mut t = Trace::new("abc123".into());
+        t.stage("batch_wait", Duration::from_micros(120));
+        t.stage("encode", Duration::from_micros(30));
+        let line = t.slow_line("/query", 200, Duration::from_millis(12));
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.get("request_id").and_then(|x| x.as_str()), Some("abc123"));
+        assert_eq!(v.get("route").and_then(|x| x.as_str()), Some("/query"));
+        assert_eq!(v.get("status").and_then(|x| x.as_usize()), Some(200));
+        let stages = v.get("stages_us").unwrap();
+        assert!(stages.get("batch_wait").and_then(|x| x.as_f64()).unwrap() > 100.0);
+    }
+
+    #[test]
+    fn slow_log_rotates_by_size() {
+        let dir = std::env::temp_dir().join(format!("chh_obs_slow_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("slow.log");
+        let log = SlowLog::create(&path, 1024);
+        let line = "x".repeat(100);
+        for _ in 0..30 {
+            log.append(&line);
+        }
+        let active = std::fs::metadata(&path).unwrap().len();
+        assert!(active <= 1024, "active file exceeds cap: {active}");
+        let mut rotated = path.as_os_str().to_owned();
+        rotated.push(".1");
+        assert!(
+            std::fs::metadata(PathBuf::from(rotated)).is_ok(),
+            "rotation file missing"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn scrape_parser_skips_comments_and_junk() {
+        let text = "# HELP a b\n# TYPE a counter\na 1\n\nbad-line-no-value\nb{x=\"y\"} 2.5\n";
+        let s = parse_scrape(text);
+        assert_eq!(s.len(), 2);
+        assert_eq!(series_value(&s, "a", ""), Some(1.0));
+        assert_eq!(series_value(&s, "b", r#"x="y""#), Some(2.5));
+        assert_eq!(series_value(&s, "b", r#"x="z""#), None);
+    }
+
+    #[test]
+    fn stage_times_accumulate() {
+        let mut a = StageTimes::default();
+        let b = StageTimes {
+            encode: Duration::from_micros(1),
+            probe: Duration::from_micros(2),
+            scan: Duration::from_micros(3),
+            merge: Duration::from_micros(4),
+        };
+        a.add(&b);
+        a.add(&b);
+        assert_eq!(a.encode, Duration::from_micros(2));
+        assert_eq!(a.merge, Duration::from_micros(8));
+    }
+}

@@ -369,7 +369,38 @@ impl ShardedIndex {
         eligible: impl Fn(usize) -> bool + Sync,
         pool: &crate::par::Pool,
     ) -> QueryHit {
+        self.query_code_pool_timed(
+            lookup,
+            scores,
+            w,
+            feats,
+            budget,
+            eligible,
+            pool,
+            &mut crate::obs::StageTimes::default(),
+        )
+    }
+
+    /// [`Self::query_code_pool`] with per-stage wall-clock accumulated
+    /// into `times` (probe planning / shard scan / merge — encoding
+    /// happens in the caller). The computation is identical — the
+    /// untimed entry point delegates here — so timed and untimed
+    /// answers are bit-identical by construction.
+    #[allow(clippy::too_many_arguments)]
+    pub fn query_code_pool_timed(
+        &self,
+        lookup: u64,
+        scores: Option<&[f32]>,
+        w: &[f32],
+        feats: &FeatureStore,
+        budget: QueryBudget,
+        eligible: impl Fn(usize) -> bool + Sync,
+        pool: &crate::par::Pool,
+        times: &mut crate::obs::StageTimes,
+    ) -> QueryHit {
+        let t0 = std::time::Instant::now();
         let masks = self.plan_masks(scores, budget.probes);
+        let t1 = std::time::Instant::now();
         let views = self.views();
         let parts: Vec<QueryHit> = pool
             .map(views.len(), 1, |range| {
@@ -380,7 +411,12 @@ impl ShardedIndex {
             .into_iter()
             .flatten()
             .collect();
-        merge_hits(&parts)
+        let t2 = std::time::Instant::now();
+        let hit = merge_hits(&parts);
+        times.probe += t1 - t0;
+        times.scan += t2 - t1;
+        times.merge += t2.elapsed();
+        hit
     }
 
     /// [`Self::query`] with pooled shard fan-out.

@@ -19,7 +19,7 @@
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -75,6 +75,12 @@ pub struct ReplicaIndex {
     checkpoints_seen: Gauge,
     bootstraps: Gauge,
     reconnects: Gauge,
+    /// full resynchronizations after falling behind a segment GC
+    /// (bootstraps = 1 initial + resyncs)
+    resyncs: Gauge,
+    /// when the last chunk was applied — drives the lag-age gauge on
+    /// `/metrics` (how stale are reads, in wall-clock terms)
+    last_apply: Mutex<Option<Instant>>,
     resyncing: AtomicBool,
 }
 
@@ -92,6 +98,8 @@ impl ReplicaIndex {
             checkpoints_seen: Gauge::new(0),
             bootstraps: Gauge::new(1),
             reconnects: Gauge::new(0),
+            resyncs: Gauge::new(0),
+            last_apply: Mutex::new(None),
             resyncing: AtomicBool::new(false),
         })
     }
@@ -132,6 +140,16 @@ impl ReplicaIndex {
 
     pub fn reconnects(&self) -> u64 {
         self.reconnects.get()
+    }
+
+    /// Full resyncs performed after falling behind a segment GC.
+    pub fn resyncs(&self) -> u64 {
+        self.resyncs.get()
+    }
+
+    /// Seconds since the last applied chunk (`None` before the first).
+    pub fn applied_age_secs(&self) -> Option<f64> {
+        self.last_apply.lock().unwrap().map(|t| t.elapsed().as_secs_f64())
     }
 
     pub(crate) fn note_reconnect(&self) {
@@ -205,6 +223,7 @@ impl ReplicaIndex {
         }
         self.applied_records.add(applied);
         *self.applied.lock().unwrap() = (chunk.next_seg, chunk.next_off);
+        *self.last_apply.lock().unwrap() = Some(Instant::now());
         Ok(applied as usize)
     }
 
@@ -222,6 +241,7 @@ impl ReplicaIndex {
     /// wins); `/query_topk` orders ties by id and is unaffected.
     pub fn resync(&self, client: &mut HttpClient) -> Result<()> {
         self.resyncing.store(true, Ordering::SeqCst);
+        self.resyncs.add(1);
         let out = self.resync_inner(client);
         self.resyncing.store(false, Ordering::SeqCst);
         out
@@ -303,6 +323,14 @@ impl ReplicaIndex {
             ("resyncing", Json::from(self.resyncing())),
             ("bootstraps", Json::from(self.bootstraps.get() as usize)),
             ("reconnects", Json::from(self.reconnects.get() as usize)),
+            ("resyncs", Json::from(self.resyncs.get() as usize)),
+            (
+                "applied_age_secs",
+                match self.applied_age_secs() {
+                    Some(a) => Json::Num(a),
+                    None => Json::Null,
+                },
+            ),
         ])
     }
 }
@@ -394,11 +422,17 @@ pub fn spawn_tailer(replica: Arc<ReplicaIndex>, cfg: ReplicaConfig) -> Tailer {
 
 fn tail_loop(replica: &ReplicaIndex, cfg: &ReplicaConfig, stop: &AtomicBool) {
     let mut client: Option<HttpClient> = None;
+    // one correlation id per primary connection, sent as
+    // `x-chh-request-id` on every poll: the primary's access metrics and
+    // slow-query log carry the same id, so a replication stall can be
+    // followed primary → WAL → replica from either side's logs
+    let mut conn_id = crate::obs::gen_request_id();
     while !stop.load(Ordering::SeqCst) {
         if client.is_none() {
             match HttpClient::connect_with_timeout(&cfg.primary, cfg.timeout) {
                 Ok(c) => {
                     let _ = c.set_timeout(cfg.timeout);
+                    conn_id = crate::obs::gen_request_id();
                     client = Some(c);
                 }
                 Err(_) => {
@@ -412,7 +446,7 @@ fn tail_loop(replica: &ReplicaIndex, cfg: &ReplicaConfig, stop: &AtomicBool) {
         let (seg, off) = replica.position();
         let path = format!("/wal/stream?seg={seg}&off={off}&max={}", cfg.max_bytes);
         let step = (|| -> Result<bool> {
-            let resp = c.get(&path).map_err(|e| anyhow!("GET {path}: {e}"))?;
+            let resp = c.get_with_id(&path, &conn_id).map_err(|e| anyhow!("GET {path}: {e}"))?;
             if resp.status != 200 {
                 bail!(
                     "stream returned {}: {}",
@@ -432,7 +466,7 @@ fn tail_loop(replica: &ReplicaIndex, cfg: &ReplicaConfig, stop: &AtomicBool) {
             Ok(true) => {} // progressed: fetch again immediately
             Ok(false) => std::thread::sleep(cfg.poll),
             Err(e) => {
-                eprintln!("replica tailer: {e:#}; reconnecting");
+                eprintln!("replica tailer: {e:#} (request_id={conn_id}); reconnecting");
                 client = None;
                 replica.note_reconnect();
                 std::thread::sleep(cfg.backoff);

@@ -106,13 +106,39 @@ impl BatcherStats {
 
 struct Slot {
     req: QueryRequest,
-    reply: std::sync::mpsc::Sender<QueryHit>,
+    /// when the request entered the admission queue (batcher-wait timing)
+    submitted: Instant,
+    reply: std::sync::mpsc::Sender<BatchedReply>,
+}
+
+/// What a submitter receives back: the hit plus the observability
+/// context of the flush that answered it. `wait` is exact per request
+/// (submit → flush start); `stages` is the whole batch's stage
+/// breakdown, shared by every request coalesced into it.
+pub struct BatchedReply {
+    pub hit: QueryHit,
+    pub wait: Duration,
+    pub stages: crate::obs::StageTimes,
+}
+
+/// A flush's results: the hits (request order) plus the batch's
+/// per-stage wall-clock, recorded by the traced query path.
+pub struct FlushOutcome {
+    pub hits: Vec<QueryHit>,
+    pub stages: crate::obs::StageTimes,
+}
+
+impl FlushOutcome {
+    /// Hits with no stage breakdown (tests, untraced callers).
+    pub fn plain(hits: Vec<QueryHit>) -> Self {
+        FlushOutcome { hits, stages: crate::obs::StageTimes::default() }
+    }
 }
 
 /// The flush target: answers a whole batch in request order (the server
-/// wires this to `Router::query_batch_pooled` /
-/// `OnlineRouter::query_batch_pooled`).
-pub type FlushFn = Box<dyn Fn(&[QueryRequest]) -> Vec<QueryHit> + Send>;
+/// wires this to `Router::query_batch_pooled_traced` /
+/// `OnlineRouter::query_batch_pooled_traced`).
+pub type FlushFn = Box<dyn Fn(&[QueryRequest]) -> FlushOutcome + Send>;
 
 /// The micro-batcher: a bounded submit queue plus one collector thread.
 pub struct Batcher {
@@ -137,17 +163,17 @@ impl Batcher {
         &self.stats
     }
 
-    /// Enqueue one query. Returns the channel the hit arrives on, or an
-    /// immediate rejection when the admission queue is full.
+    /// Enqueue one query. Returns the channel the reply arrives on, or
+    /// an immediate rejection when the admission queue is full.
     pub fn submit(
         &self,
         req: QueryRequest,
-    ) -> Result<Receiver<QueryHit>, SubmitError> {
+    ) -> Result<Receiver<BatchedReply>, SubmitError> {
         let Some(tx) = self.tx.as_ref() else {
             return Err(SubmitError::ShuttingDown);
         };
         let (reply, rx) = std::sync::mpsc::channel();
-        match tx.try_send(Slot { req, reply }) {
+        match tx.try_send(Slot { req, submitted: Instant::now(), reply }) {
             Ok(()) => {
                 self.stats.submitted.fetch_add(1, Ordering::Relaxed);
                 Ok(rx)
@@ -210,16 +236,21 @@ fn collector_loop(
         }
         // split requests from reply handles instead of cloning the
         // dim-sized w vectors — this thread is the /query bottleneck
+        let flush_start = Instant::now();
         let (reqs, replies): (Vec<QueryRequest>, Vec<_>) =
-            batch.into_iter().map(|s| (s.req, s.reply)).unzip();
-        let hits = flush(&reqs);
-        debug_assert_eq!(hits.len(), reqs.len(), "flush must answer the whole batch");
+            batch.into_iter().map(|s| (s.req, (s.submitted, s.reply))).unzip();
+        let out = flush(&reqs);
+        debug_assert_eq!(out.hits.len(), reqs.len(), "flush must answer the whole batch");
         stats.batches.fetch_add(1, Ordering::Relaxed);
         stats.flushed.fetch_add(reqs.len() as u64, Ordering::Relaxed);
         stats.batch_sizes.lock().unwrap().record(reqs.len() as f64);
-        for (reply, hit) in replies.into_iter().zip(hits) {
+        for ((submitted, reply), hit) in replies.into_iter().zip(out.hits) {
             // a dropped receiver (client hung up mid-flight) is fine
-            let _ = reply.send(hit);
+            let _ = reply.send(BatchedReply {
+                hit,
+                wait: flush_start.saturating_duration_since(submitted),
+                stages: out.stages,
+            });
         }
         if disconnected {
             return;
@@ -239,14 +270,16 @@ mod tests {
     /// can check each reply went to the right submitter.
     fn echo_flush() -> FlushFn {
         Box::new(|reqs| {
-            reqs.iter()
-                .map(|r| QueryHit {
-                    best: None,
-                    scanned: r.w[0] as usize,
-                    probed: reqs.len(), // batch size, to observe coalescing
-                    nonempty: false,
-                })
-                .collect()
+            FlushOutcome::plain(
+                reqs.iter()
+                    .map(|r| QueryHit {
+                        best: None,
+                        scanned: r.w[0] as usize,
+                        probed: reqs.len(), // batch size, to observe coalescing
+                        nonempty: false,
+                    })
+                    .collect(),
+            )
         })
     }
 
@@ -258,7 +291,7 @@ mod tests {
         );
         let rxs: Vec<_> = (0..20).map(|i| b.submit(req(i as f32)).unwrap()).collect();
         for (i, rx) in rxs.into_iter().enumerate() {
-            let hit = rx.recv().expect("reply");
+            let hit = rx.recv().expect("reply").hit;
             assert_eq!(hit.scanned, i, "reply {i} routed to wrong submitter");
         }
         assert_eq!(b.stats().submitted.load(Ordering::Relaxed), 20);
@@ -277,7 +310,8 @@ mod tests {
             echo_flush(),
         );
         let rxs: Vec<_> = (0..8).map(|i| b.submit(req(i as f32)).unwrap()).collect();
-        let sizes: Vec<usize> = rxs.into_iter().map(|rx| rx.recv().unwrap().probed).collect();
+        let sizes: Vec<usize> =
+            rxs.into_iter().map(|rx| rx.recv().unwrap().hit.probed).collect();
         // every query sees the batch size its flush had; with an idle
         // collector the burst lands in a few batches totalling 8
         assert_eq!(sizes.len(), 8);
@@ -297,7 +331,7 @@ mod tests {
         let flush: FlushFn = Box::new(move |reqs| {
             started_tx.send(()).unwrap();
             release_rx.recv().unwrap();
-            reqs.iter().map(|_| QueryHit::default()).collect()
+            FlushOutcome::plain(reqs.iter().map(|_| QueryHit::default()).collect())
         });
         let b = Batcher::new(
             BatcherConfig { max_batch: 1, max_wait: Duration::ZERO, queue_cap: 2 },
@@ -323,9 +357,11 @@ mod tests {
         let flush: FlushFn = Box::new(move |reqs| {
             // slow first flush lets a backlog build up
             let _ = release_rx.recv_timeout(Duration::from_millis(100));
-            reqs.iter()
-                .map(|r| QueryHit { scanned: r.w[0] as usize, ..QueryHit::default() })
-                .collect()
+            FlushOutcome::plain(
+                reqs.iter()
+                    .map(|r| QueryHit { scanned: r.w[0] as usize, ..QueryHit::default() })
+                    .collect(),
+            )
         });
         let b = Batcher::new(
             BatcherConfig { max_batch: 2, max_wait: Duration::ZERO, queue_cap: 16 },
@@ -335,7 +371,7 @@ mod tests {
         drop(release_tx);
         b.shutdown(); // must drain all 6 before returning
         for (i, rx) in rxs.into_iter().enumerate() {
-            assert_eq!(rx.recv().expect("drained on shutdown").scanned, i);
+            assert_eq!(rx.recv().expect("drained on shutdown").hit.scanned, i);
         }
     }
 
@@ -343,8 +379,29 @@ mod tests {
     fn submit_after_shutdown_is_rejected_cleanly() {
         let b = Batcher::new(BatcherConfig::default(), echo_flush());
         let rx = b.submit(req(5.0)).unwrap();
-        assert_eq!(rx.recv().unwrap().scanned, 5);
+        assert_eq!(rx.recv().unwrap().hit.scanned, 5);
         // dropping is the same as shutdown; a new Batcher is cheap
+        b.shutdown();
+    }
+
+    #[test]
+    fn replies_carry_wait_and_batch_stages() {
+        let flush: FlushFn = Box::new(|reqs| FlushOutcome {
+            hits: reqs.iter().map(|_| QueryHit::default()).collect(),
+            stages: crate::obs::StageTimes {
+                encode: Duration::from_micros(7),
+                ..Default::default()
+            },
+        });
+        let b = Batcher::new(
+            BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(2), queue_cap: 16 },
+            flush,
+        );
+        let reply = b.submit(req(1.0)).unwrap().recv().unwrap();
+        // wait is measured (submit → flush start) and the flush's stage
+        // breakdown rides along for the slow-query log
+        assert!(reply.wait < Duration::from_secs(5), "wait is sane: {:?}", reply.wait);
+        assert_eq!(reply.stages.encode, Duration::from_micros(7));
         b.shutdown();
     }
 

@@ -46,6 +46,9 @@ fn io_err(e: std::io::Error) -> HttpError {
     }
 }
 
+/// Header carrying the request correlation id (see `docs/OBSERVABILITY.md`).
+pub const REQUEST_ID_HEADER: &str = "x-chh-request-id";
+
 /// One parsed HTTP request.
 #[derive(Debug)]
 pub struct Request {
@@ -54,6 +57,9 @@ pub struct Request {
     pub path: String,
     pub keep_alive: bool,
     pub body: Vec<u8>,
+    /// client-supplied `x-chh-request-id`, if any (the server generates
+    /// one when absent and echoes it in the response)
+    pub request_id: Option<String>,
 }
 
 /// One parsed HTTP response (client side).
@@ -62,6 +68,8 @@ pub struct Response {
     pub status: u16,
     pub keep_alive: bool,
     pub body: Vec<u8>,
+    /// the `x-chh-request-id` the server echoed back, if any
+    pub request_id: Option<String>,
 }
 
 fn find_blank_line(b: &[u8]) -> Option<usize> {
@@ -144,9 +152,16 @@ impl<R: Read> MessageReader<R> {
         if !version.starts_with("HTTP/1.") {
             return Err(HttpError::Malformed(format!("unsupported version {version:?}")));
         }
-        let (content_length, keep_alive) = parse_headers(lines, version == "HTTP/1.1")?;
+        let (content_length, keep_alive, request_id) =
+            parse_headers(lines, version == "HTTP/1.1")?;
         let body = self.read_body(content_length)?;
-        Ok(Request { method: method.to_string(), path: path.to_string(), keep_alive, body })
+        Ok(Request {
+            method: method.to_string(),
+            path: path.to_string(),
+            keep_alive,
+            body,
+            request_id,
+        })
     }
 
     /// Read and parse one response (client side).
@@ -166,20 +181,22 @@ impl<R: Read> MessageReader<R> {
         let status = code
             .parse::<u16>()
             .map_err(|_| HttpError::Malformed(format!("bad status code {code:?}")))?;
-        let (content_length, keep_alive) = parse_headers(lines, version == "HTTP/1.1")?;
+        let (content_length, keep_alive, request_id) =
+            parse_headers(lines, version == "HTTP/1.1")?;
         let body = self.read_body(content_length)?;
-        Ok(Response { status, keep_alive, body })
+        Ok(Response { status, keep_alive, body, request_id })
     }
 }
 
-/// Parse headers (after the first line) into the two fields the framing
-/// needs; `default_keep_alive` comes from the HTTP version.
+/// Parse headers (after the first line) into the fields the framing and
+/// tracing need; `default_keep_alive` comes from the HTTP version.
 fn parse_headers(
     lines: std::str::Lines<'_>,
     default_keep_alive: bool,
-) -> Result<(usize, bool), HttpError> {
+) -> Result<(usize, bool, Option<String>), HttpError> {
     let mut content_length = 0usize;
     let mut keep_alive = default_keep_alive;
+    let mut request_id = None;
     for line in lines {
         if line.is_empty() {
             continue;
@@ -209,10 +226,17 @@ fn parse_headers(
             "transfer-encoding" => {
                 return Err(HttpError::Malformed("chunked bodies unsupported".to_string()));
             }
+            REQUEST_ID_HEADER => {
+                // bound the id so a hostile client can't bloat logs;
+                // ids we generate are 16 hex chars
+                if !v.is_empty() && v.len() <= 64 {
+                    request_id = Some(v.to_string());
+                }
+            }
             _ => {}
         }
     }
-    Ok((content_length, keep_alive))
+    Ok((content_length, keep_alive, request_id))
 }
 
 /// Human reason phrase for the handful of statuses the server emits.
@@ -238,8 +262,25 @@ pub fn write_response<W: Write>(
     body: &[u8],
     keep_alive: bool,
 ) -> std::io::Result<()> {
+    write_response_ex(w, status, body, keep_alive, "application/json", None)
+}
+
+/// Write one response with an explicit content type (the `/metrics`
+/// exposition is `text/plain`) and an optional echoed request id.
+pub fn write_response_ex<W: Write>(
+    w: &mut W,
+    status: u16,
+    body: &[u8],
+    keep_alive: bool,
+    content_type: &str,
+    request_id: Option<&str>,
+) -> std::io::Result<()> {
+    let id_line = match request_id {
+        Some(id) => format!("{REQUEST_ID_HEADER}: {id}\r\n"),
+        None => String::new(),
+    };
     let head = format!(
-        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        "HTTP/1.1 {} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n{id_line}Connection: {}\r\n\r\n",
         status,
         reason(status),
         body.len(),
@@ -257,8 +298,24 @@ pub fn write_request<W: Write>(
     path: &str,
     body: &[u8],
 ) -> std::io::Result<()> {
+    write_request_ex(w, method, path, body, None)
+}
+
+/// Write one request carrying an `x-chh-request-id` (the replica tailer
+/// and loadgen use this so server logs correlate with client attempts).
+pub fn write_request_ex<W: Write>(
+    w: &mut W,
+    method: &str,
+    path: &str,
+    body: &[u8],
+    request_id: Option<&str>,
+) -> std::io::Result<()> {
+    let id_line = match request_id {
+        Some(id) => format!("{REQUEST_ID_HEADER}: {id}\r\n"),
+        None => String::new(),
+    };
     let head = format!(
-        "{method} {path} HTTP/1.1\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: keep-alive\r\n\r\n",
+        "{method} {path} HTTP/1.1\r\nContent-Type: application/json\r\nContent-Length: {}\r\n{id_line}Connection: keep-alive\r\n\r\n",
         body.len()
     );
     w.write_all(head.as_bytes())?;
@@ -334,12 +391,29 @@ impl HttpClient {
         self.conn.response()
     }
 
+    /// [`Self::request`] carrying an `x-chh-request-id` header.
+    pub fn request_with_id(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: &[u8],
+        request_id: &str,
+    ) -> Result<Response, HttpError> {
+        write_request_ex(self.conn.get_mut(), method, path, body, Some(request_id))?;
+        self.conn.response()
+    }
+
     pub fn post(&mut self, path: &str, body: &str) -> Result<Response, HttpError> {
         self.request("POST", path, body.as_bytes())
     }
 
     pub fn get(&mut self, path: &str) -> Result<Response, HttpError> {
         self.request("GET", path, &[])
+    }
+
+    /// `GET` with an `x-chh-request-id` (replica tailer polls).
+    pub fn get_with_id(&mut self, path: &str, request_id: &str) -> Result<Response, HttpError> {
+        self.request_with_id("GET", path, &[], request_id)
     }
 }
 
@@ -429,6 +503,29 @@ mod tests {
         assert_eq!(r.method, "POST");
         assert_eq!(r.path, "/query");
         assert_eq!(r.body, br#"{"w":[1]}"#);
+    }
+
+    #[test]
+    fn request_id_header_is_parsed_and_echoed() {
+        // request side: header captured, oversized/empty values dropped
+        let r = req(b"GET /q HTTP/1.1\r\nx-chh-request-id: abc123\r\n\r\n").unwrap();
+        assert_eq!(r.request_id.as_deref(), Some("abc123"));
+        let r = req(b"GET /q HTTP/1.1\r\nX-CHH-Request-Id: UPPER\r\n\r\n").unwrap();
+        assert_eq!(r.request_id.as_deref(), Some("UPPER"), "header match is case-insensitive");
+        let long = format!("GET /q HTTP/1.1\r\nx-chh-request-id: {}\r\n\r\n", "z".repeat(100));
+        assert_eq!(req(long.as_bytes()).unwrap().request_id, None, "oversized id dropped");
+        let r = req(b"GET /q HTTP/1.1\r\n\r\n").unwrap();
+        assert_eq!(r.request_id, None);
+        // wire roundtrip via the ex writers
+        let mut wire = Vec::new();
+        write_request_ex(&mut wire, "POST", "/query", b"{}", Some("rid-1")).unwrap();
+        assert_eq!(req(&wire).unwrap().request_id.as_deref(), Some("rid-1"));
+        let mut wire = Vec::new();
+        write_response_ex(&mut wire, 200, b"ok", true, "text/plain; version=0.0.4", Some("rid-1"))
+            .unwrap();
+        let resp = MessageReader::new(Cursor::new(wire)).response().unwrap();
+        assert_eq!(resp.request_id.as_deref(), Some("rid-1"));
+        assert_eq!(resp.body, b"ok");
     }
 
     #[test]

@@ -47,10 +47,11 @@ pub mod batcher;
 pub mod http;
 pub mod protocol;
 
-pub use batcher::{Batcher, BatcherConfig, BatcherStats, SubmitError};
+pub use batcher::{BatchedReply, Batcher, BatcherConfig, BatcherStats, FlushOutcome, SubmitError};
 pub use http::{HttpClient, HttpError};
 
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -60,6 +61,7 @@ use crate::data::FeatureStore;
 use crate::hash::HashFamily;
 use crate::jsonio::{obj, Json};
 use crate::metrics::Histogram;
+use crate::obs::{self, Hist, Registry, SlowLog, Trace};
 use crate::replicate::{ReplicaIndex, Tailer};
 use crate::table::QueryHit;
 use crate::wal::DurableIndex;
@@ -112,10 +114,18 @@ impl Stack {
         }
     }
 
-    fn query_batch_pooled(&self, reqs: &[QueryRequest], pool: &crate::par::Pool) -> Vec<QueryHit> {
+    /// The traced batch path the flush closure uses: answers are
+    /// bit-identical to [`crate::coordinator::Router::query_batch_pooled`]
+    /// (the untraced entry points delegate here), plus the batch's
+    /// per-stage wall-clock breakdown.
+    fn query_batch_traced(
+        &self,
+        reqs: &[QueryRequest],
+        pool: &crate::par::Pool,
+    ) -> (Vec<QueryHit>, obs::StageTimes) {
         match self {
-            Stack::Static(r) => r.query_batch_pooled(reqs, pool),
-            Stack::Online(r) => r.query_batch_pooled(reqs, pool),
+            Stack::Static(r) => r.query_batch_pooled_traced(reqs, pool),
+            Stack::Online(r) => r.query_batch_pooled_traced(reqs, pool),
         }
     }
 }
@@ -135,6 +145,10 @@ pub struct ServerConfig {
     pub pool_workers: usize,
     /// reap keep-alive connections idle this long
     pub idle_timeout: Duration,
+    /// slow-query threshold in milliseconds (0 = slow logging off)
+    pub slow_ms: u64,
+    /// where slow-query JSON lines go (size-rotated); stderr when unset
+    pub slow_log: Option<PathBuf>,
 }
 
 impl Default for ServerConfig {
@@ -145,6 +159,8 @@ impl Default for ServerConfig {
             batch: BatcherConfig::default(),
             pool_workers: 0,
             idle_timeout: Duration::from_secs(5),
+            slow_ms: 0,
+            slow_log: None,
         }
     }
 }
@@ -159,9 +175,382 @@ struct ServerStats {
     latency: Mutex<Histogram>,
 }
 
+/// Active slow-log cap before rotation to `<path>.1`.
+const SLOW_LOG_MAX_BYTES: u64 = 4 << 20;
+
+/// Pipeline stage names in pipeline order — the `stage` label values of
+/// `chh_stage_seconds` and the keys of a slow-log line's `stages_us`.
+pub const STAGES: &[&str] = &["batch_wait", "encode", "probe", "scan", "merge", "serialize"];
+
+/// Package version baked into `/healthz` and `chh_build_info`.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");
+
+/// Git hash injected at compile time via the `CHH_GIT_HASH` env var (CI
+/// sets it); local builds report `unknown`.
+pub fn git_hash() -> &'static str {
+    option_env!("CHH_GIT_HASH").unwrap_or("unknown")
+}
+
+/// Server-owned observability: the `/metrics` registry, the shared
+/// stage histograms the flush closure records into, per-route request
+/// accounting, and the slow-query sink. Global-free — every server (and
+/// test) owns its own.
+struct Telemetry {
+    registry: Registry,
+    /// batch-level stage latencies (encode/probe/scan/merge are recorded
+    /// once per flush; batch_wait/serialize once per request)
+    stage_batch_wait: Arc<Hist>,
+    stage_encode: Arc<Hist>,
+    stage_probe: Arc<Hist>,
+    stage_scan: Arc<Hist>,
+    stage_merge: Arc<Hist>,
+    stage_serialize: Arc<Hist>,
+    /// per-route request counter + latency hist; the final entry is the
+    /// catch-all `route="other"` series (404s, junk paths)
+    routes: Vec<(&'static str, Arc<obs::Counter>, Arc<Hist>)>,
+    slow_threshold: Option<Duration>,
+    slow_log: Option<SlowLog>,
+}
+
+impl Telemetry {
+    fn new(slow_ms: u64, slow_log: Option<PathBuf>) -> Self {
+        let registry = Registry::new();
+        let stage = |name: &'static str| {
+            registry.hist(
+                "chh_stage_seconds",
+                "query pipeline stage latency (encode/probe/scan/merge are per batch flush, \
+                 batch_wait/serialize per request)",
+                vec![("stage", name.to_string())],
+                obs::LATENCY_BOUNDS_NS,
+                1e9,
+            )
+        };
+        let stage_batch_wait = stage("batch_wait");
+        let stage_encode = stage("encode");
+        let stage_probe = stage("probe");
+        let stage_scan = stage("scan");
+        let stage_merge = stage("merge");
+        let stage_serialize = stage("serialize");
+        let mut routes = Vec::new();
+        for r in ROUTES.iter().copied().chain(std::iter::once("other")) {
+            let c = registry.counter(
+                "chh_http_requests_total",
+                "HTTP requests answered, by route",
+                vec![("route", r.to_string())],
+            );
+            let h = registry.hist(
+                "chh_request_seconds",
+                "request wall time from parse to response, by route",
+                vec![("route", r.to_string())],
+                obs::LATENCY_BOUNDS_NS,
+                1e9,
+            );
+            routes.push((r, c, h));
+        }
+        Telemetry {
+            registry,
+            stage_batch_wait,
+            stage_encode,
+            stage_probe,
+            stage_scan,
+            stage_merge,
+            stage_serialize,
+            routes,
+            slow_threshold: (slow_ms > 0).then(|| Duration::from_millis(slow_ms)),
+            slow_log: slow_log.map(|p| SlowLog::create(p, SLOW_LOG_MAX_BYTES)),
+        }
+    }
+
+    fn route_entry(&self, route: &str) -> &(&'static str, Arc<obs::Counter>, Arc<Hist>) {
+        self.routes
+            .iter()
+            .find(|(r, _, _)| *r == route)
+            .unwrap_or_else(|| self.routes.last().expect("catch-all route registered"))
+    }
+
+    /// Count one finished request (route counter + latency hist) and run
+    /// the slow-query check.
+    fn finish_request(&self, trace: &Trace, path: &str, status: u16, total: Duration) {
+        let route = path.split('?').next().unwrap_or(path);
+        let entry = self.route_entry(route);
+        entry.1.inc();
+        entry.2.observe_duration(total);
+        if let Some(th) = self.slow_threshold {
+            if total >= th {
+                let line = trace.slow_line(entry.0, status, total);
+                match &self.slow_log {
+                    Some(log) => log.append(&line),
+                    None => eprintln!("slow-query: {line}"),
+                }
+            }
+        }
+    }
+
+    /// Record a batch flush's stage breakdown (called once per flush, on
+    /// the collector thread — the histograms are lock-free).
+    fn record_stages(&self, st: &obs::StageTimes) {
+        self.stage_encode.observe_duration(st.encode);
+        self.stage_probe.observe_duration(st.probe);
+        self.stage_scan.observe_duration(st.scan);
+        self.stage_merge.observe_duration(st.merge);
+    }
+}
+
+/// Wire every non-Telemetry metric family into the registry. Callback
+/// metrics read already-existing atomics at scrape time, so hot paths
+/// stay untouched; each callback captures its own `Arc` (never
+/// [`State`]), so the registry creates no reference cycle.
+fn register_metrics(
+    tel: &Telemetry,
+    stack: &Stack,
+    sstats: &Arc<ServerStats>,
+    bstats: &Arc<BatcherStats>,
+    durable: Option<&Arc<DurableIndex>>,
+    replica: Option<&(Arc<ReplicaIndex>, String)>,
+    role: &'static str,
+) {
+    let reg = &tel.registry;
+    reg.gauge_fn(
+        "chh_build_info",
+        "build and serving metadata (value is always 1)",
+        vec![
+            ("version", VERSION.to_string()),
+            ("git_hash", git_hash().to_string()),
+            ("mode", stack.mode().to_string()),
+            ("role", role.to_string()),
+        ],
+        || 1.0,
+    );
+    let s = sstats.clone();
+    reg.gauge_fn("chh_uptime_seconds", "seconds since the server started", vec![], move || {
+        s.started.elapsed().as_secs_f64()
+    });
+    let s = sstats.clone();
+    reg.counter_fn(
+        "chh_http_bad_requests_total",
+        "malformed HTTP requests answered 4xx before routing",
+        vec![],
+        move || s.bad_requests.load(Ordering::Relaxed) as f64,
+    );
+    let s = sstats.clone();
+    reg.counter_fn(
+        "chh_probes_total",
+        "hash buckets probed across answered /query requests",
+        vec![],
+        move || s.probes_total.load(Ordering::Relaxed) as f64,
+    );
+    let b = bstats.clone();
+    reg.counter_fn(
+        "chh_batcher_submitted_total",
+        "queries admitted to the micro-batcher",
+        vec![],
+        move || b.submitted.load(Ordering::Relaxed) as f64,
+    );
+    let b = bstats.clone();
+    reg.counter_fn(
+        "chh_batcher_rejected_total",
+        "queries refused at admission (answered 503)",
+        vec![],
+        move || b.rejected.load(Ordering::Relaxed) as f64,
+    );
+    let b = bstats.clone();
+    reg.counter_fn("chh_batcher_batches_total", "batch flushes executed", vec![], move || {
+        b.batches.load(Ordering::Relaxed) as f64
+    });
+    let b = bstats.clone();
+    reg.counter_fn(
+        "chh_batcher_flushed_total",
+        "queries answered through batch flushes",
+        vec![],
+        move || b.flushed.load(Ordering::Relaxed) as f64,
+    );
+    let router_counter = |name: &'static str,
+                          help: &'static str,
+                          pick: fn(&crate::coordinator::RouterStats) -> u64| {
+        let st = stack.clone();
+        reg.counter_fn(name, help, vec![], move || {
+            let rs = match &st {
+                Stack::Static(r) => r.stats(),
+                Stack::Online(r) => r.stats(),
+            };
+            pick(rs) as f64
+        });
+    };
+    router_counter("chh_router_submitted_total", "queries submitted to the router", |s| {
+        s.submitted.load(Ordering::Relaxed)
+    });
+    router_counter("chh_router_completed_total", "queries completed by the router", |s| {
+        s.completed.load(Ordering::Relaxed)
+    });
+    router_counter(
+        "chh_router_empty_lookups_total",
+        "queries whose probe sequence matched no candidates",
+        |s| s.empty_lookups.load(Ordering::Relaxed),
+    );
+    router_counter(
+        "chh_router_candidates_scanned_total",
+        "candidate points scanned across all queries",
+        |s| s.candidates_scanned.load(Ordering::Relaxed),
+    );
+    let st = stack.clone();
+    reg.gauge_fn("chh_index_points", "live points in the serving index", vec![], move || {
+        match &st {
+            Stack::Static(r) => r.index().len() as f64,
+            Stack::Online(r) => r.index().len() as f64,
+        }
+    });
+    if let Some(d) = durable {
+        let ws = d.wal_stats().clone();
+        reg.counter_fn("chh_wal_records_total", "records appended to the WAL", vec![], move || {
+            ws.records.load(Ordering::Relaxed) as f64
+        });
+        let ws = d.wal_stats().clone();
+        reg.counter_fn("chh_wal_bytes_total", "frame bytes written to the WAL", vec![], move || {
+            ws.bytes.load(Ordering::Relaxed) as f64
+        });
+        let ws = d.wal_stats().clone();
+        reg.counter_fn("chh_wal_fsyncs_total", "fsync calls issued by the WAL writer", vec![], move || {
+            ws.fsyncs.load(Ordering::Relaxed) as f64
+        });
+        let ws = d.wal_stats().clone();
+        reg.counter_fn("chh_wal_rotations_total", "WAL segment rolls", vec![], move || {
+            ws.rotations.load(Ordering::Relaxed) as f64
+        });
+        let dd = d.clone();
+        reg.gauge_fn(
+            "chh_wal_durable_segment",
+            "segment seq of the fsynced frontier",
+            vec![],
+            move || dd.durable_watermark().0 as f64,
+        );
+        let dd = d.clone();
+        reg.gauge_fn(
+            "chh_wal_durable_offset",
+            "byte offset of the fsynced frontier within its segment",
+            vec![],
+            move || dd.durable_watermark().1 as f64,
+        );
+        let dd = d.clone();
+        reg.gauge_fn(
+            "chh_wal_snapshot_generation",
+            "generation of the last completed snapshot",
+            vec![],
+            move || dd.snapshot_gen() as f64,
+        );
+        let dd = d.clone();
+        reg.gauge_fn(
+            "chh_wal_ops_since_snapshot",
+            "journaled mutations since the last snapshot",
+            vec![],
+            move || dd.ops_since_snapshot() as f64,
+        );
+        reg.register_hist(
+            "chh_wal_fsync_seconds",
+            "WAL fsync wall time",
+            vec![],
+            d.wal_stats().fsync_hist.clone(),
+            1e9,
+        );
+        reg.register_hist(
+            "chh_wal_commit_batch_size",
+            "records coalesced per WAL group commit",
+            vec![],
+            d.wal_stats().commit_batch.clone(),
+            1.0,
+        );
+    }
+    if let Some((r, primary)) = replica {
+        reg.gauge_fn(
+            "chh_replica_primary",
+            "the primary this replica tails (value is always 1)",
+            vec![("addr", primary.clone())],
+            || 1.0,
+        );
+        let rr = r.clone();
+        reg.gauge_fn(
+            "chh_replica_applied_segment",
+            "WAL segment the replica has applied through",
+            vec![],
+            move || rr.position().0 as f64,
+        );
+        let rr = r.clone();
+        reg.gauge_fn(
+            "chh_replica_applied_offset",
+            "byte offset the replica has applied through",
+            vec![],
+            move || rr.position().1 as f64,
+        );
+        let rr = r.clone();
+        reg.counter_fn(
+            "chh_replica_applied_records_total",
+            "insert/remove records applied from the stream",
+            vec![],
+            move || rr.applied_records() as f64,
+        );
+        let rr = r.clone();
+        reg.gauge_fn(
+            "chh_replica_lag_segments",
+            "whole segments behind the primary's durable watermark",
+            vec![],
+            move || rr.lag().0 as f64,
+        );
+        let rr = r.clone();
+        reg.gauge_fn(
+            "chh_replica_lag_bytes",
+            "byte lag inside the primary's current segment (-1 = unknown / cross-segment)",
+            vec![],
+            move || rr.lag().1.map_or(-1.0, |b| b as f64),
+        );
+        let rr = r.clone();
+        reg.gauge_fn(
+            "chh_replica_applied_age_seconds",
+            "seconds since the last applied stream chunk (-1 before the first)",
+            vec![],
+            move || rr.applied_age_secs().unwrap_or(-1.0),
+        );
+        let rr = r.clone();
+        reg.counter_fn(
+            "chh_replica_bootstraps_total",
+            "snapshot transfers (1 initial + resyncs)",
+            vec![],
+            move || rr.bootstraps() as f64,
+        );
+        let rr = r.clone();
+        reg.counter_fn(
+            "chh_replica_reconnects_total",
+            "primary reconnect attempts after transport errors",
+            vec![],
+            move || rr.reconnects() as f64,
+        );
+        let rr = r.clone();
+        reg.counter_fn(
+            "chh_replica_resyncs_total",
+            "full resyncs after falling behind a segment GC",
+            vec![],
+            move || rr.resyncs() as f64,
+        );
+        let rr = r.clone();
+        reg.gauge_fn(
+            "chh_replica_caught_up",
+            "1 when the replica has applied the observed durable watermark",
+            vec![],
+            move || if rr.caught_up() { 1.0 } else { 0.0 },
+        );
+        let rr = r.clone();
+        reg.gauge_fn(
+            "chh_replica_resyncing",
+            "1 while a resync transfer is in flight",
+            vec![],
+            move || if rr.resyncing() { 1.0 } else { 0.0 },
+        );
+    }
+}
+
 struct State {
     stack: Stack,
     batcher: Batcher,
+    /// metrics registry, stage histograms, slow-query sink
+    telemetry: Arc<Telemetry>,
     /// journaling wrapper around the online index, when serving durably
     /// (a durable server doubles as a replication primary)
     durable: Option<Arc<DurableIndex>>,
@@ -179,7 +568,8 @@ struct State {
     /// over-cap connections currently being refused on shed threads
     shedding_conns: AtomicUsize,
     idle_timeout: Duration,
-    stats: ServerStats,
+    /// `Arc` so scrape callbacks can read it without referencing `State`
+    stats: Arc<ServerStats>,
 }
 
 /// Cap on concurrent courtesy-503 shed threads; past this, over-cap
@@ -341,11 +731,17 @@ impl Server {
         let listener = TcpListener::bind(&cfg.addr)
             .map_err(|e| anyhow::anyhow!("binding {}: {e}", cfg.addr))?;
         let addr = listener.local_addr()?;
+        let telemetry = Arc::new(Telemetry::new(cfg.slow_ms, cfg.slow_log.clone()));
         let flush_stack = stack.clone();
         let pool = crate::par::Pool::new(cfg.pool_workers);
+        let ftel = telemetry.clone();
         let batcher = Batcher::new(
             cfg.batch,
-            Box::new(move |reqs: &[QueryRequest]| flush_stack.query_batch_pooled(reqs, &pool)),
+            Box::new(move |reqs: &[QueryRequest]| {
+                let (hits, stages) = flush_stack.query_batch_traced(reqs, &pool);
+                ftel.record_stages(&stages);
+                FlushOutcome { hits, stages }
+            }),
         );
         let budget_desc = match &stack {
             Stack::Online(r) => {
@@ -369,6 +765,7 @@ impl Server {
         let state = Arc::new(State {
             stack,
             batcher,
+            telemetry,
             durable,
             replica,
             family_check,
@@ -379,7 +776,7 @@ impl Server {
             active_conns: AtomicUsize::new(0),
             shedding_conns: AtomicUsize::new(0),
             idle_timeout: cfg.idle_timeout,
-            stats: ServerStats {
+            stats: Arc::new(ServerStats {
                 started: Instant::now(),
                 http_requests: AtomicU64::new(0),
                 bad_requests: AtomicU64::new(0),
@@ -390,8 +787,17 @@ impl Server {
                 latency: Mutex::new(Histogram::with_capacity(
                     crate::metrics::SERVING_RESERVOIR,
                 )),
-            },
+            }),
         });
+        register_metrics(
+            &state.telemetry,
+            &state.stack,
+            &state.stats,
+            state.batcher.stats(),
+            state.durable.as_ref(),
+            state.replica.as_ref(),
+            state.role(),
+        );
         let astate = state.clone();
         let acceptor = std::thread::Builder::new()
             .name("chh-http-accept".to_string())
@@ -537,10 +943,26 @@ fn handle_conn(state: &Arc<State>, stream: &TcpStream) {
         match reader.request() {
             Ok(req) => {
                 state.stats.http_requests.fetch_add(1, Ordering::Relaxed);
-                let reply = dispatch(state, &req);
+                let t0 = Instant::now();
+                // propagate the client's correlation id, or mint one —
+                // either way it is echoed in the response and carried
+                // through the trace / slow-query log
+                let rid = req.request_id.clone().unwrap_or_else(obs::gen_request_id);
+                let mut trace = Trace::new(rid);
+                let reply = dispatch(state, &req, &mut trace);
+                let total = t0.elapsed();
+                state.telemetry.finish_request(&trace, &req.path, reply.status, total);
                 let keep = req.keep_alive && !state.shutdown.load(Ordering::SeqCst);
                 let mut out = stream;
-                if http::write_response(&mut out, reply.status, &reply.body, keep).is_err()
+                if http::write_response_ex(
+                    &mut out,
+                    reply.status,
+                    &reply.body,
+                    keep,
+                    reply.content_type,
+                    Some(&trace.id),
+                )
+                .is_err()
                     || !keep
                 {
                     return;
@@ -564,24 +986,32 @@ fn handle_conn(state: &Arc<State>, stream: &TcpStream) {
     }
 }
 
+/// Content type of the Prometheus text exposition.
+pub const METRICS_CONTENT_TYPE: &str = "text/plain; version=0.0.4";
+
 struct Reply {
     status: u16,
-    /// JSON on every route except the replication transfers, which are
-    /// binary ([`crate::replicate::wire`])
     body: Vec<u8>,
+    /// JSON on every route except `/metrics` (Prometheus text) and the
+    /// replication transfers (binary, [`crate::replicate::wire`])
+    content_type: &'static str,
 }
 
+const CT_JSON: &str = "application/json";
+const CT_BIN: &str = "application/octet-stream";
+
 fn ok_json(v: Json) -> Reply {
-    Reply { status: 200, body: v.to_string_compact().into_bytes() }
+    Reply { status: 200, body: v.to_string_compact().into_bytes(), content_type: CT_JSON }
 }
 
 fn err_json(status: u16, msg: &str) -> Reply {
-    Reply { status, body: protocol::error_json(msg).into_bytes() }
+    Reply { status, body: protocol::error_json(msg).into_bytes(), content_type: CT_JSON }
 }
 
 const ROUTES: &[&str] = &[
     "/healthz",
     "/stats",
+    "/metrics",
     "/query",
     "/query_topk",
     "/insert",
@@ -591,7 +1021,7 @@ const ROUTES: &[&str] = &[
     "/wal/bootstrap",
 ];
 
-fn dispatch(state: &Arc<State>, req: &http::Request) -> Reply {
+fn dispatch(state: &Arc<State>, req: &http::Request, trace: &mut Trace) -> Reply {
     // the replication endpoints carry `?seg=...`-style parameters; every
     // other route ignores its query string
     let (route, query) = match req.path.split_once('?') {
@@ -601,7 +1031,12 @@ fn dispatch(state: &Arc<State>, req: &http::Request) -> Reply {
     match (req.method.as_str(), route) {
         ("GET", "/healthz") => handle_healthz(state),
         ("GET", "/stats") => handle_stats(state),
-        ("POST", "/query") => handle_query(state, &req.body),
+        ("GET", "/metrics") => Reply {
+            status: 200,
+            body: state.telemetry.registry.render().into_bytes(),
+            content_type: METRICS_CONTENT_TYPE,
+        },
+        ("POST", "/query") => handle_query(state, &req.body, trace),
         ("POST", "/query_topk") => handle_topk(state, &req.body),
         ("POST", "/insert") => handle_insert(state, &req.body),
         ("POST", "/remove") => handle_remove(state, &req.body),
@@ -623,6 +1058,8 @@ fn handle_healthz(state: &Arc<State>) -> Reply {
         ("status", Json::from("ok")),
         ("mode", Json::from(state.stack.mode())),
         ("role", Json::from(state.role())),
+        ("version", Json::from(VERSION)),
+        ("git_hash", Json::from(git_hash())),
         ("uptime_secs", Json::Num(state.stats.started.elapsed().as_secs_f64())),
     ]))
 }
@@ -633,9 +1070,11 @@ fn handle_wal_stream(state: &Arc<State>, query: &str) -> Reply {
         return err_json(400, "not a replication primary (serve with --wal-dir)");
     };
     match crate::replicate::primary::handle_stream(d, query) {
-        Ok(chunk) => {
-            Reply { status: 200, body: crate::replicate::wire::encode_stream_chunk(&chunk) }
-        }
+        Ok(chunk) => Reply {
+            status: 200,
+            body: crate::replicate::wire::encode_stream_chunk(&chunk),
+            content_type: CT_BIN,
+        },
         Err(e) => err_json(e.status, &e.msg),
     }
 }
@@ -649,12 +1088,13 @@ fn handle_wal_bootstrap(state: &Arc<State>, query: &str) -> Reply {
         Ok(chunk) => Reply {
             status: 200,
             body: crate::replicate::wire::encode_bootstrap_chunk(&chunk),
+            content_type: CT_BIN,
         },
         Err(e) => err_json(e.status, &e.msg),
     }
 }
 
-fn handle_query(state: &Arc<State>, body: &[u8]) -> Reply {
+fn handle_query(state: &Arc<State>, body: &[u8], trace: &mut Trace) -> Reply {
     let req = match protocol::parse_query(body, state.dim()) {
         Ok(r) => r,
         Err(e) => return err_json(e.status, &e.msg),
@@ -662,10 +1102,25 @@ fn handle_query(state: &Arc<State>, body: &[u8]) -> Reply {
     let t0 = Instant::now();
     match state.batcher.submit(req) {
         Ok(rx) => match rx.recv() {
-            Ok(hit) => {
+            Ok(BatchedReply { hit, wait, stages }) => {
+                let tel = &state.telemetry;
+                // batch_wait is exact per request; the compute stages are
+                // the batch-level breakdown the flush recorded (shared by
+                // every request in the batch — context, not attribution)
+                tel.stage_batch_wait.observe_duration(wait);
+                trace.stage("batch_wait", wait);
+                trace.stage("encode", stages.encode);
+                trace.stage("probe", stages.probe);
+                trace.stage("scan", stages.scan);
+                trace.stage("merge", stages.merge);
                 state.stats.latency.lock().unwrap().record_duration(t0.elapsed());
                 state.stats.probes_total.fetch_add(hit.probed as u64, Ordering::Relaxed);
-                ok_json(protocol::hit_json(&hit))
+                let t_ser = Instant::now();
+                let reply = ok_json(protocol::hit_json(&hit));
+                let ser = t_ser.elapsed();
+                tel.stage_serialize.observe_duration(ser);
+                trace.stage("serialize", ser);
+                reply
             }
             Err(_) => err_json(500, "batcher dropped the query"),
         },
@@ -706,6 +1161,7 @@ fn replica_redirect(primary: &str) -> Reply {
             primary,
         )
         .into_bytes(),
+        content_type: CT_JSON,
     }
 }
 
@@ -903,19 +1359,26 @@ mod tests {
         let feats = Arc::new(ds.features().clone());
         let router = Arc::new(Router::new(fam, idx, feats, 1, 4));
         let stack = Stack::Static(router);
+        let telemetry = Arc::new(Telemetry::new(0, None));
         let flush_stack = stack.clone();
         let pool = crate::par::Pool::serial();
+        let ftel = telemetry.clone();
         let batcher = Batcher::new(
             BatcherConfig::default(),
-            Box::new(move |reqs: &[QueryRequest]| flush_stack.query_batch_pooled(reqs, &pool)),
+            Box::new(move |reqs: &[QueryRequest]| {
+                let (hits, stages) = flush_stack.query_batch_traced(reqs, &pool);
+                ftel.record_stages(&stages);
+                FlushOutcome { hits, stages }
+            }),
         );
         let family_check = crate::replicate::family_fingerprint(
             stack.family().as_ref(),
             stack.feats().dim(),
         );
-        Arc::new(State {
+        let state = Arc::new(State {
             stack,
             batcher,
+            telemetry,
             durable: None,
             replica: None,
             family_check,
@@ -926,7 +1389,7 @@ mod tests {
             active_conns: AtomicUsize::new(0),
             shedding_conns: AtomicUsize::new(0),
             idle_timeout: Duration::from_secs(1),
-            stats: ServerStats {
+            stats: Arc::new(ServerStats {
                 started: Instant::now(),
                 http_requests: AtomicU64::new(0),
                 bad_requests: AtomicU64::new(0),
@@ -934,8 +1397,18 @@ mod tests {
                 latency: Mutex::new(Histogram::with_capacity(
                     crate::metrics::SERVING_RESERVOIR,
                 )),
-            },
-        })
+            }),
+        });
+        register_metrics(
+            &state.telemetry,
+            &state.stack,
+            &state.stats,
+            state.batcher.stats(),
+            None,
+            None,
+            state.role(),
+        );
+        state
     }
 
     fn post(path: &str, body: &str) -> http::Request {
@@ -943,8 +1416,14 @@ mod tests {
             method: "POST".to_string(),
             path: path.to_string(),
             keep_alive: true,
+            request_id: None,
             body: body.as_bytes().to_vec(),
         }
+    }
+
+    /// `dispatch` with a throwaway trace (route-level tests).
+    fn disp(state: &Arc<State>, req: &http::Request) -> Reply {
+        dispatch(state, req, &mut Trace::new(obs::gen_request_id()))
     }
 
     #[test]
@@ -954,30 +1433,80 @@ mod tests {
             method: "GET".to_string(),
             path: p.to_string(),
             keep_alive: true,
+            request_id: None,
             body: Vec::new(),
         };
-        assert_eq!(dispatch(&state, &get("/healthz")).status, 200);
-        assert_eq!(dispatch(&state, &get("/stats")).status, 200);
-        assert_eq!(dispatch(&state, &get("/nope")).status, 404);
-        assert_eq!(dispatch(&state, &get("/query")).status, 405, "GET on a POST route");
-        assert_eq!(dispatch(&state, &post("/query", "junk")).status, 400);
+        assert_eq!(disp(&state, &get("/healthz")).status, 200);
+        assert_eq!(disp(&state, &get("/stats")).status, 200);
+        assert_eq!(disp(&state, &get("/metrics")).status, 200);
+        assert_eq!(disp(&state, &get("/nope")).status, 404);
+        assert_eq!(disp(&state, &get("/query")).status, 405, "GET on a POST route");
+        assert_eq!(disp(&state, &post("/query", "junk")).status, 400);
         let wrong_dim = protocol::query_body(&[1.0; 3]);
-        assert_eq!(dispatch(&state, &post("/query", &wrong_dim)).status, 400);
+        assert_eq!(disp(&state, &post("/query", &wrong_dim)).status, 400);
         let good = protocol::query_body(&[0.5; 8]);
-        let reply = dispatch(&state, &post("/query", &good));
+        let reply = disp(&state, &post("/query", &good));
         assert_eq!(reply.status, 200);
+        assert_eq!(reply.content_type, CT_JSON);
         assert!(protocol::parse_hit(&reply.body).is_ok());
         // static stack refuses mutations
-        assert_eq!(dispatch(&state, &post("/insert", &protocol::id_body(3))).status, 400);
-        assert_eq!(dispatch(&state, &post("/remove", &protocol::id_body(3))).status, 400);
+        assert_eq!(disp(&state, &post("/insert", &protocol::id_body(3))).status, 400);
+        assert_eq!(disp(&state, &post("/remove", &protocol::id_body(3))).status, 400);
         // replication endpoints exist but need a WAL-backed primary
         assert_eq!(
-            dispatch(&state, &get("/wal/stream?seg=1&off=0")).status,
+            disp(&state, &get("/wal/stream?seg=1&off=0")).status,
             400,
             "stream without --wal-dir"
         );
-        assert_eq!(dispatch(&state, &get("/wal/bootstrap")).status, 400);
-        assert_eq!(dispatch(&state, &post("/wal/stream", "")).status, 405);
+        assert_eq!(disp(&state, &get("/wal/bootstrap")).status, 400);
+        assert_eq!(disp(&state, &post("/wal/stream", "")).status, 405);
+    }
+
+    #[test]
+    fn metrics_exposition_covers_requests_and_stages() {
+        let state = static_state();
+        let good = protocol::query_body(&[0.5; 8]);
+        let mut trace = Trace::new("fixed-id".to_string());
+        for _ in 0..4 {
+            let t0 = Instant::now();
+            let reply = dispatch(&state, &post("/query", &good), &mut trace);
+            assert_eq!(reply.status, 200);
+            state.telemetry.finish_request(&trace, "/query", reply.status, t0.elapsed());
+        }
+        let reply = disp(
+            &state,
+            &http::Request {
+                method: "GET".to_string(),
+                path: "/metrics".to_string(),
+                keep_alive: true,
+                request_id: None,
+                body: Vec::new(),
+            },
+        );
+        assert_eq!(reply.status, 200);
+        assert_eq!(reply.content_type, METRICS_CONTENT_TYPE);
+        let text = String::from_utf8(reply.body).unwrap();
+        let scrape = obs::parse_scrape(&text);
+        assert_eq!(
+            obs::series_value(&scrape, "chh_http_requests_total", r#"route="/query""#),
+            Some(4.0)
+        );
+        // every stage histogram saw the four queries (per-request stages
+        // count per request; batch-level ones once per single-item flush)
+        for stage in STAGES {
+            let label = format!(r#"stage="{stage}""#);
+            let n = obs::series_value(&scrape, "chh_stage_seconds_count", &label)
+                .unwrap_or_else(|| panic!("missing stage series {stage}"));
+            assert_eq!(n, 4.0, "stage {stage} count");
+        }
+        assert_eq!(obs::series_value(&scrape, "chh_index_points", ""), Some(200.0));
+        assert_eq!(
+            obs::series_value(&scrape, "chh_batcher_flushed_total", ""),
+            Some(4.0)
+        );
+        // the trace accumulated a stage entry set per request
+        assert_eq!(trace.stages().len(), 4 * 6, "six stages per traced query");
+        assert!(text.contains("chh_build_info{"), "build info series missing");
     }
 
     #[test]
@@ -985,14 +1514,15 @@ mod tests {
         let state = static_state();
         let good = protocol::query_body(&[0.25; 8]);
         for _ in 0..3 {
-            assert_eq!(dispatch(&state, &post("/query", &good)).status, 200);
+            assert_eq!(disp(&state, &post("/query", &good)).status, 200);
         }
-        let reply = dispatch(
+        let reply = disp(
             &state,
             &http::Request {
                 method: "GET".to_string(),
                 path: "/stats".to_string(),
                 keep_alive: true,
+                request_id: None,
                 body: Vec::new(),
             },
         );
@@ -1012,7 +1542,7 @@ mod tests {
         let state = static_state();
         // state.addr points nowhere routable-free; the poke connects fail
         // silently, which is fine for this unit test
-        let reply = dispatch(&state, &post("/shutdown", ""));
+        let reply = disp(&state, &post("/shutdown", ""));
         assert_eq!(reply.status, 200);
         assert!(state.shutdown.load(Ordering::SeqCst));
     }

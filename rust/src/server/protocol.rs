@@ -215,6 +215,14 @@ pub fn error_json(msg: &str) -> String {
     obj(vec![("error", Json::from(msg))]).to_string_compact()
 }
 
+/// Render an error body carrying the request's correlation id, so a
+/// client that lost the `x-chh-request-id` response header (proxies,
+/// minimal clients) can still quote the id when reporting the failure.
+pub fn error_json_id(msg: &str, request_id: &str) -> String {
+    obj(vec![("error", Json::from(msg)), ("request_id", Json::from(request_id))])
+        .to_string_compact()
+}
+
 /// Render the `421 Misdirected Request` body a read replica answers
 /// mutations with: the error plus the primary's address, so a client can
 /// follow the redirect without a second discovery round trip.
@@ -332,6 +340,14 @@ mod tests {
         let e = error_json("boom \"quoted\"");
         let v = Json::parse(&e).unwrap();
         assert_eq!(v.get("error").unwrap().as_str(), Some("boom \"quoted\""));
+    }
+
+    #[test]
+    fn error_json_id_carries_the_request_id() {
+        let e = error_json_id("boom", "deadbeef01234567");
+        let v = Json::parse(&e).unwrap();
+        assert_eq!(v.get("error").unwrap().as_str(), Some("boom"));
+        assert_eq!(v.get("request_id").unwrap().as_str(), Some("deadbeef01234567"));
     }
 
     #[test]

@@ -89,6 +89,12 @@ pub struct WalStats {
     pub rotations: AtomicU64,
     /// group-commit burst sizes (bounded reservoir)
     batches: Mutex<Histogram>,
+    /// fsync wall-clock latency (lock-free fixed buckets, nanoseconds) —
+    /// exported on `/metrics` as `chh_wal_fsync_seconds`
+    pub fsync_hist: Arc<crate::obs::Hist>,
+    /// group-commit burst sizes (lock-free fixed buckets) — exported on
+    /// `/metrics` as `chh_wal_commit_batch_size`
+    pub commit_batch: Arc<crate::obs::Hist>,
     /// `(segment seq, byte offset)` up to which every frame is fsynced.
     /// This is the watermark the replication stream may serve: bytes
     /// past it exist in the page cache but could vanish in a crash, so
@@ -105,6 +111,8 @@ impl Default for WalStats {
             fsyncs: AtomicU64::new(0),
             rotations: AtomicU64::new(0),
             batches: Mutex::new(Histogram::with_capacity(crate::metrics::SERVING_RESERVOIR)),
+            fsync_hist: Arc::new(crate::obs::Hist::latency()),
+            commit_batch: Arc::new(crate::obs::Hist::sizes()),
             durable: Mutex::new((0, 0)),
         }
     }
@@ -327,7 +335,9 @@ impl WriterState {
         if let Some(f) = &self.faults {
             f.on_fsync()?;
         }
+        let t0 = Instant::now();
         self.file.sync_all()?;
+        self.stats.fsync_hist.observe_duration(t0.elapsed());
         self.stats.fsyncs.fetch_add(1, Ordering::Relaxed);
         // only now are the written bytes crash-durable — advance the
         // watermark the replication stream is allowed to serve
@@ -396,6 +406,7 @@ impl WriterState {
         self.stats.records.fetch_add(n, Ordering::Relaxed);
         self.stats.bytes.fetch_add(buf.len() as u64, Ordering::Relaxed);
         self.stats.record_batch(n as usize);
+        self.stats.commit_batch.record(n);
         let due = match self.policy {
             FsyncPolicy::Always => true,
             FsyncPolicy::EveryN(k) => self.unsynced >= k,
@@ -618,6 +629,13 @@ mod tests {
         );
         let (_, _, max_batch, batches) = wal.stats().batch_stats();
         assert!(batches > 0 && max_batch >= 1.0);
+        // the lock-free exposition histograms see the same traffic
+        assert!(wal.stats().fsync_hist.count() > 0, "fsyncs must be timed");
+        assert_eq!(
+            wal.stats().commit_batch.sum_raw(),
+            (threads * per) as u64,
+            "commit-batch sizes must sum to the record count"
+        );
         drop(wal);
         let segs = list_segments(&dir).unwrap();
         let read = read_segment_bytes(&std::fs::read(&segs[0].1).unwrap());

@@ -37,6 +37,8 @@ fn server_cfg() -> ServerConfig {
         pool_workers: 2,
         // short idle reap so shutdown never waits long on parked clients
         idle_timeout: Duration::from_millis(300),
+        slow_ms: 0,
+        slow_log: None,
     }
 }
 

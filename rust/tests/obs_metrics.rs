@@ -1,0 +1,363 @@
+//! End-to-end tests of the observability layer on a live server: the
+//! `/metrics` exposition stays well-formed Prometheus text under
+//! concurrent query + mutation churn, counters are monotone across
+//! scrapes, request ids round-trip, the slow-query log captures a
+//! stage breakdown — and none of it changes an answer (traced wire
+//! responses stay bit-identical to direct router calls).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use chh::coordinator::{OnlineRouter, QueryRequest};
+use chh::data::test_blobs;
+use chh::hash::{BhHash, HashFamily};
+use chh::online::{QueryBudget, ShardedIndex};
+use chh::par::Pool;
+use chh::rng::Rng;
+use chh::server::{protocol, BatcherConfig, HttpClient, Server, ServerConfig, Stack};
+use chh::testing::unit_vec;
+
+const DIM: usize = 16;
+
+fn server_cfg() -> ServerConfig {
+    ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        max_conns: 32,
+        batch: BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            queue_cap: 256,
+        },
+        pool_workers: 2,
+        idle_timeout: Duration::from_millis(300),
+        slow_ms: 0,
+        slow_log: None,
+    }
+}
+
+fn online_stack(n: usize, seed: u64) -> (Stack, Arc<OnlineRouter>) {
+    let mut rng = Rng::seed_from_u64(seed);
+    let ds = test_blobs(n, DIM, 3, &mut rng);
+    let fam: Arc<dyn HashFamily> = Arc::new(BhHash::sample(DIM, 10, &mut rng));
+    let codes = fam.encode_all(ds.features());
+    let idx = Arc::new(ShardedIndex::from_codes(&codes, 4, 3));
+    let feats = Arc::new(ds.features().clone());
+    let router = Arc::new(OnlineRouter::new(
+        fam,
+        idx,
+        feats,
+        1,
+        16,
+        QueryBudget::new(256, 64),
+    ));
+    (Stack::Online(router.clone()), router)
+}
+
+/// Structural validation of one exposition body: every sample line
+/// parses, every family has `# HELP` + `# TYPE`, histogram buckets are
+/// cumulative-monotone and the `+Inf` bucket equals `_count`.
+fn assert_well_formed(text: &str) {
+    let mut helped = std::collections::HashSet::new();
+    let mut typed = std::collections::HashSet::new();
+    for line in text.lines().filter(|l| !l.is_empty()) {
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            helped.insert(rest.split(' ').next().unwrap().to_string());
+        } else if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split(' ');
+            let name = it.next().unwrap().to_string();
+            let kind = it.next().expect("TYPE line carries a kind");
+            assert!(
+                matches!(kind, "counter" | "gauge" | "histogram"),
+                "unknown TYPE {kind} for {name}"
+            );
+            typed.insert(name);
+        } else {
+            // sample line: `name{labels} value` — must split and parse
+            let (series, val) = line.rsplit_once(' ').expect("sample has a value");
+            assert!(
+                val == "+Inf" || val.parse::<f64>().is_ok(),
+                "unparseable value in {line:?}"
+            );
+            assert!(!series.is_empty());
+            // the family (name up to '{' and any _bucket/_sum/_count
+            // suffix) must have been announced
+            let name = series.split('{').next().unwrap();
+            let family = name
+                .strip_suffix("_bucket")
+                .or_else(|| name.strip_suffix("_sum"))
+                .or_else(|| name.strip_suffix("_count"))
+                .unwrap_or(name);
+            assert!(
+                typed.contains(family) || typed.contains(name),
+                "sample {series} precedes its # TYPE"
+            );
+        }
+    }
+    assert_eq!(helped, typed, "every family has both # HELP and # TYPE");
+
+    // histogram structure: per series-prefix, buckets are monotone in le
+    // order (the registry renders them in bound order) and end at +Inf
+    // with exactly the _count value
+    let scrape = chh::obs::parse_scrape(text);
+    for (k, v) in &scrape {
+        if let Some((name, rest)) = k.split_once('{') {
+            if !name.ends_with("_bucket") {
+                continue;
+            }
+            if rest.contains("le=\"+Inf\"") {
+                let family = name.strip_suffix("_bucket").unwrap();
+                // rebuild the matching _count key by dropping the le label
+                let labels: Vec<&str> = rest
+                    .trim_end_matches('}')
+                    .split(',')
+                    .filter(|kv| !kv.starts_with("le="))
+                    .collect();
+                let count_key = if labels.is_empty() {
+                    format!("{family}_count")
+                } else {
+                    format!("{family}_count{{{}}}", labels.join(","))
+                };
+                let count = scrape
+                    .iter()
+                    .find(|(ck, _)| *ck == count_key)
+                    .map(|(_, cv)| *cv)
+                    .unwrap_or_else(|| panic!("no _count for {k}"));
+                assert_eq!(*v, count, "+Inf bucket == _count for {k}");
+            }
+        }
+    }
+    // cumulative monotonicity: consecutive _bucket lines of one series
+    // never decrease (they are rendered in ascending-le order)
+    let mut prev: Option<(String, f64)> = None;
+    for (k, v) in &scrape {
+        let is_bucket = k.split('{').next().unwrap().ends_with("_bucket");
+        if !is_bucket {
+            prev = None;
+            continue;
+        }
+        let series: String =
+            k.split(',').filter(|p| !p.contains("le=")).collect::<Vec<_>>().join(",");
+        if let Some((pk, pv)) = &prev {
+            if *pk == series {
+                assert!(v >= pv, "bucket counts must be cumulative: {k} {v} < {pv}");
+            }
+        }
+        prev = Some((series, *v));
+    }
+}
+
+#[test]
+fn metrics_stay_well_formed_and_monotone_under_churn() {
+    let (stack, router) = online_stack(400, 17);
+    let handle = Server::spawn(stack, server_cfg()).expect("spawn server");
+    let addr = handle.addr().to_string();
+
+    let churn = |n_queries: usize, seed: u64| {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut c = HttpClient::connect_retry(&addr, Duration::from_secs(5)).unwrap();
+        c.set_timeout(Duration::from_secs(10)).unwrap();
+        let mut ws = Vec::new();
+        let mut hits = Vec::new();
+        for i in 0..n_queries {
+            if i % 5 == 4 {
+                // interleave mutations so gauge-backed families move too
+                let id = rng.below(400) as u32;
+                let path = if rng.bernoulli(0.5) { "/insert" } else { "/remove" };
+                let resp = c.post(path, &protocol::id_body(id)).unwrap();
+                assert_eq!(resp.status, 200);
+            }
+            let w = unit_vec(&mut rng, DIM);
+            let resp = c.post("/query", &protocol::query_body(&w)).unwrap();
+            assert_eq!(resp.status, 200);
+            hits.push(protocol::parse_hit(&resp.body).unwrap());
+            ws.push(w);
+        }
+        (ws, hits)
+    };
+
+    let mut mc = HttpClient::connect_retry(&addr, Duration::from_secs(5)).unwrap();
+    mc.set_timeout(Duration::from_secs(10)).unwrap();
+
+    let (ws, wire_hits) = churn(25, 100);
+    let r1 = mc.get("/metrics").expect("first scrape");
+    assert_eq!(r1.status, 200);
+    let t1 = String::from_utf8(r1.body).expect("exposition is utf-8");
+    assert_well_formed(&t1);
+    let s1 = chh::obs::parse_scrape(&t1);
+
+    churn(25, 200);
+    let r2 = mc.get("/metrics").expect("second scrape");
+    let t2 = String::from_utf8(r2.body).unwrap();
+    assert_well_formed(&t2);
+    let s2 = chh::obs::parse_scrape(&t2);
+
+    // every counter-like series (totals, hist buckets/counts/sums) that
+    // existed in scrape 1 is monotone non-decreasing in scrape 2
+    let mut compared = 0usize;
+    for (k, v1) in &s1 {
+        let name = k.split('{').next().unwrap();
+        let counterish = name.ends_with("_total")
+            || name.ends_with("_bucket")
+            || name.ends_with("_count")
+            || name.ends_with("_sum");
+        if !counterish {
+            continue;
+        }
+        let v2 = s2
+            .iter()
+            .find(|(k2, _)| k2 == k)
+            .map(|(_, v)| *v)
+            .unwrap_or_else(|| panic!("series {k} vanished between scrapes"));
+        assert!(v2 >= *v1, "counter went backwards: {k} {v1} -> {v2}");
+        compared += 1;
+    }
+    assert!(compared > 50, "expected a rich counter surface, compared {compared}");
+
+    // the load is visible: 50 queries served, stage hists observed them
+    let q = chh::obs::series_value(&s2, "chh_http_requests_total", "route=\"/query\"");
+    assert_eq!(q, Some(50.0));
+    for stage in ["batch_wait", "serialize"] {
+        let label = format!("stage=\"{stage}\"");
+        let n = chh::obs::series_value(&s2, "chh_stage_seconds_count", &label);
+        assert_eq!(n, Some(50.0), "per-request stage {stage}");
+    }
+    for stage in ["encode", "probe", "scan", "merge"] {
+        let label = format!("stage=\"{stage}\"");
+        let n = chh::obs::series_value(&s2, "chh_stage_seconds_count", &label).unwrap();
+        assert!(
+            (1.0..=50.0).contains(&n),
+            "batch-level stage {stage} observed per flush, got {n}"
+        );
+    }
+    assert_eq!(
+        chh::obs::series_value(&s2, "chh_build_info", ""),
+        Some(1.0),
+        "build info gauge present"
+    );
+    assert!(
+        chh::obs::series_value(&s2, "chh_index_points", "").unwrap() > 0.0,
+        "index size gauge present"
+    );
+
+    // observability must not change answers: the traced wire responses
+    // are bit-identical to a direct pooled router call
+    let reqs: Vec<QueryRequest> =
+        ws.iter().map(|w| QueryRequest { w: w.clone(), exclude: None }).collect();
+    let direct = router.query_batch_pooled(&reqs, &Pool::new(2));
+    for (i, (wh, dh)) in wire_hits.iter().zip(direct.iter()).enumerate() {
+        assert_eq!(
+            wh.best.map(|(id, m)| (id, m.to_bits())),
+            dh.best.map(|(id, m)| (id, m.to_bits())),
+            "traced query {i} must stay bit-identical"
+        );
+        assert_eq!(wh.scanned, dh.scanned, "query {i} scanned");
+    }
+
+    drop(mc);
+    handle.shutdown();
+}
+
+#[test]
+fn request_ids_round_trip_and_are_generated_when_absent() {
+    let (stack, _router) = online_stack(200, 23);
+    let handle = Server::spawn(stack, server_cfg()).expect("spawn server");
+    let addr = handle.addr().to_string();
+    let mut c = HttpClient::connect_retry(&addr, Duration::from_secs(5)).unwrap();
+    c.set_timeout(Duration::from_secs(10)).unwrap();
+    let body = protocol::query_body(&[0.5; DIM]);
+
+    // client-supplied id is echoed verbatim
+    let resp = c
+        .request_with_id("POST", "/query", body.as_bytes(), "trace-me-42")
+        .expect("query with id");
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.request_id.as_deref(), Some("trace-me-42"));
+
+    // absent id: the server generates one (16 hex chars) and echoes it
+    let resp = c.post("/query", &body).expect("query without id");
+    assert_eq!(resp.status, 200);
+    let rid = resp.request_id.expect("server generated a request id");
+    assert_eq!(rid.len(), 16, "generated id is 16 hex chars: {rid:?}");
+    assert!(rid.chars().all(|ch| ch.is_ascii_hexdigit()), "hex id: {rid:?}");
+
+    // distinct requests get distinct generated ids
+    let rid2 = c.post("/query", &body).unwrap().request_id.unwrap();
+    assert_ne!(rid, rid2);
+
+    // errors are tagged too — a 404 still echoes the id
+    let resp = c.request_with_id("POST", "/nope", b"{}", "err-id-7").unwrap();
+    assert_eq!(resp.status, 404);
+    assert_eq!(resp.request_id.as_deref(), Some("err-id-7"));
+    drop(c);
+    handle.shutdown();
+}
+
+#[test]
+fn slow_log_captures_stage_breakdown_and_rotates_ids_through() {
+    let dir = std::env::temp_dir().join(format!("chh_obs_slow_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let log_path = dir.join("slow.jsonl");
+
+    // a lone query holds in the batcher for max_wait, so with a 30ms
+    // hold and a 5ms threshold every query is deterministically "slow"
+    let cfg = ServerConfig {
+        batch: BatcherConfig {
+            max_batch: 64,
+            max_wait: Duration::from_millis(30),
+            queue_cap: 256,
+        },
+        slow_ms: 5,
+        slow_log: Some(log_path.clone()),
+        ..server_cfg()
+    };
+    let (stack, _router) = online_stack(200, 29);
+    let handle = Server::spawn(stack, cfg).expect("spawn server");
+    let addr = handle.addr().to_string();
+    let mut c = HttpClient::connect_retry(&addr, Duration::from_secs(5)).unwrap();
+    c.set_timeout(Duration::from_secs(10)).unwrap();
+    let mut sent_ids = Vec::new();
+    for i in 0..3 {
+        let id = format!("slowtest-{i:07}");
+        let resp = c
+            .request_with_id("POST", "/query", protocol::query_body(&[0.5; DIM]).as_bytes(), &id)
+            .expect("slow query");
+        assert_eq!(resp.status, 200);
+        sent_ids.push(id);
+    }
+    drop(c);
+    handle.shutdown();
+
+    let text = std::fs::read_to_string(&log_path).expect("slow log written");
+    let lines: Vec<&str> = text.lines().collect();
+    assert!(lines.len() >= 3, "all 3 held queries logged, got {}", lines.len());
+    for line in &lines {
+        let v = chh::jsonio::Json::parse(line).expect("slow-log line is JSON");
+        assert_eq!(v.get("route").and_then(|x| x.as_str()), Some("/query"));
+        assert_eq!(v.get("status").and_then(|x| x.as_usize()), Some(200));
+        let total = v.get("total_us").and_then(|x| x.as_f64()).unwrap();
+        assert!(total >= 5_000.0, "logged request crossed the threshold: {total}");
+        let stages = v.get("stages_us").expect("stage breakdown present");
+        let wait = stages.get("batch_wait").and_then(|x| x.as_f64()).unwrap();
+        assert!(wait >= 25_000.0, "batch_wait dominates the hold: {wait}");
+        for s in ["encode", "probe", "scan", "merge", "serialize"] {
+            assert!(stages.get(s).is_some(), "stage {s} in breakdown");
+        }
+    }
+    // the logged request ids are exactly the ones the client sent
+    let logged: Vec<String> = lines
+        .iter()
+        .map(|l| {
+            chh::jsonio::Json::parse(l)
+                .unwrap()
+                .get("request_id")
+                .and_then(|x| x.as_str())
+                .unwrap()
+                .to_string()
+        })
+        .collect();
+    for id in &sent_ids {
+        assert!(logged.contains(id), "sent id {id} appears in the slow log");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

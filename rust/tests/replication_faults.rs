@@ -50,6 +50,8 @@ fn server_cfg() -> ServerConfig {
         },
         pool_workers: 2,
         idle_timeout: Duration::from_millis(300),
+        slow_ms: 0,
+        slow_log: None,
     }
 }
 
