@@ -693,7 +693,8 @@ fn cmd_serve_http(rest: &[String]) -> anyhow::Result<()> {
     .opt("max-batch", "32", "micro-batcher: flush at this many queued queries")
     .opt("max-wait-us", "200", "micro-batcher: flush once the oldest query waited this long")
     .opt("queue-cap", "1024", "micro-batcher admission queue bound (overflow -> 503)")
-    .opt("max-conns", "256", "concurrent connection cap (overflow -> 503)")
+    .opt("max-conns", "4096", "concurrent connection cap (overflow -> 503)")
+    .opt("conn-workers", "16", "event-loop request workers (the transport's thread budget)")
     .opt("wal-dir", "", "online: durable directory — journal mutations, recover on restart")
     .opt("fsync", "always", "wal durability of acked mutations: always | every:<n> | interval:<ms>")
     .opt(
@@ -946,6 +947,7 @@ fn cmd_serve_http(rest: &[String]) -> anyhow::Result<()> {
     let server_cfg = ServerConfig {
         addr: p.str("addr").to_string(),
         max_conns: p.usize("max-conns")?.max(1),
+        conn_workers: p.usize("conn-workers")?.max(1),
         batch: BatcherConfig {
             max_batch,
             max_wait: std::time::Duration::from_micros(max_wait_us),
@@ -1094,7 +1096,7 @@ fn cmd_recover(rest: &[String]) -> anyhow::Result<()> {
 
 fn cmd_loadgen(rest: &[String]) -> anyhow::Result<()> {
     use chh::metrics::Histogram;
-    use chh::server::protocol;
+    use chh::server::{binproto, protocol};
     use chh::server::HttpClient;
     use std::time::{Duration, Instant};
     let args = Args::new("chh loadgen", "open/closed-loop load generator for chh serve-http")
@@ -1115,6 +1117,12 @@ fn cmd_loadgen(rest: &[String]) -> anyhow::Result<()> {
             "send this fraction of requests as /insert + /remove mutations (online servers)",
         )
         .opt("seed", "2012", "rng seed for the query hyperplanes")
+        .opt(
+            "protocol",
+            "json",
+            "wire protocol: json | binary | both (both replays the identical request \
+             stream on each wire and compares answers + throughput side by side)",
+        )
         .opt("json", "", "write machine-readable results to this path")
         .flag("shutdown", "POST /shutdown to the server when done");
     let p = args.parse(rest).map_err(|h| anyhow::anyhow!("{h}"))?;
@@ -1134,6 +1142,15 @@ fn cmd_loadgen(rest: &[String]) -> anyhow::Result<()> {
         "--mutate-frac must be in [0, 1]"
     );
     let seed = p.u64("seed")?;
+    let proto_str = p.str("protocol").to_string();
+    // each pass is `binary?`; `both` runs json first, then binary, with
+    // identical rng seeds so the two wires see the same request stream
+    let passes: Vec<bool> = match proto_str.as_str() {
+        "json" => vec![false],
+        "binary" => vec![true],
+        "both" => vec![false, true],
+        other => anyhow::bail!("unknown --protocol '{other}' (json|binary|both)"),
+    };
     // learn the index dimensionality (and readiness) from /stats
     let mut probe = HttpClient::connect_retry(&addr, Duration::from_secs(10))
         .map_err(|e| anyhow::anyhow!("connecting to {addr}: {e}"))?;
@@ -1185,7 +1202,7 @@ fn cmd_loadgen(rest: &[String]) -> anyhow::Result<()> {
         read_addrs.push(r.to_string());
     }
     println!(
-        "loadgen: {queries} queries (dim={dim}) -> {addr} [{server_mode}]  \
+        "loadgen: {queries} queries (dim={dim}, wire={proto_str}) -> {addr} [{server_mode}]  \
          {} loop, {conc} connections{}{}",
         if open_loop { "open" } else { "closed" },
         if open_loop { format!(", target {rate:.0} q/s") } else { String::new() },
@@ -1204,14 +1221,24 @@ fn cmd_loadgen(rest: &[String]) -> anyhow::Result<()> {
     struct Conn {
         addr: String,
         client: Option<HttpClient>,
+        /// TCP connects performed — a keep-alive regression shows up as
+        /// this count climbing toward the request count
+        established: usize,
+    }
+
+    /// One request body on either wire; [`Conn::post`] picks the matching
+    /// `HttpClient` entry point (and `Content-Type`) per variant.
+    enum Body {
+        Json(String),
+        Bin(Vec<u8>),
     }
 
     impl Conn {
         fn new(addr: String) -> Conn {
-            Conn { addr, client: None }
+            Conn { addr, client: None, established: 0 }
         }
 
-        fn post(&mut self, path: &str, body: &str) -> Option<chh::server::http::Response> {
+        fn post(&mut self, path: &str, body: &Body) -> Option<chh::server::http::Response> {
             if self.client.is_none() {
                 // bounded connect: a dead replica in the rotation costs
                 // 1s per touch, not the OS's multi-minute SYN schedule
@@ -1219,9 +1246,14 @@ fn cmd_loadgen(rest: &[String]) -> anyhow::Result<()> {
                     HttpClient::connect_with_timeout(&self.addr, Duration::from_secs(1)).ok()?;
                 let _ = c.set_timeout(Duration::from_secs(30));
                 self.client = Some(c);
+                self.established += 1;
             }
             let c = self.client.as_mut().expect("client just connected");
-            match c.post(path, body) {
+            let sent = match body {
+                Body::Json(s) => c.post(path, s),
+                Body::Bin(b) => c.post_binary(path, b),
+            };
+            match sent {
                 Ok(resp) => {
                     if !resp.keep_alive {
                         self.client = None;
@@ -1236,122 +1268,278 @@ fn cmd_loadgen(rest: &[String]) -> anyhow::Result<()> {
         }
     }
 
-    let t0 = Instant::now();
-    let mut handles = Vec::new();
-    for t in 0..conc {
-        let n_t = queries / conc + usize::from(t < queries % conc);
-        let addr = addr.clone();
-        let read_addrs = read_addrs.clone();
-        handles.push(std::thread::spawn(
-            move || -> (Histogram, usize, usize, usize, usize) {
-                let mut h = Histogram::new();
-                let (mut ok, mut rejected, mut failed) = (0usize, 0usize, 0usize);
-                let mut mok = 0usize;
-                let mut rng = Rng::seed_from_u64(seed ^ (0x9E3779B9 + t as u64));
-                let mut primary = Conn::new(addr);
-                let mut readers: Vec<Conn> =
-                    read_addrs.into_iter().map(Conn::new).collect();
-                // the server may still be binding: prime the primary
-                // connection with a retry window before the timed run
-                if let Ok(c) = HttpClient::connect_retry(&primary.addr, Duration::from_secs(5))
-                {
-                    let _ = c.set_timeout(Duration::from_secs(30));
-                    primary.client = Some(c);
+    /// Digest of one answer's observable semantics — id, margin bits,
+    /// scanned/probed counters — FNV-1a over a canonical byte string.
+    /// Per-answer digests are XOR-folded across requests and threads, so
+    /// the fold is order-independent and two passes over the same request
+    /// stream on different wires must produce the same fingerprint.
+    fn answer_fingerprint(binary: bool, topk: bool, body: &[u8]) -> Option<u64> {
+        fn eat(h: &mut u64, bytes: &[u8]) {
+            for &b in bytes {
+                *h ^= u64::from(b);
+                *h = h.wrapping_mul(0x100000001b3);
+            }
+        }
+        let mut h = 0xcbf29ce484222325u64;
+        if topk {
+            let hits = if binary {
+                binproto::decode_topk_hits(body).ok()?
+            } else {
+                protocol::parse_topk_hits(body).ok()?
+            };
+            eat(&mut h, &(hits.len() as u64).to_le_bytes());
+            for (id, m) in hits {
+                eat(&mut h, &(id as u64).to_le_bytes());
+                eat(&mut h, &m.to_bits().to_le_bytes());
+            }
+        } else {
+            let hit = if binary {
+                binproto::decode_hit(body).ok()?
+            } else {
+                protocol::parse_hit(body).ok()?
+            };
+            match hit.best {
+                Some((id, m)) => {
+                    eat(&mut h, &[1]);
+                    eat(&mut h, &(id as u64).to_le_bytes());
+                    eat(&mut h, &m.to_bits().to_le_bytes());
                 }
-                // stagger the rotation so concurrent threads spread
-                // their first reads across the fleet
-                let mut rr = t;
-                let interval = if open_loop { conc as f64 / rate.max(1e-9) } else { 0.0 };
-                let start = Instant::now();
-                for i in 0..n_t {
-                    if open_loop {
-                        let due = start + Duration::from_secs_f64(i as f64 * interval);
-                        let now = Instant::now();
-                        if due > now {
-                            std::thread::sleep(due - now);
-                        }
-                    }
-                    let is_mutation = mutate_frac > 0.0 && rng.bernoulli(mutate_frac);
-                    let (path, body) = if is_mutation {
-                        // 50/50 insert/remove over random store ids —
-                        // the durable-serving churn shape
-                        let id = rng.below(points) as u32;
-                        if rng.bernoulli(0.5) {
-                            ("/insert", protocol::id_body(id))
-                        } else {
-                            ("/remove", protocol::id_body(id))
-                        }
-                    } else {
-                        let w = chh::testing::unit_vec(&mut rng, dim);
-                        if topk > 0 {
-                            ("/query_topk", protocol::topk_body(&w, topk))
-                        } else {
-                            ("/query", protocol::query_body(&w))
-                        }
-                    };
-                    let q0 = Instant::now();
-                    // mutations always hit the primary (replicas answer
-                    // them 421); reads round-robin across the fleet
-                    let resp = if is_mutation {
-                        primary.post(path, &body)
-                    } else {
-                        let k = rr % readers.len();
-                        rr += 1;
-                        readers[k].post(path, &body)
-                    };
-                    match resp {
-                        Some(resp) => match resp.status {
-                            200 if is_mutation => mok += 1,
-                            200 => {
-                                h.record(q0.elapsed().as_secs_f64());
-                                ok += 1;
-                            }
-                            503 => rejected += 1,
-                            _ => failed += 1,
-                        },
-                        None => failed += 1,
-                    }
-                }
-                (h, ok, rejected, failed, mok)
-            },
-        ));
+                None => eat(&mut h, &[0]),
+            }
+            eat(&mut h, &(hit.scanned as u64).to_le_bytes());
+            eat(&mut h, &(hit.probed as u64).to_le_bytes());
+            eat(&mut h, &[u8::from(hit.nonempty)]);
+        }
+        Some(h)
     }
-    let mut hist = Histogram::new();
-    let (mut ok, mut rejected, mut failed, mut mutations) = (0usize, 0usize, 0usize, 0usize);
-    for hd in handles {
-        let (h, o, r, f, m) = hd.join().expect("loadgen worker");
-        hist.merge(&h);
-        ok += o;
-        rejected += r;
-        failed += f;
-        mutations += m;
+
+    /// Accumulated result of one protocol pass.
+    struct PassOut {
+        proto: &'static str,
+        hist: Histogram,
+        ok: usize,
+        rejected: usize,
+        failed: usize,
+        mutations: usize,
+        conns: usize,
+        fingerprint: u64,
+        secs: f64,
+    }
+
+    let t0 = Instant::now();
+    let mut pass_outs: Vec<PassOut> = Vec::new();
+    for (pi, &binary) in passes.iter().enumerate() {
+        let proto = if binary { "binary" } else { "json" };
+        if passes.len() > 1 {
+            println!("loadgen: pass {}/{} ({proto} wire)", pi + 1, passes.len());
+        }
+        let pass_t0 = Instant::now();
+        let mut handles = Vec::new();
+        for t in 0..conc {
+            let n_t = queries / conc + usize::from(t < queries % conc);
+            let addr = addr.clone();
+            let read_addrs = read_addrs.clone();
+            handles.push(std::thread::spawn(
+                move || -> (Histogram, usize, usize, usize, usize, usize, u64) {
+                    let mut h = Histogram::new();
+                    let (mut ok, mut rejected, mut failed) = (0usize, 0usize, 0usize);
+                    let mut mok = 0usize;
+                    let mut fp = 0u64;
+                    // the seed depends on the thread, not the pass: under
+                    // `both` each wire replays the identical request
+                    // stream, so the answer fingerprints must agree
+                    let mut rng = Rng::seed_from_u64(seed ^ (0x9E3779B9 + t as u64));
+                    let mut primary = Conn::new(addr);
+                    let mut readers: Vec<Conn> =
+                        read_addrs.into_iter().map(Conn::new).collect();
+                    // the server may still be binding: prime the primary
+                    // connection with a retry window before the timed run
+                    if let Ok(c) =
+                        HttpClient::connect_retry(&primary.addr, Duration::from_secs(5))
+                    {
+                        let _ = c.set_timeout(Duration::from_secs(30));
+                        primary.client = Some(c);
+                        primary.established += 1;
+                    }
+                    // stagger the rotation so concurrent threads spread
+                    // their first reads across the fleet
+                    let mut rr = t;
+                    let interval = if open_loop { conc as f64 / rate.max(1e-9) } else { 0.0 };
+                    let start = Instant::now();
+                    for i in 0..n_t {
+                        if open_loop {
+                            let due = start + Duration::from_secs_f64(i as f64 * interval);
+                            let now = Instant::now();
+                            if due > now {
+                                std::thread::sleep(due - now);
+                            }
+                        }
+                        let is_mutation = mutate_frac > 0.0 && rng.bernoulli(mutate_frac);
+                        let (path, body) = if is_mutation {
+                            // 50/50 insert/remove over random store ids —
+                            // the durable-serving churn shape
+                            let id = rng.below(points) as u32;
+                            let (path, tag) = if rng.bernoulli(0.5) {
+                                ("/insert", binproto::TAG_INSERT)
+                            } else {
+                                ("/remove", binproto::TAG_REMOVE)
+                            };
+                            let body = if binary {
+                                Body::Bin(binproto::encode_id(tag, id))
+                            } else {
+                                Body::Json(protocol::id_body(id))
+                            };
+                            (path, body)
+                        } else {
+                            let w = chh::testing::unit_vec(&mut rng, dim);
+                            if topk > 0 {
+                                let body = if binary {
+                                    Body::Bin(binproto::encode_topk(&w, topk, None))
+                                } else {
+                                    Body::Json(protocol::topk_body(&w, topk))
+                                };
+                                ("/query_topk", body)
+                            } else {
+                                let body = if binary {
+                                    Body::Bin(binproto::encode_query(&w, None))
+                                } else {
+                                    Body::Json(protocol::query_body(&w))
+                                };
+                                ("/query", body)
+                            }
+                        };
+                        let q0 = Instant::now();
+                        // mutations always hit the primary (replicas answer
+                        // them 421); reads round-robin across the fleet
+                        let resp = if is_mutation {
+                            primary.post(path, &body)
+                        } else {
+                            let k = rr % readers.len();
+                            rr += 1;
+                            readers[k].post(path, &body)
+                        };
+                        match resp {
+                            Some(resp) => match resp.status {
+                                200 if is_mutation => mok += 1,
+                                200 => match answer_fingerprint(binary, topk > 0, &resp.body) {
+                                    Some(d) => {
+                                        h.record(q0.elapsed().as_secs_f64());
+                                        ok += 1;
+                                        fp ^= d;
+                                    }
+                                    // a 200 whose body does not decode is
+                                    // a wire bug, not a slow request
+                                    None => failed += 1,
+                                },
+                                503 => rejected += 1,
+                                _ => failed += 1,
+                            },
+                            None => failed += 1,
+                        }
+                    }
+                    let conns = primary.established
+                        + readers.iter().map(|r| r.established).sum::<usize>();
+                    (h, ok, rejected, failed, mok, conns, fp)
+                },
+            ));
+        }
+        let mut hist = Histogram::new();
+        let (mut ok, mut rejected, mut failed, mut mutations, mut conns) =
+            (0usize, 0usize, 0usize, 0usize, 0usize);
+        let mut fp = 0u64;
+        for hd in handles {
+            let (h, o, r, f, m, c, tf) = hd.join().expect("loadgen worker");
+            hist.merge(&h);
+            ok += o;
+            rejected += r;
+            failed += f;
+            mutations += m;
+            conns += c;
+            fp ^= tf;
+        }
+        pass_outs.push(PassOut {
+            proto,
+            hist,
+            ok,
+            rejected,
+            failed,
+            mutations,
+            conns,
+            fingerprint: fp,
+            secs: pass_t0.elapsed().as_secs_f64(),
+        });
     }
     let secs = t0.elapsed().as_secs_f64();
-    let (p50, p95, p99) = (
-        hist.percentile(50.0) * 1e6,
-        hist.percentile(95.0) * 1e6,
-        hist.percentile(99.0) * 1e6,
-    );
-    let rows = vec![vec![
-        format!("{ok}"),
-        format!("{rejected}"),
-        format!("{failed}"),
-        format!("{:.0}", ok as f64 / secs.max(1e-9)),
-        format!("{p50:.1}"),
-        format!("{p95:.1}"),
-        format!("{p99:.1}"),
-        format!("{:.1}", hist.mean() * 1e6),
-    ]];
+    let rows: Vec<Vec<String>> = pass_outs
+        .iter()
+        .map(|po| {
+            vec![
+                po.proto.to_string(),
+                format!("{}", po.ok),
+                format!("{}", po.rejected),
+                format!("{}", po.failed),
+                format!("{:.0}", po.ok as f64 / po.secs.max(1e-9)),
+                format!("{:.1}", po.hist.percentile(50.0) * 1e6),
+                format!("{:.1}", po.hist.percentile(95.0) * 1e6),
+                format!("{:.1}", po.hist.percentile(99.0) * 1e6),
+                format!("{:.1}", po.hist.mean() * 1e6),
+                format!("{}", po.conns),
+            ]
+        })
+        .collect();
     chh::report::print_rows(
         &format!(
             "loadgen: {} loop, {conc} connections, {secs:.2}s wall",
             if open_loop { "open" } else { "closed" }
         ),
-        &["ok", "503", "failed", "qps", "p50(us)", "p95(us)", "p99(us)", "mean(us)"],
+        &[
+            "proto", "ok", "503", "failed", "qps", "p50(us)", "p95(us)", "p99(us)", "mean(us)",
+            "conns",
+        ],
         &rows,
+    );
+    let ok: usize = pass_outs.iter().map(|po| po.ok).sum();
+    let rejected: usize = pass_outs.iter().map(|po| po.rejected).sum();
+    let failed: usize = pass_outs.iter().map(|po| po.failed).sum();
+    let mutations: usize = pass_outs.iter().map(|po| po.mutations).sum();
+    let conns_total: usize = pass_outs.iter().map(|po| po.conns).sum();
+    let mut hist = Histogram::new();
+    for po in &pass_outs {
+        hist.merge(&po.hist);
+    }
+    let (p50, p95, p99) = (
+        hist.percentile(50.0) * 1e6,
+        hist.percentile(95.0) * 1e6,
+        hist.percentile(99.0) * 1e6,
     );
     if mutate_frac > 0.0 {
         println!("mutations: {mutations} applied (acked durable per the server's fsync policy)");
+    }
+    if pass_outs.len() == 2 {
+        let (j, b) = (&pass_outs[0], &pass_outs[1]);
+        println!(
+            "binary vs json: {:.2}x throughput ({:.0} vs {:.0} qps), p99 {:.1}us vs {:.1}us",
+            (b.ok as f64 / b.secs.max(1e-9)) / (j.ok as f64 / j.secs.max(1e-9)).max(1e-9),
+            b.ok as f64 / b.secs.max(1e-9),
+            j.ok as f64 / j.secs.max(1e-9),
+            b.hist.percentile(99.0) * 1e6,
+            j.hist.percentile(99.0) * 1e6,
+        );
+        // with no mutations the index never changes between passes, so
+        // the two wires must return bit-identical answers (a shed 503
+        // would drop one answer from a fold, hence the clean-run guard)
+        if mutate_frac == 0.0 && j.failed + b.failed + j.rejected + b.rejected == 0 {
+            anyhow::ensure!(
+                j.fingerprint == b.fingerprint,
+                "protocol parity violation: json answer fingerprint {:#018x} != binary {:#018x}",
+                j.fingerprint,
+                b.fingerprint
+            );
+            println!(
+                "parity: json and binary answers bit-identical (fingerprint {:#018x})",
+                j.fingerprint
+            );
+        }
     }
     // post-run scrape: server-side stage deltas sit next to the
     // client-side percentiles, so "where did the time go" needs no
@@ -1409,21 +1597,51 @@ fn cmd_loadgen(rest: &[String]) -> anyhow::Result<()> {
     let json_path = p.str("json");
     if !json_path.is_empty() {
         use chh::jsonio::{obj, Json};
+        // one sub-document per wire pass — the serving-perf trajectory
+        // (BENCH_serving.json) reads qps/p99 for each protocol from here
+        let proto_docs: Vec<(&str, Json)> = pass_outs
+            .iter()
+            .map(|po| {
+                (
+                    po.proto,
+                    obj(vec![
+                        ("ok", Json::from(po.ok)),
+                        ("rejected_503", Json::from(po.rejected)),
+                        ("failed", Json::from(po.failed)),
+                        ("mutations_ok", Json::from(po.mutations)),
+                        ("wall_secs", Json::Num(po.secs)),
+                        ("qps", Json::Num(po.ok as f64 / po.secs.max(1e-9))),
+                        ("p50_us", Json::Num(po.hist.percentile(50.0) * 1e6)),
+                        ("p95_us", Json::Num(po.hist.percentile(95.0) * 1e6)),
+                        ("p99_us", Json::Num(po.hist.percentile(99.0) * 1e6)),
+                        ("mean_us", Json::Num(po.hist.mean() * 1e6)),
+                        ("connections_established", Json::from(po.conns)),
+                        (
+                            "answer_fingerprint",
+                            Json::from(format!("{:#018x}", po.fingerprint)),
+                        ),
+                    ]),
+                )
+            })
+            .collect();
         let doc = obj(vec![
             ("tool", Json::from("loadgen")),
             ("mode", Json::from(if open_loop { "open" } else { "closed" })),
+            ("protocol", Json::from(proto_str.as_str())),
             ("queries", Json::from(queries)),
             ("concurrency", Json::from(conc)),
             ("ok", Json::from(ok)),
             ("mutations_ok", Json::from(mutations)),
             ("rejected_503", Json::from(rejected)),
             ("failed", Json::from(failed)),
+            ("connections_established", Json::from(conns_total)),
             ("wall_secs", Json::Num(secs)),
             ("qps", Json::Num(ok as f64 / secs.max(1e-9))),
             ("p50_us", Json::Num(p50)),
             ("p95_us", Json::Num(p95)),
             ("p99_us", Json::Num(p99)),
             ("mean_us", Json::Num(hist.mean() * 1e6)),
+            ("protocols", obj(proto_docs)),
             // server-side /metrics deltas (null if a scrape failed)
             ("server", server_json.unwrap_or(Json::Null)),
         ]);

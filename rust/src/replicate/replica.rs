@@ -16,6 +16,13 @@
 //! resync the replica keeps answering reads — stale, and flagged
 //! `resyncing` in `/stats` — but it only ever holds entries that came
 //! from fsynced primary state, so an unacknowledged op is never served.
+//!
+//! Transport: the stream and snapshot payloads are already binary
+//! ([`super::wire`] CHWS/CHWB frames over plain HTTP bodies) — the
+//! query-path binary protocol in [`crate::server::binproto`] follows the
+//! same length-prefixed total-decoding idiom. The tailer's `HttpClient`
+//! carries read *and* write socket timeouts (`set_timeout`), so a hung
+//! primary surfaces as a reconnect, never a parked tailer thread.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};

@@ -1,0 +1,585 @@
+//! Binary wire protocol of the serving front-end.
+//!
+//! The JSON protocol in [`crate::server::protocol`] spends most of a
+//! query's bytes (and a measurable slice of its CPU) on shortest-decimal
+//! float text; the paper's whole speed argument is compact codes and
+//! cheap bitwise work, so the hot routes also speak a length-prefixed
+//! binary encoding negotiated via `Content-Type:
+//! application/x-chh-binary`. Floats travel as raw little-endian IEEE-754
+//! bits — bit-exact by construction, no `-0.0`/round-trip machinery
+//! needed — and decoding is *total*: truncation at any byte, a hostile
+//! length field, a wrong magic/version/tag, or trailing junk is a clean
+//! [`ProtoError`] (HTTP 400), never a panic. The framing idiom (magic +
+//! version header, checked cursor, trailing-bytes rejection) is the same
+//! one [`crate::replicate::wire`] uses for CHWS/CHWB.
+//!
+//! ```text
+//! header      "CHBP" | u32 ver | u32 tag                      (12 bytes)
+//! query    1  hdr | u32 flags | u32 dim | dim × f32-bits
+//!             [flags bit0: u64 n | n × u64 exclude ids]
+//! topk     2  hdr | u32 flags | u32 t | u32 dim | dim × f32-bits
+//!             [flags bit0: u64 n | n × u64 exclude ids]
+//! insert   3  hdr | u32 id
+//! remove   4  hdr | u32 id
+//! hit     17  hdr | u32 flags (bit0 has_best, bit1 nonempty)
+//!             [bit0: u64 id | u32 margin-bits] | u64 scanned | u64 probed
+//! topk …  18  hdr | u64 count | count × (u64 id | u32 margin-bits)
+//! ack     19  hdr | u32 applied | u32 id | u64 live
+//! ```
+//!
+//! Version policy: `VERSION` bumps on any layout change; a decoder only
+//! accepts its own version (clients fall back to JSON, which is always
+//! served). Request tags and response tags live in disjoint ranges so a
+//! cross-wired client gets "unexpected tag", not garbage fields.
+
+use std::collections::HashSet;
+use std::sync::Arc;
+
+use crate::coordinator::QueryRequest;
+use crate::server::protocol::ProtoError;
+use crate::table::QueryHit;
+
+/// Frame magic: all binary serving bodies start with these 4 bytes.
+pub const MAGIC: &[u8; 4] = b"CHBP";
+/// Wire version; bumped on any layout change, never negotiated down.
+pub const VERSION: u32 = 1;
+
+/// Request tag: `POST /query`.
+pub const TAG_QUERY: u32 = 1;
+/// Request tag: `POST /query_topk`.
+pub const TAG_TOPK: u32 = 2;
+/// Request tag: `POST /insert`.
+pub const TAG_INSERT: u32 = 3;
+/// Request tag: `POST /remove`.
+pub const TAG_REMOVE: u32 = 4;
+/// Response tag: a [`QueryHit`].
+pub const TAG_HIT: u32 = 17;
+/// Response tag: a top-`t` short list.
+pub const TAG_TOPK_HITS: u32 = 18;
+/// Response tag: an insert/remove acknowledgement.
+pub const TAG_ACK: u32 = 19;
+
+const FLAG_EXCLUDE: u32 = 1;
+const FLAG_HAS_BEST: u32 = 1;
+const FLAG_NONEMPTY: u32 = 2;
+
+// ───────────────────────── encode ─────────────────────────
+
+fn push_header(b: &mut Vec<u8>, tag: u32) {
+    b.extend_from_slice(MAGIC);
+    b.extend_from_slice(&VERSION.to_le_bytes());
+    b.extend_from_slice(&tag.to_le_bytes());
+}
+
+fn push_w(b: &mut Vec<u8>, w: &[f32]) {
+    b.extend_from_slice(&(w.len() as u32).to_le_bytes());
+    for x in w {
+        b.extend_from_slice(&x.to_bits().to_le_bytes());
+    }
+}
+
+fn push_exclude(b: &mut Vec<u8>, exclude: Option<&HashSet<usize>>) -> u32 {
+    let Some(ex) = exclude else { return 0 };
+    // sorted so the encoding of a given request is deterministic
+    let mut ids: Vec<u64> = ex.iter().map(|&id| id as u64).collect();
+    ids.sort_unstable();
+    b.extend_from_slice(&(ids.len() as u64).to_le_bytes());
+    for id in ids {
+        b.extend_from_slice(&id.to_le_bytes());
+    }
+    FLAG_EXCLUDE
+}
+
+/// Encode a `/query` body (client half — loadgen, tests, tools).
+pub fn encode_query(w: &[f32], exclude: Option<&HashSet<usize>>) -> Vec<u8> {
+    let mut b = Vec::with_capacity(20 + 4 * w.len());
+    push_header(&mut b, TAG_QUERY);
+    let mut tail = Vec::new();
+    let flags = push_exclude(&mut tail, exclude);
+    b.extend_from_slice(&flags.to_le_bytes());
+    push_w(&mut b, w);
+    b.extend_from_slice(&tail);
+    b
+}
+
+/// Encode a `/query_topk` body.
+pub fn encode_topk(w: &[f32], t: usize, exclude: Option<&HashSet<usize>>) -> Vec<u8> {
+    let mut b = Vec::with_capacity(24 + 4 * w.len());
+    push_header(&mut b, TAG_TOPK);
+    let mut tail = Vec::new();
+    let flags = push_exclude(&mut tail, exclude);
+    b.extend_from_slice(&flags.to_le_bytes());
+    b.extend_from_slice(&(t as u32).to_le_bytes());
+    push_w(&mut b, w);
+    b.extend_from_slice(&tail);
+    b
+}
+
+/// Encode an `/insert` ([`TAG_INSERT`]) or `/remove` ([`TAG_REMOVE`]) body.
+pub fn encode_id(tag: u32, id: u32) -> Vec<u8> {
+    let mut b = Vec::with_capacity(16);
+    push_header(&mut b, tag);
+    b.extend_from_slice(&id.to_le_bytes());
+    b
+}
+
+/// Encode a [`QueryHit`] response (server half).
+pub fn encode_hit(hit: &QueryHit) -> Vec<u8> {
+    let mut b = Vec::with_capacity(44);
+    push_header(&mut b, TAG_HIT);
+    let mut flags = 0u32;
+    if hit.best.is_some() {
+        flags |= FLAG_HAS_BEST;
+    }
+    if hit.nonempty {
+        flags |= FLAG_NONEMPTY;
+    }
+    b.extend_from_slice(&flags.to_le_bytes());
+    if let Some((id, m)) = hit.best {
+        b.extend_from_slice(&(id as u64).to_le_bytes());
+        b.extend_from_slice(&m.to_bits().to_le_bytes());
+    }
+    b.extend_from_slice(&(hit.scanned as u64).to_le_bytes());
+    b.extend_from_slice(&(hit.probed as u64).to_le_bytes());
+    b
+}
+
+/// Encode a `/query_topk` response.
+pub fn encode_topk_hits(hits: &[(usize, f32)]) -> Vec<u8> {
+    let mut b = Vec::with_capacity(20 + 12 * hits.len());
+    push_header(&mut b, TAG_TOPK_HITS);
+    b.extend_from_slice(&(hits.len() as u64).to_le_bytes());
+    for &(id, m) in hits {
+        b.extend_from_slice(&(id as u64).to_le_bytes());
+        b.extend_from_slice(&m.to_bits().to_le_bytes());
+    }
+    b
+}
+
+/// Encode an insert/remove acknowledgement: whether the mutation applied,
+/// the id it named, and the live point count afterwards.
+pub fn encode_ack(applied: bool, id: u32, live: u64) -> Vec<u8> {
+    let mut b = Vec::with_capacity(28);
+    push_header(&mut b, TAG_ACK);
+    b.extend_from_slice(&(applied as u32).to_le_bytes());
+    b.extend_from_slice(&id.to_le_bytes());
+    b.extend_from_slice(&live.to_le_bytes());
+    b
+}
+
+// ───────────────────────── decode ─────────────────────────
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], ProtoError> {
+        // checked: a hostile length field near usize::MAX must error,
+        // not wrap past the bounds check into a slice panic
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.b.len())
+            .ok_or_else(|| {
+                ProtoError::bad(format!("truncated binary message at byte {}", self.pos))
+            })?;
+        let s = &self.b[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32, ProtoError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, ProtoError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn remaining(&self) -> usize {
+        self.b.len() - self.pos
+    }
+
+    fn finish(&self) -> Result<(), ProtoError> {
+        if self.pos != self.b.len() {
+            return Err(ProtoError::bad(format!(
+                "binary message has {} trailing bytes",
+                self.b.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn header<'a>(b: &'a [u8], want_tag: u32, what: &str) -> Result<Cursor<'a>, ProtoError> {
+    let mut c = Cursor { b, pos: 0 };
+    if c.take(4)? != MAGIC {
+        return Err(ProtoError::bad(format!("bad magic — not a binary {what} message")));
+    }
+    let ver = c.u32()?;
+    if ver != VERSION {
+        return Err(ProtoError::bad(format!("unsupported binary wire version {ver}")));
+    }
+    let tag = c.u32()?;
+    if tag != want_tag {
+        return Err(ProtoError::bad(format!(
+            "unexpected tag {tag} — not a binary {what} message"
+        )));
+    }
+    Ok(c)
+}
+
+fn read_w(c: &mut Cursor, dim: usize) -> Result<Vec<f32>, ProtoError> {
+    let n = c.u32()? as usize;
+    if n != dim {
+        return Err(ProtoError::bad(format!("\"w\" has {n} dims, index expects {dim}")));
+    }
+    let mut w = Vec::with_capacity(n);
+    for _ in 0..n {
+        let x = f32::from_bits(c.u32()?);
+        // same validation contract as the JSON route: NaN/inf margins
+        // would poison the scan, so reject them at the wire
+        if !x.is_finite() {
+            return Err(ProtoError::bad("\"w\" entries must be finite f32s"));
+        }
+        w.push(x);
+    }
+    Ok(w)
+}
+
+fn read_exclude(
+    c: &mut Cursor,
+    flags: u32,
+) -> Result<Option<Arc<HashSet<usize>>>, ProtoError> {
+    if flags & FLAG_EXCLUDE == 0 {
+        return Ok(None);
+    }
+    let n = c.u64()?;
+    // bound before looping: a hostile count must fail fast, not spin
+    if n > (c.remaining() / 8) as u64 {
+        return Err(ProtoError::bad(format!("exclude count {n} exceeds message size")));
+    }
+    let mut set = HashSet::with_capacity(n as usize);
+    for _ in 0..n {
+        let id = c.u64()?;
+        set.insert(usize::try_from(id).map_err(|_| {
+            ProtoError::bad(format!("exclude id {id} exceeds this platform's usize"))
+        })?);
+    }
+    Ok(Some(Arc::new(set)))
+}
+
+/// Decode a binary `/query` body into a router request.
+pub fn decode_query(body: &[u8], dim: usize) -> Result<QueryRequest, ProtoError> {
+    let mut c = header(body, TAG_QUERY, "query")?;
+    let flags = c.u32()?;
+    let w = read_w(&mut c, dim)?;
+    let exclude = read_exclude(&mut c, flags)?;
+    c.finish()?;
+    Ok(QueryRequest { w, exclude })
+}
+
+/// Decode a binary `/query_topk` body: the request plus list length `t`.
+pub fn decode_topk(body: &[u8], dim: usize) -> Result<(QueryRequest, usize), ProtoError> {
+    let mut c = header(body, TAG_TOPK, "query_topk")?;
+    let flags = c.u32()?;
+    let t = c.u32()? as usize;
+    if t == 0 {
+        return Err(ProtoError::bad("\"t\" must be >= 1"));
+    }
+    let w = read_w(&mut c, dim)?;
+    let exclude = read_exclude(&mut c, flags)?;
+    c.finish()?;
+    Ok((QueryRequest { w, exclude }, t))
+}
+
+/// Decode a binary `/insert` or `/remove` body (tag names the route).
+pub fn decode_id(body: &[u8], tag: u32) -> Result<u32, ProtoError> {
+    let what = if tag == TAG_INSERT { "insert" } else { "remove" };
+    let mut c = header(body, tag, what)?;
+    let id = c.u32()?;
+    c.finish()?;
+    Ok(id)
+}
+
+/// Decode a binary [`QueryHit`] response (client half).
+pub fn decode_hit(body: &[u8]) -> Result<QueryHit, ProtoError> {
+    let mut c = header(body, TAG_HIT, "hit")?;
+    let flags = c.u32()?;
+    let best = if flags & FLAG_HAS_BEST != 0 {
+        let id = c.u64()?;
+        let m = f32::from_bits(c.u32()?);
+        let id = usize::try_from(id)
+            .map_err(|_| ProtoError::bad(format!("hit id {id} exceeds usize")))?;
+        Some((id, m))
+    } else {
+        None
+    };
+    let scanned = c.u64()? as usize;
+    let probed = c.u64()? as usize;
+    c.finish()?;
+    Ok(QueryHit { best, scanned, probed, nonempty: flags & FLAG_NONEMPTY != 0 })
+}
+
+/// Decode a binary `/query_topk` response (client half).
+pub fn decode_topk_hits(body: &[u8]) -> Result<Vec<(usize, f32)>, ProtoError> {
+    let mut c = header(body, TAG_TOPK_HITS, "topk_hits")?;
+    let n = c.u64()?;
+    if n > (c.remaining() / 12) as u64 {
+        return Err(ProtoError::bad(format!("hit count {n} exceeds message size")));
+    }
+    let mut hits = Vec::with_capacity(n as usize);
+    for _ in 0..n {
+        let id = c.u64()?;
+        let m = f32::from_bits(c.u32()?);
+        let id = usize::try_from(id)
+            .map_err(|_| ProtoError::bad(format!("hit id {id} exceeds usize")))?;
+        hits.push((id, m));
+    }
+    c.finish()?;
+    Ok(hits)
+}
+
+/// Decode a binary insert/remove acknowledgement: `(applied, id, live)`.
+pub fn decode_ack(body: &[u8]) -> Result<(bool, u32, u64), ProtoError> {
+    let mut c = header(body, TAG_ACK, "ack")?;
+    let applied = c.u32()?;
+    let id = c.u32()?;
+    let live = c.u64()?;
+    c.finish()?;
+    Ok((applied != 0, id, live))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ex(ids: &[usize]) -> HashSet<usize> {
+        ids.iter().copied().collect()
+    }
+
+    #[test]
+    fn query_roundtrips_bit_exact() {
+        let w = vec![1.0f32, -0.0, f32::MIN_POSITIVE, 3.4e38, -2.718_281_8, 1.0e-8];
+        let req = decode_query(&encode_query(&w, None), w.len()).unwrap();
+        for (a, b) in w.iter().zip(req.w.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "f32 roundtrip must be exact");
+        }
+        assert!(req.exclude.is_none());
+
+        let excl = ex(&[3, 5, 1_000_000]);
+        let req = decode_query(&encode_query(&w, Some(&excl)), w.len()).unwrap();
+        assert_eq!(*req.exclude.unwrap(), excl);
+    }
+
+    #[test]
+    fn topk_roundtrips() {
+        let w = vec![0.5f32, -0.5];
+        let (req, t) = decode_topk(&encode_topk(&w, 7, Some(&ex(&[9]))), 2).unwrap();
+        assert_eq!(t, 7);
+        assert_eq!(req.w, w);
+        assert!(req.exclude.unwrap().contains(&9));
+        assert!(decode_topk(&encode_topk(&w, 0, None), 2).is_err(), "t=0 rejected");
+    }
+
+    #[test]
+    fn id_and_ack_roundtrip() {
+        assert_eq!(decode_id(&encode_id(TAG_INSERT, 42), TAG_INSERT).unwrap(), 42);
+        assert_eq!(decode_id(&encode_id(TAG_REMOVE, 7), TAG_REMOVE).unwrap(), 7);
+        // route/tag mismatch is a clean 400
+        assert!(decode_id(&encode_id(TAG_INSERT, 42), TAG_REMOVE).is_err());
+        let (applied, id, live) = decode_ack(&encode_ack(true, 42, 1999)).unwrap();
+        assert!(applied);
+        assert_eq!((id, live), (42, 1999));
+        let (applied, _, _) = decode_ack(&encode_ack(false, 0, 0)).unwrap();
+        assert!(!applied);
+    }
+
+    #[test]
+    fn hit_roundtrips_bit_exact() {
+        let hit = QueryHit {
+            best: Some((123, 0.123_456_79_f32)),
+            scanned: 9,
+            probed: 4,
+            nonempty: true,
+        };
+        let back = decode_hit(&encode_hit(&hit)).unwrap();
+        assert_eq!(back.best.unwrap().0, 123);
+        assert_eq!(back.best.unwrap().1.to_bits(), hit.best.unwrap().1.to_bits());
+        assert_eq!((back.scanned, back.probed), (9, 4));
+        assert!(back.nonempty);
+        let empty = QueryHit::default();
+        let back = decode_hit(&encode_hit(&empty)).unwrap();
+        assert!(back.best.is_none());
+        assert!(!back.nonempty);
+    }
+
+    #[test]
+    fn topk_hits_roundtrip() {
+        let hits = vec![(1usize, 0.25f32), (7, -0.0), (2, f32::MIN_POSITIVE)];
+        let back = decode_topk_hits(&encode_topk_hits(&hits)).unwrap();
+        assert_eq!(back.len(), 3);
+        for ((ia, ma), (ib, mb)) in hits.iter().zip(back.iter()) {
+            assert_eq!(ia, ib);
+            assert_eq!(ma.to_bits(), mb.to_bits());
+        }
+        assert!(decode_topk_hits(&encode_topk_hits(&[])).unwrap().is_empty());
+    }
+
+    #[test]
+    fn dim_mismatch_rejected() {
+        let err = decode_query(&encode_query(&[1.0, 2.0], None), 3).unwrap_err();
+        assert_eq!(err.status, 400);
+        assert!(err.msg.contains("dims"));
+    }
+
+    #[test]
+    fn non_finite_w_rejected() {
+        // patch w[0]'s raw bits to NaN / +inf: the decoder must reject
+        // exactly what the JSON route rejects
+        for bits in [f32::NAN.to_bits(), f32::INFINITY.to_bits()] {
+            let mut b = encode_query(&[1.0, 2.0], None);
+            // header 12 | flags 4 | dim 4 → w[0] at byte 20
+            b[20..24].copy_from_slice(&bits.to_le_bytes());
+            let err = decode_query(&b, 2).unwrap_err();
+            assert!(err.msg.contains("finite"), "got: {}", err.msg);
+        }
+    }
+
+    #[test]
+    fn truncation_at_every_byte_is_a_clean_error() {
+        let msgs: Vec<Vec<u8>> = vec![
+            encode_query(&[1.0, -0.0, 3.5], Some(&ex(&[1, 2, 3]))),
+            encode_topk(&[0.25, -4.0], 5, Some(&ex(&[9]))),
+            encode_id(TAG_INSERT, 7),
+            encode_hit(&QueryHit { best: Some((3, 0.5)), scanned: 1, probed: 2, nonempty: true }),
+            encode_topk_hits(&[(1, 0.5), (2, -0.5)]),
+            encode_ack(true, 3, 100),
+        ];
+        for (i, m) in msgs.iter().enumerate() {
+            for cut in 0..m.len() {
+                let b = &m[..cut];
+                let all_err = decode_query(b, 3).is_err()
+                    && decode_topk(b, 2).is_err()
+                    && decode_id(b, TAG_INSERT).is_err()
+                    && decode_hit(b).is_err()
+                    && decode_topk_hits(b).is_err()
+                    && decode_ack(b).is_err();
+                assert!(all_err, "msg {i} cut at {cut} must error under every decoder");
+            }
+        }
+    }
+
+    #[test]
+    fn malformed_messages_rejected() {
+        // wrong magic, cross-tag decoding, bad version, trailing junk,
+        // hostile length fields — all clean errors, no panics
+        assert!(decode_query(b"nope", 2).is_err());
+        let q = encode_query(&[1.0, 2.0], None);
+        assert!(decode_topk(&q, 2).is_err(), "query bytes are not a topk");
+        assert!(decode_hit(&q).is_err(), "query bytes are not a hit");
+        let mut bad_ver = q.clone();
+        bad_ver[4] = 99;
+        assert!(decode_query(&bad_ver, 2).is_err());
+        let mut trailing = q.clone();
+        trailing.push(0);
+        assert!(decode_query(&trailing, 2).is_err());
+        // exclude count u64::MAX (count lives right after the w block:
+        // header 12 | flags 4 | dim 4 | 2×4 w = byte 28)
+        let mut huge = encode_query(&[1.0, 2.0], Some(&ex(&[1])));
+        huge[28..36].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(decode_query(&huge, 2).is_err());
+        // topk_hits count u64::MAX (count at byte 12)
+        let mut huge_hits = encode_topk_hits(&[(1, 0.5)]);
+        huge_hits[12..20].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(decode_topk_hits(&huge_hits).is_err());
+    }
+
+    /// A finite f32 drawn from raw bit patterns: exercises subnormals,
+    /// extreme exponents and odd mantissas — not just "nice" values.
+    fn adversarial_f32(rng: &mut crate::rng::Rng) -> f32 {
+        loop {
+            let v = f32::from_bits(rng.next_u64() as u32);
+            if v.is_finite() {
+                return v;
+            }
+        }
+    }
+
+    #[test]
+    fn bodies_roundtrip_bit_exact_forall() {
+        crate::testing::forall("binproto roundtrip", 64, |rng| {
+            let dim = rng.range(1, 33);
+            let mut w: Vec<f32> = (0..dim).map(|_| adversarial_f32(rng)).collect();
+            // plant the canonical adversaries deterministically
+            w[0] = -0.0;
+            if dim > 1 {
+                w[1] = f32::from_bits(1); // smallest subnormal
+            }
+            if dim > 2 {
+                w[2] = f32::MAX;
+            }
+            if dim > 3 {
+                w[3] = -f32::MAX;
+            }
+            let excl = if rng.below(2) == 0 {
+                None
+            } else {
+                Some((0..rng.below(16)).map(|_| rng.below(1 << 20)).collect::<HashSet<_>>())
+            };
+            let req = decode_query(&encode_query(&w, excl.as_ref()), dim)
+                .map_err(|e| format!("decode_query: {}", e.msg))?;
+            for (i, (a, b)) in w.iter().zip(req.w.iter()).enumerate() {
+                crate::prop_assert!(a.to_bits() == b.to_bits(), "query w[{i}]: {a:?} != {b:?}");
+            }
+            crate::prop_assert!(
+                req.exclude.as_deref() == excl.as_ref(),
+                "exclude roundtrip"
+            );
+            let t = rng.range(1, 100);
+            let (req2, t2) = decode_topk(&encode_topk(&w, t, excl.as_ref()), dim)
+                .map_err(|e| format!("decode_topk: {}", e.msg))?;
+            crate::prop_assert!(t2 == t, "t roundtrip");
+            for (a, b) in w.iter().zip(req2.w.iter()) {
+                crate::prop_assert!(a.to_bits() == b.to_bits(), "topk w bits");
+            }
+            let hit = QueryHit {
+                best: if rng.below(8) == 0 {
+                    None
+                } else {
+                    Some((rng.below(1 << 20), adversarial_f32(rng)))
+                },
+                scanned: rng.below(10_000),
+                probed: rng.below(10_000),
+                nonempty: rng.below(2) == 1,
+            };
+            let back =
+                decode_hit(&encode_hit(&hit)).map_err(|e| format!("decode_hit: {}", e.msg))?;
+            match (hit.best, back.best) {
+                (Some((ia, ma)), Some((ib, mb))) => {
+                    crate::prop_assert!(ia == ib, "best id");
+                    crate::prop_assert!(ma.to_bits() == mb.to_bits(), "margin bits");
+                }
+                (None, None) => {}
+                (a, b) => return Err(format!("best mismatch {a:?} vs {b:?}")),
+            }
+            crate::prop_assert!(
+                back.scanned == hit.scanned && back.probed == hit.probed,
+                "counters"
+            );
+            crate::prop_assert!(back.nonempty == hit.nonempty, "nonempty");
+            let hits: Vec<(usize, f32)> = (0..rng.below(20))
+                .map(|_| (rng.below(1 << 20), adversarial_f32(rng)))
+                .collect();
+            let back = decode_topk_hits(&encode_topk_hits(&hits))
+                .map_err(|e| format!("decode_topk_hits: {}", e.msg))?;
+            crate::prop_assert!(back.len() == hits.len(), "topk len");
+            for ((ia, ma), (ib, mb)) in hits.iter().zip(back.iter()) {
+                crate::prop_assert!(ia == ib && ma.to_bits() == mb.to_bits(), "topk entry");
+            }
+            Ok(())
+        });
+    }
+}

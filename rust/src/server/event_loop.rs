@@ -1,0 +1,572 @@
+//! Readiness-polled connection transport: one loop thread multiplexes
+//! every client socket through `poll(2)`, and a bounded worker pool runs
+//! the request handlers.
+//!
+//! The thread-per-connection acceptor (still compiled on non-unix
+//! targets, see `server/mod.rs`) costs one OS thread per keep-alive
+//! client; 10k idle connections would cost 10k stacks. Here idle
+//! connections cost one slab slot each and zero threads: the loop owns
+//! the nonblocking listener plus every connection, parses requests with
+//! the resumable [`FrameParser`], and hands complete requests to
+//! `conn_workers` worker threads. Workers never touch sockets — they
+//! return serialized response bytes through a channel and wake the loop
+//! via a self-pipe. Total thread count is O(workers), not
+//! O(connections).
+//!
+//! Everything above the transport seam is byte-identical to the threaded
+//! path: both call `process_request`, so routing, batching, tracing and
+//! the 503/4xx shed paths behave the same.
+//!
+//! The shim calls `poll(2)` directly through a two-line FFI declaration —
+//! std exposes no readiness API and the registry has no mio/libc, but
+//! `poll` is POSIX and its ABI is stable.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::http::{FrameParser, HttpError, Request};
+use super::{State, MAX_SHEDDING};
+
+// ─────────────────────── poll(2) FFI shim ───────────────────────
+
+#[repr(C)]
+struct PollFd {
+    fd: i32,
+    events: i16,
+    revents: i16,
+}
+
+const POLLIN: i16 = 0x001;
+const POLLOUT: i16 = 0x004;
+
+#[cfg(target_os = "linux")]
+type NfdsT = std::os::raw::c_ulong;
+#[cfg(not(target_os = "linux"))]
+type NfdsT = u32;
+
+extern "C" {
+    fn poll(fds: *mut PollFd, nfds: NfdsT, timeout: std::os::raw::c_int) -> std::os::raw::c_int;
+}
+
+/// `poll(2)` with EINTR retry; any other failure is returned (the loop
+/// treats it as a transient and continues after a short sleep).
+fn poll_wait(fds: &mut [PollFd], timeout_ms: i32) -> std::io::Result<usize> {
+    loop {
+        let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as NfdsT, timeout_ms) };
+        if rc >= 0 {
+            return Ok(rc as usize);
+        }
+        let err = std::io::Error::last_os_error();
+        if err.kind() != ErrorKind::Interrupted {
+            return Err(err);
+        }
+    }
+}
+
+// ─────────────────────── connection state ───────────────────────
+
+/// How long a connection that answered a framing error (or a shed 503)
+/// lingers after flushing, discarding input, so the response's FIN isn't
+/// destroyed by a reset triggered by unread request bytes — the
+/// event-loop analogue of the threaded path's `drain_and_close`.
+const LINGER: Duration = Duration::from_millis(50);
+/// Hard deadline for flushing in-flight work after shutdown triggers.
+const DRAIN_DEADLINE: Duration = Duration::from_secs(5);
+/// Poll timeout: bounds idle-sweep latency and shutdown-notice latency.
+const POLL_MS: i32 = 100;
+/// Reads per readable event before yielding back to the loop (level-
+/// triggered poll re-signals), so one blasting client can't starve the
+/// rest.
+const MAX_READS_PER_EVENT: usize = 16;
+
+struct Conn {
+    stream: TcpStream,
+    parser: FrameParser,
+    out: Vec<u8>,
+    out_pos: usize,
+    last_activity: Instant,
+    /// one request is at the workers; POLLIN is not armed meanwhile, so
+    /// the kernel backpressures pipelining clients and ordering holds
+    in_flight: bool,
+    close_after_flush: bool,
+    /// framing broke (or the conn was shed): read and discard input,
+    /// never parse it
+    discard_input: bool,
+    peer_eof: bool,
+    linger_until: Option<Instant>,
+    /// an over-cap courtesy-503 connection: counted in `shedding_conns`,
+    /// not `conns.open`
+    shed: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, shed: bool) -> Self {
+        Conn {
+            stream,
+            parser: FrameParser::new(),
+            out: Vec::new(),
+            out_pos: 0,
+            last_activity: Instant::now(),
+            in_flight: false,
+            close_after_flush: shed,
+            discard_input: shed,
+            peer_eof: false,
+            linger_until: None,
+            shed,
+        }
+    }
+
+    fn flushed(&self) -> bool {
+        self.out_pos >= self.out.len()
+    }
+}
+
+/// Slab slot: `gen` increments on close so a completion for a previous
+/// occupant of the token is recognized as stale and dropped.
+struct Slot {
+    gen: u64,
+    conn: Option<Conn>,
+}
+
+struct Job {
+    token: usize,
+    gen: u64,
+    req: Request,
+}
+
+struct Done {
+    token: usize,
+    gen: u64,
+    bytes: Vec<u8>,
+    keep_alive: bool,
+}
+
+fn worker(
+    state: Arc<State>,
+    jobs: Arc<Mutex<Receiver<Job>>>,
+    done_tx: Sender<Done>,
+    wake_tx: UnixStream,
+) {
+    loop {
+        // the lock is scoped to the recv: exactly one worker parks in
+        // recv; the rest park on the mutex
+        let job = { jobs.lock().unwrap().recv() };
+        let Ok(job) = job else { return };
+        let (bytes, keep_alive) = super::process_request(&state, &job.req);
+        if done_tx.send(Done { token: job.token, gen: job.gen, bytes, keep_alive }).is_err() {
+            return;
+        }
+        // nonblocking self-pipe: a full pipe means the loop is already
+        // due to wake, EPIPE means it is gone — both ignorable
+        let _ = (&wake_tx).write(&[1u8]);
+    }
+}
+
+// ─────────────────────── the loop ───────────────────────
+
+/// Run the transport until shutdown: owns the listener, every client
+/// socket, and the worker pool. Called on the `chh-http-loop` thread;
+/// when it returns, all connections are closed and all workers joined.
+pub(crate) fn run(listener: TcpListener, state: &Arc<State>) {
+    if let Err(e) = listener.set_nonblocking(true) {
+        eprintln!("event-loop: set_nonblocking failed: {e}; serving aborted");
+        return;
+    }
+    let (wake_rx, wake_tx) = match UnixStream::pair() {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("event-loop: wake pipe failed: {e}; serving aborted");
+            return;
+        }
+    };
+    let _ = wake_rx.set_nonblocking(true);
+    let _ = wake_tx.set_nonblocking(true);
+
+    let workers_n = state.conn_workers.max(1);
+    let (job_tx, job_rx) = sync_channel::<Job>(workers_n * 8 + 16);
+    let job_rx = Arc::new(Mutex::new(job_rx));
+    let (done_tx, done_rx) = channel::<Done>();
+    let mut workers = Vec::with_capacity(workers_n);
+    for i in 0..workers_n {
+        let (st, jr, dt) = (state.clone(), job_rx.clone(), done_tx.clone());
+        let wk = match wake_tx.try_clone() {
+            Ok(w) => w,
+            Err(e) => {
+                eprintln!("event-loop: wake pipe clone failed: {e}; serving aborted");
+                return;
+            }
+        };
+        let h = std::thread::Builder::new()
+            .name(format!("chh-http-worker-{i}"))
+            .spawn(move || worker(st, jr, dt, wk))
+            .expect("spawn http worker");
+        workers.push(h);
+    }
+    drop(done_tx);
+
+    let mut slots: Vec<Slot> = Vec::new();
+    let mut free: Vec<usize> = Vec::new();
+    let mut fds: Vec<PollFd> = Vec::new();
+    // pollfd index → slab token; the listener and wake pipe use sentinels
+    let mut meta: Vec<usize> = Vec::new();
+    const T_LISTENER: usize = usize::MAX;
+    const T_WAKE: usize = usize::MAX - 1;
+
+    let mut draining = false;
+    let mut drain_deadline = Instant::now();
+
+    loop {
+        let now = Instant::now();
+        if !draining && state.shutdown.load(Ordering::SeqCst) {
+            draining = true;
+            drain_deadline = now + DRAIN_DEADLINE;
+            for token in 0..slots.len() {
+                let gone = match slots[token].conn.as_mut() {
+                    Some(c) if !c.in_flight && c.flushed() && !c.parser.has_buffered_input() => {
+                        true // idle: close outright
+                    }
+                    Some(c) => {
+                        // finish the current request, then close; any
+                        // pipelined backlog is dropped
+                        c.close_after_flush = true;
+                        c.discard_input = true;
+                        false
+                    }
+                    None => false,
+                };
+                if gone {
+                    close_slot(state, &mut slots, &mut free, token);
+                }
+            }
+        }
+        if draining {
+            let live = slots.iter().filter(|s| s.conn.is_some()).count();
+            if live == 0 || now >= drain_deadline {
+                break;
+            }
+        }
+
+        // completions from the workers
+        while let Ok(done) = done_rx.try_recv() {
+            apply_completion(state, &job_tx, &mut slots, &mut free, done);
+        }
+
+        // rebuild the interest set (level-triggered: cheap and race-free)
+        fds.clear();
+        meta.clear();
+        if !draining {
+            fds.push(PollFd { fd: listener.as_raw_fd(), events: POLLIN, revents: 0 });
+            meta.push(T_LISTENER);
+        }
+        fds.push(PollFd { fd: wake_rx.as_raw_fd(), events: POLLIN, revents: 0 });
+        meta.push(T_WAKE);
+        for (token, slot) in slots.iter().enumerate() {
+            let Some(c) = &slot.conn else { continue };
+            let mut ev = 0i16;
+            if !c.in_flight {
+                ev |= POLLIN;
+            }
+            if !c.flushed() {
+                ev |= POLLOUT;
+            }
+            if ev != 0 {
+                fds.push(PollFd { fd: c.stream.as_raw_fd(), events: ev, revents: 0 });
+                meta.push(token);
+            }
+        }
+
+        match poll_wait(&mut fds, if draining { 25 } else { POLL_MS }) {
+            Ok(_) => {}
+            Err(e) => {
+                eprintln!("event-loop: poll failed: {e}; backing off");
+                std::thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+        }
+
+        for i in 0..fds.len() {
+            if fds[i].revents == 0 {
+                continue;
+            }
+            match meta[i] {
+                T_LISTENER => accept_ready(&listener, state, &job_tx, &mut slots, &mut free),
+                T_WAKE => drain_wake(&wake_rx),
+                token => {
+                    let gen = slots[token].gen;
+                    let mut dead = false;
+                    if let Some(conn) = slots[token].conn.as_mut() {
+                        if fds[i].revents & POLLIN != 0 {
+                            dead = !fill_from_socket(conn);
+                        }
+                        if !dead {
+                            dead = !service(state, &job_tx, conn, token, gen);
+                        }
+                    }
+                    if dead {
+                        close_slot(state, &mut slots, &mut free, token);
+                    }
+                }
+            }
+        }
+
+        // idle / linger sweep
+        let now = Instant::now();
+        for token in 0..slots.len() {
+            let reap = match slots[token].conn.as_ref() {
+                Some(c) => {
+                    let lingered = c.linger_until.is_some_and(|t| now >= t);
+                    let idle = !c.in_flight
+                        && now.duration_since(c.last_activity) > state.idle_timeout;
+                    lingered || idle
+                }
+                None => false,
+            };
+            if reap {
+                close_slot(state, &mut slots, &mut free, token);
+            }
+        }
+    }
+
+    // teardown: sockets first, then the workers (dropping the job sender
+    // breaks their recv loop; in-flight handlers finish first)
+    for token in 0..slots.len() {
+        close_slot(state, &mut slots, &mut free, token);
+    }
+    drop(job_tx);
+    for h in workers {
+        let _ = h.join();
+    }
+}
+
+fn drain_wake(wake_rx: &UnixStream) {
+    let mut buf = [0u8; 256];
+    let mut r = wake_rx;
+    while matches!(r.read(&mut buf), Ok(n) if n > 0) {}
+}
+
+fn accept_ready(
+    listener: &TcpListener,
+    state: &Arc<State>,
+    job_tx: &SyncSender<Job>,
+    slots: &mut Vec<Slot>,
+    free: &mut Vec<usize>,
+) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if state.shutdown.load(Ordering::SeqCst) {
+                    // a shutdown poke, or a client racing it
+                    continue;
+                }
+                state.conns.accepted.fetch_add(1, Ordering::Relaxed);
+                let _ = stream.set_nonblocking(true);
+                let _ = stream.set_nodelay(true);
+                if state.conns.open.load(Ordering::SeqCst) >= state.max_conns {
+                    // over cap: courtesy 503 if shed slots allow, else a
+                    // plain drop so the loop keeps draining the backlog
+                    if state.shedding_conns.load(Ordering::SeqCst) < MAX_SHEDDING {
+                        state.shedding_conns.fetch_add(1, Ordering::SeqCst);
+                        let mut c = Conn::new(stream, true);
+                        c.out = super::overload_response_bytes();
+                        let token = alloc_slot(slots, free, c);
+                        // optimistic flush; most clients get the 503 here
+                        let gen = slots[token].gen;
+                        let conn = slots[token].conn.as_mut().expect("just allocated");
+                        if !service(state, job_tx, conn, token, gen) {
+                            close_slot(state, slots, free, token);
+                        }
+                    }
+                    continue;
+                }
+                state.conns.open.fetch_add(1, Ordering::SeqCst);
+                alloc_slot(slots, free, Conn::new(stream, false));
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+            Err(_) => return, // transient (EMFILE, aborted handshake)
+        }
+    }
+}
+
+fn alloc_slot(slots: &mut Vec<Slot>, free: &mut Vec<usize>, conn: Conn) -> usize {
+    match free.pop() {
+        Some(t) => {
+            slots[t].conn = Some(conn);
+            t
+        }
+        None => {
+            slots.push(Slot { gen: 0, conn: Some(conn) });
+            slots.len() - 1
+        }
+    }
+}
+
+fn close_slot(state: &Arc<State>, slots: &mut [Slot], free: &mut Vec<usize>, token: usize) {
+    let slot = &mut slots[token];
+    if let Some(conn) = slot.conn.take() {
+        let _ = conn.stream.shutdown(Shutdown::Both);
+        if conn.shed {
+            state.shedding_conns.fetch_sub(1, Ordering::SeqCst);
+        } else {
+            state.conns.open.fetch_sub(1, Ordering::SeqCst);
+        }
+        slot.gen += 1;
+        free.push(token);
+    }
+}
+
+fn apply_completion(
+    state: &Arc<State>,
+    job_tx: &SyncSender<Job>,
+    slots: &mut Vec<Slot>,
+    free: &mut Vec<usize>,
+    done: Done,
+) {
+    if done.token >= slots.len() || slots[done.token].gen != done.gen {
+        return; // stale: the connection was closed and the slot reused
+    }
+    let gen = slots[done.token].gen;
+    let token = done.token;
+    let mut dead = false;
+    if let Some(conn) = slots[token].conn.as_mut() {
+        conn.in_flight = false;
+        conn.last_activity = Instant::now();
+        append_out(conn, &done.bytes);
+        if !done.keep_alive {
+            conn.close_after_flush = true;
+            conn.discard_input = true;
+        }
+        dead = !service(state, job_tx, conn, token, gen);
+    }
+    if dead {
+        close_slot(state, slots, free, token);
+    }
+}
+
+fn append_out(conn: &mut Conn, bytes: &[u8]) {
+    if conn.flushed() {
+        conn.out.clear();
+        conn.out_pos = 0;
+    }
+    conn.out.extend_from_slice(bytes);
+}
+
+/// Read whatever the socket has (bounded per event). `false` = hard
+/// transport error, close the connection.
+fn fill_from_socket(conn: &mut Conn) -> bool {
+    let mut buf = [0u8; 16 * 1024];
+    let mut reads = 0;
+    loop {
+        match (&conn.stream).read(&mut buf) {
+            Ok(0) => {
+                conn.peer_eof = true;
+                conn.parser.feed_eof();
+                return true;
+            }
+            Ok(n) => {
+                conn.last_activity = Instant::now();
+                if !conn.discard_input {
+                    conn.parser.feed(&buf[..n]);
+                }
+                reads += 1;
+                if n < buf.len() || reads >= MAX_READS_PER_EVENT {
+                    return true;
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => return true,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => return false,
+        }
+    }
+}
+
+/// Parse-and-dispatch, flush, then close-state bookkeeping. `false` =
+/// the connection is finished and must be closed by the caller.
+fn service(
+    state: &Arc<State>,
+    job_tx: &SyncSender<Job>,
+    conn: &mut Conn,
+    token: usize,
+    gen: u64,
+) -> bool {
+    pump(state, job_tx, conn, token, gen);
+    if !flush_out(conn) {
+        return false;
+    }
+    if conn.flushed() && conn.close_after_flush && !conn.in_flight {
+        if conn.discard_input && !conn.peer_eof {
+            // linger briefly, discarding input, so the just-written
+            // response survives any unread request bytes (see LINGER)
+            if conn.linger_until.is_none() {
+                conn.linger_until = Some(Instant::now() + LINGER);
+            }
+        } else {
+            return false;
+        }
+    }
+    true
+}
+
+/// Feed complete requests to the workers until the parser runs dry, the
+/// connection enters a closing state, or a request is put in flight.
+fn pump(state: &Arc<State>, job_tx: &SyncSender<Job>, conn: &mut Conn, token: usize, gen: u64) {
+    while !conn.in_flight && !conn.close_after_flush && !conn.discard_input {
+        match conn.parser.next_request() {
+            Ok(Some(req)) => match job_tx.try_send(Job { token, gen, req }) {
+                Ok(()) => conn.in_flight = true,
+                Err(TrySendError::Full(job)) => {
+                    // the worker queue is saturated: answer 503 from the
+                    // loop itself — overload must not be able to wedge
+                    // the transport
+                    let keep = job.req.keep_alive && !state.shutdown.load(Ordering::SeqCst);
+                    append_out(conn, &super::busy_response_bytes(keep));
+                    if !keep {
+                        conn.close_after_flush = true;
+                        conn.discard_input = true;
+                    }
+                }
+                Err(TrySendError::Disconnected(_)) => {
+                    conn.close_after_flush = true;
+                    conn.discard_input = true;
+                }
+            },
+            Ok(None) => break,
+            Err(HttpError::Closed) => {
+                // clean EOF between requests: flush anything pending,
+                // then close
+                conn.close_after_flush = true;
+                conn.discard_input = true;
+            }
+            Err(e) => {
+                // framing is unreliable after a malformed request —
+                // answer 400/413 and close, mirroring the threaded path
+                append_out(conn, &super::bad_request_bytes(state, &e));
+                conn.close_after_flush = true;
+                conn.discard_input = true;
+            }
+        }
+    }
+}
+
+/// Write as much buffered output as the socket accepts. `false` = hard
+/// transport error.
+fn flush_out(conn: &mut Conn) -> bool {
+    while !conn.flushed() {
+        match (&conn.stream).write(&conn.out[conn.out_pos..]) {
+            Ok(0) => return false,
+            Ok(n) => {
+                conn.out_pos += n;
+                conn.last_activity = Instant::now();
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => return true,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => return false,
+        }
+    }
+    true
+}

@@ -3,15 +3,23 @@
 //! The vendored registry has no hyper/tokio, so the serving front-end
 //! frames requests by hand: request line + headers + `Content-Length`
 //! body (no chunked encoding — every client we ship sends sized bodies).
-//! Both sides of the wire live here: the server-side [`MessageReader`] +
-//! [`write_response`] used by [`crate::server::Server`], and the
-//! client-side [`HttpClient`] used by `chh loadgen` and the integration
-//! tests.
+//! Framing is factored into a *resumable* incremental parser,
+//! [`FrameParser`]: feed it whatever bytes the transport delivered and it
+//! yields complete messages (or `Ok(None)` for "need more"). The same
+//! parser serves both sides of the wire — the blocking
+//! [`MessageReader`] + [`HttpClient`] used by `chh loadgen`, the replica
+//! tailer and the integration tests, and the nonblocking event loop in
+//! [`crate::server::event_loop`], which cannot afford a parser that
+//! blocks mid-message.
+//!
+//! Requests and responses carry a `binary` flag: a body tagged
+//! `Content-Type: application/x-chh-binary` ([`CT_CHH_BIN`]) selects the
+//! binary wire protocol ([`crate::server::binproto`]) on the data routes.
 //!
 //! All limits are hard errors, not truncations: oversized heads/bodies,
 //! malformed request lines and non-numeric lengths each map to a
 //! [`HttpError`] the connection loop turns into a `400`/`413` response
-//! (or a clean close). Reading never panics on adversarial input.
+//! (or a clean close). Parsing never panics on adversarial input.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -21,6 +29,9 @@ use std::time::{Duration, Instant};
 pub const MAX_HEAD_BYTES: usize = 16 * 1024;
 /// Cap on a request or response body.
 pub const MAX_BODY_BYTES: usize = 8 * 1024 * 1024;
+
+/// Content type selecting the binary wire protocol on the data routes.
+pub const CT_CHH_BIN: &str = "application/x-chh-binary";
 
 #[derive(Debug, thiserror::Error)]
 pub enum HttpError {
@@ -60,6 +71,9 @@ pub struct Request {
     /// client-supplied `x-chh-request-id`, if any (the server generates
     /// one when absent and echoes it in the response)
     pub request_id: Option<String>,
+    /// `Content-Type: application/x-chh-binary` — the body (and the
+    /// 200 response) use the binary wire protocol
+    pub binary: bool,
 }
 
 /// One parsed HTTP response (client side).
@@ -70,24 +84,210 @@ pub struct Response {
     pub body: Vec<u8>,
     /// the `x-chh-request-id` the server echoed back, if any
     pub request_id: Option<String>,
+    /// the body is binary-wire encoded ([`CT_CHH_BIN`])
+    pub binary: bool,
 }
 
 fn find_blank_line(b: &[u8]) -> Option<usize> {
     b.windows(4).position(|w| w == b"\r\n\r\n")
 }
 
-/// Incremental message framing over a stream: buffers whatever the
-/// transport delivered beyond the current message so back-to-back
-/// (or pipelined) keep-alive messages never lose bytes.
+/// Parsed head fields common to both message kinds.
+struct HeadFields {
+    content_length: usize,
+    keep_alive: bool,
+    request_id: Option<String>,
+    binary: bool,
+}
+
+enum Head {
+    Req { method: String, path: String, fields: HeadFields },
+    Resp { status: u16, fields: HeadFields },
+}
+
+impl Head {
+    fn fields(&self) -> &HeadFields {
+        match self {
+            Head::Req { fields, .. } | Head::Resp { fields, .. } => fields,
+        }
+    }
+}
+
+fn parse_request_head(head: &[u8]) -> Result<Head, HttpError> {
+    let head = std::str::from_utf8(head)
+        .map_err(|_| HttpError::Malformed("head is not utf-8".to_string()))?;
+    let mut lines = head.lines();
+    let first = lines.next().unwrap_or("");
+    let mut parts = first.split_ascii_whitespace();
+    let (Some(method), Some(path), Some(version)) = (parts.next(), parts.next(), parts.next())
+    else {
+        return Err(HttpError::Malformed(format!("bad request line {first:?}")));
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Err(HttpError::Malformed(format!("unsupported version {version:?}")));
+    }
+    let fields = parse_headers(lines, version == "HTTP/1.1")?;
+    Ok(Head::Req { method: method.to_string(), path: path.to_string(), fields })
+}
+
+fn parse_response_head(head: &[u8]) -> Result<Head, HttpError> {
+    let head = std::str::from_utf8(head)
+        .map_err(|_| HttpError::Malformed("head is not utf-8".to_string()))?;
+    let mut lines = head.lines();
+    let first = lines.next().unwrap_or("");
+    let mut parts = first.split_ascii_whitespace();
+    let (Some(version), Some(code)) = (parts.next(), parts.next()) else {
+        return Err(HttpError::Malformed(format!("bad status line {first:?}")));
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Err(HttpError::Malformed(format!("unsupported version {version:?}")));
+    }
+    let status = code
+        .parse::<u16>()
+        .map_err(|_| HttpError::Malformed(format!("bad status code {code:?}")))?;
+    let fields = parse_headers(lines, version == "HTTP/1.1")?;
+    Ok(Head::Resp { status, fields })
+}
+
+/// Resumable HTTP message parser: feed bytes as the transport delivers
+/// them, pull complete messages out. `Ok(None)` means "incomplete — feed
+/// more"; after [`FrameParser::feed_eof`] an incomplete message becomes a
+/// hard error ([`HttpError::Closed`] only for a clean between-messages
+/// hangup). Bytes beyond the current message stay buffered, so pipelined
+/// keep-alive messages never lose data.
+#[derive(Default)]
+pub struct FrameParser {
+    buf: Vec<u8>,
+    head: Option<Head>,
+    eof: bool,
+}
+
+impl FrameParser {
+    pub fn new() -> Self {
+        FrameParser::default()
+    }
+
+    /// Buffer bytes read from the transport.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Mark end-of-stream: no more bytes will ever arrive.
+    pub fn feed_eof(&mut self) {
+        self.eof = true;
+    }
+
+    /// Bytes buffered but not yet consumed by a complete message.
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True when enough bytes are buffered that the *next* poll might
+    /// yield a message without further transport reads (the event loop
+    /// uses this to drain pipelined requests before re-arming POLLIN).
+    pub fn has_buffered_input(&self) -> bool {
+        !self.buf.is_empty() || self.head.is_some()
+    }
+
+    /// Advance the head state machine; `Ok(true)` means a head is parsed
+    /// and waiting for its body.
+    fn advance_head(&mut self, parse: fn(&[u8]) -> Result<Head, HttpError>) -> Result<bool, HttpError> {
+        if self.head.is_some() {
+            return Ok(true);
+        }
+        match find_blank_line(&self.buf) {
+            Some(end) => {
+                if end > MAX_HEAD_BYTES {
+                    return Err(HttpError::TooLarge("head"));
+                }
+                let head_bytes: Vec<u8> = self.buf.drain(..end + 4).collect();
+                self.head = Some(parse(&head_bytes[..end])?);
+                Ok(true)
+            }
+            None => {
+                if self.buf.len() > MAX_HEAD_BYTES {
+                    return Err(HttpError::TooLarge("head"));
+                }
+                if self.eof {
+                    if self.buf.is_empty() {
+                        return Err(HttpError::Closed);
+                    }
+                    return Err(HttpError::Malformed("eof inside head".to_string()));
+                }
+                Ok(false)
+            }
+        }
+    }
+
+    /// Take the body once buffered; `Ok(None)` means "need more bytes".
+    fn take_body(&mut self) -> Result<Option<(Head, Vec<u8>)>, HttpError> {
+        let need = self.head.as_ref().map(|h| h.fields().content_length).unwrap_or(0);
+        if self.buf.len() < need {
+            if self.eof {
+                return Err(HttpError::Malformed("eof inside body".to_string()));
+            }
+            return Ok(None);
+        }
+        let body: Vec<u8> = self.buf.drain(..need).collect();
+        Ok(Some((self.head.take().expect("head parsed before body"), body)))
+    }
+
+    /// Try to pull one complete request out of the buffer.
+    pub fn next_request(&mut self) -> Result<Option<Request>, HttpError> {
+        if !self.advance_head(parse_request_head)? {
+            return Ok(None);
+        }
+        let Some((head, body)) = self.take_body()? else {
+            return Ok(None);
+        };
+        match head {
+            Head::Req { method, path, fields } => Ok(Some(Request {
+                method,
+                path,
+                keep_alive: fields.keep_alive,
+                body,
+                request_id: fields.request_id,
+                binary: fields.binary,
+            })),
+            Head::Resp { .. } => {
+                Err(HttpError::Malformed("expected a request, got a status line".to_string()))
+            }
+        }
+    }
+
+    /// Try to pull one complete response out of the buffer (client side).
+    pub fn next_response(&mut self) -> Result<Option<Response>, HttpError> {
+        if !self.advance_head(parse_response_head)? {
+            return Ok(None);
+        }
+        let Some((head, body)) = self.take_body()? else {
+            return Ok(None);
+        };
+        match head {
+            Head::Resp { status, fields } => Ok(Some(Response {
+                status,
+                keep_alive: fields.keep_alive,
+                body,
+                request_id: fields.request_id,
+                binary: fields.binary,
+            })),
+            Head::Req { .. } => {
+                Err(HttpError::Malformed("expected a response, got a request line".to_string()))
+            }
+        }
+    }
+}
+
+/// Blocking message framing over a stream: loops transport reads into a
+/// [`FrameParser`] until a complete message (or an error) emerges.
 pub struct MessageReader<R: Read> {
     inner: R,
-    /// bytes read from the transport but not yet consumed
-    pending: Vec<u8>,
+    parser: FrameParser,
 }
 
 impl<R: Read> MessageReader<R> {
     pub fn new(inner: R) -> Self {
-        MessageReader { inner, pending: Vec::new() }
+        MessageReader { inner, parser: FrameParser::new() }
     }
 
     /// The underlying stream (the client writes its next request here).
@@ -95,108 +295,52 @@ impl<R: Read> MessageReader<R> {
         &mut self.inner
     }
 
-    /// Read up to the blank line; leftover bytes stay in `pending`.
-    fn read_head(&mut self) -> Result<Vec<u8>, HttpError> {
-        let mut buf = std::mem::take(&mut self.pending);
-        let mut chunk = [0u8; 2048];
-        loop {
-            if let Some(end) = find_blank_line(&buf) {
-                if end > MAX_HEAD_BYTES {
-                    return Err(HttpError::TooLarge("head"));
-                }
-                self.pending = buf.split_off(end + 4);
-                buf.truncate(end);
-                return Ok(buf);
-            }
-            if buf.len() > MAX_HEAD_BYTES {
-                return Err(HttpError::TooLarge("head"));
-            }
-            let n = self.inner.read(&mut chunk).map_err(io_err)?;
-            if n == 0 {
-                if buf.is_empty() {
-                    return Err(HttpError::Closed);
-                }
-                return Err(HttpError::Malformed("eof inside head".to_string()));
-            }
-            buf.extend_from_slice(&chunk[..n]);
+    fn fill(&mut self) -> Result<(), HttpError> {
+        let mut chunk = [0u8; 4096];
+        let n = self.inner.read(&mut chunk).map_err(io_err)?;
+        if n == 0 {
+            self.parser.feed_eof();
+        } else {
+            self.parser.feed(&chunk[..n]);
         }
-    }
-
-    /// Take exactly `content_length` body bytes; any surplus already
-    /// buffered belongs to the next message and stays pending.
-    fn read_body(&mut self, content_length: usize) -> Result<Vec<u8>, HttpError> {
-        if self.pending.len() >= content_length {
-            let rest = self.pending.split_off(content_length);
-            return Ok(std::mem::replace(&mut self.pending, rest));
-        }
-        let mut body = std::mem::take(&mut self.pending);
-        let start = body.len();
-        body.resize(content_length, 0);
-        self.inner.read_exact(&mut body[start..]).map_err(io_err)?;
-        Ok(body)
+        Ok(())
     }
 
     /// Read and parse one request. `Err(Closed)` means the peer hung up
     /// cleanly between requests.
     pub fn request(&mut self) -> Result<Request, HttpError> {
-        let head = self.read_head()?;
-        let head = std::str::from_utf8(&head)
-            .map_err(|_| HttpError::Malformed("head is not utf-8".to_string()))?;
-        let mut lines = head.lines();
-        let first = lines.next().unwrap_or("");
-        let mut parts = first.split_ascii_whitespace();
-        let (Some(method), Some(path), Some(version)) = (parts.next(), parts.next(), parts.next())
-        else {
-            return Err(HttpError::Malformed(format!("bad request line {first:?}")));
-        };
-        if !version.starts_with("HTTP/1.") {
-            return Err(HttpError::Malformed(format!("unsupported version {version:?}")));
+        loop {
+            if let Some(r) = self.parser.next_request()? {
+                return Ok(r);
+            }
+            self.fill()?;
         }
-        let (content_length, keep_alive, request_id) =
-            parse_headers(lines, version == "HTTP/1.1")?;
-        let body = self.read_body(content_length)?;
-        Ok(Request {
-            method: method.to_string(),
-            path: path.to_string(),
-            keep_alive,
-            body,
-            request_id,
-        })
     }
 
     /// Read and parse one response (client side).
     pub fn response(&mut self) -> Result<Response, HttpError> {
-        let head = self.read_head()?;
-        let head = std::str::from_utf8(&head)
-            .map_err(|_| HttpError::Malformed("head is not utf-8".to_string()))?;
-        let mut lines = head.lines();
-        let first = lines.next().unwrap_or("");
-        let mut parts = first.split_ascii_whitespace();
-        let (Some(version), Some(code)) = (parts.next(), parts.next()) else {
-            return Err(HttpError::Malformed(format!("bad status line {first:?}")));
-        };
-        if !version.starts_with("HTTP/1.") {
-            return Err(HttpError::Malformed(format!("unsupported version {version:?}")));
+        loop {
+            if let Some(r) = self.parser.next_response()? {
+                return Ok(r);
+            }
+            self.fill()?;
         }
-        let status = code
-            .parse::<u16>()
-            .map_err(|_| HttpError::Malformed(format!("bad status code {code:?}")))?;
-        let (content_length, keep_alive, request_id) =
-            parse_headers(lines, version == "HTTP/1.1")?;
-        let body = self.read_body(content_length)?;
-        Ok(Response { status, keep_alive, body, request_id })
     }
 }
 
-/// Parse headers (after the first line) into the fields the framing and
-/// tracing need; `default_keep_alive` comes from the HTTP version.
+/// Parse headers (after the first line) into the fields the framing,
+/// negotiation and tracing need; `default_keep_alive` comes from the
+/// HTTP version.
 fn parse_headers(
     lines: std::str::Lines<'_>,
     default_keep_alive: bool,
-) -> Result<(usize, bool, Option<String>), HttpError> {
-    let mut content_length = 0usize;
-    let mut keep_alive = default_keep_alive;
-    let mut request_id = None;
+) -> Result<HeadFields, HttpError> {
+    let mut fields = HeadFields {
+        content_length: 0,
+        keep_alive: default_keep_alive,
+        request_id: None,
+        binary: false,
+    };
     for line in lines {
         if line.is_empty() {
             continue;
@@ -208,20 +352,25 @@ fn parse_headers(
         let v = v.trim();
         match k.as_str() {
             "content-length" => {
-                content_length = v
+                fields.content_length = v
                     .parse::<usize>()
                     .map_err(|_| HttpError::Malformed(format!("bad content-length {v:?}")))?;
-                if content_length > MAX_BODY_BYTES {
+                if fields.content_length > MAX_BODY_BYTES {
                     return Err(HttpError::TooLarge("body"));
                 }
             }
             "connection" => {
                 let v = v.to_ascii_lowercase();
                 if v.contains("close") {
-                    keep_alive = false;
+                    fields.keep_alive = false;
                 } else if v.contains("keep-alive") {
-                    keep_alive = true;
+                    fields.keep_alive = true;
                 }
+            }
+            "content-type" => {
+                // only the media type matters; ignore any `; charset=…`
+                let ct = v.split(';').next().unwrap_or("").trim();
+                fields.binary = ct.eq_ignore_ascii_case(CT_CHH_BIN);
             }
             "transfer-encoding" => {
                 return Err(HttpError::Malformed("chunked bodies unsupported".to_string()));
@@ -230,13 +379,13 @@ fn parse_headers(
                 // bound the id so a hostile client can't bloat logs;
                 // ids we generate are 16 hex chars
                 if !v.is_empty() && v.len() <= 64 {
-                    request_id = Some(v.to_string());
+                    fields.request_id = Some(v.to_string());
                 }
             }
             _ => {}
         }
     }
-    Ok((content_length, keep_alive, request_id))
+    Ok(fields)
 }
 
 /// Human reason phrase for the handful of statuses the server emits.
@@ -266,7 +415,8 @@ pub fn write_response<W: Write>(
 }
 
 /// Write one response with an explicit content type (the `/metrics`
-/// exposition is `text/plain`) and an optional echoed request id.
+/// exposition is `text/plain`, binary-wire answers are
+/// [`CT_CHH_BIN`]) and an optional echoed request id.
 pub fn write_response_ex<W: Write>(
     w: &mut W,
     status: u16,
@@ -310,12 +460,25 @@ pub fn write_request_ex<W: Write>(
     body: &[u8],
     request_id: Option<&str>,
 ) -> std::io::Result<()> {
+    write_request_ct(w, method, path, body, request_id, "application/json")
+}
+
+/// Write one request with an explicit content type — [`CT_CHH_BIN`]
+/// selects the binary wire protocol server-side.
+pub fn write_request_ct<W: Write>(
+    w: &mut W,
+    method: &str,
+    path: &str,
+    body: &[u8],
+    request_id: Option<&str>,
+    content_type: &str,
+) -> std::io::Result<()> {
     let id_line = match request_id {
         Some(id) => format!("{REQUEST_ID_HEADER}: {id}\r\n"),
         None => String::new(),
     };
     let head = format!(
-        "{method} {path} HTTP/1.1\r\nContent-Type: application/json\r\nContent-Length: {}\r\n{id_line}Connection: keep-alive\r\n\r\n",
+        "{method} {path} HTTP/1.1\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n{id_line}Connection: keep-alive\r\n\r\n",
         body.len()
     );
     w.write_all(head.as_bytes())?;
@@ -323,7 +486,8 @@ pub fn write_request_ex<W: Write>(
     w.flush()
 }
 
-/// A keep-alive JSON-over-HTTP client for `chh loadgen` and tests.
+/// A keep-alive HTTP client for `chh loadgen` and tests; speaks both the
+/// JSON and the binary wire protocol.
 pub struct HttpClient {
     conn: MessageReader<TcpStream>,
 }
@@ -376,8 +540,11 @@ impl HttpClient {
         }
     }
 
+    /// Bound both directions of the socket: a stalled server can't park
+    /// this client forever mid-read *or* mid-write.
     pub fn set_timeout(&self, d: Duration) -> std::io::Result<()> {
-        self.conn.inner.set_read_timeout(Some(d))
+        self.conn.inner.set_read_timeout(Some(d))?;
+        self.conn.inner.set_write_timeout(Some(d))
     }
 
     /// One request/response round trip on the persistent connection.
@@ -407,6 +574,13 @@ impl HttpClient {
         self.request("POST", path, body.as_bytes())
     }
 
+    /// `POST` a binary-wire body ([`crate::server::binproto`]); the
+    /// content type tells the server to answer in kind.
+    pub fn post_binary(&mut self, path: &str, body: &[u8]) -> Result<Response, HttpError> {
+        write_request_ct(self.conn.get_mut(), "POST", path, body, None, CT_CHH_BIN)?;
+        self.conn.response()
+    }
+
     pub fn get(&mut self, path: &str) -> Result<Response, HttpError> {
         self.request("GET", path, &[])
     }
@@ -433,6 +607,7 @@ mod tests {
         assert_eq!(r.path, "/query");
         assert!(r.keep_alive, "http/1.1 defaults to keep-alive");
         assert_eq!(r.body, b"hello");
+        assert!(!r.binary, "no content-type means json");
     }
 
     #[test]
@@ -488,6 +663,7 @@ mod tests {
         assert_eq!(resp.status, 200);
         assert!(resp.keep_alive);
         assert_eq!(resp.body, br#"{"ok":true}"#);
+        assert!(!resp.binary);
         let mut wire = Vec::new();
         write_response(&mut wire, 503, b"{}", false).unwrap();
         let resp = MessageReader::new(Cursor::new(wire)).response().unwrap();
@@ -503,6 +679,32 @@ mod tests {
         assert_eq!(r.method, "POST");
         assert_eq!(r.path, "/query");
         assert_eq!(r.body, br#"{"w":[1]}"#);
+    }
+
+    #[test]
+    fn binary_content_type_negotiates() {
+        // request side, via the typed writer
+        let mut wire = Vec::new();
+        write_request_ct(&mut wire, "POST", "/query", b"\x01\x02", None, CT_CHH_BIN).unwrap();
+        let r = req(&wire).unwrap();
+        assert!(r.binary);
+        assert_eq!(r.body, b"\x01\x02");
+        // case-insensitive match, parameters ignored
+        let r = req(
+            b"POST /q HTTP/1.1\r\nContent-Type: Application/X-CHH-Binary; charset=x\r\nContent-Length: 0\r\n\r\n",
+        )
+        .unwrap();
+        assert!(r.binary);
+        // other content types are not binary
+        let r = req(b"POST /q HTTP/1.1\r\nContent-Type: text/plain\r\nContent-Length: 0\r\n\r\n")
+            .unwrap();
+        assert!(!r.binary);
+        // response side
+        let mut wire = Vec::new();
+        write_response_ex(&mut wire, 200, b"\xff", true, CT_CHH_BIN, None).unwrap();
+        let resp = MessageReader::new(Cursor::new(wire)).response().unwrap();
+        assert!(resp.binary);
+        assert_eq!(resp.body, b"\xff");
     }
 
     #[test]
@@ -541,5 +743,56 @@ mod tests {
         assert_eq!((r1.path.as_str(), r1.body.as_slice()), ("/a", b"one".as_slice()));
         assert_eq!((r2.path.as_str(), r2.body.as_slice()), ("/b", b"two!".as_slice()));
         assert!(matches!(reader.request(), Err(HttpError::Closed)));
+    }
+
+    #[test]
+    fn frame_parser_resumes_byte_at_a_time() {
+        // the nonblocking loop feeds whatever the socket had; the parser
+        // must yield Ok(None) at every prefix and the full message at
+        // the end — with no transport reads of its own
+        let mut wire = Vec::new();
+        write_request_ex(&mut wire, "POST", "/query", b"{\"w\":[1]}", Some("rid-9")).unwrap();
+        let mut p = FrameParser::new();
+        for (i, b) in wire.iter().enumerate() {
+            assert!(
+                p.next_request().unwrap().is_none(),
+                "no message before byte {i} arrived"
+            );
+            p.feed(std::slice::from_ref(b));
+        }
+        let r = p.next_request().unwrap().expect("complete after the last byte");
+        assert_eq!(r.path, "/query");
+        assert_eq!(r.body, b"{\"w\":[1]}");
+        assert_eq!(r.request_id.as_deref(), Some("rid-9"));
+        assert!(p.next_request().unwrap().is_none(), "buffer drained");
+        assert!(!p.has_buffered_input());
+    }
+
+    #[test]
+    fn frame_parser_pipelines_and_reports_eof() {
+        let mut wire = Vec::new();
+        write_request(&mut wire, "POST", "/a", b"one").unwrap();
+        write_request(&mut wire, "POST", "/b", b"two!").unwrap();
+        let mut p = FrameParser::new();
+        p.feed(&wire);
+        assert!(p.has_buffered_input());
+        let r1 = p.next_request().unwrap().unwrap();
+        assert!(p.has_buffered_input(), "second request still buffered");
+        let r2 = p.next_request().unwrap().unwrap();
+        assert_eq!((r1.path.as_str(), r2.path.as_str()), ("/a", "/b"));
+        assert!(p.next_request().unwrap().is_none(), "no eof yet: just incomplete");
+        p.feed_eof();
+        assert!(matches!(p.next_request(), Err(HttpError::Closed)));
+        // eof mid-head and mid-body are malformed, not Closed
+        let mut p = FrameParser::new();
+        p.feed(b"POST /x HTTP/1.1\r\nConte");
+        assert!(p.next_request().unwrap().is_none());
+        p.feed_eof();
+        assert!(matches!(p.next_request(), Err(HttpError::Malformed(_))));
+        let mut p = FrameParser::new();
+        p.feed(b"POST /x HTTP/1.1\r\nContent-Length: 9\r\n\r\nabc");
+        assert!(p.next_request().unwrap().is_none());
+        p.feed_eof();
+        assert!(matches!(p.next_request(), Err(HttpError::Malformed(_))));
     }
 }

@@ -4,18 +4,33 @@
 //!
 //! ```text
 //!                    ┌────────────────────── Server ──────────────────────┐
-//!  clients ── TCP ──▶│ acceptor → per-connection threads (≤ max_conns)    │
+//!  clients ── TCP ──▶│ poll(2) event loop ──▶ worker pool (conn_workers)  │
 //!                    │   /query ───▶ Batcher ──▶ query_batch_pooled ──┐   │
 //!                    │   /query_topk /insert /remove /healthz /stats  │   │
-//!                    │◀─ JSON responses ◀─────────── per-query hits ◀─┘   │
+//!                    │◀─ JSON / binary responses ◀─── per-query hits ◀┘   │
 //!                    └────────────────────────────────────────────────────┘
 //! ```
 //!
+//! * **Transport** ([`event_loop`], unix) — a readiness-polled event
+//!   loop (nonblocking sockets + a thin `poll(2)` FFI shim) multiplexes
+//!   every connection onto one loop thread; complete requests run on a
+//!   bounded worker pool. 10k idle keep-alive clients cost 10k slab
+//!   slots and O(`conn_workers`) threads, not 10k threads. Non-unix
+//!   targets fall back to the original thread-per-connection acceptor.
+//!   Both transports funnel through [`process_request`], so shedding,
+//!   graceful shutdown, request-id propagation and the drain-before-
+//!   close 4xx/503 paths behave identically.
 //! * **Framing** ([`http`]) — hand-rolled HTTP/1.1 with keep-alive and
-//!   `Content-Length` bodies; total parsing, hard size limits.
-//! * **Protocol** ([`protocol`]) — JSON bodies via [`crate::jsonio`];
-//!   float payloads round-trip bit-exactly, so wire responses are
-//!   bit-identical to direct router calls.
+//!   `Content-Length` bodies; total parsing, hard size limits. The
+//!   resumable [`http::FrameParser`] serves both blocking clients and
+//!   the nonblocking loop.
+//! * **Protocol** ([`protocol`], [`binproto`]) — JSON bodies via
+//!   [`crate::jsonio`]; float payloads round-trip bit-exactly, so wire
+//!   responses are bit-identical to direct router calls. A request with
+//!   `Content-Type: application/x-chh-binary` negotiates the compact
+//!   binary codec ([`binproto`]) on the data routes instead — raw
+//!   little-endian f32 bit patterns, bit-exact by construction. Errors
+//!   are always JSON.
 //! * **Micro-batching** ([`batcher`]) — concurrent `/query` requests
 //!   coalesce (flush on `max_batch` or `max_wait`) into one
 //!   `query_batch_pooled` call; a bounded admission queue rejects
@@ -44,6 +59,9 @@
 //! it. See `docs/SERVING.md` for the protocol and operational notes.
 
 pub mod batcher;
+pub mod binproto;
+#[cfg(unix)]
+mod event_loop;
 pub mod http;
 pub mod protocol;
 
@@ -135,9 +153,15 @@ impl Stack {
 pub struct ServerConfig {
     /// listen address; port 0 binds an ephemeral port (tests)
     pub addr: String,
-    /// concurrent-connection cap; the acceptor sheds connections beyond
-    /// it with an immediate 503 (keep-alive clients hold one each)
+    /// concurrent-connection cap; connections beyond it are shed with an
+    /// immediate 503. Idle keep-alive connections are cheap under the
+    /// event loop (a slab slot, no thread), so the default is high.
     pub max_conns: usize,
+    /// worker threads of the event-loop transport — the number of
+    /// requests executing concurrently (connections themselves are
+    /// multiplexed on one loop thread). Ignored by the non-unix
+    /// thread-per-connection fallback.
+    pub conn_workers: usize,
     /// micro-batcher policy
     pub batch: BatcherConfig,
     /// worker threads of the flush pool (0 = all cores,
@@ -155,7 +179,8 @@ impl Default for ServerConfig {
     fn default() -> Self {
         ServerConfig {
             addr: "127.0.0.1:0".to_string(),
-            max_conns: 256,
+            max_conns: 4096,
+            conn_workers: 16,
             batch: BatcherConfig::default(),
             pool_workers: 0,
             idle_timeout: Duration::from_secs(5),
@@ -208,6 +233,9 @@ struct Telemetry {
     /// per-route request counter + latency hist; the final entry is the
     /// catch-all `route="other"` series (404s, junk paths)
     routes: Vec<(&'static str, Arc<obs::Counter>, Arc<Hist>)>,
+    /// data-route requests by negotiated wire protocol
+    proto_json: Arc<obs::Counter>,
+    proto_binary: Arc<obs::Counter>,
     slow_threshold: Option<Duration>,
     slow_log: Option<SlowLog>,
 }
@@ -247,6 +275,15 @@ impl Telemetry {
             );
             routes.push((r, c, h));
         }
+        let proto = |p: &'static str| {
+            registry.counter(
+                "chh_requests_by_protocol",
+                "data-route requests answered, by negotiated wire protocol",
+                vec![("proto", p.to_string())],
+            )
+        };
+        let proto_json = proto("json");
+        let proto_binary = proto("binary");
         Telemetry {
             registry,
             stage_batch_wait,
@@ -256,6 +293,8 @@ impl Telemetry {
             stage_merge,
             stage_serialize,
             routes,
+            proto_json,
+            proto_binary,
             slow_threshold: (slow_ms > 0).then(|| Duration::from_millis(slow_ms)),
             slow_log: slow_log.map(|p| SlowLog::create(p, SLOW_LOG_MAX_BYTES)),
         }
@@ -286,6 +325,16 @@ impl Telemetry {
         }
     }
 
+    /// Count one data-route request against its negotiated wire protocol
+    /// (`chh_requests_by_protocol{proto=...}`).
+    fn count_proto(&self, binary: bool) {
+        if binary {
+            self.proto_binary.inc()
+        } else {
+            self.proto_json.inc()
+        }
+    }
+
     /// Record a batch flush's stage breakdown (called once per flush, on
     /// the collector thread — the histograms are lock-free).
     fn record_stages(&self, st: &obs::StageTimes) {
@@ -305,6 +354,7 @@ fn register_metrics(
     stack: &Stack,
     sstats: &Arc<ServerStats>,
     bstats: &Arc<BatcherStats>,
+    conns: &Arc<ConnCounts>,
     durable: Option<&Arc<DurableIndex>>,
     replica: Option<&(Arc<ReplicaIndex>, String)>,
     role: &'static str,
@@ -363,6 +413,20 @@ fn register_metrics(
         "queries answered through batch flushes",
         vec![],
         move || b.flushed.load(Ordering::Relaxed) as f64,
+    );
+    let c = conns.clone();
+    reg.gauge_fn(
+        "chh_open_connections",
+        "currently open client connections (shed connections excluded)",
+        vec![],
+        move || c.open.load(Ordering::SeqCst) as f64,
+    );
+    let c = conns.clone();
+    reg.counter_fn(
+        "chh_connections_accepted_total",
+        "client connections accepted since the server started",
+        vec![],
+        move || c.accepted.load(Ordering::Relaxed) as f64,
     );
     let router_counter = |name: &'static str,
                           help: &'static str,
@@ -546,6 +610,16 @@ fn register_metrics(
     }
 }
 
+/// Transport-level connection accounting, shared between the transport
+/// (event loop or legacy acceptor) and the `/metrics` scrape callbacks.
+#[derive(Default)]
+struct ConnCounts {
+    /// currently open client connections (shed connections excluded)
+    open: AtomicUsize,
+    /// connections accepted since start
+    accepted: AtomicU64,
+}
+
 struct State {
     stack: Stack,
     batcher: Batcher,
@@ -564,8 +638,12 @@ struct State {
     shutdown: AtomicBool,
     addr: SocketAddr,
     max_conns: usize,
-    active_conns: AtomicUsize,
-    /// over-cap connections currently being refused on shed threads
+    /// event-loop worker threads (request-execution concurrency)
+    conn_workers: usize,
+    /// open/accepted counts (`Arc` so scrape callbacks can read them
+    /// without referencing `State`)
+    conns: Arc<ConnCounts>,
+    /// over-cap connections currently being refused with a courtesy 503
     shedding_conns: AtomicUsize,
     idle_timeout: Duration,
     /// `Arc` so scrape callbacks can read it without referencing `State`
@@ -644,7 +722,10 @@ impl ServerHandle {
         if let Some(h) = self.acceptor.take() {
             let _ = h.join();
         }
-        while self.state.active_conns.load(Ordering::SeqCst) > 0 {
+        // the event loop closes every connection before its thread exits;
+        // the non-unix fallback's connection threads drain on their own —
+        // either way, wait for the count to hit zero
+        while self.state.conns.open.load(Ordering::SeqCst) > 0 {
             std::thread::sleep(Duration::from_millis(5));
         }
         // connection threads are gone ⇒ no more mutations can arrive;
@@ -773,7 +854,8 @@ impl Server {
             shutdown: AtomicBool::new(false),
             addr,
             max_conns: cfg.max_conns.max(1),
-            active_conns: AtomicUsize::new(0),
+            conn_workers: cfg.conn_workers.max(1),
+            conns: Arc::new(ConnCounts::default()),
             shedding_conns: AtomicUsize::new(0),
             idle_timeout: cfg.idle_timeout,
             stats: Arc::new(ServerStats {
@@ -794,11 +876,18 @@ impl Server {
             &state.stack,
             &state.stats,
             state.batcher.stats(),
+            &state.conns,
             state.durable.as_ref(),
             state.replica.as_ref(),
             state.role(),
         );
         let astate = state.clone();
+        #[cfg(unix)]
+        let acceptor = std::thread::Builder::new()
+            .name("chh-http-loop".to_string())
+            .spawn(move || event_loop::run(listener, &astate))
+            .expect("spawn http event loop");
+        #[cfg(not(unix))]
         let acceptor = std::thread::Builder::new()
             .name("chh-http-accept".to_string())
             .spawn(move || acceptor_loop(&listener, &astate))
@@ -834,6 +923,67 @@ impl Server {
     }
 }
 
+/// Execute one parsed request end to end — count, trace, dispatch,
+/// account, serialize — and return the response bytes plus whether the
+/// connection should stay open. Both transports (the unix event loop
+/// and the thread-per-connection fallback) funnel through here, so
+/// routing, tracing and accounting are transport-independent.
+fn process_request(state: &Arc<State>, req: &http::Request) -> (Vec<u8>, bool) {
+    state.stats.http_requests.fetch_add(1, Ordering::Relaxed);
+    let t0 = Instant::now();
+    // propagate the client's correlation id, or mint one — either way it
+    // is echoed in the response and carried through the trace /
+    // slow-query log
+    let rid = req.request_id.clone().unwrap_or_else(obs::gen_request_id);
+    let mut trace = Trace::new(rid);
+    let reply = dispatch(state, req, &mut trace);
+    let total = t0.elapsed();
+    state.telemetry.finish_request(&trace, &req.path, reply.status, total);
+    let keep = req.keep_alive && !state.shutdown.load(Ordering::SeqCst);
+    let mut out = Vec::with_capacity(reply.body.len() + 128);
+    let _ = http::write_response_ex(
+        &mut out,
+        reply.status,
+        &reply.body,
+        keep,
+        reply.content_type,
+        Some(&trace.id),
+    );
+    (out, keep)
+}
+
+/// Serialized 4xx for a framing error; counts `bad_requests`. The
+/// connection must close after flushing — framing is unreliable past a
+/// malformed request.
+fn bad_request_bytes(state: &Arc<State>, e: &HttpError) -> Vec<u8> {
+    state.stats.bad_requests.fetch_add(1, Ordering::Relaxed);
+    let status = if matches!(e, HttpError::TooLarge(_)) { 413 } else { 400 };
+    let body = protocol::error_json(&e.to_string());
+    let mut out = Vec::new();
+    let _ = http::write_response(&mut out, status, body.as_bytes(), false);
+    out
+}
+
+/// Serialized 503 for an over-cap connection, shed at the edge.
+#[cfg(unix)]
+fn overload_response_bytes() -> Vec<u8> {
+    let body = protocol::error_json("overloaded: connection limit reached");
+    let mut out = Vec::new();
+    let _ = http::write_response(&mut out, 503, body.as_bytes(), false);
+    out
+}
+
+/// Serialized 503 for a saturated worker queue. The event loop answers
+/// this from its own thread so overload can never wedge the transport.
+#[cfg(unix)]
+fn busy_response_bytes(keep_alive: bool) -> Vec<u8> {
+    let body = protocol::error_json("overloaded: request queue full");
+    let mut out = Vec::new();
+    let _ = http::write_response(&mut out, 503, body.as_bytes(), keep_alive);
+    out
+}
+
+#[cfg(not(unix))]
 fn acceptor_loop(listener: &TcpListener, state: &Arc<State>) {
     loop {
         if state.shutdown.load(Ordering::SeqCst) {
@@ -844,6 +994,7 @@ fn acceptor_loop(listener: &TcpListener, state: &Arc<State>) {
                 if state.shutdown.load(Ordering::SeqCst) {
                     return; // the accept was a shutdown poke
                 }
+                state.conns.accepted.fetch_add(1, Ordering::Relaxed);
                 // connection cap: shed load at the edge with a 503
                 // instead of growing an unbounded thread count. The
                 // courtesy 503 (write + drain) blocks for up to ~400ms
@@ -851,7 +1002,7 @@ fn acceptor_loop(listener: &TcpListener, state: &Arc<State>) {
                 // detached thread — the acceptor itself must never
                 // stall, least of all under overload. Past MAX_SHEDDING
                 // concurrent sheds, degrade to a plain drop.
-                if state.active_conns.load(Ordering::SeqCst) >= state.max_conns {
+                if state.conns.open.load(Ordering::SeqCst) >= state.max_conns {
                     if state.shedding_conns.fetch_add(1, Ordering::SeqCst) < MAX_SHEDDING {
                         let sstate = state.clone();
                         let spawned = std::thread::Builder::new()
@@ -869,7 +1020,7 @@ fn acceptor_loop(listener: &TcpListener, state: &Arc<State>) {
                     }
                     continue;
                 }
-                state.active_conns.fetch_add(1, Ordering::SeqCst);
+                state.conns.open.fetch_add(1, Ordering::SeqCst);
                 let cstate = state.clone();
                 let spawned = std::thread::Builder::new()
                     .name("chh-http-conn".to_string())
@@ -879,7 +1030,7 @@ fn acceptor_loop(listener: &TcpListener, state: &Arc<State>) {
                     });
                 if spawned.is_err() {
                     // thread spawn failed (resource exhaustion): undo
-                    state.active_conns.fetch_sub(1, Ordering::SeqCst);
+                    state.conns.open.fetch_sub(1, Ordering::SeqCst);
                 }
             }
             Err(_) => {
@@ -896,6 +1047,7 @@ fn acceptor_loop(listener: &TcpListener, state: &Arc<State>) {
 
 /// Refuse an over-cap connection with a 503 the client can actually
 /// read: write the response first, then [`drain_and_close`].
+#[cfg(not(unix))]
 fn shed_connection(stream: &TcpStream) {
     let body = protocol::error_json("overloaded: connection limit reached");
     let mut out = stream;
@@ -911,7 +1063,9 @@ fn shed_connection(stream: &TcpStream) {
 /// out first lets the FIN (and the response) land. Best-effort and
 /// bounded — short timeout, few reads — so a misbehaving or very large
 /// sender cannot hold the thread; payloads beyond the drain window may
-/// still observe a reset.
+/// still observe a reset. (The event loop's equivalent is its
+/// discard-input linger.)
+#[cfg(not(unix))]
 fn drain_and_close(stream: &TcpStream) {
     use std::io::Read;
     let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
@@ -927,44 +1081,31 @@ fn drain_and_close(stream: &TcpStream) {
 }
 
 /// Decrements the live-connection counter even if a handler panics.
+#[cfg(not(unix))]
 struct ConnGuard<'a>(&'a Arc<State>);
 
+#[cfg(not(unix))]
 impl Drop for ConnGuard<'_> {
     fn drop(&mut self) {
-        self.0.active_conns.fetch_sub(1, Ordering::SeqCst);
+        self.0.conns.open.fetch_sub(1, Ordering::SeqCst);
     }
 }
 
+#[cfg(not(unix))]
 fn handle_conn(state: &Arc<State>, stream: &TcpStream) {
+    use std::io::Write;
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(state.idle_timeout));
+    // a peer that stalls mid-read of a response must not park this
+    // thread forever either
+    let _ = stream.set_write_timeout(Some(state.idle_timeout));
     let mut reader = http::MessageReader::new(stream);
     loop {
         match reader.request() {
             Ok(req) => {
-                state.stats.http_requests.fetch_add(1, Ordering::Relaxed);
-                let t0 = Instant::now();
-                // propagate the client's correlation id, or mint one —
-                // either way it is echoed in the response and carried
-                // through the trace / slow-query log
-                let rid = req.request_id.clone().unwrap_or_else(obs::gen_request_id);
-                let mut trace = Trace::new(rid);
-                let reply = dispatch(state, &req, &mut trace);
-                let total = t0.elapsed();
-                state.telemetry.finish_request(&trace, &req.path, reply.status, total);
-                let keep = req.keep_alive && !state.shutdown.load(Ordering::SeqCst);
+                let (bytes, keep) = process_request(state, &req);
                 let mut out = stream;
-                if http::write_response_ex(
-                    &mut out,
-                    reply.status,
-                    &reply.body,
-                    keep,
-                    reply.content_type,
-                    Some(&trace.id),
-                )
-                .is_err()
-                    || !keep
-                {
+                if out.write_all(&bytes).is_err() || !keep {
                     return;
                 }
             }
@@ -974,11 +1115,9 @@ fn handle_conn(state: &Arc<State>, stream: &TcpStream) {
                 // framing is unreliable after a malformed request — answer
                 // and close (draining first, so the 4xx isn't destroyed
                 // by a reset triggered by unread request bytes)
-                state.stats.bad_requests.fetch_add(1, Ordering::Relaxed);
-                let status = if matches!(e, HttpError::TooLarge(_)) { 413 } else { 400 };
-                let body = protocol::error_json(&e.to_string());
+                let bytes = bad_request_bytes(state, &e);
                 let mut out = stream;
-                let _ = http::write_response(&mut out, status, body.as_bytes(), false);
+                let _ = out.write_all(&bytes);
                 drain_and_close(stream);
                 return;
             }
@@ -1006,6 +1145,13 @@ fn ok_json(v: Json) -> Reply {
 
 fn err_json(status: u16, msg: &str) -> Reply {
     Reply { status, body: protocol::error_json(msg).into_bytes(), content_type: CT_JSON }
+}
+
+/// A binary-codec success reply ([`binproto`]), negotiated by the
+/// request's `Content-Type: application/x-chh-binary`. Errors are
+/// always JSON regardless of the request's wire protocol.
+fn ok_bin(body: Vec<u8>) -> Reply {
+    Reply { status: 200, body, content_type: http::CT_CHH_BIN }
 }
 
 const ROUTES: &[&str] = &[
@@ -1036,10 +1182,25 @@ fn dispatch(state: &Arc<State>, req: &http::Request, trace: &mut Trace) -> Reply
             body: state.telemetry.registry.render().into_bytes(),
             content_type: METRICS_CONTENT_TYPE,
         },
-        ("POST", "/query") => handle_query(state, &req.body, trace),
-        ("POST", "/query_topk") => handle_topk(state, &req.body),
-        ("POST", "/insert") => handle_insert(state, &req.body),
-        ("POST", "/remove") => handle_remove(state, &req.body),
+        // the four data routes honor the negotiated wire protocol
+        // (`Content-Type: application/x-chh-binary` selects [`binproto`])
+        // and attribute themselves to `chh_requests_by_protocol`
+        ("POST", "/query") => {
+            state.telemetry.count_proto(req.binary);
+            handle_query(state, &req.body, req.binary, trace)
+        }
+        ("POST", "/query_topk") => {
+            state.telemetry.count_proto(req.binary);
+            handle_topk(state, &req.body, req.binary)
+        }
+        ("POST", "/insert") => {
+            state.telemetry.count_proto(req.binary);
+            handle_insert(state, &req.body, req.binary)
+        }
+        ("POST", "/remove") => {
+            state.telemetry.count_proto(req.binary);
+            handle_remove(state, &req.body, req.binary)
+        }
         ("GET", "/wal/stream") => handle_wal_stream(state, query),
         ("GET", "/wal/bootstrap") => handle_wal_bootstrap(state, query),
         ("POST", "/shutdown") => {
@@ -1094,8 +1255,13 @@ fn handle_wal_bootstrap(state: &Arc<State>, query: &str) -> Reply {
     }
 }
 
-fn handle_query(state: &Arc<State>, body: &[u8], trace: &mut Trace) -> Reply {
-    let req = match protocol::parse_query(body, state.dim()) {
+fn handle_query(state: &Arc<State>, body: &[u8], binary: bool, trace: &mut Trace) -> Reply {
+    let parsed = if binary {
+        binproto::decode_query(body, state.dim())
+    } else {
+        protocol::parse_query(body, state.dim())
+    };
+    let req = match parsed {
         Ok(r) => r,
         Err(e) => return err_json(e.status, &e.msg),
     };
@@ -1116,7 +1282,11 @@ fn handle_query(state: &Arc<State>, body: &[u8], trace: &mut Trace) -> Reply {
                 state.stats.latency.lock().unwrap().record_duration(t0.elapsed());
                 state.stats.probes_total.fetch_add(hit.probed as u64, Ordering::Relaxed);
                 let t_ser = Instant::now();
-                let reply = ok_json(protocol::hit_json(&hit));
+                let reply = if binary {
+                    ok_bin(binproto::encode_hit(&hit))
+                } else {
+                    ok_json(protocol::hit_json(&hit))
+                };
                 let ser = t_ser.elapsed();
                 tel.stage_serialize.observe_duration(ser);
                 trace.stage("serialize", ser);
@@ -1129,8 +1299,13 @@ fn handle_query(state: &Arc<State>, body: &[u8], trace: &mut Trace) -> Reply {
     }
 }
 
-fn handle_topk(state: &Arc<State>, body: &[u8]) -> Reply {
-    let (req, t) = match protocol::parse_topk(body, state.dim()) {
+fn handle_topk(state: &Arc<State>, body: &[u8], binary: bool) -> Reply {
+    let parsed = if binary {
+        binproto::decode_topk(body, state.dim())
+    } else {
+        protocol::parse_topk(body, state.dim())
+    };
+    let (req, t) = match parsed {
         Ok(r) => r,
         Err(e) => return err_json(e.status, &e.msg),
     };
@@ -1148,7 +1323,11 @@ fn handle_topk(state: &Arc<State>, body: &[u8]) -> Reply {
             eligible,
         ),
     };
-    ok_json(protocol::topk_json(&hits))
+    if binary {
+        ok_bin(binproto::encode_topk_hits(&hits))
+    } else {
+        ok_json(protocol::topk_json(&hits))
+    }
 }
 
 /// The 421 a read replica answers mutations with: the op belongs on the
@@ -1165,11 +1344,16 @@ fn replica_redirect(primary: &str) -> Reply {
     }
 }
 
-fn handle_insert(state: &Arc<State>, body: &[u8]) -> Reply {
+fn handle_insert(state: &Arc<State>, body: &[u8], binary: bool) -> Reply {
     if let Some((_, primary)) = &state.replica {
         return replica_redirect(primary);
     }
-    let id = match protocol::parse_id(body) {
+    let parsed = if binary {
+        binproto::decode_id(body, binproto::TAG_INSERT)
+    } else {
+        protocol::parse_id(body)
+    };
+    let id = match parsed {
         Ok(id) => id,
         Err(e) => return err_json(e.status, &e.msg),
     };
@@ -1193,6 +1377,9 @@ fn handle_insert(state: &Arc<State>, body: &[u8]) -> Reply {
     } else {
         r.index().insert_point(r.family().as_ref(), id, r.feats().row(id as usize));
     }
+    if binary {
+        return ok_bin(binproto::encode_ack(true, id, r.index().len() as u64));
+    }
     ok_json(obj(vec![
         ("inserted", Json::from(true)),
         ("id", Json::from(id as usize)),
@@ -1200,11 +1387,16 @@ fn handle_insert(state: &Arc<State>, body: &[u8]) -> Reply {
     ]))
 }
 
-fn handle_remove(state: &Arc<State>, body: &[u8]) -> Reply {
+fn handle_remove(state: &Arc<State>, body: &[u8], binary: bool) -> Reply {
     if let Some((_, primary)) = &state.replica {
         return replica_redirect(primary);
     }
-    let id = match protocol::parse_id(body) {
+    let parsed = if binary {
+        binproto::decode_id(body, binproto::TAG_REMOVE)
+    } else {
+        protocol::parse_id(body)
+    };
+    let id = match parsed {
         Ok(id) => id,
         Err(e) => return err_json(e.status, &e.msg),
     };
@@ -1219,6 +1411,9 @@ fn handle_remove(state: &Arc<State>, body: &[u8]) -> Reply {
     } else {
         r.index().remove(id)
     };
+    if binary {
+        return ok_bin(binproto::encode_ack(removed, id, r.index().len() as u64));
+    }
     ok_json(obj(vec![
         ("removed", Json::from(removed)),
         ("id", Json::from(id as usize)),
@@ -1299,6 +1494,26 @@ fn handle_stats(state: &Arc<State>) -> Reply {
                 ("max_batch", Json::Num(b.max_batch_seen())),
             ]),
         ),
+        (
+            "transport",
+            obj(vec![
+                ("model", Json::from(if cfg!(unix) { "event_loop" } else { "threaded" })),
+                ("conn_workers", Json::from(state.conn_workers)),
+                ("max_conns", Json::from(state.max_conns)),
+                (
+                    "open_connections",
+                    Json::from(state.conns.open.load(Ordering::SeqCst)),
+                ),
+                (
+                    "connections_accepted",
+                    Json::from(state.conns.accepted.load(Ordering::Relaxed) as usize),
+                ),
+                // OS-level thread count of the whole process: the
+                // transport-scale test and CI smoke assert this stays
+                // O(conn_workers) while thousands of sockets sit open
+                ("threads", process_threads().map_or(Json::Null, Json::from)),
+            ]),
+        ),
     ];
     match &state.stack {
         Stack::Static(r) => {
@@ -1341,6 +1556,22 @@ fn handle_stats(state: &Arc<State>) -> Reply {
         fields.push(("replication", r.stats_json(primary)));
     }
     ok_json(obj(fields))
+}
+
+/// Live thread count of this process, from `/proc/self/status` (linux
+/// only; other platforms report `null` in `/stats`).
+#[cfg(target_os = "linux")]
+fn process_threads() -> Option<usize> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    status
+        .lines()
+        .find_map(|l| l.strip_prefix("Threads:"))
+        .and_then(|v| v.trim().parse().ok())
+}
+
+#[cfg(not(target_os = "linux"))]
+fn process_threads() -> Option<usize> {
+    None
 }
 
 #[cfg(test)]
@@ -1386,7 +1617,8 @@ mod tests {
             shutdown: AtomicBool::new(false),
             addr: "127.0.0.1:1".parse().unwrap(),
             max_conns: 4,
-            active_conns: AtomicUsize::new(0),
+            conn_workers: 2,
+            conns: Arc::new(ConnCounts::default()),
             shedding_conns: AtomicUsize::new(0),
             idle_timeout: Duration::from_secs(1),
             stats: Arc::new(ServerStats {
@@ -1404,6 +1636,7 @@ mod tests {
             &state.stack,
             &state.stats,
             state.batcher.stats(),
+            &state.conns,
             None,
             None,
             state.role(),
@@ -1417,6 +1650,7 @@ mod tests {
             path: path.to_string(),
             keep_alive: true,
             request_id: None,
+            binary: false,
             body: body.as_bytes().to_vec(),
         }
     }
@@ -1434,6 +1668,7 @@ mod tests {
             path: p.to_string(),
             keep_alive: true,
             request_id: None,
+            binary: false,
             body: Vec::new(),
         };
         assert_eq!(disp(&state, &get("/healthz")).status, 200);
@@ -1480,6 +1715,7 @@ mod tests {
                 path: "/metrics".to_string(),
                 keep_alive: true,
                 request_id: None,
+                binary: false,
                 body: Vec::new(),
             },
         );
@@ -1523,6 +1759,7 @@ mod tests {
                 path: "/stats".to_string(),
                 keep_alive: true,
                 request_id: None,
+                binary: false,
                 body: Vec::new(),
             },
         );
@@ -1535,6 +1772,59 @@ mod tests {
         let latency = v.get("http").unwrap().get("latency").unwrap();
         assert_eq!(latency.get("count").unwrap().as_usize(), Some(3));
         assert!(v.get("static").unwrap().get("memory_bytes").unwrap().as_usize().unwrap() > 0);
+        let transport = v.get("transport").unwrap();
+        assert_eq!(transport.get("conn_workers").unwrap().as_usize(), Some(2));
+        assert_eq!(transport.get("open_connections").unwrap().as_usize(), Some(0));
+        let model = transport.get("model").unwrap().as_str().unwrap();
+        assert!(model == "event_loop" || model == "threaded");
+    }
+
+    #[test]
+    fn binary_dispatch_matches_json_bit_for_bit() {
+        let state = static_state();
+        let w = [0.5f32, -0.25, 0.125, -0.0, 1.5, -1.0, 0.75, 0.0625];
+        let jrep = disp(&state, &post("/query", &protocol::query_body(&w)));
+        assert_eq!(jrep.status, 200);
+        let jhit = protocol::parse_hit(&jrep.body).unwrap();
+        let mut breq = http::Request {
+            method: "POST".to_string(),
+            path: "/query".to_string(),
+            keep_alive: true,
+            request_id: None,
+            binary: true,
+            body: binproto::encode_query(&w, None),
+        };
+        let brep = disp(&state, &breq);
+        assert_eq!(brep.status, 200);
+        assert_eq!(brep.content_type, http::CT_CHH_BIN);
+        let bhit = binproto::decode_hit(&brep.body).unwrap();
+        match (jhit.best, bhit.best) {
+            (Some((ji, jm)), Some((bi, bm))) => {
+                assert_eq!(ji, bi, "winning id");
+                assert_eq!(jm.to_bits(), bm.to_bits(), "margin bits");
+            }
+            (j, b) => assert_eq!(j.is_none(), b.is_none(), "both empty or both hits"),
+        }
+        assert_eq!(jhit.scanned, bhit.scanned);
+        assert_eq!(jhit.probed, bhit.probed);
+        assert_eq!(jhit.nonempty, bhit.nonempty);
+        // malformed binary bodies get a clean JSON 400, never a panic
+        breq.body = vec![1, 2, 3];
+        let bad = disp(&state, &breq);
+        assert_eq!(bad.status, 400);
+        assert_eq!(bad.content_type, CT_JSON);
+        // both wire protocols were attributed on the data routes
+        let text = state.telemetry.registry.render();
+        let scrape = obs::parse_scrape(&text);
+        assert_eq!(
+            obs::series_value(&scrape, "chh_requests_by_protocol", r#"proto="json""#),
+            Some(1.0)
+        );
+        assert_eq!(
+            obs::series_value(&scrape, "chh_requests_by_protocol", r#"proto="binary""#),
+            Some(2.0)
+        );
+        assert_eq!(obs::series_value(&scrape, "chh_open_connections", ""), Some(0.0));
     }
 
     #[test]

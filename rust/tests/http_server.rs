@@ -17,7 +17,8 @@ use chh::par::Pool;
 use chh::replicate::{spawn_tailer, ReplicaConfig, ReplicaIndex};
 use chh::rng::Rng;
 use chh::server::{
-    protocol, BatcherConfig, Durability, HttpClient, ReplicaRole, Server, ServerConfig, Stack,
+    binproto, protocol, BatcherConfig, Durability, HttpClient, ReplicaRole, Server, ServerConfig,
+    Stack,
 };
 use chh::table::HyperplaneIndex;
 use chh::testing::unit_vec;
@@ -29,6 +30,7 @@ fn server_cfg() -> ServerConfig {
     ServerConfig {
         addr: "127.0.0.1:0".to_string(),
         max_conns: 32,
+        conn_workers: 2,
         batch: BatcherConfig {
             max_batch: 8,
             max_wait: Duration::from_millis(2),
@@ -276,6 +278,138 @@ fn malformed_requests_get_clean_errors() {
     assert_eq!(resp.status, 200);
     let resp = client.get("/healthz").unwrap();
     assert_eq!(resp.status, 200);
+    drop(client);
+    handle.shutdown();
+}
+
+#[test]
+fn binary_wire_matches_json_wire_and_direct() {
+    let (stack, router) = static_stack(500, 81);
+    let handle = Server::spawn(stack, server_cfg()).expect("spawn server");
+    let addr = handle.addr().to_string();
+    let mut rng = Rng::seed_from_u64(123);
+    let ws: Vec<Vec<f32>> = (0..16).map(|_| unit_vec(&mut rng, DIM)).collect();
+    let mut client = HttpClient::connect_retry(&addr, Duration::from_secs(5)).unwrap();
+    client.set_timeout(Duration::from_secs(10)).unwrap();
+    let mut json_hits = Vec::new();
+    let mut bin_hits = Vec::new();
+    for w in &ws {
+        // same hyperplane over both wires, interleaved on ONE connection:
+        // negotiation is per-request, not per-socket
+        let jresp = client.post("/query", &protocol::query_body(w)).expect("json /query");
+        assert_eq!(jresp.status, 200);
+        assert!(!jresp.binary, "json request gets a json response");
+        json_hits.push(protocol::parse_hit(&jresp.body).expect("parse json hit"));
+        let breq = binproto::encode_query(w, None);
+        let bresp = client.post_binary("/query", &breq).expect("binary /query");
+        assert_eq!(bresp.status, 200);
+        assert!(bresp.binary, "binary request gets a binary response");
+        bin_hits.push(binproto::decode_hit(&bresp.body).expect("decode binary hit"));
+    }
+    drop(client);
+    let reqs: Vec<QueryRequest> =
+        ws.iter().map(|w| QueryRequest { w: w.clone(), exclude: None }).collect();
+    let direct = router.query_batch_pooled(&reqs, &Pool::new(2));
+    for (i, ((jh, bh), dh)) in
+        json_hits.iter().zip(bin_hits.iter()).zip(direct.iter()).enumerate()
+    {
+        assert_hits_identical(jh, dh, &format!("json wire vs direct {i}"));
+        assert_hits_identical(bh, dh, &format!("binary wire vs direct {i}"));
+        assert_hits_identical(bh, jh, &format!("binary wire vs json wire {i}"));
+    }
+    handle.shutdown();
+}
+
+#[test]
+fn binary_online_topk_and_mutation_acks() {
+    let (stack, router) = online_stack(400, 91);
+    let handle = Server::spawn(stack, server_cfg()).expect("spawn server");
+    let addr = handle.addr().to_string();
+    let mut rng = Rng::seed_from_u64(456);
+    let mut client = HttpClient::connect_retry(&addr, Duration::from_secs(5)).unwrap();
+    client.set_timeout(Duration::from_secs(10)).unwrap();
+
+    // topk: binary wire == json wire, bit for bit
+    let w = unit_vec(&mut rng, DIM);
+    let jresp = client.post("/query_topk", &protocol::topk_body(&w, 7)).expect("json topk");
+    assert_eq!(jresp.status, 200);
+    let jt = protocol::parse_topk_hits(&jresp.body).expect("parse json topk");
+    let bresp =
+        client.post_binary("/query_topk", &binproto::encode_topk(&w, 7, None)).expect("bin topk");
+    assert_eq!(bresp.status, 200);
+    let bt = binproto::decode_topk_hits(&bresp.body).expect("decode binary topk");
+    assert_eq!(jt.len(), bt.len(), "topk lengths");
+    for ((ji, jm), (bi, bm)) in jt.iter().zip(bt.iter()) {
+        assert_eq!(ji, bi, "topk id");
+        assert_eq!(jm.to_bits(), bm.to_bits(), "topk margin bits");
+    }
+
+    // binary mutations round-trip through typed acks
+    let resp = client
+        .post_binary("/remove", &binproto::encode_id(binproto::TAG_REMOVE, 3))
+        .expect("bin remove");
+    assert_eq!(resp.status, 200);
+    assert!(resp.binary);
+    let (removed, id, live) = binproto::decode_ack(&resp.body).expect("decode remove ack");
+    assert!(removed, "first remove applies");
+    assert_eq!(id, 3);
+    assert_eq!(live as usize, router.index().len());
+    assert!(!router.index().contains(3));
+    // double remove acks removed=false
+    let resp = client
+        .post_binary("/remove", &binproto::encode_id(binproto::TAG_REMOVE, 3))
+        .expect("bin re-remove");
+    let (removed, _, _) = binproto::decode_ack(&resp.body).expect("decode re-remove ack");
+    assert!(!removed, "second remove is a no-op");
+    // insert it back
+    let resp = client
+        .post_binary("/insert", &binproto::encode_id(binproto::TAG_INSERT, 3))
+        .expect("bin insert");
+    assert_eq!(resp.status, 200);
+    let (inserted, id, _) = binproto::decode_ack(&resp.body).expect("decode insert ack");
+    assert!(inserted);
+    assert_eq!(id, 3);
+    assert!(router.index().contains(3));
+    // out-of-store ids are rejected with a JSON error (errors are always
+    // json, whatever the request wire)
+    let resp = client
+        .post_binary("/insert", &binproto::encode_id(binproto::TAG_INSERT, 1_000_000))
+        .expect("bad bin insert");
+    assert_eq!(resp.status, 400);
+    assert!(!resp.binary, "errors come back as json");
+    drop(client);
+    handle.shutdown();
+}
+
+#[test]
+fn malformed_binary_gets_clean_json_errors() {
+    let (stack, _router) = static_stack(200, 101);
+    let handle = Server::spawn(stack, server_cfg()).expect("spawn server");
+    let addr = handle.addr().to_string();
+    let mut client = HttpClient::connect_retry(&addr, Duration::from_secs(5)).unwrap();
+    client.set_timeout(Duration::from_secs(5)).unwrap();
+    let w = vec![0.5f32; DIM];
+    // garbage body
+    let resp = client.post_binary("/query", &[1, 2, 3]).unwrap();
+    assert_eq!(resp.status, 400);
+    assert!(!resp.binary, "decode errors are json");
+    // every truncation of a valid frame fails cleanly and keeps the
+    // connection usable
+    let frame = binproto::encode_query(&w, None);
+    for cut in [0, 1, 4, 5, 8, frame.len() - 1] {
+        let resp = client.post_binary("/query", &frame[..cut]).unwrap();
+        assert_eq!(resp.status, 400, "truncated at {cut}");
+    }
+    // wrong tag for the route
+    let resp = client.post_binary("/query", &binproto::encode_topk(&w, 3, None)).unwrap();
+    assert_eq!(resp.status, 400, "topk frame on /query");
+    // dimension mismatch
+    let resp = client.post_binary("/query", &binproto::encode_query(&[1.0; 3], None)).unwrap();
+    assert_eq!(resp.status, 400, "dimension mismatch");
+    // and a good request still works on the same connection
+    let resp = client.post_binary("/query", &frame).unwrap();
+    assert_eq!(resp.status, 200);
+    assert!(resp.binary);
     drop(client);
     handle.shutdown();
 }

@@ -1,0 +1,103 @@
+//! Transport-scaling smoke: the acceptance criterion of the event-loop
+//! refactor is that idle keep-alive connections cost O(workers) threads,
+//! not O(connections). This opens hundreds of idle sockets against a
+//! live server, checks `/stats` connection accounting and (on Linux)
+//! the process thread count, and verifies the server still answers
+//! queries while holding them all.
+
+#![cfg(unix)]
+
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use chh::data::test_blobs;
+use chh::hash::{BhHash, HashFamily};
+use chh::rng::Rng;
+use chh::server::{protocol, BatcherConfig, HttpClient, Server, ServerConfig, Stack};
+use chh::table::HyperplaneIndex;
+
+const DIM: usize = 16;
+const IDLE_CONNS: usize = 300;
+
+#[test]
+fn idle_connections_cost_bounded_threads() {
+    let mut rng = Rng::seed_from_u64(7);
+    let ds = test_blobs(200, DIM, 3, &mut rng);
+    let fam: Arc<dyn HashFamily> = Arc::new(BhHash::sample(DIM, 10, &mut rng));
+    let idx = Arc::new(HyperplaneIndex::build(fam.as_ref(), ds.features(), 4));
+    let feats = Arc::new(ds.features().clone());
+    let router = Arc::new(chh::coordinator::Router::new(fam, idx, feats, 1, 16));
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        max_conns: 1024,
+        conn_workers: 4,
+        batch: BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            queue_cap: 256,
+        },
+        pool_workers: 2,
+        // long enough that the idle herd is never reaped mid-test
+        idle_timeout: Duration::from_secs(60),
+        slow_ms: 0,
+        slow_log: None,
+    };
+    let handle = Server::spawn(Stack::Static(router), cfg).expect("spawn server");
+    let addr = handle.addr().to_string();
+
+    // the idle herd: connected, never sending a byte
+    let mut idle: Vec<TcpStream> = Vec::with_capacity(IDLE_CONNS);
+    for i in 0..IDLE_CONNS {
+        let s = TcpStream::connect(&addr).unwrap_or_else(|e| panic!("connect {i}: {e}"));
+        idle.push(s);
+    }
+
+    // accepts are asynchronous: poll /stats until the herd is accounted
+    let mut client = HttpClient::connect_retry(&addr, Duration::from_secs(5)).unwrap();
+    client.set_timeout(Duration::from_secs(10)).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(20);
+    let transport = loop {
+        let resp = client.get("/stats").expect("get /stats");
+        assert_eq!(resp.status, 200);
+        let v = chh::jsonio::Json::parse_bytes(&resp.body).expect("stats json");
+        let t = v.get("transport").expect("transport section").clone();
+        let open = t.get("open_connections").and_then(|x| x.as_usize()).unwrap_or(0);
+        if open >= IDLE_CONNS {
+            break t;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "only {open}/{IDLE_CONNS} idle connections accounted in /stats"
+        );
+        std::thread::sleep(Duration::from_millis(25));
+    };
+    assert_eq!(
+        transport.get("model").and_then(|x| x.as_str()),
+        Some("event_loop"),
+        "unix builds serve through the poll(2) event loop"
+    );
+    assert_eq!(transport.get("conn_workers").and_then(|x| x.as_usize()), Some(4));
+    let accepted =
+        transport.get("connections_accepted").and_then(|x| x.as_usize()).unwrap_or(0);
+    assert!(accepted > IDLE_CONNS, "acceptor counted the herd (got {accepted})");
+    // O(workers), not O(connections): with 300+ sockets parked the whole
+    // process stays well under a hundred threads (a thread-per-connection
+    // regression would put it past 300)
+    if let Some(threads) = transport.get("threads").and_then(|x| x.as_usize()) {
+        assert!(
+            threads < 100,
+            "{threads} process threads while holding {IDLE_CONNS} idle connections"
+        );
+    }
+
+    // the server still answers queries while holding the herd
+    let w = vec![0.5f32; DIM];
+    let resp = client.post("/query", &protocol::query_body(&w)).expect("post /query");
+    assert_eq!(resp.status, 200);
+    protocol::parse_hit(&resp.body).expect("parse hit");
+
+    drop(client);
+    drop(idle);
+    handle.shutdown();
+}
