@@ -1,0 +1,439 @@
+//! The partition map: the cluster's single piece of shared
+//! configuration.
+//!
+//! A map is a versioned list of **contiguous, non-overlapping id
+//! ranges**, each owned by one partition primary (with an optional
+//! replica set for read failover). Routers hold the whole map in
+//! memory and consult it on every request; primaries never see it —
+//! they just serve their id range like any single-node server.
+//!
+//! The serialized form is a small JSON document (hand-rolled via
+//! [`crate::jsonio`], like every other wire format here):
+//!
+//! ```json
+//! {
+//!   "format": 1,
+//!   "version": 3,
+//!   "partitions": [
+//!     {"start": 0,   "end": 500, "primary": "10.0.0.1:8080",
+//!      "replicas": ["10.0.0.2:8080"], "family_check": 123456789},
+//!     {"start": 500, "end": 1000, "primary": "10.0.0.3:8080",
+//!      "replicas": [], "family_check": 123456789}
+//!   ]
+//! }
+//! ```
+//!
+//! Invariants, enforced by [`PartitionMap::validate`] (parsing runs it,
+//! so an invalid map cannot enter the process):
+//!
+//! * at least one partition; every range non-empty (`start < end`);
+//! * ranges sorted, starting at id 0, and exactly contiguous —
+//!   `partitions[i].end == partitions[i+1].start` — so overlaps and
+//!   gaps are both structurally impossible;
+//! * every partition declares the same `family_check` (the
+//!   [`crate::replicate::family_fingerprint`] of the hash family its
+//!   codes were produced with): one cluster, one family. Routers refuse
+//!   to install a map whose fingerprint differs from the family they
+//!   validated at startup, so mismatched codes are caught at load time
+//!   rather than as silently-wrong merges.
+//!
+//! Maps are persisted with [`crate::persist::atomic_write`] (tmp +
+//! fsync + rename), so a map file on disk is always a complete
+//! document. `version` must increase on every change; routers reject
+//! non-monotonic installs (see `ClusterRouter::install_map`).
+
+use std::path::Path;
+
+use crate::jsonio::{obj, Json};
+
+/// Serialization format version; bumped only on layout changes.
+pub const MAP_FORMAT: u64 = 1;
+
+/// One contiguous id range and the endpoints serving it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Partition {
+    /// first id owned by this partition (inclusive)
+    pub start: u32,
+    /// one past the last id owned (exclusive)
+    pub end: u32,
+    /// the primary's `host:port` — mutations for this range go here
+    pub primary: String,
+    /// read replicas, in failover preference order
+    pub replicas: Vec<String>,
+    /// [`crate::replicate::family_fingerprint`] of the hash family the
+    /// partition's codes were produced with
+    pub family_check: u32,
+}
+
+impl Partition {
+    pub fn contains(&self, id: u32) -> bool {
+        self.start <= id && id < self.end
+    }
+
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("start", Json::from(self.start as usize)),
+            ("end", Json::from(self.end as usize)),
+            ("primary", Json::from(self.primary.as_str())),
+            (
+                "replicas",
+                Json::Arr(self.replicas.iter().map(|r| Json::from(r.as_str())).collect()),
+            ),
+            ("family_check", Json::from(self.family_check as usize)),
+        ])
+    }
+
+    fn from_json(v: &Json, i: usize) -> Result<Partition, String> {
+        let field = |k: &str| {
+            v.get(k)
+                .and_then(|x| x.as_usize())
+                .ok_or_else(|| format!("partition {i}: missing/invalid '{k}'"))
+        };
+        let start = field("start")?;
+        let end = field("end")?;
+        let family_check = field("family_check")?;
+        if start > u32::MAX as usize || end > u32::MAX as usize {
+            return Err(format!("partition {i}: id range exceeds u32"));
+        }
+        if family_check > u32::MAX as usize {
+            return Err(format!("partition {i}: family_check exceeds u32"));
+        }
+        let primary = v
+            .get("primary")
+            .and_then(|x| x.as_str())
+            .ok_or_else(|| format!("partition {i}: missing/invalid 'primary'"))?
+            .to_string();
+        let replicas = match v.get("replicas") {
+            None => Vec::new(),
+            Some(r) => r
+                .as_arr()
+                .ok_or_else(|| format!("partition {i}: 'replicas' must be an array"))?
+                .iter()
+                .map(|x| {
+                    x.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| format!("partition {i}: replica addr must be a string"))
+                })
+                .collect::<Result<Vec<_>, _>>()?,
+        };
+        Ok(Partition {
+            start: start as u32,
+            end: end as u32,
+            primary,
+            replicas,
+            family_check: family_check as u32,
+        })
+    }
+}
+
+/// The versioned id-range → endpoint assignment for one cluster.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PartitionMap {
+    /// monotone config version; routers refuse installs that do not
+    /// strictly increase it
+    pub version: u64,
+    /// contiguous ranges covering `0..id_space()`, sorted by `start`
+    pub partitions: Vec<Partition>,
+}
+
+impl PartitionMap {
+    /// Check every structural invariant (see the module doc).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.partitions.is_empty() {
+            return Err("a partition map needs at least one partition".into());
+        }
+        let fc = self.partitions[0].family_check;
+        let mut expect_start = 0u32;
+        for (i, p) in self.partitions.iter().enumerate() {
+            if p.start >= p.end {
+                return Err(format!(
+                    "partition {i}: empty or inverted range [{}, {})",
+                    p.start, p.end
+                ));
+            }
+            if p.start != expect_start {
+                let what = if p.start > expect_start { "gap" } else { "overlap" };
+                return Err(format!(
+                    "partition {i}: {what} in id coverage — starts at {} but {} is expected \
+                     (ranges must be sorted, contiguous, and begin at 0)",
+                    p.start, expect_start
+                ));
+            }
+            if p.primary.is_empty() {
+                return Err(format!("partition {i}: empty primary address"));
+            }
+            if p.family_check != fc {
+                return Err(format!(
+                    "partition {i}: family_check {} != partition 0's {fc} — one cluster \
+                     serves one hash family",
+                    p.family_check
+                ));
+            }
+            expect_start = p.end;
+        }
+        Ok(())
+    }
+
+    /// The cluster-wide family fingerprint (uniform across partitions —
+    /// call only on a validated map).
+    pub fn family_check(&self) -> u32 {
+        self.partitions.first().map_or(0, |p| p.family_check)
+    }
+
+    /// One past the largest routable id.
+    pub fn id_space(&self) -> u32 {
+        self.partitions.last().map_or(0, |p| p.end)
+    }
+
+    /// Index of the partition owning `id` (None when `id` is outside
+    /// the covered id space).
+    pub fn partition_for(&self, id: u32) -> Option<usize> {
+        // coverage is contiguous from 0, so the owner is the last
+        // partition whose start is <= id
+        let i = self.partitions.partition_point(|p| p.start <= id);
+        if i == 0 {
+            return None;
+        }
+        if self.partitions[i - 1].contains(id) {
+            Some(i - 1)
+        } else {
+            None
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("format", Json::from(MAP_FORMAT as usize)),
+            ("version", Json::from(self.version as usize)),
+            (
+                "partitions",
+                Json::Arr(self.partitions.iter().map(Partition::to_json).collect()),
+            ),
+        ])
+    }
+
+    pub fn to_string_compact(&self) -> String {
+        self.to_json().to_string_compact()
+    }
+
+    pub fn to_string_pretty(&self) -> String {
+        self.to_json().to_string_pretty()
+    }
+
+    /// Parse **and validate** one serialized map.
+    pub fn parse(text: &str) -> Result<PartitionMap, String> {
+        let v = Json::parse(text).map_err(|e| format!("partition map: {e}"))?;
+        let format = v
+            .get("format")
+            .and_then(|x| x.as_usize())
+            .ok_or("partition map: missing 'format'")?;
+        if format as u64 != MAP_FORMAT {
+            return Err(format!(
+                "partition map: format {format} not supported (this build reads {MAP_FORMAT})"
+            ));
+        }
+        let version = v
+            .get("version")
+            .and_then(|x| x.as_usize())
+            .ok_or("partition map: missing 'version'")? as u64;
+        let parts = v
+            .get("partitions")
+            .and_then(|x| x.as_arr())
+            .ok_or("partition map: missing 'partitions' array")?;
+        let partitions = parts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| Partition::from_json(p, i))
+            .collect::<Result<Vec<_>, _>>()?;
+        let map = PartitionMap { version, partitions };
+        map.validate()?;
+        Ok(map)
+    }
+
+    pub fn parse_bytes(bytes: &[u8]) -> Result<PartitionMap, String> {
+        let text =
+            std::str::from_utf8(bytes).map_err(|_| "partition map: not utf-8".to_string())?;
+        Self::parse(text)
+    }
+
+    /// Persist atomically (tmp + fsync + rename): a reader never sees a
+    /// torn map, and a crashed writer leaves the old version in place.
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        self.validate().map_err(|e| anyhow::anyhow!("refusing to save: {e}"))?;
+        let mut text = self.to_string_pretty();
+        text.push('\n');
+        crate::persist::atomic_write(path, text.as_bytes())
+            .map_err(|e| anyhow::anyhow!("writing {}: {e:#}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<PartitionMap> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Self::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::testing::forall;
+
+    fn addr(rng: &mut Rng) -> String {
+        format!("10.0.{}.{}:{}", rng.below(256), rng.below(256), 1024 + rng.below(60000))
+    }
+
+    /// A random *valid* map: 1..=6 contiguous partitions from id 0.
+    fn random_map(rng: &mut Rng) -> PartitionMap {
+        let n = 1 + rng.below(6);
+        let fc = rng.below(u32::MAX as usize) as u32;
+        let version = rng.below(1_000_000) as u64;
+        let mut partitions = Vec::with_capacity(n);
+        let mut start = 0u32;
+        for _ in 0..n {
+            let end = start + 1 + rng.below(5000) as u32;
+            let replicas = (0..rng.below(3)).map(|_| addr(rng)).collect();
+            partitions.push(Partition {
+                start,
+                end,
+                primary: addr(rng),
+                replicas,
+                family_check: fc,
+            });
+            start = end;
+        }
+        PartitionMap { version, partitions }
+    }
+
+    #[test]
+    fn serialize_parse_roundtrip() {
+        forall("map roundtrip", 200, |rng| {
+            let m = random_map(rng);
+            let compact = PartitionMap::parse(&m.to_string_compact())
+                .map_err(|e| format!("compact reparse: {e}"))?;
+            crate::prop_assert!(compact == m, "compact roundtrip changed the map");
+            let pretty = PartitionMap::parse(&m.to_string_pretty())
+                .map_err(|e| format!("pretty reparse: {e}"))?;
+            crate::prop_assert!(pretty == m, "pretty roundtrip changed the map");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn truncation_at_every_byte_is_a_clean_error() {
+        let mut rng = Rng::seed_from_u64(41);
+        let m = random_map(&mut rng);
+        let s = m.to_string_compact();
+        for cut in 0..s.len() {
+            assert!(
+                PartitionMap::parse(&s[..cut]).is_err(),
+                "map cut at byte {cut} must fail to parse"
+            );
+        }
+    }
+
+    #[test]
+    fn overlapping_and_gapped_ranges_are_rejected() {
+        forall("map overlap/gap rejection", 100, |rng| {
+            let mut m = random_map(rng);
+            if m.partitions.len() < 2 {
+                m.partitions.push(Partition {
+                    start: m.id_space(),
+                    end: m.id_space() + 10,
+                    primary: addr(rng),
+                    replicas: vec![],
+                    family_check: m.family_check(),
+                });
+            }
+            let i = 1 + rng.below(m.partitions.len() - 1);
+            // shift one boundary: +delta opens a gap, -delta an overlap
+            let mut gapped = m.clone();
+            gapped.partitions[i].start += 1 + rng.below(50) as u32;
+            crate::prop_assert!(
+                PartitionMap::parse(&gapped.to_string_compact()).is_err(),
+                "gap at partition {i} must be rejected"
+            );
+            let mut overlapped = m.clone();
+            let width = overlapped.partitions[i - 1].end - overlapped.partitions[i - 1].start;
+            overlapped.partitions[i].start -= 1 + rng.below(width as usize) as u32;
+            crate::prop_assert!(
+                PartitionMap::parse(&overlapped.to_string_compact()).is_err(),
+                "overlap at partition {i} must be rejected"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn structural_invalids_are_rejected() {
+        let mut rng = Rng::seed_from_u64(7);
+        let m = random_map(&mut rng);
+        // empty partition list
+        assert!(PartitionMap::parse(r#"{"format":1,"version":1,"partitions":[]}"#).is_err());
+        // wrong format version
+        let wrong = m.to_string_compact().replacen("\"format\":1", "\"format\":99", 1);
+        assert!(PartitionMap::parse(&wrong).is_err());
+        // coverage must start at id 0
+        let mut shifted = m.clone();
+        for p in &mut shifted.partitions {
+            p.start += 5;
+            p.end += 5;
+        }
+        assert!(PartitionMap::parse(&shifted.to_string_compact()).is_err());
+        // empty range
+        let mut empty = m.clone();
+        empty.partitions[0].end = empty.partitions[0].start;
+        assert!(empty.validate().is_err());
+        // mixed family fingerprints
+        let mut mixed = m.clone();
+        mixed.partitions[0].family_check ^= 1;
+        if mixed.partitions.len() > 1 {
+            assert!(PartitionMap::parse(&mixed.to_string_compact()).is_err());
+        }
+        // empty primary address
+        let mut anon = m;
+        anon.partitions[0].primary.clear();
+        assert!(anon.validate().is_err());
+    }
+
+    #[test]
+    fn partition_lookup_covers_the_id_space() {
+        forall("map partition_for", 100, |rng| {
+            let m = random_map(rng);
+            for _ in 0..50 {
+                let id = rng.below(m.id_space() as usize + 100) as u32;
+                match m.partition_for(id) {
+                    Some(i) => {
+                        crate::prop_assert!(
+                            m.partitions[i].contains(id),
+                            "id {id} routed to partition {i} which does not own it"
+                        );
+                    }
+                    None => {
+                        crate::prop_assert!(
+                            id >= m.id_space(),
+                            "covered id {id} has no owning partition"
+                        );
+                    }
+                }
+            }
+            crate::prop_assert!(
+                m.partition_for(m.id_space()).is_none(),
+                "id_space() itself must be unroutable"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn save_load_roundtrip_is_atomic_format() {
+        let mut rng = Rng::seed_from_u64(13);
+        let m = random_map(&mut rng);
+        let path = std::env::temp_dir()
+            .join(format!("chh_map_{}_{}.json", std::process::id(), m.version));
+        m.save(&path).expect("save map");
+        let back = PartitionMap::load(&path).expect("load map");
+        assert_eq!(back, m);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,47 @@
+//! Cluster serving: partitioned primaries behind a scatter-gather
+//! router tier.
+//!
+//! PR 5's replication scales *reads* of one primary; this subsystem
+//! scales *writes and memory* by partitioning the id space across N
+//! independent primaries (each with its own WAL and replica set) and
+//! putting a stateless router tier in front:
+//!
+//! ```text
+//!            clients (JSON over HTTP)
+//!                      │
+//!             ┌────────┴────────┐
+//!             │   chh route     │   × M stateless routers
+//!             │  (scatter/merge)│
+//!             └───┬───────┬─────┘
+//!        binary wire       binary wire
+//!             │                 │
+//!   ┌─────────┴───┐     ┌───────┴─────┐
+//!   │ primary 0   │     │ primary 1   │   ids [0,k)  /  [k,n)
+//!   │  WAL + idx  │     │  WAL + idx  │
+//!   │  replicas…  │     │  replicas…  │
+//!   └─────────────┘     └─────────────┘
+//! ```
+//!
+//! * [`map`] — the versioned partition-map format: contiguous id
+//!   ranges → endpoints, overlap/gap validation, a `family_check`
+//!   fingerprint so mismatched codes are refused at load, persisted via
+//!   `persist::atomic_write`.
+//! * [`router`] — [`ClusterRouter`]: keep-alive pooled fan-out of
+//!   `/query`/`/query_topk` with the exact `OnlineRouter` merge
+//!   semantics, id-routed mutations with 421-following map refresh,
+//!   per-partition primary→replica failover, and degraded
+//!   partial-answer reporting.
+//! * [`split`] — [`split_partition`]: the growth story; carve one
+//!   WAL-backed range into two fresh primaries and emit the
+//!   next-version map.
+//!
+//! Served by `Stack::Cluster` in `server/` (`chh route`); documented in
+//! `docs/CLUSTER.md`.
+
+pub mod map;
+pub mod router;
+pub mod split;
+
+pub use map::{Partition, PartitionMap};
+pub use router::{ClusterAnswer, ClusterConfig, ClusterError, ClusterMeta, ClusterRouter};
+pub use split::{split_partition, SplitReport, SplitTarget};

@@ -1,0 +1,768 @@
+//! The stateless scatter-gather router.
+//!
+//! A `ClusterRouter` owns a validated [`PartitionMap`] plus keep-alive
+//! connection pools to every partition endpoint, and lifts the
+//! in-process `OnlineRouter` fan-out/merge over HTTP:
+//!
+//! * `/query` is broadcast to **every** partition over the binary wire
+//!   protocol and the per-partition [`QueryHit`]s are folded with
+//!   [`crate::online::merge_hits`] — the same margin-then-id semantics
+//!   as a single node, so a 1-partition cluster is bit-identical to
+//!   querying that node directly (pinned by `tests/cluster.rs`).
+//! * `/query_topk` concatenates the per-partition short lists and
+//!   re-sorts with `ShardedIndex::query_topk`'s exact tie-break
+//!   (margin ascending, then id ascending), truncating to `t`.
+//! * `/insert` / `/remove` are routed to the **one** primary owning the
+//!   id range; a 421 reply (the map is stale, the target is now a
+//!   replica) triggers a map reload plus a single redirect-following
+//!   retry, reusing the replication tier's redirect body.
+//!
+//! Reads fail over primary → replicas in map order. A partition with no
+//! reachable target does not fail the query: the survivors' merge is
+//! returned as a **degraded partial answer** (`"partial": true` upstream
+//! and `chh_router_partial_answers_total`), never a silent short list.
+//! Only when *no* partition answers does the router return 503.
+//!
+//! The router is deliberately stateless: it holds no index, no WAL, and
+//! can be restarted or scaled horizontally at will. All durable state
+//! lives in the partitions; the only configuration is the map.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::coordinator::QueryRequest;
+use crate::jsonio::{obj, Json};
+use crate::online::merge_hits;
+use crate::server::binproto;
+use crate::server::http::HttpClient;
+use crate::table::QueryHit;
+
+use super::map::PartitionMap;
+
+/// Idle keep-alive connections retained per endpoint.
+const POOL_CAP: usize = 8;
+
+/// An error with an upstream-facing HTTP status.
+#[derive(Debug)]
+pub struct ClusterError {
+    pub status: u16,
+    pub msg: String,
+}
+
+impl ClusterError {
+    fn new(status: u16, msg: impl Into<String>) -> Self {
+        ClusterError { status, msg: msg.into() }
+    }
+}
+
+impl std::fmt::Display for ClusterError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} {}", self.status, self.msg)
+    }
+}
+
+/// What the router learned about the cluster at startup: every
+/// partition must agree on all four fields.
+#[derive(Clone, Debug)]
+pub struct ClusterMeta {
+    pub dim: usize,
+    pub bits: usize,
+    pub family: String,
+    pub family_check: u32,
+}
+
+/// Monotone counters for the router's /metrics and /stats.
+#[derive(Default)]
+pub struct ClusterStats {
+    /// scatter-gather reads issued (each fans out to every partition)
+    pub fanout_reads: AtomicU64,
+    /// reads answered with at least one partition missing
+    pub partial_answers: AtomicU64,
+    /// reads answered by a replica because the primary was unreachable
+    pub failovers: AtomicU64,
+    /// mutations that hit a 421 and were retried at the advertised primary
+    pub stale_map_retries: AtomicU64,
+    /// successful partition-map installs (POST /map or disk reload)
+    pub map_reloads: AtomicU64,
+    /// downstream requests that errored (transport or non-2xx)
+    pub downstream_errors: AtomicU64,
+    /// mutations routed by id range
+    pub mutations_routed: AtomicU64,
+}
+
+impl ClusterStats {
+    fn inc(c: &AtomicU64) {
+        c.fetch_add(1, Ordering::Relaxed);
+    }
+    fn get(c: &AtomicU64) -> u64 {
+        c.load(Ordering::Relaxed)
+    }
+}
+
+/// Dial/read-timeout knobs for downstream connections.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// per-dial connect timeout
+    pub connect_timeout: Duration,
+    /// socket read/write timeout on established connections
+    pub io_timeout: Duration,
+    /// how long [`ClusterRouter::connect`] retries each partition's
+    /// startup probe before giving up
+    pub probe_wait: Duration,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            connect_timeout: Duration::from_secs(1),
+            io_timeout: Duration::from_secs(5),
+            probe_wait: Duration::from_secs(10),
+        }
+    }
+}
+
+/// One installed map generation plus its per-partition health flags.
+/// Swapped wholesale (behind an `Arc`) on every map install, so a
+/// scatter-gather in flight keeps a consistent view.
+struct MapState {
+    map: PartitionMap,
+    healthy: Vec<AtomicBool>,
+}
+
+impl MapState {
+    fn new(map: PartitionMap) -> Self {
+        let healthy = (0..map.partitions.len()).map(|_| AtomicBool::new(true)).collect();
+        MapState { map, healthy }
+    }
+}
+
+/// The answer to one scatter-gather read.
+pub struct ClusterAnswer<T> {
+    pub value: T,
+    /// indices of partitions that did not answer (empty ⇒ complete)
+    pub failed: Vec<usize>,
+}
+
+impl<T> ClusterAnswer<T> {
+    pub fn partial(&self) -> bool {
+        !self.failed.is_empty()
+    }
+}
+
+pub struct ClusterRouter {
+    state: Mutex<Arc<MapState>>,
+    /// where the map came from on disk (None when installed in memory);
+    /// consulted by [`reload_map`](Self::reload_map) after a 421
+    map_path: Option<PathBuf>,
+    meta: ClusterMeta,
+    cfg: ClusterConfig,
+    /// idle keep-alive connections, keyed by endpoint address
+    pool: Mutex<HashMap<String, Vec<HttpClient>>>,
+    stats: ClusterStats,
+}
+
+impl ClusterRouter {
+    /// Validate `map`, probe every partition's `/stats`, and require a
+    /// consistent online index family across the cluster. Refuses to
+    /// start if any partition serves a different `family_check` than
+    /// the map declares — mismatched codes are a config error, not
+    /// something to discover query by query.
+    pub fn connect(
+        map: PartitionMap,
+        map_path: Option<PathBuf>,
+        cfg: ClusterConfig,
+    ) -> anyhow::Result<ClusterRouter> {
+        map.validate().map_err(|e| anyhow::anyhow!("partition map: {e}"))?;
+        let mut meta: Option<ClusterMeta> = None;
+        for (i, p) in map.partitions.iter().enumerate() {
+            let m = Self::probe_partition(p, &cfg)
+                .map_err(|e| anyhow::anyhow!("partition {i} ({}): {e}", p.primary))?;
+            if m.family_check != map.family_check() {
+                anyhow::bail!(
+                    "partition {i} ({}): serves family_check {} but the map declares {} — \
+                     refusing to merge answers across hash families",
+                    p.primary,
+                    m.family_check,
+                    map.family_check()
+                );
+            }
+            match &meta {
+                None => meta = Some(m),
+                Some(first) => {
+                    if m.dim != first.dim
+                        || m.bits != first.bits
+                        || m.family != first.family
+                        || m.family_check != first.family_check
+                    {
+                        anyhow::bail!(
+                            "partition {i} ({}): dim/bits/family {}/{}/{} disagrees with \
+                             partition 0's {}/{}/{}",
+                            p.primary,
+                            m.dim,
+                            m.bits,
+                            m.family,
+                            first.dim,
+                            first.bits,
+                            first.family
+                        );
+                    }
+                }
+            }
+        }
+        let meta = meta.expect("validated map has at least one partition");
+        Ok(Self::with_meta(map, map_path, cfg, meta))
+    }
+
+    /// Build a router around an already-known cluster shape, without
+    /// probing anything. Used by tests and by `connect` itself.
+    pub fn with_meta(
+        map: PartitionMap,
+        map_path: Option<PathBuf>,
+        cfg: ClusterConfig,
+        meta: ClusterMeta,
+    ) -> ClusterRouter {
+        ClusterRouter {
+            state: Mutex::new(Arc::new(MapState::new(map))),
+            map_path,
+            meta,
+            cfg,
+            pool: Mutex::new(HashMap::new()),
+            stats: ClusterStats::default(),
+        }
+    }
+
+    /// Probe one partition (primary first, then replicas) for its
+    /// /stats identity fields.
+    fn probe_partition(
+        p: &super::map::Partition,
+        cfg: &ClusterConfig,
+    ) -> Result<ClusterMeta, String> {
+        let mut last = String::new();
+        for (ti, addr) in std::iter::once(&p.primary).chain(p.replicas.iter()).enumerate() {
+            let dialed = if ti == 0 {
+                HttpClient::connect_retry(addr, cfg.probe_wait)
+            } else {
+                HttpClient::connect_with_timeout(addr, cfg.connect_timeout)
+            };
+            let mut client = match dialed {
+                Ok(c) => c,
+                Err(e) => {
+                    last = format!("{addr}: connect: {e}");
+                    continue;
+                }
+            };
+            let _ = client.set_timeout(cfg.io_timeout);
+            let resp = match client.get("/stats") {
+                Ok(r) if r.status == 200 => r,
+                Ok(r) => {
+                    last = format!("{addr}: /stats returned {}", r.status);
+                    continue;
+                }
+                Err(e) => {
+                    last = format!("{addr}: /stats: {e}");
+                    continue;
+                }
+            };
+            return Self::parse_stats_meta(&resp.body).map_err(|e| format!("{addr}: {e}"));
+        }
+        Err(last)
+    }
+
+    fn parse_stats_meta(body: &[u8]) -> Result<ClusterMeta, String> {
+        let v = Json::parse_bytes(body).map_err(|e| format!("bad /stats json: {e}"))?;
+        let mode = v.get("mode").and_then(|x| x.as_str()).unwrap_or("?");
+        if mode != "online" {
+            return Err(format!(
+                "mode is '{mode}' but partitions must serve a mutable online index"
+            ));
+        }
+        let need = |k: &str| {
+            v.get(k).and_then(|x| x.as_usize()).ok_or_else(|| format!("/stats missing '{k}'"))
+        };
+        Ok(ClusterMeta {
+            dim: need("dim")?,
+            bits: need("bits")?,
+            family: v
+                .get("family")
+                .and_then(|x| x.as_str())
+                .ok_or("/stats missing 'family'")?
+                .to_string(),
+            family_check: need("family_check")? as u32,
+        })
+    }
+
+    // ---- connection pool -------------------------------------------------
+
+    fn pool_take(&self, addr: &str) -> Option<HttpClient> {
+        self.pool.lock().unwrap().get_mut(addr).and_then(Vec::pop)
+    }
+
+    fn pool_put(&self, addr: &str, client: HttpClient) {
+        let mut pool = self.pool.lock().unwrap();
+        let slot = pool.entry(addr.to_string()).or_default();
+        if slot.len() < POOL_CAP {
+            slot.push(client);
+        }
+    }
+
+    fn dial(&self, addr: &str) -> std::io::Result<HttpClient> {
+        let client = HttpClient::connect_with_timeout(addr, self.cfg.connect_timeout)?;
+        let _ = client.set_timeout(self.cfg.io_timeout);
+        Ok(client)
+    }
+
+    /// POST one binary frame to `addr`, reusing a pooled keep-alive
+    /// connection when one exists. A pooled connection that fails is
+    /// assumed stale (the peer may have restarted) and the request is
+    /// retried exactly once on a fresh dial.
+    fn post_bin(&self, addr: &str, path: &str, frame: &[u8]) -> Result<(u16, Vec<u8>), String> {
+        let pooled = self.pool_take(addr);
+        let had_pooled = pooled.is_some();
+        let mut client = match pooled {
+            Some(c) => c,
+            None => self.dial(addr).map_err(|e| format!("connect {addr}: {e}"))?,
+        };
+        let resp = match client.post_binary(path, frame) {
+            Ok(r) => r,
+            Err(_) if had_pooled => {
+                // stale pooled socket — one fresh retry
+                let mut fresh = self.dial(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+                let r = fresh
+                    .post_binary(path, frame)
+                    .map_err(|e| format!("{addr} {path}: {e}"))?;
+                client = fresh;
+                r
+            }
+            Err(e) => return Err(format!("{addr} {path}: {e}")),
+        };
+        if resp.keep_alive {
+            self.pool_put(addr, client);
+        }
+        Ok((resp.status, resp.body))
+    }
+
+    // ---- reads -----------------------------------------------------------
+
+    /// Read from partition `pi`: primary first, then replicas in map
+    /// order. Any 200 wins; everything else (connect failure, timeout,
+    /// 503 shed, 5xx) moves on to the next target. Updates the health
+    /// flag and the failover counter.
+    fn partition_read(
+        &self,
+        st: &MapState,
+        pi: usize,
+        path: &str,
+        frame: &[u8],
+    ) -> Result<Vec<u8>, String> {
+        let p = &st.map.partitions[pi];
+        let mut last = String::from("no targets");
+        for (ti, addr) in std::iter::once(&p.primary).chain(p.replicas.iter()).enumerate() {
+            match self.post_bin(addr, path, frame) {
+                Ok((200, body)) => {
+                    st.healthy[pi].store(true, Ordering::Relaxed);
+                    if ti > 0 {
+                        ClusterStats::inc(&self.stats.failovers);
+                    }
+                    return Ok(body);
+                }
+                Ok((status, _)) => {
+                    ClusterStats::inc(&self.stats.downstream_errors);
+                    last = format!("{addr} {path}: status {status}");
+                }
+                Err(e) => {
+                    ClusterStats::inc(&self.stats.downstream_errors);
+                    last = e;
+                }
+            }
+        }
+        st.healthy[pi].store(false, Ordering::Relaxed);
+        Err(last)
+    }
+
+    /// Scatter `path`+`frame` to every partition concurrently and
+    /// return the per-partition bodies (`Err` slots are partitions with
+    /// no reachable target).
+    fn fanout(&self, st: &MapState, path: &str, frame: &[u8]) -> Vec<Result<Vec<u8>, String>> {
+        let n = st.map.partitions.len();
+        if n == 1 {
+            return vec![self.partition_read(st, 0, path, frame)];
+        }
+        let mut out: Vec<Result<Vec<u8>, String>> = Vec::with_capacity(n);
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..n)
+                .map(|pi| scope.spawn(move || self.partition_read(st, pi, path, frame)))
+                .collect();
+            for h in handles {
+                out.push(h.join().expect("partition fan-out thread panicked"));
+            }
+        });
+        out
+    }
+
+    fn snapshot(&self) -> Arc<MapState> {
+        Arc::clone(&self.state.lock().unwrap())
+    }
+
+    /// Scatter-gather `/query`: merge per-partition best hits with the
+    /// exact `OnlineRouter` margin-then-id semantics.
+    pub fn query(&self, req: &QueryRequest) -> Result<ClusterAnswer<QueryHit>, ClusterError> {
+        let st = self.snapshot();
+        ClusterStats::inc(&self.stats.fanout_reads);
+        let frame = binproto::encode_query(&req.w, req.exclude.as_deref());
+        let mut hits: Vec<QueryHit> = Vec::new();
+        let mut failed: Vec<usize> = Vec::new();
+        for (pi, r) in self.fanout(&st, "/query", &frame).into_iter().enumerate() {
+            match r {
+                Ok(body) => match binproto::decode_hit(&body) {
+                    Ok(h) => hits.push(h),
+                    Err(e) => {
+                        return Err(ClusterError::new(
+                            502,
+                            format!("partition {pi}: undecodable hit frame: {}", e.msg),
+                        ))
+                    }
+                },
+                Err(_) => failed.push(pi),
+            }
+        }
+        if hits.is_empty() {
+            return Err(ClusterError::new(503, "no partition answered the query"));
+        }
+        if !failed.is_empty() {
+            ClusterStats::inc(&self.stats.partial_answers);
+        }
+        Ok(ClusterAnswer { value: merge_hits(&hits), failed })
+    }
+
+    /// Scatter-gather `/query_topk`: concatenate the per-partition
+    /// short lists, re-sort (margin asc, id asc — `ShardedIndex`'s
+    /// tie-break), truncate to `t`.
+    pub fn query_topk(
+        &self,
+        req: &QueryRequest,
+        t: usize,
+    ) -> Result<ClusterAnswer<Vec<(usize, f32)>>, ClusterError> {
+        let st = self.snapshot();
+        ClusterStats::inc(&self.stats.fanout_reads);
+        let frame = binproto::encode_topk(&req.w, t, req.exclude.as_deref());
+        let mut scored: Vec<(usize, f32)> = Vec::new();
+        let mut failed: Vec<usize> = Vec::new();
+        let mut answered = 0usize;
+        for (pi, r) in self.fanout(&st, "/query_topk", &frame).into_iter().enumerate() {
+            match r {
+                Ok(body) => match binproto::decode_topk_hits(&body) {
+                    Ok(hits) => {
+                        answered += 1;
+                        scored.extend(hits);
+                    }
+                    Err(e) => {
+                        return Err(ClusterError::new(
+                            502,
+                            format!("partition {pi}: undecodable topk frame: {}", e.msg),
+                        ))
+                    }
+                },
+                Err(_) => failed.push(pi),
+            }
+        }
+        if answered == 0 {
+            return Err(ClusterError::new(503, "no partition answered the query"));
+        }
+        if !failed.is_empty() {
+            ClusterStats::inc(&self.stats.partial_answers);
+        }
+        scored.sort_by(|a, b| {
+            a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal).then(a.0.cmp(&b.0))
+        });
+        scored.truncate(t);
+        Ok(ClusterAnswer { value: scored, failed })
+    }
+
+    // ---- mutations -------------------------------------------------------
+
+    /// Route one insert/remove to the primary owning `id`. Follows a
+    /// single 421 redirect (stale map: the target demoted itself to a
+    /// replica and advertises its current primary), reloading the map
+    /// from disk along the way so later mutations go straight to the
+    /// right place.
+    pub fn mutate(&self, insert: bool, id: u32) -> Result<(bool, u64), ClusterError> {
+        let st = self.snapshot();
+        let pi = st.map.partition_for(id).ok_or_else(|| {
+            ClusterError::new(
+                400,
+                format!("id {id} is outside the partitioned id space 0..{}", st.map.id_space()),
+            )
+        })?;
+        ClusterStats::inc(&self.stats.mutations_routed);
+        let (tag, path) = if insert {
+            (binproto::TAG_INSERT, "/insert")
+        } else {
+            (binproto::TAG_REMOVE, "/remove")
+        };
+        let frame = binproto::encode_id(tag, id);
+        let primary = st.map.partitions[pi].primary.clone();
+        let (status, body) = self.post_bin(&primary, path, &frame).map_err(|e| {
+            ClusterStats::inc(&self.stats.downstream_errors);
+            ClusterError::new(503, format!("partition {pi} primary unreachable: {e}"))
+        })?;
+        let (status, body) = if status == 421 {
+            // The map is stale: the target is a replica now and tells
+            // us where its primary lives. Refresh and retry once.
+            ClusterStats::inc(&self.stats.stale_map_retries);
+            self.reload_map();
+            let next = Json::parse_bytes(&body)
+                .ok()
+                .and_then(|v| v.get("primary").and_then(|p| p.as_str()).map(str::to_string))
+                .ok_or_else(|| {
+                    ClusterError::new(502, format!("partition {pi}: 421 without a primary address"))
+                })?;
+            self.post_bin(&next, path, &frame).map_err(|e| {
+                ClusterStats::inc(&self.stats.downstream_errors);
+                ClusterError::new(503, format!("redirected primary {next} unreachable: {e}"))
+            })?
+        } else {
+            (status, body)
+        };
+        if status != 200 {
+            ClusterStats::inc(&self.stats.downstream_errors);
+            let msg = String::from_utf8_lossy(&body).into_owned();
+            return Err(ClusterError::new(status, msg));
+        }
+        let (applied, _id, live) = binproto::decode_ack(&body)
+            .map_err(|e| ClusterError::new(502, format!("undecodable ack: {}", e.msg)))?;
+        Ok((applied, live))
+    }
+
+    // ---- map lifecycle ---------------------------------------------------
+
+    /// Atomically flip to a newer map. The new map must validate, carry
+    /// the cluster's family fingerprint, and strictly increase the
+    /// version — a replayed or concurrent older map is refused with 409
+    /// so routers converge on the newest config regardless of delivery
+    /// order. Health flags reset to healthy; the next read re-probes.
+    pub fn install_map(&self, new: PartitionMap) -> Result<u64, ClusterError> {
+        new.validate().map_err(|e| ClusterError::new(400, e))?;
+        if new.family_check() != self.meta.family_check {
+            return Err(ClusterError::new(
+                409,
+                format!(
+                    "map family_check {} does not match this cluster's {}",
+                    new.family_check(),
+                    self.meta.family_check
+                ),
+            ));
+        }
+        let mut state = self.state.lock().unwrap();
+        if new.version <= state.map.version {
+            return Err(ClusterError::new(
+                409,
+                format!(
+                    "map version must increase: installed v{}, offered v{}",
+                    state.map.version, new.version
+                ),
+            ));
+        }
+        let v = new.version;
+        *state = Arc::new(MapState::new(new));
+        ClusterStats::inc(&self.stats.map_reloads);
+        Ok(v)
+    }
+
+    /// Best-effort reload from `map_path`; returns true when a newer
+    /// map was installed.
+    pub fn reload_map(&self) -> bool {
+        let Some(path) = &self.map_path else { return false };
+        match PartitionMap::load(path) {
+            Ok(m) => self.install_map(m).is_ok(),
+            Err(_) => false,
+        }
+    }
+
+    // ---- introspection ---------------------------------------------------
+
+    pub fn dim(&self) -> usize {
+        self.meta.dim
+    }
+
+    pub fn meta(&self) -> &ClusterMeta {
+        &self.meta
+    }
+
+    pub fn stats(&self) -> &ClusterStats {
+        &self.stats
+    }
+
+    pub fn map_version(&self) -> u64 {
+        self.snapshot().map.version
+    }
+
+    pub fn partition_count(&self) -> usize {
+        self.snapshot().map.partitions.len()
+    }
+
+    pub fn id_space(&self) -> u32 {
+        self.snapshot().map.id_space()
+    }
+
+    /// Health of partition `i` as a gauge value: 1 healthy, 0 down,
+    /// -1 when the installed map no longer has a partition `i`.
+    pub fn health_at(&self, i: usize) -> f64 {
+        let st = self.snapshot();
+        match st.healthy.get(i) {
+            Some(h) => {
+                if h.load(Ordering::Relaxed) {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            None => -1.0,
+        }
+    }
+
+    /// The currently installed map as JSON (`GET /map`).
+    pub fn map_json(&self) -> Json {
+        self.snapshot().map.to_json()
+    }
+
+    /// The `cluster` section of the router's `/stats` document.
+    pub fn stats_json(&self) -> Json {
+        let st = self.snapshot();
+        let parts: Vec<Json> = st
+            .map
+            .partitions
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                obj(vec![
+                    ("start", Json::from(p.start as usize)),
+                    ("end", Json::from(p.end as usize)),
+                    ("primary", Json::from(p.primary.as_str())),
+                    ("replicas", Json::from(p.replicas.len())),
+                    ("healthy", Json::from(st.healthy[i].load(Ordering::Relaxed))),
+                ])
+            })
+            .collect();
+        let s = &self.stats;
+        obj(vec![
+            ("map_version", Json::from(st.map.version as usize)),
+            ("id_space", Json::from(st.map.id_space() as usize)),
+            ("partitions", Json::Arr(parts)),
+            ("fanout_reads", Json::from(ClusterStats::get(&s.fanout_reads) as usize)),
+            ("partial_answers", Json::from(ClusterStats::get(&s.partial_answers) as usize)),
+            ("failovers", Json::from(ClusterStats::get(&s.failovers) as usize)),
+            ("stale_map_retries", Json::from(ClusterStats::get(&s.stale_map_retries) as usize)),
+            ("map_reloads", Json::from(ClusterStats::get(&s.map_reloads) as usize)),
+            ("downstream_errors", Json::from(ClusterStats::get(&s.downstream_errors) as usize)),
+            ("mutations_routed", Json::from(ClusterStats::get(&s.mutations_routed) as usize)),
+        ])
+    }
+
+    /// Counter snapshots for `register_metrics` closures.
+    pub fn counters(&self) -> [(&'static str, u64); 7] {
+        let s = &self.stats;
+        [
+            ("fanout", ClusterStats::get(&s.fanout_reads)),
+            ("partial", ClusterStats::get(&s.partial_answers)),
+            ("failover", ClusterStats::get(&s.failovers)),
+            ("stale_map", ClusterStats::get(&s.stale_map_retries)),
+            ("map_reload", ClusterStats::get(&s.map_reloads)),
+            ("downstream_err", ClusterStats::get(&s.downstream_errors)),
+            ("mutation", ClusterStats::get(&s.mutations_routed)),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::map::Partition;
+
+    fn two_part_map(version: u64, fc: u32) -> PartitionMap {
+        PartitionMap {
+            version,
+            partitions: vec![
+                Partition {
+                    start: 0,
+                    end: 100,
+                    primary: "127.0.0.1:1".into(),
+                    replicas: vec![],
+                    family_check: fc,
+                },
+                Partition {
+                    start: 100,
+                    end: 200,
+                    primary: "127.0.0.1:2".into(),
+                    replicas: vec![],
+                    family_check: fc,
+                },
+            ],
+        }
+    }
+
+    fn router(fc: u32) -> ClusterRouter {
+        ClusterRouter::with_meta(
+            two_part_map(1, fc),
+            None,
+            ClusterConfig::default(),
+            ClusterMeta { dim: 8, bits: 10, family: "bh".into(), family_check: fc },
+        )
+    }
+
+    #[test]
+    fn install_requires_strictly_increasing_version() {
+        let r = router(7);
+        assert_eq!(r.map_version(), 1);
+        // same version: refused
+        let err = r.install_map(two_part_map(1, 7)).unwrap_err();
+        assert_eq!(err.status, 409);
+        // older: refused
+        let err = r.install_map(two_part_map(0, 7)).unwrap_err();
+        assert_eq!(err.status, 409);
+        // newer: installed
+        assert_eq!(r.install_map(two_part_map(5, 7)).unwrap(), 5);
+        assert_eq!(r.map_version(), 5);
+        // and the bar moved
+        let err = r.install_map(two_part_map(5, 7)).unwrap_err();
+        assert_eq!(err.status, 409);
+        assert_eq!(ClusterStats::get(&r.stats().map_reloads), 1);
+    }
+
+    #[test]
+    fn install_refuses_foreign_family() {
+        let r = router(7);
+        let err = r.install_map(two_part_map(9, 8)).unwrap_err();
+        assert_eq!(err.status, 409);
+        assert!(err.msg.contains("family_check"), "{}", err.msg);
+        assert_eq!(r.map_version(), 1);
+    }
+
+    #[test]
+    fn install_refuses_invalid_maps() {
+        let r = router(7);
+        let mut gapped = two_part_map(9, 7);
+        gapped.partitions[1].start = 150;
+        assert_eq!(r.install_map(gapped).unwrap_err().status, 400);
+    }
+
+    #[test]
+    fn health_defaults_and_out_of_range() {
+        let r = router(7);
+        assert_eq!(r.health_at(0), 1.0);
+        assert_eq!(r.health_at(1), 1.0);
+        assert_eq!(r.health_at(2), -1.0);
+        assert_eq!(r.partition_count(), 2);
+        assert_eq!(r.id_space(), 200);
+    }
+
+    #[test]
+    fn mutate_rejects_ids_outside_the_map() {
+        let r = router(7);
+        let err = r.mutate(true, 200).unwrap_err();
+        assert_eq!(err.status, 400);
+        assert!(err.msg.contains("0..200"), "{}", err.msg);
+    }
+}

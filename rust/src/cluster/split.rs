@@ -1,0 +1,303 @@
+//! Offline partition split: carve one WAL-backed id range into two.
+//!
+//! Growth path for a cluster: when one partition gets too big (memory,
+//! write rate), split its id range at a midpoint and hand each half to
+//! a fresh primary. The procedure is deliberately offline-per-partition
+//! — the *rest* of the cluster keeps serving; only the partition being
+//! split pauses writes:
+//!
+//! 1. stop the source primary (its WAL dir holds an exclusive lock, so
+//!    [`split_partition`] physically cannot run against a live server —
+//!    `DurableIndex::open` would fail to acquire the lock);
+//! 2. recover the source index from its WAL (crash-consistent: the same
+//!    recovery the server itself runs);
+//! 3. route every live entry by `id < mid` into two fresh indexes that
+//!    inherit the source's bits/radius/shards/budget;
+//! 4. create two new WAL dirs, each seeded with a base snapshot of its
+//!    half (generation 0 — the standard `DurableIndex::create` path, so
+//!    the new primaries recover/replicate exactly like any other);
+//! 5. emit the next-version partition map with the split range replaced
+//!    by the two halves.
+//!
+//! The returned map is NOT installed anywhere: the operator (or
+//! `chh partition-split`) saves it and POSTs it to each router's `/map`
+//! endpoint, which flips atomically. Until the flip, routers keep
+//! sending the old range to the stopped primary and fail over /
+//! degrade per the normal read path — the documented runbook in
+//! `docs/CLUSTER.md` sequences this so the write-unavailability window
+//! is just the split itself.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context};
+
+use crate::online::ShardedIndex;
+use crate::wal::{is_wal_dir, DurableIndex, WalConfig};
+
+use super::map::{Partition, PartitionMap};
+
+/// What a split produced, for operator output and tests.
+#[derive(Debug)]
+pub struct SplitReport {
+    /// live points that landed in `[start, mid)`
+    pub left_points: usize,
+    /// live points that landed in `[mid, end)`
+    pub right_points: usize,
+    /// the emitted map's version (source map version + 1)
+    pub new_version: u64,
+}
+
+/// Addresses for the two new primaries taking over the halves.
+#[derive(Clone, Debug)]
+pub struct SplitTarget {
+    pub addr: String,
+    pub replicas: Vec<String>,
+}
+
+/// Split partition `pi` of `map` at id `mid`, materializing the two
+/// halves as fresh WAL dirs (`left_dir`, `right_dir`) seeded from the
+/// source partition's WAL (`src_dir`). Returns the next-version map and
+/// a report. See the module doc for the full runbook.
+pub fn split_partition(
+    map: &PartitionMap,
+    pi: usize,
+    mid: u32,
+    src_dir: &Path,
+    left_dir: &Path,
+    right_dir: &Path,
+    left: &SplitTarget,
+    right: &SplitTarget,
+) -> anyhow::Result<(PartitionMap, SplitReport)> {
+    map.validate().map_err(|e| anyhow::anyhow!("source map: {e}"))?;
+    let Some(src_part) = map.partitions.get(pi) else {
+        bail!("partition index {pi} out of range (map has {})", map.partitions.len());
+    };
+    if !(src_part.start < mid && mid < src_part.end) {
+        bail!(
+            "split point {mid} must fall strictly inside the partition's id range [{}, {})",
+            src_part.start,
+            src_part.end
+        );
+    }
+    if !is_wal_dir(src_dir) {
+        bail!("{} is not a WAL directory", src_dir.display());
+    }
+    for (name, dir) in [("left", left_dir), ("right", right_dir)] {
+        if is_wal_dir(dir) {
+            bail!(
+                "{name} target {} already holds a WAL — refusing to overwrite",
+                dir.display()
+            );
+        }
+    }
+
+    // Recover the source. This takes the WAL dir lock: if the source
+    // primary is still running, this fails instead of forking history.
+    let (src, report) = DurableIndex::open(&WalConfig::new(src_dir))
+        .with_context(|| format!("recovering source partition from {}", src_dir.display()))?;
+    let _ = report; // recovery details are the server's concern; we only need the index
+    let idx = Arc::clone(src.index());
+
+    // Two fresh indexes with the source's exact shape, so codes and
+    // probe behavior carry over bit-for-bit.
+    let lhs = ShardedIndex::new(idx.bits(), idx.radius(), idx.shard_count());
+    let rhs = ShardedIndex::new(idx.bits(), idx.radius(), idx.shard_count());
+    lhs.set_default_budget(idx.default_budget());
+    rhs.set_default_budget(idx.default_budget());
+
+    let (mut nl, mut nr) = (0usize, 0usize);
+    for shard in idx.shards() {
+        for (id, code) in shard.live_entries() {
+            if !src_part.contains(id) {
+                bail!(
+                    "source WAL holds id {id}, outside the partition's declared range [{}, {}) — \
+                     the map does not describe this WAL",
+                    src_part.start,
+                    src_part.end
+                );
+            }
+            if id < mid {
+                lhs.insert(id, code);
+                nl += 1;
+            } else {
+                rhs.insert(id, code);
+                nr += 1;
+            }
+        }
+    }
+    lhs.compact();
+    rhs.compact();
+
+    // Seed the new WAL dirs with base snapshots (generation 0), then
+    // release everything cleanly.
+    DurableIndex::create(Arc::new(lhs), &WalConfig::new(left_dir))
+        .with_context(|| format!("creating left half at {}", left_dir.display()))?
+        .close()?;
+    DurableIndex::create(Arc::new(rhs), &WalConfig::new(right_dir))
+        .with_context(|| format!("creating right half at {}", right_dir.display()))?
+        .close()?;
+    src.close()?;
+
+    // Emit the next-version map: the split range becomes two entries.
+    let mut partitions = Vec::with_capacity(map.partitions.len() + 1);
+    for (i, p) in map.partitions.iter().enumerate() {
+        if i == pi {
+            partitions.push(Partition {
+                start: p.start,
+                end: mid,
+                primary: left.addr.clone(),
+                replicas: left.replicas.clone(),
+                family_check: p.family_check,
+            });
+            partitions.push(Partition {
+                start: mid,
+                end: p.end,
+                primary: right.addr.clone(),
+                replicas: right.replicas.clone(),
+                family_check: p.family_check,
+            });
+        } else {
+            partitions.push(p.clone());
+        }
+    }
+    let new_map = PartitionMap { version: map.version + 1, partitions };
+    new_map
+        .validate()
+        .map_err(|e| anyhow::anyhow!("internal: emitted map failed validation: {e}"))?;
+    Ok((
+        new_map,
+        SplitReport { left_points: nl, right_points: nr, new_version: new_map.version },
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hash::BhHash;
+    use crate::hash::HashFamily;
+    use crate::rng::Rng;
+
+    fn tmpdir(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("chh_split_{}_{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn seeded_partition(dir: &Path, start: u32, end: u32) -> (BhHash, u32) {
+        let mut rng = Rng::seed_from_u64(99);
+        let fam = BhHash::sample(8, 10, &mut rng);
+        let idx = Arc::new(ShardedIndex::new(10, 2, 3));
+        for id in start..end {
+            let w: Vec<f32> = rng.gauss_vec(8);
+            idx.insert(id, fam.encode_query(&w));
+        }
+        idx.compact();
+        let d = DurableIndex::create(Arc::clone(&idx), &WalConfig::new(dir)).expect("create wal");
+        d.close().expect("close wal");
+        let fc = crate::replicate::family_fingerprint(&fam, 8);
+        (fam, fc)
+    }
+
+    fn one_part_map(end: u32, primary: &str, fc: u32) -> PartitionMap {
+        PartitionMap {
+            version: 3,
+            partitions: vec![Partition {
+                start: 0,
+                end,
+                primary: primary.into(),
+                replicas: vec![],
+                family_check: fc,
+            }],
+        }
+    }
+
+    #[test]
+    fn split_partitions_every_point_and_bumps_the_version() {
+        let src = tmpdir("src");
+        let left = tmpdir("left");
+        let right = tmpdir("right");
+        let (_fam, fc) = seeded_partition(&src, 0, 120);
+        let map = one_part_map(120, "127.0.0.1:9100", fc);
+        let lt = SplitTarget { addr: "127.0.0.1:9101".into(), replicas: vec![] };
+        let rt = SplitTarget {
+            addr: "127.0.0.1:9102".into(),
+            replicas: vec!["127.0.0.1:9103".into()],
+        };
+        let (new_map, rep) =
+            split_partition(&map, 0, 50, &src, &left, &right, &lt, &rt).expect("split");
+        assert_eq!(rep.left_points, 50);
+        assert_eq!(rep.right_points, 70);
+        assert_eq!(new_map.version, 4);
+        assert_eq!(new_map.partitions.len(), 2);
+        assert_eq!((new_map.partitions[0].start, new_map.partitions[0].end), (0, 50));
+        assert_eq!((new_map.partitions[1].start, new_map.partitions[1].end), (50, 120));
+        assert_eq!(new_map.partitions[0].primary, "127.0.0.1:9101");
+        assert_eq!(new_map.partitions[1].replicas, vec!["127.0.0.1:9103".to_string()]);
+        new_map.validate().expect("emitted map is valid");
+
+        // Both halves recover as standard WAL dirs holding exactly
+        // their id range, with the source's live entries preserved.
+        let (dsrc, _) = DurableIndex::open(&WalConfig::new(&src)).expect("reopen source");
+        let mut want: Vec<(u32, u64)> = dsrc
+            .index()
+            .shards()
+            .iter()
+            .flat_map(|s| s.live_entries())
+            .collect();
+        want.sort_unstable();
+        drop(dsrc);
+        let mut got: Vec<(u32, u64)> = Vec::new();
+        for (dir, range) in [(&left, 0..50u32), (&right, 50..120u32)] {
+            let (d, _) = DurableIndex::open(&WalConfig::new(dir)).expect("reopen half");
+            let entries: Vec<(u32, u64)> =
+                d.index().shards().iter().flat_map(|s| s.live_entries()).collect();
+            for (id, _) in &entries {
+                assert!(range.contains(id), "id {id} leaked outside {range:?}");
+            }
+            got.extend(entries);
+            drop(d);
+        }
+        got.sort_unstable();
+        assert_eq!(got, want, "split must preserve every live (id, code) pair");
+
+        for d in [&src, &left, &right] {
+            let _ = std::fs::remove_dir_all(d);
+        }
+    }
+
+    #[test]
+    fn split_rejects_bad_midpoints_and_occupied_targets() {
+        let src = tmpdir("src2");
+        let left = tmpdir("left2");
+        let right = tmpdir("right2");
+        let (_fam, fc) = seeded_partition(&src, 0, 40);
+        let map = one_part_map(40, "127.0.0.1:9100", fc);
+        let t = SplitTarget { addr: "127.0.0.1:9101".into(), replicas: vec![] };
+        // mid on the boundary is refused
+        for mid in [0, 40, 41] {
+            assert!(split_partition(&map, 0, mid, &src, &left, &right, &t, &t).is_err());
+        }
+        // out-of-range partition index is refused
+        assert!(split_partition(&map, 1, 20, &src, &left, &right, &t, &t).is_err());
+        // a target that already holds a WAL is refused
+        assert!(split_partition(&map, 0, 20, &src, &src, &right, &t, &t).is_err());
+        let _ = std::fs::remove_dir_all(&src);
+    }
+
+    #[test]
+    fn split_refuses_a_wal_outside_the_declared_range() {
+        let src = tmpdir("src3");
+        let left = tmpdir("left3");
+        let right = tmpdir("right3");
+        let (_fam, fc) = seeded_partition(&src, 0, 60);
+        // map claims the partition only owns 0..30, but the WAL holds 0..60
+        let map = one_part_map(30, "127.0.0.1:9100", fc);
+        let t = SplitTarget { addr: "127.0.0.1:9101".into(), replicas: vec![] };
+        let err = split_partition(&map, 0, 10, &src, &left, &right, &t, &t).unwrap_err();
+        assert!(format!("{err:#}").contains("outside"), "{err:#}");
+        // the failed split must not leave half-written targets behind
+        assert!(!is_wal_dir(&left) && !is_wal_dir(&right));
+        let _ = std::fs::remove_dir_all(&src);
+    }
+}

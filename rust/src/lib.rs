@@ -24,7 +24,9 @@
 //!   snapshots, crash recovery (see [`wal`] and `docs/DURABILITY.md`) —
 //!   replicated serving via WAL shipping — primary/replica read scaling
 //!   with bit-identical replica answers (see [`replicate`] and
-//!   `docs/REPLICATION.md`) — and the PJRT runtime that executes
+//!   `docs/REPLICATION.md`) — cluster serving via partitioned primaries
+//!   behind a stateless scatter-gather router tier (see [`cluster`] and
+//!   `docs/CLUSTER.md`) — and the PJRT runtime that executes
 //!   AOT-compiled XLA artifacts.
 //! * **L2 (python/compile/model.py)** — JAX graphs for batch encoding,
 //!   LBH Nesterov training steps, margin scans and Hamming ranking, lowered
@@ -83,6 +85,7 @@
 pub mod active;
 pub mod bench;
 pub mod cli;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod data;
@@ -110,6 +113,7 @@ pub mod wal;
 /// Convenience re-exports for downstream users and the examples.
 pub mod prelude {
     pub use crate::active::{AlConfig, AlEngine, AlResult, Strategy};
+    pub use crate::cluster::{ClusterRouter, PartitionMap};
     pub use crate::data::{newsgroups_like, tiny1m_like, Dataset, FeatureStore, NewsConfig, TinyConfig};
     pub use crate::hash::{AhHash, BhHash, EhHash, HashFamily, LbhHash};
     pub use crate::lbh::{LbhTrainer, LbhTrainConfig};

@@ -43,6 +43,8 @@ fn main() {
         "serve" => cmd_serve(&rest),
         "serve-online" => cmd_serve_online(&rest),
         "serve-http" => cmd_serve_http(&rest),
+        "route" => cmd_route(&rest),
+        "partition-split" => cmd_partition_split(&rest),
         "recover" => cmd_recover(&rest),
         "loadgen" => cmd_loadgen(&rest),
         "encode" => cmd_encode(&rest),
@@ -74,8 +76,10 @@ fn usage() -> String {
        serve         hyperplane-query router under synthetic load\n\
        serve-online  sharded dynamic index under churn + query load\n\
        serve-http    HTTP/1.1 front-end (--wal-dir: durability; --replica-of: read replica)\n\
+       route         scatter-gather router over a partitioned fleet (--map)\n\
+       partition-split  carve one WAL-backed partition into two, emit the next map\n\
        recover       rebuild an online index from a WAL directory\n\
-       loadgen       load generator for serve-http (--replicas: read fan-out)\n\
+       loadgen       load generator for serve-http (--replicas / --routers fan-out)\n\
        encode        batch-encode a synthetic dataset (native vs PJRT)\n\
        eval          retrieval quality (recall@T, margin ratio) per family\n\
        theorem2      randomized multi-table LSH vs the compact single table\n\
@@ -716,6 +720,12 @@ fn cmd_serve_http(rest: &[String]) -> anyhow::Result<()> {
          per-stage breakdown (0 = off)",
     )
     .opt("slow-log", "", "slow-query JSON-lines path (size-rotated); stderr when unset")
+    .opt(
+        "id-start",
+        "0",
+        "cluster partition: fresh build inserts ids [id-start, id-end) only",
+    )
+    .opt("id-end", "0", "cluster partition: one past the last owned id (0 = all n points)")
     .opt("for-secs", "0", "serve this long then exit (0 = until POST /shutdown)");
     let p = args.parse(rest).map_err(|h| anyhow::anyhow!("{h}"))?;
     let cfg = ExperimentConfig::from_parsed(&p)?;
@@ -740,6 +750,21 @@ fn cmd_serve_http(rest: &[String]) -> anyhow::Result<()> {
         replica_of.is_empty() || wal_dir.is_empty(),
         "--replica-of and --wal-dir are mutually exclusive (replicas keep no local WAL; \
          the primary's directory is the source of truth)"
+    );
+    let id_start = p.usize("id-start")?;
+    let id_end_opt = p.usize("id-end")?;
+    let id_range_set = id_start > 0 || id_end_opt > 0;
+    anyhow::ensure!(
+        !id_range_set || mode == "online",
+        "--id-start/--id-end partition a fresh online build (--mode online)"
+    );
+    anyhow::ensure!(
+        !id_range_set || replica_of.is_empty(),
+        "--id-start/--id-end apply to a fresh build; a replica mirrors its primary's range"
+    );
+    anyhow::ensure!(
+        !id_range_set || p.str("snapshot").is_empty(),
+        "--id-start/--id-end apply to a fresh build, not a loaded snapshot"
     );
     let mut durability: Option<chh::server::Durability> = None;
     let mut replica_role: Option<chh::server::ReplicaRole> = None;
@@ -873,6 +898,12 @@ fn cmd_serve_http(rest: &[String]) -> anyhow::Result<()> {
             } else {
                 match &wal_cfg {
                     Some(c) if chh::wal::is_wal_dir(&c.dir) => {
+                        anyhow::ensure!(
+                            !id_range_set,
+                            "--id-start/--id-end apply to a fresh build; {} already holds \
+                             recovered state (its range was fixed at creation)",
+                            c.dir.display()
+                        );
                         let (durable, report) = chh::wal::DurableIndex::open(c)?;
                         eprintln!(
                             "serve-http: recovered {}: {}",
@@ -899,7 +930,14 @@ fn cmd_serve_http(rest: &[String]) -> anyhow::Result<()> {
                                 cfg.radius(),
                                 p.usize("shards")?.max(1),
                             );
-                            for i in 0..data.len() {
+                            let id_end = if id_end_opt == 0 { data.len() } else { id_end_opt };
+                            anyhow::ensure!(
+                                id_start < id_end && id_end <= data.len(),
+                                "--id-start {id_start} / --id-end {id_end} must satisfy \
+                                 start < end <= n ({})",
+                                data.len()
+                            );
+                            for i in id_start..id_end {
                                 index.insert_point(fam.as_ref(), i as u32, data.features().row(i));
                             }
                             index.compact();
@@ -991,6 +1029,147 @@ fn cmd_serve_http(rest: &[String]) -> anyhow::Result<()> {
     }
     handle.wait();
     println!("serve-http: stopped");
+    Ok(())
+}
+
+fn cmd_route(rest: &[String]) -> anyhow::Result<()> {
+    use chh::cluster::{ClusterConfig, ClusterRouter, PartitionMap};
+    use chh::server::{Server, ServerConfig};
+    use std::time::Duration;
+    let args = Args::new(
+        "chh route",
+        "stateless scatter-gather router over a partitioned primary fleet (JSON upstream)",
+    )
+    .opt("map", "", "partition-map JSON path (required; see docs/CLUSTER.md)")
+    .opt("addr", "127.0.0.1:8090", "listen address (port 0 = ephemeral)")
+    .opt("max-conns", "4096", "concurrent connection cap (overflow -> 503)")
+    .opt("conn-workers", "16", "event-loop request workers (the transport's thread budget)")
+    .opt("connect-timeout-ms", "1000", "downstream partition TCP connect timeout")
+    .opt("io-timeout-ms", "5000", "downstream partition request timeout")
+    .opt("probe-secs", "10", "startup: wait this long for each partition to answer /stats")
+    .opt(
+        "slow-ms",
+        "0",
+        "slow-query threshold: requests slower than this are logged (0 = off)",
+    )
+    .opt("slow-log", "", "slow-query JSON-lines path (size-rotated); stderr when unset")
+    .opt("for-secs", "0", "serve this long then exit (0 = until POST /shutdown)");
+    let p = args.parse(rest).map_err(|h| anyhow::anyhow!("{h}"))?;
+    let map_path = p.str("map").to_string();
+    anyhow::ensure!(!map_path.is_empty(), "--map is required (write one with partition-split)");
+    let map = PartitionMap::load(std::path::Path::new(&map_path))
+        .map_err(|e| anyhow::anyhow!("loading {map_path}: {e:#}"))?;
+    let ccfg = ClusterConfig {
+        connect_timeout: Duration::from_millis(p.u64("connect-timeout-ms")?.max(1)),
+        io_timeout: Duration::from_millis(p.u64("io-timeout-ms")?.max(1)),
+        probe_wait: Duration::from_secs(p.u64("probe-secs")?),
+    };
+    eprintln!(
+        "route: probing {} partitions from {map_path} (map v{})...",
+        map.partitions.len(),
+        map.version
+    );
+    let router = ClusterRouter::connect(map, Some(std::path::PathBuf::from(&map_path)), ccfg)?;
+    let meta = router.meta().clone();
+    let (nparts, id_space) = (router.partition_count(), router.id_space());
+    let server_cfg = ServerConfig {
+        addr: p.str("addr").to_string(),
+        max_conns: p.usize("max-conns")?.max(1),
+        conn_workers: p.usize("conn-workers")?.max(1),
+        slow_ms: p.u64("slow-ms")?,
+        slow_log: {
+            let sl = p.str("slow-log");
+            if sl.is_empty() { None } else { Some(std::path::PathBuf::from(sl)) }
+        },
+        ..ServerConfig::default()
+    };
+    let handle = Server::spawn_cluster(std::sync::Arc::new(router), server_cfg)?;
+    println!(
+        "route: listening on {} ({nparts} partitions over ids 0..{id_space}, dim={}, k={}, \
+         family={})",
+        handle.addr(),
+        meta.dim,
+        meta.bits,
+        meta.family,
+    );
+    let for_secs = p.u64("for-secs")?;
+    if for_secs > 0 {
+        let stopper = handle.stopper();
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_secs(for_secs));
+            stopper.trigger();
+        });
+    }
+    handle.wait();
+    println!("route: stopped");
+    Ok(())
+}
+
+fn cmd_partition_split(rest: &[String]) -> anyhow::Result<()> {
+    use chh::cluster::{split_partition, PartitionMap, SplitTarget};
+    let args = Args::new(
+        "chh partition-split",
+        "carve one stopped WAL-backed partition into two and emit the next-version map",
+    )
+    .opt("map", "", "current partition-map JSON path (required)")
+    .opt("partition", "0", "index of the partition to split (position in the map)")
+    .opt("mid", "0", "split id: left keeps [start, mid), right takes [mid, end)")
+    .opt("src-wal", "", "the partition's durable directory (stop its server first)")
+    .opt("left-wal", "", "fresh durable directory for the left half (must not exist as a WAL)")
+    .opt("right-wal", "", "fresh durable directory for the right half")
+    .opt("left-addr", "", "primary address the left half will serve on")
+    .opt("right-addr", "", "primary address the right half will serve on")
+    .opt("left-replicas", "", "comma-separated replica addrs for the left half")
+    .opt("right-replicas", "", "comma-separated replica addrs for the right half")
+    .opt("out-map", "", "write the next-version map here (default: overwrite --map)");
+    let p = args.parse(rest).map_err(|h| anyhow::anyhow!("{h}"))?;
+    for req in ["map", "src-wal", "left-wal", "right-wal", "left-addr", "right-addr"] {
+        anyhow::ensure!(!p.str(req).is_empty(), "--{req} is required");
+    }
+    let map_path = p.str("map").to_string();
+    let map = PartitionMap::load(std::path::Path::new(&map_path))
+        .map_err(|e| anyhow::anyhow!("loading {map_path}: {e:#}"))?;
+    let pi = p.usize("partition")?;
+    let mid = u32::try_from(p.usize("mid")?)?;
+    let replicas = |key: &str| -> Vec<String> {
+        p.str(key).split(',').map(str::trim).filter(|s| !s.is_empty()).map(String::from).collect()
+    };
+    let left = SplitTarget {
+        addr: p.str("left-addr").to_string(),
+        replicas: replicas("left-replicas"),
+    };
+    let right = SplitTarget {
+        addr: p.str("right-addr").to_string(),
+        replicas: replicas("right-replicas"),
+    };
+    let (next, report) = split_partition(
+        &map,
+        pi,
+        mid,
+        std::path::Path::new(p.str("src-wal")),
+        std::path::Path::new(p.str("left-wal")),
+        std::path::Path::new(p.str("right-wal")),
+        &left,
+        &right,
+    )?;
+    let out = {
+        let o = p.str("out-map");
+        if o.is_empty() { map_path.clone() } else { o.to_string() }
+    };
+    next.save(std::path::Path::new(&out))?;
+    println!(
+        "partition-split: partition {pi} split at id {mid} -> left {} points ({}), \
+         right {} points ({})",
+        report.left_points,
+        left.addr,
+        report.right_points,
+        right.addr
+    );
+    println!(
+        "partition-split: map v{} -> v{} written to {out} — start the two new primaries \
+         on their WAL dirs, then POST the map to each router's /map to flip traffic",
+        map.version, report.new_version
+    );
     Ok(())
 }
 
@@ -1106,6 +1285,12 @@ fn cmd_loadgen(rest: &[String]) -> anyhow::Result<()> {
             "",
             "comma-separated replica addrs; reads round-robin across primary + replicas",
         )
+        .opt(
+            "routers",
+            "",
+            "comma-separated router-tier addrs (chh route); ALL traffic, mutations \
+             included, round-robins across them (JSON wire only)",
+        )
         .opt("queries", "1000", "total queries to send")
         .opt("concurrency", "8", "client connections (one thread each)")
         .opt("mode", "closed", "closed (back-to-back) | open (paced by --rate)")
@@ -1126,7 +1311,23 @@ fn cmd_loadgen(rest: &[String]) -> anyhow::Result<()> {
         .opt("json", "", "write machine-readable results to this path")
         .flag("shutdown", "POST /shutdown to the server when done");
     let p = args.parse(rest).map_err(|h| anyhow::anyhow!("{h}"))?;
-    let addr = p.str("addr").to_string();
+    let routers: Vec<String> = p
+        .str("routers")
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(String::from)
+        .collect();
+    anyhow::ensure!(
+        routers.is_empty() || p.str("replicas").trim().is_empty(),
+        "--routers and --replicas are mutually exclusive (the router tier already \
+         fans out to each partition's replica set)"
+    );
+    // the probe/metrics/shutdown anchor: the primary, or the first router
+    let addr = match routers.first() {
+        Some(r) => r.clone(),
+        None => p.str("addr").to_string(),
+    };
     let queries = p.usize("queries")?;
     let conc = p.usize("concurrency")?.max(1);
     let open_loop = match p.str("mode") {
@@ -1151,6 +1352,11 @@ fn cmd_loadgen(rest: &[String]) -> anyhow::Result<()> {
         "both" => vec![false, true],
         other => anyhow::bail!("unknown --protocol '{other}' (json|binary|both)"),
     };
+    anyhow::ensure!(
+        routers.is_empty() || proto_str == "json",
+        "--routers requires --protocol json (the router tier answers JSON upstream; \
+         the binary wire is partition-internal)"
+    );
     // learn the index dimensionality (and readiness) from /stats
     let mut probe = HttpClient::connect_retry(&addr, Duration::from_secs(10))
         .map_err(|e| anyhow::anyhow!("connecting to {addr}: {e}"))?;
@@ -1169,10 +1375,16 @@ fn cmd_loadgen(rest: &[String]) -> anyhow::Result<()> {
     let points = stats.get("points").and_then(|x| x.as_usize()).unwrap_or(0);
     if mutate_frac > 0.0 {
         anyhow::ensure!(
-            server_mode == "online",
-            "--mutate-frac needs an online-mode server (got mode={server_mode})"
+            server_mode == "online" || server_mode == "cluster",
+            "--mutate-frac needs an online or cluster-mode server (got mode={server_mode})"
         );
         anyhow::ensure!(points > 0, "/stats reports no points to mutate");
+    }
+    if !routers.is_empty() {
+        anyhow::ensure!(
+            server_mode == "cluster",
+            "--routers targets must run `chh route` (got mode={server_mode})"
+        );
     }
     // one-shot build/identity line so runs are attributable to a binary
     if let Ok(hz) = probe.get("/healthz") {
@@ -1196,17 +1408,27 @@ fn cmd_loadgen(rest: &[String]) -> anyhow::Result<()> {
         .filter(|r| r.status == 200)
         .map(|r| chh::obs::parse_scrape(&String::from_utf8_lossy(&r.body)));
     drop(probe);
-    // read fan-out targets: the primary plus any replicas
-    let mut read_addrs: Vec<String> = vec![addr.clone()];
-    for r in p.str("replicas").split(',').map(str::trim).filter(|s| !s.is_empty()) {
-        read_addrs.push(r.to_string());
-    }
+    // rotation targets: the whole router tier, or the primary plus any
+    // replicas. Router mode sends mutations through the rotation too —
+    // every router can route them to the owning partition.
+    let route_all = !routers.is_empty();
+    let read_addrs: Vec<String> = if route_all {
+        routers.clone()
+    } else {
+        let mut v = vec![addr.clone()];
+        for r in p.str("replicas").split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            v.push(r.to_string());
+        }
+        v
+    };
     println!(
         "loadgen: {queries} queries (dim={dim}, wire={proto_str}) -> {addr} [{server_mode}]  \
          {} loop, {conc} connections{}{}",
         if open_loop { "open" } else { "closed" },
         if open_loop { format!(", target {rate:.0} q/s") } else { String::new() },
-        if read_addrs.len() > 1 {
+        if route_all {
+            format!(", all traffic round-robin over {} routers", read_addrs.len())
+        } else if read_addrs.len() > 1 {
             format!(", reads round-robin over {} targets", read_addrs.len())
         } else {
             String::new()
@@ -1224,6 +1446,9 @@ fn cmd_loadgen(rest: &[String]) -> anyhow::Result<()> {
         /// TCP connects performed — a keep-alive regression shows up as
         /// this count climbing toward the request count
         established: usize,
+        /// transport failures (connect or request) against this target —
+        /// per-target attribution for a flapping router/replica
+        errors: usize,
     }
 
     /// One request body on either wire; [`Conn::post`] picks the matching
@@ -1235,15 +1460,21 @@ fn cmd_loadgen(rest: &[String]) -> anyhow::Result<()> {
 
     impl Conn {
         fn new(addr: String) -> Conn {
-            Conn { addr, client: None, established: 0 }
+            Conn { addr, client: None, established: 0, errors: 0 }
         }
 
         fn post(&mut self, path: &str, body: &Body) -> Option<chh::server::http::Response> {
             if self.client.is_none() {
                 // bounded connect: a dead replica in the rotation costs
                 // 1s per touch, not the OS's multi-minute SYN schedule
-                let c =
-                    HttpClient::connect_with_timeout(&self.addr, Duration::from_secs(1)).ok()?;
+                let c = match HttpClient::connect_with_timeout(&self.addr, Duration::from_secs(1))
+                {
+                    Ok(c) => c,
+                    Err(_) => {
+                        self.errors += 1;
+                        return None;
+                    }
+                };
                 let _ = c.set_timeout(Duration::from_secs(30));
                 self.client = Some(c);
                 self.established += 1;
@@ -1262,6 +1493,7 @@ fn cmd_loadgen(rest: &[String]) -> anyhow::Result<()> {
                 }
                 Err(_) => {
                     self.client = None;
+                    self.errors += 1;
                     None
                 }
             }
@@ -1313,6 +1545,19 @@ fn cmd_loadgen(rest: &[String]) -> anyhow::Result<()> {
         Some(h)
     }
 
+    /// What one worker thread hands back when it joins.
+    struct ThreadOut {
+        hist: Histogram,
+        ok: usize,
+        rejected: usize,
+        failed: usize,
+        mutations: usize,
+        conns: usize,
+        fingerprint: u64,
+        /// per rotation target: (connections established, transport errors)
+        targets: Vec<(usize, usize)>,
+    }
+
     /// Accumulated result of one protocol pass.
     struct PassOut {
         proto: &'static str,
@@ -1328,6 +1573,9 @@ fn cmd_loadgen(rest: &[String]) -> anyhow::Result<()> {
 
     let t0 = Instant::now();
     let mut pass_outs: Vec<PassOut> = Vec::new();
+    // per rotation target, summed across threads and passes:
+    // (connections established, transport errors)
+    let mut target_totals: Vec<(usize, usize)> = vec![(0, 0); read_addrs.len()];
     for (pi, &binary) in passes.iter().enumerate() {
         let proto = if binary { "binary" } else { "json" };
         if passes.len() > 1 {
@@ -1340,7 +1588,7 @@ fn cmd_loadgen(rest: &[String]) -> anyhow::Result<()> {
             let addr = addr.clone();
             let read_addrs = read_addrs.clone();
             handles.push(std::thread::spawn(
-                move || -> (Histogram, usize, usize, usize, usize, usize, u64) {
+                move || -> ThreadOut {
                     let mut h = Histogram::new();
                     let (mut ok, mut rejected, mut failed) = (0usize, 0usize, 0usize);
                     let mut mok = 0usize;
@@ -1352,14 +1600,21 @@ fn cmd_loadgen(rest: &[String]) -> anyhow::Result<()> {
                     let mut primary = Conn::new(addr);
                     let mut readers: Vec<Conn> =
                         read_addrs.into_iter().map(Conn::new).collect();
-                    // the server may still be binding: prime the primary
-                    // connection with a retry window before the timed run
+                    // the server may still be binding: prime one connection
+                    // with a retry window before the timed run (a router in
+                    // cluster mode — the mutation primary otherwise)
+                    let prime = if route_all {
+                        let k = t % readers.len();
+                        &mut readers[k]
+                    } else {
+                        &mut primary
+                    };
                     if let Ok(c) =
-                        HttpClient::connect_retry(&primary.addr, Duration::from_secs(5))
+                        HttpClient::connect_retry(&prime.addr, Duration::from_secs(5))
                     {
                         let _ = c.set_timeout(Duration::from_secs(30));
-                        primary.client = Some(c);
-                        primary.established += 1;
+                        prime.client = Some(c);
+                        prime.established += 1;
                     }
                     // stagger the rotation so concurrent threads spread
                     // their first reads across the fleet
@@ -1409,9 +1664,11 @@ fn cmd_loadgen(rest: &[String]) -> anyhow::Result<()> {
                             }
                         };
                         let q0 = Instant::now();
-                        // mutations always hit the primary (replicas answer
-                        // them 421); reads round-robin across the fleet
-                        let resp = if is_mutation {
+                        // mutations hit the primary directly (replicas
+                        // answer them 421) — except through a router tier,
+                        // where every router can route them by id; reads
+                        // round-robin across the fleet either way
+                        let resp = if is_mutation && !route_all {
                             primary.post(path, &body)
                         } else {
                             let k = rr % readers.len();
@@ -1439,7 +1696,16 @@ fn cmd_loadgen(rest: &[String]) -> anyhow::Result<()> {
                     }
                     let conns = primary.established
                         + readers.iter().map(|r| r.established).sum::<usize>();
-                    (h, ok, rejected, failed, mok, conns, fp)
+                    ThreadOut {
+                        hist: h,
+                        ok,
+                        rejected,
+                        failed,
+                        mutations: mok,
+                        conns,
+                        fingerprint: fp,
+                        targets: readers.iter().map(|r| (r.established, r.errors)).collect(),
+                    }
                 },
             ));
         }
@@ -1448,14 +1714,18 @@ fn cmd_loadgen(rest: &[String]) -> anyhow::Result<()> {
             (0usize, 0usize, 0usize, 0usize, 0usize);
         let mut fp = 0u64;
         for hd in handles {
-            let (h, o, r, f, m, c, tf) = hd.join().expect("loadgen worker");
-            hist.merge(&h);
-            ok += o;
-            rejected += r;
-            failed += f;
-            mutations += m;
-            conns += c;
-            fp ^= tf;
+            let to = hd.join().expect("loadgen worker");
+            hist.merge(&to.hist);
+            ok += to.ok;
+            rejected += to.rejected;
+            failed += to.failed;
+            mutations += to.mutations;
+            conns += to.conns;
+            fp ^= to.fingerprint;
+            for (i, (est, err)) in to.targets.into_iter().enumerate() {
+                target_totals[i].0 += est;
+                target_totals[i].1 += err;
+            }
         }
         pass_outs.push(PassOut {
             proto,
@@ -1514,6 +1784,18 @@ fn cmd_loadgen(rest: &[String]) -> anyhow::Result<()> {
     );
     if mutate_frac > 0.0 {
         println!("mutations: {mutations} applied (acked durable per the server's fsync policy)");
+    }
+    if read_addrs.len() > 1 || route_all {
+        let rows: Vec<Vec<String>> = read_addrs
+            .iter()
+            .zip(&target_totals)
+            .map(|(a, &(est, err))| vec![a.clone(), format!("{est}"), format!("{err}")])
+            .collect();
+        chh::report::print_rows(
+            &format!("per-target ({})", if route_all { "routers" } else { "read fan-out" }),
+            &["target", "conns", "errors"],
+            &rows,
+        );
     }
     if pass_outs.len() == 2 {
         let (j, b) = (&pass_outs[0], &pass_outs[1]);
@@ -1642,6 +1924,22 @@ fn cmd_loadgen(rest: &[String]) -> anyhow::Result<()> {
             ("p99_us", Json::Num(p99)),
             ("mean_us", Json::Num(hist.mean() * 1e6)),
             ("protocols", obj(proto_docs)),
+            (
+                "targets",
+                Json::Arr(
+                    read_addrs
+                        .iter()
+                        .zip(&target_totals)
+                        .map(|(a, &(est, err))| {
+                            obj(vec![
+                                ("addr", Json::from(a.as_str())),
+                                ("connections_established", Json::from(est)),
+                                ("transport_errors", Json::from(err)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
             // server-side /metrics deltas (null if a scrape failed)
             ("server", server_json.unwrap_or(Json::Null)),
         ]);

@@ -37,9 +37,14 @@
 //!   overload with HTTP 503 instead of queueing unboundedly.
 //! * **Serving stacks** — [`Stack::Static`] (prebuilt
 //!   [`crate::table::HyperplaneIndex`] behind a
-//!   [`crate::coordinator::Router`]) or [`Stack::Online`] (dynamic
+//!   [`crate::coordinator::Router`]), [`Stack::Online`] (dynamic
 //!   [`crate::online::ShardedIndex`] behind an
-//!   [`crate::coordinator::OnlineRouter`], with `/insert` + `/remove`).
+//!   [`crate::coordinator::OnlineRouter`], with `/insert` + `/remove`),
+//!   or [`Stack::Cluster`] (`chh route` — no local index; the data
+//!   routes scatter-gather across partition servers via
+//!   [`crate::cluster::ClusterRouter`], with a `/map` endpoint for
+//!   atomic partition-map flips and a mandatory `"partial"` flag on
+//!   every read answer).
 //!
 //! * **Durability** (optional) — [`Server::spawn_with_durability`]
 //!   routes `/insert`/`/remove` through a [`crate::wal::DurableIndex`]
@@ -74,6 +79,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::cluster::{ClusterRouter, PartitionMap};
 use crate::coordinator::{OnlineRouter, QueryRequest, Router};
 use crate::data::FeatureStore;
 use crate::hash::HashFamily;
@@ -102,12 +108,16 @@ pub struct ReplicaRole {
     pub tailer: Option<Tailer>,
 }
 
-/// Which index the server fronts. Both variants answer `/query` through
-/// the micro-batcher; only `Online` accepts `/insert` + `/remove`.
+/// Which index the server fronts. `Static`/`Online` answer `/query`
+/// through the micro-batcher; `Online` additionally accepts `/insert` +
+/// `/remove`; `Cluster` holds no index at all — it scatter-gathers the
+/// data routes across partition servers ([`crate::cluster`]) and owns
+/// the `/map` endpoint.
 #[derive(Clone)]
 pub enum Stack {
     Static(Arc<Router>),
     Online(Arc<OnlineRouter>),
+    Cluster(Arc<ClusterRouter>),
 }
 
 impl Stack {
@@ -115,6 +125,7 @@ impl Stack {
         match self {
             Stack::Static(_) => "static",
             Stack::Online(_) => "online",
+            Stack::Cluster(_) => "cluster",
         }
     }
 
@@ -122,6 +133,7 @@ impl Stack {
         match self {
             Stack::Static(r) => r.family(),
             Stack::Online(r) => r.family(),
+            Stack::Cluster(_) => unreachable!("a router stack holds no local hash family"),
         }
     }
 
@@ -129,6 +141,7 @@ impl Stack {
         match self {
             Stack::Static(r) => r.feats(),
             Stack::Online(r) => r.feats(),
+            Stack::Cluster(_) => unreachable!("a router stack holds no local feature store"),
         }
     }
 
@@ -144,6 +157,7 @@ impl Stack {
         match self {
             Stack::Static(r) => r.query_batch_pooled_traced(reqs, pool),
             Stack::Online(r) => r.query_batch_pooled_traced(reqs, pool),
+            Stack::Cluster(_) => unreachable!("cluster stacks do not batch locally"),
         }
     }
 }
@@ -353,7 +367,7 @@ fn register_metrics(
     tel: &Telemetry,
     stack: &Stack,
     sstats: &Arc<ServerStats>,
-    bstats: &Arc<BatcherStats>,
+    bstats: Option<&Arc<BatcherStats>>,
     conns: &Arc<ConnCounts>,
     durable: Option<&Arc<DurableIndex>>,
     replica: Option<&(Arc<ReplicaIndex>, String)>,
@@ -389,31 +403,33 @@ fn register_metrics(
         vec![],
         move || s.probes_total.load(Ordering::Relaxed) as f64,
     );
-    let b = bstats.clone();
-    reg.counter_fn(
-        "chh_batcher_submitted_total",
-        "queries admitted to the micro-batcher",
-        vec![],
-        move || b.submitted.load(Ordering::Relaxed) as f64,
-    );
-    let b = bstats.clone();
-    reg.counter_fn(
-        "chh_batcher_rejected_total",
-        "queries refused at admission (answered 503)",
-        vec![],
-        move || b.rejected.load(Ordering::Relaxed) as f64,
-    );
-    let b = bstats.clone();
-    reg.counter_fn("chh_batcher_batches_total", "batch flushes executed", vec![], move || {
-        b.batches.load(Ordering::Relaxed) as f64
-    });
-    let b = bstats.clone();
-    reg.counter_fn(
-        "chh_batcher_flushed_total",
-        "queries answered through batch flushes",
-        vec![],
-        move || b.flushed.load(Ordering::Relaxed) as f64,
-    );
+    if let Some(bstats) = bstats {
+        let b = bstats.clone();
+        reg.counter_fn(
+            "chh_batcher_submitted_total",
+            "queries admitted to the micro-batcher",
+            vec![],
+            move || b.submitted.load(Ordering::Relaxed) as f64,
+        );
+        let b = bstats.clone();
+        reg.counter_fn(
+            "chh_batcher_rejected_total",
+            "queries refused at admission (answered 503)",
+            vec![],
+            move || b.rejected.load(Ordering::Relaxed) as f64,
+        );
+        let b = bstats.clone();
+        reg.counter_fn("chh_batcher_batches_total", "batch flushes executed", vec![], move || {
+            b.batches.load(Ordering::Relaxed) as f64
+        });
+        let b = bstats.clone();
+        reg.counter_fn(
+            "chh_batcher_flushed_total",
+            "queries answered through batch flushes",
+            vec![],
+            move || b.flushed.load(Ordering::Relaxed) as f64,
+        );
+    }
     let c = conns.clone();
     reg.gauge_fn(
         "chh_open_connections",
@@ -428,41 +444,47 @@ fn register_metrics(
         vec![],
         move || c.accepted.load(Ordering::Relaxed) as f64,
     );
-    let router_counter = |name: &'static str,
-                          help: &'static str,
-                          pick: fn(&crate::coordinator::RouterStats) -> u64| {
-        let st = stack.clone();
-        reg.counter_fn(name, help, vec![], move || {
-            let rs = match &st {
-                Stack::Static(r) => r.stats(),
-                Stack::Online(r) => r.stats(),
-            };
-            pick(rs) as f64
+    if let Stack::Cluster(c) = stack {
+        register_cluster_metrics(reg, c);
+    } else {
+        let router_counter = |name: &'static str,
+                              help: &'static str,
+                              pick: fn(&crate::coordinator::RouterStats) -> u64| {
+            let st = stack.clone();
+            reg.counter_fn(name, help, vec![], move || {
+                let rs = match &st {
+                    Stack::Static(r) => r.stats(),
+                    Stack::Online(r) => r.stats(),
+                    Stack::Cluster(_) => unreachable!("gated above"),
+                };
+                pick(rs) as f64
+            });
+        };
+        router_counter("chh_router_submitted_total", "queries submitted to the router", |s| {
+            s.submitted.load(Ordering::Relaxed)
         });
-    };
-    router_counter("chh_router_submitted_total", "queries submitted to the router", |s| {
-        s.submitted.load(Ordering::Relaxed)
-    });
-    router_counter("chh_router_completed_total", "queries completed by the router", |s| {
-        s.completed.load(Ordering::Relaxed)
-    });
-    router_counter(
-        "chh_router_empty_lookups_total",
-        "queries whose probe sequence matched no candidates",
-        |s| s.empty_lookups.load(Ordering::Relaxed),
-    );
-    router_counter(
-        "chh_router_candidates_scanned_total",
-        "candidate points scanned across all queries",
-        |s| s.candidates_scanned.load(Ordering::Relaxed),
-    );
-    let st = stack.clone();
-    reg.gauge_fn("chh_index_points", "live points in the serving index", vec![], move || {
-        match &st {
-            Stack::Static(r) => r.index().len() as f64,
-            Stack::Online(r) => r.index().len() as f64,
-        }
-    });
+        router_counter("chh_router_completed_total", "queries completed by the router", |s| {
+            s.completed.load(Ordering::Relaxed)
+        });
+        router_counter(
+            "chh_router_empty_lookups_total",
+            "queries whose probe sequence matched no candidates",
+            |s| s.empty_lookups.load(Ordering::Relaxed),
+        );
+        router_counter(
+            "chh_router_candidates_scanned_total",
+            "candidate points scanned across all queries",
+            |s| s.candidates_scanned.load(Ordering::Relaxed),
+        );
+        let st = stack.clone();
+        reg.gauge_fn("chh_index_points", "live points in the serving index", vec![], move || {
+            match &st {
+                Stack::Static(r) => r.index().len() as f64,
+                Stack::Online(r) => r.index().len() as f64,
+                Stack::Cluster(_) => unreachable!("gated above"),
+            }
+        });
+    }
     if let Some(d) = durable {
         let ws = d.wal_stats().clone();
         reg.counter_fn("chh_wal_records_total", "records appended to the WAL", vec![], move || {
@@ -610,6 +632,78 @@ fn register_metrics(
     }
 }
 
+/// The router tier's metric family (`chh route` processes only).
+/// Per-partition health gauges are registered for the partitions of the
+/// map installed at spawn; after a map flip that changes the partition
+/// count, a retired slot reports -1 (see `ClusterRouter::health_at`) and
+/// routers are restarted to re-register — they are stateless, so a
+/// restart costs one `/stats` probe round.
+fn register_cluster_metrics(reg: &Registry, c: &Arc<ClusterRouter>) {
+    let counter = |name: &'static str, help: &'static str, pick: fn(&ClusterRouter) -> u64| {
+        let cc = c.clone();
+        reg.counter_fn(name, help, vec![], move || pick(&cc) as f64);
+    };
+    counter("chh_router_fanout_reads_total", "scatter-gather reads issued", |c| {
+        c.stats().fanout_reads.load(Ordering::Relaxed)
+    });
+    counter(
+        "chh_router_partial_answers_total",
+        "reads answered degraded with at least one partition missing",
+        |c| c.stats().partial_answers.load(Ordering::Relaxed),
+    );
+    counter(
+        "chh_router_failovers_total",
+        "reads answered by a replica because the partition primary was unreachable",
+        |c| c.stats().failovers.load(Ordering::Relaxed),
+    );
+    counter(
+        "chh_router_stale_map_retries_total",
+        "mutations that hit a 421 and were retried at the advertised primary",
+        |c| c.stats().stale_map_retries.load(Ordering::Relaxed),
+    );
+    counter(
+        "chh_router_map_reloads_total",
+        "partition-map installs (POST /map or disk reload after a 421)",
+        |c| c.stats().map_reloads.load(Ordering::Relaxed),
+    );
+    counter(
+        "chh_router_downstream_errors_total",
+        "downstream partition requests that errored (transport or non-2xx)",
+        |c| c.stats().downstream_errors.load(Ordering::Relaxed),
+    );
+    counter("chh_router_mutations_routed_total", "mutations routed by id range", |c| {
+        c.stats().mutations_routed.load(Ordering::Relaxed)
+    });
+    let cc = c.clone();
+    reg.gauge_fn(
+        "chh_cluster_map_version",
+        "version of the installed partition map",
+        vec![],
+        move || cc.map_version() as f64,
+    );
+    let cc = c.clone();
+    reg.gauge_fn("chh_cluster_partitions", "partitions in the installed map", vec![], move || {
+        cc.partition_count() as f64
+    });
+    let cc = c.clone();
+    reg.gauge_fn(
+        "chh_cluster_id_space",
+        "one past the largest routable id in the installed map",
+        vec![],
+        move || cc.id_space() as f64,
+    );
+    for i in 0..c.partition_count() {
+        let cc = c.clone();
+        reg.gauge_fn(
+            "chh_cluster_partition_healthy",
+            "1 when the partition answered its last read, 0 when every target failed, \
+             -1 when the installed map no longer has this partition index",
+            vec![("partition", i.to_string())],
+            move || cc.health_at(i),
+        );
+    }
+}
+
 /// Transport-level connection accounting, shared between the transport
 /// (event loop or legacy acceptor) and the `/metrics` scrape callbacks.
 #[derive(Default)]
@@ -622,7 +716,9 @@ struct ConnCounts {
 
 struct State {
     stack: Stack,
-    batcher: Batcher,
+    /// micro-batcher over the local index; `None` for the cluster stack
+    /// (routers batch nothing — every request fans out immediately)
+    batcher: Option<Batcher>,
     /// metrics registry, stage histograms, slow-query sink
     telemetry: Arc<Telemetry>,
     /// journaling wrapper around the online index, when serving durably
@@ -656,12 +752,22 @@ const MAX_SHEDDING: usize = 64;
 
 impl State {
     fn dim(&self) -> usize {
-        self.stack.feats().dim()
+        match &self.stack {
+            Stack::Cluster(c) => c.dim(),
+            _ => self.stack.feats().dim(),
+        }
+    }
+
+    /// The micro-batcher; only the cluster stack runs without one.
+    fn batcher(&self) -> &Batcher {
+        self.batcher.as_ref().expect("non-cluster stacks own a batcher")
     }
 
     /// Serving role for `/healthz` and `/stats`.
     fn role(&self) -> &'static str {
-        if self.replica.is_some() {
+        if matches!(self.stack, Stack::Cluster(_)) {
+            "router"
+        } else if self.replica.is_some() {
             "replica"
         } else if self.durable.is_some() {
             "primary"
@@ -797,6 +903,15 @@ impl Server {
         Self::spawn_inner(stack, cfg, None, Some(role))
     }
 
+    /// Run the stateless router tier (`chh route`): scatter-gather the
+    /// data routes across the cluster's partitions and serve `/map`.
+    pub fn spawn_cluster(
+        router: Arc<ClusterRouter>,
+        cfg: ServerConfig,
+    ) -> anyhow::Result<ServerHandle> {
+        Self::spawn_inner(Stack::Cluster(router), cfg, None, None)
+    }
+
     fn spawn_inner(
         stack: Stack,
         cfg: ServerConfig,
@@ -809,27 +924,36 @@ impl Server {
         if durability.is_some() && replica_role.is_some() {
             anyhow::bail!("a server is a primary or a replica, not both");
         }
+        if replica_role.is_some() && matches!(stack, Stack::Cluster(_)) {
+            anyhow::bail!("the router tier is stateless; it cannot be a replica");
+        }
         let listener = TcpListener::bind(&cfg.addr)
             .map_err(|e| anyhow::anyhow!("binding {}: {e}", cfg.addr))?;
         let addr = listener.local_addr()?;
         let telemetry = Arc::new(Telemetry::new(cfg.slow_ms, cfg.slow_log.clone()));
-        let flush_stack = stack.clone();
-        let pool = crate::par::Pool::new(cfg.pool_workers);
-        let ftel = telemetry.clone();
-        let batcher = Batcher::new(
-            cfg.batch,
-            Box::new(move |reqs: &[QueryRequest]| {
-                let (hits, stages) = flush_stack.query_batch_traced(reqs, &pool);
-                ftel.record_stages(&stages);
-                FlushOutcome { hits, stages }
-            }),
-        );
+        // the cluster stack holds no local index: no batcher, no flush
+        // pool — every data request fans out to the partitions instead
+        let batcher = if matches!(stack, Stack::Cluster(_)) {
+            None
+        } else {
+            let flush_stack = stack.clone();
+            let pool = crate::par::Pool::new(cfg.pool_workers);
+            let ftel = telemetry.clone();
+            Some(Batcher::new(
+                cfg.batch,
+                Box::new(move |reqs: &[QueryRequest]| {
+                    let (hits, stages) = flush_stack.query_batch_traced(reqs, &pool);
+                    ftel.record_stages(&stages);
+                    FlushOutcome { hits, stages }
+                }),
+            ))
+        };
         let budget_desc = match &stack {
             Stack::Online(r) => {
                 let b = r.budget();
                 Some((b.probes, b.top))
             }
-            Stack::Static(_) => None,
+            Stack::Static(_) | Stack::Cluster(_) => None,
         };
         let (durable, snapshot_every_ops) = match durability {
             Some(d) => (Some(d.durable), d.snapshot_every_ops),
@@ -839,10 +963,11 @@ impl Server {
             Some(r) => (Some((r.replica, r.primary_addr)), r.tailer),
             None => (None, None),
         };
-        let family_check = crate::replicate::family_fingerprint(
-            stack.family().as_ref(),
-            stack.feats().dim(),
-        );
+        let family_check = match &stack {
+            // the router validated every partition against this at connect
+            Stack::Cluster(c) => c.meta().family_check,
+            _ => crate::replicate::family_fingerprint(stack.family().as_ref(), stack.feats().dim()),
+        };
         let state = Arc::new(State {
             stack,
             batcher,
@@ -875,7 +1000,7 @@ impl Server {
             &state.telemetry,
             &state.stack,
             &state.stats,
-            state.batcher.stats(),
+            state.batcher.as_ref().map(|b| b.stats()),
             &state.conns,
             state.durable.as_ref(),
             state.replica.as_ref(),
@@ -1165,6 +1290,7 @@ const ROUTES: &[&str] = &[
     "/shutdown",
     "/wal/stream",
     "/wal/bootstrap",
+    "/map",
 ];
 
 fn dispatch(state: &Arc<State>, req: &http::Request, trace: &mut Trace) -> Reply {
@@ -1187,22 +1313,36 @@ fn dispatch(state: &Arc<State>, req: &http::Request, trace: &mut Trace) -> Reply
         // and attribute themselves to `chh_requests_by_protocol`
         ("POST", "/query") => {
             state.telemetry.count_proto(req.binary);
-            handle_query(state, &req.body, req.binary, trace)
+            match &state.stack {
+                Stack::Cluster(c) => handle_cluster_query(state, c, &req.body, req.binary),
+                _ => handle_query(state, &req.body, req.binary, trace),
+            }
         }
         ("POST", "/query_topk") => {
             state.telemetry.count_proto(req.binary);
-            handle_topk(state, &req.body, req.binary)
+            match &state.stack {
+                Stack::Cluster(c) => handle_cluster_topk(state, c, &req.body, req.binary),
+                _ => handle_topk(state, &req.body, req.binary),
+            }
         }
         ("POST", "/insert") => {
             state.telemetry.count_proto(req.binary);
-            handle_insert(state, &req.body, req.binary)
+            match &state.stack {
+                Stack::Cluster(c) => handle_cluster_mutate(c, &req.body, req.binary, true),
+                _ => handle_insert(state, &req.body, req.binary),
+            }
         }
         ("POST", "/remove") => {
             state.telemetry.count_proto(req.binary);
-            handle_remove(state, &req.body, req.binary)
+            match &state.stack {
+                Stack::Cluster(c) => handle_cluster_mutate(c, &req.body, req.binary, false),
+                _ => handle_remove(state, &req.body, req.binary),
+            }
         }
         ("GET", "/wal/stream") => handle_wal_stream(state, query),
         ("GET", "/wal/bootstrap") => handle_wal_bootstrap(state, query),
+        ("GET", "/map") => handle_map_get(state),
+        ("POST", "/map") => handle_map_post(state, &req.body),
         ("POST", "/shutdown") => {
             trigger_shutdown(state);
             ok_json(obj(vec![("shutting_down", Json::from(true))]))
@@ -1266,7 +1406,7 @@ fn handle_query(state: &Arc<State>, body: &[u8], binary: bool, trace: &mut Trace
         Err(e) => return err_json(e.status, &e.msg),
     };
     let t0 = Instant::now();
-    match state.batcher.submit(req) {
+    match state.batcher().submit(req) {
         Ok(rx) => match rx.recv() {
             Ok(BatchedReply { hit, wait, stages }) => {
                 let tel = &state.telemetry;
@@ -1421,25 +1561,210 @@ fn handle_remove(state: &Arc<State>, body: &[u8], binary: bool) -> Reply {
     ]))
 }
 
-fn handle_stats(state: &Arc<State>) -> Reply {
-    let s = &state.stats;
-    let router_stats = match &state.stack {
-        Stack::Static(r) => r.stats(),
-        Stack::Online(r) => r.stats(),
+/// Reject a binary-negotiated request on a cluster route. The binary
+/// hit/topk frames have no room for the degraded-answer flag, so the
+/// router tier speaks JSON upstream; the binary wire stays the
+/// router→partition transport.
+fn cluster_binary_reply() -> Reply {
+    err_json(
+        400,
+        "the router tier answers JSON upstream (the binary wire is partition-internal); \
+         drop the application/x-chh-binary content type",
+    )
+}
+
+fn cluster_err(e: crate::cluster::ClusterError) -> Reply {
+    err_json(e.status, &e.msg)
+}
+
+/// Add the degraded-answer marker to a data-route reply. Upstream
+/// parsers that predate the cluster tier ignore unknown keys, so the
+/// flag is additive — but it is always present, and `true` means at
+/// least one partition did not contribute (never a silent short list).
+fn with_partial(v: Json, partial: bool) -> Json {
+    match v {
+        Json::Obj(mut m) => {
+            m.insert("partial".to_string(), Json::from(partial));
+            Json::Obj(m)
+        }
+        other => other,
+    }
+}
+
+/// Scatter-gather `/query` across the cluster (JSON upstream only).
+fn handle_cluster_query(
+    state: &Arc<State>,
+    c: &Arc<ClusterRouter>,
+    body: &[u8],
+    binary: bool,
+) -> Reply {
+    if binary {
+        return cluster_binary_reply();
+    }
+    let req = match protocol::parse_query(body, state.dim()) {
+        Ok(r) => r,
+        Err(e) => return err_json(e.status, &e.msg),
     };
-    let b = state.batcher.stats();
-    // one sort under the lock the query path records into
+    let t0 = Instant::now();
+    match c.query(&req) {
+        Ok(ans) => {
+            state.stats.latency.lock().unwrap().record_duration(t0.elapsed());
+            state.stats.probes_total.fetch_add(ans.value.probed as u64, Ordering::Relaxed);
+            ok_json(with_partial(protocol::hit_json(&ans.value), ans.partial()))
+        }
+        Err(e) => cluster_err(e),
+    }
+}
+
+/// Scatter-gather `/query_topk` across the cluster (JSON upstream only).
+fn handle_cluster_topk(
+    state: &Arc<State>,
+    c: &Arc<ClusterRouter>,
+    body: &[u8],
+    binary: bool,
+) -> Reply {
+    if binary {
+        return cluster_binary_reply();
+    }
+    let (req, t) = match protocol::parse_topk(body, state.dim()) {
+        Ok(r) => r,
+        Err(e) => return err_json(e.status, &e.msg),
+    };
+    let t0 = Instant::now();
+    match c.query_topk(&req, t) {
+        Ok(ans) => {
+            state.stats.latency.lock().unwrap().record_duration(t0.elapsed());
+            ok_json(with_partial(protocol::topk_json(&ans.value), ans.partial()))
+        }
+        Err(e) => cluster_err(e),
+    }
+}
+
+/// Route one `/insert`/`/remove` to the partition primary owning the id.
+fn handle_cluster_mutate(c: &Arc<ClusterRouter>, body: &[u8], binary: bool, insert: bool) -> Reply {
+    if binary {
+        return cluster_binary_reply();
+    }
+    let id = match protocol::parse_id(body) {
+        Ok(id) => id,
+        Err(e) => return err_json(e.status, &e.msg),
+    };
+    match c.mutate(insert, id) {
+        Ok((applied, live)) => ok_json(obj(vec![
+            (if insert { "inserted" } else { "removed" }, Json::from(applied)),
+            ("id", Json::from(id as usize)),
+            // live count of the owning partition, not the whole cluster
+            // (the cluster-wide figure is on the router's /stats)
+            ("live", Json::from(live as usize)),
+        ])),
+        Err(e) => cluster_err(e),
+    }
+}
+
+/// The installed partition map (routers only).
+fn handle_map_get(state: &Arc<State>) -> Reply {
+    let Stack::Cluster(c) = &state.stack else {
+        return err_json(400, "not a router (serve with `chh route`)");
+    };
+    ok_json(c.map_json())
+}
+
+/// Atomically flip the router to a newer partition map (routers only).
+/// The body is a serialized map; it must validate, match the cluster's
+/// family fingerprint, and strictly increase the version.
+fn handle_map_post(state: &Arc<State>, body: &[u8]) -> Reply {
+    let Stack::Cluster(c) = &state.stack else {
+        return err_json(400, "not a router (serve with `chh route`)");
+    };
+    let map = match PartitionMap::parse_bytes(body) {
+        Ok(m) => m,
+        Err(e) => return err_json(400, &e),
+    };
+    match c.install_map(map) {
+        Ok(v) => ok_json(obj(vec![
+            ("installed", Json::from(true)),
+            ("version", Json::from(v as usize)),
+        ])),
+        Err(e) => cluster_err(e),
+    }
+}
+
+/// `/stats` for the router role: no local index, batcher, or WAL — the
+/// interesting state is the map and the per-partition health/counters.
+fn handle_cluster_stats(state: &Arc<State>, c: &Arc<ClusterRouter>) -> Reply {
+    let s = &state.stats;
+    let meta = c.meta();
+    ok_json(obj(vec![
+        ("mode", Json::from(state.stack.mode())),
+        ("role", Json::from(state.role())),
+        ("dim", Json::from(meta.dim)),
+        // the routable id space stands in for the feature-store size
+        // (loadgen bounds its mutation ids by this, same as `points`)
+        ("points", Json::from(c.id_space() as usize)),
+        ("bits", Json::from(meta.bits)),
+        ("family", Json::from(meta.family.as_str())),
+        ("family_check", Json::from(state.family_check as usize)),
+        ("uptime_secs", Json::Num(s.started.elapsed().as_secs_f64())),
+        (
+            "http",
+            obj(vec![
+                ("requests", Json::from(s.http_requests.load(Ordering::Relaxed) as usize)),
+                ("bad_requests", Json::from(s.bad_requests.load(Ordering::Relaxed) as usize)),
+                ("probes_total", Json::from(s.probes_total.load(Ordering::Relaxed) as usize)),
+                ("latency", latency_json(s)),
+            ]),
+        ),
+        ("transport", transport_json(state)),
+        ("cluster", c.stats_json()),
+    ]))
+}
+
+/// The `transport` sub-document of `/stats`, shared by every role.
+fn transport_json(state: &Arc<State>) -> Json {
+    obj(vec![
+        ("model", Json::from(if cfg!(unix) { "event_loop" } else { "threaded" })),
+        ("conn_workers", Json::from(state.conn_workers)),
+        ("max_conns", Json::from(state.max_conns)),
+        ("open_connections", Json::from(state.conns.open.load(Ordering::SeqCst))),
+        (
+            "connections_accepted",
+            Json::from(state.conns.accepted.load(Ordering::Relaxed) as usize),
+        ),
+        // OS-level thread count of the whole process: the
+        // transport-scale test and CI smoke assert this stays
+        // O(conn_workers) while thousands of sockets sit open
+        ("threads", process_threads().map_or(Json::Null, Json::from)),
+    ])
+}
+
+/// The `latency` sub-document of `/stats`: one sort under the lock the
+/// query path records into.
+fn latency_json(s: &ServerStats) -> Json {
     let (pcts, lat_mean, lat_count) = {
         let lat = s.latency.lock().unwrap();
         (lat.percentiles(&[50.0, 95.0, 99.0]), lat.mean(), lat.len())
     };
-    let lat_json = obj(vec![
+    obj(vec![
         ("p50_us", Json::Num(pcts[0] * 1e6)),
         ("p95_us", Json::Num(pcts[1] * 1e6)),
         ("p99_us", Json::Num(pcts[2] * 1e6)),
         ("mean_us", Json::Num(lat_mean * 1e6)),
         ("count", Json::from(lat_count)),
-    ]);
+    ])
+}
+
+fn handle_stats(state: &Arc<State>) -> Reply {
+    if let Stack::Cluster(c) = &state.stack {
+        return handle_cluster_stats(state, c);
+    }
+    let s = &state.stats;
+    let router_stats = match &state.stack {
+        Stack::Static(r) => r.stats(),
+        Stack::Online(r) => r.stats(),
+        Stack::Cluster(_) => unreachable!("handled above"),
+    };
+    let b = state.batcher().stats();
+    let lat_json = latency_json(s);
     let mut fields = vec![
         ("mode", Json::from(state.stack.mode())),
         ("role", Json::from(state.role())),
@@ -1494,26 +1819,7 @@ fn handle_stats(state: &Arc<State>) -> Reply {
                 ("max_batch", Json::Num(b.max_batch_seen())),
             ]),
         ),
-        (
-            "transport",
-            obj(vec![
-                ("model", Json::from(if cfg!(unix) { "event_loop" } else { "threaded" })),
-                ("conn_workers", Json::from(state.conn_workers)),
-                ("max_conns", Json::from(state.max_conns)),
-                (
-                    "open_connections",
-                    Json::from(state.conns.open.load(Ordering::SeqCst)),
-                ),
-                (
-                    "connections_accepted",
-                    Json::from(state.conns.accepted.load(Ordering::Relaxed) as usize),
-                ),
-                // OS-level thread count of the whole process: the
-                // transport-scale test and CI smoke assert this stays
-                // O(conn_workers) while thousands of sockets sit open
-                ("threads", process_threads().map_or(Json::Null, Json::from)),
-            ]),
-        ),
+        ("transport", transport_json(state)),
     ];
     match &state.stack {
         Stack::Static(r) => {
@@ -1608,7 +1914,7 @@ mod tests {
         );
         let state = Arc::new(State {
             stack,
-            batcher,
+            batcher: Some(batcher),
             telemetry,
             durable: None,
             replica: None,
@@ -1635,7 +1941,7 @@ mod tests {
             &state.telemetry,
             &state.stack,
             &state.stats,
-            state.batcher.stats(),
+            state.batcher.as_ref().map(|b| b.stats()),
             &state.conns,
             None,
             None,

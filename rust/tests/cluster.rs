@@ -1,0 +1,410 @@
+//! Cluster-serving acceptance tests:
+//!
+//! * **Single-partition parity pin** — a router fronting a 1-partition
+//!   map must answer `/query` and `/query_topk` bit-identically (ids,
+//!   margin bits, scanned/probed counters) to the partition answering
+//!   directly, and to the index math itself: the cluster layer adds
+//!   zero semantic drift.
+//! * **Two-partition merge** — scatter-gather answers equal
+//!   [`chh::online::merge_hits`] over the per-partition answers, the
+//!   top-k merge keeps the margin-then-id tie-break, mutations land on
+//!   the owning partition, out-of-map ids are refused with 400, and
+//!   the live map is inspectable (`GET /map`) and atomically
+//!   replaceable (`POST /map`, replays refused).
+//! * **Kill a partition** — a dead partition degrades the answer
+//!   (`"partial": true`, health gauge 0, partial counter bumped)
+//!   instead of silently shortening it; every partition dead is a 503.
+//! * **Stale map** — a mutation hitting a demoted node (now a read
+//!   replica) follows the 421 redirect to the advertised primary and
+//!   counts a stale-map retry.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use chh::cluster::{ClusterConfig, ClusterRouter, Partition, PartitionMap};
+use chh::coordinator::OnlineRouter;
+use chh::data::test_blobs;
+use chh::hash::{BhHash, HashFamily};
+use chh::online::{merge_hits, QueryBudget, ShardedIndex};
+use chh::rng::Rng;
+use chh::server::{
+    protocol, BatcherConfig, HttpClient, Server, ServerConfig, ServerHandle, Stack,
+};
+use chh::testing::unit_vec;
+
+const DIM: usize = 16;
+const BITS: usize = 10;
+const RADIUS: usize = 2;
+const SHARDS: usize = 3;
+const N: usize = 200;
+
+fn server_cfg() -> ServerConfig {
+    ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        max_conns: 32,
+        conn_workers: 2,
+        batch: BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            queue_cap: 256,
+        },
+        pool_workers: 2,
+        idle_timeout: Duration::from_millis(300),
+        slow_ms: 0,
+        slow_log: None,
+    }
+}
+
+fn cluster_cfg() -> ClusterConfig {
+    ClusterConfig {
+        connect_timeout: Duration::from_millis(250),
+        io_timeout: Duration::from_secs(5),
+        probe_wait: Duration::from_secs(5),
+    }
+}
+
+/// The world the tests run in: one dataset/family/budget shared by
+/// every in-process partition, so codes and fingerprints agree exactly
+/// as they would for servers started with the same profile/bits/seed.
+struct World {
+    fam: Arc<dyn HashFamily>,
+    feats: Arc<chh::data::FeatureStore>,
+    budget: QueryBudget,
+}
+
+fn world(seed: u64) -> World {
+    let mut rng = Rng::seed_from_u64(seed);
+    let ds = test_blobs(N, DIM, 3, &mut rng);
+    World {
+        fam: Arc::new(BhHash::sample(DIM, BITS, &mut rng)),
+        feats: Arc::new(ds.features().clone()),
+        budget: QueryBudget::new(256, 64),
+    }
+}
+
+/// One partition primary: an online index holding `[start, end)`
+/// behind a live HTTP server.
+struct Node {
+    index: Arc<ShardedIndex>,
+    handle: ServerHandle,
+    addr: String,
+}
+
+fn spawn_partition(w: &World, start: u32, end: u32) -> Node {
+    let index = Arc::new(ShardedIndex::new(BITS, RADIUS, SHARDS));
+    for id in start..end {
+        index.insert_point(w.fam.as_ref(), id, w.feats.row(id as usize));
+    }
+    index.compact();
+    index.set_default_budget(w.budget);
+    let router = Arc::new(OnlineRouter::new(
+        w.fam.clone(),
+        index.clone(),
+        w.feats.clone(),
+        1,
+        16,
+        w.budget,
+    ));
+    let handle = Server::spawn_with_durability(Stack::Online(router), server_cfg(), None)
+        .expect("spawn partition");
+    let addr = handle.addr().to_string();
+    Node { index, handle, addr }
+}
+
+fn family_check(w: &World) -> u32 {
+    chh::replicate::family_fingerprint(w.fam.as_ref(), DIM)
+}
+
+fn map_for(w: &World, version: u64, parts: &[(u32, u32, &str)]) -> PartitionMap {
+    PartitionMap {
+        version,
+        partitions: parts
+            .iter()
+            .map(|&(start, end, addr)| Partition {
+                start,
+                end,
+                primary: addr.to_string(),
+                replicas: Vec::new(),
+                family_check: family_check(w),
+            })
+            .collect(),
+    }
+}
+
+fn spawn_router(w: &World, parts: &[(u32, u32, &str)]) -> (Arc<ClusterRouter>, ServerHandle) {
+    let map = map_for(w, 1, parts);
+    let router =
+        Arc::new(ClusterRouter::connect(map, None, cluster_cfg()).expect("router connect"));
+    let handle = Server::spawn_cluster(router.clone(), server_cfg()).expect("spawn router");
+    (router, handle)
+}
+
+fn client(addr: &str) -> HttpClient {
+    let mut c = HttpClient::connect_retry(addr, Duration::from_secs(5)).expect("connect");
+    c.set_timeout(Duration::from_secs(5)).unwrap();
+    c
+}
+
+fn bits_of(hits: &[(usize, f32)]) -> Vec<(usize, u32)> {
+    hits.iter().map(|&(i, m)| (i, m.to_bits())).collect()
+}
+
+fn partial_flag(body: &[u8]) -> Option<bool> {
+    chh::jsonio::Json::parse_bytes(body).ok()?.get("partial")?.as_bool()
+}
+
+#[test]
+fn one_partition_router_answers_bit_identically_to_the_single_node() {
+    let w = world(11);
+    let part = spawn_partition(&w, 0, N as u32);
+    let (_cr, rhandle) = spawn_router(&w, &[(0, N as u32, &part.addr)]);
+    let raddr = rhandle.addr().to_string();
+    let mut via = client(&raddr);
+    let mut direct = client(&part.addr);
+    let mut rng = Rng::seed_from_u64(7);
+    for q in 0..20 {
+        let wv = unit_vec(&mut rng, DIM);
+        let body = protocol::query_body(&wv);
+        let r = via.post("/query", &body).expect("router /query");
+        assert_eq!(r.status, 200, "query {q}");
+        let d = direct.post("/query", &body).expect("direct /query");
+        assert_eq!(d.status, 200, "query {q} direct");
+        let hr = protocol::parse_hit(&r.body).expect("router hit");
+        let hd = protocol::parse_hit(&d.body).expect("direct hit");
+        // the routed answer must match the node's own answer bit for
+        // bit — ids, margin bits, and the scanned/probed counters
+        assert_eq!(
+            hr.best.map(|(i, m)| (i, m.to_bits())),
+            hd.best.map(|(i, m)| (i, m.to_bits())),
+            "query {q} best"
+        );
+        assert_eq!(hr.scanned, hd.scanned, "query {q} scanned");
+        assert_eq!(hr.probed, hd.probed, "query {q} probed");
+        assert_eq!(hr.nonempty, hd.nonempty, "query {q} nonempty");
+        // and the index math itself, not just the other HTTP stack
+        let hx = part.index.query(w.fam.as_ref(), &wv, &w.feats, w.budget, |_| true);
+        assert_eq!(
+            hr.best.map(|(i, m)| (i, m.to_bits())),
+            hx.best.map(|(i, m)| (i, m.to_bits())),
+            "query {q} vs index"
+        );
+        assert_eq!((hr.scanned, hr.probed), (hx.scanned, hx.probed), "query {q} counters");
+        // a full answer advertises itself as such
+        assert_eq!(partial_flag(&r.body), Some(false), "query {q} partial flag");
+
+        let tbody = protocol::topk_body(&wv, 8);
+        let rt = via.post("/query_topk", &tbody).expect("router /query_topk");
+        assert_eq!(rt.status, 200, "topk {q}");
+        let dt = direct.post("/query_topk", &tbody).expect("direct /query_topk");
+        let got = protocol::parse_topk_hits(&rt.body).expect("router topk");
+        let want = protocol::parse_topk_hits(&dt.body).expect("direct topk");
+        assert_eq!(bits_of(&got), bits_of(&want), "topk {q}");
+        assert_eq!(partial_flag(&rt.body), Some(false), "topk {q} partial flag");
+    }
+    rhandle.shutdown();
+    part.handle.shutdown();
+}
+
+#[test]
+fn two_partitions_merge_exactly_and_mutations_land_on_the_owner() {
+    let w = world(23);
+    let a = spawn_partition(&w, 0, 120);
+    let b = spawn_partition(&w, 120, N as u32);
+    let (_cr, rhandle) =
+        spawn_router(&w, &[(0, 120, &a.addr), (120, N as u32, &b.addr)]);
+    let raddr = rhandle.addr().to_string();
+    let mut via = client(&raddr);
+    let mut da = client(&a.addr);
+    let mut db = client(&b.addr);
+    let mut rng = Rng::seed_from_u64(3);
+    for q in 0..15 {
+        let wv = unit_vec(&mut rng, DIM);
+        let r = via.post("/query", &protocol::query_body(&wv)).expect("router /query");
+        assert_eq!(r.status, 200, "query {q}");
+        let hr = protocol::parse_hit(&r.body).expect("router hit");
+        let ha = a.index.query(w.fam.as_ref(), &wv, &w.feats, w.budget, |_| true);
+        let hb = b.index.query(w.fam.as_ref(), &wv, &w.feats, w.budget, |_| true);
+        let want = merge_hits(&[ha, hb]);
+        assert_eq!(
+            hr.best.map(|(i, m)| (i, m.to_bits())),
+            want.best.map(|(i, m)| (i, m.to_bits())),
+            "query {q} best must be the global margin minimum"
+        );
+        assert_eq!(hr.scanned, want.scanned, "query {q} scanned must sum");
+        assert_eq!(hr.probed, want.probed, "query {q} probed must sum");
+        assert_eq!(hr.nonempty, want.nonempty, "query {q} nonempty");
+        assert_eq!(partial_flag(&r.body), Some(false), "query {q} partial flag");
+
+        // top-k: concat the per-partition short lists, sort by margin
+        // then id (the OnlineRouter tie-break), truncate — the router's
+        // merge must reproduce that exactly
+        let tbody = protocol::topk_body(&wv, 8);
+        let rt = via.post("/query_topk", &tbody).expect("router /query_topk");
+        assert_eq!(rt.status, 200, "topk {q}");
+        let ta = protocol::parse_topk_hits(&da.post("/query_topk", &tbody).unwrap().body)
+            .expect("partition a topk");
+        let tb = protocol::parse_topk_hits(&db.post("/query_topk", &tbody).unwrap().body)
+            .expect("partition b topk");
+        let mut want: Vec<(usize, f32)> = ta.into_iter().chain(tb).collect();
+        want.sort_by(|x, y| {
+            x.1.partial_cmp(&y.1).unwrap_or(std::cmp::Ordering::Equal).then(x.0.cmp(&y.0))
+        });
+        want.truncate(8);
+        let got = protocol::parse_topk_hits(&rt.body).expect("router topk");
+        assert_eq!(bits_of(&got), bits_of(&want), "topk {q}");
+    }
+
+    // mutations are routed by id range to the owning partition
+    let before = b.index.len();
+    let r = via.post("/remove", &protocol::id_body(150)).expect("remove");
+    assert_eq!(r.status, 200);
+    assert_eq!(b.index.len(), before - 1, "the owner applied the remove");
+    assert_eq!(a.index.len(), 120, "the other partition is untouched");
+    let r = via.post("/insert", &protocol::id_body(150)).expect("insert");
+    assert_eq!(r.status, 200);
+    assert_eq!(b.index.len(), before, "the owner applied the insert");
+    // an id no partition owns is refused, never silently dropped
+    let r = via.post("/insert", &protocol::id_body(5000)).expect("bad insert");
+    assert_eq!(r.status, 400, "out-of-map id must 400");
+
+    // the live map is inspectable and atomically replaceable
+    let m = via.get("/map").expect("GET /map");
+    assert_eq!(m.status, 200);
+    let mj = chh::jsonio::Json::parse_bytes(&m.body).expect("map json");
+    assert_eq!(mj.get("version").and_then(|v| v.as_usize()), Some(1));
+    let next = map_for(&w, 2, &[(0, 120, &a.addr), (120, N as u32, &b.addr)]);
+    let r = via.post("/map", &next.to_string_compact()).expect("POST /map");
+    assert_eq!(r.status, 200, "a newer map installs: {}", String::from_utf8_lossy(&r.body));
+    let r = via.post("/map", &next.to_string_compact()).expect("POST /map replay");
+    assert_eq!(r.status, 409, "a replayed map version is refused");
+
+    rhandle.shutdown();
+    a.handle.shutdown();
+    b.handle.shutdown();
+}
+
+#[test]
+fn a_dead_partition_degrades_the_answer_instead_of_shortening_it() {
+    let w = world(31);
+    let a = spawn_partition(&w, 0, 120);
+    let b = spawn_partition(&w, 120, N as u32);
+    let (_cr, rhandle) =
+        spawn_router(&w, &[(0, 120, &a.addr), (120, N as u32, &b.addr)]);
+    let raddr = rhandle.addr().to_string();
+    let mut via = client(&raddr);
+    let mut rng = Rng::seed_from_u64(5);
+    // a healthy round first, so the kill also covers dead *pooled*
+    // connections, not just fresh dials
+    let wv = unit_vec(&mut rng, DIM);
+    let r = via.post("/query", &protocol::query_body(&wv)).expect("warm query");
+    assert_eq!(r.status, 200);
+    assert_eq!(partial_flag(&r.body), Some(false));
+
+    b.handle.shutdown();
+    let wv = unit_vec(&mut rng, DIM);
+    let r = via.post("/query", &protocol::query_body(&wv)).expect("degraded query");
+    assert_eq!(r.status, 200, "the survivor must keep answering");
+    assert_eq!(partial_flag(&r.body), Some(true), "a degraded answer must say so");
+    let hr = protocol::parse_hit(&r.body).expect("degraded hit");
+    let want = a.index.query(w.fam.as_ref(), &wv, &w.feats, w.budget, |_| true);
+    assert_eq!(
+        hr.best.map(|(i, m)| (i, m.to_bits())),
+        want.best.map(|(i, m)| (i, m.to_bits())),
+        "the partial answer is exactly the survivor's answer"
+    );
+
+    // the degradation is observable: the partial counter moved and the
+    // dead partition's health gauge reads 0
+    let mut mc = client(&raddr);
+    let m = mc.get("/metrics").expect("GET /metrics");
+    assert_eq!(m.status, 200);
+    let scrape = chh::obs::parse_scrape(&String::from_utf8_lossy(&m.body));
+    let val = |name: &str, label: &str| {
+        chh::obs::series_value(&scrape, name, label)
+            .unwrap_or_else(|| panic!("metric {name}{{{label}}} missing"))
+    };
+    assert!(val("chh_router_partial_answers_total", "") >= 1.0, "partial counter");
+    assert_eq!(val("chh_cluster_partition_healthy", "partition=\"1\""), 0.0);
+    assert_eq!(val("chh_cluster_partition_healthy", "partition=\"0\""), 1.0);
+
+    // every partition dead is an error, not an empty 200
+    a.handle.shutdown();
+    let r = via.post("/query", &protocol::query_body(&wv)).expect("all-dead query");
+    assert_eq!(r.status, 503, "no partitions left must be a 503");
+    rhandle.shutdown();
+}
+
+#[test]
+fn a_stale_map_follows_the_421_redirect_and_counts_it() {
+    let w = world(47);
+    let dir = std::env::temp_dir()
+        .join(format!("chh_cluster_it_stalemap_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    // a durable primary holding the whole id space...
+    let index = Arc::new(ShardedIndex::new(BITS, RADIUS, SHARDS));
+    for id in 0..N as u32 {
+        index.insert_point(w.fam.as_ref(), id, w.feats.row(id as usize));
+    }
+    index.compact();
+    index.set_default_budget(w.budget);
+    let wal_cfg = chh::wal::WalConfig::new(&dir);
+    let durable =
+        Arc::new(chh::wal::DurableIndex::create(index.clone(), &wal_cfg).expect("create wal"));
+    let prouter = Arc::new(OnlineRouter::new(
+        w.fam.clone(),
+        index.clone(),
+        w.feats.clone(),
+        1,
+        16,
+        w.budget,
+    ));
+    let phandle = Server::spawn_with_durability(
+        Stack::Online(prouter),
+        server_cfg(),
+        Some(chh::server::Durability { durable, snapshot_every_ops: 0 }),
+    )
+    .expect("spawn primary");
+    let paddr = phandle.addr().to_string();
+    // ...and a read replica of it, also behind HTTP
+    let rcfg = chh::replicate::ReplicaConfig::new(&paddr);
+    let replica = chh::replicate::ReplicaIndex::bootstrap(&rcfg).expect("bootstrap");
+    let rindex = replica.index().clone();
+    rindex.set_default_budget(w.budget);
+    let rrouter = Arc::new(OnlineRouter::new(
+        w.fam.clone(),
+        rindex,
+        w.feats.clone(),
+        1,
+        16,
+        w.budget,
+    ));
+    let rephandle = Server::spawn_replica(
+        Stack::Online(rrouter),
+        server_cfg(),
+        chh::server::ReplicaRole {
+            replica,
+            primary_addr: paddr.clone(),
+            tailer: None,
+        },
+    )
+    .expect("spawn replica");
+    let repaddr = rephandle.addr().to_string();
+
+    // the map is stale: it still names the demoted node (now a read
+    // replica) as the partition primary
+    let map = map_for(&w, 1, &[(0, N as u32, &repaddr)]);
+    let cluster = ClusterRouter::connect(map, None, cluster_cfg()).expect("router connect");
+    let before = index.len();
+    let (applied, _live) =
+        cluster.mutate(false, 3).expect("the mutation must follow the 421 redirect");
+    assert!(applied, "id 3 was live on the primary");
+    assert_eq!(index.len(), before - 1, "the op landed on the real primary");
+    assert!(
+        cluster.stats().stale_map_retries.load(Ordering::Relaxed) >= 1,
+        "the stale-map retry is counted"
+    );
+    rephandle.shutdown();
+    phandle.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -43,6 +43,7 @@ fn server_cfg() -> ServerConfig {
     ServerConfig {
         addr: "127.0.0.1:0".to_string(),
         max_conns: 32,
+        conn_workers: 2,
         batch: BatcherConfig {
             max_batch: 8,
             max_wait: Duration::from_millis(2),
