@@ -31,10 +31,11 @@ use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::QueryRequest;
 use crate::jsonio::{obj, Json};
+use crate::obs::{decode_stages, PartitionSpan};
 use crate::online::merge_hits;
 use crate::server::binproto;
 use crate::server::http::HttpClient;
@@ -139,17 +140,34 @@ impl MapState {
     }
 }
 
-/// The answer to one scatter-gather read.
+/// The answer to one scatter-gather read, plus the router-side timing
+/// the server folds into `chh_partition_seconds` and the cross-tier
+/// slow-log line.
 pub struct ClusterAnswer<T> {
     pub value: T,
     /// indices of partitions that did not answer (empty ⇒ complete)
     pub failed: Vec<usize>,
+    /// one span per partition that answered: router-side wait plus the
+    /// per-stage breakdown the partition echoed in `x-chh-stages`
+    pub spans: Vec<PartitionSpan>,
+    /// wall time of the whole scatter + gather
+    pub fanout: Duration,
+    /// wall time of the router-side merge of partition answers
+    pub merge: Duration,
 }
 
 impl<T> ClusterAnswer<T> {
     pub fn partial(&self) -> bool {
         !self.failed.is_empty()
     }
+}
+
+/// One partition's raw fan-out result: the body plus the router-side
+/// wait and the echoed stage header.
+struct PartObs {
+    body: Vec<u8>,
+    wait: Duration,
+    stages: Option<String>,
 }
 
 pub struct ClusterRouter {
@@ -318,20 +336,26 @@ impl ClusterRouter {
     /// connection when one exists. A pooled connection that fails is
     /// assumed stale (the peer may have restarted) and the request is
     /// retried exactly once on a fresh dial.
-    fn post_bin(&self, addr: &str, path: &str, frame: &[u8]) -> Result<(u16, Vec<u8>), String> {
+    fn post_bin(
+        &self,
+        addr: &str,
+        path: &str,
+        frame: &[u8],
+        rid: Option<&str>,
+    ) -> Result<(u16, Vec<u8>, Option<String>), String> {
         let pooled = self.pool_take(addr);
         let had_pooled = pooled.is_some();
         let mut client = match pooled {
             Some(c) => c,
             None => self.dial(addr).map_err(|e| format!("connect {addr}: {e}"))?,
         };
-        let resp = match client.post_binary(path, frame) {
+        let resp = match client.post_binary_with_id(path, frame, rid) {
             Ok(r) => r,
             Err(_) if had_pooled => {
                 // stale pooled socket — one fresh retry
                 let mut fresh = self.dial(addr).map_err(|e| format!("connect {addr}: {e}"))?;
                 let r = fresh
-                    .post_binary(path, frame)
+                    .post_binary_with_id(path, frame, rid)
                     .map_err(|e| format!("{addr} {path}: {e}"))?;
                 client = fresh;
                 r
@@ -341,7 +365,7 @@ impl ClusterRouter {
         if resp.keep_alive {
             self.pool_put(addr, client);
         }
-        Ok((resp.status, resp.body))
+        Ok((resp.status, resp.body, resp.stages))
     }
 
     // ---- reads -----------------------------------------------------------
@@ -349,26 +373,30 @@ impl ClusterRouter {
     /// Read from partition `pi`: primary first, then replicas in map
     /// order. Any 200 wins; everything else (connect failure, timeout,
     /// 503 shed, 5xx) moves on to the next target. Updates the health
-    /// flag and the failover counter.
+    /// flag and the failover counter. The returned wait covers the
+    /// whole target loop — failover attempts are part of what the
+    /// caller waited for.
     fn partition_read(
         &self,
         st: &MapState,
         pi: usize,
         path: &str,
         frame: &[u8],
-    ) -> Result<Vec<u8>, String> {
+        rid: Option<&str>,
+    ) -> Result<PartObs, String> {
         let p = &st.map.partitions[pi];
+        let start = Instant::now();
         let mut last = String::from("no targets");
         for (ti, addr) in std::iter::once(&p.primary).chain(p.replicas.iter()).enumerate() {
-            match self.post_bin(addr, path, frame) {
-                Ok((200, body)) => {
+            match self.post_bin(addr, path, frame, rid) {
+                Ok((200, body, stages)) => {
                     st.healthy[pi].store(true, Ordering::Relaxed);
                     if ti > 0 {
                         ClusterStats::inc(&self.stats.failovers);
                     }
-                    return Ok(body);
+                    return Ok(PartObs { body, wait: start.elapsed(), stages });
                 }
-                Ok((status, _)) => {
+                Ok((status, _, _)) => {
                     ClusterStats::inc(&self.stats.downstream_errors);
                     last = format!("{addr} {path}: status {status}");
                 }
@@ -383,17 +411,23 @@ impl ClusterRouter {
     }
 
     /// Scatter `path`+`frame` to every partition concurrently and
-    /// return the per-partition bodies (`Err` slots are partitions with
-    /// no reachable target).
-    fn fanout(&self, st: &MapState, path: &str, frame: &[u8]) -> Vec<Result<Vec<u8>, String>> {
+    /// return the per-partition observations (`Err` slots are
+    /// partitions with no reachable target).
+    fn fanout(
+        &self,
+        st: &MapState,
+        path: &str,
+        frame: &[u8],
+        rid: Option<&str>,
+    ) -> Vec<Result<PartObs, String>> {
         let n = st.map.partitions.len();
         if n == 1 {
-            return vec![self.partition_read(st, 0, path, frame)];
+            return vec![self.partition_read(st, 0, path, frame, rid)];
         }
-        let mut out: Vec<Result<Vec<u8>, String>> = Vec::with_capacity(n);
+        let mut out: Vec<Result<PartObs, String>> = Vec::with_capacity(n);
         std::thread::scope(|scope| {
             let handles: Vec<_> = (0..n)
-                .map(|pi| scope.spawn(move || self.partition_read(st, pi, path, frame)))
+                .map(|pi| scope.spawn(move || self.partition_read(st, pi, path, frame, rid)))
                 .collect();
             for h in handles {
                 out.push(h.join().expect("partition fan-out thread panicked"));
@@ -402,22 +436,43 @@ impl ClusterRouter {
         out
     }
 
+    /// Fold one partition's observation into the span list.
+    fn span_of(pi: usize, o: &PartObs) -> PartitionSpan {
+        PartitionSpan {
+            partition: pi,
+            wait: o.wait,
+            stages: o.stages.as_deref().map(decode_stages).unwrap_or_default(),
+        }
+    }
+
     fn snapshot(&self) -> Arc<MapState> {
         Arc::clone(&self.state.lock().unwrap())
     }
 
     /// Scatter-gather `/query`: merge per-partition best hits with the
     /// exact `OnlineRouter` margin-then-id semantics.
-    pub fn query(&self, req: &QueryRequest) -> Result<ClusterAnswer<QueryHit>, ClusterError> {
+    pub fn query(
+        &self,
+        req: &QueryRequest,
+        rid: Option<&str>,
+    ) -> Result<ClusterAnswer<QueryHit>, ClusterError> {
         let st = self.snapshot();
         ClusterStats::inc(&self.stats.fanout_reads);
         let frame = binproto::encode_query(&req.w, req.exclude.as_deref());
+        let fan_start = Instant::now();
+        let obs = self.fanout(&st, "/query", &frame, rid);
+        let fanout = fan_start.elapsed();
+        let merge_start = Instant::now();
         let mut hits: Vec<QueryHit> = Vec::new();
         let mut failed: Vec<usize> = Vec::new();
-        for (pi, r) in self.fanout(&st, "/query", &frame).into_iter().enumerate() {
+        let mut spans: Vec<PartitionSpan> = Vec::new();
+        for (pi, r) in obs.into_iter().enumerate() {
             match r {
-                Ok(body) => match binproto::decode_hit(&body) {
-                    Ok(h) => hits.push(h),
+                Ok(o) => match binproto::decode_hit(&o.body) {
+                    Ok(h) => {
+                        spans.push(Self::span_of(pi, &o));
+                        hits.push(h);
+                    }
                     Err(e) => {
                         return Err(ClusterError::new(
                             502,
@@ -434,7 +489,8 @@ impl ClusterRouter {
         if !failed.is_empty() {
             ClusterStats::inc(&self.stats.partial_answers);
         }
-        Ok(ClusterAnswer { value: merge_hits(&hits), failed })
+        let value = merge_hits(&hits);
+        Ok(ClusterAnswer { value, failed, spans, fanout, merge: merge_start.elapsed() })
     }
 
     /// Scatter-gather `/query_topk`: concatenate the per-partition
@@ -444,17 +500,24 @@ impl ClusterRouter {
         &self,
         req: &QueryRequest,
         t: usize,
+        rid: Option<&str>,
     ) -> Result<ClusterAnswer<Vec<(usize, f32)>>, ClusterError> {
         let st = self.snapshot();
         ClusterStats::inc(&self.stats.fanout_reads);
         let frame = binproto::encode_topk(&req.w, t, req.exclude.as_deref());
+        let fan_start = Instant::now();
+        let obs = self.fanout(&st, "/query_topk", &frame, rid);
+        let fanout = fan_start.elapsed();
+        let merge_start = Instant::now();
         let mut scored: Vec<(usize, f32)> = Vec::new();
         let mut failed: Vec<usize> = Vec::new();
+        let mut spans: Vec<PartitionSpan> = Vec::new();
         let mut answered = 0usize;
-        for (pi, r) in self.fanout(&st, "/query_topk", &frame).into_iter().enumerate() {
+        for (pi, r) in obs.into_iter().enumerate() {
             match r {
-                Ok(body) => match binproto::decode_topk_hits(&body) {
+                Ok(o) => match binproto::decode_topk_hits(&o.body) {
                     Ok(hits) => {
+                        spans.push(Self::span_of(pi, &o));
                         answered += 1;
                         scored.extend(hits);
                     }
@@ -478,7 +541,7 @@ impl ClusterRouter {
             a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal).then(a.0.cmp(&b.0))
         });
         scored.truncate(t);
-        Ok(ClusterAnswer { value: scored, failed })
+        Ok(ClusterAnswer { value: scored, failed, spans, fanout, merge: merge_start.elapsed() })
     }
 
     // ---- mutations -------------------------------------------------------
@@ -488,7 +551,12 @@ impl ClusterRouter {
     /// replica and advertises its current primary), reloading the map
     /// from disk along the way so later mutations go straight to the
     /// right place.
-    pub fn mutate(&self, insert: bool, id: u32) -> Result<(bool, u64), ClusterError> {
+    pub fn mutate(
+        &self,
+        insert: bool,
+        id: u32,
+        rid: Option<&str>,
+    ) -> Result<(bool, u64), ClusterError> {
         let st = self.snapshot();
         let pi = st.map.partition_for(id).ok_or_else(|| {
             ClusterError::new(
@@ -504,7 +572,7 @@ impl ClusterRouter {
         };
         let frame = binproto::encode_id(tag, id);
         let primary = st.map.partitions[pi].primary.clone();
-        let (status, body) = self.post_bin(&primary, path, &frame).map_err(|e| {
+        let (status, body, _) = self.post_bin(&primary, path, &frame, rid).map_err(|e| {
             ClusterStats::inc(&self.stats.downstream_errors);
             ClusterError::new(503, format!("partition {pi} primary unreachable: {e}"))
         })?;
@@ -519,10 +587,11 @@ impl ClusterRouter {
                 .ok_or_else(|| {
                     ClusterError::new(502, format!("partition {pi}: 421 without a primary address"))
                 })?;
-            self.post_bin(&next, path, &frame).map_err(|e| {
+            let (s, b, _) = self.post_bin(&next, path, &frame, rid).map_err(|e| {
                 ClusterStats::inc(&self.stats.downstream_errors);
                 ClusterError::new(503, format!("redirected primary {next} unreachable: {e}"))
-            })?
+            })?;
+            (s, b)
         } else {
             (status, body)
         };
@@ -761,7 +830,7 @@ mod tests {
     #[test]
     fn mutate_rejects_ids_outside_the_map() {
         let r = router(7);
-        let err = r.mutate(true, 200).unwrap_err();
+        let err = r.mutate(true, 200, None).unwrap_err();
         assert_eq!(err.status, 400);
         assert!(err.msg.contains("0..200"), "{}", err.msg);
     }

@@ -717,9 +717,15 @@ fn cmd_serve_http(rest: &[String]) -> anyhow::Result<()> {
         "slow-ms",
         "0",
         "slow-query threshold: requests slower than this are logged with their \
-         per-stage breakdown (0 = off)",
+         per-stage breakdown (0 = off, or every request when --slow-log is set)",
     )
     .opt("slow-log", "", "slow-query JSON-lines path (size-rotated); stderr when unset")
+    .opt(
+        "audit-frac",
+        "0",
+        "re-answer this fraction of served /query requests in a background auditor and \
+         publish recall/margin/calibration gauges on /metrics (0 = off, 1 = every query)",
+    )
     .opt(
         "id-start",
         "0",
@@ -998,6 +1004,7 @@ fn cmd_serve_http(rest: &[String]) -> anyhow::Result<()> {
             let sl = p.str("slow-log");
             if sl.is_empty() { None } else { Some(std::path::PathBuf::from(sl)) }
         },
+        audit_frac: p.f64("audit-frac")?,
     };
     let handle = match replica_role {
         Some(role) => Server::spawn_replica(stack, server_cfg, role)?,
@@ -1050,7 +1057,8 @@ fn cmd_route(rest: &[String]) -> anyhow::Result<()> {
     .opt(
         "slow-ms",
         "0",
-        "slow-query threshold: requests slower than this are logged (0 = off)",
+        "slow-query threshold: requests slower than this are logged with the full \
+         cross-tier breakdown (0 = off, or every request when --slow-log is set)",
     )
     .opt("slow-log", "", "slow-query JSON-lines path (size-rotated); stderr when unset")
     .opt("for-secs", "0", "serve this long then exit (0 = until POST /shutdown)");
@@ -1400,13 +1408,6 @@ fn cmd_loadgen(rest: &[String]) -> anyhow::Result<()> {
             );
         }
     }
-    // scrape the server's metrics before the run so the post-run scrape
-    // can be reported as deltas attributable to this load
-    let scrape_before = probe
-        .get("/metrics")
-        .ok()
-        .filter(|r| r.status == 200)
-        .map(|r| chh::obs::parse_scrape(&String::from_utf8_lossy(&r.body)));
     drop(probe);
     // rotation targets: the whole router tier, or the primary plus any
     // replicas. Router mode sends mutations through the rotation too —
@@ -1421,6 +1422,19 @@ fn cmd_loadgen(rest: &[String]) -> anyhow::Result<()> {
         }
         v
     };
+    /// One `/metrics` scrape, parsed; `None` when the target is down or
+    /// answers anything but 200 (the report then skips its deltas).
+    fn scrape_metrics(a: &str) -> Option<Vec<(String, f64)>> {
+        let mut c = HttpClient::connect_with_timeout(a, Duration::from_secs(2)).ok()?;
+        let _ = c.set_timeout(Duration::from_secs(5));
+        let r = c.get("/metrics").ok().filter(|r| r.status == 200)?;
+        Some(chh::obs::parse_scrape(&String::from_utf8_lossy(&r.body)))
+    }
+    // scrape every rotation target before the run so each target's
+    // post-run scrape can be reported as deltas attributable to this
+    // load (per-target: a straggling router/replica shows its own table)
+    let scrapes_before: Vec<Option<Vec<(String, f64)>>> =
+        read_addrs.iter().map(|a| scrape_metrics(a)).collect();
     println!(
         "loadgen: {queries} queries (dim={dim}, wire={proto_str}) -> {addr} [{server_mode}]  \
          {} loop, {conc} connections{}{}",
@@ -1823,19 +1837,21 @@ fn cmd_loadgen(rest: &[String]) -> anyhow::Result<()> {
             );
         }
     }
-    // post-run scrape: server-side stage deltas sit next to the
-    // client-side percentiles, so "where did the time go" needs no
-    // second tool
-    let scrape_after = HttpClient::connect_with_timeout(&addr, Duration::from_secs(2))
-        .ok()
-        .and_then(|mut c| {
-            let _ = c.set_timeout(Duration::from_secs(5));
-            c.get("/metrics").ok()
-        })
-        .filter(|r| r.status == 200)
-        .map(|r| chh::obs::parse_scrape(&String::from_utf8_lossy(&r.body)));
-    let mut server_json: Option<chh::jsonio::Json> = None;
-    if let (Some(before), Some(after)) = (scrape_before.as_ref(), scrape_after.as_ref()) {
+    // post-run scrape of every rotation target: server-side stage
+    // deltas sit next to the client-side percentiles, so "where did the
+    // time go" needs no second tool — and with several routers or
+    // replicas, per-target tables show which member burned the time
+    let scrapes_after: Vec<Option<Vec<(String, f64)>>> =
+        read_addrs.iter().map(|a| scrape_metrics(a)).collect();
+    let query_route_label =
+        if topk > 0 { "route=\"/query_topk\"" } else { "route=\"/query\"" };
+    // one stage-delta doc per target that answered both scrapes
+    let mut target_server_json: Vec<chh::jsonio::Json> = Vec::new();
+    for (ti, a) in read_addrs.iter().enumerate() {
+        let (Some(before), Some(after)) = (&scrapes_before[ti], &scrapes_after[ti]) else {
+            target_server_json.push(chh::jsonio::Json::Null);
+            continue;
+        };
         let delta = |name: &str, label: &str| -> f64 {
             chh::obs::series_value(after, name, label).unwrap_or(0.0)
                 - chh::obs::series_value(before, name, label).unwrap_or(0.0)
@@ -1863,19 +1879,25 @@ fn cmd_loadgen(rest: &[String]) -> anyhow::Result<()> {
             ));
         }
         chh::report::print_rows(
-            "server stages (/metrics delta over this run)",
+            &if read_addrs.len() == 1 {
+                "server stages (/metrics delta over this run)".to_string()
+            } else {
+                format!("server stages at {a} (/metrics delta over this run)")
+            },
             &["stage", "obs", "mean(us)", "total(ms)"],
             &rows,
         );
-        let served = delta(
-            "chh_http_requests_total",
-            if topk > 0 { "route=\"/query_topk\"" } else { "route=\"/query\"" },
-        );
-        server_json = Some(chh::jsonio::obj(vec![
+        let served = delta("chh_http_requests_total", query_route_label);
+        target_server_json.push(chh::jsonio::obj(vec![
             ("queries_served", chh::jsonio::Json::Num(served)),
             ("stages", chh::jsonio::obj(stage_json)),
         ]));
     }
+    // the anchor target's doc keeps the historical top-level slot
+    let server_json: Option<chh::jsonio::Json> = target_server_json
+        .first()
+        .filter(|j| !matches!(j, chh::jsonio::Json::Null))
+        .cloned();
     let json_path = p.str("json");
     if !json_path.is_empty() {
         use chh::jsonio::{obj, Json};
@@ -1930,11 +1952,15 @@ fn cmd_loadgen(rest: &[String]) -> anyhow::Result<()> {
                     read_addrs
                         .iter()
                         .zip(&target_totals)
-                        .map(|(a, &(est, err))| {
+                        .zip(&target_server_json)
+                        .map(|((a, &(est, err)), server)| {
                             obj(vec![
                                 ("addr", Json::from(a.as_str())),
                                 ("connections_established", Json::from(est)),
                                 ("transport_errors", Json::from(err)),
+                                // this target's own /metrics stage deltas
+                                // (null when a scrape failed)
+                                ("server", server.clone()),
                             ])
                         })
                         .collect(),

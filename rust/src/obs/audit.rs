@@ -1,0 +1,600 @@
+//! Sampling search-quality auditor: live recall / margin-ratio /
+//! collision-model telemetry for a serving index.
+//!
+//! The paper's value proposition is a *quality* claim — compact bilinear
+//! codes keep collision probability (Lemma 1) and recall high at low
+//! probe budgets — but a production server only observes latency. This
+//! module closes that gap: for a configurable fraction of served
+//! `/query` requests (`--audit-frac`, default 0) the server clones the
+//! query off the request path and a background thread **re-answers** it
+//! against a reference:
+//!
+//! * small indexes — an exhaustive margin scan over every eligible
+//!   point (the same ground truth as [`crate::eval`]);
+//! * large online indexes — a full-Hamming-ball probe
+//!   ([`crate::online::QueryBudget::unlimited`]), the best answer the
+//!   hash arrangement can possibly give.
+//!
+//! Published live on the server's `/metrics` registry:
+//!
+//! * `chh_audit_recall` — fraction of audited queries whose served best
+//!   matched the reference best (id match, or an exactly equal margin —
+//!   duplicate-point ties are not misses);
+//! * `chh_audit_margin_ratio` — mean finite served/true margin ratio,
+//!   [`crate::eval::QueryEval`] semantics (1.0 = perfect);
+//! * `chh_audit_rank_of_best` — mean 1-based rank of the served best in
+//!   the true margin order (exhaustive mode only);
+//! * `chh_probe_model_calibration{bucket_rank,kind}` — the Lemma-1
+//!   modeled collision mass of each of the first probed buckets
+//!   (`kind="modeled"`, normalized over the ball) next to the observed
+//!   fraction of audited queries whose true best point actually lay in
+//!   that bucket (`kind="observed"`) — a live calibration check of the
+//!   [`crate::online::ProbePlanner`]'s collision model;
+//! * `chh_audit_queries_total` / `chh_audit_dropped_total` — audited
+//!   and queue-overflow counts.
+//!
+//! The auditor is strictly off the request path: sampling is a counter
+//! decision plus one clone, the queue is bounded (overflow increments a
+//! counter and drops the sample — auditing never applies backpressure),
+//! and wire answers are bit-identical with auditing on (pinned by the
+//! server tests).
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+
+use crate::data::FeatureStore;
+use crate::hash::HashFamily;
+use crate::linalg::{margin_feat, nrm2};
+use crate::online::{QueryBudget, ShardedIndex};
+
+use super::{Counter, Registry};
+
+/// Bound on queued audit samples; overflow drops (never blocks serving).
+const QUEUE_CAP: usize = 1024;
+
+/// Re-answer by exhaustive scan up to this many indexed points; larger
+/// indexes fall back to the full-Hamming-ball probe.
+const EXHAUSTIVE_MAX: usize = 50_000;
+
+/// Probe-plan ranks tracked by `chh_probe_model_calibration` (series
+/// count is 2× this, bounded regardless of probe budget).
+const CALIB_BUCKETS: usize = 8;
+
+/// Cap on the masks enumerated when normalizing modeled mass over the
+/// ball — large-`k` balls are truncated to their best-first prefix.
+const CALIB_MASS_CAP: usize = 65_536;
+
+/// What the auditor re-answers against.
+pub enum AuditTarget {
+    /// A prebuilt static index: reference is always the exhaustive scan.
+    Static { family: Arc<dyn HashFamily>, feats: Arc<FeatureStore> },
+    /// A dynamic sharded index: eligibility tracks live ids at audit
+    /// time, and the probed buckets of the *serving* budget are compared
+    /// against the planner's modeled collision mass.
+    Online {
+        family: Arc<dyn HashFamily>,
+        feats: Arc<FeatureStore>,
+        index: Arc<ShardedIndex>,
+        /// the serving budget (per-shard probes define the audited buckets)
+        budget: QueryBudget,
+    },
+}
+
+/// One cloned query plus what the server actually answered.
+struct Sample {
+    w: Vec<f32>,
+    exclude: Option<Arc<HashSet<usize>>>,
+    served: Option<(usize, f32)>,
+}
+
+/// Aggregated audit state read by the registry's gauge closures.
+struct Agg {
+    audited: u64,
+    matched: u64,
+    ratio_sum: f64,
+    ratio_n: u64,
+    rank_sum: f64,
+    rank_n: u64,
+    calib_modeled: Vec<f64>,
+    calib_observed: Vec<u64>,
+    calib_n: u64,
+}
+
+impl Agg {
+    fn new() -> Self {
+        Agg {
+            audited: 0,
+            matched: 0,
+            ratio_sum: 0.0,
+            ratio_n: 0,
+            rank_sum: 0.0,
+            rank_n: 0,
+            calib_modeled: vec![0.0; CALIB_BUCKETS],
+            calib_observed: vec![0; CALIB_BUCKETS],
+            calib_n: 0,
+        }
+    }
+}
+
+/// The sampling auditor: owns the bounded queue and the background
+/// audit thread; joined on drop.
+pub struct Auditor {
+    frac: f64,
+    seen: AtomicU64,
+    tx: Option<SyncSender<Sample>>,
+    handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+    audited_total: Arc<Counter>,
+    dropped_total: Arc<Counter>,
+}
+
+impl Auditor {
+    /// Spawn the audit thread and register the audit metric families on
+    /// `reg`. `frac` is clamped to [0, 1]; the deterministic sampler
+    /// audits the `k`-th served query iff `⌊k·frac⌋ > ⌊(k−1)·frac⌋`, so
+    /// `frac = 1` audits every query and `frac = 0.1` exactly every
+    /// tenth — no RNG, reproducible under test.
+    pub fn spawn(target: AuditTarget, frac: f64, reg: &Registry) -> Arc<Auditor> {
+        let frac = if frac.is_finite() { frac.clamp(0.0, 1.0) } else { 0.0 };
+        let agg = Arc::new(Mutex::new(Agg::new()));
+        let audited_total = reg.counter(
+            "chh_audit_queries_total",
+            "served queries re-answered by the sampling auditor",
+            vec![],
+        );
+        let dropped_total = reg.counter(
+            "chh_audit_dropped_total",
+            "audit samples dropped because the audit queue was full",
+            vec![],
+        );
+        let a = agg.clone();
+        reg.gauge_fn(
+            "chh_audit_recall",
+            "fraction of audited queries whose served best matched the reference answer",
+            vec![],
+            move || {
+                let g = a.lock().unwrap();
+                if g.audited == 0 {
+                    0.0
+                } else {
+                    g.matched as f64 / g.audited as f64
+                }
+            },
+        );
+        let a = agg.clone();
+        reg.gauge_fn(
+            "chh_audit_margin_ratio",
+            "mean finite served/true margin ratio over audited queries (1 = perfect)",
+            vec![],
+            move || {
+                let g = a.lock().unwrap();
+                if g.ratio_n == 0 {
+                    0.0
+                } else {
+                    g.ratio_sum / g.ratio_n as f64
+                }
+            },
+        );
+        let a = agg.clone();
+        reg.gauge_fn(
+            "chh_audit_rank_of_best",
+            "mean 1-based rank of the served best in the true margin order",
+            vec![],
+            move || {
+                let g = a.lock().unwrap();
+                if g.rank_n == 0 {
+                    0.0
+                } else {
+                    g.rank_sum / g.rank_n as f64
+                }
+            },
+        );
+        if matches!(target, AuditTarget::Online { .. }) {
+            for j in 0..CALIB_BUCKETS {
+                let a = agg.clone();
+                reg.gauge_fn(
+                    "chh_probe_model_calibration",
+                    "modeled (Lemma-1, ball-normalized) vs observed probability that the \
+                     true best point lies in the j-th probed bucket",
+                    vec![("bucket_rank", j.to_string()), ("kind", "modeled".to_string())],
+                    move || {
+                        let g = a.lock().unwrap();
+                        if g.calib_n == 0 {
+                            0.0
+                        } else {
+                            g.calib_modeled[j] / g.calib_n as f64
+                        }
+                    },
+                );
+                let a = agg.clone();
+                reg.gauge_fn(
+                    "chh_probe_model_calibration",
+                    "modeled (Lemma-1, ball-normalized) vs observed probability that the \
+                     true best point lies in the j-th probed bucket",
+                    vec![("bucket_rank", j.to_string()), ("kind", "observed".to_string())],
+                    move || {
+                        let g = a.lock().unwrap();
+                        if g.calib_n == 0 {
+                            0.0
+                        } else {
+                            g.calib_observed[j] as f64 / g.calib_n as f64
+                        }
+                    },
+                );
+            }
+        }
+        let (tx, rx) = sync_channel::<Sample>(QUEUE_CAP);
+        let audited = audited_total.clone();
+        let handle = std::thread::Builder::new()
+            .name("chh-audit".to_string())
+            .spawn(move || audit_loop(rx, target, agg, audited))
+            .expect("spawn audit thread");
+        Arc::new(Auditor {
+            frac,
+            seen: AtomicU64::new(0),
+            tx: Some(tx),
+            handle: Mutex::new(Some(handle)),
+            audited_total,
+            dropped_total,
+        })
+    }
+
+    /// Deterministic sampling decision for the next served query.
+    fn sample(&self) -> bool {
+        if self.frac <= 0.0 {
+            return false;
+        }
+        let k = self.seen.fetch_add(1, Ordering::Relaxed) + 1;
+        (k as f64 * self.frac).floor() > ((k - 1) as f64 * self.frac).floor()
+    }
+
+    /// Offer one served query to the auditor. Decides sampling first so
+    /// the non-sampled path costs one atomic increment and no clones;
+    /// a full queue drops the sample and counts it.
+    pub fn offer(
+        &self,
+        w: &[f32],
+        exclude: &Option<Arc<HashSet<usize>>>,
+        served: Option<(usize, f32)>,
+    ) {
+        if !self.sample() {
+            return;
+        }
+        let s = Sample { w: w.to_vec(), exclude: exclude.clone(), served };
+        match self.tx.as_ref().expect("auditor queue open").try_send(s) {
+            Ok(()) => {}
+            Err(TrySendError::Full(_)) => self.dropped_total.inc(),
+            Err(TrySendError::Disconnected(_)) => {}
+        }
+    }
+
+    /// Completed audits (tests poll this to rendezvous with the thread).
+    pub fn audited(&self) -> u64 {
+        self.audited_total.get()
+    }
+
+    /// Samples dropped on queue overflow.
+    pub fn dropped(&self) -> u64 {
+        self.dropped_total.get()
+    }
+
+    /// The configured sampling fraction.
+    pub fn frac(&self) -> f64 {
+        self.frac
+    }
+}
+
+impl Drop for Auditor {
+    fn drop(&mut self) {
+        // close the queue, then join — the thread drains what's left
+        self.tx = None;
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn audit_loop(
+    rx: Receiver<Sample>,
+    target: AuditTarget,
+    agg: Arc<Mutex<Agg>>,
+    audited_total: Arc<Counter>,
+) {
+    while let Ok(s) = rx.recv() {
+        audit_one(&target, &s, &agg);
+        audited_total.inc();
+    }
+}
+
+/// Exhaustive reference: the minimum-margin eligible point, plus the
+/// 1-based rank of the served answer in the true `(margin, id)` order.
+fn scan_truth(
+    feats: &FeatureStore,
+    w: &[f32],
+    eligible: impl Fn(usize) -> bool,
+    served: Option<(usize, f32)>,
+) -> (Option<(usize, f32)>, Option<u64>) {
+    let wn = nrm2(w);
+    let mut best: Option<(usize, f32)> = None;
+    let mut before = 0u64;
+    for i in 0..feats.len() {
+        if !eligible(i) {
+            continue;
+        }
+        let m = margin_feat(feats.row(i), w, wn);
+        if best.map_or(true, |(_, bm)| m < bm) {
+            best = Some((i, m));
+        }
+        if let Some((sid, sm)) = served {
+            if m < sm || (m == sm && i < sid) {
+                before += 1;
+            }
+        }
+    }
+    (best, served.map(|_| before + 1))
+}
+
+/// Fold one reference answer into the aggregate. Margin-ratio follows
+/// [`crate::eval::QueryEval`]: 1.0 on an exact margin match (including
+/// a retrieved zero-margin point), +Inf on a genuine miss of a
+/// zero-margin point or an empty served answer, served/true otherwise;
+/// only finite ratios enter the mean.
+fn fold(
+    agg: &Mutex<Agg>,
+    served: Option<(usize, f32)>,
+    truth: Option<(usize, f32)>,
+    rank: Option<u64>,
+) {
+    let matched = match (served, truth) {
+        (None, None) => true,
+        (Some((sid, sm)), Some((tid, tm))) => sid == tid || sm == tm,
+        _ => false,
+    };
+    let ratio = match (served, truth) {
+        (Some((_, sm)), Some((_, tm))) => {
+            if sm == tm {
+                1.0
+            } else if tm <= 0.0 {
+                f64::INFINITY
+            } else {
+                (sm / tm) as f64
+            }
+        }
+        (None, Some(_)) => f64::INFINITY,
+        // nothing eligible to retrieve: the empty answer is correct
+        _ => 1.0,
+    };
+    let mut g = agg.lock().unwrap();
+    g.audited += 1;
+    if matched {
+        g.matched += 1;
+    }
+    if ratio.is_finite() {
+        g.ratio_sum += ratio;
+        g.ratio_n += 1;
+    }
+    if let (Some(_), Some(r)) = (served, rank) {
+        g.rank_sum += r as f64;
+        g.rank_n += 1;
+    }
+}
+
+fn audit_one(target: &AuditTarget, s: &Sample, agg: &Arc<Mutex<Agg>>) {
+    let not_excluded =
+        |i: usize| s.exclude.as_ref().map_or(true, |ex| !ex.contains(&i));
+    match target {
+        AuditTarget::Static { feats, .. } => {
+            let (truth, rank) = scan_truth(feats, &s.w, not_excluded, s.served);
+            fold(agg, s.served, truth, rank);
+        }
+        AuditTarget::Online { family, feats, index, budget } => {
+            let eligible = |i: usize| index.contains(i as u32) && not_excluded(i);
+            let (truth, rank) = if index.len() <= EXHAUSTIVE_MAX {
+                scan_truth(feats, &s.w, eligible, s.served)
+            } else {
+                // full-ball probe: the best answer the arrangement can give
+                let hit = index.query(
+                    family.as_ref(),
+                    &s.w,
+                    feats,
+                    QueryBudget::unlimited(),
+                    eligible,
+                );
+                (hit.best, None)
+            };
+            fold(agg, s.served, truth, rank);
+            // probe-model calibration against the serving budget's buckets
+            let lookup = family.encode_query(&s.w);
+            let scores = family.query_bit_scores(&s.w);
+            let masks = index.plan_masks(scores.as_deref(), budget.probes);
+            let planner = match scores.as_deref() {
+                Some(sc) => index.planner().query_scaled(sc),
+                None => index.planner().clone(),
+            };
+            let total: f64 =
+                planner.planned_masses(CALIB_MASS_CAP).iter().map(|&(_, m)| m).sum();
+            let mut g = agg.lock().unwrap();
+            if total > 0.0 {
+                for (j, &mask) in masks.iter().take(CALIB_BUCKETS).enumerate() {
+                    g.calib_modeled[j] += planner.mass(mask) / total;
+                }
+            }
+            if let Some((tid, _)) = truth {
+                let flip = family.encode_point(feats.row(tid)) ^ lookup;
+                if let Some(j) =
+                    masks.iter().take(CALIB_BUCKETS).position(|&m| m == flip)
+                {
+                    g.calib_observed[j] += 1;
+                }
+            }
+            g.calib_n += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::test_blobs;
+    use crate::hash::BhHash;
+    use crate::obs::{parse_scrape, series_value};
+    use crate::rng::Rng;
+    use crate::testing::unit_vec;
+    use std::time::{Duration, Instant};
+
+    fn wait_audited(a: &Auditor, n: u64) {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while a.audited() + a.dropped() < n {
+            assert!(Instant::now() < deadline, "auditor stalled at {}", a.audited());
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    #[test]
+    fn deterministic_sampler_hits_exact_fractions() {
+        let mut rng = Rng::seed_from_u64(31);
+        let ds = test_blobs(20, 8, 2, &mut rng);
+        let fam: Arc<dyn HashFamily> = Arc::new(BhHash::sample(8, 6, &mut rng));
+        let feats = Arc::new(ds.features().clone());
+        let reg = Registry::new();
+        let a = Auditor::spawn(AuditTarget::Static { family: fam, feats }, 0.25, &reg);
+        assert_eq!((0..100).filter(|_| a.sample()).count(), 25, "frac 0.25 → every 4th");
+        assert_eq!(a.frac(), 0.25);
+        let reg2 = Registry::new();
+        let mut rng2 = Rng::seed_from_u64(32);
+        let ds2 = test_blobs(10, 8, 2, &mut rng2);
+        let fam2: Arc<dyn HashFamily> = Arc::new(BhHash::sample(8, 6, &mut rng2));
+        let z = Auditor::spawn(
+            AuditTarget::Static { family: fam2, feats: Arc::new(ds2.features().clone()) },
+            0.0,
+            &reg2,
+        );
+        assert_eq!((0..100).filter(|_| z.sample()).count(), 0, "frac 0 audits nothing");
+    }
+
+    #[test]
+    fn online_full_ball_audit_reports_perfect_quality() {
+        let mut rng = Rng::seed_from_u64(41);
+        let ds = test_blobs(200, 16, 3, &mut rng);
+        let fam_raw = BhHash::sample(16, 8, &mut rng);
+        let codes = fam_raw.encode_all(ds.features());
+        let index = Arc::new(ShardedIndex::from_codes(&codes, 8, 8)); // radius = bits
+        let fam: Arc<dyn HashFamily> = Arc::new(fam_raw);
+        let feats = Arc::new(ds.features().clone());
+        let budget = QueryBudget::unlimited();
+        let reg = Registry::new();
+        let a = Auditor::spawn(
+            AuditTarget::Online {
+                family: fam.clone(),
+                feats: feats.clone(),
+                index: index.clone(),
+                budget,
+            },
+            1.0,
+            &reg,
+        );
+        let n = 20;
+        for _ in 0..n {
+            let w = unit_vec(&mut rng, 16);
+            // serve with the same full-ball budget the auditor checks
+            let hit = index.query(fam.as_ref(), &w, &feats, budget, |_| true);
+            a.offer(&w, &None, hit.best);
+        }
+        wait_audited(&a, n);
+        assert_eq!(a.dropped(), 0);
+        let scrape = parse_scrape(&reg.render());
+        assert_eq!(series_value(&scrape, "chh_audit_recall", ""), Some(1.0));
+        assert_eq!(series_value(&scrape, "chh_audit_margin_ratio", ""), Some(1.0));
+        assert_eq!(series_value(&scrape, "chh_audit_rank_of_best", ""), Some(1.0));
+        assert_eq!(series_value(&scrape, "chh_audit_queries_total", ""), Some(n as f64));
+        // calibration: both kinds render for every tracked rank, values
+        // are probabilities, and the exact bucket carries the most
+        // modeled mass (plans are best-first)
+        let get = |rank: usize, kind: &str| -> f64 {
+            scrape
+                .iter()
+                .find(|(k, _)| {
+                    k.starts_with("chh_probe_model_calibration{")
+                        && k.contains(&format!(r#"bucket_rank="{rank}""#))
+                        && k.contains(&format!(r#"kind="{kind}""#))
+                })
+                .map(|&(_, v)| v)
+                .unwrap_or_else(|| panic!("missing calibration series rank={rank} kind={kind}"))
+        };
+        let (mut modeled_sum, mut observed_sum) = (0.0, 0.0);
+        for j in 0..CALIB_BUCKETS {
+            let m = get(j, "modeled");
+            let o = get(j, "observed");
+            assert!((0.0..=1.0).contains(&m), "modeled[{j}] = {m}");
+            assert!((0.0..=1.0).contains(&o), "observed[{j}] = {o}");
+            modeled_sum += m;
+            observed_sum += o;
+        }
+        assert!(modeled_sum <= 1.0 + 1e-9, "normalized masses sum ≤ 1: {modeled_sum}");
+        assert!(observed_sum <= 1.0 + 1e-9, "bucket events are disjoint: {observed_sum}");
+        assert!(get(0, "modeled") >= get(1, "modeled"), "best-first: rank 0 dominates");
+    }
+
+    #[test]
+    fn wrong_served_answer_drops_recall_and_raises_rank() {
+        let mut rng = Rng::seed_from_u64(51);
+        let ds = test_blobs(100, 8, 2, &mut rng);
+        let fam: Arc<dyn HashFamily> = Arc::new(BhHash::sample(8, 6, &mut rng));
+        let feats = Arc::new(ds.features().clone());
+        let reg = Registry::new();
+        let a = Auditor::spawn(
+            AuditTarget::Static { family: fam, feats: feats.clone() },
+            1.0,
+            &reg,
+        );
+        // claim the served best was the *worst* point
+        let w = unit_vec(&mut rng, 8);
+        let wn = nrm2(&w);
+        let worst = (0..feats.len())
+            .max_by(|&x, &y| {
+                margin_feat(feats.row(x), &w, wn)
+                    .partial_cmp(&margin_feat(feats.row(y), &w, wn))
+                    .unwrap()
+            })
+            .unwrap();
+        let wm = margin_feat(feats.row(worst), &w, wn);
+        a.offer(&w, &None, Some((worst, wm)));
+        wait_audited(&a, 1);
+        let scrape = parse_scrape(&reg.render());
+        assert_eq!(series_value(&scrape, "chh_audit_recall", ""), Some(0.0));
+        assert_eq!(
+            series_value(&scrape, "chh_audit_rank_of_best", ""),
+            Some(feats.len() as f64),
+            "the worst point ranks last"
+        );
+        let ratio = series_value(&scrape, "chh_audit_margin_ratio", "").unwrap();
+        assert!(ratio > 1.0, "served margin is worse than true: {ratio}");
+    }
+
+    #[test]
+    fn exclude_sets_shrink_the_reference() {
+        let mut rng = Rng::seed_from_u64(61);
+        let ds = test_blobs(50, 8, 2, &mut rng);
+        let fam: Arc<dyn HashFamily> = Arc::new(BhHash::sample(8, 6, &mut rng));
+        let feats = Arc::new(ds.features().clone());
+        let w = unit_vec(&mut rng, 8);
+        let (truth_all, _) = scan_truth(&feats, &w, |_| true, None);
+        let best = truth_all.unwrap().0;
+        // excluding the true best: the reference becomes the runner-up,
+        // so serving the runner-up is a perfect answer
+        let ex: Arc<HashSet<usize>> = Arc::new([best].into_iter().collect());
+        let (truth_ex, _) = scan_truth(&feats, &w, |i| i != best, None);
+        let runner = truth_ex.unwrap();
+        let reg = Registry::new();
+        let a = Auditor::spawn(
+            AuditTarget::Static { family: fam, feats: feats.clone() },
+            1.0,
+            &reg,
+        );
+        a.offer(&w, &Some(ex), Some(runner));
+        wait_audited(&a, 1);
+        let scrape = parse_scrape(&reg.render());
+        assert_eq!(series_value(&scrape, "chh_audit_recall", ""), Some(1.0));
+    }
+}

@@ -34,6 +34,8 @@ use std::time::{Duration, Instant};
 
 use crate::jsonio::{obj, Json};
 
+pub mod audit;
+
 // ───────────────────────────── primitives ─────────────────────────────
 
 /// Monotonically increasing atomic counter.
@@ -491,17 +493,64 @@ impl StageTimes {
     }
 }
 
+/// Encode a stage breakdown for the `x-chh-stages` response header:
+/// `name=micros;name=micros` in recording order. Compact and allocation-
+/// light — one small string per traced response.
+pub fn encode_stages(stages: &[(&'static str, Duration)]) -> String {
+    let mut out = String::with_capacity(stages.len() * 16);
+    for (n, d) in stages {
+        if !out.is_empty() {
+            out.push(';');
+        }
+        out.push_str(n);
+        out.push('=');
+        out.push_str(&(d.as_micros() as u64).to_string());
+    }
+    out
+}
+
+/// Decode an `x-chh-stages` header value back into `(stage, micros)`
+/// pairs. Total: malformed segments are skipped, never an error — the
+/// header is diagnostics from another process, not protocol.
+pub fn decode_stages(v: &str) -> Vec<(String, u64)> {
+    v.split(';')
+        .filter_map(|seg| {
+            let (n, us) = seg.split_once('=')?;
+            if n.is_empty() {
+                return None;
+            }
+            Some((n.to_string(), us.parse::<u64>().ok()?))
+        })
+        .collect()
+}
+
+/// One partition's contribution to a routed request: which partition,
+/// how long the router waited for its answer, and the per-stage
+/// breakdown the partition echoed in its `x-chh-stages` header (empty
+/// when the partition predates the header or the answer failed).
+#[derive(Clone, Debug)]
+pub struct PartitionSpan {
+    pub partition: usize,
+    /// router-side wall time waiting for this partition's answer
+    pub wait: Duration,
+    /// `(stage, micros)` pairs echoed by the partition
+    pub stages: Vec<(String, u64)>,
+}
+
 /// One request's trace: the correlation id plus named stage durations,
 /// carried from accept to response. Rendered into the slow-query log
-/// when the request exceeds the threshold.
+/// when the request exceeds the threshold. Router-tier requests also
+/// carry one [`PartitionSpan`] per partition contacted, so a single
+/// slow-log line shows the full cross-tier breakdown.
 pub struct Trace {
     pub id: String,
     stages: Vec<(&'static str, Duration)>,
+    partitions: Vec<PartitionSpan>,
 }
 
 impl Trace {
     pub fn new(id: String) -> Self {
-        Trace { id, stages: Vec::new() }
+        Trace { id, stages: Vec::new(), partitions: Vec::new() }
     }
 
     pub fn stage(&mut self, name: &'static str, d: Duration) {
@@ -512,6 +561,15 @@ impl Trace {
         &self.stages
     }
 
+    /// Attach one partition's span (router tier only).
+    pub fn partition(&mut self, span: PartitionSpan) {
+        self.partitions.push(span);
+    }
+
+    pub fn partition_spans(&self) -> &[PartitionSpan] {
+        &self.partitions
+    }
+
     /// The slow-log JSON line (compact, no trailing newline).
     pub fn slow_line(&self, route: &str, status: u16, total: Duration) -> String {
         let stages = Json::Obj(
@@ -520,14 +578,37 @@ impl Trace {
                 .map(|&(n, d)| (n.to_string(), Json::Num(d.as_secs_f64() * 1e6)))
                 .collect(),
         );
-        obj(vec![
+        let mut fields = vec![
             ("request_id", Json::from(self.id.as_str())),
             ("route", Json::from(route)),
             ("status", Json::from(status as usize)),
             ("total_us", Json::Num(total.as_secs_f64() * 1e6)),
             ("stages_us", stages),
-        ])
-        .to_string_compact()
+        ];
+        if !self.partitions.is_empty() {
+            let spans = Json::Arr(
+                self.partitions
+                    .iter()
+                    .map(|s| {
+                        obj(vec![
+                            ("partition", Json::from(s.partition)),
+                            ("wait_us", Json::Num(s.wait.as_secs_f64() * 1e6)),
+                            (
+                                "stages_us",
+                                Json::Obj(
+                                    s.stages
+                                        .iter()
+                                        .map(|(n, us)| (n.clone(), Json::Num(*us as f64)))
+                                        .collect(),
+                                ),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            );
+            fields.push(("partitions", spans));
+        }
+        obj(fields).to_string_compact()
     }
 }
 
@@ -726,6 +807,130 @@ mod tests {
         assert_eq!(v.get("status").and_then(|x| x.as_usize()), Some(200));
         let stages = v.get("stages_us").unwrap();
         assert!(stages.get("batch_wait").and_then(|x| x.as_f64()).unwrap() > 100.0);
+    }
+
+    #[test]
+    fn stage_codec_roundtrips_and_tolerates_junk() {
+        let stages: Vec<(&'static str, Duration)> = vec![
+            ("batch_wait", Duration::from_micros(120)),
+            ("encode", Duration::from_micros(30)),
+            ("scan", Duration::from_micros(4567)),
+        ];
+        let enc = encode_stages(&stages);
+        assert_eq!(enc, "batch_wait=120;encode=30;scan=4567");
+        let dec = decode_stages(&enc);
+        assert_eq!(
+            dec,
+            vec![
+                ("batch_wait".to_string(), 120),
+                ("encode".to_string(), 30),
+                ("scan".to_string(), 4567)
+            ]
+        );
+        assert!(encode_stages(&[]).is_empty());
+        // malformed segments are skipped, valid ones survive
+        assert_eq!(decode_stages("a=1;;junk;=5;b=x;c=7"), vec![
+            ("a".to_string(), 1),
+            ("c".to_string(), 7)
+        ]);
+        assert!(decode_stages("").is_empty());
+    }
+
+    #[test]
+    fn trace_partitions_render_in_slow_line() {
+        let mut t = Trace::new("rid42".into());
+        t.stage("route_fanout", Duration::from_micros(900));
+        t.stage("merge", Duration::from_micros(15));
+        t.partition(PartitionSpan {
+            partition: 0,
+            wait: Duration::from_micros(850),
+            stages: vec![("encode".to_string(), 12), ("scan".to_string(), 700)],
+        });
+        t.partition(PartitionSpan {
+            partition: 1,
+            wait: Duration::from_micros(400),
+            stages: vec![],
+        });
+        assert_eq!(t.partition_spans().len(), 2);
+        let line = t.slow_line("/query", 200, Duration::from_millis(1));
+        let v = Json::parse(&line).unwrap();
+        let parts = v.get("partitions").and_then(|p| p.as_arr()).expect("partitions array");
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].get("partition").and_then(|x| x.as_usize()), Some(0));
+        assert!(parts[0].get("wait_us").and_then(|x| x.as_f64()).unwrap() > 800.0);
+        let st = parts[0].get("stages_us").unwrap();
+        assert_eq!(st.get("scan").and_then(|x| x.as_f64()), Some(700.0));
+        // a partition with no echoed stages still appears with its wait
+        assert_eq!(parts[1].get("partition").and_then(|x| x.as_usize()), Some(1));
+        // a trace without partition spans renders no "partitions" key
+        let plain = Trace::new("x".into()).slow_line("/q", 200, Duration::from_micros(1));
+        assert!(Json::parse(&plain).unwrap().get("partitions").is_none());
+    }
+
+    #[test]
+    fn slow_log_exact_fit_line_does_not_rotate() {
+        // a line landing exactly at the byte threshold stays in the
+        // active file — rotation is strictly "would exceed"
+        let dir = std::env::temp_dir().join(format!("chh_obs_fit_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("slow.log");
+        let log = SlowLog::create(&path, 2048);
+        let first = "a".repeat(1023); // +1 newline = 1024 written
+        log.append(&first);
+        let second = "b".repeat(1023); // lands exactly at 2048
+        log.append(&second);
+        let active = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(active.len(), 2048, "both lines in the active file");
+        let lines: Vec<&str> = active.lines().collect();
+        assert_eq!(lines.len(), 2, "no truncation, no duplication");
+        assert_eq!(lines[0], first);
+        assert_eq!(lines[1], second);
+        let mut rotated = path.as_os_str().to_owned();
+        rotated.push(".1");
+        assert!(
+            std::fs::metadata(PathBuf::from(rotated.clone())).is_err(),
+            "exact fit must not rotate"
+        );
+        // the NEXT append crosses the threshold: the full file rotates
+        // to .1 intact and the new line starts a fresh active file
+        let third = "c".repeat(10);
+        log.append(&third);
+        let moved = std::fs::read_to_string(PathBuf::from(rotated)).unwrap();
+        assert_eq!(moved.len(), 2048, "rotated file holds the exact-fit content");
+        assert_eq!(moved.lines().count(), 2);
+        let active = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(active, format!("{third}\n"), "fresh file holds only the new line");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn slow_log_rotation_overwrites_previous_dot1() {
+        // the .1 file is replaced wholesale on each rotation, never
+        // appended to
+        let dir = std::env::temp_dir().join(format!("chh_obs_rot1_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("slow.log");
+        let log = SlowLog::create(&path, 1024);
+        let gen1 = "g1-".to_string() + &"x".repeat(1020); // 1024 with newline
+        log.append(&gen1);
+        log.append("tiny"); // rotates gen1 out
+        let mut rotated = path.as_os_str().to_owned();
+        rotated.push(".1");
+        let r1 = std::fs::read_to_string(PathBuf::from(rotated.clone())).unwrap();
+        assert!(r1.starts_with("g1-"), "first rotation holds gen1");
+        // fill the fresh file and rotate again: .1 must now hold the
+        // second generation only
+        let gen2 = "g2-".to_string() + &"y".repeat(1015); // fills to the cap
+        log.append(&gen2);
+        log.append("tick"); // crosses the cap → second rotation
+        let r2 = std::fs::read_to_string(PathBuf::from(rotated)).unwrap();
+        assert!(
+            !r2.contains("g1-"),
+            "second rotation must overwrite .1, not append: {r2:?}"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -103,6 +103,14 @@ impl ProbePlanner {
         crate::hash::codes::ball_volume(self.k, self.radius)
     }
 
+    /// The first `budget` planned flip masks paired with their modeled
+    /// collision mass, in best-first plan order — the "modeled" half of
+    /// the `chh_probe_model_calibration` audit metric
+    /// ([`crate::obs::audit`]).
+    pub fn planned_masses(&self, budget: usize) -> Vec<(u64, f64)> {
+        self.plan(budget).map(|m| (m, self.mass(m))).collect()
+    }
+
     /// Best-first probe sequence, at most `budget` flip masks (the empty
     /// mask — the exact bucket — is always probe #1). XOR each yielded
     /// mask with the lookup code to get the bucket to probe.
@@ -328,6 +336,23 @@ mod tests {
         // mismatched score length falls back to the unscaled plan
         let fallback = planner.query_scaled(&[1.0; 3]);
         assert_eq!(fallback.costs(), planner.costs());
+    }
+
+    #[test]
+    fn planned_masses_pair_plan_order_with_mass() {
+        let planner = ProbePlanner::uniform(10, 3);
+        let pm = planner.planned_masses(7);
+        assert_eq!(pm.len(), 7);
+        let plan: Vec<u64> = planner.plan(7).collect();
+        for (i, &(mask, mass)) in pm.iter().enumerate() {
+            assert_eq!(mask, plan[i], "same best-first order as plan()");
+            assert_eq!(mass, planner.mass(mask));
+        }
+        // masses are nonincreasing and the exact bucket has mass 1
+        assert_eq!(pm[0], (0, 1.0));
+        for w in pm.windows(2) {
+            assert!(w[0].1 >= w[1].1 - 1e-12);
+        }
     }
 
     #[test]

@@ -60,6 +60,16 @@ fn io_err(e: std::io::Error) -> HttpError {
 /// Header carrying the request correlation id (see `docs/OBSERVABILITY.md`).
 pub const REQUEST_ID_HEADER: &str = "x-chh-request-id";
 
+/// Response header carrying the server's per-stage timing breakdown in
+/// the compact `name=micros;name=micros` form of [`crate::obs`]'s stage
+/// codec. Partitions emit it on every answer; the router reads it back
+/// to assemble cross-tier slow-log lines (see `docs/OBSERVABILITY.md`).
+pub const STAGES_HEADER: &str = "x-chh-stages";
+
+/// Upper bound on an accepted `x-chh-stages` value: 6 stages at ~20
+/// bytes each fits comfortably; anything longer is hostile or corrupt.
+const MAX_STAGES_CHARS: usize = 256;
+
 /// One parsed HTTP request.
 #[derive(Debug)]
 pub struct Request {
@@ -84,6 +94,9 @@ pub struct Response {
     pub body: Vec<u8>,
     /// the `x-chh-request-id` the server echoed back, if any
     pub request_id: Option<String>,
+    /// the server's `x-chh-stages` per-stage breakdown, if any
+    /// (undecoded — the router forwards/decodes it lazily)
+    pub stages: Option<String>,
     /// the body is binary-wire encoded ([`CT_CHH_BIN`])
     pub binary: bool,
 }
@@ -97,6 +110,7 @@ struct HeadFields {
     content_length: usize,
     keep_alive: bool,
     request_id: Option<String>,
+    stages: Option<String>,
     binary: bool,
 }
 
@@ -269,6 +283,7 @@ impl FrameParser {
                 keep_alive: fields.keep_alive,
                 body,
                 request_id: fields.request_id,
+                stages: fields.stages,
                 binary: fields.binary,
             })),
             Head::Req { .. } => {
@@ -339,6 +354,7 @@ fn parse_headers(
         content_length: 0,
         keep_alive: default_keep_alive,
         request_id: None,
+        stages: None,
         binary: false,
     };
     for line in lines {
@@ -380,6 +396,11 @@ fn parse_headers(
                 // ids we generate are 16 hex chars
                 if !v.is_empty() && v.len() <= 64 {
                     fields.request_id = Some(v.to_string());
+                }
+            }
+            STAGES_HEADER => {
+                if !v.is_empty() && v.len() <= MAX_STAGES_CHARS {
+                    fields.stages = Some(v.to_string());
                 }
             }
             _ => {}
@@ -425,12 +446,34 @@ pub fn write_response_ex<W: Write>(
     content_type: &str,
     request_id: Option<&str>,
 ) -> std::io::Result<()> {
+    write_response_traced(w, status, body, keep_alive, content_type, request_id, None)
+}
+
+/// [`write_response_ex`] plus an optional `x-chh-stages` per-stage
+/// breakdown (encoded with [`crate::obs::encode_stages`]); the serving
+/// loop attaches it to every traced answer so upstream tiers (the
+/// router) can fold partition timing into their own slow-log lines.
+pub fn write_response_traced<W: Write>(
+    w: &mut W,
+    status: u16,
+    body: &[u8],
+    keep_alive: bool,
+    content_type: &str,
+    request_id: Option<&str>,
+    stages: Option<&str>,
+) -> std::io::Result<()> {
     let id_line = match request_id {
         Some(id) => format!("{REQUEST_ID_HEADER}: {id}\r\n"),
         None => String::new(),
     };
+    let stages_line = match stages {
+        Some(s) if !s.is_empty() && s.len() <= MAX_STAGES_CHARS => {
+            format!("{STAGES_HEADER}: {s}\r\n")
+        }
+        _ => String::new(),
+    };
     let head = format!(
-        "HTTP/1.1 {} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n{id_line}Connection: {}\r\n\r\n",
+        "HTTP/1.1 {} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n{id_line}{stages_line}Connection: {}\r\n\r\n",
         status,
         reason(status),
         body.len(),
@@ -581,6 +624,19 @@ impl HttpClient {
         self.conn.response()
     }
 
+    /// [`Self::post_binary`] carrying an `x-chh-request-id` — the router
+    /// forwards the client's correlation id on every downstream hop so
+    /// router and partition slow logs line up under one id.
+    pub fn post_binary_with_id(
+        &mut self,
+        path: &str,
+        body: &[u8],
+        request_id: Option<&str>,
+    ) -> Result<Response, HttpError> {
+        write_request_ct(self.conn.get_mut(), "POST", path, body, request_id, CT_CHH_BIN)?;
+        self.conn.response()
+    }
+
     pub fn get(&mut self, path: &str) -> Result<Response, HttpError> {
         self.request("GET", path, &[])
     }
@@ -728,6 +784,43 @@ mod tests {
         let resp = MessageReader::new(Cursor::new(wire)).response().unwrap();
         assert_eq!(resp.request_id.as_deref(), Some("rid-1"));
         assert_eq!(resp.body, b"ok");
+    }
+
+    #[test]
+    fn stages_header_roundtrips_and_is_bounded() {
+        // traced writer emits the header; the client parser captures it
+        let mut wire = Vec::new();
+        write_response_traced(
+            &mut wire,
+            200,
+            b"ok",
+            true,
+            "application/json",
+            Some("rid-7"),
+            Some("encode=12;scan=345"),
+        )
+        .unwrap();
+        let resp = MessageReader::new(Cursor::new(wire)).response().unwrap();
+        assert_eq!(resp.request_id.as_deref(), Some("rid-7"));
+        assert_eq!(resp.stages.as_deref(), Some("encode=12;scan=345"));
+        assert_eq!(resp.body, b"ok");
+        // absent header → None; plain write_response_ex emits none
+        let mut wire = Vec::new();
+        write_response_ex(&mut wire, 200, b"ok", true, "application/json", None).unwrap();
+        let resp = MessageReader::new(Cursor::new(wire)).response().unwrap();
+        assert_eq!(resp.stages, None);
+        // oversized values are dropped on both sides
+        let huge = "s=1;".repeat(200);
+        let mut wire = Vec::new();
+        write_response_traced(&mut wire, 200, b"", true, "application/json", None, Some(&huge))
+            .unwrap();
+        let resp = MessageReader::new(Cursor::new(wire)).response().unwrap();
+        assert_eq!(resp.stages, None, "oversized stages never hit the wire");
+        let raw = format!(
+            "HTTP/1.1 200 OK\r\nContent-Length: 0\r\nx-chh-stages: {huge}\r\n\r\n"
+        );
+        let resp = MessageReader::new(Cursor::new(raw.into_bytes())).response().unwrap();
+        assert_eq!(resp.stages, None, "oversized stages dropped at parse");
     }
 
     #[test]

@@ -183,10 +183,17 @@ pub struct ServerConfig {
     pub pool_workers: usize,
     /// reap keep-alive connections idle this long
     pub idle_timeout: Duration,
-    /// slow-query threshold in milliseconds (0 = slow logging off)
+    /// slow-query threshold in milliseconds. 0 = off — unless
+    /// `slow_log` is set, in which case every request is logged (full
+    /// request tracing)
     pub slow_ms: u64,
     /// where slow-query JSON lines go (size-rotated); stderr when unset
     pub slow_log: Option<PathBuf>,
+    /// fraction of served `/query` requests re-answered by the sampling
+    /// auditor ([`crate::obs::audit`]); 0 disables auditing entirely.
+    /// Local stacks only — the router tier audits nothing (partitions
+    /// audit their own shard of the data)
+    pub audit_frac: f64,
 }
 
 impl Default for ServerConfig {
@@ -200,6 +207,7 @@ impl Default for ServerConfig {
             idle_timeout: Duration::from_secs(5),
             slow_ms: 0,
             slow_log: None,
+            audit_frac: 0.0,
         }
     }
 }
@@ -309,7 +317,17 @@ impl Telemetry {
             routes,
             proto_json,
             proto_binary,
-            slow_threshold: (slow_ms > 0).then(|| Duration::from_millis(slow_ms)),
+            // threshold 0 with a sink configured means "log every
+            // request" (full request tracing, e.g. the CI cluster
+            // smoke); 0 with no sink keeps slow logging off so the
+            // default config never floods stderr
+            slow_threshold: if slow_ms > 0 {
+                Some(Duration::from_millis(slow_ms))
+            } else if slow_log.is_some() {
+                Some(Duration::ZERO)
+            } else {
+                None
+            },
             slow_log: slow_log.map(|p| SlowLog::create(p, SLOW_LOG_MAX_BYTES)),
         }
     }
@@ -704,6 +722,58 @@ fn register_cluster_metrics(reg: &Registry, c: &Arc<ClusterRouter>) {
     }
 }
 
+/// Router-tier per-partition read telemetry: one wait histogram and one
+/// straggler counter per partition of the map installed at spawn. The
+/// wait is the router-side wall time of the partition's read (failover
+/// attempts included); the straggler counter ticks when the partition
+/// was the slowest contributor to a multi-partition fan-out — a
+/// persistently hot straggler is the partition to re-split or re-home.
+/// Sized at spawn like the health gauges: after a map flip that grows
+/// the partition count, new slots are unobserved until a router restart.
+struct ClusterTelemetry {
+    partition_wait: Vec<Arc<Hist>>,
+    stragglers: Vec<Arc<obs::Counter>>,
+}
+
+impl ClusterTelemetry {
+    fn new(reg: &Registry, partitions: usize) -> Self {
+        let mut partition_wait = Vec::with_capacity(partitions);
+        let mut stragglers = Vec::with_capacity(partitions);
+        for i in 0..partitions {
+            partition_wait.push(reg.hist(
+                "chh_partition_seconds",
+                "router-side wait for one partition's read (failover attempts included)",
+                vec![("partition", i.to_string())],
+                obs::LATENCY_BOUNDS_NS,
+                1e9,
+            ));
+            stragglers.push(reg.counter(
+                "chh_router_stragglers_total",
+                "fan-out reads in which this partition was the slowest contributor",
+                vec![("partition", i.to_string())],
+            ));
+        }
+        ClusterTelemetry { partition_wait, stragglers }
+    }
+
+    /// Observe one fan-out's spans: every partition's wait lands in its
+    /// histogram; the slowest of a multi-partition read is the straggler.
+    fn record(&self, spans: &[obs::PartitionSpan]) {
+        for s in spans {
+            if let Some(h) = self.partition_wait.get(s.partition) {
+                h.observe_duration(s.wait);
+            }
+        }
+        if spans.len() > 1 {
+            if let Some(worst) = spans.iter().max_by_key(|s| s.wait) {
+                if let Some(c) = self.stragglers.get(worst.partition) {
+                    c.inc();
+                }
+            }
+        }
+    }
+}
+
 /// Transport-level connection accounting, shared between the transport
 /// (event loop or legacy acceptor) and the `/metrics` scrape callbacks.
 #[derive(Default)]
@@ -721,6 +791,12 @@ struct State {
     batcher: Option<Batcher>,
     /// metrics registry, stage histograms, slow-query sink
     telemetry: Arc<Telemetry>,
+    /// per-partition wait histograms + straggler counters; router tier only
+    cluster_tel: Option<ClusterTelemetry>,
+    /// sampling search-quality auditor ([`crate::obs::audit`]); local
+    /// stacks with `audit_frac > 0` only. Dropped with `State`, which
+    /// joins the audit thread after the transport drains.
+    auditor: Option<Arc<obs::audit::Auditor>>,
     /// journaling wrapper around the online index, when serving durably
     /// (a durable server doubles as a replication primary)
     durable: Option<Arc<DurableIndex>>,
@@ -968,10 +1044,38 @@ impl Server {
             Stack::Cluster(c) => c.meta().family_check,
             _ => crate::replicate::family_fingerprint(stack.family().as_ref(), stack.feats().dim()),
         };
+        let cluster_tel = match &stack {
+            Stack::Cluster(c) => {
+                Some(ClusterTelemetry::new(&telemetry.registry, c.partition_count()))
+            }
+            _ => None,
+        };
+        // the auditor re-answers a sample of served queries off to the
+        // side; it never touches the serving path beyond a queue push
+        let auditor = if cfg.audit_frac > 0.0 {
+            let target = match &stack {
+                Stack::Static(r) => Some(obs::audit::AuditTarget::Static {
+                    family: r.family().clone(),
+                    feats: r.feats().clone(),
+                }),
+                Stack::Online(r) => Some(obs::audit::AuditTarget::Online {
+                    family: r.family().clone(),
+                    feats: r.feats().clone(),
+                    index: r.index().clone(),
+                    budget: r.budget(),
+                }),
+                Stack::Cluster(_) => None,
+            };
+            target.map(|t| obs::audit::Auditor::spawn(t, cfg.audit_frac, &telemetry.registry))
+        } else {
+            None
+        };
         let state = Arc::new(State {
             stack,
             batcher,
             telemetry,
+            cluster_tel,
+            auditor,
             durable,
             replica,
             family_check,
@@ -1066,13 +1170,18 @@ fn process_request(state: &Arc<State>, req: &http::Request) -> (Vec<u8>, bool) {
     state.telemetry.finish_request(&trace, &req.path, reply.status, total);
     let keep = req.keep_alive && !state.shutdown.load(Ordering::SeqCst);
     let mut out = Vec::with_capacity(reply.body.len() + 128);
-    let _ = http::write_response_ex(
+    // every traced stage rides back in `x-chh-stages`, so an upstream
+    // router can fold this server's breakdown into its own span (and a
+    // client can see the per-stage cost of exactly its request)
+    let stages = obs::encode_stages(trace.stages());
+    let _ = http::write_response_traced(
         &mut out,
         reply.status,
         &reply.body,
         keep,
         reply.content_type,
         Some(&trace.id),
+        if stages.is_empty() { None } else { Some(&stages) },
     );
     (out, keep)
 }
@@ -1314,28 +1423,28 @@ fn dispatch(state: &Arc<State>, req: &http::Request, trace: &mut Trace) -> Reply
         ("POST", "/query") => {
             state.telemetry.count_proto(req.binary);
             match &state.stack {
-                Stack::Cluster(c) => handle_cluster_query(state, c, &req.body, req.binary),
+                Stack::Cluster(c) => handle_cluster_query(state, c, &req.body, req.binary, trace),
                 _ => handle_query(state, &req.body, req.binary, trace),
             }
         }
         ("POST", "/query_topk") => {
             state.telemetry.count_proto(req.binary);
             match &state.stack {
-                Stack::Cluster(c) => handle_cluster_topk(state, c, &req.body, req.binary),
+                Stack::Cluster(c) => handle_cluster_topk(state, c, &req.body, req.binary, trace),
                 _ => handle_topk(state, &req.body, req.binary),
             }
         }
         ("POST", "/insert") => {
             state.telemetry.count_proto(req.binary);
             match &state.stack {
-                Stack::Cluster(c) => handle_cluster_mutate(c, &req.body, req.binary, true),
+                Stack::Cluster(c) => handle_cluster_mutate(c, &req.body, req.binary, true, trace),
                 _ => handle_insert(state, &req.body, req.binary),
             }
         }
         ("POST", "/remove") => {
             state.telemetry.count_proto(req.binary);
             match &state.stack {
-                Stack::Cluster(c) => handle_cluster_mutate(c, &req.body, req.binary, false),
+                Stack::Cluster(c) => handle_cluster_mutate(c, &req.body, req.binary, false, trace),
                 _ => handle_remove(state, &req.body, req.binary),
             }
         }
@@ -1405,6 +1514,9 @@ fn handle_query(state: &Arc<State>, body: &[u8], binary: bool, trace: &mut Trace
         Ok(r) => r,
         Err(e) => return err_json(e.status, &e.msg),
     };
+    // keep what the auditor needs before the request moves into the
+    // batcher (cheap, and only paid when auditing is on)
+    let audit_req = state.auditor.as_ref().map(|a| (a, req.w.clone(), req.exclude.clone()));
     let t0 = Instant::now();
     match state.batcher().submit(req) {
         Ok(rx) => match rx.recv() {
@@ -1421,6 +1533,12 @@ fn handle_query(state: &Arc<State>, body: &[u8], binary: bool, trace: &mut Trace
                 trace.stage("merge", stages.merge);
                 state.stats.latency.lock().unwrap().record_duration(t0.elapsed());
                 state.stats.probes_total.fetch_add(hit.probed as u64, Ordering::Relaxed);
+                // hand the served answer to the sampling auditor (a
+                // bounded queue push; the re-answer runs off-thread and
+                // the wire reply below is untouched)
+                if let Some((a, w, ex)) = &audit_req {
+                    a.offer(w, ex, hit.best);
+                }
                 let t_ser = Instant::now();
                 let reply = if binary {
                     ok_bin(binproto::encode_hit(&hit))
@@ -1462,6 +1580,7 @@ fn handle_topk(state: &Arc<State>, body: &[u8], binary: bool) -> Reply {
             r.budget(),
             eligible,
         ),
+        Stack::Cluster(_) => unreachable!("dispatch routes cluster topk to handle_cluster_topk"),
     };
     if binary {
         ok_bin(binproto::encode_topk_hits(&hits))
@@ -1591,12 +1710,32 @@ fn with_partial(v: Json, partial: bool) -> Json {
     }
 }
 
+/// Fold one scatter-gather's router-side timing into the request trace
+/// (so a slow line carries the full cross-tier breakdown under the
+/// request id every partition also logged) and the per-partition
+/// wait/straggler metrics.
+fn note_cluster_read<T>(
+    state: &Arc<State>,
+    ans: &mut crate::cluster::ClusterAnswer<T>,
+    trace: &mut Trace,
+) {
+    trace.stage("route_fanout", ans.fanout);
+    trace.stage("merge", ans.merge);
+    if let Some(ct) = &state.cluster_tel {
+        ct.record(&ans.spans);
+    }
+    for s in std::mem::take(&mut ans.spans) {
+        trace.partition(s);
+    }
+}
+
 /// Scatter-gather `/query` across the cluster (JSON upstream only).
 fn handle_cluster_query(
     state: &Arc<State>,
     c: &Arc<ClusterRouter>,
     body: &[u8],
     binary: bool,
+    trace: &mut Trace,
 ) -> Reply {
     if binary {
         return cluster_binary_reply();
@@ -1606,10 +1745,11 @@ fn handle_cluster_query(
         Err(e) => return err_json(e.status, &e.msg),
     };
     let t0 = Instant::now();
-    match c.query(&req) {
-        Ok(ans) => {
+    match c.query(&req, Some(&trace.id)) {
+        Ok(mut ans) => {
             state.stats.latency.lock().unwrap().record_duration(t0.elapsed());
             state.stats.probes_total.fetch_add(ans.value.probed as u64, Ordering::Relaxed);
+            note_cluster_read(state, &mut ans, trace);
             ok_json(with_partial(protocol::hit_json(&ans.value), ans.partial()))
         }
         Err(e) => cluster_err(e),
@@ -1622,6 +1762,7 @@ fn handle_cluster_topk(
     c: &Arc<ClusterRouter>,
     body: &[u8],
     binary: bool,
+    trace: &mut Trace,
 ) -> Reply {
     if binary {
         return cluster_binary_reply();
@@ -1631,9 +1772,10 @@ fn handle_cluster_topk(
         Err(e) => return err_json(e.status, &e.msg),
     };
     let t0 = Instant::now();
-    match c.query_topk(&req, t) {
-        Ok(ans) => {
+    match c.query_topk(&req, t, Some(&trace.id)) {
+        Ok(mut ans) => {
             state.stats.latency.lock().unwrap().record_duration(t0.elapsed());
+            note_cluster_read(state, &mut ans, trace);
             ok_json(with_partial(protocol::topk_json(&ans.value), ans.partial()))
         }
         Err(e) => cluster_err(e),
@@ -1641,7 +1783,13 @@ fn handle_cluster_topk(
 }
 
 /// Route one `/insert`/`/remove` to the partition primary owning the id.
-fn handle_cluster_mutate(c: &Arc<ClusterRouter>, body: &[u8], binary: bool, insert: bool) -> Reply {
+fn handle_cluster_mutate(
+    c: &Arc<ClusterRouter>,
+    body: &[u8],
+    binary: bool,
+    insert: bool,
+    trace: &mut Trace,
+) -> Reply {
     if binary {
         return cluster_binary_reply();
     }
@@ -1649,7 +1797,7 @@ fn handle_cluster_mutate(c: &Arc<ClusterRouter>, body: &[u8], binary: bool, inse
         Ok(id) => id,
         Err(e) => return err_json(e.status, &e.msg),
     };
-    match c.mutate(insert, id) {
+    match c.mutate(insert, id, Some(&trace.id)) {
         Ok((applied, live)) => ok_json(obj(vec![
             (if insert { "inserted" } else { "removed" }, Json::from(applied)),
             ("id", Json::from(id as usize)),
@@ -1916,6 +2064,8 @@ mod tests {
             stack,
             batcher: Some(batcher),
             telemetry,
+            cluster_tel: None,
+            auditor: None,
             durable: None,
             replica: None,
             family_check,

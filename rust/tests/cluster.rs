@@ -53,6 +53,7 @@ fn server_cfg() -> ServerConfig {
         idle_timeout: Duration::from_millis(300),
         slow_ms: 0,
         slow_log: None,
+        audit_frac: 0.0,
     }
 }
 
@@ -92,6 +93,10 @@ struct Node {
 }
 
 fn spawn_partition(w: &World, start: u32, end: u32) -> Node {
+    spawn_partition_cfg(w, start, end, server_cfg())
+}
+
+fn spawn_partition_cfg(w: &World, start: u32, end: u32, cfg: ServerConfig) -> Node {
     let index = Arc::new(ShardedIndex::new(BITS, RADIUS, SHARDS));
     for id in start..end {
         index.insert_point(w.fam.as_ref(), id, w.feats.row(id as usize));
@@ -106,7 +111,7 @@ fn spawn_partition(w: &World, start: u32, end: u32) -> Node {
         16,
         w.budget,
     ));
-    let handle = Server::spawn_with_durability(Stack::Online(router), server_cfg(), None)
+    let handle = Server::spawn_with_durability(Stack::Online(router), cfg, None)
         .expect("spawn partition");
     let addr = handle.addr().to_string();
     Node { index, handle, addr }
@@ -133,10 +138,18 @@ fn map_for(w: &World, version: u64, parts: &[(u32, u32, &str)]) -> PartitionMap 
 }
 
 fn spawn_router(w: &World, parts: &[(u32, u32, &str)]) -> (Arc<ClusterRouter>, ServerHandle) {
+    spawn_router_cfg(w, parts, server_cfg())
+}
+
+fn spawn_router_cfg(
+    w: &World,
+    parts: &[(u32, u32, &str)],
+    cfg: ServerConfig,
+) -> (Arc<ClusterRouter>, ServerHandle) {
     let map = map_for(w, 1, parts);
     let router =
         Arc::new(ClusterRouter::connect(map, None, cluster_cfg()).expect("router connect"));
-    let handle = Server::spawn_cluster(router.clone(), server_cfg()).expect("spawn router");
+    let handle = Server::spawn_cluster(router.clone(), cfg).expect("spawn router");
     (router, handle)
 }
 
@@ -397,7 +410,7 @@ fn a_stale_map_follows_the_421_redirect_and_counts_it() {
     let cluster = ClusterRouter::connect(map, None, cluster_cfg()).expect("router connect");
     let before = index.len();
     let (applied, _live) =
-        cluster.mutate(false, 3).expect("the mutation must follow the 421 redirect");
+        cluster.mutate(false, 3, None).expect("the mutation must follow the 421 redirect");
     assert!(applied, "id 3 was live on the primary");
     assert_eq!(index.len(), before - 1, "the op landed on the real primary");
     assert!(
@@ -407,4 +420,160 @@ fn a_stale_map_follows_the_421_redirect_and_counts_it() {
     rephandle.shutdown();
     phandle.shutdown();
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn routed_slow_lines_correlate_router_and_partitions_under_one_request_id() {
+    let w = world(59);
+    let dir =
+        std::env::temp_dir().join(format!("chh_cluster_it_slowlog_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("mkdir slow-log dir");
+    // `slow_ms: 0` with a sink configured means *every* request is
+    // logged — the trace-everything mode the CI smoke also relies on
+    let log_cfg = |name: &str| ServerConfig {
+        slow_ms: 0,
+        slow_log: Some(dir.join(name)),
+        ..server_cfg()
+    };
+    let a = spawn_partition_cfg(&w, 0, 120, log_cfg("pa.jsonl"));
+    let b = spawn_partition_cfg(&w, 120, N as u32, log_cfg("pb.jsonl"));
+    let (_cr, rhandle) = spawn_router_cfg(
+        &w,
+        &[(0, 120, &a.addr), (120, N as u32, &b.addr)],
+        log_cfg("router.jsonl"),
+    );
+    let raddr = rhandle.addr().to_string();
+    let mut via = client(&raddr);
+    let mut rng = Rng::seed_from_u64(13);
+    for q in 0..5 {
+        let wv = unit_vec(&mut rng, DIM);
+        let r = via.post("/query", &protocol::query_body(&wv)).expect("router /query");
+        assert_eq!(r.status, 200, "query {q}");
+    }
+
+    // the router-side spans also land in the per-partition wait
+    // histograms and straggler counters
+    let mut mc = client(&raddr);
+    let m = mc.get("/metrics").expect("GET /metrics");
+    assert_eq!(m.status, 200);
+    let scrape = chh::obs::parse_scrape(&String::from_utf8_lossy(&m.body));
+    let mut stragglers = 0.0;
+    for p in ["0", "1"] {
+        let label = format!("partition=\"{p}\"");
+        let waits = chh::obs::series_value(&scrape, "chh_partition_seconds_count", &label)
+            .unwrap_or_else(|| panic!("chh_partition_seconds_count{{{label}}} missing"));
+        assert!(waits >= 5.0, "partition {p} wait observed only {waits} times");
+        stragglers += chh::obs::series_value(&scrape, "chh_router_stragglers_total", &label)
+            .unwrap_or_else(|| panic!("chh_router_stragglers_total{{{label}}} missing"));
+    }
+    assert!(stragglers >= 5.0, "every fan-out elects one straggler, saw {stragglers}");
+
+    // shutdown flushes nothing extra — appends are synchronous — but it
+    // guarantees no more lines race the reads below
+    rhandle.shutdown();
+    a.handle.shutdown();
+    b.handle.shutdown();
+
+    let query_lines = |name: &str| -> Vec<chh::jsonio::Json> {
+        let text = std::fs::read_to_string(dir.join(name)).expect("read slow log");
+        text.lines()
+            .filter_map(|l| chh::jsonio::Json::parse(l).ok())
+            .filter(|j| j.get("route").and_then(|r| r.as_str()) == Some("/query"))
+            .collect()
+    };
+    let id_of = |j: &chh::jsonio::Json| -> String {
+        j.get("request_id")
+            .and_then(|v| v.as_str())
+            .expect("slow line carries request_id")
+            .to_string()
+    };
+    let part_ids: std::collections::HashSet<String> = query_lines("pa.jsonl")
+        .iter()
+        .chain(query_lines("pb.jsonl").iter())
+        .map(&id_of)
+        .collect();
+    let routed = query_lines("router.jsonl");
+    assert_eq!(routed.len(), 5, "one router line per /query");
+    for line in &routed {
+        let rid = id_of(line);
+        assert!(!rid.is_empty(), "router line has an id");
+        // the router line carries both partitions' echoed breakdowns...
+        let spans = line
+            .get("partitions")
+            .and_then(|p| p.as_arr())
+            .expect("router slow line carries partition spans");
+        assert_eq!(spans.len(), 2, "both partitions answered");
+        for s in spans {
+            assert!(s.get("wait_us").and_then(|v| v.as_f64()).is_some());
+            let stages = s
+                .get("stages_us")
+                .and_then(|v| v.as_obj())
+                .expect("span carries the partition's stage breakdown");
+            assert!(!stages.is_empty(), "echoed stages are non-empty");
+        }
+        // ...and the same id appears in the partitions' own slow logs,
+        // so the tiers correlate with grep alone
+        assert!(part_ids.contains(&rid), "request id {rid} missing from partition logs");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn auditing_changes_no_wire_bytes_and_publishes_quality_gauges() {
+    let w = world(67);
+    let plain = spawn_partition(&w, 0, N as u32);
+    let audited = spawn_partition_cfg(
+        &w,
+        0,
+        N as u32,
+        ServerConfig { audit_frac: 1.0, ..server_cfg() },
+    );
+    let mut cp = client(&plain.addr);
+    let mut ca = client(&audited.addr);
+    let mut rng = Rng::seed_from_u64(29);
+    let queries = 20;
+    for q in 0..queries {
+        let wv = unit_vec(&mut rng, DIM);
+        let body = protocol::query_body(&wv);
+        let rp = cp.post("/query", &body).expect("plain /query");
+        let ra = ca.post("/query", &body).expect("audited /query");
+        assert_eq!(rp.status, 200, "query {q}");
+        assert_eq!(ra.status, 200, "query {q} audited");
+        // the auditor rides the serving path but must never touch it:
+        // the response bodies are byte-identical
+        assert_eq!(rp.body, ra.body, "query {q} wire bytes must not change under audit");
+    }
+
+    // the auditor drains asynchronously — poll until every offered
+    // query was re-answered, then check the quality gauges
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    let mut mc = client(&audited.addr);
+    let scrape = loop {
+        let m = mc.get("/metrics").expect("GET /metrics");
+        assert_eq!(m.status, 200);
+        let scrape = chh::obs::parse_scrape(&String::from_utf8_lossy(&m.body));
+        let done = chh::obs::series_value(&scrape, "chh_audit_queries_total", "")
+            .expect("audited counter registered");
+        let dropped =
+            chh::obs::series_value(&scrape, "chh_audit_dropped_total", "").unwrap_or(0.0);
+        if done + dropped >= queries as f64 {
+            break scrape;
+        }
+        assert!(std::time::Instant::now() < deadline, "auditor stalled at {done}");
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    let recall = chh::obs::series_value(&scrape, "chh_audit_recall", "")
+        .expect("chh_audit_recall registered");
+    assert!((0.0..=1.0).contains(&recall), "recall is a fraction, got {recall}");
+    let rank = chh::obs::series_value(&scrape, "chh_audit_rank_of_best", "")
+        .expect("chh_audit_rank_of_best registered");
+    // 1-based when any served best was ranked, 0.0 before the first one
+    assert!(rank == 0.0 || rank >= 1.0, "rank of best is 1-based, got {rank}");
+    assert!(
+        scrape.iter().any(|(k, _)| k.starts_with("chh_probe_model_calibration{")),
+        "calibration series registered"
+    );
+    plain.handle.shutdown();
+    audited.handle.shutdown();
 }

@@ -41,6 +41,7 @@ fn server_cfg() -> ServerConfig {
         idle_timeout: Duration::from_millis(300),
         slow_ms: 0,
         slow_log: None,
+        audit_frac: 0.0,
     }
 }
 

@@ -42,6 +42,7 @@ fn idle_connections_cost_bounded_threads() {
         idle_timeout: Duration::from_secs(60),
         slow_ms: 0,
         slow_log: None,
+        audit_frac: 0.0,
     };
     let handle = Server::spawn(Stack::Static(router), cfg).expect("spawn server");
     let addr = handle.addr().to_string();
