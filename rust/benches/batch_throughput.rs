@@ -13,6 +13,7 @@ use chh::bench::{fmt_dur, print_table, Bench, BenchStats, JsonReport};
 use chh::jsonio::Json;
 use chh::data::{tiny1m_like, TinyConfig};
 use chh::eval::{evaluate, evaluate_with};
+use chh::hash::codes::mask;
 use chh::hash::{BhHash, HashFamily};
 use chh::lbh::{LbhTrainConfig, LbhTrainer};
 use chh::par::Pool;
@@ -57,6 +58,71 @@ fn main() {
     summary.push(speedup_row("encode_all", &enc_serial, &enc_pooled));
     rows.push(enc_serial);
     rows.push(enc_pooled);
+
+    // ── encode kernel: blocked GEMM vs the per-point scalar loop ─────
+    // (both single-threaded — isolates the cache-blocking win from the
+    // pool fan-out measured above)
+    let ek_scalar = b.run(&format!("encode_kernel n={n} scalar"), || {
+        let codes: Vec<u64> =
+            (0..data.len()).map(|i| bh.encode_point(data.features().row(i))).collect();
+        black_box(codes);
+    });
+    let ek_blocked = b.run(&format!("encode_kernel n={n} blocked"), || {
+        black_box(bh.encode_all_pool(data.features(), &serial));
+    });
+    let scalar_codes: Vec<u64> =
+        (0..data.len()).map(|i| bh.encode_point(data.features().row(i))).collect();
+    assert_eq!(
+        bh.encode_all_pool(data.features(), &serial).codes,
+        scalar_codes,
+        "blocked encode kernel parity"
+    );
+    summary.push(speedup_row("encode_kernel", &ek_scalar, &ek_blocked));
+    rows.push(ek_scalar);
+    rows.push(ek_blocked);
+
+    // ── scan kernel: chunked popcount sweep vs naive allocating loop ─
+    let codes = bh.encode_all_pool(data.features(), &pooled);
+    let scan_w = chh::testing::unit_vec(&mut rng, 384);
+    let scan_q = bh.encode_query(&scan_w);
+    let sk_scalar = b.run(&format!("scan_kernel n={n} scalar"), || {
+        let qm = scan_q & mask(codes.k);
+        let out: Vec<u32> = codes.codes.iter().map(|&c| (c ^ qm).count_ones()).collect();
+        black_box(out);
+    });
+    let mut scan_out: Vec<u32> = Vec::new();
+    let sk_chunked = b.run(&format!("scan_kernel n={n} chunked"), || {
+        codes.hamming_scan(scan_q, &mut scan_out);
+        black_box(scan_out.len());
+    });
+    let qm = scan_q & mask(codes.k);
+    let scan_ref: Vec<u32> = codes.codes.iter().map(|&c| (c ^ qm).count_ones()).collect();
+    codes.hamming_scan(scan_q, &mut scan_out);
+    assert_eq!(scan_out, scan_ref, "chunked scan kernel parity");
+    summary.push(speedup_row("scan_kernel", &sk_scalar, &sk_chunked));
+    rows.push(sk_scalar);
+    rows.push(sk_chunked);
+
+    // ── quantized encode: the approximate i8 path (--quantized) ──────
+    // no parity assert — the path is sign-approximate by design; report
+    // per-bit agreement with the exact f32 codes instead
+    let qp = bh.pairs.quantize();
+    let qe = b.run(&format!("encode_quantized n={n} workers={WORKERS}"), || {
+        black_box(qp.encode_all_pool(data.features(), &pooled));
+    });
+    let quant = qp.encode_all_pool(data.features(), &pooled);
+    let bits = codes.k as u64;
+    let agree: u64 = codes
+        .codes
+        .iter()
+        .zip(quant.codes.iter())
+        .map(|(&a, &b)| bits - u64::from((a ^ b).count_ones()))
+        .sum();
+    println!(
+        "quantized per-bit agreement: {:.4} (approximate path, not parity-pinned)",
+        agree as f64 / (codes.len() as u64 * bits).max(1) as f64
+    );
+    rows.push(qe);
 
     // ── query_batch: one AL round's worth of hyperplanes ─────────────
     let index = HyperplaneIndex::build_with(&bh, data.features(), 4, &pooled);

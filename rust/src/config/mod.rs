@@ -110,6 +110,10 @@ pub struct ExperimentConfig {
     /// query, eval, LBH training): 0 = all cores, 1 = serial. Results are
     /// bit-identical for every setting (see docs/PARALLEL.md).
     pub workers: usize,
+    /// use the i8-quantized projection path for batch encodes. Approximate
+    /// (NOT bit-identical to the f32 kernels) but deterministic; excluded
+    /// from parity-pinned serving paths. See docs/PERF.md.
+    pub quantized: bool,
 }
 
 impl ExperimentConfig {
@@ -132,6 +136,7 @@ impl ExperimentConfig {
             max_classes: None,
             eval_every: 10,
             workers: 0,
+            quantized: false,
         }
     }
 
@@ -162,6 +167,7 @@ impl ExperimentConfig {
             .opt("classes", "0", "max classes evaluated (0 = all)")
             .opt("eval-every", "10", "AP evaluation interval")
             .opt("workers", "0", "batch-path worker threads (0 = all cores, 1 = serial)")
+            .flag("quantized", "i8-quantized batch encode (approximate; see docs/PERF.md)")
     }
 
     /// Build from parsed CLI options registered by [`Self::cli_opts`].
@@ -195,6 +201,7 @@ impl ExperimentConfig {
         }
         cfg.eval_every = p.usize("eval-every")?.max(1);
         cfg.workers = p.usize("workers")?;
+        cfg.quantized = p.flag("quantized");
         Ok(cfg)
     }
 }
@@ -257,6 +264,12 @@ mod tests {
         assert_eq!(cfg.bits(), 24);
         assert_eq!(cfg.radius(), 2);
         assert_eq!(cfg.workers, 3);
+        assert!(!cfg.quantized, "quantized is opt-in");
+        let toks2: Vec<String> =
+            ["--quantized"].iter().map(|s| s.to_string()).collect();
+        let args2 = ExperimentConfig::cli_opts(Args::new("t", "t"));
+        let p2 = args2.parse(&toks2).unwrap();
+        assert!(ExperimentConfig::from_parsed(&p2).unwrap().quantized);
     }
 
     #[test]

@@ -289,6 +289,10 @@ impl Router {
 }
 
 fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>, sh: Arc<Shared>) {
+    // one scratch per worker thread: the candidate gather of every query
+    // this worker answers reuses the same buffer (answers are identical
+    // to the scratch-free path — see table::QueryScratch)
+    let mut scratch = crate::table::QueryScratch::new();
     loop {
         let job = {
             let guard = rx.lock().unwrap();
@@ -298,13 +302,20 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>, sh: Arc<Shared>) {
             }
         };
         let hit = match &job.req.exclude {
-            Some(ex) => sh.index.query_code_filtered(
+            Some(ex) => sh.index.query_code_filtered_with(
                 job.lookup,
                 &job.req.w,
                 &sh.feats,
                 |i| !ex.contains(&i),
+                &mut scratch,
             ),
-            None => sh.index.query_code_filtered(job.lookup, &job.req.w, &sh.feats, |_| true),
+            None => sh.index.query_code_filtered_with(
+                job.lookup,
+                &job.req.w,
+                &sh.feats,
+                |_| true,
+                &mut scratch,
+            ),
         };
         sh.stats.completed.fetch_add(1, Ordering::Relaxed);
         if !hit.nonempty {
@@ -550,6 +561,9 @@ impl OnlineRouter {
 }
 
 fn online_worker_loop(rx: Arc<Mutex<Receiver<OnlineJob>>>, sh: Arc<OnlineShared>) {
+    // per-thread probe scratch, reused across every shard job this worker
+    // serves (see table::QueryScratch — answers are unaffected)
+    let mut scratch = crate::table::QueryScratch::new();
     loop {
         let job = {
             let guard = rx.lock().unwrap();
@@ -561,15 +575,24 @@ fn online_worker_loop(rx: Arc<Mutex<Receiver<OnlineJob>>>, sh: Arc<OnlineShared>
         let st = &job.state;
         let view = sh.index.shards()[job.shard].view();
         let hit = match &st.exclude {
-            Some(ex) => view.query(
+            Some(ex) => view.query_with(
                 &st.masks,
                 st.lookup,
                 &st.w,
                 &sh.feats,
                 sh.budget.top,
                 |i| !ex.contains(&i),
+                &mut scratch,
             ),
-            None => view.query(&st.masks, st.lookup, &st.w, &sh.feats, sh.budget.top, |_| true),
+            None => view.query_with(
+                &st.masks,
+                st.lookup,
+                &st.w,
+                &sh.feats,
+                sh.budget.top,
+                |_| true,
+                &mut scratch,
+            ),
         };
         st.partials.lock().unwrap().push(hit);
         if st.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {

@@ -108,6 +108,34 @@ impl FeatureStore {
         }
     }
 
+    /// First non-finite value in the store, as `(row, stored_value)` —
+    /// `None` when every value is finite. A NaN feature would break
+    /// [`crate::hash::codes::pack_signs`]' sgn(0) = +1 convention (NaN
+    /// packs as the −1 bit and desynchronizes point vs flipped-query
+    /// codes), so ingestion rejects non-finite values up front; see
+    /// [`Dataset::new`].
+    pub fn find_non_finite(&self) -> Option<(usize, f32)> {
+        match self {
+            FeatureStore::Dense(m) => {
+                for i in 0..m.rows {
+                    if let Some(&v) = m.row(i).iter().find(|v| !v.is_finite()) {
+                        return Some((i, v));
+                    }
+                }
+                None
+            }
+            FeatureStore::Sparse(m) => {
+                for i in 0..m.rows {
+                    let r = m.row(i);
+                    if let Some(&v) = r.values.iter().find(|v| !v.is_finite()) {
+                        return Some((i, v));
+                    }
+                }
+                None
+            }
+        }
+    }
+
     /// Densify rows [row0, row0+n) zero-padded — PJRT tile staging.
     pub fn dense_block(&self, row0: usize, n: usize) -> Mat {
         match self {
@@ -139,8 +167,16 @@ pub struct Dataset {
 }
 
 impl Dataset {
+    /// Build a dataset. Panics if a feature value is non-finite: the HTTP
+    /// server already 400s non-finite query hyperplanes, and this is the
+    /// matching gate for stored features — a NaN reaching
+    /// [`crate::hash::codes::pack_signs`] would silently pack as the −1
+    /// bit (breaking sgn(0) = +1) rather than fail loudly here.
     pub fn new(features: FeatureStore, labels: Vec<u16>, eval_classes: usize, name: &str) -> Self {
         assert_eq!(features.len(), labels.len());
+        if let Some((row, v)) = features.find_non_finite() {
+            panic!("dataset {name}: non-finite feature {v} in row {row}");
+        }
         Dataset { features, labels, eval_classes, name: name.to_string() }
     }
 
@@ -583,6 +619,29 @@ mod tests {
         let mut buf = vec![0.0f32; 6];
         r.scatter_into(&mut buf);
         assert_eq!(buf, vec![0.0, 2.0, 0.0, 0.0, -1.0, 0.0]);
+    }
+
+    #[test]
+    fn non_finite_features_rejected_at_ingest() {
+        let mut m = Mat::zeros(3, 4);
+        m.set(2, 1, f32::NAN);
+        let store = FeatureStore::Dense(m);
+        assert_eq!(store.find_non_finite().map(|(r, _)| r), Some(2));
+        let ok = FeatureStore::Dense(Mat::zeros(2, 4));
+        assert!(ok.find_non_finite().is_none());
+        let mut b = CsrBuilder::new(4);
+        b.push_row(&mut vec![(0, 1.0)]);
+        b.push_row(&mut vec![(2, f32::INFINITY)]);
+        let sparse = FeatureStore::Sparse(b.finish());
+        assert_eq!(sparse.find_non_finite(), Some((1, f32::INFINITY)));
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite feature")]
+    fn dataset_new_panics_on_nan_feature() {
+        let mut m = Mat::zeros(2, 3);
+        m.set(0, 0, f32::NAN);
+        Dataset::new(FeatureStore::Dense(m), vec![0, 1], 2, "bad");
     }
 
     #[test]

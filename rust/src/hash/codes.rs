@@ -5,9 +5,16 @@
 //! `k` bits meaningful. Hamming distance is one XOR + POPCNT.
 
 /// Mask with the low k bits set.
+///
+/// Hard-asserts `1 ≤ k ≤ 64` even in release builds: with only a
+/// `debug_assert`, `mask(65)` would wrap the shift and silently return
+/// `1`, poisoning every masked scan downstream. The callers that sit on
+/// per-element hot paths ([`CodeArray::hamming_scan`],
+/// `table::rank_search`) hoist the mask out of their loops, so the check
+/// runs once per scan, not once per code.
 #[inline]
 pub fn mask(k: usize) -> u64 {
-    debug_assert!(k >= 1 && k <= 64, "code length {k} out of range");
+    assert!(k >= 1 && k <= 64, "code length {k} out of range");
     if k == 64 {
         u64::MAX
     } else {
@@ -30,6 +37,18 @@ pub fn flip(code: u64, k: usize) -> u64 {
 
 /// Pack a ±1 (or arbitrary-sign) score slice into bits: bit j = 1 iff
 /// scores[j] >= 0 — `sgn` with the paper's convention sgn(0) = +1.
+///
+/// # Precondition: finite scores
+///
+/// Scores must not be NaN. `NaN >= 0.0` is false, so a NaN score packs
+/// as the −1 bit — which breaks the sgn(0) = +1 convention *and* the
+/// point/query symmetry the flipped lookup relies on (both sides of a
+/// NaN product would pack to −1 instead of opposite bits). The
+/// ingestion layers uphold this: the HTTP server rejects non-finite
+/// query hyperplanes with a 400, and [`crate::data::Dataset::new`]
+/// rejects non-finite features at store build, so no projection score
+/// computed from stored data can be NaN. (±∞ scores are fine: they
+/// carry a definite sign.)
 #[inline]
 pub fn pack_signs(scores: &[f32]) -> u64 {
     debug_assert!(scores.len() <= 64);
@@ -85,15 +104,45 @@ impl CodeArray {
 
     /// Hamming distances from a query code to every stored code
     /// (the linear-scan "Hamming ranking" mode used when the hash-lookup
-    /// ball is empty or for evaluation).
+    /// ball is empty or for evaluation). Delegates to the chunked
+    /// [`hamming_sweep_into`] kernel; `out`'s capacity is reused across
+    /// calls, so a scratch vector makes repeated scans allocation-free.
     pub fn hamming_scan(&self, q: u64, out: &mut Vec<u32>) {
-        out.clear();
-        out.reserve(self.codes.len());
-        let m = mask(self.k);
-        let qm = q & m;
-        for &c in &self.codes {
-            out.push((c ^ qm).count_ones());
+        let qm = q & mask(self.k);
+        hamming_sweep_into(&self.codes, qm, out);
+    }
+}
+
+/// Block length of the chunked popcount sweep. 64 u64 words = one 512-byte
+/// slab — eight cache lines, far below L1 — so the only tuning concern is
+/// giving the autovectorizer a fixed-trip-count inner loop it can unroll
+/// into XOR+POPCNT lanes without bounds checks.
+pub const SCAN_BLOCK: usize = 64;
+
+/// Chunked XOR+POPCNT sweep: distance from `q_masked` to every code in
+/// `codes`, written into `out` (resized to `codes.len()`; existing
+/// capacity is reused).
+///
+/// `q_masked` must already be masked to the array's k bits — callers
+/// hoist `& mask(k)` so the per-element loop is a pure `xor` +
+/// `count_ones`. Writing into a pre-sized slice (instead of `push`ing)
+/// removes the per-element capacity check that blocks
+/// autovectorization; the fixed-width [`SCAN_BLOCK`] inner loop lets
+/// LLVM emit unrolled popcount lanes. Distances are bit-identical to the
+/// obvious scalar loop — the kernel only re-blocks independent
+/// per-element work.
+pub fn hamming_sweep_into(codes: &[u64], q_masked: u64, out: &mut Vec<u32>) {
+    out.clear();
+    out.resize(codes.len(), 0);
+    let mut cs = codes.chunks_exact(SCAN_BLOCK);
+    let mut os = out.chunks_exact_mut(SCAN_BLOCK);
+    for (cb, ob) in (&mut cs).zip(&mut os) {
+        for i in 0..SCAN_BLOCK {
+            ob[i] = (cb[i] ^ q_masked).count_ones();
         }
+    }
+    for (o, &c) in os.into_remainder().iter_mut().zip(cs.remainder().iter()) {
+        *o = (c ^ q_masked).count_ones();
     }
 }
 
@@ -202,6 +251,27 @@ mod tests {
         assert_eq!(mask(64), u64::MAX);
         assert_eq!(flip(0b1010, 4), 0b0101);
         assert_eq!(flip(flip(0xABCD, 16), 16), 0xABCD);
+    }
+
+    #[test]
+    fn mask_boundaries() {
+        // both legal extremes, in release as well as debug
+        assert_eq!(mask(1), 1);
+        assert_eq!(mask(63), u64::MAX >> 1);
+        assert_eq!(mask(64), u64::MAX);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn mask_rejects_zero() {
+        mask(0);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn mask_rejects_above_64() {
+        // with only a debug_assert this returned 1 in release (shift wrap)
+        mask(65);
     }
 
     #[test]
@@ -378,5 +448,28 @@ mod tests {
         let expect: Vec<u32> =
             arr.codes.iter().map(|&c| hamming(c, 0b1111_0000, 8)).collect();
         assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn hamming_sweep_matches_scalar_loop() {
+        // block + remainder shapes, including empty and exactly-one-block
+        forall("chunked sweep == scalar", 48, |rng| {
+            let k = rng.range(1, 65);
+            let n = match rng.range(0, 4) {
+                0 => 0,
+                1 => rng.range(1, SCAN_BLOCK),
+                2 => SCAN_BLOCK,
+                _ => rng.range(SCAN_BLOCK + 1, 3 * SCAN_BLOCK + 7),
+            };
+            let m = mask(k);
+            let codes: Vec<u64> = (0..n).map(|_| rng.next_u64() & m).collect();
+            let qm = rng.next_u64() & m;
+            let mut out = vec![999u32; 3]; // stale contents must be cleared
+            hamming_sweep_into(&codes, qm, &mut out);
+            let expect: Vec<u32> =
+                codes.iter().map(|&c| (c ^ qm).count_ones()).collect();
+            crate::prop_assert!(out == expect, "k={k} n={n}");
+            Ok(())
+        });
     }
 }

@@ -119,6 +119,137 @@ impl ProjectionPairs {
         }
         (pu, pv)
     }
+
+    /// Symmetric max-abs i8 quantization of both projection matrices —
+    /// the [`QuantizedPairs`] fast path for bandwidth-bound batch
+    /// encodes (`--quantized`).
+    pub fn quantize(&self) -> QuantizedPairs {
+        QuantizedPairs::from_pairs(self)
+    }
+}
+
+// ─────────────────────── quantized projections ───────────────────────
+
+/// i8-quantized projection pairs: the optional memory-bandwidth fast
+/// path for *batch* encodes, gated behind `ExperimentConfig::quantized`
+/// / `chh encode --quantized`.
+///
+/// Each projection row is quantized symmetrically (`q = round(127·w/max|w|)`),
+/// and each input row likewise at encode time; dots accumulate in i32
+/// and the bilinear product in i64. All quantization scales are
+/// positive, so they never change the sign of the product — the encode
+/// approximates `sgn((uᵀx)(vᵀx))` directly, and bits only differ from
+/// the f32 path where rounding flips a near-zero projection. That makes
+/// the path **approximate**: it is deterministic (pure function of the
+/// input, chunked identically for any worker count) but NOT bit-identical
+/// to [`bilinear_encode`], so it is excluded from every parity-pinned
+/// serving path — serving indexes, WAL replay, and replicas always
+/// encode in f32. See `docs/PERF.md` for the caveats.
+#[derive(Clone, Debug)]
+pub struct QuantizedPairs {
+    k: usize,
+    dim: usize,
+    /// k rows × dim, row-major.
+    qu: Vec<i8>,
+    qv: Vec<i8>,
+}
+
+/// Quantize one f32 row symmetrically into `out` (len = row len).
+fn quantize_row_i8(row: &[f32], out: &mut [i8]) {
+    let max = row.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    if max == 0.0 {
+        out.fill(0);
+        return;
+    }
+    let s = 127.0 / max;
+    for (o, &v) in out.iter_mut().zip(row.iter()) {
+        *o = (v * s).round().clamp(-127.0, 127.0) as i8;
+    }
+}
+
+/// i32 dot of two i8 slices (≤ 2^24 per dim step — no overflow below
+/// dim ≈ 130k).
+#[inline]
+fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0i32; 4];
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += a[i] as i32 * b[i] as i32;
+        acc[1] += a[i + 1] as i32 * b[i + 1] as i32;
+        acc[2] += a[i + 2] as i32 * b[i + 2] as i32;
+        acc[3] += a[i + 3] as i32 * b[i + 3] as i32;
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..a.len() {
+        s += a[i] as i32 * b[i] as i32;
+    }
+    s
+}
+
+impl QuantizedPairs {
+    pub fn from_pairs(pairs: &ProjectionPairs) -> Self {
+        let (k, dim) = (pairs.k(), pairs.dim());
+        let mut qu = vec![0i8; k * dim];
+        let mut qv = vec![0i8; k * dim];
+        for j in 0..k {
+            quantize_row_i8(pairs.u.row(j), &mut qu[j * dim..(j + 1) * dim]);
+            quantize_row_i8(pairs.v.row(j), &mut qv[j * dim..(j + 1) * dim]);
+        }
+        QuantizedPairs { k, dim, qu, qv }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Quantized encode of one already-densified row (scratch: `qx` holds
+    /// the quantized input, `dense` the scattered row for sparse stores).
+    fn encode_dense_row(&self, row: &[f32], qx: &mut [i8]) -> u64 {
+        quantize_row_i8(row, qx);
+        let mut c = 0u64;
+        for j in 0..self.k {
+            let pu = dot_i8(qx, &self.qu[j * self.dim..(j + 1) * self.dim]) as i64;
+            let pv = dot_i8(qx, &self.qv[j * self.dim..(j + 1) * self.dim]) as i64;
+            if pu * pv >= 0 {
+                c |= 1u64 << j;
+            }
+        }
+        c
+    }
+
+    /// Approximate batch encode (see the type docs). [`ENCODE_CHUNK`]
+    /// blocks over `pool`; deterministic and pool-parity-identical, but
+    /// only sign-approximate vs the f32 path.
+    pub fn encode_all_pool(
+        &self,
+        feats: &crate::data::FeatureStore,
+        pool: &Pool,
+    ) -> codes::CodeArray {
+        let dim = self.dim;
+        let blocks: Vec<Vec<u64>> = pool.map(feats.len(), ENCODE_CHUNK, |range| {
+            let mut out = Vec::with_capacity(range.len());
+            let mut qx = vec![0i8; dim];
+            let mut dense = vec![0.0f32; dim];
+            for i in range {
+                match feats.row(i) {
+                    FeatRef::Dense(row) => out.push(self.encode_dense_row(row, &mut qx)),
+                    sparse => {
+                        dense.fill(0.0);
+                        sparse.scatter_into(&mut dense);
+                        out.push(self.encode_dense_row(&dense, &mut qx));
+                    }
+                }
+            }
+            out
+        });
+        let mut arr = codes::CodeArray::with_capacity(self.k, feats.len());
+        for b in blocks {
+            arr.codes.extend_from_slice(&b);
+        }
+        arr
+    }
 }
 
 // ───────────────────────────── BH-Hash ─────────────────────────────
@@ -155,46 +286,49 @@ fn bilinear_query_scores(pairs: &ProjectionPairs, w: &[f32]) -> Vec<f32> {
     pu.iter().zip(pv.iter()).map(|(a, b)| (a * b).abs()).collect()
 }
 
-/// Batch bilinear encode. Dense stores go through a row-blocked GEMM
-/// (`(X·Uᵀ) ⊙ (X·Vᵀ)` with k-wide accumulator rows) instead of per-point
-/// dot products — ~2× faster from cache locality alone (§Perf pass) —
-/// with the [`ENCODE_CHUNK`]-row blocks fanned out over `pool`. Each row's
-/// accumulation is independent, so the result is bit-identical to the
-/// serial path for any worker count. Sparse stores keep the per-point
-/// sparse-dot path, chunked the same way.
+/// Batch bilinear encode. Dense stores go through the cache-blocked
+/// projection GEMM [`crate::linalg::project_block`]: a
+/// [`crate::linalg::GEMM_BIT_BLOCK`]-row slab of each projection matrix
+/// is reused across [`crate::linalg::GEMM_ROW_BLOCK`] data rows, so U/V
+/// stream from memory once per row block instead of once per row.
+/// Every pre-sign entry is computed by the *same* unrolled
+/// [`crate::linalg::dot`] in the same operand order as the per-point
+/// [`bilinear_encode`] reference, so the batch codes are bit-identical
+/// to the scalar path by construction (the earlier axpy-accumulated
+/// GEMM only agreed on signs empirically; the blocked kernel agrees on
+/// every pre-sign bit pattern). [`ENCODE_CHUNK`]-row blocks fan out over
+/// `pool`; rows are independent, so any worker count is bit-identical to
+/// serial. Sparse stores keep the per-point sparse-dot path, chunked
+/// the same way.
 fn bilinear_encode_all(
     pairs: &ProjectionPairs,
     feats: &crate::data::FeatureStore,
     pool: &Pool,
 ) -> codes::CodeArray {
+    use crate::linalg::{project_block, GEMM_ROW_BLOCK};
     let k = pairs.k();
     let blocks: Vec<Vec<u64>> = match feats {
-        crate::data::FeatureStore::Dense(x) => {
-            let ut = pairs.u.transpose(); // (d, k)
-            let vt = pairs.v.transpose();
-            pool.map(x.rows, ENCODE_CHUNK, |range| {
-                let mut out = Vec::with_capacity(range.len());
-                let mut pu = vec![0.0f32; k];
-                let mut pv = vec![0.0f32; k];
-                let mut scores = vec![0.0f32; k];
-                for r in range {
-                    let xr = x.row(r);
-                    pu.fill(0.0);
-                    pv.fill(0.0);
-                    for (t, &a) in xr.iter().enumerate() {
-                        if a != 0.0 {
-                            crate::linalg::axpy(a, ut.row(t), &mut pu);
-                            crate::linalg::axpy(a, vt.row(t), &mut pv);
-                        }
-                    }
-                    for ((s, &a), &b) in scores.iter_mut().zip(pu.iter()).zip(pv.iter()) {
+        crate::data::FeatureStore::Dense(x) => pool.map(x.rows, ENCODE_CHUNK, |range| {
+            let mut out = Vec::with_capacity(range.len());
+            let mut pu = vec![0.0f32; GEMM_ROW_BLOCK * k];
+            let mut pv = vec![0.0f32; GEMM_ROW_BLOCK * k];
+            let mut scores = vec![0.0f32; k];
+            let mut r0 = range.start;
+            while r0 < range.end {
+                let nb = (range.end - r0).min(GEMM_ROW_BLOCK);
+                project_block(x, r0, nb, &pairs.u, &mut pu[..nb * k]);
+                project_block(x, r0, nb, &pairs.v, &mut pv[..nb * k]);
+                for r in 0..nb {
+                    let (ru, rv) = (&pu[r * k..r * k + k], &pv[r * k..r * k + k]);
+                    for ((s, &a), &b) in scores.iter_mut().zip(ru.iter()).zip(rv.iter()) {
                         *s = a * b;
                     }
                     out.push(pack_signs(&scores));
                 }
-                out
-            })
-        }
+                r0 += nb;
+            }
+            out
+        }),
         _ => pool.map(feats.len(), ENCODE_CHUNK, |range| {
             range.map(|i| bilinear_encode(pairs, feats.row(i))).collect()
         }),
@@ -640,7 +774,57 @@ mod tests {
         }
     }
 
+    #[test]
+    fn quantized_encode_deterministic_pool_parity_and_close() {
+        // the quantized path is approximate vs f32 but must be (a) a pure
+        // function of its input, (b) bit-identical across worker counts,
+        // (c) in high per-bit agreement with the exact encode
+        let mut rng = Rng::seed_from_u64(23);
+        let ds = crate::data::test_blobs(800, 32, 4, &mut rng);
+        let bh = BhHash::sample(32, 20, &mut rng);
+        let q = bh.pairs.quantize();
+        let exact = bh.encode_all(ds.features());
+        let a = q.encode_all_pool(ds.features(), &Pool::serial());
+        let b = q.encode_all_pool(ds.features(), &Pool::serial());
+        assert_eq!(a.codes, b.codes, "quantized encode not deterministic");
+        for w in [2usize, 3, 4] {
+            let p = q.encode_all_pool(ds.features(), &Pool::new(w));
+            assert_eq!(p.codes, a.codes, "quantized pool parity workers={w}");
+        }
+        let total_bits = (a.len() * 20) as f64;
+        let agree: u32 = a
+            .codes
+            .iter()
+            .zip(exact.codes.iter())
+            .map(|(&x, &y)| 20 - hamming(x, y, 20))
+            .sum();
+        let rate = agree as f64 / total_bits;
+        assert!(rate >= 0.85, "per-bit agreement {rate:.3} below 0.85");
+    }
+
+    #[test]
+    fn quantized_encode_handles_sparse_and_zero_rows() {
+        use crate::data::{newsgroups_like, NewsConfig};
+        let mut rng = Rng::seed_from_u64(29);
+        let ds = newsgroups_like(
+            &NewsConfig { n: 300, vocab: 128, classes: 4, ..Default::default() },
+            &mut rng,
+        );
+        let bh = BhHash::sample(128, 16, &mut rng);
+        let q = bh.pairs.quantize();
+        let arr = q.encode_all_pool(ds.features(), &Pool::serial());
+        assert_eq!(arr.len(), 300);
+        // all-zero input row quantizes to all-zero ⇒ every product is 0
+        // and every bit packs to +1 (sgn(0) = +1), matching the f32 path
+        let zero = vec![0.0f32; 128];
+        let store = crate::data::FeatureStore::Dense(Mat::from_vec(1, 128, zero.clone()));
+        let qa = q.encode_all_pool(&store, &Pool::serial());
+        assert_eq!(qa.get(0), bh.encode_point(FeatRef::Dense(&zero)));
+        assert_eq!(qa.get(0), codes::mask(16));
+    }
+
     // encode_all_pool parity across families, store layouts and worker
     // counts is covered by the integration suite in
-    // rust/tests/batch_parallel.rs.
+    // rust/tests/batch_parallel.rs, and kernel-vs-scalar bit parity by
+    // rust/tests/kernel_parity.rs.
 }

@@ -115,6 +115,45 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     s
 }
 
+/// Row-block height of [`project_block`]: how many data points share one
+/// pass over a block of projection rows. 8 rows × (up to 64 bits) of f32
+/// outputs stay register/L1-resident while the projection block streams.
+pub const GEMM_ROW_BLOCK: usize = 8;
+
+/// Bit-block width of [`project_block`]: how many projection rows are
+/// kept hot across a row block. 16 rows × 1024 dims × 4 B = 64 KB worst
+/// case (news profile) — L2-resident; at the tiny/test profiles
+/// (≤ 384 dims) the block fits in L1.
+pub const GEMM_BIT_BLOCK: usize = 16;
+
+/// Cache-blocked projection: `out[r * k + j] = dot(x.row(row0 + r), proj.row(j))`
+/// for `r < nrows`, `j < proj.rows`, with `k = proj.rows`.
+///
+/// This is the GEMM `X[row0..row0+nrows] · projᵀ`, re-blocked so a
+/// [`GEMM_BIT_BLOCK`]-row slab of `proj` is reused across
+/// [`GEMM_ROW_BLOCK`] data rows before moving on — the projection matrix
+/// is streamed once per row *block* instead of once per row. Every
+/// output entry is produced by the **same** unrolled [`dot`] the scalar
+/// `ProjectionPairs::project` path uses, in the same operand order, so
+/// the blocked result is bit-identical to the per-point reference by
+/// construction: blocking only reorders *independent* (row, bit)
+/// entries, never the float accumulation inside one entry.
+pub fn project_block(x: &Mat, row0: usize, nrows: usize, proj: &Mat, out: &mut [f32]) {
+    let k = proj.rows;
+    debug_assert_eq!(x.cols, proj.cols, "project_block dim");
+    debug_assert!(out.len() >= nrows * k, "project_block out too small");
+    for j0 in (0..k).step_by(GEMM_BIT_BLOCK) {
+        let j1 = (j0 + GEMM_BIT_BLOCK).min(k);
+        for r in 0..nrows {
+            let xr = x.row(row0 + r);
+            let orow = &mut out[r * k..r * k + k];
+            for j in j0..j1 {
+                orow[j] = dot(xr, proj.row(j));
+            }
+        }
+    }
+}
+
 /// y += alpha * x.
 #[inline]
 pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
@@ -277,6 +316,32 @@ mod tests {
         let w2: Vec<f32> = w.iter().map(|v| v * 7.0).collect();
         let m2 = margin(&x, &w2, nrm2(&w2));
         assert!(close(m1, m2, 1e-5));
+    }
+
+    #[test]
+    fn project_block_bit_identical_to_dot_loop() {
+        // ragged shapes: rows not a multiple of the row block, bits not a
+        // multiple of the bit block, dims not a multiple of dot's unroll
+        let mut rng = crate::rng::Rng::seed_from_u64(9);
+        for (n, d, k) in [(1, 5, 1), (7, 33, 3), (20, 19, 21), (9, 64, 17)] {
+            let x = Mat::from_vec(n, d, (0..n * d).map(|_| rng.gauss_f32()).collect());
+            let p = Mat::from_vec(k, d, (0..k * d).map(|_| rng.gauss_f32()).collect());
+            for row0 in [0, n / 2] {
+                let nrows = (n - row0).min(GEMM_ROW_BLOCK);
+                let mut out = vec![0.0f32; nrows * k];
+                project_block(&x, row0, nrows, &p, &mut out);
+                for r in 0..nrows {
+                    for j in 0..k {
+                        let want = dot(x.row(row0 + r), p.row(j));
+                        assert_eq!(
+                            out[r * k + j].to_bits(),
+                            want.to_bits(),
+                            "n={n} d={d} k={k} row0={row0} r={r} j={j}"
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -2010,6 +2010,30 @@ fn cmd_encode(rest: &[String]) -> anyhow::Result<()> {
         native.len(),
         serial_secs / native_secs.max(1e-9)
     );
+    if cfg.quantized {
+        let qp = bh.pairs.quantize();
+        let t0 = std::time::Instant::now();
+        let quant = qp.encode_all_pool(data.features(), &pool);
+        let quant_secs = t0.elapsed().as_secs_f64();
+        // the quantized path is approximate: report per-bit agreement
+        // with the exact f32 codes instead of asserting parity
+        let bits = cfg.bits() as u64;
+        let agree: u64 = native
+            .codes
+            .iter()
+            .zip(quant.codes.iter())
+            .map(|(&a, &b)| bits - u64::from((a ^ b).count_ones()))
+            .sum();
+        let total = (native.len() as u64 * bits).max(1);
+        println!(
+            "quantized encode ({} workers): {} points in {quant_secs:.3}s \
+             ({:.2}x vs f32 pooled, per-bit agreement {:.4})",
+            pool.workers(),
+            quant.len(),
+            native_secs / quant_secs.max(1e-9),
+            agree as f64 / total as f64
+        );
+    }
     match chh::runtime::Runtime::open_default() {
         Ok(rt) => match chh::runtime::BatchEncoder::bilinear(&rt, cfg.profile.name()) {
             Ok(enc) => {

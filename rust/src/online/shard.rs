@@ -27,7 +27,7 @@ use std::sync::{Arc, Mutex};
 use crate::data::FeatureStore;
 use crate::hash::fasthash::CodeMap;
 use crate::linalg::nrm2;
-use crate::table::QueryHit;
+use crate::table::{with_scratch, QueryHit, QueryScratch};
 
 /// Immutable generation of a shard.
 pub(crate) struct Frozen {
@@ -339,18 +339,36 @@ impl ShardView {
         top: usize,
         eligible: impl Fn(usize) -> bool,
     ) -> QueryHit {
+        with_scratch(|s| self.query_with(masks, lookup, w, feats, top, eligible, s))
+    }
+
+    /// [`Self::query`] with caller-owned scratch for the per-mask
+    /// candidate gather — router worker loops own one scratch per thread
+    /// so the probe path allocates nothing per query. Hits are identical.
+    #[allow(clippy::too_many_arguments)]
+    pub fn query_with(
+        &self,
+        masks: &[u64],
+        lookup: u64,
+        w: &[f32],
+        feats: &FeatureStore,
+        top: usize,
+        eligible: impl Fn(usize) -> bool,
+        scratch: &mut QueryScratch,
+    ) -> QueryHit {
         let w_norm = nrm2(w);
-        let mut cand: Vec<u32> = Vec::new();
+        let cand: &mut Vec<u32> = &mut scratch.cand;
+        cand.clear();
         let mut best: Option<(usize, f32)> = None;
         let mut scanned = 0usize;
         let mut probed = 0usize;
         let mut any = false;
         for &mask in masks {
             probed += 1;
-            self.probe_into(lookup ^ mask, &mut cand);
+            self.probe_into(lookup ^ mask, cand);
             if !cand.is_empty() {
                 any = true;
-                for &id in &cand {
+                for &id in cand.iter() {
                     let id = id as usize;
                     if !eligible(id) {
                         continue;
@@ -386,12 +404,30 @@ impl ShardView {
         eligible: impl Fn(usize) -> bool,
         out: &mut Vec<(usize, f32)>,
     ) {
+        with_scratch(|s| self.query_topk_with(masks, lookup, w, feats, top, eligible, out, s))
+    }
+
+    /// [`Self::query_topk`] with caller-owned gather scratch; the
+    /// appended short list is identical.
+    #[allow(clippy::too_many_arguments)]
+    pub fn query_topk_with(
+        &self,
+        masks: &[u64],
+        lookup: u64,
+        w: &[f32],
+        feats: &FeatureStore,
+        top: usize,
+        eligible: impl Fn(usize) -> bool,
+        out: &mut Vec<(usize, f32)>,
+        scratch: &mut QueryScratch,
+    ) {
         let w_norm = nrm2(w);
-        let mut cand: Vec<u32> = Vec::new();
+        let cand: &mut Vec<u32> = &mut scratch.cand;
+        cand.clear();
         let mut scanned = 0usize;
         for &mask in masks {
-            self.probe_into(lookup ^ mask, &mut cand);
-            for &id in &cand {
+            self.probe_into(lookup ^ mask, cand);
+            for &id in cand.iter() {
                 let id = id as usize;
                 if !eligible(id) {
                     continue;

@@ -444,10 +444,21 @@ pub fn load_codes(path: &Path) -> Result<CodeArray> {
             let mut c = Cursor { b: payload, pos: 0 };
             let k = c.u32()? as usize;
             let n = c.u64()? as usize;
+            if !(1..=64).contains(&k) {
+                bail!("bad CODES section: k={k} out of range");
+            }
+            // Over-k words are a hard load error, mirroring the shard
+            // snapshot gate above: a corrupt code would silently skew
+            // every masked scan it later participates in.
+            let code_mask = crate::hash::codes::mask(k);
             let raw = c.take(n * 8)?;
             let mut arr = CodeArray::with_capacity(k, n);
-            for ch in raw.chunks_exact(8) {
-                arr.push(u64::from_le_bytes(ch.try_into().unwrap()));
+            for (i, ch) in raw.chunks_exact(8).enumerate() {
+                let code = u64::from_le_bytes(ch.try_into().unwrap());
+                if code & !code_mask != 0 {
+                    bail!("code {i}: word {code:#x} exceeds {k} bits");
+                }
+                arr.push(code);
             }
             return Ok(arr);
         }
@@ -499,6 +510,42 @@ mod tests {
             crate::prop_assert!(back.codes == codes.codes, "codes");
             Ok(())
         });
+    }
+
+    #[test]
+    fn over_k_code_rejected_at_load() {
+        // masked-scan regression: a stored word with bits above k must be
+        // a hard load error, not a silent scan-skewing payload
+        let mut codes = CodeArray::new(8);
+        codes.push(0x11);
+        let path = tmp("overk");
+        save_codes(&path, &codes).unwrap();
+        let mut data = std::fs::read(&path).unwrap();
+        // the single code word 0x11 is the only 0x11 byte in the file;
+        // set the top byte of its LE u64 to put a bit above k=8
+        let pos = data.iter().position(|&b| b == 0x11).unwrap();
+        data[pos + 7] = 0x80;
+        std::fs::write(&path, &data).unwrap();
+        let err = load_codes(&path).unwrap_err().to_string();
+        let _ = std::fs::remove_file(&path);
+        assert!(err.contains("exceeds 8 bits"), "got: {err}");
+    }
+
+    #[test]
+    fn out_of_range_k_rejected_at_load() {
+        let mut codes = CodeArray::new(8);
+        codes.push(0x22);
+        let path = tmp("badk");
+        save_codes(&path, &codes).unwrap();
+        let mut data = std::fs::read(&path).unwrap();
+        // header (magic+version+sections = 12 B) + tag u32 + len u64 put
+        // the CODES k field at byte 24 (format doc at the top of file)
+        assert_eq!(data[24], 8, "layout drifted; adjust offset");
+        data[24] = 65;
+        std::fs::write(&path, &data).unwrap();
+        let err = load_codes(&path).unwrap_err().to_string();
+        let _ = std::fs::remove_file(&path);
+        assert!(err.contains("k=65 out of range"), "got: {err}");
     }
 
     #[test]

@@ -10,7 +10,7 @@
 //!   baseline the compact scheme is measured against.
 
 use crate::data::FeatureStore;
-use crate::hash::codes::{ball_volume, CodeArray, HammingBall};
+use crate::hash::codes::{ball_volume, hamming_sweep_into, mask, CodeArray, HammingBall};
 use crate::hash::fasthash::CodeMap;
 use crate::hash::HashFamily;
 use crate::linalg::nrm2;
@@ -20,6 +20,42 @@ use crate::par::Pool;
 /// the coordinator's pooled batch path; fixed so the split is independent
 /// of the worker count.
 pub(crate) const QUERY_CHUNK: usize = 4;
+
+/// Reusable per-query scratch: the candidate gather and distance-sweep
+/// buffers that used to be allocated fresh on every query. Callers that
+/// answer many queries on one thread (router worker loops, benches) own
+/// one `QueryScratch` and pass it to the `_with` query variants; the
+/// plain variants fall back to a thread-local instance, so every entry
+/// point is allocation-free after its first query on a thread either
+/// way. Scratch never affects answers — only where the temporaries live.
+#[derive(Default)]
+pub struct QueryScratch {
+    /// candidate ids gathered from the Hamming ball
+    pub(crate) cand: Vec<u32>,
+    /// full-scan Hamming distances ([`HyperplaneIndex::rank_search`])
+    pub(crate) dists: Vec<u32>,
+}
+
+impl QueryScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+thread_local! {
+    static TL_SCRATCH: std::cell::RefCell<QueryScratch> =
+        std::cell::RefCell::new(QueryScratch::new());
+}
+
+/// Run `f` with this thread's scratch. Re-entrant calls (an `eligible`
+/// closure that queries again) fall back to a fresh scratch instead of
+/// panicking on the RefCell.
+pub(crate) fn with_scratch<R>(f: impl FnOnce(&mut QueryScratch) -> R) -> R {
+    TL_SCRATCH.with(|s| match s.try_borrow_mut() {
+        Ok(mut sc) => f(&mut sc),
+        Err(_) => f(&mut QueryScratch::new()),
+    })
+}
 
 /// Result of a point-to-hyperplane query.
 #[derive(Clone, Debug, Default)]
@@ -141,7 +177,7 @@ impl HyperplaneIndex {
         self.query_code_filtered(lookup, w, feats, eligible)
     }
 
-    /// Query with a precomputed lookup code.
+    /// Query with a precomputed lookup code (thread-local scratch).
     pub fn query_code_filtered(
         &self,
         lookup: u64,
@@ -149,13 +185,27 @@ impl HyperplaneIndex {
         feats: &FeatureStore,
         eligible: impl Fn(usize) -> bool,
     ) -> QueryHit {
-        let mut cand = Vec::new();
-        let probed = self.candidates_into(lookup, usize::MAX, &mut cand);
+        with_scratch(|s| self.query_code_filtered_with(lookup, w, feats, eligible, s))
+    }
+
+    /// [`Self::query_code_filtered`] with caller-owned scratch — the
+    /// allocation-free form for long-lived query loops. Answers are
+    /// identical; only the candidate buffer's home differs.
+    pub fn query_code_filtered_with(
+        &self,
+        lookup: u64,
+        w: &[f32],
+        feats: &FeatureStore,
+        eligible: impl Fn(usize) -> bool,
+        scratch: &mut QueryScratch,
+    ) -> QueryHit {
+        let cand = &mut scratch.cand;
+        let probed = self.candidates_into(lookup, usize::MAX, cand);
         let w_norm = nrm2(w);
         let mut best: Option<(usize, f32)> = None;
         let mut scanned = 0usize;
         let mut any = false;
-        for &id in &cand {
+        for &id in cand.iter() {
             let id = id as usize;
             any = true;
             if !eligible(id) {
@@ -205,13 +255,27 @@ impl HyperplaneIndex {
         t: usize,
         eligible: impl Fn(usize) -> bool,
     ) -> Vec<(usize, f32)> {
+        with_scratch(|s| self.query_topk_with(family, w, feats, t, eligible, s))
+    }
+
+    /// [`Self::query_topk`] with caller-owned scratch for the candidate
+    /// gather; the returned short list is identical.
+    pub fn query_topk_with(
+        &self,
+        family: &dyn HashFamily,
+        w: &[f32],
+        feats: &FeatureStore,
+        t: usize,
+        eligible: impl Fn(usize) -> bool,
+        scratch: &mut QueryScratch,
+    ) -> Vec<(usize, f32)> {
         let lookup = family.encode_query(w);
-        let mut cand = Vec::new();
-        self.candidates_into(lookup, usize::MAX, &mut cand);
+        let cand = &mut scratch.cand;
+        self.candidates_into(lookup, usize::MAX, cand);
         let w_norm = nrm2(w);
         let mut scored: Vec<(usize, f32)> = cand
-            .into_iter()
-            .map(|id| id as usize)
+            .iter()
+            .map(|&id| id as usize)
             .filter(|&id| eligible(id))
             .map(|id| (id, crate::linalg::margin_feat(feats.row(id), w, w_norm)))
             .collect();
@@ -226,7 +290,11 @@ impl HyperplaneIndex {
 
     /// Hamming-ranking fallback: scan ALL codes, return the eligible point
     /// with the smallest Hamming distance to the lookup code, breaking ties
-    /// by true margin among the best ring. O(n) but cheap (XOR+POPCNT).
+    /// by true margin among the best ring. O(n) but cheap: distances come
+    /// from the chunked [`hamming_sweep_into`] popcount kernel (lookup
+    /// masked to k bits once, hoisted out of the loop), then the
+    /// eligibility/margin pass walks the precomputed distance slice. Uses
+    /// thread-local scratch; see [`Self::rank_search_with`].
     pub fn rank_search(
         &self,
         lookup: u64,
@@ -234,15 +302,31 @@ impl HyperplaneIndex {
         feats: &FeatureStore,
         eligible: impl Fn(usize) -> bool,
     ) -> QueryHit {
+        with_scratch(|s| self.rank_search_with(lookup, w, feats, eligible, s))
+    }
+
+    /// [`Self::rank_search`] with caller-owned scratch for the distance
+    /// sweep. Best id, margin bits and the scanned counter are identical
+    /// to the fused scalar loop: the sweep only hoists the XOR+POPCNT out
+    /// of the eligibility walk, which visits ids in the same order.
+    pub fn rank_search_with(
+        &self,
+        lookup: u64,
+        w: &[f32],
+        feats: &FeatureStore,
+        eligible: impl Fn(usize) -> bool,
+        scratch: &mut QueryScratch,
+    ) -> QueryHit {
+        let qm = lookup & mask(self.k);
+        hamming_sweep_into(&self.codes.codes, qm, &mut scratch.dists);
         let mut best_d = u32::MAX;
         let mut best: Option<(usize, f32)> = None;
         let w_norm = nrm2(w);
         let mut scanned = 0usize;
-        for (i, &c) in self.codes.codes.iter().enumerate() {
+        for (i, &d) in scratch.dists.iter().enumerate() {
             if !eligible(i) {
                 continue;
             }
-            let d = (c ^ lookup).count_ones();
             if d > best_d {
                 continue;
             }
@@ -501,6 +585,54 @@ mod tests {
         let d_best = hamming(idx.codes.get(i), lookup, 10);
         for j in 0..ds.len() {
             assert!(hamming(idx.codes.get(j), lookup, 10) >= d_best);
+        }
+    }
+
+    #[test]
+    fn rank_search_masks_lookup_bits_above_k() {
+        // regression (masked-scan bugfix): garbage bits above k in the
+        // lookup code must not perturb distances — the sweep masks the
+        // lookup once instead of XORing raw words
+        let mut rng = Rng::seed_from_u64(18);
+        let ds = test_blobs(150, 16, 2, &mut rng);
+        let fam = BhHash::sample(16, 10, &mut rng);
+        let idx = HyperplaneIndex::build(&fam, ds.features(), 0);
+        let w = crate::testing::unit_vec(&mut rng, 16);
+        let lookup = fam.encode_query(&w);
+        let clean = idx.rank_search(lookup, &w, ds.features(), |_| true);
+        let dirty = idx.rank_search(lookup | (0xDEAD << 10), &w, ds.features(), |_| true);
+        assert_eq!(dirty.best.map(|(i, m)| (i, m.to_bits())), clean.best.map(|(i, m)| (i, m.to_bits())));
+        assert_eq!(dirty.scanned, clean.scanned);
+    }
+
+    #[test]
+    fn scratch_reuse_is_answer_invariant() {
+        // one scratch across many queries == fresh scratch per query
+        let mut rng = Rng::seed_from_u64(19);
+        let ds = test_blobs(400, 16, 3, &mut rng);
+        let fam = BhHash::sample(16, 9, &mut rng);
+        let idx = HyperplaneIndex::build(&fam, ds.features(), 2);
+        let mut shared = QueryScratch::new();
+        for _ in 0..12 {
+            let w = crate::testing::unit_vec(&mut rng, 16);
+            let lookup = fam.encode_query(&w);
+            let a = idx.query_code_filtered_with(lookup, &w, ds.features(), |_| true, &mut shared);
+            let b = idx.query_code_filtered_with(
+                lookup,
+                &w,
+                ds.features(),
+                |_| true,
+                &mut QueryScratch::new(),
+            );
+            assert_eq!(a.best.map(|(i, m)| (i, m.to_bits())), b.best.map(|(i, m)| (i, m.to_bits())));
+            assert_eq!((a.scanned, a.probed, a.nonempty), (b.scanned, b.probed, b.nonempty));
+            let ta = idx.query_topk_with(&fam, &w, ds.features(), 5, |_| true, &mut shared);
+            let tb = idx.query_topk(&fam, &w, ds.features(), 5, |_| true);
+            assert_eq!(ta, tb);
+            let ra = idx.rank_search_with(lookup, &w, ds.features(), |_| true, &mut shared);
+            let rb = idx.rank_search(lookup, &w, ds.features(), |_| true);
+            assert_eq!(ra.best.map(|(i, m)| (i, m.to_bits())), rb.best.map(|(i, m)| (i, m.to_bits())));
+            assert_eq!(ra.scanned, rb.scanned);
         }
     }
 

@@ -263,6 +263,11 @@ pub fn recover(dir: &Path) -> Result<(ShardedIndex, RecoveryReport)> {
     report.end_seg = replay_from;
     report.end_off = 0;
     let last = segments.len().saturating_sub(1);
+    // over-k codes are a hard replay error (mirrors the snapshot loader's
+    // mask gate): a CRC-valid frame carrying one means the log was written
+    // by a mismatched index — replaying it would silently skew every
+    // masked scan. Hoisted: one mask for the whole replay.
+    let code_mask = crate::hash::codes::mask(index.bits());
     for (i, (seq, path)) in segments.iter().enumerate() {
         let data =
             std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
@@ -273,6 +278,13 @@ pub fn recover(dir: &Path) -> Result<(ShardedIndex, RecoveryReport)> {
         for rec in &read.records {
             match *rec {
                 Record::Insert { id, code } => {
+                    if code & !code_mask != 0 {
+                        bail!(
+                            "segment {seq}: insert {id} carries code {code:#x} \
+                             exceeding {} bits",
+                            index.bits()
+                        );
+                    }
                     index.insert(id, code);
                     report.inserts += 1;
                     report.replayed += 1;

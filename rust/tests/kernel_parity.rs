@@ -1,0 +1,259 @@
+//! Forall-style parity suite for the vectorized hot-path kernels.
+//!
+//! The blocked encode GEMM ([`chh::linalg::project_block`]) and the
+//! chunked popcount sweep ([`chh::hash::codes::hamming_sweep_into`])
+//! replaced scalar per-element loops; these properties pin them
+//! **bit-identical** to the scalar references across the shapes that
+//! break blocked kernels — empty and singleton stores, lengths around
+//! the block boundaries, k ∈ {1, 63, 64}, dense and sparse rows, and
+//! every pooled worker count vs serial.
+
+use chh::data::{newsgroups_like, FeatureStore, NewsConfig};
+use chh::hash::codes::{hamming_sweep_into, mask, CodeArray, SCAN_BLOCK};
+use chh::hash::{BhHash, HashFamily, ProjectionPairs, ENCODE_CHUNK};
+use chh::linalg::Mat;
+use chh::par::Pool;
+use chh::prop_assert;
+use chh::rng::Rng;
+use chh::table::{HyperplaneIndex, QueryScratch};
+use chh::testing::{forall, unit_vec};
+
+const WORKER_COUNTS: [usize; 3] = [2, 3, 4];
+
+/// The edge-case code lengths: single bit, one-below-word, full word.
+const EDGE_K: [usize; 3] = [1, 63, 64];
+
+fn random_dense(rng: &mut Rng, n: usize, d: usize) -> FeatureStore {
+    FeatureStore::Dense(Mat::from_vec(n, d, rng.gauss_vec(n * d)))
+}
+
+fn random_sparse(rng: &mut Rng, n: usize, d: usize) -> FeatureStore {
+    let mut b = chh::sparse::CsrBuilder::new(d);
+    for _ in 0..n {
+        let nnz = rng.below(d.min(8) + 1);
+        let mut entries: Vec<(u32, f32)> = (0..nnz)
+            .map(|_| (rng.below(d) as u32, rng.gauss_f32()))
+            .collect();
+        b.push_row(&mut entries);
+    }
+    FeatureStore::Sparse(b.finish())
+}
+
+/// Scalar reference for the batch encode: per-point `encode_point`.
+fn pointwise_codes(fam: &dyn HashFamily, feats: &FeatureStore) -> Vec<u64> {
+    (0..feats.len()).map(|i| fam.encode_point(feats.row(i))).collect()
+}
+
+#[test]
+fn blocked_encode_matches_pointwise_dense_and_sparse() {
+    forall("blocked encode == per-point encode", 24, |rng| {
+        let d = rng.range(2, 48);
+        let k = EDGE_K[rng.below(EDGE_K.len())];
+        // straddle the GEMM row-block and (sometimes) the encode chunk
+        let n = match rng.below(4) {
+            0 => rng.below(9),               // under one row block
+            1 => rng.range(9, 200),          // several row blocks
+            2 => ENCODE_CHUNK - 1,           // chunk boundary −1
+            _ => ENCODE_CHUNK + rng.below(40) + 1, // multiple chunks
+        };
+        let fam = BhHash::from_pairs(ProjectionPairs::sample(d, k, rng));
+        let feats = if rng.bernoulli(0.5) {
+            random_dense(rng, n, d)
+        } else {
+            random_sparse(rng, n, d)
+        };
+        let reference = pointwise_codes(&fam, &feats);
+        let blocked = fam.encode_all(&feats);
+        prop_assert!(
+            blocked.codes == reference,
+            "k={k} d={d} n={n}: blocked serial encode diverged"
+        );
+        for w in WORKER_COUNTS {
+            let pooled = fam.encode_all_pool(&feats, &Pool::new(w));
+            prop_assert!(
+                pooled.codes == reference,
+                "k={k} d={d} n={n} workers={w}: pooled encode diverged"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn hamming_sweep_matches_scalar_reference() {
+    forall("chunked sweep == scalar popcount loop", 48, |rng| {
+        let k = EDGE_K[rng.below(EDGE_K.len())];
+        // lengths straddling the sweep block: 0, 1, ±1 around the block,
+        // and a few blocks plus a remainder
+        let n = match rng.below(5) {
+            0 => 0,
+            1 => 1,
+            2 => SCAN_BLOCK - 1,
+            3 => SCAN_BLOCK,
+            _ => SCAN_BLOCK * rng.range(1, 4) + rng.below(SCAN_BLOCK),
+        };
+        let km = mask(k);
+        let codes: Vec<u64> = (0..n).map(|_| rng.next_u64() & km).collect();
+        let q = rng.next_u64() & km;
+        let reference: Vec<u32> = codes.iter().map(|&c| (c ^ q).count_ones()).collect();
+        // stale scratch contents must be cleared, not appended to
+        let mut out = vec![0xDEAD_u32; 7];
+        hamming_sweep_into(&codes, q, &mut out);
+        prop_assert!(out == reference, "k={k} n={n}: sweep diverged");
+        // CodeArray::hamming_scan masks junk bits above k itself
+        let mut arr = CodeArray::with_capacity(k, n);
+        for &c in &codes {
+            arr.push(c);
+        }
+        let junk = if k < 64 { rng.next_u64() & !km } else { 0 };
+        arr.hamming_scan(q | junk, &mut out);
+        prop_assert!(out == reference, "k={k} n={n}: hamming_scan ignored mask");
+        Ok(())
+    });
+}
+
+#[test]
+fn rank_search_matches_fused_scalar_reference() {
+    forall("rank_search == fused scalar reference", 16, |rng| {
+        let d = rng.range(2, 24);
+        let k = EDGE_K[rng.below(EDGE_K.len())];
+        let n = rng.below(SCAN_BLOCK * 3);
+        let feats = random_dense(rng, n, d);
+        let fam = BhHash::from_pairs(ProjectionPairs::sample(d, k, rng));
+        let index = HyperplaneIndex::build(&fam, &feats, 1);
+        let w = unit_vec(rng, d);
+        let lookup = fam.encode_query(&w);
+        // random eligibility mask exercises the skip path
+        let elig: Vec<bool> = (0..n).map(|_| rng.bernoulli(0.8)).collect();
+        // fused scalar reference: same traversal order and tie-breaks,
+        // but per-element popcount and no shared scratch
+        let qm = lookup & mask(k);
+        let mut best_d = u32::MAX;
+        let mut best: Option<(usize, f32)> = None;
+        let w_norm = chh::linalg::nrm2(&w);
+        let mut scanned = 0usize;
+        for i in 0..n {
+            let dist = (fam.encode_point(feats.row(i)) ^ qm).count_ones();
+            if !elig[i] || dist > best_d {
+                continue;
+            }
+            scanned += 1;
+            let m = chh::linalg::margin_feat(feats.row(i), &w, w_norm);
+            if dist < best_d || best.map_or(true, |(_, bm)| m < bm) {
+                best_d = dist;
+                best = Some((i, m));
+            }
+        }
+        let hit = index.rank_search(lookup, &w, &feats, |i| elig[i]);
+        prop_assert!(hit.scanned == scanned, "k={k} n={n}: scanned {} vs {scanned}", hit.scanned);
+        prop_assert!(hit.nonempty == best.is_some(), "k={k} n={n}: nonempty");
+        match (hit.best, best) {
+            (None, None) => {}
+            (Some((ia, ma)), Some((ib, mb))) => {
+                prop_assert!(ia == ib, "k={k} n={n}: best id {ia} vs {ib}");
+                prop_assert!(
+                    ma.to_bits() == mb.to_bits(),
+                    "k={k} n={n}: margin bits {ma} vs {mb}"
+                );
+            }
+            (a, b) => prop_assert!(false, "k={k} n={n}: best {a:?} vs {b:?}"),
+        }
+        // junk bits above k in the lookup must not change the answer
+        if k < 64 {
+            let dirty = index.rank_search(lookup | (rng.next_u64() & !mask(k)), &w, &feats, |i| {
+                elig[i]
+            });
+            prop_assert!(dirty.best == hit.best, "k={k}: over-k lookup bits leaked");
+            prop_assert!(dirty.scanned == hit.scanned, "k={k}: scanned under dirty lookup");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn scratch_reuse_matches_fresh_scratch_everywhere() {
+    forall("shared scratch == fresh scratch", 12, |rng| {
+        let d = rng.range(4, 20);
+        let k = rng.range(4, 17);
+        let n = rng.range(50, 400);
+        let feats = random_dense(rng, n, d);
+        let fam = BhHash::from_pairs(ProjectionPairs::sample(d, k, rng));
+        let index = HyperplaneIndex::build(&fam, &feats, 2);
+        // one scratch carried across interleaved query kinds vs the
+        // thread-local plain variants — answers must be invariant
+        let mut shared = QueryScratch::new();
+        for q in 0..8 {
+            let w = unit_vec(rng, d);
+            let lookup = fam.encode_query(&w);
+            let a = index.query_code_filtered_with(lookup, &w, &feats, |_| true, &mut shared);
+            let b = index.query_code_filtered(lookup, &w, &feats, |_| true);
+            prop_assert!(a.best == b.best, "q{q}: filtered best");
+            prop_assert!(
+                a.scanned == b.scanned && a.probed == b.probed && a.nonempty == b.nonempty,
+                "q{q}: filtered counters"
+            );
+            let ra = index.rank_search_with(lookup, &w, &feats, |_| true, &mut shared);
+            let rb = index.rank_search(lookup, &w, &feats, |_| true);
+            prop_assert!(ra.best == rb.best && ra.scanned == rb.scanned, "q{q}: rank");
+            let ta = index.query_topk_with(&fam, &w, &feats, 5, |_| true, &mut shared);
+            let tb = index.query_topk(&fam, &w, &feats, 5, |_| true);
+            prop_assert!(ta.len() == tb.len(), "q{q}: topk len");
+            for (x, y) in ta.iter().zip(tb.iter()) {
+                prop_assert!(
+                    x.0 == y.0 && x.1.to_bits() == y.1.to_bits(),
+                    "q{q}: topk entry {x:?} vs {y:?}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn empty_and_singleton_stores() {
+    let mut rng = Rng::seed_from_u64(11);
+    for k in EDGE_K {
+        let fam = BhHash::from_pairs(ProjectionPairs::sample(8, k, &mut rng));
+        // empty store: encode yields zero codes, scans yield empty output
+        let empty = FeatureStore::Dense(Mat::zeros(0, 8));
+        assert_eq!(fam.encode_all(&empty).len(), 0, "k={k}");
+        for w in WORKER_COUNTS {
+            assert_eq!(fam.encode_all_pool(&empty, &Pool::new(w)).len(), 0, "k={k} w={w}");
+        }
+        let mut out = vec![1u32; 3];
+        hamming_sweep_into(&[], mask(k), &mut out);
+        assert!(out.is_empty(), "k={k}: sweep over empty codes");
+        let index = HyperplaneIndex::build(&fam, &empty, 1);
+        let w = unit_vec(&mut rng, 8);
+        let hit = index.rank_search(fam.encode_query(&w), &w, &empty, |_| true);
+        assert_eq!(hit.best, None, "k={k}");
+        assert_eq!(hit.scanned, 0, "k={k}");
+        assert!(!hit.nonempty, "k={k}");
+        // singleton store: the one row must be found and match pointwise
+        let single = random_dense(&mut rng, 1, 8);
+        let codes = fam.encode_all(&single);
+        assert_eq!(codes.codes, pointwise_codes(&fam, &single), "k={k}");
+        let index1 = HyperplaneIndex::build(&fam, &single, 1);
+        let hit1 = index1.rank_search(fam.encode_query(&w), &w, &single, |_| true);
+        assert_eq!(hit1.best.map(|(i, _)| i), Some(0), "k={k}");
+        assert_eq!(hit1.scanned, 1, "k={k}");
+    }
+}
+
+#[test]
+fn sparse_stores_hit_edge_code_lengths() {
+    let mut rng = Rng::seed_from_u64(12);
+    let ds = newsgroups_like(
+        &NewsConfig { n: 1_500, vocab: 128, classes: 4, ..Default::default() },
+        &mut rng,
+    );
+    for k in EDGE_K {
+        let fam = BhHash::from_pairs(ProjectionPairs::sample(128, k, &mut rng));
+        let reference = pointwise_codes(&fam, ds.features());
+        assert_eq!(fam.encode_all(ds.features()).codes, reference, "k={k} serial");
+        for w in WORKER_COUNTS {
+            let pooled = fam.encode_all_pool(ds.features(), &Pool::new(w));
+            assert_eq!(pooled.codes, reference, "k={k} workers={w}");
+        }
+    }
+}

@@ -234,6 +234,22 @@ fn mid_log_corruption_yields_valid_prefix_not_error() {
 }
 
 #[test]
+fn replay_rejects_over_k_codes() {
+    // masked-scan regression: a CRC-valid insert frame whose code has
+    // bits above the index's k (a log written by a mismatched index)
+    // must be a hard recovery error, not a silently-applied scan skew
+    let dir = tmpdir("overk");
+    let cfg = wal_cfg(&dir, 1 << 20);
+    let d = DurableIndex::create(Arc::new(ShardedIndex::new(10, 2, 2)), &cfg).unwrap();
+    d.insert(1, 0b11_1111_1111).unwrap(); // all 10 bits set: still valid
+    d.insert(2, 1 << 10).unwrap(); // bit above k — journals, must fail replay
+    drop(d);
+    let err = recover(&dir).unwrap_err().to_string();
+    assert!(err.contains("exceeding 10 bits"), "got: {err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn reopen_after_crash_then_clean_close_is_stable() {
     let dir = tmpdir("reopen");
     let cfg = wal_cfg(&dir, 1 << 20);

@@ -1,0 +1,132 @@
+#!/usr/bin/env python3
+"""Bench regression gate: compare a fresh bench JSON against a committed
+baseline and fail on >tolerance regressions of machine-portable metrics.
+
+Absolute wall-clock (mean_s/p50_s/...) is machine-dependent and never
+gated. What IS gated:
+
+  * ``speedup`` records (batch_throughput): the serial/pooled or
+    scalar/kernel ratio measured *within one run* on one machine. A
+    ratio is portable — if the blocked encode kernel stops beating the
+    scalar loop, the ratio collapses no matter how fast the runner is.
+  * ``probe_sweep`` records (online_churn), matched on (probes, top):
+    ``hits`` and ``cands_per_q`` are deterministic functions of the
+    seeded workload — a hits drop or a candidate blow-up is a search
+    quality/work regression, not noise.
+  * ``bulk_load``/``churn`` records: deterministic counters
+    (``inserts``, ``live``) must match the baseline within tolerance.
+
+A baseline with no records is a bootstrap stub: the gate then only
+checks the fresh run's shape (expected record kinds present and sane)
+and exits 0, printing the values to seed the baseline from the CI
+artifact (see benchmarks/README.md).
+
+Usage: bench_gate.py --baseline <committed.json> --current <fresh.json>
+       [--tolerance 0.20]
+"""
+
+import argparse
+import json
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        doc = json.load(f)
+    if "records" not in doc or "bench" not in doc:
+        sys.exit(f"{path}: not a JsonReport document")
+    return doc
+
+
+def ratio(rec):
+    """Parse a speedup record's 'N.NNx' ratio."""
+    s = rec.get("speedup", "")
+    if not s.endswith("x"):
+        sys.exit(f"speedup record {rec.get('path')!r}: bad ratio {s!r}")
+    return float(s[:-1])
+
+
+def by_kind(doc, kind):
+    return [r for r in doc["records"] if r.get("kind") == kind]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--current", required=True)
+    ap.add_argument("--tolerance", type=float, default=0.20)
+    args = ap.parse_args()
+    base, cur = load(args.baseline), load(args.current)
+    if base["bench"] != cur["bench"]:
+        sys.exit(f"bench mismatch: baseline {base['bench']} vs current {cur['bench']}")
+    tol = args.tolerance
+    failures = []
+
+    if not base["records"]:
+        # bootstrap stub: shape-check the fresh run, print seed values
+        kinds = {r.get("kind") for r in cur["records"] if "kind" in r}
+        print(f"{base['bench']}: baseline is a bootstrap stub; "
+              f"fresh run has kinds {sorted(kinds)}")
+        for r in by_kind(cur, "speedup"):
+            print(f"  speedup {r['path']}: {r['speedup']}")
+        for r in by_kind(cur, "probe_sweep"):
+            print(f"  probe_sweep probes={r['probes']} top={r['top']}: "
+                  f"hits={r['hits']} cands_per_q={r['cands_per_q']}")
+        print("seed the baseline from this artifact to arm the gate")
+        return
+
+    # ── speedup ratios ───────────────────────────────────────────────
+    cur_speedups = {r["path"]: r for r in by_kind(cur, "speedup")}
+    for b in by_kind(base, "speedup"):
+        path = b["path"]
+        c = cur_speedups.get(path)
+        if c is None:
+            failures.append(f"speedup row '{path}' missing from current run")
+            continue
+        want, got = ratio(b), ratio(c)
+        floor = want * (1.0 - tol)
+        status = "ok" if got >= floor else "REGRESSED"
+        print(f"speedup {path}: baseline {want:.2f}x, current {got:.2f}x, "
+              f"floor {floor:.2f}x — {status}")
+        if got < floor:
+            failures.append(
+                f"speedup '{path}' regressed: {got:.2f}x < {floor:.2f}x "
+                f"(baseline {want:.2f}x − {tol:.0%})")
+
+    # ── deterministic workload counters ──────────────────────────────
+    cur_sweeps = {(r["probes"], r["top"]): r for r in by_kind(cur, "probe_sweep")}
+    for b in by_kind(base, "probe_sweep"):
+        key = (b["probes"], b["top"])
+        c = cur_sweeps.get(key)
+        if c is None:
+            failures.append(f"probe_sweep {key} missing from current run")
+            continue
+        if c["hits"] < b["hits"] * (1.0 - tol):
+            failures.append(
+                f"probe_sweep {key}: hits {c['hits']} < baseline {b['hits']} − {tol:.0%}")
+        if c["cands_per_q"] > b["cands_per_q"] * (1.0 + tol):
+            failures.append(
+                f"probe_sweep {key}: cands_per_q {c['cands_per_q']} > "
+                f"baseline {b['cands_per_q']} + {tol:.0%}")
+        print(f"probe_sweep {key}: hits {c['hits']} (base {b['hits']}), "
+              f"cands_per_q {c['cands_per_q']} (base {b['cands_per_q']})")
+    for kind, fields in (("bulk_load", ["inserts"]), ("churn", ["live"])):
+        bs, cs = by_kind(base, kind), by_kind(cur, kind)
+        if bs and not cs:
+            failures.append(f"{kind} record missing from current run")
+        for b, c in zip(bs, cs):
+            for f in fields:
+                lo, hi = b[f] * (1.0 - tol), b[f] * (1.0 + tol)
+                if not (lo <= c[f] <= hi):
+                    failures.append(f"{kind}.{f}: {c[f]} outside [{lo:.0f}, {hi:.0f}]")
+
+    if failures:
+        print(f"\n{base['bench']}: {len(failures)} regression(s):", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        sys.exit(1)
+    print(f"{base['bench']}: gate passed")
+
+
+if __name__ == "__main__":
+    main()
